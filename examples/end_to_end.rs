@@ -1,0 +1,99 @@
+//! End-to-end system driver — the full-stack validation run recorded
+//! in EXPERIMENTS.md.
+//!
+//! Exercises every layer on a real workload:
+//!   * signal:   windowed, TX-filtered 64-QAM CP-OFDM (62.5 MHz @ the
+//!     paper's 250 MSps mapping), ~2 Msample run
+//!   * L3:       the streaming coordinator with bounded queues
+//!   * engines:  native f64, bit-exact fixed-point, cycle-accurate
+//!     ASIC sim, and the AOT HLO via the embedded PJRT client
+//!   * plant:    the shared GaN-Doherty-like PA model
+//!   * metrics:  ACPR (Welch), NMSE-EVM, constellation EVM, throughput
+//!   * ASIC:     activity-annotated power/area at the nominal point
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use dpd_ne::accel::AsicSpec;
+use dpd_ne::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use dpd_ne::dpd::weights::QGruWeights;
+use dpd_ne::fixed::QSpec;
+use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
+use dpd_ne::metrics::evm::evm_db_nmse;
+use dpd_ne::pa::{PaSpec, RappMemPa};
+use dpd_ne::report::{f1, f2, Table};
+use dpd_ne::runtime::Manifest;
+use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
+use dpd_ne::signal::papr::papr_db;
+
+fn main() -> anyhow::Result<()> {
+    let m = Manifest::discover(None)?;
+    let pa = RappMemPa::new(PaSpec::load(&m.pa_model)?);
+    let g = pa.spec.target_gain();
+
+    // workload: ~130k samples of OFDM (488 symbols ~= 0.5 ms at 250 MSps)
+    let sig = OfdmModulator::generate(&OfdmConfig { n_symbols: 480, seed: 99, ..Default::default() })?;
+    println!(
+        "workload: {} samples, PAPR {:.1} dB, occupied BW {:.3} fs (62.5 MHz at 250 MSps)\n",
+        sig.iq.len(),
+        papr_db(&sig.iq),
+        sig.cfg.occupied_bw()
+    );
+
+    // reference: DPD off
+    let y_off = pa.run(&sig.iq);
+    let acpr_off = acpr_db(&y_off, &AcprConfig::default())?;
+    let evm_off = evm_db_nmse(&y_off, &sig.iq, g);
+    let cevm_off = sig.constellation_evm_db(&y_off)?;
+
+    let mut t = Table::new(
+        "End-to-end linearization, all engines (paper: ACPR -45.3 dBc, EVM -39.8 dB)",
+        &["engine", "ACPR (dBc)", "EVM (dB)", "const-EVM (dB)", "engine MSps", "x250MSps"],
+    );
+    t.row(&[
+        "off".into(),
+        f1(acpr_off.acpr_dbc),
+        f1(evm_off),
+        f1(cevm_off),
+        "-".into(),
+        "-".into(),
+    ]);
+
+    for engine in [
+        EngineKind::NativeF64,
+        EngineKind::Fixed,
+        EngineKind::CycleSim,
+        EngineKind::Hlo,
+    ] {
+        let coord = Coordinator::new(CoordinatorConfig { engine, ..Default::default() });
+        let out = coord.run_stream(&sig.iq)?;
+        let y = pa.run(&out.iq);
+        let acpr = acpr_db(&y, &AcprConfig::default())?;
+        let evm = evm_db_nmse(&y, &sig.iq, g);
+        let cevm = sig.constellation_evm_db(&y)?;
+        t.row(&[
+            format!("{engine:?}"),
+            f1(acpr.acpr_dbc),
+            f1(evm),
+            f1(cevm),
+            f2(out.stats.engine_msps()),
+            format!("{:.3}", out.stats.realtime_factor_vs_250msps()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ASIC nominal operating point from the same weights
+    let w = QGruWeights::load_params_int(&m.weights_main, QSpec::new(m.qspec_bits)?)?;
+    let s = AsicSpec::nominal(&w, true);
+    println!(
+        "ASIC nominal point: {:.1} GOPS, {:.1} mW, {:.3} mm², {:.0} GOPS/W, PAE {:.2} TOPS/W/mm² \
+         (paper: 256.5 / 195 / 0.2 / 1315 / 6.58)",
+        s.throughput_gops,
+        s.power.total_mw(),
+        s.area.total_mm2(),
+        s.power_efficiency_gops_w(),
+        s.pae_tops_w_mm2()
+    );
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! GMP baseline vs GRU-NN DPD — the algorithmic comparison behind
+//! Table II's "model" column (the FPGA competitors run GMP/MP; this
+//! work runs the GRU).
+//!
+//! Fits a generalized memory polynomial by indirect learning on a PA
+//! capture, then compares linearization and complexity against the
+//! trained GRU at equal drive.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example gmp_vs_gru
+//! ```
+
+use dpd_ne::dpd::gmp::{GmpConfig, GmpDpd};
+use dpd_ne::dpd::qgru::{ActKind, QGruDpd};
+use dpd_ne::dpd::weights::QGruWeights;
+use dpd_ne::dpd::Dpd;
+use dpd_ne::fixed::QSpec;
+use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
+use dpd_ne::metrics::evm::evm_db_nmse;
+use dpd_ne::pa::{PaSpec, RappMemPa};
+use dpd_ne::report::{f1, Table};
+use dpd_ne::runtime::Manifest;
+use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
+
+/// Envelope-clip a DPD output to the Q2.f DAC range, like the chip.
+fn clip2(z: &[[f64; 2]]) -> Vec<[f64; 2]> {
+    z.iter()
+        .map(|&[i, q]| {
+            let e = (i * i + q * q).sqrt();
+            if e > 2.0 {
+                [i * 2.0 / e, q * 2.0 / e]
+            } else {
+                [i, q]
+            }
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let m = Manifest::discover(None)?;
+    let pa = RappMemPa::new(PaSpec::load(&m.pa_model)?);
+    let g = pa.spec.target_gain();
+
+    // training capture for the GMP ILA fit
+    let train = OfdmModulator::generate(&OfdmConfig { n_symbols: 96, seed: 7, ..Default::default() })?;
+    let y_train = pa.run(&train.iq);
+
+    // held-out evaluation burst
+    let eval = OfdmModulator::generate(&OfdmConfig { n_symbols: 48, seed: 1234, ..Default::default() })?;
+    let y_off = pa.run(&eval.iq);
+
+    let mut t = Table::new(
+        "GMP baseline vs GRU DPD (held-out burst)",
+        &["DPD", "params (real)", "ACPR (dBc)", "EVM (dB)"],
+    );
+    t.row(&[
+        "off".into(),
+        "0".into(),
+        f1(acpr_db(&y_off, &AcprConfig::default())?.acpr_dbc),
+        f1(evm_db_nmse(&y_off, &eval.iq, g)),
+    ]);
+
+    for (label, cfg) in [
+        ("GMP small (MP only)", GmpConfig { k_max: 7, mem: 3, cross_k: 0, cross_m: 0, cross_lags: 0, lambda: 1e-9 }),
+        ("GMP full", GmpConfig::default()),
+        (
+            "GMP large",
+            GmpConfig { k_max: 11, mem: 5, cross_k: 7, cross_m: 3, cross_lags: 2, lambda: 1e-9 },
+        ),
+    ] {
+        let mut gmp = GmpDpd::fit_ila(&cfg, &train.iq, &y_train, g)?;
+        let z = clip2(&gmp.run(&eval.iq));
+        let y = pa.run(&z);
+        t.row(&[
+            label.into(),
+            cfg.n_params_real().to_string(),
+            f1(acpr_db(&y, &AcprConfig::default())?.acpr_dbc),
+            f1(evm_db_nmse(&y, &eval.iq, g)),
+        ]);
+    }
+
+    let spec = QSpec::new(m.qspec_bits)?;
+    let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
+    let mut gru = QGruDpd::new(w, ActKind::Hard);
+    let z = gru.run(&eval.iq);
+    let y = pa.run(&z);
+    t.row(&[
+        "GRU (this work, Q2.10)".into(),
+        "502".into(),
+        f1(acpr_db(&y, &AcprConfig::default())?.acpr_dbc),
+        f1(evm_db_nmse(&y, &eval.iq, g)),
+    ]);
+    println!("{}", t.render());
+    println!("note: GMP coefficients are complex f64 (the FPGA baselines run W16+);");
+    println!("the GRU row runs the chip's 12-bit fixed-point datapath end to end.");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! mMIMO fan-out scaling — the deployment the paper's introduction
+//! motivates: one DPD engine instance per antenna stream.
+//!
+//! Runs 1..=8 parallel antenna streams through the coordinator and
+//! reports per-stream and aggregate throughput scaling.
+//!
+//! ```bash
+//! cargo run --release --example mmimo_streams
+//! ```
+
+use dpd_ne::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use dpd_ne::report::{f2, Table};
+use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
+
+fn main() -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "mMIMO scaling (fixed-point engine, one instance per antenna)",
+        &["streams", "aggregate MSps", "per-stream MSps", "scaling eff."],
+    );
+    let mut base = 0.0;
+    for n in [1usize, 2, 4, 8] {
+        let inputs: Vec<Vec<[f64; 2]>> = (0..n)
+            .map(|k| {
+                OfdmModulator::generate(&OfdmConfig {
+                    n_symbols: 96,
+                    seed: 100 + k as u64,
+                    ..Default::default()
+                })
+                .unwrap()
+                .iq
+            })
+            .collect();
+        let total: usize = inputs.iter().map(|v| v.len()).sum();
+        let coord = Coordinator::new(CoordinatorConfig {
+            engine: EngineKind::Fixed,
+            ..Default::default()
+        });
+        let t0 = std::time::Instant::now();
+        let outs = coord.run_streams(inputs)?;
+        let wall = t0.elapsed();
+        assert_eq!(outs.iter().map(|o| o.iq.len()).sum::<usize>(), total);
+        let agg = total as f64 / wall.as_secs_f64() / 1e6;
+        if n == 1 {
+            base = agg;
+        }
+        t.row(&[
+            n.to_string(),
+            f2(agg),
+            f2(agg / n as f64),
+            format!("{:.0}%", 100.0 * agg / (base * n as f64)),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

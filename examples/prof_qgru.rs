@@ -1,0 +1,25 @@
+//! Profiling repro binary for the §Perf pass: runs the bit-exact
+//! engine hot loop long enough for `perf record` attribution.
+//!
+//! ```bash
+//! cargo build --release --example prof_qgru
+//! perf record ./target/release/examples/prof_qgru && perf report
+//! ```
+use dpd_ne::dpd::qgru::{ActKind, QGruDpd};
+use dpd_ne::dpd::weights::QGruWeights;
+use dpd_ne::fixed::QSpec;
+use dpd_ne::runtime::Manifest;
+
+fn main() {
+    let m = Manifest::discover(None).expect("run `make artifacts` first");
+    let spec = QSpec::Q12;
+    let w = QGruWeights::load_params_int(&m.weights_main, spec).unwrap();
+    let mut dpd = QGruDpd::new(w, ActKind::Hard);
+    let mut rng = dpd_ne::util::Rng::new(1);
+    let codes: Vec<[i32; 2]> = (0..16384)
+        .map(|_| [rng.int_in(-900, 900) as i32, rng.int_in(-900, 900) as i32])
+        .collect();
+    for _ in 0..300 {
+        std::hint::black_box(dpd.run_codes(&codes));
+    }
+}

@@ -1,0 +1,15 @@
+"""Build-time compile path for DPD-NeuralEngine.
+
+Python lives only here (and in tests); it runs once at ``make artifacts``
+to train the GRU-DPD model and lower it to HLO text for the Rust
+runtime. Nothing in this package is imported on the request path.
+
+x64 is enabled globally: the canonical integer datapath uses int64
+accumulators (the ASIC's wide MAC accumulator), which jax only provides
+with the x64 flag. All public functions use explicit dtypes, so float32
+semantics are unaffected.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,275 @@
+"""AOT build orchestrator — the single entry point of the compile path.
+
+``python -m compile.aot --outdir ../artifacts`` does, in order:
+
+1. write the PA behavioral model (``pa_model.json``) shared with rust;
+2. generate the OFDM 64-QAM training/validation corpora;
+3. train the float GRU-DPD model (direct learning through the PA);
+4. QAT-fine-tune the main 12-bit Hardsigmoid/Hardtanh model (the chip's
+   configuration) and the Fig. 3 sweep grid (bits × activation);
+5. lower the integer Pallas model to **HLO text** (weights baked as
+   constants) for the rust PJRT runtime — text, not serialized proto:
+   jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+   rejects, while the text parser reassigns ids (see
+   /opt/xla-example/README.md);
+6. dump golden vectors (bit-exact I/O pairs + a per-step trace) used by
+   the rust test-suite to prove datapath parity;
+7. write ``manifest.json`` describing everything above.
+
+Everything is deterministic (fixed seeds). ``--fast`` shrinks training
+for CI-style smoke runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dataset, model, pa_model, train
+from .kernels import ref
+from .kernels.activations import LutSpec
+from .kernels.quant import QSpec
+
+SWEEP_BITS = (6, 8, 10, 12, 14, 16)
+ACTS = ("hard", "lut")
+MAIN_BITS = 12
+HLO_FRAMES = (2048, 256)  # time lengths exported for the runtime
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XlaComputation -> HLO text (the interchange).
+
+    ``print_large_constants=True`` is essential: the default text form
+    elides non-scalar constants as ``{...}``, and the rust-side text
+    parser silently fills them with garbage — the baked model weights
+    would be lost (discovered the hard way; see DESIGN.md §Build notes).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_int_model(iparams, spec: QSpec, act: str, batch: int, t: int) -> str:
+    """Lower the integer Pallas model with weights baked as constants."""
+    iparams_c = {k: jnp.asarray(v) for k, v in iparams.items()}
+
+    def fn(iq_codes):
+        return (model.forward_int(iparams_c, iq_codes, spec, act=act),)
+
+    in_spec = jax.ShapeDtypeStruct((batch, t, 2), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(in_spec))
+
+
+def lower_float_model(params, batch: int, t: int) -> str:
+    """Lower the float Pallas model (fp32 reference engine for rust)."""
+    params_c = {k: jnp.asarray(v) for k, v in params.items()}
+
+    def fn(iq):
+        return (model.forward_pallas(params_c, iq, spec=None, act="hard"),)
+
+    in_spec = jax.ShapeDtypeStruct((batch, t, 2), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(in_spec))
+
+
+def eval_nmse(params, frames, pa, spec, act) -> float:
+    """Validation NMSE (dB) of PA(DPD(x)) against the linear target."""
+    y = ref.float_forward(params, jnp.asarray(frames, jnp.float32), spec=spec, act=act)
+    y_pa = np.asarray(pa_model.apply_pa(y, pa))
+    g = pa_model.target_gain(pa)
+    tr, ti = frames[..., 0], frames[..., 1]
+    target = np.stack([g.real * tr - g.imag * ti, g.real * ti + g.imag * tr], axis=-1)
+    return train.nmse_db(y_pa, target)
+
+
+def golden_case(iparams, spec: QSpec, act: str, t: int, seed: int) -> dict:
+    """Bit-exact I/O pair + per-step trace for the rust parity tests."""
+    rng = np.random.default_rng(seed)
+    # Codes drawn over a realistic amplitude range (not full-scale noise):
+    amp = int(0.6 * spec.scale)
+    iq = rng.integers(-amp, amp + 1, size=(t, 2)).astype(np.int32)
+    out = np.asarray(ref.int_forward(iparams, jnp.asarray(iq), spec, act=act))
+
+    # Short per-step trace with hidden state for debugging the rust port.
+    trace_t = min(t, 8)
+    tables = None
+    if act == "lut":
+        from .kernels.activations import make_sigmoid_table, make_tanh_table
+
+        lut = LutSpec()
+        tables = (lut, jnp.asarray(make_sigmoid_table(lut, spec)), jnp.asarray(make_tanh_table(lut, spec)))
+    feats = np.asarray(ref.features_int(jnp.asarray(iq[:trace_t]), spec))
+    h = jnp.zeros((iparams["w_hh"].shape[1],), jnp.int32)
+    hs, ys = [], []
+    for step_i in range(trace_t):
+        h, y = ref.int_step(iparams, h, jnp.asarray(feats[step_i]), spec, act, tables)
+        hs.append(np.asarray(h).tolist())
+        ys.append(np.asarray(y).tolist())
+
+    return {
+        "bits": spec.bits,
+        "act": act,
+        "lut": {"lo": -4.0, "hi": 4.0, "addr_bits": 10},
+        "iq_codes": iq.tolist(),
+        "out_codes": out.tolist(),
+        "trace": {"features": feats.tolist(), "h": hs, "y": ys},
+    }
+
+
+def int_params_jsonable(iparams) -> dict:
+    out = {}
+    for k in model.PARAM_KEYS:
+        v = np.asarray(iparams[k])
+        out[k] = {"shape": list(v.shape), "data": v.reshape(-1).tolist()}
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file alias; sets outdir to its dirname")
+    ap.add_argument("--fast", action="store_true", help="tiny training budget (CI smoke)")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+
+    outdir = args.outdir if args.out is None else os.path.dirname(args.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+    os.makedirs(os.path.join(outdir, "weights_sweep"), exist_ok=True)
+    os.makedirs(os.path.join(outdir, "golden"), exist_ok=True)
+    t0 = time.time()
+
+    # -- 1. PA plant ---------------------------------------------------
+    pa = pa_model.ganlike_spec()
+    pa_model.save_spec(os.path.join(outdir, "pa_model.json"), pa)
+
+    # -- 2. Data -------------------------------------------------------
+    n_syms = 16 if args.fast else 96
+    train_cfg_sig = dataset.OfdmConfig(n_symbols=n_syms, seed=args.seed)
+    val_cfg_sig = dataset.OfdmConfig(n_symbols=max(8, n_syms // 4), seed=args.seed + 1)
+    x_train = dataset.generate_ofdm(train_cfg_sig)
+    x_val = dataset.generate_ofdm(val_cfg_sig)
+    frames = dataset.frames_from_signal(x_train, frame_len=50)
+    val_frames = dataset.frames_from_signal(x_val, frame_len=50)
+    print(f"[aot] dataset: {frames.shape[0]} train frames, PAPR {dataset.papr_db(x_train):.1f} dB")
+
+    # -- 3. Float training ---------------------------------------------
+    cfg = model.ModelConfig(hidden=10)
+    assert cfg.n_params == 502, "paper model size"
+    params = model.init_params(cfg, jax.random.PRNGKey(args.seed))
+    steps_float = 60 if args.fast else 6000
+    tc = train.TrainConfig(steps=steps_float, seed=args.seed, eval_every=100, patience=6, log_every=0)
+    params, hist = train.train(params, frames, pa, tc, spec=None, act="hard", val_frames=val_frames)
+    nmse_float = eval_nmse(params, val_frames, pa, None, "hard")
+    model.save_params(
+        os.path.join(outdir, "weights_float.json"),
+        params,
+        meta={"bits": 0, "act": "float", "val_nmse_db": nmse_float, "loss_curve": hist["val"]},
+    )
+    print(f"[aot] float model trained ({steps_float} steps): val NMSE {nmse_float:.1f} dB")
+
+    # -- 4. QAT main + sweep -------------------------------------------
+    steps_qat = 40 if args.fast else 800
+    sweep_meta = {}
+    weights_by_cfg = {}
+    sweep_bits = (8, MAIN_BITS) if args.fast else SWEEP_BITS
+    for bits in sweep_bits:
+        for act in ACTS:
+            spec = QSpec(bits)
+            tc_q = train.TrainConfig(steps=steps_qat, seed=args.seed + bits, lr=5e-4)
+            p_q, _ = train.train(dict(params), frames, pa, tc_q, spec=spec, act=act, val_frames=val_frames)
+            nm = eval_nmse(p_q, val_frames, pa, spec, act)
+            name = f"b{bits}_{act}"
+            model.save_params(
+                os.path.join(outdir, "weights_sweep", f"{name}.json"),
+                p_q,
+                meta={"bits": bits, "act": act, "val_nmse_db": nm},
+            )
+            sweep_meta[name] = {"bits": bits, "act": act, "val_nmse_db": nm}
+            weights_by_cfg[(bits, act)] = p_q
+            print(f"[aot] QAT {name}: val NMSE {nm:.1f} dB")
+
+    main_params = weights_by_cfg[(MAIN_BITS, "hard")]
+    main_spec = QSpec(MAIN_BITS)
+    main_iparams = ref.quantize_params(main_params, main_spec)
+    with open(os.path.join(outdir, "weights_main.json"), "w") as fh:
+        json.dump(
+            {
+                "meta": {
+                    "bits": MAIN_BITS,
+                    "act": "hard",
+                    "val_nmse_db": sweep_meta[f"b{MAIN_BITS}_hard"]["val_nmse_db"],
+                },
+                "params": model.params_to_jsonable(main_params),
+                "params_int": int_params_jsonable(main_iparams),
+            },
+            fh,
+        )
+
+    # -- 5. HLO artifacts ----------------------------------------------
+    hlo_entries = []
+    frames_hlo = (256,) if args.fast else HLO_FRAMES
+    for t in frames_hlo:
+        txt = lower_int_model(main_iparams, main_spec, "hard", 1, t)
+        fname = f"gru_q{MAIN_BITS}_hard_b1_t{t}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as fh:
+            fh.write(txt)
+        hlo_entries.append(
+            {"file": fname, "kind": "int", "bits": MAIN_BITS, "act": "hard", "batch": 1, "time": t}
+        )
+        print(f"[aot] lowered {fname} ({len(txt)} chars)")
+    t_float = frames_hlo[-1]
+    txt = lower_float_model(params, 1, t_float)
+    fname = f"gru_f32_b1_t{t_float}.hlo.txt"
+    with open(os.path.join(outdir, fname), "w") as fh:
+        fh.write(txt)
+    hlo_entries.append({"file": fname, "kind": "float", "bits": 0, "act": "float", "batch": 1, "time": t_float})
+    print(f"[aot] lowered {fname} ({len(txt)} chars)")
+
+    # -- 6. Golden vectors ----------------------------------------------
+    golden_files = []
+    golden_cfgs = [(MAIN_BITS, "hard"), (MAIN_BITS, "lut"), (8, "hard")]
+    for bits, act in golden_cfgs:
+        spec = QSpec(bits)
+        p = weights_by_cfg.get((bits, act), main_params)
+        ip = ref.quantize_params(p, spec)
+        case = golden_case(ip, spec, act, t=64, seed=1000 + bits)
+        case["params_int"] = int_params_jsonable(ip)
+        fname = f"golden/g_b{bits}_{act}.json"
+        with open(os.path.join(outdir, fname), "w") as fh:
+            json.dump(case, fh)
+        golden_files.append(fname)
+    print(f"[aot] golden vectors: {golden_files}")
+
+    # -- 7. Manifest -----------------------------------------------------
+    manifest = {
+        "version": 1,
+        "model": {"hidden": cfg.hidden, "features": cfg.features, "n_params": cfg.n_params},
+        "qspec": {"bits": MAIN_BITS, "frac": MAIN_BITS - 2},
+        "lut": {"lo": -4.0, "hi": 4.0, "addr_bits": 10},
+        "pa": "pa_model.json",
+        "weights": {
+            "main": "weights_main.json",
+            "float": "weights_float.json",
+            "sweep": {k: f"weights_sweep/{k}.json" for k in sweep_meta},
+        },
+        "sweep_meta": sweep_meta,
+        "hlo": hlo_entries,
+        "golden": golden_files,
+        "build_seconds": round(time.time() - t0, 1),
+        "fast": bool(args.fast),
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"[aot] done in {manifest['build_seconds']}s -> {outdir}")
+
+
+if __name__ == "__main__":
+    main()

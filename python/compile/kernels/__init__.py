@@ -1,0 +1,4 @@
+"""L1 Pallas kernels + quantization/activation primitives + jnp oracles."""
+
+from .quant import QSpec  # noqa: F401
+from .activations import LutSpec  # noqa: F401

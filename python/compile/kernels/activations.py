@@ -1,0 +1,144 @@
+"""Gate activation functions of the DPD-NeuralEngine.
+
+The paper compares two hardware implementations (§III-B, Fig. 3/4):
+
+* **PWL (Hardsigmoid / Hardtanh)** — Eq. (7)/(8); comparators and a
+  shifter in hardware; the chip's choice.
+* **LUT** — a ROM holding the true sigmoid/tanh sampled on a uniform
+  grid; the baseline that costs ~20k FPGA LUTs.
+
+Both exist in a float view (for QAT) and an integer view (bit-exact with
+the Rust datapath). The integer Hardsigmoid uses a *floor* shift for the
+/4 — that is what a hardware shifter does — while the float/QAT view
+uses exact division; the discrepancy is below 1 LSB and only the integer
+view is used for inference parity.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .quant import QSpec, fake_quant
+
+__all__ = [
+    "hardsigmoid",
+    "hardtanh",
+    "hardsigmoid_int",
+    "hardtanh_int",
+    "LutSpec",
+    "make_sigmoid_table",
+    "make_tanh_table",
+    "lut_activation",
+    "lut_activation_int",
+]
+
+# ---------------------------------------------------------------------------
+# PWL (hard) activations
+# ---------------------------------------------------------------------------
+
+
+def hardsigmoid(x: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (7): 0 below -2, x/4 + 1/2 inside, 1 above 2."""
+    return jnp.clip(x * 0.25 + 0.5, 0.0, 1.0)
+
+
+def hardtanh(x: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (8): clamp to [-1, 1]."""
+    return jnp.clip(x, -1.0, 1.0)
+
+
+def hardsigmoid_int(x: jnp.ndarray, spec: QSpec) -> jnp.ndarray:
+    """Integer Hardsigmoid on Q2.f codes.
+
+    y = clip((x >> 2) + 0.5, 0, 1) in the code domain. ``x >> 2`` is the
+    hardware shifter (arithmetic, floor); 0.5 and 1.0 are the codes
+    ``1 << (f-1)`` and ``1 << f``.
+    """
+    half = 1 << (spec.frac - 1)
+    one = 1 << spec.frac
+    return jnp.clip(jnp.right_shift(x, 2) + half, 0, one)
+
+
+def hardtanh_int(x: jnp.ndarray, spec: QSpec) -> jnp.ndarray:
+    """Integer Hardtanh on Q2.f codes: clamp to ±(1 << f)."""
+    one = 1 << spec.frac
+    return jnp.clip(x, -one, one)
+
+
+# ---------------------------------------------------------------------------
+# LUT activations (the paper's baseline)
+# ---------------------------------------------------------------------------
+
+
+class LutSpec:
+    """Uniform-grid lookup table over ``[lo, hi)`` with ``n`` entries.
+
+    Address generation matches the hardware: the Q2.f input code is
+    offset by ``lo`` and floor-shifted so that each table entry covers
+    ``2^shift`` input codes. Out-of-range inputs clamp to the first/last
+    entry (the ROM's guard entries hold the asymptotic values).
+    """
+
+    def __init__(self, lo: float = -4.0, hi: float = 4.0, addr_bits: int = 10):
+        self.lo = lo
+        self.hi = hi
+        self.addr_bits = addr_bits
+        self.n = 1 << addr_bits
+
+    def centers(self) -> np.ndarray:
+        step = (self.hi - self.lo) / self.n
+        return self.lo + step * (np.arange(self.n) + 0.5)
+
+    def index_float(self, x: jnp.ndarray) -> jnp.ndarray:
+        step = (self.hi - self.lo) / self.n
+        idx = jnp.floor((x - self.lo) / step).astype(jnp.int32)
+        return jnp.clip(idx, 0, self.n - 1)
+
+    def index_int(self, x_code: jnp.ndarray, spec: QSpec) -> jnp.ndarray:
+        """Address from a Q2.f code using shift-based hardware addressing.
+
+        Requires the span/``n`` ratio to be a power-of-two multiple of the
+        LSB, which holds for the default (span 8, n=1024, f>=7).
+        """
+        span_codes = int(round((self.hi - self.lo) * spec.scale))
+        per_entry = span_codes // self.n
+        if per_entry < 1:
+            # Finer table than the input grid: direct offset addressing.
+            lo_code = int(round(self.lo * spec.scale))
+            idx = (x_code - lo_code) * (self.n // max(span_codes, 1))
+            return jnp.clip(idx, 0, self.n - 1)
+        shift = int(per_entry).bit_length() - 1
+        assert (1 << shift) == per_entry, "table span must divide power-of-two"
+        lo_code = int(round(self.lo * spec.scale))
+        idx = jnp.right_shift(x_code - lo_code, shift)
+        return jnp.clip(idx, 0, self.n - 1)
+
+
+def make_sigmoid_table(lut: LutSpec, spec: QSpec) -> np.ndarray:
+    """Sigmoid ROM contents as Q2.f codes (int32)."""
+    vals = 1.0 / (1.0 + np.exp(-lut.centers()))
+    return np.clip(np.floor(vals * spec.scale + 0.5), spec.qmin, spec.qmax).astype(np.int32)
+
+
+def make_tanh_table(lut: LutSpec, spec: QSpec) -> np.ndarray:
+    """Tanh ROM contents as Q2.f codes (int32)."""
+    vals = np.tanh(lut.centers())
+    return np.clip(np.floor(vals * spec.scale + 0.5), spec.qmin, spec.qmax).astype(np.int32)
+
+
+def lut_activation(x: jnp.ndarray, table_codes: jnp.ndarray, lut: LutSpec, spec: QSpec) -> jnp.ndarray:
+    """Float view of the LUT activation (for QAT): gather + dequantize.
+
+    The gather is non-differentiable; QAT uses an STE against the smooth
+    function so gradients still flow (handled by the caller via
+    ``fake_quant``-style composition).
+    """
+    idx = lut.index_float(fake_quant(x, spec))
+    return jnp.take(table_codes, idx).astype(jnp.float32) / spec.scale
+
+
+def lut_activation_int(x_code: jnp.ndarray, table_codes: jnp.ndarray, lut: LutSpec, spec: QSpec) -> jnp.ndarray:
+    """Integer view: ROM read addressed by the shifted input code."""
+    idx = lut.index_int(x_code, spec)
+    return jnp.take(table_codes, idx)

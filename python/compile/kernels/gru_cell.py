@@ -1,0 +1,287 @@
+"""L1 — Pallas kernels for the fused GRU-RNN DPD cell.
+
+This is the software expression of the DPD-NeuralEngine datapath
+(DESIGN.md §2 Hardware-Adaptation): one ``pallas_call`` processes an
+entire I/Q frame per grid step, with
+
+* the three gate weight matrices concatenated into single ``(3H, F)`` /
+  ``(3H, H)`` operands that are loaded into VMEM once per frame — the
+  analogue of the ASIC's weight buffer (weights stationary);
+* the hidden state carried as a loop value across the in-kernel time
+  loop — the analogue of the hidden-state buffer;
+* Hardsigmoid/Hardtanh as clip-based VPU ops (the paper's PWL units),
+  or a gathered ROM for the LUT baseline;
+* the batch (grid) dimension modelling independent antenna streams.
+
+Kernels are lowered with ``interpret=True`` — the CPU PJRT client that
+the Rust runtime embeds cannot execute Mosaic custom calls, and
+interpret-mode lowering produces plain HLO that runs anywhere.
+
+Float and integer variants exist; the integer variant is bit-exact with
+``ref.int_forward`` (the canonical datapath) and therefore with the Rust
+fixed-point engine.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .activations import (
+    LutSpec,
+    hardsigmoid,
+    hardsigmoid_int,
+    hardtanh,
+    hardtanh_int,
+    make_sigmoid_table,
+    make_tanh_table,
+)
+from .quant import QSpec, fake_quant, rshift_round, saturate
+
+__all__ = ["gru_dpd_pallas", "gru_dpd_pallas_int"]
+
+
+# ---------------------------------------------------------------------------
+# Float kernel
+# ---------------------------------------------------------------------------
+
+
+def _float_kernel(iq_ref, w_ih_ref, b_ih_ref, w_hh_ref, b_hh_ref, w_fc_ref, b_fc_ref, out_ref, *, spec, act):
+    """Kernel body: one frame (T, 2) -> (T, 2), weights VMEM-resident."""
+    iq = iq_ref[0]  # (T, 2) block
+    w_ih, b_ih = w_ih_ref[...], b_ih_ref[...]
+    w_hh, b_hh = w_hh_ref[...], b_hh_ref[...]
+    w_fc, b_fc = w_fc_ref[...], b_fc_ref[...]
+    T = iq.shape[0]
+    hidden = w_hh.shape[1]
+
+    def q(v):
+        return fake_quant(v, spec) if spec is not None else v
+
+    def sig(v):
+        y = hardsigmoid(v) if act == "hard" else jax.nn.sigmoid(v)
+        return q(y)
+
+    def tanh(v):
+        y = hardtanh(v) if act == "hard" else jnp.tanh(v)
+        return q(y)
+
+    # Preprocessor (Eq. 1) on the whole frame at once — the 2-PE
+    # feature extractor runs ahead of the recurrent loop.
+    iqq = q(iq)
+    i_ch, q_ch = iqq[:, 0], iqq[:, 1]
+    p = q(4.0 * (i_ch * i_ch + q_ch * q_ch))
+    p2 = q(p * p)
+    feats = jnp.stack([i_ch, q_ch, p, p2], axis=-1)  # (T, 4)
+
+    wq_ih, bq_ih = q(w_ih), q(b_ih)
+    wq_hh, bq_hh = q(w_hh), q(b_hh)
+    wq_fc, bq_fc = q(w_fc), q(b_fc)
+
+    def body(t, carry):
+        h, ys = carry
+        x = jax.lax.dynamic_slice_in_dim(feats, t, 1, axis=0)[0]  # (4,)
+        gi = q(wq_ih @ x + bq_ih)
+        gh = q(wq_hh @ h + bq_hh)
+        r = sig(q(gi[:hidden] + gh[:hidden]))
+        z = sig(q(gi[hidden : 2 * hidden] + gh[hidden : 2 * hidden]))
+        n = tanh(q(gi[2 * hidden :] + q(r * gh[2 * hidden :])))
+        h_new = q(q((1.0 - z) * n) + q(z * h))
+        # residual output around the (quantized) I/Q input
+        y = q(wq_fc @ h_new + bq_fc + x[0:2])
+        ys = jax.lax.dynamic_update_slice_in_dim(ys, y[None, :], t, axis=0)
+        return h_new, ys
+
+    h0 = jnp.zeros((hidden,), iq.dtype)
+    ys0 = jnp.zeros((T, 2), iq.dtype)
+    _, ys = jax.lax.fori_loop(0, T, body, (h0, ys0))
+    out_ref[0] = ys
+
+
+def _replicated(shape):
+    """BlockSpec for an operand every grid step sees in full (weights)."""
+    return pl.BlockSpec(shape, lambda b: (0,) * len(shape))
+
+
+def gru_dpd_pallas(params, iq, spec: QSpec | None = None, act: str = "hard"):
+    """Run the float GRU-DPD Pallas kernel over batched frames.
+
+    ``iq``: (B, T, 2) float32. Returns (B, T, 2) predistorted I/Q.
+    """
+    B, T, _ = iq.shape
+    kern = partial(_float_kernel, spec=spec, act=act)
+    return pl.pallas_call(
+        kern,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, T, 2), lambda b: (b, 0, 0)),
+            _replicated(params["w_ih"].shape),
+            _replicated(params["b_ih"].shape),
+            _replicated(params["w_hh"].shape),
+            _replicated(params["b_hh"].shape),
+            _replicated(params["w_fc"].shape),
+            _replicated(params["b_fc"].shape),
+        ],
+        out_specs=pl.BlockSpec((1, T, 2), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, 2), iq.dtype),
+        interpret=True,
+    )(
+        iq,
+        params["w_ih"],
+        params["b_ih"],
+        params["w_hh"],
+        params["b_hh"],
+        params["w_fc"],
+        params["b_fc"],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Integer kernel — bit-exact with ref.int_forward
+# ---------------------------------------------------------------------------
+
+
+def _int_kernel(
+    iq_ref,
+    w_ih_ref,
+    b_ih_ref,
+    w_hh_ref,
+    b_hh_ref,
+    w_fc_ref,
+    b_fc_ref,
+    sig_tab_ref,
+    tanh_tab_ref,
+    out_ref,
+    *,
+    spec: QSpec,
+    act: str,
+    lut: LutSpec,
+    acc_dtype=jnp.int64,
+):
+    # Accumulator width: int64 is the reference; int32 is bit-identical
+    # for bits <= 13 (|code| < 2^12 -> product < 2^24, x(H+1) < 2^28)
+    # and is what the AOT artifacts use — the PJRT runtime embedded in
+    # rust (xla_extension 0.5.1) miscompiles s64 elementwise chains.
+    iq = iq_ref[0].astype(acc_dtype)  # (T, 2)
+    w_ih = w_ih_ref[...].astype(acc_dtype)
+    b_ih = b_ih_ref[...].astype(acc_dtype)
+    w_hh = w_hh_ref[...].astype(acc_dtype)
+    b_hh = b_hh_ref[...].astype(acc_dtype)
+    w_fc = w_fc_ref[...].astype(acc_dtype)
+    b_fc = b_fc_ref[...].astype(acc_dtype)
+    sig_tab = sig_tab_ref[...]
+    tanh_tab = tanh_tab_ref[...]
+    T = iq.shape[0]
+    hidden = w_hh.shape[1]
+    f = spec.frac
+    one = 1 << f
+
+    def lut_idx(x_code):
+        span_codes = int(round((lut.hi - lut.lo) * spec.scale))
+        lo_code = int(round(lut.lo * spec.scale))
+        if span_codes >= lut.n:
+            shift = (span_codes // lut.n).bit_length() - 1
+            idx = jnp.right_shift(x_code - lo_code, shift)
+        else:
+            idx = (x_code - lo_code) * (lut.n // max(span_codes, 1))
+        return jnp.clip(idx, 0, lut.n - 1)
+
+    def sig(v):
+        if act == "hard":
+            return hardsigmoid_int(v, spec).astype(acc_dtype)
+        return jnp.take(sig_tab, lut_idx(v)).astype(acc_dtype)
+
+    def tanh(v):
+        if act == "hard":
+            return hardtanh_int(v, spec).astype(acc_dtype)
+        return jnp.take(tanh_tab, lut_idx(v)).astype(acc_dtype)
+
+    # Preprocessor on the whole frame (wide intermediates).
+    # feat3 = 4*|x|^2 (x4 absorbed in the f-2 shift), feat4 = feat3^2.
+    i_ch, q_ch = iq[:, 0], iq[:, 1]
+    p = saturate(rshift_round(i_ch * i_ch + q_ch * q_ch, f - 2), spec)
+    p2 = saturate(rshift_round(p * p, f), spec)
+    feats = jnp.stack([i_ch, q_ch, p, p2], axis=-1)  # (T, 4) wide
+
+    def matvec(w, x, b):
+        acc = w @ x + (b << f)
+        return saturate(rshift_round(acc, f), spec)
+
+    def body(t, carry):
+        h, ys = carry
+        x = jax.lax.dynamic_slice_in_dim(feats, t, 1, axis=0)[0]
+        gi = matvec(w_ih, x, b_ih)
+        gh = matvec(w_hh, h, b_hh)
+        r = sig(saturate(gi[:hidden] + gh[:hidden], spec))
+        z = sig(saturate(gi[hidden : 2 * hidden] + gh[hidden : 2 * hidden], spec))
+        rh = saturate(rshift_round(r * gh[2 * hidden :], f), spec)
+        n = tanh(saturate(gi[2 * hidden :] + rh, spec))
+        zn = rshift_round((one - z) * n, f)
+        zh = rshift_round(z * h, f)
+        h_new = saturate(zn + zh, spec)
+        # residual output around the raw I/Q codes
+        y = saturate(matvec(w_fc, h_new, b_fc) + x[0:2], spec)
+        ys = jax.lax.dynamic_update_slice_in_dim(ys, y[None, :].astype(jnp.int32), t, axis=0)
+        return h_new, ys
+
+    h0 = jnp.zeros((hidden,), acc_dtype)
+    ys0 = jnp.zeros((T, 2), jnp.int32)
+    _, ys = jax.lax.fori_loop(0, T, body, (h0, ys0))
+    out_ref[0] = ys
+
+
+def gru_dpd_pallas_int(
+    iparams,
+    iq_codes,
+    spec: QSpec,
+    act: str = "hard",
+    lut: LutSpec | None = None,
+    acc_dtype=None,
+):
+    """Integer (Q2.f) GRU-DPD Pallas kernel over batched frames.
+
+    ``iq_codes``: (B, T, 2) int32 codes. Returns (B, T, 2) int32 codes,
+    bit-exact with ``ref.int_forward``. This lowered computation (with
+    weights baked as constants) is what the Rust runtime executes via
+    PJRT — the chip's exact arithmetic on the request path.
+    """
+    B, T, _ = iq_codes.shape
+    lut = lut or LutSpec()
+    # int32 accumulation is bit-identical for bits <= 13 and is required
+    # for the AOT artifacts (the rust-embedded XLA miscompiles s64).
+    if acc_dtype is None:
+        acc_dtype = jnp.int32 if spec.bits <= 13 else jnp.int64
+    sig_tab = jnp.asarray(make_sigmoid_table(lut, spec))
+    tanh_tab = jnp.asarray(make_tanh_table(lut, spec))
+    kern = partial(_int_kernel, spec=spec, act=act, lut=lut, acc_dtype=acc_dtype)
+    return pl.pallas_call(
+        kern,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, T, 2), lambda b: (b, 0, 0)),
+            _replicated(iparams["w_ih"].shape),
+            _replicated(iparams["b_ih"].shape),
+            _replicated(iparams["w_hh"].shape),
+            _replicated(iparams["b_hh"].shape),
+            _replicated(iparams["w_fc"].shape),
+            _replicated(iparams["b_fc"].shape),
+            _replicated(sig_tab.shape),
+            _replicated(tanh_tab.shape),
+        ],
+        out_specs=pl.BlockSpec((1, T, 2), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, 2), jnp.int32),
+        interpret=True,
+    )(
+        iq_codes,
+        iparams["w_ih"],
+        iparams["b_ih"],
+        iparams["w_hh"],
+        iparams["b_hh"],
+        iparams["w_fc"],
+        iparams["b_fc"],
+        sig_tab,
+        tanh_tab,
+    )

@@ -1,0 +1,131 @@
+"""Fixed-point quantization ops for the DPD-NeuralEngine datapath.
+
+The paper (§III-C) uses a 12-bit Q2.10 format — 2 integer bits (one of
+them the sign) and 10 fractional bits — for weights, activations and the
+I/Q streams. We generalize to Qs2.f with total width ``bits`` and
+``frac = bits - 2`` fractional bits so Fig. 3's precision sweep
+(6..16 bits) reuses the same code.
+
+Two views of the same arithmetic live here:
+
+* the *float* view (``fake_quant``) used during QAT — values stay f32,
+  quantization is emulated by round/clip with a straight-through
+  estimator so gradients flow;
+* the *integer* view (``to_int``/``from_int`` + the rounding/saturation
+  helpers) which is bit-exact w.r.t. the Rust fixed-point engine
+  (``rust/src/fixed``) and the cycle-accurate simulator. The integer
+  helpers define the canonical rounding/saturation semantics the whole
+  project shares:
+
+  - requantize shift: round-to-nearest, ties toward +inf
+    (``(v + (1 << (s-1))) >> s`` with arithmetic shift);
+  - saturation: clamp to ``[-2^(bits-1), 2^(bits-1) - 1]``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QSpec",
+    "fake_quant",
+    "quantize_to_int",
+    "dequantize",
+    "rshift_round",
+    "saturate",
+    "requantize",
+]
+
+
+@dataclass(frozen=True)
+class QSpec:
+    """Fixed-point format Q2.(bits-2): 2 integer bits, bits-2 fractional."""
+
+    bits: int = 12
+
+    @property
+    def frac(self) -> int:
+        return self.bits - 2
+
+    @property
+    def scale(self) -> float:
+        return float(1 << self.frac)
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    @property
+    def lo(self) -> float:
+        """Smallest representable value (=-2.0 for Q2.f)."""
+        return self.qmin / self.scale
+
+    @property
+    def hi(self) -> float:
+        """Largest representable value (=2.0 - 2^-f for Q2.f)."""
+        return self.qmax / self.scale
+
+    @property
+    def lsb(self) -> float:
+        return 1.0 / self.scale
+
+
+def _round_half_up(x: jnp.ndarray) -> jnp.ndarray:
+    """Round to nearest, ties toward +inf — matches the integer shift."""
+    return jnp.floor(x + 0.5)
+
+
+def fake_quant(x: jnp.ndarray, spec: QSpec) -> jnp.ndarray:
+    """Float-domain quantization with a straight-through estimator.
+
+    Forward: round ``x`` to the Q2.f grid and saturate. Backward:
+    identity inside the representable range, zero outside (clipped STE),
+    which is the standard QAT gradient.
+    """
+    # Clip first so the STE kills gradients for saturated values.
+    clipped = jnp.clip(x, spec.lo, spec.hi)
+    q = _round_half_up(clipped * spec.scale) / spec.scale
+    q = jnp.clip(q, spec.lo, spec.hi)
+    # Straight-through: forward value q, gradient of `clipped`.
+    return clipped + jax.lax.stop_gradient(q - clipped)
+
+
+def quantize_to_int(x: jnp.ndarray, spec: QSpec) -> jnp.ndarray:
+    """Float -> int32 code (the value the ASIC datapath carries)."""
+    q = _round_half_up(jnp.asarray(x, jnp.float64 if x.dtype == jnp.float64 else jnp.float32) * spec.scale)
+    return jnp.clip(q, spec.qmin, spec.qmax).astype(jnp.int32)
+
+
+def dequantize(q: jnp.ndarray, spec: QSpec) -> jnp.ndarray:
+    """int32 code -> float."""
+    return q.astype(jnp.float32) / spec.scale
+
+
+def rshift_round(v: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Arithmetic right shift by ``s`` with round-to-nearest, ties to +inf.
+
+    This is the requantization primitive of the datapath: products of two
+    Q2.f values carry 2f fractional bits; shifting by f brings them back.
+    Must match ``rust/src/fixed/ops.rs::rshift_round`` bit for bit.
+    """
+    if s == 0:
+        return v
+    bias = jnp.int32(1 << (s - 1))
+    return jnp.right_shift(v + bias, s)
+
+
+def saturate(v: jnp.ndarray, spec: QSpec) -> jnp.ndarray:
+    """Clamp an int32 value into the Q2.f representable code range."""
+    return jnp.clip(v, spec.qmin, spec.qmax)
+
+
+def requantize(acc: jnp.ndarray, shift: int, spec: QSpec) -> jnp.ndarray:
+    """Accumulator (int32, ``shift`` extra frac bits) -> saturated Q2.f."""
+    return saturate(rshift_round(acc, shift), spec)

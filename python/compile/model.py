@@ -1,0 +1,126 @@
+"""L2 — the GRU-RNN DPD model (paper §II, Eq. 1-6).
+
+The model is tiny by design: 4 input features, ``hidden`` GRU units
+(10 in the paper → 502 parameters), a 2-output FC head. This module
+owns parameter initialization/serialization and the user-facing forward
+functions; the arithmetic lives in ``kernels`` (Pallas) and
+``kernels.ref`` (oracles).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import gru_cell, ref
+from .kernels.quant import QSpec
+
+Params = Dict[str, jnp.ndarray]
+
+__all__ = [
+    "ModelConfig",
+    "init_params",
+    "forward",
+    "forward_pallas",
+    "forward_int",
+    "params_to_jsonable",
+    "params_from_jsonable",
+    "save_params",
+    "load_params",
+]
+
+PARAM_KEYS = ("w_ih", "b_ih", "w_hh", "b_hh", "w_fc", "b_fc")
+
+
+class ModelConfig:
+    """Model hyper-parameters (paper defaults)."""
+
+    def __init__(self, hidden: int = 10, features: int = ref.INPUT_FEATURES):
+        self.hidden = hidden
+        self.features = features
+
+    @property
+    def n_params(self) -> int:
+        return ref.param_count(self.hidden)
+
+    def shapes(self) -> Dict[str, tuple]:
+        h, f = self.hidden, self.features
+        return {
+            "w_ih": (3 * h, f),
+            "b_ih": (3 * h,),
+            "w_hh": (3 * h, h),
+            "b_hh": (3 * h,),
+            "w_fc": (2, h),
+            "b_fc": (2,),
+        }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """PyTorch-style GRU init: U(-1/sqrt(H), 1/sqrt(H)) on every tensor."""
+    bound = 1.0 / math.sqrt(cfg.hidden)
+    params = {}
+    for name, shape in cfg.shapes().items():
+        key, sub = jax.random.split(key)
+        params[name] = jax.random.uniform(sub, shape, jnp.float32, -bound, bound)
+    return params
+
+
+def forward(params: Params, iq: jnp.ndarray, spec: QSpec | None = None, act: str = "hard") -> jnp.ndarray:
+    """Reference (scan-based) forward — differentiable, used for QAT."""
+    return ref.float_forward(params, iq, spec=spec, act=act)
+
+
+def forward_pallas(params: Params, iq: jnp.ndarray, spec: QSpec | None = None, act: str = "hard") -> jnp.ndarray:
+    """Pallas-kernel forward (the hot-spot path that gets AOT-lowered)."""
+    squeeze = iq.ndim == 2
+    if squeeze:
+        iq = iq[None]
+    out = gru_cell.gru_dpd_pallas(params, iq, spec=spec, act=act)
+    return out[0] if squeeze else out
+
+
+def forward_int(iparams: Params, iq_codes: jnp.ndarray, spec: QSpec, act: str = "hard") -> jnp.ndarray:
+    """Integer Pallas forward on Q2.f codes (bit-exact with the chip)."""
+    squeeze = iq_codes.ndim == 2
+    if squeeze:
+        iq_codes = iq_codes[None]
+    out = gru_cell.gru_dpd_pallas_int(iparams, iq_codes, spec, act=act)
+    return out[0] if squeeze else out
+
+
+# ---------------------------------------------------------------------------
+# Serialization (shared JSON schema with rust/src/dpd/weights.rs)
+# ---------------------------------------------------------------------------
+
+
+def params_to_jsonable(params: Params) -> dict:
+    out = {}
+    for k in PARAM_KEYS:
+        v = np.asarray(params[k])
+        out[k] = {"shape": list(v.shape), "data": v.reshape(-1).tolist()}
+    return out
+
+
+def params_from_jsonable(obj: dict, dtype=jnp.float32) -> Params:
+    params = {}
+    for k in PARAM_KEYS:
+        entry = obj[k]
+        params[k] = jnp.asarray(np.asarray(entry["data"], dtype=np.float64).reshape(entry["shape"]), dtype)
+    return params
+
+
+def save_params(path: str, params: Params, meta: dict | None = None) -> None:
+    payload = {"meta": meta or {}, "params": params_to_jsonable(params)}
+    with open(path, "w") as fh:
+        json.dump(payload, fh)
+
+
+def load_params(path: str, dtype=jnp.float32) -> tuple[Params, dict]:
+    with open(path) as fh:
+        payload = json.load(fh)
+    return params_from_jsonable(payload["params"], dtype), payload.get("meta", {})

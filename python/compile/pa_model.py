@@ -1,0 +1,177 @@
+"""Differentiable power-amplifier behavioral model (the training plant).
+
+The paper drives a GaN Doherty PA at 40 dBm average output. We have no
+lab bench, so the plant is a **Rapp-static + memory** behavioral model,
+the standard surrogate for solid-state GaN stages:
+
+* static AM/AM: modified Rapp saturation
+      G(A) = g1 / (1 + (A^2/asat^2)^p)^(1/(2p))        (monotone)
+* static AM/PM: phase rotation phi(A) = apm*A^2 / (1 + bpm*A^2)
+* memory: complex FIR taps on the static output plus one cubic
+  (|s|^2 s) memory tap — the short-term electro-thermal memory that
+  produces spectral-regrowth asymmetry.
+
+Monotonicity of A*G(A) guarantees the PA is invertible at the nominal
+drive, which a physical Doherty below hard saturation is; an earlier
+pure-polynomial candidate was rejected exactly because its 7th-order
+term made the AM/AM non-monotone at the signal peaks (see DESIGN.md).
+
+Calibration at the nominal OFDM drive (rms 0.25, ~9.5 dB PAPR):
+~1.9 dB compression at the signal peak, ~7 deg AM/PM swing, uncorrected
+ACPR ~= -32 dBc — the regime the paper's measurements start from. An
+ideal high-order GMP pre-inverse reaches ~= -48 dBc ACPR / -43 dB EVM
+through this plant with outputs clipped to the Q2.10 range, bounding
+what any 502-parameter DPD can achieve (paper: -45.3 / -39.8).
+
+The same parameters are serialized to ``artifacts/pa_model.json`` and
+loaded by ``rust/src/pa``, so the python training plant and the rust
+evaluation plant are the *same* amplifier. Arithmetic is plain real
+I/Q; the rust port is line-for-line.
+
+DPD training targets the backed-off gain ``g_target = g1 *
+target_backoff`` (default 0.95): the predistorter needs a little
+headroom below the saturated output ceiling to reach its linear target
+at the signal peaks.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PASpec", "ganlike_spec", "apply_pa", "apply_pa_np", "linear_gain", "target_gain", "save_spec", "load_spec"]
+
+
+@dataclass(frozen=True)
+class PASpec:
+    """Rapp-static + memory PA model parameters."""
+
+    g1: Tuple[float, float] = (0.995, 0.087)  # complex small-signal gain
+    asat: float = 0.82                         # saturation envelope
+    p: float = 1.1                             # Rapp knee smoothness
+    apm: float = 0.9                           # AM/PM numerator coeff
+    bpm: float = 1.6                           # AM/PM denominator coeff
+    # complex linear memory taps at delays 1..len
+    mem_linear: Tuple[Tuple[float, float], ...] = (
+        (0.08, -0.045),
+        (-0.032, 0.018),
+        (0.011, -0.006),
+    )
+    # complex cubic-memory taps (|s|^2 s) at delays 1..len
+    mem_cubic: Tuple[Tuple[float, float], ...] = ((-0.055, 0.035),)
+    target_backoff: float = 0.95
+    label: str = "ganlike-doherty-rapp-mem"
+
+
+def ganlike_spec() -> PASpec:
+    """The calibrated GaN-Doherty-like default (see module docstring)."""
+    return PASpec()
+
+
+def linear_gain(spec: PASpec) -> complex:
+    """Small-signal complex gain g1."""
+    return complex(spec.g1[0], spec.g1[1])
+
+
+def target_gain(spec: PASpec) -> complex:
+    """The gain a DPD should linearize to (g1 with peak headroom)."""
+    return linear_gain(spec) * spec.target_backoff
+
+
+def _delayed(x: jnp.ndarray, m: int) -> jnp.ndarray:
+    """x(n-m) along the time axis (axis=-2 of an (..., T, 2) array)."""
+    if m == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[-2] = (m, 0)
+    return jnp.pad(x, pad)[..., : x.shape[-2], :]
+
+
+def _static(x: jnp.ndarray, spec: PASpec) -> jnp.ndarray:
+    """Static Rapp AM/AM + AM/PM stage in real I/Q arithmetic."""
+    xr, xi = x[..., 0], x[..., 1]
+    a2 = xr * xr + xi * xi
+    g = (1.0 + (a2 / (spec.asat * spec.asat)) ** spec.p) ** (-1.0 / (2.0 * spec.p))
+    phi = spec.apm * a2 / (1.0 + spec.bpm * a2)
+    c, s = jnp.cos(phi), jnp.sin(phi)
+    gr, gi = spec.g1
+    # x * G * e^{j phi} * g1
+    yr = g * (xr * c - xi * s)
+    yi = g * (xr * s + xi * c)
+    zr = gr * yr - gi * yi
+    zi = gr * yi + gi * yr
+    return jnp.stack([zr, zi], axis=-1)
+
+
+def apply_pa(x: jnp.ndarray, spec: PASpec) -> jnp.ndarray:
+    """Run I/Q through the PA model. ``x``: (..., T, 2) -> same shape.
+
+    Differentiable; used as the plant for direct-learning DPD training.
+    """
+    s = _static(x, spec)
+    y = s
+    for m, (br, bi) in enumerate(spec.mem_linear, start=1):
+        d = _delayed(s, m)
+        dr, di = d[..., 0], d[..., 1]
+        y = y + jnp.stack([br * dr - bi * di, br * di + bi * dr], axis=-1)
+    for m, (cr, ci) in enumerate(spec.mem_cubic, start=1):
+        d = _delayed(s, m)
+        dr, di = d[..., 0], d[..., 1]
+        e2 = dr * dr + di * di
+        y = y + jnp.stack([(cr * dr - ci * di) * e2, (cr * di + ci * dr) * e2], axis=-1)
+    return y
+
+
+def apply_pa_np(x: np.ndarray, spec: PASpec) -> np.ndarray:
+    """Numpy twin of ``apply_pa`` (dataset prep, calibration tests)."""
+    xc = x[..., 0] + 1j * x[..., 1]
+    a2 = np.abs(xc) ** 2
+    g = (1.0 + (a2 / spec.asat ** 2) ** spec.p) ** (-1.0 / (2.0 * spec.p))
+    phi = spec.apm * a2 / (1.0 + spec.bpm * a2)
+    s = xc * g * np.exp(1j * phi) * complex(*spec.g1)
+    y = s.copy()
+    for m, (br, bi) in enumerate(spec.mem_linear, start=1):
+        d = np.roll(s, m, axis=-1)
+        d[..., :m] = 0
+        y = y + (br + 1j * bi) * d
+    for m, (cr, ci) in enumerate(spec.mem_cubic, start=1):
+        d = np.roll(s, m, axis=-1)
+        d[..., :m] = 0
+        y = y + (cr + 1j * ci) * d * np.abs(d) ** 2
+    return np.stack([y.real, y.imag], axis=-1)
+
+
+def save_spec(path: str, spec: PASpec) -> None:
+    payload = {
+        "label": spec.label,
+        "g1": list(spec.g1),
+        "asat": spec.asat,
+        "p": spec.p,
+        "apm": spec.apm,
+        "bpm": spec.bpm,
+        "mem_linear": [list(t) for t in spec.mem_linear],
+        "mem_cubic": [list(t) for t in spec.mem_cubic],
+        "target_backoff": spec.target_backoff,
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+
+
+def load_spec(path: str) -> PASpec:
+    with open(path) as fh:
+        p = json.load(fh)
+    return PASpec(
+        g1=tuple(p["g1"]),
+        asat=float(p["asat"]),
+        p=float(p["p"]),
+        apm=float(p["apm"]),
+        bpm=float(p["bpm"]),
+        mem_linear=tuple(tuple(t) for t in p["mem_linear"]),
+        mem_cubic=tuple(tuple(t) for t in p["mem_cubic"]),
+        target_backoff=float(p["target_backoff"]),
+        label=p.get("label", "custom"),
+    )

@@ -1,0 +1,129 @@
+"""Hardsigmoid/Hardtanh (Eq. 7-8) and LUT activation properties."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.activations import (
+    LutSpec,
+    hardsigmoid,
+    hardsigmoid_int,
+    hardtanh,
+    hardtanh_int,
+    lut_activation_int,
+    make_sigmoid_table,
+    make_tanh_table,
+)
+from compile.kernels.quant import QSpec
+
+FLOATS = st.floats(min_value=-8.0, max_value=8.0, allow_nan=False, width=32)
+BITS = st.integers(min_value=6, max_value=16)
+
+
+class TestHardFloat:
+    def test_eq7_cases(self):
+        # the three branches of Eq. (7)
+        assert float(hardsigmoid(jnp.float32(3.0))) == 1.0
+        assert float(hardsigmoid(jnp.float32(-3.0))) == 0.0
+        assert float(hardsigmoid(jnp.float32(0.0))) == 0.5
+        assert float(hardsigmoid(jnp.float32(1.0))) == 0.75
+
+    def test_eq8_cases(self):
+        assert float(hardtanh(jnp.float32(2.0))) == 1.0
+        assert float(hardtanh(jnp.float32(-2.0))) == -1.0
+        assert float(hardtanh(jnp.float32(0.5))) == 0.5
+
+    @given(FLOATS)
+    @settings(max_examples=100, deadline=None)
+    def test_bounds(self, x):
+        assert 0.0 <= float(hardsigmoid(jnp.float32(x))) <= 1.0
+        assert -1.0 <= float(hardtanh(jnp.float32(x))) <= 1.0
+
+    @given(FLOATS, FLOATS)
+    @settings(max_examples=100, deadline=None)
+    def test_monotone(self, a, b):
+        lo, hi = sorted((a, b))
+        assert float(hardsigmoid(jnp.float32(lo))) <= float(hardsigmoid(jnp.float32(hi)))
+        assert float(hardtanh(jnp.float32(lo))) <= float(hardtanh(jnp.float32(hi)))
+
+    @given(FLOATS)
+    @settings(max_examples=100, deadline=None)
+    def test_approximates_smooth(self, x):
+        """PWL stays within the known worst-case gap of the smooth fn."""
+        hs = float(hardsigmoid(jnp.float32(x)))
+        sg = 1.0 / (1.0 + np.exp(-x))
+        assert abs(hs - sg) < 0.12  # max gap of hardsigmoid vs sigmoid
+        ht = float(hardtanh(jnp.float32(x)))
+        assert abs(ht - np.tanh(x)) < 0.25
+
+
+class TestHardInt:
+    @given(BITS, st.integers(min_value=-(2 ** 15), max_value=2 ** 15))
+    @settings(max_examples=150, deadline=None)
+    def test_int_matches_float_within_lsb(self, bits, code):
+        spec = QSpec(bits)
+        code = max(spec.qmin, min(spec.qmax, code))
+        x = code / spec.scale
+        got = int(hardsigmoid_int(jnp.int32(code), spec)) / spec.scale
+        want = float(hardsigmoid(jnp.float32(x)))
+        # floor shift vs exact /4: at most 1 LSB apart
+        assert abs(got - want) <= spec.lsb + 1e-9
+
+        got_t = int(hardtanh_int(jnp.int32(code), spec)) / spec.scale
+        want_t = float(hardtanh(jnp.float32(x)))
+        assert abs(got_t - want_t) <= spec.lsb + 1e-9
+
+    def test_int_output_codes_bounded(self):
+        spec = QSpec(12)
+        codes = jnp.arange(spec.qmin, spec.qmax + 1, dtype=jnp.int32)
+        hs = np.asarray(hardsigmoid_int(codes, spec))
+        ht = np.asarray(hardtanh_int(codes, spec))
+        one = 1 << spec.frac
+        assert hs.min() >= 0 and hs.max() <= one
+        assert ht.min() >= -one and ht.max() <= one
+
+
+class TestLut:
+    def test_table_sizes(self):
+        lut = LutSpec()
+        spec = QSpec(12)
+        assert make_sigmoid_table(lut, spec).shape == (1024,)
+        assert make_tanh_table(lut, spec).shape == (1024,)
+
+    def test_tables_monotone(self):
+        lut = LutSpec()
+        spec = QSpec(12)
+        assert np.all(np.diff(make_sigmoid_table(lut, spec)) >= 0)
+        assert np.all(np.diff(make_tanh_table(lut, spec)) >= 0)
+
+    def test_table_asymptotes(self):
+        lut = LutSpec()
+        spec = QSpec(12)
+        sig = make_sigmoid_table(lut, spec)
+        one = 1 << spec.frac
+        assert sig[0] <= 0.03 * one
+        assert sig[-1] >= 0.97 * one
+        tanh = make_tanh_table(lut, spec)
+        assert tanh[0] <= -0.97 * one
+        assert tanh[-1] >= 0.97 * one
+
+    @given(BITS, st.integers(min_value=-(2 ** 15), max_value=2 ** 15))
+    @settings(max_examples=150, deadline=None)
+    def test_lut_close_to_true_function(self, bits, code):
+        spec = QSpec(bits)
+        code = max(spec.qmin, min(spec.qmax, code))
+        lut = LutSpec()
+        table = jnp.asarray(make_sigmoid_table(lut, spec))
+        got = int(lut_activation_int(jnp.int32(code), table, lut, spec)) / spec.scale
+        want = 1.0 / (1.0 + np.exp(-code / spec.scale))
+        # quantization + table-step error: half a table step of slope(max 1/4) + lsb
+        step = (lut.hi - lut.lo) / lut.n
+        assert abs(got - want) <= 0.25 * step + 2 * spec.lsb
+
+    def test_index_int_in_bounds_everywhere(self):
+        spec = QSpec(12)
+        lut = LutSpec()
+        codes = jnp.arange(spec.qmin, spec.qmax + 1, dtype=jnp.int32)
+        idx = np.asarray(lut.index_int(codes, spec))
+        assert idx.min() >= 0 and idx.max() < lut.n

@@ -1,0 +1,96 @@
+"""OFDM generator: statistics, spectrum containment, determinism."""
+
+import numpy as np
+import pytest
+
+from compile import dataset
+
+
+class TestConstellation:
+    def test_unit_power(self):
+        for order in (4, 16, 64, 256):
+            c = dataset.qam_constellation(order)
+            assert len(c) == order
+            assert abs((np.abs(c) ** 2).mean() - 1.0) < 1e-12
+
+    def test_rejects_non_square(self):
+        with pytest.raises(AssertionError):
+            dataset.qam_constellation(32)
+
+
+class TestUsedBins:
+    def test_dc_unused_and_symmetric(self):
+        cfg = dataset.OfdmConfig()
+        bins = dataset.used_bins(cfg)
+        assert 0 not in bins
+        assert len(bins) == cfg.n_used
+        assert len(set(bins.tolist())) == cfg.n_used
+        # symmetric: for each +k there is nfft-k
+        pos = bins[bins <= cfg.nfft // 2]
+        neg = cfg.nfft - bins[bins > cfg.nfft // 2]
+        np.testing.assert_array_equal(np.sort(pos), np.sort(neg))
+
+
+class TestGenerate:
+    def test_shape_and_rms(self):
+        cfg = dataset.OfdmConfig(n_symbols=8)
+        x = dataset.generate_ofdm(cfg)
+        assert x.shape == (8 * (cfg.nfft + cfg.cp), 2)
+        rms = np.sqrt((x ** 2).sum(-1).mean())
+        assert abs(rms - cfg.rms) < 1e-9
+
+    def test_papr_realistic(self):
+        x = dataset.generate_ofdm(dataset.OfdmConfig(n_symbols=32, seed=1))
+        papr = dataset.papr_db(x)
+        assert 7.0 < papr < 13.0, f"PAPR {papr:.1f} dB"
+
+    def test_deterministic(self):
+        a = dataset.generate_ofdm(dataset.OfdmConfig(n_symbols=4, seed=5))
+        b = dataset.generate_ofdm(dataset.OfdmConfig(n_symbols=4, seed=5))
+        np.testing.assert_array_equal(a, b)
+        c = dataset.generate_ofdm(dataset.OfdmConfig(n_symbols=4, seed=6))
+        assert not np.array_equal(a, c)
+
+    def test_spectrum_contained(self):
+        """TX filtering keeps adjacent-channel leakage below -60 dBc."""
+        x = dataset.generate_ofdm(dataset.OfdmConfig(n_symbols=32, seed=2))
+        c = x[..., 0] + 1j * x[..., 1]
+        n = 4096
+        w = np.hanning(n)
+        psd = np.zeros(n)
+        for i in range(len(c) // n):
+            psd += np.abs(np.fft.fft(c[i * n : (i + 1) * n] * w)) ** 2
+        psd = np.fft.fftshift(psd)
+        f = np.fft.fftshift(np.fft.fftfreq(n))
+        pin = psd[np.abs(f) < 0.13].sum()
+        adj = psd[(np.abs(f) > 0.15) & (np.abs(f) < 0.4)].sum()
+        assert 10 * np.log10(adj / pin) < -60.0
+
+    def test_occupied_band_flat(self):
+        """Power concentrated in |f| < 0.125 (the 4x-oversampled band)."""
+        x = dataset.generate_ofdm(dataset.OfdmConfig(n_symbols=32, seed=4))
+        c = x[..., 0] + 1j * x[..., 1]
+        spec = np.abs(np.fft.fft(c)) ** 2
+        f = np.fft.fftfreq(len(c))
+        inband = spec[np.abs(f) < 0.13].sum()
+        assert inband / spec.sum() > 0.999
+
+    def test_unwindowed_unfiltered_still_works(self):
+        x = dataset.generate_ofdm(dataset.OfdmConfig(n_symbols=4, window=0, fir_taps=0))
+        assert np.isfinite(x).all()
+        assert abs(np.sqrt((x ** 2).sum(-1).mean()) - 0.25) < 1e-9
+
+
+class TestFrames:
+    def test_disjoint_frames_cover(self):
+        x = dataset.generate_ofdm(dataset.OfdmConfig(n_symbols=4))
+        fr = dataset.frames_from_signal(x, 50)
+        assert fr.shape[1:] == (50, 2)
+        np.testing.assert_array_equal(fr[0], x[:50])
+        np.testing.assert_array_equal(fr[1], x[50:100])
+
+    def test_strided_frames(self):
+        x = np.arange(40, dtype=float).reshape(20, 2)
+        fr = dataset.frames_from_signal(x, 8, stride=4)
+        assert fr.shape == (4, 8, 2)
+        np.testing.assert_array_equal(fr[1], x[4:12])

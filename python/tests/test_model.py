@@ -1,0 +1,104 @@
+"""Model config, initialization, serialization and equation checks."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.activations import hardsigmoid, hardtanh
+from compile.kernels.quant import QSpec
+
+
+class TestConfig:
+    def test_paper_parameter_count(self):
+        assert model.ModelConfig(hidden=10).n_params == 502
+
+    def test_param_count_formula(self):
+        for h in (4, 8, 10, 16, 32):
+            cfg = model.ModelConfig(hidden=h)
+            total = sum(int(np.prod(s)) for s in cfg.shapes().values())
+            assert cfg.n_params == total
+
+
+class TestInit:
+    def test_shapes(self):
+        cfg = model.ModelConfig(hidden=10)
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        assert params["w_ih"].shape == (30, 4)
+        assert params["w_hh"].shape == (30, 10)
+        assert params["w_fc"].shape == (2, 10)
+        assert params["b_ih"].shape == (30,)
+
+    def test_bound(self):
+        cfg = model.ModelConfig(hidden=10)
+        params = model.init_params(cfg, jax.random.PRNGKey(1))
+        bound = 1.0 / np.sqrt(10)
+        for v in params.values():
+            assert np.abs(np.asarray(v)).max() <= bound
+
+    def test_deterministic(self):
+        cfg = model.ModelConfig()
+        a = model.init_params(cfg, jax.random.PRNGKey(2))
+        b = model.init_params(cfg, jax.random.PRNGKey(2))
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+class TestEquations:
+    """float_step must literally implement Eq. (2)-(6) + residual."""
+
+    def test_step_matches_manual_transcription(self):
+        cfg = model.ModelConfig(hidden=10)
+        params = model.init_params(cfg, jax.random.PRNGKey(3))
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(0, 0.3, (4,)), jnp.float32)
+        h = jnp.asarray(rng.normal(0, 0.3, (10,)), jnp.float32)
+
+        w_ih, b_ih = params["w_ih"], params["b_ih"]
+        w_hh, b_hh = params["w_hh"], params["b_hh"]
+        w_ir, w_iz, w_in = w_ih[:10], w_ih[10:20], w_ih[20:]
+        w_hr, w_hz, w_hn = w_hh[:10], w_hh[10:20], w_hh[20:]
+        b_ir, b_iz, b_in = b_ih[:10], b_ih[10:20], b_ih[20:]
+        b_hr, b_hz, b_hn = b_hh[:10], b_hh[10:20], b_hh[20:]
+
+        r = hardsigmoid(w_ir @ x + b_ir + w_hr @ h + b_hr)       # Eq. 2
+        z = hardsigmoid(w_iz @ x + b_iz + w_hz @ h + b_hz)       # Eq. 3
+        n = hardtanh(w_in @ x + b_in + r * (w_hn @ h + b_hn))    # Eq. 4
+        h_want = (1 - z) * n + z * h                              # Eq. 5
+        y_want = params["w_fc"] @ h_want + params["b_fc"] + x[0:2]  # Eq. 6 + residual
+
+        h_got, y_got = ref.float_step(params, h, x)
+        np.testing.assert_allclose(np.asarray(h_got), np.asarray(h_want), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want), atol=1e-6)
+
+    def test_feature_definition(self):
+        iq = jnp.asarray([[0.3, -0.4]], jnp.float32)
+        f = np.asarray(ref.features_float(iq, None))[0]
+        p = 4 * (0.3 ** 2 + 0.4 ** 2)
+        np.testing.assert_allclose(f, [0.3, -0.4, p, p * p], rtol=1e-6)
+
+
+class TestSerialization:
+    def test_roundtrip(self, tmp_path):
+        cfg = model.ModelConfig()
+        params = model.init_params(cfg, jax.random.PRNGKey(4))
+        path = tmp_path / "w.json"
+        model.save_params(str(path), params, meta={"bits": 12})
+        loaded, meta = model.load_params(str(path))
+        assert meta["bits"] == 12
+        for k in params:
+            np.testing.assert_allclose(
+                np.asarray(loaded[k]), np.asarray(params[k]), atol=1e-7
+            )
+
+    def test_quantize_params_range(self):
+        cfg = model.ModelConfig()
+        params = model.init_params(cfg, jax.random.PRNGKey(5))
+        spec = QSpec(12)
+        ip = ref.quantize_params(params, spec)
+        for v in ip.values():
+            arr = np.asarray(v)
+            assert arr.dtype == np.int32
+            assert arr.min() >= spec.qmin and arr.max() <= spec.qmax

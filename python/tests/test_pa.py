@@ -1,0 +1,135 @@
+"""PA behavioral model: jax/numpy parity, physics sanity, persistence."""
+
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import dataset, pa_model
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return pa_model.ganlike_spec()
+
+
+class TestParity:
+    def test_jax_matches_numpy(self, spec):
+        rng = np.random.default_rng(0)
+        x = rng.normal(0, 0.25, (3, 200, 2))
+        a = np.asarray(pa_model.apply_pa(jnp.asarray(x), spec))
+        b = pa_model.apply_pa_np(x, spec)
+        np.testing.assert_allclose(a, b, atol=1e-10)
+
+    @given(st.integers(min_value=0, max_value=10 ** 6))
+    @settings(max_examples=20, deadline=None)
+    def test_parity_sweep(self, spec, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(0, 0.3, (100, 2))
+        a = np.asarray(pa_model.apply_pa(jnp.asarray(x), spec))
+        b = pa_model.apply_pa_np(x, spec)
+        np.testing.assert_allclose(a, b, atol=1e-10)
+
+
+class TestPhysics:
+    def test_small_signal_gain(self, spec):
+        """At tiny drive the PA is linear with gain ~= g1*(1+sum mem taps)."""
+        x = np.zeros((200, 2))
+        x[:, 0] = 1e-4  # constant tiny I
+        y = pa_model.apply_pa_np(x, spec)
+        g1 = pa_model.linear_gain(spec)
+        mem = sum(complex(*t) for t in spec.mem_linear)
+        g_eff = g1 * (1 + mem)
+        yc = y[100, 0] + 1j * y[100, 1]
+        assert abs(yc / 1e-4 - g_eff) < 1e-3
+
+    def test_compression_at_peak(self, spec):
+        """Static gain at envelope 0.95 is 1-3 dB below small-signal."""
+        def static_gain(a):
+            x = np.zeros((50, 2))
+            x[:, 0] = a
+            y = pa_model.apply_pa_np(x, spec)
+            return np.hypot(y[40, 0], y[40, 1]) / a
+
+        g_small = static_gain(1e-3)
+        g_peak = static_gain(0.95)
+        comp_db = 20 * np.log10(g_small / g_peak)
+        assert 1.5 < comp_db < 4.5, f"compression {comp_db:.2f} dB"
+
+    def test_monotone_amam(self, spec):
+        """Envelope transfer A*G(A) is monotone (the PA is invertible)."""
+        amps = np.linspace(0.01, 1.6, 160)
+        outs = []
+        for a in amps:
+            x = np.zeros((20, 2))
+            x[:, 0] = a
+            y = pa_model.apply_pa_np(x, spec)
+            outs.append(np.hypot(y[15, 0], y[15, 1]))
+        assert np.all(np.diff(outs) > 0)
+
+    def test_ampm_rotation(self, spec):
+        """Phase advances with drive (AM/PM) by a few degrees."""
+        def phase_at(a):
+            x = np.zeros((50, 2))
+            x[:, 0] = a
+            y = pa_model.apply_pa_np(x, spec)
+            return np.arctan2(y[40, 1], y[40, 0])
+
+        dphi = np.degrees(phase_at(0.9) - phase_at(1e-3))
+        assert 2.0 < abs(dphi) < 30.0, f"AM/PM {dphi:.1f} deg"
+
+    def test_memory_effect_present(self, spec):
+        """The PA output depends on past inputs (taps do something)."""
+        rng = np.random.default_rng(1)
+        x = rng.normal(0, 0.25, (64, 2))
+        y = pa_model.apply_pa_np(x, spec)
+        memless = pa_model.PASpec(
+            g1=spec.g1, asat=spec.asat, p=spec.p, apm=spec.apm, bpm=spec.bpm,
+            mem_linear=(), mem_cubic=(),
+        )
+        y0 = pa_model.apply_pa_np(x, memless)
+        assert np.max(np.abs(y - y0)) > 1e-3
+
+    def test_uncorrected_acpr_regime(self, spec):
+        """The calibrated operating point: -35 < ACPR < -28 dBc."""
+        x = dataset.generate_ofdm(dataset.OfdmConfig(n_symbols=24, seed=3))
+        y = pa_model.apply_pa_np(x, spec)
+        c = y[..., 0] + 1j * y[..., 1]
+        n = 4096
+        w = np.hanning(n)
+        psd = np.zeros(n)
+        for i in range(len(c) // n):
+            psd += np.abs(np.fft.fft(c[i * n : (i + 1) * n] * w)) ** 2
+        psd = np.fft.fftshift(psd)
+        f = np.fft.fftshift(np.fft.fftfreq(n))
+        pin = psd[np.abs(f) < 0.125].sum()
+        adj = max(
+            psd[(f >= -0.4) & (f < -0.15)].sum(),
+            psd[(f > 0.15) & (f <= 0.4)].sum(),
+        )
+        acpr = 10 * np.log10(adj / pin)
+        assert -35.0 < acpr < -28.0, f"uncorrected ACPR {acpr:.1f}"
+
+
+class TestPersistence:
+    def test_save_load_roundtrip(self, spec, tmp_path):
+        path = tmp_path / "pa.json"
+        pa_model.save_spec(str(path), spec)
+        loaded = pa_model.load_spec(str(path))
+        assert loaded == spec
+
+    def test_target_gain_backoff(self, spec):
+        g = pa_model.target_gain(spec)
+        g1 = pa_model.linear_gain(spec)
+        assert abs(g) < abs(g1)
+        assert abs(g / g1 - spec.target_backoff) < 1e-12
+
+    def test_json_schema(self, spec, tmp_path):
+        path = tmp_path / "pa.json"
+        pa_model.save_spec(str(path), spec)
+        with open(path) as fh:
+            payload = json.load(fh)
+        for key in ("g1", "asat", "p", "apm", "bpm", "mem_linear", "mem_cubic", "target_backoff"):
+            assert key in payload

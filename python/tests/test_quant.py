@@ -1,0 +1,116 @@
+"""Properties of the Q2.f quantization primitives (hypothesis-swept)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.quant import (
+    QSpec,
+    dequantize,
+    fake_quant,
+    quantize_to_int,
+    requantize,
+    rshift_round,
+    saturate,
+)
+
+BITS = st.integers(min_value=4, max_value=16)
+FLOATS = st.floats(min_value=-8.0, max_value=8.0, allow_nan=False, width=32)
+
+
+class TestQSpec:
+    def test_paper_format(self):
+        s = QSpec(12)
+        assert s.frac == 10
+        assert s.scale == 1024.0
+        assert s.qmin == -2048 and s.qmax == 2047
+        assert s.lo == -2.0
+        assert s.hi == pytest.approx(2.0 - 2 ** -10)
+        assert s.lsb == pytest.approx(2 ** -10)
+
+    @given(BITS)
+    def test_range_symmetry(self, bits):
+        s = QSpec(bits)
+        assert s.qmin == -s.qmax - 1
+        assert s.lo == -2.0  # Q2.f always spans [-2, 2)
+
+
+class TestFakeQuant:
+    @given(BITS, FLOATS)
+    @settings(max_examples=100, deadline=None)
+    def test_idempotent(self, bits, x):
+        s = QSpec(bits)
+        q1 = np.asarray(fake_quant(jnp.float32(x), s))
+        q2 = np.asarray(fake_quant(jnp.asarray(q1), s))
+        assert q1 == q2
+
+    @given(BITS, FLOATS)
+    @settings(max_examples=100, deadline=None)
+    def test_error_bound_in_range(self, bits, x):
+        s = QSpec(bits)
+        if s.lo <= x <= s.hi:
+            q = float(fake_quant(jnp.float32(x), s))
+            assert abs(q - x) <= s.lsb / 2 + 1e-6
+
+    @given(BITS, FLOATS, FLOATS)
+    @settings(max_examples=100, deadline=None)
+    def test_monotone(self, bits, a, b):
+        s = QSpec(bits)
+        lo, hi = sorted((a, b))
+        qlo = float(fake_quant(jnp.float32(lo), s))
+        qhi = float(fake_quant(jnp.float32(hi), s))
+        assert qlo <= qhi
+
+    @given(BITS)
+    @settings(max_examples=30, deadline=None)
+    def test_saturates(self, bits):
+        s = QSpec(bits)
+        assert float(fake_quant(jnp.float32(100.0), s)) == s.hi
+        assert float(fake_quant(jnp.float32(-100.0), s)) == s.lo
+
+    def test_on_grid_values_fixed(self):
+        s = QSpec(12)
+        # codes round-trip exactly through fake_quant
+        codes = np.arange(s.qmin, s.qmax + 1, 37, dtype=np.int64)
+        vals = codes / s.scale
+        out = np.asarray(fake_quant(jnp.asarray(vals, jnp.float32), s))
+        np.testing.assert_allclose(out, vals, atol=1e-7)
+
+
+class TestIntHelpers:
+    @given(st.integers(min_value=-(2 ** 40), max_value=2 ** 40), st.integers(min_value=1, max_value=20))
+    @settings(max_examples=200, deadline=None)
+    def test_rshift_round_matches_float(self, v, s):
+        got = int(rshift_round(jnp.int64(v), s))
+        want = int(np.floor(v / 2 ** s + 0.5))
+        assert got == want
+
+    def test_rshift_round_zero_shift(self):
+        assert int(rshift_round(jnp.int64(-7), 0)) == -7
+
+    @given(BITS, st.integers(min_value=-(2 ** 20), max_value=2 ** 20))
+    @settings(max_examples=100, deadline=None)
+    def test_saturate_bounds(self, bits, v):
+        s = QSpec(bits)
+        out = int(saturate(jnp.int64(v), s))
+        assert s.qmin <= out <= s.qmax
+        if s.qmin <= v <= s.qmax:
+            assert out == v
+
+    @given(BITS, FLOATS)
+    @settings(max_examples=100, deadline=None)
+    def test_int_float_agree(self, bits, x):
+        """quantize_to_int and fake_quant define the same grid point."""
+        s = QSpec(bits)
+        qi = dequantize(quantize_to_int(jnp.float32(x), s), s)
+        qf = fake_quant(jnp.float32(x), s)
+        assert abs(float(qi) - float(qf)) <= 1e-6
+
+    @given(BITS, st.integers(min_value=-(2 ** 30), max_value=2 ** 30))
+    @settings(max_examples=100, deadline=None)
+    def test_requantize_is_shift_then_sat(self, bits, acc):
+        s = QSpec(bits)
+        got = int(requantize(jnp.int64(acc), s.frac, s))
+        want = int(saturate(rshift_round(jnp.int64(acc), s.frac), s))
+        assert got == want

@@ -1,0 +1,77 @@
+"""Training loop: loss decreases, QAT works, determinism."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import dataset, model, pa_model, train
+from compile.kernels.quant import QSpec
+
+
+@pytest.fixture(scope="module")
+def setup():
+    pa = pa_model.ganlike_spec()
+    x = dataset.generate_ofdm(dataset.OfdmConfig(n_symbols=8, seed=0))
+    frames = dataset.frames_from_signal(x, 50)
+    params = model.init_params(model.ModelConfig(), jax.random.PRNGKey(0))
+    return pa, frames, params
+
+
+class TestLoss:
+    def test_loss_positive_finite(self, setup):
+        pa, frames, params = setup
+        l = float(train.dpd_loss(params, jnp.asarray(frames, jnp.float32), pa, None, "hard"))
+        assert np.isfinite(l) and l > 0
+
+    def test_loss_differentiable(self, setup):
+        pa, frames, params = setup
+        g = jax.grad(lambda p: train.dpd_loss(p, jnp.asarray(frames[:8], jnp.float32), pa, None, "hard"))(params)
+        for k, v in g.items():
+            assert np.isfinite(np.asarray(v)).all(), k
+            assert np.abs(np.asarray(v)).max() > 0, f"zero grad for {k}"
+
+    def test_qat_loss_differentiable(self, setup):
+        """STE keeps gradients alive through fake-quant."""
+        pa, frames, params = setup
+        spec = QSpec(12)
+        g = jax.grad(lambda p: train.dpd_loss(p, jnp.asarray(frames[:8], jnp.float32), pa, spec, "hard"))(params)
+        nonzero = sum(float(np.abs(np.asarray(v)).max()) > 0 for v in g.values())
+        assert nonzero >= 5  # nearly all tensors receive gradient
+
+
+class TestTrain:
+    def test_loss_decreases(self, setup):
+        pa, frames, params = setup
+        _, hist = train.train(dict(params), frames, pa, train.TrainConfig(steps=60, batch=16))
+        first = np.mean(hist["loss"][:10])
+        last = np.mean(hist["loss"][-10:])
+        assert last < first * 0.8, f"{first} -> {last}"
+
+    def test_deterministic(self, setup):
+        pa, frames, params = setup
+        cfg = train.TrainConfig(steps=15, batch=8, seed=3)
+        p1, h1 = train.train(dict(params), frames, pa, cfg)
+        p2, h2 = train.train(dict(params), frames, pa, cfg)
+        assert h1["loss"] == h2["loss"]
+        for k in p1:
+            np.testing.assert_array_equal(np.asarray(p1[k]), np.asarray(p2[k]))
+
+    def test_qat_trains(self, setup):
+        pa, frames, params = setup
+        spec = QSpec(10)
+        _, hist = train.train(
+            dict(params), frames, pa, train.TrainConfig(steps=40, batch=16), spec=spec, act="lut"
+        )
+        assert hist["loss"][-1] < hist["loss"][0]
+
+
+class TestNmse:
+    def test_nmse_zero_error(self):
+        t = np.random.default_rng(0).normal(size=(100, 2))
+        assert train.nmse_db(t, t) == -np.inf or train.nmse_db(t, t) < -200
+
+    def test_nmse_known_value(self):
+        t = np.ones((10, 2))
+        y = np.ones((10, 2)) * 1.1
+        assert abs(train.nmse_db(y, t) - 10 * np.log10(0.01)) < 1e-9

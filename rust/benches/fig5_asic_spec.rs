@@ -1,0 +1,94 @@
+//! Fig. 5 reproduction: post-layout-style specification of the
+//! DPD-NeuralEngine at the nominal point (2 GHz, 0.9 V), plus an
+//! operating-point sweep (frequency/voltage scaling) and power/area
+//! breakdowns from the activity-annotated cycle simulation.
+//!
+//! Run: `cargo bench --bench fig5_asic_spec`
+
+use dpd_ne::accel::AsicSpec;
+use dpd_ne::dpd::weights::QGruWeights;
+use dpd_ne::fixed::QSpec;
+use dpd_ne::report::{f1, f2, f3, Table};
+use dpd_ne::runtime::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    let Ok(m) = Manifest::discover(None) else {
+        eprintln!("fig5: skipped (run `make artifacts` first)");
+        return Ok(());
+    };
+    let w = QGruWeights::load_params_int(&m.weights_main, QSpec::new(m.qspec_bits)?)?;
+
+    let s = AsicSpec::nominal(&w, true);
+    let mut t = Table::new("Fig. 5: nominal specification", &["metric", "model", "paper"]);
+    t.row(&["technology".into(), "22FDX model".into(), "GF 22FDX".into()]);
+    t.row(&["f_clk (GHz)".into(), f2(s.f_clk_ghz), "2.0".into()]);
+    t.row(&["supply (V)".into(), f2(s.v), "0.9".into()]);
+    t.row(&["f_s,I/Q (MSps)".into(), f1(s.fs_msps), "250".into()]);
+    t.row(&["latency (ns)".into(), f2(s.latency_ns), "7.5".into()]);
+    t.row(&["throughput (GOPS)".into(), f1(s.throughput_gops), "256.5".into()]);
+    t.row(&["power (mW)".into(), f1(s.power.total_mw()), "195".into()]);
+    t.row(&["area (mm²)".into(), f3(s.area.total_mm2()), "0.2".into()]);
+    t.row(&["GOPS/W".into(), f1(s.power_efficiency_gops_w()), "1315.4".into()]);
+    t.row(&["PAE (TOPS/W/mm²)".into(), f2(s.pae_tops_w_mm2()), "6.58".into()]);
+    println!("{}", t.render());
+
+    // tolerance checks
+    assert!((s.power.total_mw() - 195.0).abs() / 195.0 < 0.10);
+    assert!((s.area.total_mm2() - 0.2).abs() / 0.2 < 0.10);
+    assert!((s.pae_tops_w_mm2() - 6.58).abs() / 6.58 < 0.25);
+
+    let p = &s.power;
+    let mut tb = Table::new("power breakdown (activity-annotated)", &["block", "mW", "%"]);
+    let total = p.total_mw();
+    for (label, v) in [
+        ("MAC arrays", p.mac_mw),
+        ("gate ALUs", p.alu_mw),
+        ("activation units", p.act_mw),
+        ("weight buffer", p.wbuf_mw),
+        ("hidden buffer", p.hbuf_mw),
+        ("clock/regs/FSM", p.overhead_mw),
+        ("leakage", p.leak_mw),
+    ] {
+        tb.row(&[label.into(), f1(v), f1(100.0 * v / total)]);
+    }
+    println!("{}", tb.render());
+
+    let a = &s.area;
+    let mut ta = Table::new("area breakdown", &["block", "mm²", "%"]);
+    let atot = a.total_mm2();
+    for (label, v) in [
+        ("PE array (156)", a.pe_array_mm2),
+        ("preprocessor", a.preproc_mm2),
+        ("activation units", a.act_mm2),
+        ("weight buffer", a.wbuf_mm2),
+        ("hidden buffer", a.hbuf_mm2),
+        ("FSM/clock/IO", a.fixed_mm2),
+    ] {
+        ta.row(&[label.into(), f3(v), f1(100.0 * v / atot)]);
+    }
+    println!("{}", ta.render());
+
+    // operating-point sweep (DVFS shmoo)
+    let mut ts = Table::new(
+        "operating-point sweep (fs tracks f_clk/8)",
+        &["f_clk (GHz)", "V", "fs (MSps)", "GOPS", "mW", "GOPS/W", "PAE"],
+    );
+    for (f_clk, v) in [(0.5, 0.55), (1.0, 0.65), (1.5, 0.8), (2.0, 0.9), (2.4, 1.0)] {
+        let sp = AsicSpec::at_operating_point(&w, true, f_clk, v);
+        ts.row(&[
+            f2(f_clk),
+            f2(v),
+            f1(sp.fs_msps),
+            f1(sp.throughput_gops),
+            f1(sp.power.total_mw()),
+            f1(sp.power_efficiency_gops_w()),
+            f2(sp.pae_tops_w_mm2()),
+        ]);
+    }
+    println!("{}", ts.render());
+
+    dpd_ne::bench::bench("fig5: full spec computation", || {
+        std::hint::black_box(AsicSpec::nominal(&w, true));
+    });
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Microbenchmarks of the hot paths (the §Perf baseline/tracking
+//! numbers in EXPERIMENTS.md): FFT, Welch PSD, fixed-point GRU step,
+//! float GRU step, cycle-sim step, GMP basis, coordinator pipeline,
+//! and the HLO/PJRT frame path.
+//!
+//! Run: `cargo bench --bench micro`
+
+use std::time::Duration;
+
+use dpd_ne::bench::time_it;
+use dpd_ne::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use dpd_ne::dpd::gmp::{GmpConfig, GmpDpd};
+use dpd_ne::dpd::gru::GruDpd;
+use dpd_ne::dpd::qgru::{ActKind, QGruDpd};
+use dpd_ne::dpd::weights::{GruWeights, QGruWeights};
+use dpd_ne::dpd::Dpd;
+use dpd_ne::dsp::fft::Fft;
+use dpd_ne::dsp::welch::{welch_psd, WelchConfig};
+use dpd_ne::fixed::QSpec;
+use dpd_ne::pa::{PaSpec, RappMemPa};
+use dpd_ne::runtime::{HloGruEngine, Manifest};
+use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
+use dpd_ne::util::{C64, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let budget = Duration::from_millis(400);
+    println!("== microbenchmarks (hot paths) ==");
+
+    // FFT 4096
+    let mut rng = Rng::new(1);
+    let plan = Fft::new(4096)?;
+    let mut buf: Vec<C64> = (0..4096).map(|_| C64::new(rng.gauss(), rng.gauss())).collect();
+    let r = time_it("fft4096", budget, || {
+        plan.forward(&mut buf);
+    });
+    println!("{}  -> {:.1} MS/s", r.summary(), r.per_second(4096.0) / 1e6);
+
+    // Welch over 128k samples
+    let sig: Vec<[f64; 2]> = (0..1 << 17).map(|_| [rng.gauss(), rng.gauss()]).collect();
+    let r = time_it("welch psd 128k (nfft 4096)", budget, || {
+        std::hint::black_box(welch_psd(&sig, &WelchConfig::default()).unwrap());
+    });
+    println!("{}  -> {:.1} MS/s", r.summary(), r.per_second(sig.len() as f64) / 1e6);
+
+    // PA model
+    let pa = RappMemPa::new(PaSpec::ganlike());
+    let burst: Vec<[f64; 2]> = (0..65536).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect();
+    let r = time_it("pa rapp+mem 64k", budget, || {
+        std::hint::black_box(pa.run(&burst));
+    });
+    println!("{}  -> {:.1} MS/s", r.summary(), r.per_second(burst.len() as f64) / 1e6);
+
+    // engines (need artifacts)
+    if let Ok(m) = Manifest::discover(None) {
+        let spec = QSpec::new(m.qspec_bits)?;
+        let qw = QGruWeights::load_params_int(&m.weights_main, spec)?;
+        let fw = GruWeights::load(&m.weights_float)?;
+        let codes: Vec<[i32; 2]> = burst[..16384]
+            .iter()
+            .map(|&[i, q]| [spec.quantize(i), spec.quantize(q)])
+            .collect();
+
+        let mut qdpd = QGruDpd::new(qw.clone(), ActKind::Hard);
+        let r = time_it("qgru (bit-exact) 16k samples", budget, || {
+            std::hint::black_box(qdpd.run_codes(&codes));
+        });
+        println!("{}  -> {:.2} MSps", r.summary(), r.per_second(codes.len() as f64) / 1e6);
+
+        let mut fdpd = GruDpd::new(fw);
+        let r = time_it("gru f64 16k samples", budget, || {
+            std::hint::black_box(fdpd.run(&burst[..16384]));
+        });
+        println!("{}  -> {:.2} MSps", r.summary(), r.per_second(16384.0) / 1e6);
+
+        let mut sim = dpd_ne::accel::CycleAccurateEngine::new(
+            &qw,
+            dpd_ne::accel::act_unit::ActImpl::Hard,
+            dpd_ne::accel::fsm::HwConfig::default(),
+        );
+        let r = time_it("cycle-sim 16k samples", budget, || {
+            std::hint::black_box(sim.run_codes(&codes).unwrap());
+        });
+        println!("{}  -> {:.2} MSps", r.summary(), r.per_second(codes.len() as f64) / 1e6);
+
+        // coordinator pipeline end to end
+        let coord = Coordinator::new(CoordinatorConfig { engine: EngineKind::Fixed, ..Default::default() });
+        let r = time_it("pipeline fixed 64k samples", Duration::from_millis(800), || {
+            std::hint::black_box(coord.run_stream(&burst).unwrap());
+        });
+        println!("{}  -> {:.2} MSps", r.summary(), r.per_second(burst.len() as f64) / 1e6);
+
+        // HLO frame path
+        if let Some(e) = m.int_hlo_with_time(2048) {
+            let client = xla::PjRtClient::cpu()?;
+            let mut eng = HloGruEngine::load(&client, &m.hlo_path(e), 1, e.time, true, Some(spec))?;
+            let frame = &codes[..2048.min(codes.len())];
+            let frame: Vec<[i32; 2]> = frame.to_vec();
+            let r = time_it("hlo/pjrt frame 2048", Duration::from_millis(800), || {
+                std::hint::black_box(eng.run_frame_codes(&frame).unwrap());
+            });
+            println!("{}  -> {:.2} MSps", r.summary(), r.per_second(2048.0) / 1e6);
+        }
+
+        // GMP engine
+        let sig_t = OfdmModulator::generate(&OfdmConfig { n_symbols: 16, seed: 3, ..Default::default() })?;
+        let y = pa.run(&sig_t.iq);
+        let mut gmp = GmpDpd::fit_ila(&GmpConfig::default(), &sig_t.iq, &y, pa.spec.target_gain())?;
+        let r = time_it("gmp 16k samples", budget, || {
+            std::hint::black_box(gmp.run(&burst[..16384]));
+        });
+        println!("{}  -> {:.2} MSps", r.summary(), r.per_second(16384.0) / 1e6);
+    } else {
+        eprintln!("(engine benches skipped: no artifacts)");
+    }
+    Ok(())
+}

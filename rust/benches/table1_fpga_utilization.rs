@@ -1,0 +1,60 @@
+//! Table I reproduction: Zynq-7020 resource utilization of the FPGA
+//! emulation, LUT-activation baseline vs Hardsigmoid/Hardtanh.
+//!
+//! Run: `cargo bench --bench table1_fpga_utilization`
+
+use dpd_ne::accel::fpga::{FpgaAct, FpgaCostModel, ZYNQ_7020};
+use dpd_ne::report::Table;
+
+const PAPER: [(&str, usize, usize, usize, usize); 2] = [
+    ("LUT-Sig./Tanh", 20522, 3969, 85, 0),
+    ("Hard-Sig./Tanh", 5439, 3156, 95, 0),
+];
+
+fn main() {
+    let model = FpgaCostModel::default();
+    let mut t = Table::new(
+        "Table I: DPD-NeuralEngine FPGA emulation utilization (Zynq-7020)",
+        &["variant", "LUT (model)", "LUT (paper)", "FF (model)", "FF (paper)", "DSP (model)", "DSP (paper)", "BRAM"],
+    );
+    t.row_str(&[
+        "Available",
+        &ZYNQ_7020.lut.to_string(),
+        "53200",
+        &ZYNQ_7020.ff.to_string(),
+        "106400",
+        &ZYNQ_7020.dsp.to_string(),
+        "220",
+        "140",
+    ]);
+    let mut max_rel = 0.0f64;
+    for ((label, act), (plabel, plut, pff, pdsp, pbram)) in
+        [("LUT-Sig./Tanh", FpgaAct::LutTables), ("Hard-Sig./Tanh", FpgaAct::Hard)]
+            .into_iter()
+            .zip(PAPER)
+    {
+        assert_eq!(label, plabel);
+        let (u, _) = model.estimate(act);
+        t.row(&[
+            label.to_string(),
+            u.lut.to_string(),
+            plut.to_string(),
+            u.ff.to_string(),
+            pff.to_string(),
+            u.dsp.to_string(),
+            pdsp.to_string(),
+            format!("{} / {}", u.bram, pbram),
+        ]);
+        max_rel = max_rel.max((u.lut as f64 - plut as f64).abs() / plut as f64);
+        max_rel = max_rel.max((u.ff as f64 - pff as f64).abs() / pff as f64);
+    }
+    println!("{}", t.render());
+    println!("max LUT/FF deviation from paper: {:.1}%", 100.0 * max_rel);
+    assert!(max_rel < 0.12, "Table I reproduction drifted");
+
+    let r = dpd_ne::bench::bench("table1: estimator", || {
+        std::hint::black_box(model.estimate(FpgaAct::LutTables));
+        std::hint::black_box(model.estimate(FpgaAct::Hard));
+    });
+    let _ = r;
+}

@@ -1,0 +1,109 @@
+//! Table III reproduction: comparison with prior RNN/DNN ASICs on
+//! area/power/throughput efficiency. Our row comes from the models;
+//! literature rows use the paper's *published derived columns*
+//! (TOPS/W, GOPS/mm², PAE) verbatim — several prior chips report peak
+//! throughput and nominal power at different operating points (e.g.
+//! [29]: 3,604 GOPS but 6.83 TOPS/W), so re-deriving efficiency from
+//! GOPS/power would misrepresent them, exactly as the paper avoids.
+//!
+//! Shape to preserve: this work has the highest PAE (TOPS/W/mm²) of
+//! all rows — the paper's headline claim — with [29] (7 nm) second.
+//!
+//! Run: `cargo bench --bench table3_asic_comparison`
+
+use dpd_ne::accel::AsicSpec;
+use dpd_ne::dpd::weights::QGruWeights;
+use dpd_ne::fixed::QSpec;
+use dpd_ne::report::{f2, Table};
+use dpd_ne::runtime::Manifest;
+
+struct Asic {
+    name: &'static str,
+    tech_nm: u32,
+    fclk_mhz: f64,
+    bits: &'static str,
+    area_mm2: f64,
+    power_mw: f64,
+    gops: f64,
+    /// published derived columns (paper Table III)
+    tops_w: f64,
+    gops_mm2: f64,
+    pae: f64,
+}
+
+/// Paper Table III rows, columns as printed.
+const PRIOR: [Asic; 7] = [
+    Asic { name: "[23] JSSC'20", tech_nm: 65, fclk_mhz: 80.0, bits: "32", area_mm2: 7.7, power_mw: 67.0, gops: 165.0, tops_w: 2.45, gops_mm2: 21.3, pae: 0.32 },
+    Asic { name: "[24] DNPU", tech_nm: 65, fclk_mhz: 200.0, bits: "32", area_mm2: 16.0, power_mw: 21.0, gops: 25.0, tops_w: 1.19, gops_mm2: 1.6, pae: 0.07 },
+    Asic { name: "[25] KWS", tech_nm: 65, fclk_mhz: 0.25, bits: "32", area_mm2: 0.4, power_mw: 0.02, gops: 0.004, tops_w: 0.17, gops_mm2: 0.01, pae: 0.40 },
+    Asic { name: "[26] UNPU", tech_nm: 65, fclk_mhz: 200.0, bits: "16", area_mm2: 16.0, power_mw: 297.0, gops: 346.0, tops_w: 3.08, gops_mm2: 21.6, pae: 0.07 },
+    Asic { name: "[27] EIE", tech_nm: 45, fclk_mhz: 800.0, bits: "4", area_mm2: 40.8, power_mw: 590.0, gops: 102.0, tops_w: 0.17, gops_mm2: 2.5, pae: 0.004 },
+    Asic { name: "[28] BrainTTA", tech_nm: 22, fclk_mhz: 300.0, bits: "8", area_mm2: 3.0, power_mw: 31.0, gops: 77.0, tops_w: 2.47, gops_mm2: 25.8, pae: 0.83 },
+    Asic { name: "[29] 7nm SoC", tech_nm: 7, fclk_mhz: 880.0, bits: "8", area_mm2: 3.0, power_mw: 174.0, gops: 3604.0, tops_w: 6.83, gops_mm2: 1185.7, pae: 2.25 },
+];
+
+fn main() -> anyhow::Result<()> {
+    let Ok(m) = Manifest::discover(None) else {
+        eprintln!("table3: skipped (run `make artifacts` first)");
+        return Ok(());
+    };
+    let w = QGruWeights::load_params_int(&m.weights_main, QSpec::new(m.qspec_bits)?)?;
+    let s = AsicSpec::nominal(&w, true);
+    let ours = Asic {
+        name: "This Work (model)",
+        tech_nm: 22,
+        fclk_mhz: 2000.0,
+        bits: "12",
+        area_mm2: s.area.total_mm2(),
+        power_mw: s.power.total_mw(),
+        gops: s.throughput_gops,
+        tops_w: s.power_efficiency_gops_w() / 1e3,
+        gops_mm2: s.area_efficiency_gops_mm2(),
+        pae: s.pae_tops_w_mm2(),
+    };
+
+    let mut t = Table::new(
+        "Table III: prior RNN/DNN ASICs (PAE = TOPS/W/mm²)",
+        &["work", "tech nm", "f_clk MHz", "bits", "mm²", "mW", "GOPS", "TOPS/W", "GOPS/mm²", "PAE"],
+    );
+    let mut all: Vec<&Asic> = PRIOR.iter().collect();
+    all.push(&ours);
+    for a in &all {
+        t.row(&[
+            a.name.to_string(),
+            a.tech_nm.to_string(),
+            format!("{:.0}", a.fclk_mhz),
+            a.bits.to_string(),
+            format!("{:.2}", a.area_mm2),
+            format!("{:.1}", a.power_mw),
+            format!("{:.1}", a.gops),
+            f2(a.tops_w),
+            format!("{:.1}", a.gops_mm2),
+            f2(a.pae),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // shape assertions: PAE ranking (ours first, [29] second)
+    let mut ranked: Vec<(&str, f64)> = all.iter().map(|a| (a.name, a.pae)).collect();
+    ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
+    println!("PAE ranking:");
+    for (i, (name, pae)) in ranked.iter().enumerate() {
+        println!("  {}. {:<18} {:.3}", i + 1, name, pae);
+    }
+    assert_eq!(ranked[0].0, "This Work (model)", "this work must lead PAE");
+    assert_eq!(ranked[1].0, "[29] 7nm SoC", "7nm SoC must rank second");
+    assert!(ours.pae > 2.0 * ranked[1].1, "PAE lead must be >2x (paper: 6.58 vs 2.25)");
+    // our row must land near the paper's published values
+    assert!((ours.pae - 6.58).abs() / 6.58 < 0.25);
+    assert!((ours.gops_mm2 - 1282.5).abs() / 1282.5 < 0.10);
+    println!(
+        "\nshape checks passed: PAE leadership preserved ({:.2} vs {:.2} for the 7 nm SoC)\n",
+        ours.pae, ranked[1].1
+    );
+
+    dpd_ne::bench::bench("table3: spec computation", || {
+        std::hint::black_box(AsicSpec::nominal(&w, true));
+    });
+    Ok(())
+}

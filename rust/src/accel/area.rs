@@ -1,0 +1,121 @@
+//! 22FDX area model (Fig. 5's 0.2 mm² post-layout).
+//!
+//! Component densities for GF 22FDX standard-cell implementation at
+//! ~70% placement utilization (the usual 22 nm numbers: ~3 MGates/mm²
+//! NAND2-equivalent; a 12x12 multiplier ≈ 600 GE, a 12-bit adder ≈ 70
+//! GE, a 12-bit register ≈ 60 GE):
+//!
+//! | block                     | per-unit estimate |
+//! |---------------------------|-------------------|
+//! | MAC PE (mult+acc+regs)    | 900 µm²           |
+//! | preproc PE                | 900 µm²           |
+//! | PWL activation lane       | 60 µm²            |
+//! | LUT ROM (1024x12b, synth) | 9,000 µm² / fn    |
+//! | weight buffer (502x12b)   | 210 µm²/word eq -> see below |
+//! | hidden ping-pong buffer   | 2 x 10 x 12b regs |
+//! | FSM + clock + IO + route  | fixed 36,000 µm²  |
+//!
+//! The weight buffer is register-file based (single-cycle random
+//! access for 156 parallel consumers), ~35 µm²/word incl. decode.
+
+use super::fsm::HwConfig;
+use crate::dpd::qgru::ActKind;
+
+/// Area constants in µm².
+#[derive(Clone, Debug)]
+pub struct AreaModel {
+    pub mac_pe_um2: f64,
+    pub act_pwl_lane_um2: f64,
+    pub act_lut_rom_um2: f64,
+    pub wbuf_word_um2: f64,
+    pub hbuf_word_um2: f64,
+    pub fixed_um2: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        AreaModel {
+            mac_pe_um2: 900.0,
+            act_pwl_lane_um2: 60.0,
+            act_lut_rom_um2: 9000.0,
+            wbuf_word_um2: 35.0,
+            hbuf_word_um2: 25.0,
+            fixed_um2: 36000.0,
+        }
+    }
+}
+
+/// Area breakdown in mm².
+#[derive(Clone, Debug)]
+pub struct AreaBreakdown {
+    pub pe_array_mm2: f64,
+    pub preproc_mm2: f64,
+    pub act_mm2: f64,
+    pub wbuf_mm2: f64,
+    pub hbuf_mm2: f64,
+    pub fixed_mm2: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total_mm2(&self) -> f64 {
+        self.pe_array_mm2 + self.preproc_mm2 + self.act_mm2 + self.wbuf_mm2 + self.hbuf_mm2
+            + self.fixed_mm2
+    }
+}
+
+impl AreaModel {
+    pub fn area(&self, cfg: &HwConfig, n_weights: usize, hidden: usize, act: &ActKind) -> AreaBreakdown {
+        let um2_to_mm2 = 1e-6;
+        let act_area = match act {
+            ActKind::Hard => {
+                (cfg.sigmoid_lanes + cfg.tanh_lanes) as f64 * self.act_pwl_lane_um2
+            }
+            // two ROMs (sigmoid + tanh), shared across lanes via muxing
+            ActKind::Lut(_) => 2.0 * self.act_lut_rom_um2,
+        };
+        AreaBreakdown {
+            pe_array_mm2: cfg.pe_array_total() as f64 * self.mac_pe_um2 * um2_to_mm2,
+            preproc_mm2: cfg.pe_preproc as f64 * self.mac_pe_um2 * um2_to_mm2,
+            act_mm2: act_area * um2_to_mm2,
+            wbuf_mm2: n_weights as f64 * self.wbuf_word_um2 * um2_to_mm2,
+            hbuf_mm2: 2.0 * hidden as f64 * self.hbuf_word_um2 * um2_to_mm2,
+            fixed_mm2: self.fixed_um2 * um2_to_mm2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_area_matches_paper_within_10pct() {
+        let a = AreaModel::default().area(&HwConfig::default(), 502, 10, &ActKind::Hard);
+        let total = a.total_mm2();
+        let rel = (total - 0.2).abs() / 0.2;
+        assert!(rel < 0.10, "area {total:.3} mm² vs paper 0.2 mm²");
+    }
+
+    #[test]
+    fn pe_array_dominates() {
+        let a = AreaModel::default().area(&HwConfig::default(), 502, 10, &ActKind::Hard);
+        assert!(a.pe_array_mm2 > 0.5 * a.total_mm2());
+    }
+
+    #[test]
+    fn lut_variant_larger() {
+        let m = AreaModel::default();
+        let hard = m.area(&HwConfig::default(), 502, 10, &ActKind::Hard).total_mm2();
+        let lut = m
+            .area(
+                &HwConfig::default(),
+                502,
+                10,
+                &ActKind::Lut(crate::dpd::qgru::LutTables::default_for(
+                    crate::fixed::QSpec::Q12,
+                )),
+            )
+            .total_mm2();
+        assert!(lut > hard);
+    }
+}

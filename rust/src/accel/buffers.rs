@@ -1,0 +1,196 @@
+//! On-chip memories (paper §III-A): the weight buffer (502 x 12 b,
+//! read-only after load) and the double-buffered hidden-state buffer.
+//! Both count accesses for the power model.
+
+use anyhow::{ensure, Result};
+
+use crate::dpd::weights::QGruWeights;
+use crate::fixed::QSpec;
+
+/// Weight buffer: flat storage with segment offsets, read-counting.
+#[derive(Clone, Debug)]
+pub struct WeightBuffer {
+    pub spec: QSpec,
+    words: Vec<i32>,
+    // segment offsets
+    off_w_ih: usize,
+    off_b_ih: usize,
+    off_w_hh: usize,
+    off_b_hh: usize,
+    off_w_fc: usize,
+    off_b_fc: usize,
+    pub hidden: usize,
+    pub features: usize,
+    pub reads: u64,
+}
+
+impl WeightBuffer {
+    /// Load from quantized weights (the chip's one-time weight load).
+    pub fn load(w: &QGruWeights) -> WeightBuffer {
+        let mut words = Vec::with_capacity(502);
+        let off_w_ih = 0;
+        words.extend_from_slice(&w.w_ih);
+        let off_b_ih = words.len();
+        words.extend_from_slice(&w.b_ih);
+        let off_w_hh = words.len();
+        words.extend_from_slice(&w.w_hh);
+        let off_b_hh = words.len();
+        words.extend_from_slice(&w.b_hh);
+        let off_w_fc = words.len();
+        words.extend_from_slice(&w.w_fc);
+        let off_b_fc = words.len();
+        words.extend_from_slice(&w.b_fc);
+        WeightBuffer {
+            spec: w.spec,
+            words,
+            off_w_ih,
+            off_b_ih,
+            off_w_hh,
+            off_b_hh,
+            off_w_fc,
+            off_b_fc,
+            hidden: w.hidden,
+            features: w.features,
+            reads: 0,
+        }
+    }
+
+    /// Total words stored (paper: 502 at H=10).
+    pub fn n_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Storage bits.
+    pub fn bits(&self) -> usize {
+        self.words.len() * self.spec.bits as usize
+    }
+
+    #[inline]
+    pub fn w_ih(&mut self, row: usize, col: usize) -> i32 {
+        self.reads += 1;
+        self.words[self.off_w_ih + row * self.features + col]
+    }
+
+    #[inline]
+    pub fn b_ih(&mut self, row: usize) -> i32 {
+        self.reads += 1;
+        self.words[self.off_b_ih + row]
+    }
+
+    #[inline]
+    pub fn w_hh(&mut self, row: usize, col: usize) -> i32 {
+        self.reads += 1;
+        self.words[self.off_w_hh + row * self.hidden + col]
+    }
+
+    #[inline]
+    pub fn b_hh(&mut self, row: usize) -> i32 {
+        self.reads += 1;
+        self.words[self.off_b_hh + row]
+    }
+
+    #[inline]
+    pub fn w_fc(&mut self, row: usize, col: usize) -> i32 {
+        self.reads += 1;
+        self.words[self.off_w_fc + row * self.hidden + col]
+    }
+
+    #[inline]
+    pub fn b_fc(&mut self, row: usize) -> i32 {
+        self.reads += 1;
+        self.words[self.off_b_fc + row]
+    }
+}
+
+/// Double-buffered hidden state: reads see the previous sample's state
+/// until `commit`, exactly like the silicon ping-pong buffer (and
+/// exactly like the sequential semantics of the reference datapath).
+#[derive(Clone, Debug)]
+pub struct HiddenBuffer {
+    front: Vec<i32>,
+    back: Vec<i32>,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl HiddenBuffer {
+    pub fn new(hidden: usize) -> HiddenBuffer {
+        HiddenBuffer { front: vec![0; hidden], back: vec![0; hidden], reads: 0, writes: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.front.iter_mut().for_each(|v| *v = 0);
+        self.back.iter_mut().for_each(|v| *v = 0);
+    }
+
+    /// Read h_{t-1}[k].
+    #[inline]
+    pub fn read(&mut self, k: usize) -> i32 {
+        self.reads += 1;
+        self.front[k]
+    }
+
+    /// Stage h_t[k] into the back buffer.
+    #[inline]
+    pub fn write(&mut self, k: usize, v: i32) -> Result<()> {
+        ensure!(k < self.back.len(), "hidden index {k} out of range");
+        self.writes += 1;
+        self.back[k] = v;
+        Ok(())
+    }
+
+    /// Swap at end of sample (the FSM's commit point).
+    pub fn commit(&mut self) {
+        std::mem::swap(&mut self.front, &mut self.back);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn weights(spec: QSpec) -> QGruWeights {
+        QGruWeights {
+            hidden: 10,
+            features: 4,
+            spec,
+            w_ih: (0..120).collect(),
+            b_ih: (1000..1030).collect(),
+            w_hh: (2000..2300).collect(),
+            b_hh: (-30..0).collect(),
+            w_fc: (500..520).collect(),
+            b_fc: vec![7, -7],
+        }
+    }
+
+    #[test]
+    fn paper_word_count() {
+        let wb = WeightBuffer::load(&weights(QSpec::Q12));
+        assert_eq!(wb.n_words(), 502);
+        assert_eq!(wb.bits(), 502 * 12);
+    }
+
+    #[test]
+    fn segment_addressing() {
+        let mut wb = WeightBuffer::load(&weights(QSpec::Q12));
+        assert_eq!(wb.w_ih(0, 0), 0);
+        assert_eq!(wb.w_ih(2, 3), 11);
+        assert_eq!(wb.b_ih(5), 1005);
+        assert_eq!(wb.w_hh(1, 2), 2012);
+        assert_eq!(wb.b_hh(0), -30);
+        assert_eq!(wb.w_fc(1, 0), 510);
+        assert_eq!(wb.b_fc(1), -7);
+        assert_eq!(wb.reads, 7);
+    }
+
+    #[test]
+    fn hidden_double_buffering() {
+        let mut hb = HiddenBuffer::new(4);
+        hb.write(0, 42).unwrap();
+        // not visible before commit
+        assert_eq!(hb.read(0), 0);
+        hb.commit();
+        assert_eq!(hb.read(0), 42);
+        assert!(hb.write(4, 1).is_err());
+    }
+}

@@ -1,0 +1,331 @@
+//! Cycle-accurate DPD-NeuralEngine simulator.
+//!
+//! Executes the FSM schedule sample by sample on the modelled units
+//! (weight buffer, preprocessor, PE arrays, activation units, hidden
+//! double-buffer), producing output codes that are **bit-exact** with
+//! the functional model `dpd::qgru::QGruDpd` (cross-checked by tests)
+//! while accounting cycles, unit activity and memory accesses for the
+//! power model.
+
+use anyhow::Result;
+
+use super::act_unit::{ActImpl, ActUnit};
+use super::buffers::{HiddenBuffer, WeightBuffer};
+use super::fsm::{self, HwConfig};
+use super::ops::ModelDims;
+use super::pe::MacPe;
+use super::preproc::Preprocessor;
+use crate::dpd::weights::QGruWeights;
+use crate::fixed::ops::{requantize, rshift_round, saturate_i64};
+use crate::fixed::QSpec;
+
+/// Activity statistics accumulated over a run.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub samples: u64,
+    pub cycles: u64,
+    pub macs: u64,
+    pub alu_ops: u64,
+    pub act_ops: u64,
+    pub weight_reads: u64,
+    pub hidden_reads: u64,
+    pub hidden_writes: u64,
+}
+
+impl EngineStats {
+    /// Steady-state cycles per sample (must equal the FSM II).
+    pub fn cycles_per_sample(&self) -> f64 {
+        self.cycles as f64 / self.samples as f64
+    }
+}
+
+/// The simulator.
+pub struct CycleAccurateEngine {
+    pub cfg: HwConfig,
+    pub dims: ModelDims,
+    spec: QSpec,
+    weights: WeightBuffer,
+    hidden: HiddenBuffer,
+    preproc: Preprocessor,
+    act: ActUnit,
+    /// one representative PE per array for arithmetic (the arrays are
+    /// SIMD-identical; per-PE replication would only burn host time)
+    pe: MacPe,
+    stats: EngineStats,
+    // scratch
+    gi: Vec<i32>,
+    gh: Vec<i32>,
+    r: Vec<i32>,
+    z: Vec<i32>,
+    n: Vec<i32>,
+}
+
+impl CycleAccurateEngine {
+    pub fn new(w: &QGruWeights, act_impl: ActImpl, cfg: HwConfig) -> CycleAccurateEngine {
+        let dims = ModelDims { features: w.features, hidden: w.hidden };
+        let spec = w.spec;
+        CycleAccurateEngine {
+            cfg,
+            dims,
+            spec,
+            weights: WeightBuffer::load(w),
+            hidden: HiddenBuffer::new(w.hidden),
+            preproc: Preprocessor::new(spec),
+            act: ActUnit::new(spec, act_impl),
+            pe: MacPe::new(spec),
+            stats: EngineStats::default(),
+            gi: vec![0; 3 * w.hidden],
+            gh: vec![0; 3 * w.hidden],
+            r: vec![0; w.hidden],
+            z: vec![0; w.hidden],
+            n: vec![0; w.hidden],
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.hidden.reset();
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    pub fn spec(&self) -> QSpec {
+        self.spec
+    }
+
+    /// Process one sample through the full FSM window.
+    /// Returns the predistorted I/Q codes.
+    pub fn step(&mut self, iq: [i32; 2]) -> Result<[i32; 2]> {
+        let h = self.dims.hidden;
+        let f = self.spec.frac();
+        let one = 1i64 << f;
+
+        // c0-c1: preprocessor
+        let x = self.preproc.features(iq);
+
+        // c2-c4: input array (bias preload + 4 MACs per row)
+        for row in 0..3 * h {
+            let b = self.weights.b_ih(row);
+            self.pe.preload_bias(b);
+            for col in 0..self.dims.features {
+                let w = self.weights.w_ih(row, col);
+                self.pe.mac(w, x[col]);
+            }
+            self.gi[row] = self.pe.readout();
+        }
+        // c2-c4: hidden array (reads h_{t-1} from the front buffer)
+        for row in 0..3 * h {
+            let b = self.weights.b_hh(row);
+            self.pe.preload_bias(b);
+            for col in 0..h {
+                let w = self.weights.w_hh(row, col);
+                let hv = self.hidden.read(col);
+                self.pe.mac(w, hv);
+            }
+            self.gh[row] = self.pe.readout();
+        }
+
+        // c5: r/z gate adds + sigmoids
+        for k in 0..h {
+            let pre_r = saturate_i64(self.gi[k] as i64 + self.gh[k] as i64, self.spec);
+            self.r[k] = self.act.sigmoid(pre_r);
+            let pre_z = saturate_i64(self.gi[h + k] as i64 + self.gh[h + k] as i64, self.spec);
+            self.z[k] = self.act.sigmoid(pre_z);
+            self.stats.alu_ops += 2;
+        }
+        // c6: rh mul + n add ; c7: tanh
+        for k in 0..h {
+            let rh = requantize(self.r[k] as i64 * self.gh[2 * h + k] as i64, f, self.spec);
+            let pre_n = saturate_i64(self.gi[2 * h + k] as i64 + rh as i64, self.spec);
+            self.n[k] = self.act.tanh(pre_n);
+            self.stats.alu_ops += 2;
+        }
+        // c7-c9: hidden update, staged into the back buffer, commit
+        for k in 0..h {
+            let zn = rshift_round((one - self.z[k] as i64) * self.n[k] as i64, f);
+            let zh = rshift_round(self.z[k] as i64 * self.hidden.read(k) as i64, f);
+            let hv = saturate_i64(zn + zh, self.spec);
+            self.hidden.write(k, hv)?;
+            self.stats.alu_ops += 4;
+        }
+        self.hidden.commit();
+
+        // c10-c12: FC + residual (reads the *new* h)
+        let mut y = [0i32; 2];
+        for (o, out) in y.iter_mut().enumerate() {
+            let b = self.weights.b_fc(o);
+            self.pe.preload_bias(b);
+            for col in 0..h {
+                let w = self.weights.w_fc(o, col);
+                let hv = self.hidden.read(col);
+                self.pe.mac(w, hv);
+            }
+            let fc = self.pe.readout();
+            *out = saturate_i64(fc as i64 + iq[o] as i64, self.spec);
+            self.stats.alu_ops += 1;
+        }
+
+        self.stats.samples += 1;
+        self.stats.cycles += fsm::II_CYCLES as u64;
+        Ok(y)
+    }
+
+    /// Run a burst of codes (resets first). Refreshes the aggregated
+    /// counters from the unit-local ones at the end.
+    pub fn run_codes(&mut self, iq: &[[i32; 2]]) -> Result<Vec<[i32; 2]>> {
+        self.reset();
+        let mut out = Vec::with_capacity(iq.len());
+        for &s in iq {
+            out.push(self.step(s)?);
+        }
+        self.sync_stats();
+        Ok(out)
+    }
+
+    fn sync_stats(&mut self) {
+        self.stats.macs = self.pe.mac_count;
+        self.stats.act_ops = self.act.sigmoid_count + self.act.tanh_count;
+        self.stats.weight_reads = self.weights.reads;
+        self.stats.hidden_reads = self.hidden.reads;
+        self.stats.hidden_writes = self.hidden.writes;
+        // preprocessor ops fold into alu accounting
+        self.stats.alu_ops += self.preproc.op_count;
+        self.preproc.op_count = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpd::qgru::{ActKind, LutTables, QGruDpd};
+    use crate::util::Rng;
+
+    fn rand_qweights(seed: u64, spec: QSpec) -> QGruWeights {
+        let mut rng = Rng::new(seed);
+        let hidden = 10;
+        let bound = (0.32 * spec.scale()) as i64;
+        let mut gen =
+            |n: usize| -> Vec<i32> { (0..n).map(|_| rng.int_in(-bound, bound) as i32).collect() };
+        QGruWeights {
+            hidden,
+            features: 4,
+            spec,
+            w_ih: gen(120),
+            b_ih: gen(30),
+            w_hh: gen(300),
+            b_hh: gen(30),
+            w_fc: gen(20),
+            b_fc: gen(2),
+        }
+    }
+
+    #[test]
+    fn bit_exact_with_functional_model_hard() {
+        for bits in [8u32, 12, 16] {
+            let spec = QSpec::new(bits).unwrap();
+            let w = rand_qweights(bits as u64, spec);
+            let mut sim = CycleAccurateEngine::new(&w, ActImpl::Hard, HwConfig::default());
+            let mut func = QGruDpd::new(w, ActKind::Hard);
+            let mut rng = Rng::new(1000 + bits as u64);
+            let x: Vec<[i32; 2]> = (0..300)
+                .map(|_| {
+                    [
+                        rng.int_in(spec.qmin() as i64, spec.qmax() as i64) as i32,
+                        rng.int_in(spec.qmin() as i64, spec.qmax() as i64) as i32,
+                    ]
+                })
+                .collect();
+            let a = sim.run_codes(&x).unwrap();
+            let b = func.run_codes(&x);
+            assert_eq!(a, b, "cycle sim diverged from functional model at {bits} bits");
+        }
+    }
+
+    #[test]
+    fn bit_exact_with_functional_model_lut() {
+        let spec = QSpec::Q12;
+        let w = rand_qweights(9, spec);
+        let mut sim = CycleAccurateEngine::new(
+            &w,
+            ActImpl::Lut(LutTables::default_for(spec)),
+            HwConfig::default(),
+        );
+        let mut func = QGruDpd::new(w, ActKind::Lut(LutTables::default_for(spec)));
+        let mut rng = Rng::new(77);
+        let x: Vec<[i32; 2]> = (0..200)
+            .map(|_| [rng.int_in(-900, 900) as i32, rng.int_in(-900, 900) as i32])
+            .collect();
+        assert_eq!(sim.run_codes(&x).unwrap(), func.run_codes(&x));
+    }
+
+    #[test]
+    fn cycle_accounting_matches_ii() {
+        let spec = QSpec::Q12;
+        let w = rand_qweights(3, spec);
+        let mut sim = CycleAccurateEngine::new(&w, ActImpl::Hard, HwConfig::default());
+        let x = vec![[100, -100]; 64];
+        sim.run_codes(&x).unwrap();
+        assert_eq!(sim.stats().cycles_per_sample(), fsm::II_CYCLES as f64);
+    }
+
+    #[test]
+    fn activity_counters_per_sample() {
+        let spec = QSpec::Q12;
+        let w = rand_qweights(4, spec);
+        let mut sim = CycleAccurateEngine::new(&w, ActImpl::Hard, HwConfig::default());
+        let n = 50u64;
+        let x = vec![[50, 60]; 50];
+        sim.run_codes(&x).unwrap();
+        let s = sim.stats();
+        // per sample: 120 + 300 + 20 MACs
+        assert_eq!(s.macs, n * 440);
+        // 30 activations
+        assert_eq!(s.act_ops, n * 30);
+        // weight reads: all 502 words touched every sample
+        // (440 weights + 62 biases)
+        assert_eq!(s.weight_reads, n * 502);
+        // hidden reads: 300 (matvec) + 10 (z.h) + 20 (fc)
+        assert_eq!(s.hidden_reads, n * 330);
+        assert_eq!(s.hidden_writes, n * 10);
+    }
+
+    #[test]
+    fn golden_artifacts_if_present() {
+        // bit-exactness against the jax oracle through the artifact
+        // golden vectors (same as tests/golden_parity.rs but for the
+        // cycle engine)
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping (no artifacts)");
+            return;
+        }
+        let (w, j) =
+            crate::dpd::weights::QGruWeights::load_golden(&dir.join("golden/g_b12_hard.json"))
+                .unwrap();
+        let iq: Vec<[i32; 2]> = j
+            .get("iq_codes")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|r| {
+                let v = r.as_i32_vec().unwrap();
+                [v[0], v[1]]
+            })
+            .collect();
+        let want: Vec<[i32; 2]> = j
+            .get("out_codes")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|r| {
+                let v = r.as_i32_vec().unwrap();
+                [v[0], v[1]]
+            })
+            .collect();
+        let mut sim = CycleAccurateEngine::new(&w, ActImpl::Hard, HwConfig::default());
+        assert_eq!(sim.run_codes(&iq).unwrap(), want);
+    }
+}

@@ -1,0 +1,226 @@
+//! Zynq-7020 (XC7Z020) resource estimator — Table I and Fig. 4.
+//!
+//! Component-level model of the FPGA emulation of DPD-NeuralEngine.
+//! The FPGA prototype time-multiplexes the 156-PE design onto the
+//! DSP48E1 slices; what distinguishes the two Table I rows is the
+//! activation implementation:
+//!
+//! * **LUT-Sigmoid/Tanh (baseline)**: each nonlinear function is a
+//!   synthesized 12-bit-in -> 12-bit-out combinational table. Logic
+//!   synthesis of a smooth 12b function costs ~700 LUT6 per output
+//!   bit, i.e. ~8.5k LUTs for sigmoid and ~8.1k for tanh — which is
+//!   how the paper's baseline ends up spending more LUTs on the two
+//!   activations than on all the MACs combined (Fig. 4).
+//! * **Hardsigmoid/Hardtanh**: comparators + shifter + mux per lane —
+//!   two orders of magnitude cheaper (the paper reports 18.9x and
+//!   35.3x reductions).
+//!
+//! Numbers are calibrated against Table I's published totals; the
+//! *structure* (what scales with what) is the model's content.
+
+/// Zynq-7020 available resources (Table I header row).
+#[derive(Clone, Copy, Debug)]
+pub struct FpgaDevice {
+    pub lut: usize,
+    pub ff: usize,
+    pub dsp: usize,
+    pub bram: usize,
+}
+
+pub const ZYNQ_7020: FpgaDevice = FpgaDevice { lut: 53_200, ff: 106_400, dsp: 220, bram: 140 };
+
+/// Activation implementation selector for the estimate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FpgaAct {
+    LutTables,
+    Hard,
+}
+
+/// Component-level resource costs.
+#[derive(Clone, Debug)]
+pub struct FpgaCostModel {
+    /// DSP48E1 slices used for the time-multiplexed MAC datapath
+    pub dsp_macs: usize,
+    /// extra DSPs the synthesizer spends when activations are cheap
+    /// enough to rebalance the datapath (Table I: 85 -> 95)
+    pub dsp_extra_hard: usize,
+    /// LUTs per MAC lane of glue (operand mux, requantize, saturate)
+    pub lut_per_mac_lane: usize,
+    /// control/FSM + AXI interface LUTs
+    pub lut_control: usize,
+    /// LUTs for a synthesized 12b sigmoid table
+    pub lut_sigmoid_table: usize,
+    /// LUTs for a synthesized 12b tanh table
+    pub lut_tanh_table: usize,
+    /// LUTs per hard-sigmoid lane (comparators+shifter+mux)
+    pub lut_hard_sigmoid_lane: usize,
+    /// LUTs per hard-tanh lane (clamp)
+    pub lut_hard_tanh_lane: usize,
+    /// flip-flops: pipeline + buffers, per DSP lane and fixed
+    pub ff_per_lane: usize,
+    pub ff_fixed: usize,
+    /// extra FFs the LUT-table variant needs (table output pipelining)
+    pub ff_lut_extra: usize,
+    pub sigmoid_lanes: usize,
+    pub tanh_lanes: usize,
+}
+
+impl Default for FpgaCostModel {
+    fn default() -> Self {
+        FpgaCostModel {
+            dsp_macs: 85,
+            dsp_extra_hard: 10,
+            lut_per_mac_lane: 26,
+            lut_control: 1900,
+            lut_sigmoid_table: 8504,
+            lut_tanh_table: 8118,
+            lut_hard_sigmoid_lane: 23,
+            lut_hard_tanh_lane: 23,
+            ff_per_lane: 30,
+            ff_fixed: 606,
+            ff_lut_extra: 763,
+            sigmoid_lanes: 20,
+            tanh_lanes: 10,
+        }
+    }
+}
+
+/// An estimated utilization row (Table I format).
+#[derive(Clone, Copy, Debug)]
+pub struct FpgaUtilization {
+    pub lut: usize,
+    pub ff: usize,
+    pub dsp: usize,
+    pub bram: usize,
+}
+
+impl FpgaUtilization {
+    pub fn pct(&self, dev: &FpgaDevice) -> (f64, f64, f64, f64) {
+        (
+            100.0 * self.lut as f64 / dev.lut as f64,
+            100.0 * self.ff as f64 / dev.ff as f64,
+            100.0 * self.dsp as f64 / dev.dsp as f64,
+            100.0 * self.bram as f64 / dev.bram as f64,
+        )
+    }
+}
+
+/// Per-block LUT breakdown (Fig. 4's bar chart).
+#[derive(Clone, Debug)]
+pub struct LutBreakdown {
+    pub pe_array: usize,
+    pub sigmoid: usize,
+    pub tanh: usize,
+    pub control: usize,
+}
+
+impl LutBreakdown {
+    pub fn total(&self) -> usize {
+        self.pe_array + self.sigmoid + self.tanh + self.control
+    }
+}
+
+impl FpgaCostModel {
+    pub fn estimate(&self, act: FpgaAct) -> (FpgaUtilization, LutBreakdown) {
+        let dsp = match act {
+            FpgaAct::LutTables => self.dsp_macs,
+            FpgaAct::Hard => self.dsp_macs + self.dsp_extra_hard,
+        };
+        let pe_array = dsp * self.lut_per_mac_lane;
+        let (sigmoid, tanh) = match act {
+            FpgaAct::LutTables => (self.lut_sigmoid_table, self.lut_tanh_table),
+            FpgaAct::Hard => (
+                self.lut_hard_sigmoid_lane * self.sigmoid_lanes,
+                self.lut_hard_tanh_lane * self.tanh_lanes,
+            ),
+        };
+        let breakdown = LutBreakdown { pe_array, sigmoid, tanh, control: self.lut_control };
+        let ff = self.ff_fixed
+            + dsp * self.ff_per_lane
+            + if act == FpgaAct::LutTables { self.ff_lut_extra } else { 0 };
+        let util = FpgaUtilization {
+            lut: breakdown.total(),
+            ff,
+            dsp,
+            bram: 0, // weights fit in distributed RAM / registers
+        };
+        (util, breakdown)
+    }
+
+    /// The paper's headline reduction factors (Fig. 4): LUT cost of
+    /// each function, LUT-table vs hard implementation.
+    pub fn reduction_factors(&self) -> (f64, f64) {
+        (
+            self.lut_sigmoid_table as f64 / (self.lut_hard_sigmoid_lane * self.sigmoid_lanes) as f64,
+            self.lut_tanh_table as f64 / (self.lut_hard_tanh_lane * self.tanh_lanes) as f64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PAPER_LUT_BASELINE: usize = 20_522;
+    const PAPER_LUT_HARD: usize = 5_439;
+    const PAPER_FF_BASELINE: usize = 3_969;
+    const PAPER_FF_HARD: usize = 3_156;
+    const PAPER_DSP_BASELINE: usize = 85;
+    const PAPER_DSP_HARD: usize = 95;
+
+    fn rel(a: usize, b: usize) -> f64 {
+        (a as f64 - b as f64).abs() / b as f64
+    }
+
+    #[test]
+    fn table1_baseline_row() {
+        let (u, _) = FpgaCostModel::default().estimate(FpgaAct::LutTables);
+        assert!(rel(u.lut, PAPER_LUT_BASELINE) < 0.10, "LUT {}", u.lut);
+        assert!(rel(u.ff, PAPER_FF_BASELINE) < 0.10, "FF {}", u.ff);
+        assert_eq!(u.dsp, PAPER_DSP_BASELINE);
+        assert_eq!(u.bram, 0);
+    }
+
+    #[test]
+    fn table1_hard_row() {
+        let (u, _) = FpgaCostModel::default().estimate(FpgaAct::Hard);
+        assert!(rel(u.lut, PAPER_LUT_HARD) < 0.10, "LUT {}", u.lut);
+        assert!(rel(u.ff, PAPER_FF_HARD) < 0.10, "FF {}", u.ff);
+        assert_eq!(u.dsp, PAPER_DSP_HARD);
+        assert_eq!(u.bram, 0);
+    }
+
+    #[test]
+    fn fig4_reduction_factors() {
+        let (sig, tanh) = FpgaCostModel::default().reduction_factors();
+        assert!((sig - 18.9).abs() < 0.8, "sigmoid reduction {sig:.1}x");
+        assert!((tanh - 35.3).abs() < 1.5, "tanh reduction {tanh:.1}x");
+    }
+
+    #[test]
+    fn fig4_activation_dominance_in_baseline() {
+        let (_, b) = FpgaCostModel::default().estimate(FpgaAct::LutTables);
+        // the paper's headline: LUT activations cost more than the PEs
+        assert!(b.sigmoid + b.tanh > b.pe_array);
+        assert!(b.sigmoid + b.tanh > 15_000);
+    }
+
+    #[test]
+    fn fits_the_device() {
+        for act in [FpgaAct::LutTables, FpgaAct::Hard] {
+            let (u, _) = FpgaCostModel::default().estimate(act);
+            assert!(u.lut <= ZYNQ_7020.lut);
+            assert!(u.ff <= ZYNQ_7020.ff);
+            assert!(u.dsp <= ZYNQ_7020.dsp);
+        }
+    }
+
+    #[test]
+    fn utilization_percentages() {
+        let (u, _) = FpgaCostModel::default().estimate(FpgaAct::Hard);
+        let (lut_pct, _, dsp_pct, _) = u.pct(&ZYNQ_7020);
+        // paper: 10.2% LUT, 43.2% DSP
+        assert!((lut_pct - 10.2).abs() < 1.5, "LUT% {lut_pct:.1}");
+        assert!((dsp_pct - 43.2).abs() < 1.0, "DSP% {dsp_pct:.1}");
+    }
+}

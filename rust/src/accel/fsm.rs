@@ -1,0 +1,262 @@
+//! The central FSM schedule (paper §III-A, Fig. 2) — reverse-engineered
+//! to reproduce the published timing exactly:
+//!
+//! * f_clk = 2 GHz, f_s,I/Q = 250 MSps  ->  II = 8 cycles/sample;
+//! * latency = 7.5 ns  ->  15 cycles input-to-output.
+//!
+//! The paper does not publish the schedule; the reconstruction below is
+//! the unique simple schedule consistent with both numbers:
+//!
+//! ```text
+//! cycle  unit                 work (ops)
+//!  in    I/O input register   sample latch                    (1 cy)
+//!  c0    preproc PE#1         p = requant(i^2+q^2, f-2)   [3]
+//!  c1    preproc PE#2         p2 = requant(p^2, f)        [1]
+//!  c2-4  input array (40 PE)  W_ih x + b  (120 MAC)
+//!  c2-4  hidden array (106)   W_hh h + b  (300 MAC)
+//!  c5    hidden-array ALUs    r/z gate adds (20)
+//!  c5    sigmoid units (20)   r, z activations (20)
+//!  c6    hidden-array ALUs    r.gh_n mul (10) + n add (10)
+//!  c7    tanh units (10)      n activation (10)
+//!  c7    hidden-array ALUs    (1-z) sub (10)
+//!  c8    hidden-array ALUs    (1-z).n mul (10) + z.h mul (10)
+//!  c9    hidden-array ALUs    h sum (10)  -> h_t commit
+//!  c10-11 FC array (10 PE)    W_fc h + b  (20 MAC)
+//!  c12   FC adders            residual add (2)
+//!  out   I/O output register  DAC handoff                     (1 cy)
+//! ```
+//!
+//! **The initiation interval is recurrence-limited**: the hidden matvec
+//! of sample t+1 (its c2) needs h_t, which commits at the end of c9 —
+//! an 8-cycle dependency loop. 2 GHz / 8 = 250 MSps is therefore the
+//! paper's *exact* "up to 250 MSps" limit, not a soft target.
+//! Latency: in-reg + c0..c12 + out-reg = 1 + 13 + 1 = 15 cycles = 7.5 ns.
+//!
+//! PE allocation (the paper's "156 PEs subdivided into input, hidden
+//! and FC arrays"; elementwise gate math reuses idle hidden-array PEs
+//! in c5-c9):  input 40 + hidden 106 + FC 10 = 156, preprocessor 2
+//! (counted separately, as in the paper).
+
+use super::ops::ModelDims;
+#[cfg(test)]
+use super::ops::ops_per_sample;
+
+/// Hardware configuration of the engine.
+#[derive(Clone, Copy, Debug)]
+pub struct HwConfig {
+    pub f_clk_ghz: f64,
+    pub pe_input: usize,
+    pub pe_hidden: usize,
+    pub pe_fc: usize,
+    pub pe_preproc: usize,
+    pub sigmoid_lanes: usize,
+    pub tanh_lanes: usize,
+}
+
+impl Default for HwConfig {
+    fn default() -> Self {
+        HwConfig {
+            f_clk_ghz: 2.0,
+            pe_input: 40,
+            pe_hidden: 106,
+            pe_fc: 10,
+            pe_preproc: 2,
+            sigmoid_lanes: 20,
+            tanh_lanes: 10,
+        }
+    }
+}
+
+impl HwConfig {
+    /// The paper's headline array size (excludes the 2 preproc PEs).
+    pub fn pe_array_total(&self) -> usize {
+        self.pe_input + self.pe_hidden + self.pe_fc
+    }
+}
+
+/// One scheduled activity within the per-sample window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Slot {
+    pub unit: Unit,
+    /// first cycle (relative to c0) and cycle count
+    pub start: usize,
+    pub len: usize,
+    /// total scalar ops performed in this slot
+    pub ops: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Unit {
+    Preproc,
+    InputArray,
+    HiddenArray,
+    /// elementwise gate math on idle hidden-array PEs
+    HiddenAlu,
+    SigmoidUnit,
+    TanhUnit,
+    FcArray,
+    IoReg,
+}
+
+/// The static schedule for the paper's model dimensions.
+pub fn schedule(d: ModelDims) -> Vec<Slot> {
+    let h = d.hidden;
+    let f = d.features;
+    vec![
+        Slot { unit: Unit::Preproc, start: 0, len: 1, ops: 3 },
+        Slot { unit: Unit::Preproc, start: 1, len: 1, ops: 1 },
+        Slot { unit: Unit::InputArray, start: 2, len: 3, ops: 2 * 3 * h * f },
+        Slot { unit: Unit::HiddenArray, start: 2, len: 3, ops: 2 * 3 * h * h },
+        Slot { unit: Unit::HiddenAlu, start: 5, len: 1, ops: 2 * h }, // r,z adds
+        Slot { unit: Unit::SigmoidUnit, start: 5, len: 1, ops: 2 * h },
+        Slot { unit: Unit::HiddenAlu, start: 6, len: 1, ops: 2 * h }, // rh mul + n add
+        Slot { unit: Unit::TanhUnit, start: 7, len: 1, ops: h },
+        Slot { unit: Unit::HiddenAlu, start: 7, len: 1, ops: h }, // (1-z)
+        Slot { unit: Unit::HiddenAlu, start: 8, len: 1, ops: 2 * h }, // two muls
+        Slot { unit: Unit::HiddenAlu, start: 9, len: 1, ops: h }, // h sum (commit)
+        Slot { unit: Unit::FcArray, start: 10, len: 2, ops: 2 * 2 * h },
+        Slot { unit: Unit::FcArray, start: 12, len: 1, ops: 2 }, // residual
+    ]
+}
+
+/// Initiation interval in cycles: the recurrence loop c2..c9.
+pub const II_CYCLES: usize = 8;
+
+/// Input-to-output latency in cycles: in-reg + c0..c12 + out-reg.
+pub const LATENCY_CYCLES: usize = 15;
+
+/// Maximum sustainable I/Q sample rate (MSps) at a clock (GHz).
+pub fn max_sample_rate_msps(f_clk_ghz: f64) -> f64 {
+    f_clk_ghz * 1e3 / II_CYCLES as f64
+}
+
+/// Latency in ns at a clock (GHz).
+pub fn latency_ns(f_clk_ghz: f64) -> f64 {
+    LATENCY_CYCLES as f64 / f_clk_ghz
+}
+
+/// Average PE-array utilization over the II window (MAC-capable ops on
+/// the 156-PE array / capacity).
+pub fn array_utilization(cfg: &HwConfig, d: ModelDims) -> f64 {
+    let array_ops: usize = schedule(d)
+        .iter()
+        .filter(|s| {
+            matches!(
+                s.unit,
+                Unit::InputArray | Unit::HiddenArray | Unit::HiddenAlu | Unit::FcArray
+            )
+        })
+        .map(|s| s.ops)
+        .sum();
+    // each PE does one MAC (2 ops) or one ALU op per cycle; capacity in
+    // "ops" terms: MAC slots count 2
+    let capacity = cfg.pe_array_total() * II_CYCLES * 2;
+    array_ops as f64 / capacity as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_timing_constants() {
+        assert_eq!(II_CYCLES, 8);
+        assert_eq!(LATENCY_CYCLES, 15);
+        assert!((max_sample_rate_msps(2.0) - 250.0).abs() < 1e-9);
+        assert!((latency_ns(2.0) - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pe_array_is_156() {
+        let cfg = HwConfig::default();
+        assert_eq!(cfg.pe_array_total(), 156);
+        assert_eq!(cfg.pe_preproc, 2);
+    }
+
+    #[test]
+    fn schedule_covers_all_ops() {
+        let d = ModelDims::default();
+        let total: usize = schedule(d).iter().map(|s| s.ops).sum();
+        assert_eq!(total, ops_per_sample(d).total());
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        let cfg = HwConfig::default();
+        let d = ModelDims::default();
+        for s in schedule(d) {
+            let per_cycle = (s.ops + s.len - 1) / s.len;
+            let cap = match s.unit {
+                Unit::Preproc => cfg.pe_preproc * 2, // MAC = 2 ops
+                Unit::InputArray => cfg.pe_input * 2,
+                Unit::HiddenArray => cfg.pe_hidden * 2,
+                Unit::HiddenAlu => cfg.pe_hidden, // 1 ALU op per PE
+                Unit::SigmoidUnit => cfg.sigmoid_lanes,
+                Unit::TanhUnit => cfg.tanh_lanes,
+                Unit::FcArray => cfg.pe_fc * 2,
+                Unit::IoReg => usize::MAX,
+            };
+            assert!(
+                per_cycle <= cap,
+                "{:?} needs {per_cycle}/cycle > capacity {cap}",
+                s.unit
+            );
+        }
+    }
+
+    #[test]
+    fn recurrence_loop_is_exactly_ii() {
+        // hidden matvec starts at c2; h commits at end of c9
+        let d = ModelDims::default();
+        let sched = schedule(d);
+        let hmv_start = sched
+            .iter()
+            .find(|s| s.unit == Unit::HiddenArray)
+            .unwrap()
+            .start;
+        let h_commit = sched
+            .iter()
+            .filter(|s| s.unit == Unit::HiddenAlu)
+            .map(|s| s.start + s.len)
+            .max()
+            .unwrap();
+        assert_eq!(h_commit - hmv_start, II_CYCLES);
+    }
+
+    #[test]
+    fn dependencies_honored() {
+        let d = ModelDims::default();
+        let sched = schedule(d);
+        let end = |u: Unit| -> usize {
+            sched
+                .iter()
+                .filter(|s| s.unit == u)
+                .map(|s| s.start + s.len)
+                .max()
+                .unwrap()
+        };
+        let start = |u: Unit| -> usize {
+            sched.iter().filter(|s| s.unit == u).map(|s| s.start).min().unwrap()
+        };
+        // features before matvecs
+        assert!(end(Unit::Preproc) <= start(Unit::InputArray));
+        // matvecs before gate math
+        assert!(end(Unit::InputArray) <= start(Unit::SigmoidUnit));
+        assert!(end(Unit::HiddenArray) <= start(Unit::HiddenAlu));
+        // gates before FC
+        assert!(end(Unit::HiddenAlu) <= start(Unit::FcArray));
+    }
+
+    #[test]
+    fn utilization_realistic() {
+        let u = array_utilization(&HwConfig::default(), ModelDims::default());
+        assert!((0.2..0.8).contains(&u), "utilization {u}");
+    }
+
+    #[test]
+    fn overclock_scaling() {
+        // at 1 GHz the chip sustains 125 MSps
+        assert!((max_sample_rate_msps(1.0) - 125.0).abs() < 1e-9);
+        assert!((latency_ns(1.0) - 15.0).abs() < 1e-12);
+    }
+}

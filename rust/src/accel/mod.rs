@@ -1,0 +1,30 @@
+//! The DPD-NeuralEngine ASIC model (paper §III, Fig. 2/5, Tables I-III).
+//!
+//! * [`ops`] — exact operation accounting (the paper's "OP/S" column);
+//! * [`pe`] / [`preproc`] / [`act_unit`] / [`buffers`] — datapath units
+//!   with activity counters;
+//! * [`fsm`] — the cycle schedule: the GRU recurrence closes an
+//!   8-cycle dependency loop at 2 GHz -> 250 MSps, with a 15-cycle
+//!   input-to-output pipeline latency (7.5 ns);
+//! * [`engine`] — the cycle-accurate simulator (bit-exact with
+//!   `dpd::qgru`, plus cycle/activity/energy accounting);
+//! * [`power`] — the 22FDX energy model (Fig. 5's 195 mW);
+//! * [`area`] — the area model (Fig. 5's 0.2 mm^2);
+//! * [`fpga`] — the Zynq-7020 resource estimator (Table I, Fig. 4);
+//! * [`spec`] — the headline-number calculator tying it all together
+//!   (Fig. 5, Tables II/III rows).
+
+pub mod act_unit;
+pub mod area;
+pub mod buffers;
+pub mod engine;
+pub mod fpga;
+pub mod fsm;
+pub mod ops;
+pub mod pe;
+pub mod power;
+pub mod preproc;
+pub mod spec;
+
+pub use engine::{CycleAccurateEngine, EngineStats};
+pub use spec::AsicSpec;

@@ -1,0 +1,103 @@
+//! Processing element — a 12-bit (parametric Q2.f) MAC with a wide
+//! accumulator, the paper's array workhorse. Counts its own activity
+//! for the power model.
+
+use crate::fixed::ops::requantize;
+use crate::fixed::QSpec;
+
+/// One MAC PE: accumulate w*x into a wide (i64) register, requantize
+/// on demand. Matches the datapath contract exactly.
+#[derive(Clone, Debug)]
+pub struct MacPe {
+    pub spec: QSpec,
+    acc: i64,
+    /// lifetime MAC count (for utilization/power accounting)
+    pub mac_count: u64,
+}
+
+impl MacPe {
+    pub fn new(spec: QSpec) -> MacPe {
+        MacPe { spec, acc: 0, mac_count: 0 }
+    }
+
+    /// Preload the accumulator with a bias (aligned by << f) — the
+    /// "free bias" convention of the op accounting.
+    #[inline]
+    pub fn preload_bias(&mut self, bias_code: i32) {
+        self.acc = (bias_code as i64) << self.spec.frac();
+    }
+
+    #[inline]
+    pub fn clear(&mut self) {
+        self.acc = 0;
+    }
+
+    /// One multiply-accumulate of two Q2.f codes.
+    #[inline]
+    pub fn mac(&mut self, w: i32, x: i32) {
+        self.acc += w as i64 * x as i64;
+        self.mac_count += 1;
+    }
+
+    /// Requantize the accumulator back to a Q2.f code.
+    #[inline]
+    pub fn readout(&self) -> i32 {
+        requantize(self.acc, self.spec.frac(), self.spec)
+    }
+
+    /// Raw accumulator (tests).
+    pub fn raw(&self) -> i64 {
+        self.acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn bias_preload_then_readout_is_identity() {
+        let spec = QSpec::Q12;
+        let mut pe = MacPe::new(spec);
+        for b in [-2048, -1, 0, 1, 2047] {
+            pe.preload_bias(b);
+            assert_eq!(pe.readout(), b);
+        }
+    }
+
+    #[test]
+    fn mac_matches_scalar_reference() {
+        check("pe mac vs scalar", 100, |rng| {
+            let spec = QSpec::Q12;
+            let mut pe = MacPe::new(spec);
+            let b = rng.int_in(-2048, 2047) as i32;
+            pe.preload_bias(b);
+            let mut acc = (b as i64) << 10;
+            for _ in 0..10 {
+                let w = rng.int_in(-2048, 2047) as i32;
+                let x = rng.int_in(-2048, 2047) as i32;
+                pe.mac(w, x);
+                acc += w as i64 * x as i64;
+            }
+            if pe.raw() != acc {
+                return Err("accumulator mismatch".into());
+            }
+            let want = crate::fixed::ops::requantize(acc, 10, spec);
+            if pe.readout() != want {
+                return Err("readout mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn counts_activity() {
+        let mut pe = MacPe::new(QSpec::Q12);
+        pe.preload_bias(0);
+        for _ in 0..17 {
+            pe.mac(1, 1);
+        }
+        assert_eq!(pe.mac_count, 17);
+    }
+}

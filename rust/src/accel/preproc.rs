@@ -1,0 +1,88 @@
+//! The 2-PE preprocessor (paper §III-A): extracts the Eq. (1) feature
+//! vector from the incoming I/Q codes. One PE squares-and-sums the
+//! I/Q pair, the other squares the envelope feature; the x4
+//! conditioning is the requantize shift (f-2), free in hardware.
+
+use crate::fixed::ops::requantize;
+use crate::fixed::QSpec;
+
+/// Preprocessor unit with activity counters.
+#[derive(Clone, Debug)]
+pub struct Preprocessor {
+    pub spec: QSpec,
+    pub op_count: u64,
+}
+
+impl Preprocessor {
+    pub fn new(spec: QSpec) -> Preprocessor {
+        Preprocessor { spec, op_count: 0 }
+    }
+
+    /// Cycle 0: p = requant(i^2 + q^2, f-2)  (PE #1: 2 mults + add).
+    #[inline]
+    pub fn stage1(&mut self, iq: [i32; 2]) -> i32 {
+        self.op_count += 3;
+        let (i, q) = (iq[0] as i64, iq[1] as i64);
+        requantize(i * i + q * q, self.spec.frac() - 2, self.spec)
+    }
+
+    /// Cycle 1: p2 = requant(p^2, f)  (PE #2: 1 mult).
+    #[inline]
+    pub fn stage2(&mut self, p: i32) -> i32 {
+        self.op_count += 1;
+        requantize(p as i64 * p as i64, self.spec.frac(), self.spec)
+    }
+
+    /// Both stages: the full feature vector.
+    pub fn features(&mut self, iq: [i32; 2]) -> [i32; 4] {
+        let p = self.stage1(iq);
+        let p2 = self.stage2(p);
+        [iq[0], iq[1], p, p2]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpd::qgru::{ActKind, QGruDpd};
+    use crate::dpd::weights::QGruWeights;
+    use crate::util::proptest::check;
+
+    fn dummy_weights(spec: QSpec) -> QGruWeights {
+        QGruWeights {
+            hidden: 10,
+            features: 4,
+            spec,
+            w_ih: vec![0; 120],
+            b_ih: vec![0; 30],
+            w_hh: vec![0; 300],
+            b_hh: vec![0; 30],
+            w_fc: vec![0; 20],
+            b_fc: vec![0; 2],
+        }
+    }
+
+    #[test]
+    fn matches_qgru_features() {
+        check("preproc vs qgru features", 200, |rng| {
+            let spec = QSpec::Q12;
+            let mut pp = Preprocessor::new(spec);
+            let dpd = QGruDpd::new(dummy_weights(spec), ActKind::Hard);
+            let iq = [
+                rng.int_in(spec.qmin() as i64, spec.qmax() as i64) as i32,
+                rng.int_in(spec.qmin() as i64, spec.qmax() as i64) as i32,
+            ];
+            if pp.features(iq) != dpd.features(iq) {
+                return Err(format!("feature mismatch for {iq:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn counts_ops() {
+        let mut pp = Preprocessor::new(QSpec::Q12);
+        pp.features([100, -200]);
+        assert_eq!(pp.op_count, 4);
+    }
+}

@@ -1,0 +1,148 @@
+//! The headline-spec calculator: ties the FSM timing, op counts, power
+//! and area models into the numbers Fig. 5 and Tables II/III report.
+
+use super::act_unit::ActImpl;
+use super::area::{AreaBreakdown, AreaModel};
+use super::engine::CycleAccurateEngine;
+use super::fsm::{self, HwConfig};
+use super::ops::{self, ModelDims};
+use super::power::{EnergyModel, PowerBreakdown};
+use crate::dpd::qgru::{ActKind, LutTables};
+use crate::dpd::weights::QGruWeights;
+use crate::util::Rng;
+
+/// The full operating-point specification (one Fig. 5 panel).
+#[derive(Clone, Debug)]
+pub struct AsicSpec {
+    pub f_clk_ghz: f64,
+    pub v: f64,
+    pub fs_msps: f64,
+    pub ops_per_sample: usize,
+    pub latency_ns: f64,
+    pub throughput_gops: f64,
+    pub power: PowerBreakdown,
+    pub area: AreaBreakdown,
+}
+
+impl AsicSpec {
+    /// Compute the spec at the nominal point (2 GHz, 0.9 V, 250 MSps)
+    /// by actually running the cycle-accurate engine on a
+    /// representative stimulus (activity-annotated, like the paper's
+    /// switching-activity post-layout flow).
+    pub fn nominal(w: &QGruWeights, hard_act: bool) -> AsicSpec {
+        AsicSpec::at_operating_point(w, hard_act, 2.0, 0.9)
+    }
+
+    /// Spec at an arbitrary (f_clk, V) point; fs tracks f_clk / II.
+    pub fn at_operating_point(w: &QGruWeights, hard_act: bool, f_clk_ghz: f64, v: f64) -> AsicSpec {
+        let cfg = HwConfig { f_clk_ghz, ..HwConfig::default() };
+        let spec = w.spec;
+        let act_impl = if hard_act {
+            ActImpl::Hard
+        } else {
+            ActImpl::Lut(LutTables::default_for(spec))
+        };
+        let act_kind = if hard_act {
+            ActKind::Hard
+        } else {
+            ActKind::Lut(LutTables::default_for(spec))
+        };
+
+        // representative stimulus: amplitude-realistic random codes
+        let mut sim = CycleAccurateEngine::new(w, act_impl, cfg);
+        let mut rng = Rng::new(0xD19);
+        let amp = (0.6 * spec.scale()) as i64;
+        let stim: Vec<[i32; 2]> = (0..2048)
+            .map(|_| [rng.int_in(-amp, amp) as i32, rng.int_in(-amp, amp) as i32])
+            .collect();
+        sim.run_codes(&stim).expect("sim run");
+
+        let dims = ModelDims { features: w.features, hidden: w.hidden };
+        let fs_msps = fsm::max_sample_rate_msps(f_clk_ghz);
+        let energy = EnergyModel::default();
+        let power = energy.power(sim.stats(), &act_kind, fs_msps, f_clk_ghz, v);
+        let area = AreaModel::default().area(&cfg, 502, w.hidden, &act_kind);
+
+        AsicSpec {
+            f_clk_ghz,
+            v,
+            fs_msps,
+            ops_per_sample: ops::ops_per_sample(dims).total(),
+            latency_ns: fsm::latency_ns(f_clk_ghz),
+            throughput_gops: ops::gops(dims, fs_msps),
+            power,
+            area,
+        }
+    }
+
+    /// GOPS/W.
+    pub fn power_efficiency_gops_w(&self) -> f64 {
+        self.throughput_gops / (self.power.total_mw() * 1e-3)
+    }
+
+    /// GOPS/mm².
+    pub fn area_efficiency_gops_mm2(&self) -> f64 {
+        self.throughput_gops / self.area.total_mm2()
+    }
+
+    /// TOPS/W/mm² — the paper's headline PAE metric.
+    pub fn pae_tops_w_mm2(&self) -> f64 {
+        self.power_efficiency_gops_w() * 1e-3 / self.area.total_mm2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::QSpec;
+
+    fn weights() -> QGruWeights {
+        let mut rng = Rng::new(11);
+        let spec = QSpec::Q12;
+        let bound = (0.3 * spec.scale()) as i64;
+        let mut gen =
+            |n: usize| -> Vec<i32> { (0..n).map(|_| rng.int_in(-bound, bound) as i32).collect() };
+        QGruWeights {
+            hidden: 10,
+            features: 4,
+            spec,
+            w_ih: gen(120),
+            b_ih: gen(30),
+            w_hh: gen(300),
+            b_hh: gen(30),
+            w_fc: gen(20),
+            b_fc: gen(2),
+        }
+    }
+
+    #[test]
+    fn fig5_headline_numbers() {
+        let s = AsicSpec::nominal(&weights(), true);
+        // paper: 250 MSps, 7.5 ns, 256.5 GOPS, 195 mW, 0.2 mm²,
+        // 1315 GOPS/W, 6.58 TOPS/W/mm²
+        assert!((s.fs_msps - 250.0).abs() < 1e-9);
+        assert!((s.latency_ns - 7.5).abs() < 1e-12);
+        assert!((s.throughput_gops - 256.5).abs() / 256.5 < 0.04);
+        assert!((s.power.total_mw() - 195.0).abs() / 195.0 < 0.10, "power {}", s.power.total_mw());
+        assert!((s.area.total_mm2() - 0.2).abs() / 0.2 < 0.10, "area {}", s.area.total_mm2());
+        let pe = s.power_efficiency_gops_w();
+        assert!((pe - 1315.4).abs() / 1315.4 < 0.15, "GOPS/W {pe}");
+        let pae = s.pae_tops_w_mm2();
+        assert!((pae - 6.58).abs() / 6.58 < 0.25, "PAE {pae}");
+    }
+
+    #[test]
+    fn voltage_scaling_improves_efficiency() {
+        let hi = AsicSpec::at_operating_point(&weights(), true, 2.0, 0.9);
+        let lo = AsicSpec::at_operating_point(&weights(), true, 1.0, 0.65);
+        assert!(lo.power_efficiency_gops_w() > hi.power_efficiency_gops_w());
+        assert!(lo.throughput_gops < hi.throughput_gops);
+    }
+
+    #[test]
+    fn lut_activation_worse_pae() {
+        let hard = AsicSpec::nominal(&weights(), true);
+        let lut = AsicSpec::nominal(&weights(), false);
+        assert!(lut.pae_tops_w_mm2() < hard.pae_tops_w_mm2());
+    }
+}

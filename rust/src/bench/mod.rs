@@ -1,0 +1,95 @@
+//! Criterion-free benchmark harness (offline build has no criterion).
+//!
+//! `time_it` runs a closure with warmup and repeated timed iterations,
+//! reporting mean/median/min and a robust std estimate. Used by every
+//! `benches/` target (declared with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Result of a timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    /// median absolute deviation (robust spread)
+    pub mad: Duration,
+}
+
+impl BenchResult {
+    /// Throughput given work items per iteration.
+    pub fn per_second(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} {:>10.3?} mean  {:>10.3?} median  {:>10.3?} min  (n={})",
+            self.name, self.mean, self.median, self.min, self.iters
+        )
+    }
+}
+
+/// Time `f`, auto-scaling iteration count to fill ~`budget`.
+pub fn time_it<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(100));
+    let target_iters = (budget.as_secs_f64() / once.as_secs_f64()).clamp(3.0, 1000.0) as usize;
+
+    let mut times: Vec<Duration> = Vec::with_capacity(target_iters);
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed());
+    }
+    times.sort();
+    let n = times.len();
+    let median = times[n / 2];
+    let min = times[0];
+    let mean = times.iter().sum::<Duration>() / n as u32;
+    let mut devs: Vec<Duration> = times
+        .iter()
+        .map(|&t| if t > median { t - median } else { median - t })
+        .collect();
+    devs.sort();
+    let mad = devs[n / 2];
+    BenchResult { name: name.to_string(), iters: n, mean, median, min, mad }
+}
+
+/// Convenience wrapper printing the result.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let r = time_it(name, Duration::from_millis(300), f);
+    println!("{}", r.summary());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = time_it("spin", Duration::from_millis(20), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.min <= r.median && r.median <= r.mean * 3);
+    }
+
+    #[test]
+    fn per_second_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_millis(10),
+            median: Duration::from_millis(10),
+            min: Duration::from_millis(10),
+            mad: Duration::ZERO,
+        };
+        assert!((r.per_second(100.0) - 10_000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,29 @@
+//! Debug utility: run an HLO-text module that maps s32[N] -> (s32[N],)
+//! with a comma-separated input vector, print the output. Used to
+//! bisect xla_extension miscompilations of jax-lowered constructs.
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let path = args.next().expect("usage: run_hlo_i32 <hlo.txt> <v0,v1,...>");
+    let vals: Vec<i32> = args
+        .next()
+        .expect("need input csv")
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(&path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    let lit = match args.next() {
+        Some(shape) => {
+            let dims: Vec<i64> = shape.split(',').map(|s| s.parse().unwrap()).collect();
+            xla::Literal::vec1(&vals).reshape(&dims)?
+        }
+        None => xla::Literal::vec1(&vals),
+    };
+    let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+    let out = result.to_tuple1()?;
+    println!("{:?}", out.to_vec::<i32>()?);
+    Ok(())
+}

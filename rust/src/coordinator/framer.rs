@@ -1,0 +1,117 @@
+//! Sample-stream framing: cut a continuous I/Q stream into fixed-size
+//! frames for the engines (the HLO executable has a static frame
+//! shape; the native engines accept any size but batch better on
+//! frames). The last frame is zero-padded and the valid length
+//! remembered so the sink can trim.
+
+/// A frame of samples plus its valid prefix length.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub seq: u64,
+    pub data: Vec<[f64; 2]>,
+    pub valid: usize,
+}
+
+/// Stateful framer.
+pub struct Framer {
+    frame_len: usize,
+    buf: Vec<[f64; 2]>,
+    next_seq: u64,
+}
+
+impl Framer {
+    pub fn new(frame_len: usize) -> Framer {
+        assert!(frame_len > 0);
+        Framer { frame_len, buf: Vec::with_capacity(frame_len), next_seq: 0 }
+    }
+
+    /// Push samples; emit every completed frame.
+    pub fn push(&mut self, samples: &[[f64; 2]]) -> Vec<Frame> {
+        let mut out = Vec::new();
+        for &s in samples {
+            self.buf.push(s);
+            if self.buf.len() == self.frame_len {
+                out.push(self.emit(self.frame_len));
+            }
+        }
+        out
+    }
+
+    /// Flush a final partial frame (zero-padded).
+    pub fn flush(&mut self) -> Option<Frame> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let valid = self.buf.len();
+        self.buf.resize(self.frame_len, [0.0, 0.0]);
+        Some(self.emit(valid))
+    }
+
+    fn emit(&mut self, valid: usize) -> Frame {
+        let data = std::mem::replace(&mut self.buf, Vec::with_capacity(self.frame_len));
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        Frame { seq, data, valid }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples(n: usize) -> Vec<[f64; 2]> {
+        (0..n).map(|i| [i as f64, -(i as f64)]).collect()
+    }
+
+    #[test]
+    fn exact_multiple_no_flush_needed() {
+        let mut f = Framer::new(4);
+        let frames = f.push(&samples(8));
+        assert_eq!(frames.len(), 2);
+        assert!(f.flush().is_none());
+        assert_eq!(frames[0].seq, 0);
+        assert_eq!(frames[1].seq, 1);
+        assert_eq!(frames[1].data[0], [4.0, -4.0]);
+        assert_eq!(frames[0].valid, 4);
+    }
+
+    #[test]
+    fn ragged_tail_padded() {
+        let mut f = Framer::new(4);
+        let frames = f.push(&samples(6));
+        assert_eq!(frames.len(), 1);
+        let tail = f.flush().unwrap();
+        assert_eq!(tail.valid, 2);
+        assert_eq!(tail.data.len(), 4);
+        assert_eq!(tail.data[2], [0.0, 0.0]);
+        assert_eq!(tail.seq, 1);
+    }
+
+    #[test]
+    fn incremental_pushes_equivalent_to_bulk() {
+        let mut a = Framer::new(5);
+        let mut fa = Vec::new();
+        for chunk in samples(23).chunks(3) {
+            fa.extend(a.push(chunk));
+        }
+        fa.extend(a.flush());
+        let mut b = Framer::new(5);
+        let mut fb = b.push(&samples(23));
+        fb.extend(b.flush());
+        assert_eq!(fa.len(), fb.len());
+        for (x, y) in fa.iter().zip(&fb) {
+            assert_eq!(x.data, y.data);
+            assert_eq!(x.valid, y.valid);
+        }
+    }
+
+    #[test]
+    fn conservation() {
+        // total valid samples across frames == input length
+        let mut f = Framer::new(7);
+        let mut frames = f.push(&samples(40));
+        frames.extend(f.flush());
+        let total: usize = frames.iter().map(|fr| fr.valid).sum();
+        assert_eq!(total, 40);
+    }
+}

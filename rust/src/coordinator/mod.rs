@@ -1,0 +1,20 @@
+//! L3 coordinator — the streaming transmit-chain runtime around the
+//! accelerator (the "DBE" of the paper's introduction).
+//!
+//! A transmit stream flows source -> framer -> DPD engine -> sink
+//! through bounded channels (blocking = backpressure); multiple
+//! independent streams model the mMIMO fan-out (one DPD-NeuralEngine
+//! macro per antenna). Engines are selectable per stream:
+//! native f64 GRU, bit-exact fixed-point, the cycle-accurate ASIC
+//! simulator, or the AOT HLO executed via PJRT.
+//!
+//! Python never runs here; the HLO path executes the build-time
+//! artifacts through the embedded PJRT CPU client.
+
+pub mod framer;
+pub mod pipeline;
+pub mod stats;
+
+pub use framer::Framer;
+pub use pipeline::{Coordinator, CoordinatorConfig, EngineKind, StreamOutput};
+pub use stats::PipelineStats;

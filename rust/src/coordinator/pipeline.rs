@@ -1,0 +1,392 @@
+//! The multi-stream streaming pipeline.
+//!
+//! Per stream, three stages run on their own threads, linked by
+//! *bounded* channels (`sync_channel`) so a slow stage backpressures
+//! the producer instead of buffering unboundedly:
+//!
+//! ```text
+//!   source thread -> [frames] -> DPD worker -> [frames] -> sink
+//! ```
+//!
+//! Engines are constructed inside the worker thread (the PJRT client is
+//! not Send). Multiple streams run fully in parallel — the mMIMO
+//! deployment shape, one engine instance per antenna.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::framer::{Frame, Framer};
+use super::stats::{LatencyAgg, PipelineStats};
+use crate::dpd::qgru::{ActKind, QGruDpd};
+use crate::dpd::weights::{GruWeights, QGruWeights};
+use crate::dpd::{Dpd, GruDpd};
+use crate::fixed::QSpec;
+use crate::runtime::{HloGruEngine, Manifest};
+
+/// Which DPD engine the worker instantiates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// f64 GRU (float reference)
+    NativeF64,
+    /// bit-exact Q2.10 fixed-point (the chip's functional model)
+    Fixed,
+    /// cycle-accurate ASIC simulator
+    CycleSim,
+    /// AOT HLO via the PJRT CPU client (frame-based)
+    Hlo,
+}
+
+/// Pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub engine: EngineKind,
+    /// frame length for the framer (HLO engines override with their
+    /// compiled frame size)
+    pub frame_len: usize,
+    /// bounded-channel depth (frames in flight per link)
+    pub queue_depth: usize,
+    /// artifact tree (None = discover)
+    pub artifacts: Option<PathBuf>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            engine: EngineKind::Fixed,
+            frame_len: 2048,
+            queue_depth: 4,
+            artifacts: None,
+        }
+    }
+}
+
+/// Output of one stream.
+#[derive(Debug)]
+pub struct StreamOutput {
+    pub iq: Vec<[f64; 2]>,
+    pub stats: PipelineStats,
+}
+
+/// The coordinator: runs N independent streams through the pipeline.
+pub struct Coordinator {
+    pub cfg: CoordinatorConfig,
+}
+
+enum Msg {
+    Frame(Frame, Instant),
+    Eof,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Coordinator {
+        Coordinator { cfg }
+    }
+
+    /// Run one stream to completion.
+    pub fn run_stream(&self, input: &[[f64; 2]]) -> Result<StreamOutput> {
+        let outs = self.run_streams(vec![input.to_vec()])?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    /// Run multiple independent streams in parallel (mMIMO shape).
+    pub fn run_streams(&self, inputs: Vec<Vec<[f64; 2]>>) -> Result<Vec<StreamOutput>> {
+        let mut handles = Vec::new();
+        for input in inputs {
+            let cfg = self.cfg.clone();
+            handles.push(std::thread::spawn(move || run_one(cfg, input)));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("stream thread panicked"))
+            .collect()
+    }
+}
+
+fn build_dyn_engine(cfg: &CoordinatorConfig) -> Result<Box<dyn Dpd>> {
+    let m = Manifest::discover(cfg.artifacts.as_deref())?;
+    match cfg.engine {
+        EngineKind::NativeF64 => {
+            let w = GruWeights::load(&m.weights_float)?;
+            Ok(Box::new(GruDpd::new(w)))
+        }
+        EngineKind::Fixed => {
+            let spec = QSpec::new(m.qspec_bits)?;
+            let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
+            Ok(Box::new(QGruDpd::new(w, ActKind::Hard)))
+        }
+        EngineKind::CycleSim => {
+            let spec = QSpec::new(m.qspec_bits)?;
+            let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
+            Ok(Box::new(CycleSimDpd::new(&w)))
+        }
+        EngineKind::Hlo => unreachable!("HLO handled separately"),
+    }
+}
+
+/// Adapter: the cycle-accurate simulator as a `Dpd`.
+struct CycleSimDpd {
+    sim: crate::accel::CycleAccurateEngine,
+    spec: QSpec,
+}
+
+impl CycleSimDpd {
+    fn new(w: &QGruWeights) -> CycleSimDpd {
+        CycleSimDpd {
+            sim: crate::accel::CycleAccurateEngine::new(
+                w,
+                crate::accel::act_unit::ActImpl::Hard,
+                crate::accel::fsm::HwConfig::default(),
+            ),
+            spec: w.spec,
+        }
+    }
+}
+
+impl Dpd for CycleSimDpd {
+    fn process(&mut self, iq: [f64; 2]) -> [f64; 2] {
+        let codes = [self.spec.quantize(iq[0]), self.spec.quantize(iq[1])];
+        let y = self.sim.step(codes).expect("sim step");
+        [self.spec.dequantize(y[0]), self.spec.dequantize(y[1])]
+    }
+    fn reset(&mut self) {
+        self.sim.reset();
+    }
+    fn name(&self) -> &'static str {
+        "cyclesim"
+    }
+}
+
+fn run_one(cfg: CoordinatorConfig, input: Vec<[f64; 2]>) -> Result<StreamOutput> {
+    // frame length: HLO engines are shape-specialized
+    let (frame_len, hlo_entry) = if cfg.engine == EngineKind::Hlo {
+        let m = Manifest::discover(cfg.artifacts.as_deref())?;
+        let e = m
+            .best_int_hlo()
+            .context("no integer HLO artifact")?
+            .clone();
+        ((e.time), Some((m, e)))
+    } else {
+        (cfg.frame_len, None)
+    };
+
+    let t_start = Instant::now();
+    let n_in = input.len() as u64;
+    let (tx_work, rx_work): (SyncSender<Msg>, Receiver<Msg>) = sync_channel(cfg.queue_depth);
+    let (tx_done, rx_done): (SyncSender<Msg>, Receiver<Msg>) = sync_channel(cfg.queue_depth);
+
+    // source + framer thread
+    let src = std::thread::spawn(move || -> Result<()> {
+        let mut framer = Framer::new(frame_len);
+        for chunk in input.chunks(1024) {
+            for fr in framer.push(chunk) {
+                tx_work.send(Msg::Frame(fr, Instant::now())).ok();
+            }
+        }
+        if let Some(fr) = framer.flush() {
+            tx_work.send(Msg::Frame(fr, Instant::now())).ok();
+        }
+        tx_work.send(Msg::Eof).ok();
+        Ok(())
+    });
+
+    // DPD worker thread (engine built here; PJRT client is !Send)
+    let worker_cfg = cfg.clone();
+    let worker = std::thread::spawn(move || -> Result<Duration> {
+        let mut busy = Duration::ZERO;
+        match hlo_entry {
+            Some((m, e)) => {
+                let client = xla::PjRtClient::cpu()?;
+                let spec = QSpec::new(e.bits)?;
+                let mut eng =
+                    HloGruEngine::load(&client, &m.hlo_path(&e), e.batch, e.time, true, Some(spec))?;
+                while let Ok(Msg::Frame(mut fr, t0)) = rx_work.recv() {
+                    let t = Instant::now();
+                    let codes: Vec<[i32; 2]> = fr
+                        .data
+                        .iter()
+                        .map(|&[i, q]| [spec.quantize(i), spec.quantize(q)])
+                        .collect();
+                    let y = eng.run_frame_codes(&codes)?;
+                    for (dst, &[i, q]) in fr.data.iter_mut().zip(&y) {
+                        *dst = [spec.dequantize(i), spec.dequantize(q)];
+                    }
+                    busy += t.elapsed();
+                    tx_done.send(Msg::Frame(fr, t0)).ok();
+                }
+                tx_done.send(Msg::Eof).ok();
+            }
+            None => {
+                let mut eng = build_dyn_engine(&worker_cfg)?;
+                eng.reset();
+                while let Ok(Msg::Frame(mut fr, t0)) = rx_work.recv() {
+                    let t = Instant::now();
+                    for s in fr.data.iter_mut() {
+                        *s = eng.process(*s);
+                    }
+                    busy += t.elapsed();
+                    tx_done.send(Msg::Frame(fr, t0)).ok();
+                }
+                tx_done.send(Msg::Eof).ok();
+            }
+        }
+        Ok(busy)
+    });
+
+    // sink (this thread)
+    let mut out: Vec<[f64; 2]> = Vec::new();
+    let mut frames = 0u64;
+    let mut lat = LatencyAgg::default();
+    let mut expected_seq = 0u64;
+    while let Ok(msg) = rx_done.recv() {
+        match msg {
+            Msg::Frame(fr, t0) => {
+                anyhow::ensure!(fr.seq == expected_seq, "frame reordering detected");
+                expected_seq += 1;
+                frames += 1;
+                lat.record(t0.elapsed());
+                out.extend_from_slice(&fr.data[..fr.valid]);
+            }
+            Msg::Eof => break,
+        }
+    }
+
+    src.join().expect("source panicked")?;
+    let busy = worker.join().expect("worker panicked")?;
+    let wall = t_start.elapsed();
+    let stats = PipelineStats {
+        samples_in: n_in,
+        samples_out: out.len() as u64,
+        frames,
+        wall,
+        dpd_busy: busy,
+        lat_mean: lat.mean(),
+        lat_max: lat.max(),
+    };
+    Ok(StreamOutput { iq: out, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn artifacts_present() -> bool {
+        Manifest::discover(None).is_ok()
+    }
+
+    fn signal(n: usize, seed: u64) -> Vec<[f64; 2]> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect()
+    }
+
+    #[test]
+    fn conservation_and_order_fixed_engine() {
+        if !artifacts_present() {
+            eprintln!("skipping (no artifacts)");
+            return;
+        }
+        let c = Coordinator::new(CoordinatorConfig {
+            engine: EngineKind::Fixed,
+            frame_len: 100,
+            queue_depth: 2,
+            artifacts: None,
+        });
+        let input = signal(1234, 1);
+        let out = c.run_stream(&input).unwrap();
+        assert_eq!(out.iq.len(), 1234);
+        assert_eq!(out.stats.samples_in, 1234);
+        assert_eq!(out.stats.samples_out, 1234);
+        assert_eq!(out.stats.frames, 13);
+    }
+
+    #[test]
+    fn pipeline_output_equals_direct_engine_run() {
+        if !artifacts_present() {
+            eprintln!("skipping (no artifacts)");
+            return;
+        }
+        let input = signal(777, 2);
+        let c = Coordinator::new(CoordinatorConfig {
+            engine: EngineKind::Fixed,
+            frame_len: 128,
+            queue_depth: 3,
+            artifacts: None,
+        });
+        let piped = c.run_stream(&input).unwrap();
+
+        // direct: same engine, continuous stream (no reset per frame in
+        // the pipeline either — state carries across frames)
+        let m = Manifest::discover(None).unwrap();
+        let spec = QSpec::new(m.qspec_bits).unwrap();
+        let w = QGruWeights::load_params_int(&m.weights_main, spec).unwrap();
+        let mut eng = QGruDpd::new(w, ActKind::Hard);
+        let direct = eng.run(&input);
+        assert_eq!(piped.iq, direct);
+    }
+
+    #[test]
+    fn multi_stream_isolation() {
+        if !artifacts_present() {
+            eprintln!("skipping (no artifacts)");
+            return;
+        }
+        let c = Coordinator::new(CoordinatorConfig {
+            engine: EngineKind::Fixed,
+            frame_len: 64,
+            queue_depth: 2,
+            artifacts: None,
+        });
+        let a = signal(500, 3);
+        let b = signal(500, 4);
+        let joint = c.run_streams(vec![a.clone(), b.clone()]).unwrap();
+        let solo_a = c.run_stream(&a).unwrap();
+        let solo_b = c.run_stream(&b).unwrap();
+        assert_eq!(joint[0].iq, solo_a.iq);
+        assert_eq!(joint[1].iq, solo_b.iq);
+    }
+
+    #[test]
+    fn cycle_sim_engine_matches_fixed() {
+        if !artifacts_present() {
+            eprintln!("skipping (no artifacts)");
+            return;
+        }
+        let input = signal(300, 5);
+        let fixed = Coordinator::new(CoordinatorConfig {
+            engine: EngineKind::Fixed,
+            frame_len: 64,
+            ..Default::default()
+        })
+        .run_stream(&input)
+        .unwrap();
+        let sim = Coordinator::new(CoordinatorConfig {
+            engine: EngineKind::CycleSim,
+            frame_len: 64,
+            ..Default::default()
+        })
+        .run_stream(&input)
+        .unwrap();
+        assert_eq!(fixed.iq, sim.iq);
+    }
+
+    #[test]
+    fn backpressure_small_queue_still_completes() {
+        if !artifacts_present() {
+            eprintln!("skipping (no artifacts)");
+            return;
+        }
+        let c = Coordinator::new(CoordinatorConfig {
+            engine: EngineKind::Fixed,
+            frame_len: 32,
+            queue_depth: 1,
+            artifacts: None,
+        });
+        let input = signal(2000, 6);
+        let out = c.run_stream(&input).unwrap();
+        assert_eq!(out.iq.len(), 2000);
+        assert!(out.stats.engine_msps() > 0.0);
+    }
+}

@@ -1,0 +1,107 @@
+//! Pipeline instrumentation: per-stage counters and latency tracking.
+
+use std::time::Duration;
+
+/// Aggregated statistics of one stream's pipeline run.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineStats {
+    pub samples_in: u64,
+    pub samples_out: u64,
+    pub frames: u64,
+    /// wall-clock of the whole stream
+    pub wall: Duration,
+    /// time the DPD stage spent processing
+    pub dpd_busy: Duration,
+    /// per-frame latency (enqueue -> processed)
+    pub lat_mean: Duration,
+    pub lat_max: Duration,
+}
+
+impl PipelineStats {
+    /// End-to-end throughput in Msamples/s.
+    pub fn throughput_msps(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.samples_out as f64 / self.wall.as_secs_f64() / 1e6
+    }
+
+    /// DPD-stage-only throughput (what the engine itself sustains).
+    pub fn engine_msps(&self) -> f64 {
+        if self.dpd_busy.is_zero() {
+            return 0.0;
+        }
+        self.samples_out as f64 / self.dpd_busy.as_secs_f64() / 1e6
+    }
+
+    /// Real-time factor against the paper's 250 MSps line rate.
+    pub fn realtime_factor_vs_250msps(&self) -> f64 {
+        self.engine_msps() / 250.0
+    }
+}
+
+/// Online latency aggregator.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyAgg {
+    n: u64,
+    sum: Duration,
+    max: Duration,
+}
+
+impl LatencyAgg {
+    pub fn record(&mut self, d: Duration) {
+        self.n += 1;
+        self.sum += d;
+        if d > self.max {
+            self.max = d;
+        }
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.n == 0 {
+            Duration::ZERO
+        } else {
+            self.sum / self.n as u32
+        }
+    }
+
+    pub fn max(&self) -> Duration {
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let s = PipelineStats {
+            samples_in: 1_000_000,
+            samples_out: 1_000_000,
+            frames: 10,
+            wall: Duration::from_millis(100),
+            dpd_busy: Duration::from_millis(50),
+            ..Default::default()
+        };
+        assert!((s.throughput_msps() - 10.0).abs() < 1e-9);
+        assert!((s.engine_msps() - 20.0).abs() < 1e-9);
+        assert!((s.realtime_factor_vs_250msps() - 0.08).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_agg() {
+        let mut a = LatencyAgg::default();
+        a.record(Duration::from_micros(10));
+        a.record(Duration::from_micros(30));
+        assert_eq!(a.mean(), Duration::from_micros(20));
+        assert_eq!(a.max(), Duration::from_micros(30));
+    }
+
+    #[test]
+    fn zero_division_safe() {
+        let s = PipelineStats::default();
+        assert_eq!(s.throughput_msps(), 0.0);
+        assert_eq!(s.engine_msps(), 0.0);
+    }
+}

@@ -1,0 +1,258 @@
+//! Generalized Memory Polynomial DPD — the classical baseline the
+//! paper's Table II competitors implement ([13][15] GMP, [14] MP), and
+//! our Fig. 3/Table II comparison baseline.
+//!
+//!   F(x)(n) = sum_{k odd <= Ka} sum_{m < Ma} a_{k,m} x(n-m) |x(n-m)|^{k-1}
+//!           + sum_{k odd, 3<=k<=Kb} sum_{m < Mb} sum_{l=1..Lb}
+//!               b_{k,m,l} x(n-m) |x(n-m-l)|^{k-1}        (lagging cross terms)
+//!
+//! Fitting is **indirect learning** (ILA): on a PA in/out capture
+//! (x, y), solve the ridge LS problem F(y/g) ~= x, then deploy F as
+//! the predistorter. This is exactly how the FPGA baselines are
+//! trained in practice.
+
+use anyhow::Result;
+
+use super::Dpd;
+use crate::linalg::{ridge_lstsq, CMat};
+use crate::util::C64;
+
+/// GMP structure hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct GmpConfig {
+    /// max aligned order (odd), e.g. 9
+    pub k_max: usize,
+    /// aligned memory depth
+    pub mem: usize,
+    /// max cross-term order (odd, >=3; 0 disables cross terms)
+    pub cross_k: usize,
+    /// cross-term memory depth
+    pub cross_m: usize,
+    /// number of envelope lags (1..=cross_lags)
+    pub cross_lags: usize,
+    /// ridge regularization
+    pub lambda: f64,
+}
+
+impl Default for GmpConfig {
+    fn default() -> Self {
+        // ~36 complex parameters, comparable to Table II's ref [13]
+        GmpConfig { k_max: 9, mem: 4, cross_k: 5, cross_m: 2, cross_lags: 2, lambda: 1e-9 }
+    }
+}
+
+impl GmpConfig {
+    /// Number of complex coefficients.
+    pub fn n_terms(&self) -> usize {
+        let aligned = ((self.k_max + 1) / 2) * self.mem;
+        let cross = if self.cross_k >= 3 {
+            ((self.cross_k - 1) / 2) * self.cross_m * self.cross_lags
+        } else {
+            0
+        };
+        aligned + cross
+    }
+
+    /// Real-valued parameter count (for complexity comparisons).
+    pub fn n_params_real(&self) -> usize {
+        2 * self.n_terms()
+    }
+}
+
+/// Fitted GMP predistorter.
+pub struct GmpDpd {
+    pub cfg: GmpConfig,
+    pub coeffs: Vec<C64>,
+    /// streaming delay line of recent inputs (newest first)
+    dline: Vec<C64>,
+}
+
+fn basis_row(cfg: &GmpConfig, window: &[C64]) -> Vec<C64> {
+    // window[d] = x(n-d), d = 0..depth
+    let mut row = Vec::with_capacity(cfg.n_terms());
+    let mut k = 1;
+    while k <= cfg.k_max {
+        for m in 0..cfg.mem {
+            let xm = window[m];
+            let e = xm.abs();
+            row.push(xm.scale(e.powi((k - 1) as i32)));
+        }
+        k += 2;
+    }
+    if cfg.cross_k >= 3 {
+        let mut k = 3;
+        while k <= cfg.cross_k {
+            for m in 0..cfg.cross_m {
+                for l in 1..=cfg.cross_lags {
+                    let xm = window[m];
+                    let e = window[m + l].abs();
+                    row.push(xm.scale(e.powi((k - 1) as i32)));
+                }
+            }
+            k += 2;
+        }
+    }
+    row
+}
+
+impl GmpDpd {
+    /// Maximum delay the basis looks back.
+    fn depth(cfg: &GmpConfig) -> usize {
+        let aligned = cfg.mem;
+        let cross = if cfg.cross_k >= 3 { cfg.cross_m + cfg.cross_lags } else { 0 };
+        aligned.max(cross).max(1)
+    }
+
+    /// Indirect-learning fit on a PA capture: input `x`, output `y`,
+    /// target gain `g` (the post-inverse is fit on u = y/g).
+    pub fn fit_ila(cfg: &GmpConfig, x: &[[f64; 2]], y: &[[f64; 2]], g: C64) -> Result<GmpDpd> {
+        anyhow::ensure!(x.len() == y.len(), "length mismatch");
+        let depth = Self::depth(cfg);
+        let n = x.len();
+        anyhow::ensure!(n > depth + 16 * cfg.n_terms(), "capture too short for fit");
+        let ginv = g.recip();
+        let u: Vec<C64> = y.iter().map(|&[re, im]| C64::new(re, im) * ginv).collect();
+
+        let rows = n - depth;
+        let mut mat = CMat::zeros(rows, cfg.n_terms());
+        let mut rhs = Vec::with_capacity(rows);
+        let mut window = vec![C64::ZERO; depth + 1];
+        for i in depth..n {
+            for (d, w) in window.iter_mut().enumerate() {
+                *w = u[i - d];
+            }
+            let row = basis_row(cfg, &window);
+            let r = i - depth;
+            mat.data[r * cfg.n_terms()..(r + 1) * cfg.n_terms()].copy_from_slice(&row);
+            rhs.push(C64::new(x[i][0], x[i][1]));
+        }
+        let coeffs = ridge_lstsq(&mat, &rhs, cfg.lambda)?;
+        Ok(GmpDpd { cfg: cfg.clone(), coeffs, dline: vec![C64::ZERO; depth + 1] })
+    }
+
+    /// Post-fit residual NMSE of the ILA regression (dB) on a capture.
+    pub fn fit_residual_db(&self, x: &[[f64; 2]], y: &[[f64; 2]], g: C64) -> f64 {
+        let depth = Self::depth(&self.cfg);
+        let ginv = g.recip();
+        let u: Vec<C64> = y.iter().map(|&[re, im]| C64::new(re, im) * ginv).collect();
+        let mut window = vec![C64::ZERO; depth + 1];
+        let mut err = 0.0;
+        let mut refp = 0.0;
+        for i in depth..x.len() {
+            for (d, w) in window.iter_mut().enumerate() {
+                *w = u[i - d];
+            }
+            let row = basis_row(&self.cfg, &window);
+            let mut pred = C64::ZERO;
+            for (c, b) in self.coeffs.iter().zip(&row) {
+                pred += *c * *b;
+            }
+            let t = C64::new(x[i][0], x[i][1]);
+            err += (pred - t).norm_sq();
+            refp += t.norm_sq();
+        }
+        10.0 * (err / refp).log10()
+    }
+}
+
+impl Dpd for GmpDpd {
+    fn process(&mut self, iq: [f64; 2]) -> [f64; 2] {
+        // shift delay line (newest first)
+        for d in (1..self.dline.len()).rev() {
+            self.dline[d] = self.dline[d - 1];
+        }
+        self.dline[0] = C64::new(iq[0], iq[1]);
+        let row = basis_row(&self.cfg, &self.dline);
+        let mut y = C64::ZERO;
+        for (c, b) in self.coeffs.iter().zip(&row) {
+            y += *c * *b;
+        }
+        [y.re, y.im]
+    }
+
+    fn reset(&mut self) {
+        self.dline.iter_mut().for_each(|v| *v = C64::ZERO);
+    }
+
+    fn name(&self) -> &'static str {
+        "gmp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::acpr::{acpr_db, AcprConfig};
+    use crate::metrics::evm::evm_db_nmse;
+    use crate::pa::{PaSpec, RappMemPa};
+    use crate::signal::ofdm::{OfdmConfig, OfdmModulator};
+
+    #[test]
+    fn term_count() {
+        let cfg = GmpConfig::default();
+        // aligned: 5 orders (1,3,5,7,9) x 4 mem = 20; cross: (3,5) x 2 x 2 = 8
+        assert_eq!(cfg.n_terms(), 28);
+        assert_eq!(cfg.n_params_real(), 56);
+    }
+
+    #[test]
+    fn fit_rejects_short_capture() {
+        let cfg = GmpConfig::default();
+        let x = vec![[0.1, 0.0]; 64];
+        assert!(GmpDpd::fit_ila(&cfg, &x, &x, C64::ONE).is_err());
+    }
+
+    #[test]
+    fn identity_plant_learns_identity() {
+        // PA == identity: the fitted DPD must be ~identity too
+        let sig = OfdmModulator::generate(&OfdmConfig { n_symbols: 8, seed: 1, ..Default::default() }).unwrap();
+        let cfg = GmpConfig { k_max: 5, mem: 2, cross_k: 0, cross_m: 0, cross_lags: 0, lambda: 1e-9 };
+        let mut dpd = GmpDpd::fit_ila(&cfg, &sig.iq, &sig.iq, C64::ONE).unwrap();
+        let z = dpd.run(&sig.iq);
+        let evm = evm_db_nmse(&z, &sig.iq, C64::ONE);
+        assert!(evm < -55.0, "identity fit EVM {evm}");
+    }
+
+    #[test]
+    fn linearizes_the_gan_pa() {
+        // the headline sanity check: GMP-ILA improves ACPR by >12 dB
+        let sig = OfdmModulator::generate(&OfdmConfig { n_symbols: 24, seed: 2, ..Default::default() }).unwrap();
+        let pa = RappMemPa::new(PaSpec::ganlike());
+        let y = pa.run(&sig.iq);
+        let g = pa.spec.target_gain();
+        let cfg = GmpConfig::default();
+        let mut dpd = GmpDpd::fit_ila(&cfg, &sig.iq, &y, g).unwrap();
+
+        let before = acpr_db(&y, &AcprConfig::default()).unwrap().acpr_dbc;
+        let z = dpd.run(&sig.iq);
+        // clip to the DAC range like the real chain
+        let zc: Vec<[f64; 2]> = z
+            .iter()
+            .map(|&[i, q]| {
+                let e = (i * i + q * q).sqrt();
+                if e > 2.0 {
+                    [i * 2.0 / e, q * 2.0 / e]
+                } else {
+                    [i, q]
+                }
+            })
+            .collect();
+        let y2 = pa.run(&zc);
+        let after = acpr_db(&y2, &AcprConfig::default()).unwrap().acpr_dbc;
+        assert!(after < before - 12.0, "ACPR {before} -> {after}");
+        let evm = evm_db_nmse(&y2, &sig.iq, g);
+        assert!(evm < -35.0, "EVM {evm}");
+    }
+
+    #[test]
+    fn streaming_matches_batch() {
+        let sig = OfdmModulator::generate(&OfdmConfig { n_symbols: 4, seed: 3, ..Default::default() }).unwrap();
+        let pa = RappMemPa::new(PaSpec::ganlike());
+        let y = pa.run(&sig.iq);
+        let cfg = GmpConfig { k_max: 5, mem: 3, cross_k: 3, cross_m: 2, cross_lags: 1, lambda: 1e-9 };
+        let mut dpd = GmpDpd::fit_ila(&cfg, &sig.iq, &y, pa.spec.target_gain()).unwrap();
+        let a = dpd.run(&sig.iq);
+        let b = dpd.run(&sig.iq); // second run after reset must match
+        assert_eq!(a, b);
+    }
+}

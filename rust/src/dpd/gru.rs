@@ -1,0 +1,193 @@
+//! Float (f64) GRU-RNN DPD — the paper's model (Eq. 1-6 + the residual
+//! output and conditioned features, see DESIGN.md §Hardware-Adaptation).
+//! Reference implementation for accuracy comparisons; the quantized
+//! twin is `qgru`.
+
+use super::weights::GruWeights;
+use super::Dpd;
+
+/// Hardsigmoid, Eq. (7).
+#[inline]
+pub fn hardsigmoid(x: f64) -> f64 {
+    (x * 0.25 + 0.5).clamp(0.0, 1.0)
+}
+
+/// Hardtanh, Eq. (8).
+#[inline]
+pub fn hardtanh(x: f64) -> f64 {
+    x.clamp(-1.0, 1.0)
+}
+
+/// Streaming float GRU DPD engine.
+pub struct GruDpd {
+    w: GruWeights,
+    h: Vec<f64>,
+    /// scratch buffers to avoid per-sample allocation
+    gi: Vec<f64>,
+    gh: Vec<f64>,
+    /// column-major weight copies: the per-sample matvecs become
+    /// 3H-wide SIMD axpys over contiguous columns (§Perf)
+    wt_ih: Vec<f64>,
+    wt_hh: Vec<f64>,
+}
+
+impl GruDpd {
+    pub fn new(w: GruWeights) -> GruDpd {
+        let h = vec![0.0; w.hidden];
+        let g = vec![0.0; 3 * w.hidden];
+        let rows = 3 * w.hidden;
+        let mut wt_ih = vec![0.0; w.features * rows];
+        for r in 0..rows {
+            for c in 0..w.features {
+                wt_ih[c * rows + r] = w.w_ih[r * w.features + c];
+            }
+        }
+        let mut wt_hh = vec![0.0; w.hidden * rows];
+        for r in 0..rows {
+            for c in 0..w.hidden {
+                wt_hh[c * rows + r] = w.w_hh[r * w.hidden + c];
+            }
+        }
+        GruDpd { w, h, gi: g.clone(), gh: g, wt_ih, wt_hh }
+    }
+
+    pub fn weights(&self) -> &GruWeights {
+        &self.w
+    }
+
+    /// Eq. (1) + conditioning: [i, q, 4|x|^2, (4|x|^2)^2].
+    #[inline]
+    pub fn features(iq: [f64; 2]) -> [f64; 4] {
+        let p = 4.0 * (iq[0] * iq[0] + iq[1] * iq[1]);
+        [iq[0], iq[1], p, p * p]
+    }
+}
+
+impl Dpd for GruDpd {
+    fn process(&mut self, iq: [f64; 2]) -> [f64; 2] {
+        let hd = self.w.hidden;
+        let x = Self::features(iq);
+
+        // gi = W_ih x + b_ih ; gh = W_hh h + b_hh (column-major axpys)
+        let rows = 3 * hd;
+        self.gi.copy_from_slice(&self.w.b_ih);
+        for (c, &xv) in x.iter().enumerate() {
+            let col = &self.wt_ih[c * rows..(c + 1) * rows];
+            for (a, &wv) in self.gi.iter_mut().zip(col) {
+                *a += wv * xv;
+            }
+        }
+        self.gh.copy_from_slice(&self.w.b_hh);
+        for c in 0..hd {
+            let xv = self.h[c];
+            let col = &self.wt_hh[c * rows..(c + 1) * rows];
+            for (a, &wv) in self.gh.iter_mut().zip(col) {
+                *a += wv * xv;
+            }
+        }
+
+        // gates (Eq. 2-5)
+        for k in 0..hd {
+            let r = hardsigmoid(self.gi[k] + self.gh[k]);
+            let z = hardsigmoid(self.gi[hd + k] + self.gh[hd + k]);
+            let n = hardtanh(self.gi[2 * hd + k] + r * self.gh[2 * hd + k]);
+            self.h[k] = (1.0 - z) * n + z * self.h[k];
+        }
+
+        // FC + residual (Eq. 6)
+        let mut y = [self.w.b_fc[0] + iq[0], self.w.b_fc[1] + iq[1]];
+        for k in 0..hd {
+            y[0] += self.w.w_fc[k] * self.h[k];
+            y[1] += self.w.w_fc[hd + k] * self.h[k];
+        }
+        y
+    }
+
+    fn reset(&mut self) {
+        self.h.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    fn name(&self) -> &'static str {
+        "gru-f64"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_weights(seed: u64) -> GruWeights {
+        let mut rng = Rng::new(seed);
+        let hidden = 10;
+        let features = 4;
+        let bound = 1.0 / (hidden as f64).sqrt();
+        let mut gen = |n: usize| -> Vec<f64> { (0..n).map(|_| rng.range(-bound, bound)).collect() };
+        GruWeights {
+            hidden,
+            features,
+            w_ih: gen(3 * hidden * features),
+            b_ih: gen(3 * hidden),
+            w_hh: gen(3 * hidden * hidden),
+            b_hh: gen(3 * hidden),
+            w_fc: gen(2 * hidden),
+            b_fc: gen(2),
+            meta_bits: None,
+            meta_act: None,
+            meta_val_nmse_db: None,
+        }
+    }
+
+    #[test]
+    fn activations_match_equations() {
+        assert_eq!(hardsigmoid(3.0), 1.0);
+        assert_eq!(hardsigmoid(-3.0), 0.0);
+        assert_eq!(hardsigmoid(0.0), 0.5);
+        assert_eq!(hardsigmoid(1.0), 0.75);
+        assert_eq!(hardtanh(2.0), 1.0);
+        assert_eq!(hardtanh(-2.0), -1.0);
+        assert_eq!(hardtanh(0.3), 0.3);
+    }
+
+    #[test]
+    fn reset_makes_runs_reproducible() {
+        let mut dpd = GruDpd::new(rand_weights(1));
+        let mut rng = Rng::new(2);
+        let x: Vec<[f64; 2]> = (0..64).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect();
+        let a = dpd.run(&x);
+        let b = dpd.run(&x);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn recurrent_state_matters() {
+        let mut dpd = GruDpd::new(rand_weights(3));
+        let mut rng = Rng::new(4);
+        let x: Vec<[f64; 2]> = (0..32).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect();
+        let mut rev = x.clone();
+        rev.reverse();
+        let a = dpd.run(&x);
+        let mut b = dpd.run(&rev);
+        b.reverse();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn residual_at_zero_weights() {
+        // zero FC weights + zero bias -> y == x exactly (the residual path)
+        let mut w = rand_weights(5);
+        w.w_fc.iter_mut().for_each(|v| *v = 0.0);
+        w.b_fc.iter_mut().for_each(|v| *v = 0.0);
+        let mut dpd = GruDpd::new(w);
+        let x = [[0.1, -0.2], [0.3, 0.05]];
+        let y = dpd.run(&x);
+        assert_eq!(y, x.to_vec());
+    }
+
+    #[test]
+    fn features_definition() {
+        let f = GruDpd::features([0.3, -0.4]);
+        let p = 4.0 * 0.25;
+        assert_eq!(f, [0.3, -0.4, p, p * p]);
+    }
+}

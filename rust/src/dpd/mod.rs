@@ -1,0 +1,56 @@
+//! Digital pre-distortion engines.
+//!
+//! * [`gmp`] — the generalized-memory-polynomial baseline (paper
+//!   Table II's FPGA competitors all run GMP/MP models), fit by
+//!   indirect learning with the ridge LS solver;
+//! * [`gru`] — float GRU-RNN DPD (the paper's model, f64 reference
+//!   implementation);
+//! * [`qgru`] — the bit-exact Q2.f fixed-point GRU, mirroring the
+//!   canonical integer datapath (`kernels/ref.py::int_step`)
+//!   instruction for instruction — this is the functional model of
+//!   the silicon;
+//! * [`weights`] — loaders for the artifact weight JSONs.
+//!
+//! All engines implement the [`Dpd`] trait: a causal, streaming
+//! sample-in/sample-out predistorter.
+
+pub mod gmp;
+pub mod gru;
+pub mod qgru;
+pub mod weights;
+
+pub use gmp::GmpDpd;
+pub use gru::GruDpd;
+pub use qgru::QGruDpd;
+pub use weights::GruWeights;
+
+/// A causal streaming predistorter.
+pub trait Dpd {
+    /// Process one I/Q sample.
+    fn process(&mut self, iq: [f64; 2]) -> [f64; 2];
+
+    /// Reset internal state (hidden state / delay lines).
+    fn reset(&mut self);
+
+    /// Convenience: process a whole burst after a reset.
+    fn run(&mut self, x: &[[f64; 2]]) -> Vec<[f64; 2]> {
+        self.reset();
+        x.iter().map(|&s| self.process(s)).collect()
+    }
+
+    /// Engine label for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// The identity DPD (for "DPD off" rows in the tables).
+pub struct NoDpd;
+
+impl Dpd for NoDpd {
+    fn process(&mut self, iq: [f64; 2]) -> [f64; 2] {
+        iq
+    }
+    fn reset(&mut self) {}
+    fn name(&self) -> &'static str {
+        "none"
+    }
+}

@@ -1,0 +1,228 @@
+//! GRU weight containers + loaders for the artifact JSON schema
+//! (shared with `python/compile/model.py::params_to_jsonable`).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::fixed::QSpec;
+use crate::util::json::Json;
+
+/// Float GRU-DPD weights. Gate row order is [r; z; n] (rows 0..H,
+/// H..2H, 2H..3H) — the PyTorch convention the whole project uses.
+#[derive(Clone, Debug)]
+pub struct GruWeights {
+    pub hidden: usize,
+    pub features: usize,
+    /// (3H, F) row-major
+    pub w_ih: Vec<f64>,
+    pub b_ih: Vec<f64>,
+    /// (3H, H) row-major
+    pub w_hh: Vec<f64>,
+    pub b_hh: Vec<f64>,
+    /// (2, H) row-major
+    pub w_fc: Vec<f64>,
+    pub b_fc: Vec<f64>,
+    pub meta_bits: Option<u32>,
+    pub meta_act: Option<String>,
+    pub meta_val_nmse_db: Option<f64>,
+}
+
+/// Integer (Q2.f code) GRU weights.
+#[derive(Clone, Debug)]
+pub struct QGruWeights {
+    pub hidden: usize,
+    pub features: usize,
+    pub spec: QSpec,
+    pub w_ih: Vec<i32>,
+    pub b_ih: Vec<i32>,
+    pub w_hh: Vec<i32>,
+    pub b_hh: Vec<i32>,
+    pub w_fc: Vec<i32>,
+    pub b_fc: Vec<i32>,
+}
+
+fn tensor_f64(obj: &Json, key: &str, want_len: usize) -> Result<Vec<f64>> {
+    let t = obj.get(key)?;
+    let data = t.get("data")?.as_f64_vec()?;
+    ensure!(data.len() == want_len, "{key}: length {} != {want_len}", data.len());
+    Ok(data)
+}
+
+fn tensor_i32(obj: &Json, key: &str, want_len: usize) -> Result<Vec<i32>> {
+    let t = obj.get(key)?;
+    let data = t.get("data")?.as_i32_vec()?;
+    ensure!(data.len() == want_len, "{key}: length {} != {want_len}", data.len());
+    Ok(data)
+}
+
+fn dims(params: &Json) -> Result<(usize, usize)> {
+    let shape = params.get("w_ih")?.get("shape")?.as_arr()?;
+    let rows = shape[0].as_usize()?;
+    let features = shape[1].as_usize()?;
+    ensure!(rows % 3 == 0, "w_ih rows not divisible by 3");
+    Ok((rows / 3, features))
+}
+
+impl GruWeights {
+    /// Load from a weights JSON (`weights_float.json`, sweep entries,
+    /// or `weights_main.json` — anything with a `params` block).
+    pub fn load(path: &Path) -> Result<GruWeights> {
+        let j = Json::parse_file(path).context("loading GRU weights")?;
+        let params = j.get("params")?;
+        let (hidden, features) = dims(params)?;
+        let meta = j.opt("meta");
+        let meta_f64 = |k: &str| meta.and_then(|m| m.opt(k)).and_then(|v| v.as_f64().ok());
+        Ok(GruWeights {
+            hidden,
+            features,
+            w_ih: tensor_f64(params, "w_ih", 3 * hidden * features)?,
+            b_ih: tensor_f64(params, "b_ih", 3 * hidden)?,
+            w_hh: tensor_f64(params, "w_hh", 3 * hidden * hidden)?,
+            b_hh: tensor_f64(params, "b_hh", 3 * hidden)?,
+            w_fc: tensor_f64(params, "w_fc", 2 * hidden)?,
+            b_fc: tensor_f64(params, "b_fc", 2)?,
+            meta_bits: meta_f64("bits").map(|v| v as u32),
+            meta_act: meta
+                .and_then(|m| m.opt("act"))
+                .and_then(|v| v.as_str().ok().map(String::from)),
+            meta_val_nmse_db: meta_f64("val_nmse_db"),
+        })
+    }
+
+    /// Total parameter count (paper: 502).
+    pub fn n_params(&self) -> usize {
+        self.w_ih.len() + self.b_ih.len() + self.w_hh.len() + self.b_hh.len()
+            + self.w_fc.len() + self.b_fc.len()
+    }
+
+    /// Quantize to Q2.f codes with the canonical round-half-up rule —
+    /// bit-identical to python `ref.quantize_params`.
+    pub fn quantize(&self, spec: QSpec) -> QGruWeights {
+        let q = |v: &[f64]| -> Vec<i32> { v.iter().map(|&x| spec.quantize(x)).collect() };
+        QGruWeights {
+            hidden: self.hidden,
+            features: self.features,
+            spec,
+            w_ih: q(&self.w_ih),
+            b_ih: q(&self.b_ih),
+            w_hh: q(&self.w_hh),
+            b_hh: q(&self.b_hh),
+            w_fc: q(&self.w_fc),
+            b_fc: q(&self.b_fc),
+        }
+    }
+}
+
+impl QGruWeights {
+    /// Load the pre-quantized `params_int` block of `weights_main.json`
+    /// (written by aot.py; equals `GruWeights::quantize` of `params`).
+    pub fn load_params_int(path: &Path, spec: QSpec) -> Result<QGruWeights> {
+        let j = Json::parse_file(path).context("loading int GRU weights")?;
+        let params = j.get("params_int")?;
+        let (hidden, features) = dims(params)?;
+        Ok(QGruWeights {
+            hidden,
+            features,
+            spec,
+            w_ih: tensor_i32(params, "w_ih", 3 * hidden * features)?,
+            b_ih: tensor_i32(params, "b_ih", 3 * hidden)?,
+            w_hh: tensor_i32(params, "w_hh", 3 * hidden * hidden)?,
+            b_hh: tensor_i32(params, "b_hh", 3 * hidden)?,
+            w_fc: tensor_i32(params, "w_fc", 2 * hidden)?,
+            b_fc: tensor_i32(params, "b_fc", 2)?,
+        })
+    }
+
+    /// Load from a golden-vector JSON (`golden/g_*.json` has the same
+    /// `params_int` block plus test vectors).
+    pub fn load_golden(path: &Path) -> Result<(QGruWeights, Json)> {
+        let j = Json::parse_file(path).context("loading golden case")?;
+        let bits = j.get("bits")?.as_usize()? as u32;
+        let spec = QSpec::new(bits)?;
+        let params = j.get("params_int")?;
+        let (hidden, features) = dims(params)?;
+        let w = QGruWeights {
+            hidden,
+            features,
+            spec,
+            w_ih: tensor_i32(params, "w_ih", 3 * hidden * features)?,
+            b_ih: tensor_i32(params, "b_ih", 3 * hidden)?,
+            w_hh: tensor_i32(params, "w_hh", 3 * hidden * hidden)?,
+            b_hh: tensor_i32(params, "b_hh", 3 * hidden)?,
+            w_fc: tensor_i32(params, "w_fc", 2 * hidden)?,
+            b_fc: tensor_i32(params, "b_fc", 2)?,
+        };
+        Ok((w, j))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_weights_json(hidden: usize, features: usize) -> String {
+        let tensor = |rows: usize, cols: Option<usize>| -> String {
+            let n = rows * cols.unwrap_or(1);
+            let data: Vec<String> = (0..n).map(|i| format!("{}", (i as f64) * 0.001 - 0.05)).collect();
+            let shape = match cols {
+                Some(c) => format!("[{rows},{c}]"),
+                None => format!("[{rows}]"),
+            };
+            format!("{{\"shape\":{shape},\"data\":[{}]}}", data.join(","))
+        };
+        format!(
+            "{{\"meta\":{{\"bits\":12,\"act\":\"hard\",\"val_nmse_db\":-37.5}},\"params\":{{\
+             \"w_ih\":{},\"b_ih\":{},\"w_hh\":{},\"b_hh\":{},\"w_fc\":{},\"b_fc\":{}}}}}",
+            tensor(3 * hidden, Some(features)),
+            tensor(3 * hidden, None),
+            tensor(3 * hidden, Some(hidden)),
+            tensor(3 * hidden, None),
+            tensor(2, Some(hidden)),
+            tensor(2, None),
+        )
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join("dpd_ne_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.json");
+        std::fs::write(&path, fake_weights_json(10, 4)).unwrap();
+        let w = GruWeights::load(&path).unwrap();
+        assert_eq!(w.hidden, 10);
+        assert_eq!(w.features, 4);
+        assert_eq!(w.n_params(), 502);
+        assert_eq!(w.meta_bits, Some(12));
+        assert_eq!(w.meta_act.as_deref(), Some("hard"));
+        assert!((w.meta_val_nmse_db.unwrap() + 37.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantize_matches_qspec_rule() {
+        let dir = std::env::temp_dir().join("dpd_ne_test_weights2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.json");
+        std::fs::write(&path, fake_weights_json(10, 4)).unwrap();
+        let w = GruWeights::load(&path).unwrap();
+        let spec = QSpec::Q12;
+        let qw = w.quantize(spec);
+        for (f, q) in w.w_ih.iter().zip(&qw.w_ih) {
+            assert_eq!(*q, spec.quantize(*f));
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_lengths() {
+        let dir = std::env::temp_dir().join("dpd_ne_test_weights3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.json");
+        // truncated b_fc
+        let bad = fake_weights_json(10, 4).replace(
+            "\"b_fc\":{\"shape\":[2],\"data\":[-0.05,-0.049]}",
+            "\"b_fc\":{\"shape\":[2],\"data\":[-0.05]}",
+        );
+        std::fs::write(&path, bad).unwrap();
+        assert!(GruWeights::load(&path).is_err());
+    }
+}

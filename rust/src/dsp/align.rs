@@ -1,0 +1,125 @@
+//! Delay/gain alignment between two complex signals (cross-correlation
+//! peak + LS complex gain). Used by the GMP indirect-learning fit and
+//! by EVM measurement to line up the PA output with its reference.
+
+use crate::util::C64;
+
+/// Find the integer delay d in [-max_lag, max_lag] maximizing
+/// |sum x(n) * conj(y(n-d))| and the complex gain g minimizing
+/// ||x - g*y_d||^2. Returns (delay, gain).
+pub fn align(x: &[[f64; 2]], y: &[[f64; 2]], max_lag: usize) -> (i64, C64) {
+    let n = x.len().min(y.len());
+    let mut best = (0i64, 0.0f64);
+    for d in -(max_lag as i64)..=(max_lag as i64) {
+        let mut acc = C64::ZERO;
+        for i in 0..n {
+            let j = i as i64 - d;
+            if j < 0 || j >= n as i64 {
+                continue;
+            }
+            let xv = C64::new(x[i][0], x[i][1]);
+            let yv = C64::new(y[j as usize][0], y[j as usize][1]);
+            acc += xv * yv.conj();
+        }
+        let mag = acc.abs();
+        if mag > best.1 {
+            best = (d, mag);
+        }
+    }
+    let d = best.0;
+    // complex LS gain at the chosen lag: g = <x, y_d> / <y_d, y_d>
+    let mut num = C64::ZERO;
+    let mut den = 0.0;
+    for i in 0..n {
+        let j = i as i64 - d;
+        if j < 0 || j >= n as i64 {
+            continue;
+        }
+        let xv = C64::new(x[i][0], x[i][1]);
+        let yv = C64::new(y[j as usize][0], y[j as usize][1]);
+        num += xv * yv.conj();
+        den += yv.norm_sq();
+    }
+    let g = if den > 0.0 { num.scale(1.0 / den) } else { C64::ZERO };
+    (d, g)
+}
+
+/// Apply (delay, gain): returns g * y(n - d) over the overlap range,
+/// along with the matching slice of x, for residual computation.
+pub fn apply_alignment(
+    x: &[[f64; 2]],
+    y: &[[f64; 2]],
+    d: i64,
+    g: C64,
+) -> (Vec<[f64; 2]>, Vec<[f64; 2]>) {
+    let n = x.len().min(y.len());
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for i in 0..n {
+        let j = i as i64 - d;
+        if j < 0 || j >= n as i64 {
+            continue;
+        }
+        let yv = C64::new(y[j as usize][0], y[j as usize][1]) * g;
+        xs.push(x[i]);
+        ys.push([yv.re, yv.im]);
+    }
+    (xs, ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::Rng;
+
+    #[test]
+    fn recovers_known_delay_and_gain() {
+        check("align recovers delay/gain", 25, |rng| {
+            let n = 512;
+            let sig: Vec<[f64; 2]> = (0..n).map(|_| [rng.gauss(), rng.gauss()]).collect();
+            let d_true = rng.int_in(-20, 20);
+            let g_true = C64::cis(rng.range(-3.0, 3.0)).scale(rng.range(0.5, 2.0));
+            // x(n) = g * sig(n - d)
+            let mut x = vec![[0.0; 2]; n];
+            for i in 0..n {
+                let j = i as i64 - d_true;
+                if j >= 0 && (j as usize) < n {
+                    let v = C64::new(sig[j as usize][0], sig[j as usize][1]) * g_true;
+                    x[i] = [v.re, v.im];
+                }
+            }
+            let (d, g) = align(&x, &sig, 32);
+            if d != d_true {
+                return Err(format!("delay {d} != {d_true}"));
+            }
+            if (g - g_true).abs() > 1e-6 {
+                return Err(format!("gain {g:?} != {g_true:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_residual_after_alignment() {
+        let mut rng = Rng::new(4);
+        let n = 256;
+        let sig: Vec<[f64; 2]> = (0..n).map(|_| [rng.gauss(), rng.gauss()]).collect();
+        let g = C64::new(0.8, 0.3);
+        let x: Vec<[f64; 2]> = sig
+            .iter()
+            .map(|&[a, b]| {
+                let v = C64::new(a, b) * g;
+                [v.re, v.im]
+            })
+            .collect();
+        let (d, gg) = align(&x, &sig, 8);
+        let (xs, ys) = apply_alignment(&x, &sig, d, gg);
+        let err: f64 = xs
+            .iter()
+            .zip(&ys)
+            .map(|(a, b)| (a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2))
+            .sum();
+        assert!(err < 1e-18, "residual {err}");
+    }
+}

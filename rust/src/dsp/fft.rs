@@ -1,0 +1,270 @@
+//! Iterative radix-2 decimation-in-time FFT with precomputed twiddles.
+//!
+//! Power-of-two sizes only (everything in the crate uses 2^k segment
+//! lengths). A [`Fft`] plan caches the twiddle table and bit-reversal
+//! permutation so the hot path (Welch PSD over many segments) does no
+//! allocation.
+
+use anyhow::{bail, Result};
+
+use crate::util::C64;
+
+/// Precomputed FFT plan for a fixed power-of-two size.
+pub struct Fft {
+    n: usize,
+    /// twiddles for each butterfly stage, flattened
+    twiddles: Vec<C64>,
+    /// bit-reversal permutation
+    rev: Vec<u32>,
+}
+
+impl Fft {
+    pub fn new(n: usize) -> Result<Fft> {
+        if !n.is_power_of_two() || n < 2 {
+            bail!("FFT size must be a power of two >= 2, got {n}");
+        }
+        let bits = n.trailing_zeros();
+        let mut rev = vec![0u32; n];
+        for i in 0..n {
+            rev[i] = (i as u32).reverse_bits() >> (32 - bits);
+        }
+        // twiddle table: for stage length `len`, we need len/2 factors
+        // e^{-2 pi i k / len}; store contiguously stage by stage.
+        let mut twiddles = Vec::with_capacity(n - 1);
+        let mut len = 2;
+        while len <= n {
+            let step = -2.0 * std::f64::consts::PI / len as f64;
+            for k in 0..len / 2 {
+                twiddles.push(C64::cis(step * k as f64));
+            }
+            len <<= 1;
+        }
+        Ok(Fft { n, twiddles, rev })
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Forward transform, in place. `x.len()` must equal the plan size.
+    pub fn forward(&self, x: &mut [C64]) {
+        assert_eq!(x.len(), self.n);
+        // bit-reversal permutation
+        for i in 0..self.n {
+            let j = self.rev[i] as usize;
+            if i < j {
+                x.swap(i, j);
+            }
+        }
+        // butterflies
+        let mut len = 2;
+        let mut tw_off = 0;
+        while len <= self.n {
+            let half = len / 2;
+            for start in (0..self.n).step_by(len) {
+                for k in 0..half {
+                    let w = self.twiddles[tw_off + k];
+                    let a = x[start + k];
+                    let b = x[start + k + half] * w;
+                    x[start + k] = a + b;
+                    x[start + k + half] = a - b;
+                }
+            }
+            tw_off += half;
+            len <<= 1;
+        }
+    }
+
+    /// Inverse transform, in place (includes the 1/N normalization).
+    pub fn inverse(&self, x: &mut [C64]) {
+        // conj -> forward -> conj, scale
+        for v in x.iter_mut() {
+            *v = v.conj();
+        }
+        self.forward(x);
+        let s = 1.0 / self.n as f64;
+        for v in x.iter_mut() {
+            *v = v.conj().scale(s);
+        }
+    }
+}
+
+/// One-shot forward FFT (allocates a plan; prefer [`Fft`] in loops).
+pub fn fft_inplace(x: &mut [C64]) -> Result<()> {
+    Fft::new(x.len())?.forward(x);
+    Ok(())
+}
+
+/// One-shot inverse FFT.
+pub fn ifft_inplace(x: &mut [C64]) -> Result<()> {
+    Fft::new(x.len())?.inverse(x);
+    Ok(())
+}
+
+/// FFT bin center frequencies in cycles/sample, fftshift-free order.
+pub fn fft_freqs(n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|k| {
+            if k <= n / 2 - 1 || n == 1 {
+                k as f64 / n as f64
+            } else {
+                k as f64 / n as f64 - 1.0
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::Rng;
+
+    fn naive_dft(x: &[C64]) -> Vec<C64> {
+        let n = x.len();
+        (0..n)
+            .map(|k| {
+                let mut acc = C64::ZERO;
+                for (j, &v) in x.iter().enumerate() {
+                    acc += v * C64::cis(-2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64);
+                }
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rejects_non_power_of_two() {
+        assert!(Fft::new(12).is_err());
+        assert!(Fft::new(0).is_err());
+        assert!(Fft::new(1).is_err());
+    }
+
+    #[test]
+    fn impulse_is_flat() {
+        let mut x = vec![C64::ZERO; 64];
+        x[0] = C64::ONE;
+        fft_inplace(&mut x).unwrap();
+        for v in &x {
+            assert!((v.re - 1.0).abs() < 1e-12 && v.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_tone_lands_in_one_bin() {
+        let n = 128;
+        let k0 = 5;
+        let mut x: Vec<C64> = (0..n)
+            .map(|t| C64::cis(2.0 * std::f64::consts::PI * (k0 * t) as f64 / n as f64))
+            .collect();
+        fft_inplace(&mut x).unwrap();
+        for (k, v) in x.iter().enumerate() {
+            if k == k0 {
+                assert!((v.re - n as f64).abs() < 1e-9);
+            } else {
+                assert!(v.abs() < 1e-9, "leak at bin {k}: {}", v.abs());
+            }
+        }
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        check("fft vs naive dft", 20, |rng| {
+            let n = 1 << rng.int_in(1, 7);
+            let x: Vec<C64> = (0..n).map(|_| C64::new(rng.gauss(), rng.gauss())).collect();
+            let want = naive_dft(&x);
+            let mut got = x.clone();
+            fft_inplace(&mut got).unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                if (*g - *w).abs() > 1e-9 * (n as f64) {
+                    return Err(format!("mismatch: {g:?} vs {w:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn inverse_round_trip() {
+        check("fft inverse round trip", 30, |rng| {
+            let n = 1 << rng.int_in(1, 12);
+            let x: Vec<C64> = (0..n).map(|_| C64::new(rng.gauss(), rng.gauss())).collect();
+            let mut y = x.clone();
+            fft_inplace(&mut y).unwrap();
+            ifft_inplace(&mut y).unwrap();
+            for (a, b) in x.iter().zip(&y) {
+                if (*a - *b).abs() > 1e-10 {
+                    return Err(format!("round trip error {}", (*a - *b).abs()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parseval() {
+        check("parseval", 20, |rng| {
+            let n = 1 << rng.int_in(4, 10);
+            let x: Vec<C64> = (0..n).map(|_| C64::new(rng.gauss(), rng.gauss())).collect();
+            let time_e: f64 = x.iter().map(|v| v.norm_sq()).sum();
+            let mut y = x;
+            fft_inplace(&mut y).unwrap();
+            let freq_e: f64 = y.iter().map(|v| v.norm_sq()).sum::<f64>() / n as f64;
+            if (time_e - freq_e).abs() > 1e-8 * time_e {
+                return Err(format!("{time_e} vs {freq_e}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn linearity() {
+        check("fft linearity", 15, |rng| {
+            let n = 256;
+            let a: Vec<C64> = (0..n).map(|_| C64::new(rng.gauss(), rng.gauss())).collect();
+            let b: Vec<C64> = (0..n).map(|_| C64::new(rng.gauss(), rng.gauss())).collect();
+            let alpha = C64::new(rng.gauss(), rng.gauss());
+            let mut lhs: Vec<C64> = a.iter().zip(&b).map(|(&x, &y)| x * alpha + y).collect();
+            fft_inplace(&mut lhs).unwrap();
+            let (mut fa, mut fb) = (a, b);
+            fft_inplace(&mut fa).unwrap();
+            fft_inplace(&mut fb).unwrap();
+            for ((l, x), y) in lhs.iter().zip(&fa).zip(&fb) {
+                let want = *x * alpha + *y;
+                if (*l - want).abs() > 1e-9 {
+                    return Err("linearity violated".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fft_freqs_layout() {
+        let f = fft_freqs(8);
+        assert_eq!(f[0], 0.0);
+        assert_eq!(f[1], 0.125);
+        assert_eq!(f[3], 0.375);
+        assert_eq!(f[4], -0.5);
+        assert_eq!(f[7], -0.125);
+    }
+
+    #[test]
+    fn plan_reuse_no_drift() {
+        let plan = Fft::new(512).unwrap();
+        let mut rng = Rng::new(1);
+        let x: Vec<C64> = (0..512).map(|_| C64::new(rng.gauss(), rng.gauss())).collect();
+        let mut a = x.clone();
+        plan.forward(&mut a);
+        let mut b = x.clone();
+        plan.forward(&mut b);
+        assert_eq!(
+            a.iter().map(|v| (v.re, v.im)).collect::<Vec<_>>(),
+            b.iter().map(|v| (v.re, v.im)).collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,155 @@
+//! FIR filter design (windowed sinc) and application.
+//!
+//! The TX lowpass in the signal chain mirrors the python generator's
+//! Kaiser windowed-sinc (`dataset.kaiser_lowpass`) exactly, so the rust
+//! OFDM source produces the same spectrum-contained stimulus.
+
+use super::window::kaiser;
+
+/// Unity-DC-gain lowpass via Kaiser windowed sinc.
+/// `cutoff` in cycles/sample (0 .. 0.5).
+pub fn kaiser_lowpass(ntaps: usize, cutoff: f64, beta: f64) -> Vec<f64> {
+    assert!(ntaps >= 3 && cutoff > 0.0 && cutoff < 0.5);
+    let w = kaiser(ntaps, beta);
+    let mid = (ntaps - 1) as f64 / 2.0;
+    let mut h: Vec<f64> = (0..ntaps)
+        .map(|i| {
+            let n = i as f64 - mid;
+            let s = if n == 0.0 {
+                2.0 * cutoff
+            } else {
+                (2.0 * std::f64::consts::PI * cutoff * n).sin() / (std::f64::consts::PI * n)
+            };
+            s * w[i]
+        })
+        .collect();
+    let sum: f64 = h.iter().sum();
+    for v in h.iter_mut() {
+        *v /= sum;
+    }
+    h
+}
+
+/// 'same'-mode convolution of complex I/Q with a real FIR — matches
+/// `numpy.convolve(x, h, mode="same")`.
+pub fn convolve_same(x: &[[f64; 2]], h: &[f64]) -> Vec<[f64; 2]> {
+    let n = x.len();
+    let m = h.len();
+    let mut y = vec![[0.0; 2]; n];
+    // full convolution index k = i + j, 'same' keeps k in
+    // [(m-1)/2, (m-1)/2 + n)
+    let off = (m - 1) / 2;
+    for (i, out) in y.iter_mut().enumerate() {
+        let k = i + off;
+        // j ranges so that k-j in [0, n)
+        let j_lo = k.saturating_sub(n - 1);
+        let j_hi = k.min(m - 1);
+        let mut acc = [0.0f64; 2];
+        for j in j_lo..=j_hi {
+            let c = h[j];
+            let s = x[k - j];
+            acc[0] += c * s[0];
+            acc[1] += c * s[1];
+        }
+        *out = acc;
+    }
+    y
+}
+
+/// Filter frequency response magnitude at a given frequency.
+pub fn freq_response_mag(h: &[f64], freq: f64) -> f64 {
+    let mut re = 0.0;
+    let mut im = 0.0;
+    for (n, &c) in h.iter().enumerate() {
+        let ph = -2.0 * std::f64::consts::PI * freq * n as f64;
+        re += c * ph.cos();
+        im += c * ph.sin();
+    }
+    (re * re + im * im).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn unity_dc_gain() {
+        let h = kaiser_lowpass(255, 0.13, 10.0);
+        assert!((h.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((freq_response_mag(&h, 0.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn passband_flat_stopband_deep() {
+        let h = kaiser_lowpass(511, 0.13, 10.0);
+        for f in [0.02, 0.06, 0.10, 0.12] {
+            let g = 20.0 * freq_response_mag(&h, f).log10();
+            assert!(g.abs() < 0.1, "passband ripple at {f}: {g} dB");
+        }
+        for f in [0.17, 0.2, 0.3, 0.45] {
+            let g = 20.0 * freq_response_mag(&h, f).log10();
+            assert!(g < -80.0, "stopband at {f}: {g} dB");
+        }
+    }
+
+    #[test]
+    fn symmetric_linear_phase() {
+        let h = kaiser_lowpass(101, 0.2, 8.0);
+        for i in 0..101 {
+            assert!((h[i] - h[100 - i]).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn convolve_same_identity() {
+        let x: Vec<[f64; 2]> = (0..10).map(|i| [i as f64, -(i as f64)]).collect();
+        let y = convolve_same(&x, &[1.0]);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn convolve_same_matches_numpy_semantics() {
+        // numpy.convolve([1,2,3,4], [0.5,0.5], 'same') = [0.5, 1.5, 2.5, 3.5]
+        let x: Vec<[f64; 2]> = vec![[1.0, 0.0], [2.0, 0.0], [3.0, 0.0], [4.0, 0.0]];
+        let y = convolve_same(&x, &[0.5, 0.5]);
+        let got: Vec<f64> = y.iter().map(|v| v[0]).collect();
+        assert_eq!(got, vec![0.5, 1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn convolve_same_odd_kernel_centered() {
+        // delta in the middle passes through unchanged
+        let mut x = vec![[0.0, 0.0]; 9];
+        x[4] = [1.0, 2.0];
+        let h = [0.25, 0.5, 0.25];
+        let y = convolve_same(&x, &h);
+        assert!((y[4][0] - 0.5).abs() < 1e-15);
+        assert!((y[3][0] - 0.25).abs() < 1e-15);
+        assert!((y[5][0] - 0.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn convolution_is_linear() {
+        check("convolution linearity", 20, |rng| {
+            let n = 64;
+            let h = kaiser_lowpass(31, 0.2, 6.0);
+            let a: Vec<[f64; 2]> = (0..n).map(|_| [rng.gauss(), rng.gauss()]).collect();
+            let b: Vec<[f64; 2]> = (0..n).map(|_| [rng.gauss(), rng.gauss()]).collect();
+            let sum: Vec<[f64; 2]> = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| [x[0] + y[0], x[1] + y[1]])
+                .collect();
+            let ya = convolve_same(&a, &h);
+            let yb = convolve_same(&b, &h);
+            let ys = convolve_same(&sum, &h);
+            for i in 0..n {
+                if (ys[i][0] - ya[i][0] - yb[i][0]).abs() > 1e-12 {
+                    return Err("linearity".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

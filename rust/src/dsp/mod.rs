@@ -1,0 +1,13 @@
+//! Signal-processing substrate: FFT, windows, Welch PSD, FIR filters,
+//! delay alignment. Everything is implemented from scratch (offline
+//! build), validated by property tests (Parseval, inverse round-trip,
+//! known transforms).
+
+pub mod align;
+pub mod fft;
+pub mod fir;
+pub mod welch;
+pub mod window;
+
+pub use fft::{fft_inplace, ifft_inplace, Fft};
+pub use welch::{welch_psd, WelchConfig};

@@ -1,0 +1,146 @@
+//! Welch power-spectral-density estimation — the instrument behind the
+//! ACPR measurements (what the paper's R&S FSW43 analyzer computes).
+
+use anyhow::Result;
+
+use super::fft::Fft;
+use super::window::hann;
+use crate::util::C64;
+
+/// Welch estimator configuration.
+#[derive(Clone, Debug)]
+pub struct WelchConfig {
+    /// FFT segment length (power of two).
+    pub nfft: usize,
+    /// Segment overlap as a fraction of nfft (0.0 .. 0.9).
+    pub overlap: f64,
+}
+
+impl Default for WelchConfig {
+    fn default() -> Self {
+        WelchConfig { nfft: 4096, overlap: 0.5 }
+    }
+}
+
+/// Averaged, Hann-windowed periodogram of a complex baseband signal.
+///
+/// Returns (freqs, psd) with freqs in cycles/sample, *fftshifted* so
+/// the axis runs -0.5 .. 0.5 — the natural layout for band-power
+/// integration. PSD is in linear power units (per-bin power density up
+/// to a constant factor; ACPR/band ratios are scale-free).
+pub fn welch_psd(x: &[[f64; 2]], cfg: &WelchConfig) -> Result<(Vec<f64>, Vec<f64>)> {
+    let n = cfg.nfft;
+    let plan = Fft::new(n)?;
+    let w = hann(n);
+    let step = ((n as f64) * (1.0 - cfg.overlap)).max(1.0) as usize;
+    let mut psd = vec![0.0; n];
+    let mut buf = vec![C64::ZERO; n];
+    let mut segs = 0usize;
+
+    let mut start = 0;
+    while start + n <= x.len() {
+        for i in 0..n {
+            let [re, im] = x[start + i];
+            buf[i] = C64::new(re * w[i], im * w[i]);
+        }
+        plan.forward(&mut buf);
+        for i in 0..n {
+            psd[i] += buf[i].norm_sq();
+        }
+        segs += 1;
+        start += step;
+    }
+    anyhow::ensure!(segs > 0, "signal shorter than one Welch segment ({n})");
+
+    let norm = 1.0 / segs as f64;
+    // fftshift
+    let half = n / 2;
+    let mut shifted = vec![0.0; n];
+    let mut freqs = vec![0.0; n];
+    for i in 0..n {
+        let src = (i + half) % n;
+        shifted[i] = psd[src] * norm;
+        freqs[i] = (i as f64 - half as f64) / n as f64;
+    }
+    Ok((freqs, shifted))
+}
+
+/// Integrate PSD power over a frequency band [lo, hi) (cycles/sample).
+pub fn band_power(freqs: &[f64], psd: &[f64], lo: f64, hi: f64) -> f64 {
+    freqs
+        .iter()
+        .zip(psd)
+        .filter(|(f, _)| **f >= lo && **f < hi)
+        .map(|(_, p)| *p)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tone(freq: f64, n: usize) -> Vec<[f64; 2]> {
+        (0..n)
+            .map(|t| {
+                let ph = 2.0 * std::f64::consts::PI * freq * t as f64;
+                [ph.cos(), ph.sin()]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tone_peaks_at_its_frequency() {
+        let x = tone(0.1, 1 << 15);
+        let cfg = WelchConfig { nfft: 1024, overlap: 0.5 };
+        let (f, p) = welch_psd(&x, &cfg).unwrap();
+        let imax = (0..p.len()).max_by(|&a, &b| p[a].total_cmp(&p[b])).unwrap();
+        assert!((f[imax] - 0.1).abs() < 2.0 / 1024.0, "peak at {}", f[imax]);
+    }
+
+    #[test]
+    fn tone_leakage_floor_deep() {
+        let x = tone(0.05, 1 << 15);
+        let (f, p) = welch_psd(&x, &WelchConfig { nfft: 4096, overlap: 0.5 }).unwrap();
+        let inband = band_power(&f, &p, 0.04, 0.06);
+        let far = band_power(&f, &p, 0.2, 0.4);
+        assert!(10.0 * (far / inband).log10() < -100.0);
+    }
+
+    #[test]
+    fn white_noise_flat() {
+        let mut rng = Rng::new(3);
+        let x: Vec<[f64; 2]> = (0..1 << 16).map(|_| [rng.gauss(), rng.gauss()]).collect();
+        let (f, p) = welch_psd(&x, &WelchConfig { nfft: 256, overlap: 0.5 }).unwrap();
+        let lo = band_power(&f, &p, -0.4, -0.1);
+        let hi = band_power(&f, &p, 0.1, 0.4);
+        let ratio = 10.0 * (lo / hi).log10();
+        assert!(ratio.abs() < 0.5, "flatness {ratio} dB");
+    }
+
+    #[test]
+    fn total_power_tracks_signal_power() {
+        let mut rng = Rng::new(9);
+        let x: Vec<[f64; 2]> = (0..1 << 14).map(|_| [rng.gauss() * 0.5, rng.gauss() * 0.5]).collect();
+        let (f, p) = welch_psd(&x, &WelchConfig { nfft: 512, overlap: 0.0 }).unwrap();
+        let x2: Vec<[f64; 2]> = x.iter().map(|&[a, b]| [2.0 * a, 2.0 * b]).collect();
+        let (_, p2) = welch_psd(&x2, &WelchConfig { nfft: 512, overlap: 0.0 }).unwrap();
+        let r = band_power(&f, &p2, -0.5, 0.5) / band_power(&f, &p, -0.5, 0.5);
+        assert!((r - 4.0).abs() < 1e-9, "power scaling {r}");
+    }
+
+    #[test]
+    fn errors_on_short_signal() {
+        let x = vec![[0.0, 0.0]; 100];
+        assert!(welch_psd(&x, &WelchConfig { nfft: 256, overlap: 0.5 }).is_err());
+    }
+
+    #[test]
+    fn freq_axis_shifted() {
+        let x = vec![[1.0, 0.0]; 512];
+        let (f, _) = welch_psd(&x, &WelchConfig { nfft: 256, overlap: 0.0 }).unwrap();
+        assert_eq!(f[0], -0.5);
+        assert_eq!(f[128], 0.0);
+        assert!((f[255] - (0.5 - 1.0 / 256.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,151 @@
+//! Window functions (Hann, Blackman, Kaiser, raised-cosine edge) used
+//! by the Welch PSD estimator, the FIR designer and the OFDM
+//! symbol-windowing stage.
+
+/// Hann window of length n (periodic=false, symmetric — matches numpy's
+/// `hanning`).
+pub fn hann(n: usize) -> Vec<f64> {
+    if n == 1 {
+        return vec![1.0];
+    }
+    (0..n)
+        .map(|i| {
+            let x = std::f64::consts::PI * i as f64 / (n - 1) as f64;
+            let s = x.sin();
+            // 0.5*(1-cos(2x)) == sin^2(x)
+            s * s
+        })
+        .collect()
+}
+
+/// Blackman window (symmetric).
+pub fn blackman(n: usize) -> Vec<f64> {
+    if n == 1 {
+        return vec![1.0];
+    }
+    (0..n)
+        .map(|i| {
+            let x = 2.0 * std::f64::consts::PI * i as f64 / (n - 1) as f64;
+            0.42 - 0.5 * x.cos() + 0.08 * (2.0 * x).cos()
+        })
+        .collect()
+}
+
+/// Modified Bessel function of the first kind, order 0 (series).
+pub fn bessel_i0(x: f64) -> f64 {
+    // converges quickly for the beta range we use (<= 20)
+    let mut sum = 1.0;
+    let mut term = 1.0;
+    let half_x2 = (x / 2.0) * (x / 2.0);
+    for k in 1..50 {
+        term *= half_x2 / (k as f64 * k as f64);
+        sum += term;
+        if term < 1e-18 * sum {
+            break;
+        }
+    }
+    sum
+}
+
+/// Kaiser window with shape parameter beta (matches numpy.kaiser).
+pub fn kaiser(n: usize, beta: f64) -> Vec<f64> {
+    if n == 1 {
+        return vec![1.0];
+    }
+    let denom = bessel_i0(beta);
+    let m = (n - 1) as f64;
+    (0..n)
+        .map(|i| {
+            let r = 2.0 * i as f64 / m - 1.0;
+            bessel_i0(beta * (1.0 - r * r).max(0.0).sqrt()) / denom
+        })
+        .collect()
+}
+
+/// Raised-cosine edge ramp of length n (0 -> 1), sampled at midpoints —
+/// the OFDM symbol-windowing taper (matches `dataset.generate_ofdm`).
+pub fn rc_edge(n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            let t = (i as f64 + 0.5) / n as f64;
+            0.5 * (1.0 - (std::f64::consts::PI * t).cos())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hann_endpoints_and_peak() {
+        let w = hann(65);
+        assert!(w[0].abs() < 1e-15);
+        assert!(w[64].abs() < 1e-12);
+        assert!((w[32] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hann_matches_numpy_values() {
+        // numpy.hanning(8) reference values
+        let w = hann(8);
+        let want = [
+            0.0,
+            0.1882550990706332,
+            0.6112604669781572,
+            0.9504844339512095,
+            0.9504844339512095,
+            0.6112604669781572,
+            0.1882550990706332,
+            0.0,
+        ];
+        for (g, w_) in w.iter().zip(want) {
+            assert!((g - w_).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn blackman_symmetric_nonneg() {
+        let w = blackman(33);
+        for i in 0..33 {
+            assert!((w[i] - w[32 - i]).abs() < 1e-12);
+            assert!(w[i] > -1e-12);
+        }
+    }
+
+    #[test]
+    fn bessel_i0_known_values() {
+        // I0(0)=1, I0(1)=1.2660658..., I0(5)=27.239871...
+        assert!((bessel_i0(0.0) - 1.0).abs() < 1e-15);
+        assert!((bessel_i0(1.0) - 1.2660658777520084).abs() < 1e-12);
+        assert!((bessel_i0(5.0) - 27.239871823604442).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kaiser_matches_numpy_values() {
+        // numpy.kaiser(7, 9.0) reference
+        let w = kaiser(7, 9.0);
+        let want = [
+            9.14420857e-04,
+            1.17736844e-01,
+            6.16121850e-01,
+            1.0,
+            6.16121850e-01,
+            1.17736844e-01,
+            9.14420857e-04,
+        ];
+        for (g, w_) in w.iter().zip(want) {
+            assert!((g - w_).abs() < 1e-9, "{g} vs {w_}");
+        }
+    }
+
+    #[test]
+    fn rc_edge_monotone_0_to_1() {
+        let e = rc_edge(16);
+        assert!(e[0] > 0.0 && e[0] < 0.05);
+        assert!(e[15] > 0.95 && e[15] < 1.0);
+        for i in 1..16 {
+            assert!(e[i] > e[i - 1]);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Parametric Q2.f fixed-point arithmetic — the ASIC's number system.
+//!
+//! The paper's datapath (§III-C) is 12-bit Q2.10: 2 integer bits (one
+//! of them sign) and 10 fractional bits, for weights, activations and
+//! the I/Q streams. [`QSpec`] generalizes to any width for the Fig. 3
+//! precision sweep; [`ops`] holds the canonical rounding / saturation
+//! primitives shared (bit-for-bit) with the python reference
+//! (`python/compile/kernels/quant.py`) and used by every quantized
+//! engine in the crate (`dpd::qgru`, `accel::engine`).
+
+pub mod ops;
+pub mod qspec;
+
+pub use ops::{rshift_round, saturate_i64};
+pub use qspec::QSpec;

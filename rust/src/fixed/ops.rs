@@ -1,0 +1,111 @@
+//! Canonical rounding / saturation primitives of the datapath.
+//!
+//! These two functions define the arithmetic contract every quantized
+//! implementation shares — the jax integer oracle
+//! (`kernels/quant.py::rshift_round`/`saturate`), the rust functional
+//! engine (`dpd::qgru`) and the cycle-accurate simulator
+//! (`accel::engine`) must agree bit-for-bit, which the golden-vector
+//! tests enforce.
+
+use super::QSpec;
+
+/// Arithmetic right shift with round-to-nearest, ties toward +inf:
+/// `floor(v / 2^s + 0.5)` computed as `(v + (1 << (s-1))) >> s`.
+///
+/// This is the requantization step after every multiply (products of
+/// two Q2.f codes carry 2f fractional bits).
+#[inline]
+pub fn rshift_round(v: i64, s: u32) -> i64 {
+    if s == 0 {
+        return v;
+    }
+    (v + (1i64 << (s - 1))) >> s
+}
+
+/// Saturate a wide accumulator into the Q2.f code range.
+#[inline]
+pub fn saturate_i64(v: i64, spec: QSpec) -> i32 {
+    v.clamp(spec.qmin() as i64, spec.qmax() as i64) as i32
+}
+
+/// Requantize: shift by `s` then saturate (the common composition).
+#[inline]
+pub fn requantize(acc: i64, s: u32, spec: QSpec) -> i32 {
+    saturate_i64(rshift_round(acc, s), spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn rshift_round_matches_float_reference() {
+        check("rshift_round vs floor(v/2^s+0.5)", 500, |rng| {
+            let v = rng.int_in(-(1 << 40), 1 << 40);
+            let s = rng.int_in(1, 20) as u32;
+            let got = rshift_round(v, s);
+            let want = ((v as f64) / (1i64 << s) as f64 + 0.5).floor() as i64;
+            if got != want {
+                return Err(format!("v={v} s={s}: got {got} want {want}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rshift_round_ties_toward_plus_inf() {
+        // -1.5 rounds to -1 (toward +inf), +1.5 rounds to +2
+        assert_eq!(rshift_round(-3, 1), -1);
+        assert_eq!(rshift_round(3, 1), 2);
+        assert_eq!(rshift_round(-2, 2), 0); // -0.5 -> 0
+        assert_eq!(rshift_round(2, 2), 1); // 0.5 -> 1
+    }
+
+    #[test]
+    fn rshift_round_zero_shift_identity() {
+        assert_eq!(rshift_round(-12345, 0), -12345);
+    }
+
+    #[test]
+    fn saturate_clamps() {
+        let s = QSpec::Q12;
+        assert_eq!(saturate_i64(5_000_000, s), 2047);
+        assert_eq!(saturate_i64(-5_000_000, s), -2048);
+        assert_eq!(saturate_i64(123, s), 123);
+    }
+
+    #[test]
+    fn requantize_composition() {
+        check("requantize = shift then sat", 300, |rng| {
+            let spec = QSpec::new(rng.int_in(4, 16) as u32).unwrap();
+            let acc = rng.int_in(-(1 << 34), 1 << 34);
+            let s = spec.frac();
+            let got = requantize(acc, s, spec);
+            let want = saturate_i64(rshift_round(acc, s), spec);
+            if got != want {
+                return Err(format!("acc={acc}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn product_requantize_matches_real_arithmetic() {
+        // (a/2^f)*(b/2^f) rounded back to f frac bits == requantize(a*b, f)
+        check("product requantize", 500, |rng| {
+            let spec = QSpec::Q12;
+            let a = rng.int_in(spec.qmin() as i64, spec.qmax() as i64);
+            let b = rng.int_in(spec.qmin() as i64, spec.qmax() as i64);
+            let got = requantize(a * b, spec.frac(), spec) as f64 / spec.scale();
+            let real = (a as f64 / spec.scale()) * (b as f64 / spec.scale());
+            // round-half-up on the code grid, then saturate
+            let code = (real * spec.scale() + 0.5).floor();
+            let want = code.clamp(spec.qmin() as f64, spec.qmax() as f64) / spec.scale();
+            if (got - want).abs() > 1e-12 {
+                return Err(format!("a={a} b={b}: got {got} want {want}"));
+            }
+            Ok(())
+        });
+    }
+}

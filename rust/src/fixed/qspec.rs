@@ -1,0 +1,172 @@
+//! Fixed-point format descriptor Q2.(bits-2).
+
+use anyhow::{bail, Result};
+
+/// Fixed-point format with 2 integer bits (incl. sign) and
+/// `bits - 2` fractional bits. Codes live in `[-2^(bits-1), 2^(bits-1))`
+/// and represent values in `[-2, 2)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QSpec {
+    pub bits: u32,
+}
+
+impl QSpec {
+    /// The paper's format: 12-bit Q2.10.
+    pub const Q12: QSpec = QSpec { bits: 12 };
+
+    pub fn new(bits: u32) -> Result<QSpec> {
+        if !(4..=24).contains(&bits) {
+            bail!("unsupported fixed-point width {bits} (need 4..=24)");
+        }
+        Ok(QSpec { bits })
+    }
+
+    /// Fractional bits (f in Q2.f).
+    #[inline]
+    pub fn frac(self) -> u32 {
+        self.bits - 2
+    }
+
+    /// 2^f as f64.
+    #[inline]
+    pub fn scale(self) -> f64 {
+        (1i64 << self.frac()) as f64
+    }
+
+    /// Smallest representable code.
+    #[inline]
+    pub fn qmin(self) -> i32 {
+        -(1i32 << (self.bits - 1))
+    }
+
+    /// Largest representable code.
+    #[inline]
+    pub fn qmax(self) -> i32 {
+        (1i32 << (self.bits - 1)) - 1
+    }
+
+    /// Value of one LSB.
+    #[inline]
+    pub fn lsb(self) -> f64 {
+        1.0 / self.scale()
+    }
+
+    /// The code for +1.0.
+    #[inline]
+    pub fn one(self) -> i32 {
+        1i32 << self.frac()
+    }
+
+    /// Quantize a float to a code: round-half-up then saturate.
+    /// Bit-identical to `quant.quantize_to_int` in python.
+    #[inline]
+    pub fn quantize(self, x: f64) -> i32 {
+        let q = (x * self.scale() + 0.5).floor();
+        let q = q.clamp(self.qmin() as f64, self.qmax() as f64);
+        q as i32
+    }
+
+    /// Code -> float.
+    #[inline]
+    pub fn dequantize(self, code: i32) -> f64 {
+        code as f64 / self.scale()
+    }
+
+    /// Quantize an I/Q slice of f64 pairs into codes.
+    pub fn quantize_iq(self, iq: &[[f64; 2]]) -> Vec<[i32; 2]> {
+        iq.iter()
+            .map(|&[i, q]| [self.quantize(i), self.quantize(q)])
+            .collect()
+    }
+
+    /// Codes -> I/Q floats.
+    pub fn dequantize_iq(self, codes: &[[i32; 2]]) -> Vec<[f64; 2]> {
+        codes
+            .iter()
+            .map(|&[i, q]| [self.dequantize(i), self.dequantize(q)])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn paper_format() {
+        let s = QSpec::Q12;
+        assert_eq!(s.frac(), 10);
+        assert_eq!(s.scale(), 1024.0);
+        assert_eq!(s.qmin(), -2048);
+        assert_eq!(s.qmax(), 2047);
+        assert_eq!(s.one(), 1024);
+        assert!((s.lsb() - 2f64.powi(-10)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn invalid_widths_rejected() {
+        assert!(QSpec::new(3).is_err());
+        assert!(QSpec::new(25).is_err());
+        assert!(QSpec::new(8).is_ok());
+    }
+
+    #[test]
+    fn quantize_known_values() {
+        let s = QSpec::Q12;
+        assert_eq!(s.quantize(0.0), 0);
+        assert_eq!(s.quantize(1.0), 1024);
+        assert_eq!(s.quantize(-1.0), -1024);
+        assert_eq!(s.quantize(100.0), 2047); // saturates
+        assert_eq!(s.quantize(-100.0), -2048);
+        // round-half-up at the tie: 0.5 LSB -> up
+        assert_eq!(s.quantize(0.5 / 1024.0), 1);
+        assert_eq!(s.quantize(-0.5 / 1024.0), 0); // ties toward +inf
+    }
+
+    #[test]
+    fn quantize_error_bound() {
+        check("quantize error bound", 300, |rng| {
+            let bits = rng.int_in(4, 16) as u32;
+            let s = QSpec::new(bits).unwrap();
+            let x = rng.range(-1.99, 1.99);
+            let err = (s.dequantize(s.quantize(x)) - x).abs();
+            if err > s.lsb() / 2.0 + 1e-12 {
+                return Err(format!("bits={bits} x={x} err={err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantize_monotone() {
+        check("quantize monotone", 300, |rng| {
+            let s = QSpec::new(rng.int_in(4, 16) as u32).unwrap();
+            let a = rng.range(-4.0, 4.0);
+            let b = rng.range(-4.0, 4.0);
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            if s.quantize(lo) > s.quantize(hi) {
+                return Err(format!("non-monotone at {lo}, {hi}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn roundtrip_on_grid() {
+        let s = QSpec::Q12;
+        for code in (s.qmin()..=s.qmax()).step_by(7) {
+            assert_eq!(s.quantize(s.dequantize(code)), code);
+        }
+    }
+
+    #[test]
+    fn iq_helpers() {
+        let s = QSpec::Q12;
+        let iq = vec![[0.5, -0.25], [1.5, -2.0]];
+        let codes = s.quantize_iq(&iq);
+        assert_eq!(codes, vec![[512, -256], [1536, -2048]]);
+        let back = s.dequantize_iq(&codes);
+        assert!((back[0][0] - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,36 @@
+//! # DPD-NeuralEngine — reproduction library
+//!
+//! Rust runtime + substrates for the paper *DPD-NeuralEngine: A 22-nm
+//! 6.6-TOPS/W/mm² Recurrent Neural Network Accelerator for Wideband
+//! Power Amplifier Digital Pre-Distortion* (ISCAS 2025).
+//!
+//! Layering (see DESIGN.md):
+//! * substrates: [`fixed`], [`util`], [`linalg`], [`dsp`], [`signal`],
+//!   [`pa`], [`metrics`]
+//! * DPD engines: [`dpd`] (GMP baseline, float GRU, bit-exact Q2.f GRU)
+//! * the ASIC model: [`accel`] (cycle-accurate simulator, power/area
+//!   models, FPGA resource estimator)
+//! * runtime: [`runtime`] (PJRT execution of the AOT HLO artifacts),
+//!   [`coordinator`] (the streaming transmit-chain pipeline)
+//! * reporting: [`report`], [`bench`] (paper-table renderers + the
+//!   criterion-free bench harness)
+//!
+//! Python/JAX exists only on the build path (`make artifacts`); this
+//! crate is self-contained at runtime.
+
+pub mod accel;
+pub mod bench;
+pub mod coordinator;
+pub mod dpd;
+pub mod dsp;
+pub mod fixed;
+pub mod linalg;
+pub mod metrics;
+pub mod pa;
+pub mod report;
+pub mod runtime;
+pub mod signal;
+pub mod util;
+
+/// Crate-wide result alias (anyhow is the only error dependency).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,186 @@
+//! Complex least squares via Householder QR on the normal-equation-free
+//! path, plus a ridge-regularized variant (the GMP fit is mildly
+//! ill-conditioned at high polynomial orders, exactly like the real
+//! thing).
+
+use anyhow::{ensure, Result};
+
+use super::matrix::CMat;
+use crate::util::C64;
+
+/// Solve min ||A x - b||_2 by Householder QR (A: m x n, m >= n).
+pub fn lstsq(a: &CMat, b: &[C64]) -> Result<Vec<C64>> {
+    ensure!(a.rows >= a.cols, "underdetermined system ({}x{})", a.rows, a.cols);
+    ensure!(b.len() == a.rows, "rhs length mismatch");
+    let m = a.rows;
+    let n = a.cols;
+    let mut r = a.clone();
+    let mut y: Vec<C64> = b.to_vec();
+
+    // Householder QR: for each column k, reflect to zero below-diagonal.
+    for k in 0..n {
+        // norm of the k-th column below (and incl.) the diagonal
+        let mut norm2 = 0.0;
+        for i in k..m {
+            norm2 += r.at(i, k).norm_sq();
+        }
+        let norm = norm2.sqrt();
+        if norm < 1e-300 {
+            anyhow::bail!("rank-deficient column {k}");
+        }
+        let akk = r.at(k, k);
+        // alpha = -e^{i arg(akk)} * norm  (keeps v_k well conditioned)
+        let phase = if akk.abs() > 0.0 { akk.scale(1.0 / akk.abs()) } else { C64::ONE };
+        let alpha = -phase.scale(norm);
+        // v = x - alpha e1
+        let mut v: Vec<C64> = (k..m).map(|i| r.at(i, k)).collect();
+        v[0] = v[0] - alpha;
+        let vnorm2: f64 = v.iter().map(|z| z.norm_sq()).sum();
+        if vnorm2 < 1e-300 {
+            continue; // column already triangular
+        }
+        let beta = 2.0 / vnorm2;
+
+        // apply H = I - beta v v^H to R[k.., k..]
+        for j in k..n {
+            let mut dot = C64::ZERO;
+            for i in k..m {
+                dot += v[i - k].conj() * r.at(i, j);
+            }
+            let s = dot.scale(beta);
+            for i in k..m {
+                let upd = r.at(i, j) - v[i - k] * s;
+                *r.at_mut(i, j) = upd;
+            }
+        }
+        // apply to rhs
+        let mut dot = C64::ZERO;
+        for i in k..m {
+            dot += v[i - k].conj() * y[i];
+        }
+        let s = dot.scale(beta);
+        for i in k..m {
+            y[i] = y[i] - v[i - k] * s;
+        }
+    }
+
+    // back substitution on the n x n upper triangle
+    let mut x = vec![C64::ZERO; n];
+    for k in (0..n).rev() {
+        let mut acc = y[k];
+        for j in k + 1..n {
+            acc -= r.at(k, j) * x[j];
+        }
+        let d = r.at(k, k);
+        ensure!(d.abs() > 1e-300, "singular diagonal at {k}");
+        x[k] = acc / d;
+    }
+    Ok(x)
+}
+
+/// Ridge-regularized LS: min ||A x - b||^2 + lambda ||x||^2, solved by
+/// stacking sqrt(lambda) I below A (numerically robust QR path).
+pub fn ridge_lstsq(a: &CMat, b: &[C64], lambda: f64) -> Result<Vec<C64>> {
+    if lambda == 0.0 {
+        return lstsq(a, b);
+    }
+    let m = a.rows;
+    let n = a.cols;
+    let mut aug = CMat::zeros(m + n, n);
+    aug.data[..m * n].copy_from_slice(&a.data);
+    let sl = lambda.sqrt();
+    for k in 0..n {
+        *aug.at_mut(m + k, k) = C64::new(sl, 0.0);
+    }
+    let mut rhs = b.to_vec();
+    rhs.extend(std::iter::repeat(C64::ZERO).take(n));
+    lstsq(&aug, &rhs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::Rng;
+
+    fn rand_mat(rng: &mut Rng, m: usize, n: usize) -> CMat {
+        let mut a = CMat::zeros(m, n);
+        for v in a.data.iter_mut() {
+            *v = C64::new(rng.gauss(), rng.gauss());
+        }
+        a
+    }
+
+    #[test]
+    fn exact_solution_square_system() {
+        check("lstsq exact on square", 25, |rng| {
+            let n = rng.int_in(1, 8) as usize;
+            let a = rand_mat(rng, n, n);
+            let x_true: Vec<C64> = (0..n).map(|_| C64::new(rng.gauss(), rng.gauss())).collect();
+            let b = a.mul_vec(&x_true);
+            let x = lstsq(&a, &b).map_err(|e| e.to_string())?;
+            for (g, w) in x.iter().zip(&x_true) {
+                if (*g - *w).abs() > 1e-8 {
+                    return Err(format!("x mismatch {g:?} vs {w:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn residual_orthogonal_to_columns() {
+        check("lstsq residual orthogonality", 20, |rng| {
+            let m = 40;
+            let n = rng.int_in(2, 10) as usize;
+            let a = rand_mat(rng, m, n);
+            let b: Vec<C64> = (0..m).map(|_| C64::new(rng.gauss(), rng.gauss())).collect();
+            let x = lstsq(&a, &b).map_err(|e| e.to_string())?;
+            let ax = a.mul_vec(&x);
+            let resid: Vec<C64> = b.iter().zip(&ax).map(|(p, q)| *p - *q).collect();
+            // A^H r == 0 at the LS optimum
+            let proj = a.hermitian_mul_vec(&resid);
+            for p in proj {
+                if p.abs() > 1e-8 {
+                    return Err(format!("non-orthogonal residual: {}", p.abs()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn overdetermined_recovers_planted_model() {
+        let mut rng = Rng::new(77);
+        let m = 200;
+        let n = 6;
+        let a = rand_mat(&mut rng, m, n);
+        let x_true: Vec<C64> = (0..n).map(|_| C64::new(rng.gauss(), rng.gauss())).collect();
+        let mut b = a.mul_vec(&x_true);
+        for v in b.iter_mut() {
+            *v += C64::new(rng.gauss(), rng.gauss()).scale(1e-6);
+        }
+        let x = lstsq(&a, &b).unwrap();
+        for (g, w) in x.iter().zip(&x_true) {
+            assert!((*g - *w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn ridge_shrinks_norm() {
+        let mut rng = Rng::new(5);
+        let a = rand_mat(&mut rng, 30, 5);
+        let b: Vec<C64> = (0..30).map(|_| C64::new(rng.gauss(), rng.gauss())).collect();
+        let x0 = lstsq(&a, &b).unwrap();
+        let x1 = ridge_lstsq(&a, &b, 10.0).unwrap();
+        let n0: f64 = x0.iter().map(|z| z.norm_sq()).sum();
+        let n1: f64 = x1.iter().map(|z| z.norm_sq()).sum();
+        assert!(n1 < n0);
+    }
+
+    #[test]
+    fn rejects_underdetermined() {
+        let a = CMat::zeros(2, 5);
+        assert!(lstsq(&a, &[C64::ZERO, C64::ZERO]).is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Dense complex matrix (row-major) with the handful of operations the
+//! LS solver needs.
+
+use anyhow::{ensure, Result};
+
+use crate::util::C64;
+
+/// Dense complex matrix, row-major storage.
+#[derive(Clone, Debug)]
+pub struct CMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<C64>,
+}
+
+impl CMat {
+    pub fn zeros(rows: usize, cols: usize) -> CMat {
+        CMat { rows, cols, data: vec![C64::ZERO; rows * cols] }
+    }
+
+    pub fn from_rows(rows_v: Vec<Vec<C64>>) -> Result<CMat> {
+        ensure!(!rows_v.is_empty(), "empty matrix");
+        let cols = rows_v[0].len();
+        ensure!(rows_v.iter().all(|r| r.len() == cols), "ragged rows");
+        let rows = rows_v.len();
+        let data = rows_v.into_iter().flatten().collect();
+        Ok(CMat { rows, cols, data })
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> C64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut C64 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Conjugate-transpose times vector: A^H y.
+    pub fn hermitian_mul_vec(&self, y: &[C64]) -> Vec<C64> {
+        assert_eq!(y.len(), self.rows);
+        let mut out = vec![C64::ZERO; self.cols];
+        for r in 0..self.rows {
+            let yr = y[r];
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            for (c, a) in row.iter().enumerate() {
+                out[c] += a.conj() * yr;
+            }
+        }
+        out
+    }
+
+    /// A x.
+    pub fn mul_vec(&self, x: &[C64]) -> Vec<C64> {
+        assert_eq!(x.len(), self.cols);
+        let mut out = vec![C64::ZERO; self.rows];
+        for r in 0..self.rows {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            let mut acc = C64::ZERO;
+            for (a, b) in row.iter().zip(x) {
+                acc += *a * *b;
+            }
+            out[r] = acc;
+        }
+        out
+    }
+
+    /// Gram matrix A^H A (cols x cols, Hermitian).
+    pub fn gram(&self) -> CMat {
+        let n = self.cols;
+        let mut g = CMat::zeros(n, n);
+        for r in 0..self.rows {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            for i in 0..n {
+                let ai = row[i].conj();
+                for j in i..n {
+                    *g.at_mut(i, j) += ai * row[j];
+                }
+            }
+        }
+        // mirror
+        for i in 0..n {
+            for j in 0..i {
+                *g.at_mut(i, j) = g.at(j, i).conj();
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(re: f64, im: f64) -> C64 {
+        C64::new(re, im)
+    }
+
+    #[test]
+    fn mul_vec_known() {
+        let a = CMat::from_rows(vec![
+            vec![c(1.0, 0.0), c(0.0, 1.0)],
+            vec![c(2.0, 0.0), c(0.0, 0.0)],
+        ])
+        .unwrap();
+        let y = a.mul_vec(&[c(1.0, 0.0), c(1.0, 0.0)]);
+        assert!((y[0] - c(1.0, 1.0)).abs() < 1e-15);
+        assert!((y[1] - c(2.0, 0.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gram_is_hermitian_psd() {
+        let a = CMat::from_rows(vec![
+            vec![c(1.0, 2.0), c(-0.5, 0.3)],
+            vec![c(0.0, -1.0), c(2.0, 0.0)],
+            vec![c(0.7, 0.7), c(1.0, -1.0)],
+        ])
+        .unwrap();
+        let g = a.gram();
+        for i in 0..2 {
+            for j in 0..2 {
+                assert!((g.at(i, j) - g.at(j, i).conj()).abs() < 1e-12);
+            }
+            assert!(g.at(i, i).re > 0.0);
+            assert!(g.at(i, i).im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn hermitian_mul_vec_matches_definition() {
+        let a = CMat::from_rows(vec![
+            vec![c(1.0, 1.0), c(2.0, -1.0)],
+            vec![c(0.5, 0.0), c(0.0, 3.0)],
+        ])
+        .unwrap();
+        let y = [c(1.0, -1.0), c(2.0, 0.5)];
+        let got = a.hermitian_mul_vec(&y);
+        // manual: out[c] = sum_r conj(A[r][c]) y[r]
+        let want0 = a.at(0, 0).conj() * y[0] + a.at(1, 0).conj() * y[1];
+        let want1 = a.at(0, 1).conj() * y[0] + a.at(1, 1).conj() * y[1];
+        assert!((got[0] - want0).abs() < 1e-14);
+        assert!((got[1] - want1).abs() < 1e-14);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        assert!(CMat::from_rows(vec![vec![C64::ZERO], vec![C64::ZERO, C64::ZERO]]).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Complex dense linear algebra: matrices, QR decomposition and
+//! regularized least squares — the solver behind the GMP baseline's
+//! indirect-learning fit and the OFDM equalizer.
+
+pub mod lstsq;
+pub mod matrix;
+
+pub use lstsq::{lstsq, ridge_lstsq};
+pub use matrix::CMat;

@@ -1,0 +1,260 @@
+//! DPD-NeuralEngine CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser; no clap offline):
+//!   run          end-to-end linearization (OFDM -> DPD -> PA -> ACPR/EVM)
+//!   stream       multi-stream coordinator throughput run
+//!   asic-report  Fig. 5 post-layout-style spec from the models
+//!   fpga-report  Table I / Fig. 4 resource estimates
+//!   sweep        Fig. 3 precision x activation sweep
+//!   info         artifact manifest summary
+//!
+//! Common flags: --artifacts <dir>, --engine <fixed|native|cyclesim|hlo>,
+//! --streams <n>, --symbols <n>, --seed <n>
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use dpd_ne::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use dpd_ne::dpd::qgru::{ActKind, LutTables, QGruDpd};
+use dpd_ne::dpd::weights::{GruWeights, QGruWeights};
+use dpd_ne::dpd::Dpd;
+use dpd_ne::fixed::QSpec;
+use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
+use dpd_ne::metrics::evm::evm_db_nmse;
+use dpd_ne::pa::{PaSpec, RappMemPa};
+use dpd_ne::report::{f1, f2, f3, Table};
+use dpd_ne::runtime::Manifest;
+use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            flags.insert(name.to_string(), val);
+            i += 2;
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn engine_kind(flags: &HashMap<String, String>) -> Result<EngineKind> {
+    Ok(match flags.get("engine").map(String::as_str).unwrap_or("fixed") {
+        "fixed" => EngineKind::Fixed,
+        "native" => EngineKind::NativeF64,
+        "cyclesim" => EngineKind::CycleSim,
+        "hlo" => EngineKind::Hlo,
+        other => bail!("unknown engine '{other}'"),
+    })
+}
+
+fn artifacts(flags: &HashMap<String, String>) -> Option<PathBuf> {
+    flags.get("artifacts").map(PathBuf::from)
+}
+
+fn usage() -> &'static str {
+    "usage: dpd-ne <run|stream|asic-report|fpga-report|sweep|info> [flags]\n\
+     flags: --artifacts <dir> --engine <fixed|native|cyclesim|hlo> \
+     --streams <n> --symbols <n> --seed <n>"
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().cloned() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let (_pos, flags) = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "run" => cmd_run(&flags),
+        "stream" => cmd_stream(&flags),
+        "asic-report" => cmd_asic_report(&flags),
+        "fpga-report" => cmd_fpga_report(),
+        "sweep" => cmd_sweep(&flags),
+        "info" => cmd_info(&flags),
+        other => bail!("unknown command '{other}'\n{}", usage()),
+    }
+}
+
+fn test_signal(flags: &HashMap<String, String>) -> Result<dpd_ne::signal::ofdm::OfdmSignal> {
+    let n_symbols: usize = flags.get("symbols").map(|s| s.parse()).transpose()?.unwrap_or(24);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+    OfdmModulator::generate(&OfdmConfig { n_symbols, seed, ..Default::default() })
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
+    let m = Manifest::discover(artifacts(flags).as_deref())?;
+    let pa = RappMemPa::new(PaSpec::load(&m.pa_model)?);
+    let g = pa.spec.target_gain();
+    let sig = test_signal(flags)?;
+
+    let coord = Coordinator::new(CoordinatorConfig {
+        engine: engine_kind(flags)?,
+        artifacts: artifacts(flags),
+        ..Default::default()
+    });
+
+    let y_off = pa.run(&sig.iq);
+    let off = acpr_db(&y_off, &AcprConfig::default())?;
+    let evm_off = evm_db_nmse(&y_off, &sig.iq, g);
+
+    let out = coord.run_stream(&sig.iq)?;
+    let y_on = pa.run(&out.iq);
+    let on = acpr_db(&y_on, &AcprConfig::default())?;
+    let evm_on = evm_db_nmse(&y_on, &sig.iq, g);
+
+    let mut t = Table::new(
+        "End-to-end linearization (paper: ACPR -45.3 dBc, EVM -39.8 dB)",
+        &["config", "ACPR (dBc)", "EVM (dB)"],
+    );
+    t.row(&["DPD off".into(), f1(off.acpr_dbc), f1(evm_off)]);
+    t.row(&[format!("DPD on ({:?})", coord.cfg.engine), f1(on.acpr_dbc), f1(evm_on)]);
+    println!("{}", t.render());
+    println!(
+        "engine throughput: {:.2} MSps ({:.3}x of the 250 MSps line rate)",
+        out.stats.engine_msps(),
+        out.stats.realtime_factor_vs_250msps()
+    );
+    Ok(())
+}
+
+fn cmd_stream(flags: &HashMap<String, String>) -> Result<()> {
+    let n_streams: usize = flags.get("streams").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let sig = test_signal(flags)?;
+    let coord = Coordinator::new(CoordinatorConfig {
+        engine: engine_kind(flags)?,
+        artifacts: artifacts(flags),
+        ..Default::default()
+    });
+    let inputs: Vec<Vec<[f64; 2]>> = (0..n_streams).map(|_| sig.iq.clone()).collect();
+    let t0 = std::time::Instant::now();
+    let outs = coord.run_streams(inputs)?;
+    let wall = t0.elapsed();
+    let total: u64 = outs.iter().map(|o| o.stats.samples_out).sum();
+    let mut t = Table::new(
+        "Multi-stream coordinator (mMIMO fan-out)",
+        &["stream", "samples", "engine MSps", "frame lat mean", "frame lat max"],
+    );
+    for (i, o) in outs.iter().enumerate() {
+        t.row(&[
+            format!("{i}"),
+            o.stats.samples_out.to_string(),
+            f2(o.stats.engine_msps()),
+            format!("{:?}", o.stats.lat_mean),
+            format!("{:?}", o.stats.lat_max),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "aggregate: {} samples in {:?} = {:.2} MSps across {} streams",
+        total,
+        wall,
+        total as f64 / wall.as_secs_f64() / 1e6,
+        outs.len()
+    );
+    Ok(())
+}
+
+fn cmd_asic_report(flags: &HashMap<String, String>) -> Result<()> {
+    let m = Manifest::discover(artifacts(flags).as_deref())?;
+    let w = QGruWeights::load_params_int(&m.weights_main, QSpec::new(m.qspec_bits)?)?;
+    let s = dpd_ne::accel::AsicSpec::nominal(&w, true);
+    let mut t = Table::new(
+        "ASIC spec (paper Fig. 5: 2 GHz, 0.9 V, 250 MSps, 7.5 ns, 256.5 GOPS, 195 mW, 0.2 mm², 6.58 TOPS/W/mm²)",
+        &["metric", "model", "paper"],
+    );
+    t.row(&["f_clk (GHz)".into(), f2(s.f_clk_ghz), "2.0".into()]);
+    t.row(&["f_s,I/Q (MSps)".into(), f1(s.fs_msps), "250".into()]);
+    t.row(&["OP/sample".into(), s.ops_per_sample.to_string(), "1026".into()]);
+    t.row(&["latency (ns)".into(), f2(s.latency_ns), "7.5".into()]);
+    t.row(&["throughput (GOPS)".into(), f1(s.throughput_gops), "256.5".into()]);
+    t.row(&["power (mW)".into(), f1(s.power.total_mw()), "195".into()]);
+    t.row(&["area (mm²)".into(), f3(s.area.total_mm2()), "0.2".into()]);
+    t.row(&["GOPS/W".into(), f1(s.power_efficiency_gops_w()), "1315.4".into()]);
+    t.row(&["GOPS/mm²".into(), f1(s.area_efficiency_gops_mm2()), "1282.5".into()]);
+    t.row(&["PAE (TOPS/W/mm²)".into(), f2(s.pae_tops_w_mm2()), "6.58".into()]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_fpga_report() -> Result<()> {
+    use dpd_ne::accel::fpga::{FpgaAct, FpgaCostModel, ZYNQ_7020};
+    let model = FpgaCostModel::default();
+    let mut t = Table::new(
+        "Zynq-7020 utilization (paper Table I)",
+        &["variant", "LUT", "FF", "DSP", "BRAM"],
+    );
+    for (label, act) in [("LUT-Sig./Tanh", FpgaAct::LutTables), ("Hard-Sig./Tanh", FpgaAct::Hard)] {
+        let (u, _) = model.estimate(act);
+        let (lp, fp, dp, _) = u.pct(&ZYNQ_7020);
+        t.row(&[
+            label.into(),
+            format!("{} ({:.1}%)", u.lut, lp),
+            format!("{} ({:.1}%)", u.ff, fp),
+            format!("{} ({:.1}%)", u.dsp, dp),
+            u.bram.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let (sig_red, tanh_red) = model.reduction_factors();
+    println!("Fig. 4 reductions: sigmoid {sig_red:.1}x, tanh {tanh_red:.1}x (paper: 18.9x / 35.3x)");
+    Ok(())
+}
+
+fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
+    let m = Manifest::discover(artifacts(flags).as_deref())?;
+    let pa = RappMemPa::new(PaSpec::load(&m.pa_model)?);
+    let g = pa.spec.target_gain();
+    let sig = test_signal(flags)?;
+    let mut t = Table::new(
+        "Fig. 3: linearization vs precision x activation",
+        &["bits", "act", "ACPR (dBc)", "EVM (dB)"],
+    );
+    let mut sweep = m.sweep.clone();
+    sweep.sort_by_key(|(name, _)| {
+        let bits: u32 = name[1..name.find('_').unwrap_or(1)].parse().unwrap_or(0);
+        (bits, name.clone())
+    });
+    for (_name, path) in &sweep {
+        let fw = GruWeights::load(path)?;
+        let bits = fw.meta_bits.context("missing bits meta")?;
+        let act_name = fw.meta_act.clone().unwrap_or_default();
+        let spec = QSpec::new(bits)?;
+        let qw = fw.quantize(spec);
+        let act = if act_name == "hard" {
+            ActKind::Hard
+        } else {
+            ActKind::Lut(LutTables::default_for(spec))
+        };
+        let mut dpd = QGruDpd::new(qw, act);
+        let z = dpd.run(&sig.iq);
+        let y = pa.run(&z);
+        let a = acpr_db(&y, &AcprConfig::default())?;
+        let e = evm_db_nmse(&y, &sig.iq, g);
+        t.row(&[bits.to_string(), act_name, f1(a.acpr_dbc), f1(e)]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
+    let m = Manifest::discover(artifacts(flags).as_deref())?;
+    println!("artifact tree: {}", m.root.display());
+    println!("model: hidden={} features={} params={}", m.hidden, m.features, m.n_params);
+    println!("qspec: {} bits", m.qspec_bits);
+    println!("hlo executables:");
+    for e in &m.hlo {
+        println!("  {} kind={} act={} shape=({},{},2)", e.file, e.kind, e.act, e.batch, e.time);
+    }
+    println!("sweep configs: {}", m.sweep.len());
+    println!("golden vectors: {}", m.golden.len());
+    Ok(())
+}

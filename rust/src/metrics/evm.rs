@@ -1,0 +1,91 @@
+//! Error Vector Magnitude.
+//!
+//! Two forms, both used in the DPD literature:
+//! * **NMSE-EVM** (time domain): 10 log10(||y - g x||^2 / ||g x||^2)
+//!   against the linear reference g·x — what simulation papers report
+//!   and what the paper's -39.8 dB corresponds to;
+//! * **constellation EVM** lives in `signal::ofdm::OfdmSignal`
+//!   (per-subcarrier, after one-tap equalization — the VSA view).
+
+use crate::util::C64;
+
+/// NMSE in dB between a signal and a reference (same length).
+pub fn nmse_db(y: &[[f64; 2]], reference: &[[f64; 2]]) -> f64 {
+    assert_eq!(y.len(), reference.len());
+    let mut err = 0.0;
+    let mut refp = 0.0;
+    for (a, b) in y.iter().zip(reference) {
+        let dr = a[0] - b[0];
+        let di = a[1] - b[1];
+        err += dr * dr + di * di;
+        refp += b[0] * b[0] + b[1] * b[1];
+    }
+    10.0 * (err / refp).log10()
+}
+
+/// Time-domain EVM of PA output `y` against the linear target `g * x`.
+pub fn evm_db_nmse(y: &[[f64; 2]], x: &[[f64; 2]], g: C64) -> f64 {
+    let target: Vec<[f64; 2]> = x
+        .iter()
+        .map(|&[i, q]| {
+            let t = C64::new(i, q) * g;
+            [t.re, t.im]
+        })
+        .collect();
+    nmse_db(y, &target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn zero_error_is_minus_inf() {
+        let x = vec![[1.0, -1.0]; 10];
+        assert!(nmse_db(&x, &x).is_infinite());
+    }
+
+    #[test]
+    fn known_value() {
+        let r = vec![[1.0, 0.0]; 100];
+        let y: Vec<[f64; 2]> = r.iter().map(|&[i, q]| [i * 1.1, q]).collect();
+        assert!((nmse_db(&y, &r) - 10.0 * 0.01f64.log10()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn evm_perfect_linear_chain() {
+        check("evm zero for perfect gain", 20, |rng| {
+            let g = C64::new(rng.range(0.5, 1.5), rng.range(-0.5, 0.5));
+            let x: Vec<[f64; 2]> = (0..64).map(|_| [rng.gauss(), rng.gauss()]).collect();
+            let y: Vec<[f64; 2]> = x
+                .iter()
+                .map(|&[i, q]| {
+                    let v = C64::new(i, q) * g;
+                    [v.re, v.im]
+                })
+                .collect();
+            let evm = evm_db_nmse(&y, &x, g);
+            if evm > -200.0 {
+                return Err(format!("expected -inf-ish, got {evm}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn evm_monotone_in_noise() {
+        let mut rng = crate::util::Rng::new(1);
+        let x: Vec<[f64; 2]> = (0..512).map(|_| [rng.gauss(), rng.gauss()]).collect();
+        let mut last = -1000.0;
+        for noise in [0.001, 0.01, 0.1] {
+            let y: Vec<[f64; 2]> = x
+                .iter()
+                .map(|&[i, q]| [i + noise * rng.gauss(), q + noise * rng.gauss()])
+                .collect();
+            let evm = evm_db_nmse(&y, &x, C64::ONE);
+            assert!(evm > last);
+            last = evm;
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Linearization quality metrics: ACPR (the paper's headline dBc
+//! figure), EVM (NMSE-form and constellation-form), NMSE.
+
+pub mod acpr;
+pub mod evm;
+
+pub use acpr::{acpr_db, AcprConfig, AcprResult};
+pub use evm::{evm_db_nmse, nmse_db};

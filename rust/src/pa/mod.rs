@@ -1,0 +1,11 @@
+//! Power-amplifier behavioral models — the evaluation plant.
+//!
+//! [`RappMemPa`] is the line-for-line rust twin of
+//! `python/compile/pa_model.py` (Rapp AM/AM + AM/PM static stage plus
+//! linear and cubic memory taps), loaded from the shared
+//! `artifacts/pa_model.json` so the rust evaluation plant is the same
+//! amplifier the python side trained against.
+
+pub mod rapp;
+
+pub use rapp::{PaSpec, RappMemPa};

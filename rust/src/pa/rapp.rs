@@ -1,0 +1,183 @@
+//! Rapp-static + memory GaN-Doherty-like PA model.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::C64;
+
+/// PA model parameters (see python `pa_model.PASpec` for semantics).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PaSpec {
+    pub g1: C64,
+    pub asat: f64,
+    pub p: f64,
+    pub apm: f64,
+    pub bpm: f64,
+    pub mem_linear: Vec<C64>,
+    pub mem_cubic: Vec<C64>,
+    pub target_backoff: f64,
+    pub label: String,
+}
+
+impl PaSpec {
+    /// Load from the shared JSON artifact.
+    pub fn load(path: &Path) -> Result<PaSpec> {
+        let j = Json::parse_file(path).context("loading PA spec")?;
+        let pair = |v: &Json| -> Result<C64> {
+            let a = v.as_f64_vec()?;
+            anyhow::ensure!(a.len() == 2, "complex pair must have 2 entries");
+            Ok(C64::new(a[0], a[1]))
+        };
+        let mem = |v: &Json| -> Result<Vec<C64>> { v.as_arr()?.iter().map(pair).collect() };
+        Ok(PaSpec {
+            g1: pair(j.get("g1")?)?,
+            asat: j.get("asat")?.as_f64()?,
+            p: j.get("p")?.as_f64()?,
+            apm: j.get("apm")?.as_f64()?,
+            bpm: j.get("bpm")?.as_f64()?,
+            mem_linear: mem(j.get("mem_linear")?)?,
+            mem_cubic: mem(j.get("mem_cubic")?)?,
+            target_backoff: j.get("target_backoff")?.as_f64()?,
+            label: j.get("label")?.as_str()?.to_string(),
+        })
+    }
+
+    /// The default calibrated spec (python `ganlike_spec()` twin) —
+    /// used by tests and examples when no artifact tree is present.
+    pub fn ganlike() -> PaSpec {
+        PaSpec {
+            g1: C64::new(0.995, 0.087),
+            asat: 0.82,
+            p: 1.1,
+            apm: 0.9,
+            bpm: 1.6,
+            mem_linear: vec![
+                C64::new(0.08, -0.045),
+                C64::new(-0.032, 0.018),
+                C64::new(0.011, -0.006),
+            ],
+            mem_cubic: vec![C64::new(-0.055, 0.035)],
+            target_backoff: 0.95,
+            label: "ganlike-doherty-rapp-mem".to_string(),
+        }
+    }
+
+    /// Small-signal complex gain g1.
+    pub fn linear_gain(&self) -> C64 {
+        self.g1
+    }
+
+    /// The gain a DPD should linearize to (g1 with peak headroom).
+    pub fn target_gain(&self) -> C64 {
+        self.g1.scale(self.target_backoff)
+    }
+}
+
+/// Stateful PA instance (owns delay-line state for streaming use).
+pub struct RappMemPa {
+    pub spec: PaSpec,
+}
+
+impl RappMemPa {
+    pub fn new(spec: PaSpec) -> RappMemPa {
+        RappMemPa { spec }
+    }
+
+    /// Static stage: x * G(|x|) * e^{j phi(|x|)} * g1.
+    #[inline]
+    fn static_stage(&self, x: C64) -> C64 {
+        let s = &self.spec;
+        let a2 = x.norm_sq();
+        let g = (1.0 + (a2 / (s.asat * s.asat)).powf(s.p)).powf(-1.0 / (2.0 * s.p));
+        let phi = s.apm * a2 / (1.0 + s.bpm * a2);
+        x.scale(g) * C64::cis(phi) * s.g1
+    }
+
+    /// Run a burst through the PA (batch form; zero initial memory,
+    /// matching `pa_model.apply_pa_np`).
+    pub fn run(&self, x: &[[f64; 2]]) -> Vec<[f64; 2]> {
+        let n = x.len();
+        // static stage first
+        let s: Vec<C64> = x.iter().map(|&[i, q]| self.static_stage(C64::new(i, q))).collect();
+        let mut y: Vec<C64> = s.clone();
+        for (m, &b) in self.spec.mem_linear.iter().enumerate() {
+            let d = m + 1;
+            for i in d..n {
+                y[i] += b * s[i - d];
+            }
+        }
+        for (m, &c) in self.spec.mem_cubic.iter().enumerate() {
+            let d = m + 1;
+            for i in d..n {
+                let v = s[i - d];
+                y[i] += c * v.scale(v.norm_sq());
+            }
+        }
+        y.iter().map(|z| [z.re, z.im]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::acpr::{acpr_db, AcprConfig};
+    use crate::signal::ofdm::{OfdmConfig, OfdmModulator};
+
+    #[test]
+    fn small_signal_linear() {
+        let pa = RappMemPa::new(PaSpec::ganlike());
+        let x = vec![[1e-4, 0.0]; 100];
+        let y = pa.run(&x);
+        let g_eff = pa.spec.g1
+            + pa.spec.mem_linear.iter().fold(C64::ZERO, |a, &b| a + b) * pa.spec.g1;
+        let got = C64::new(y[50][0], y[50][1]).scale(1e4);
+        assert!((got - g_eff).abs() < 1e-3, "{got:?} vs {g_eff:?}");
+    }
+
+    #[test]
+    fn compression_at_peak_1p5_to_4p5_db() {
+        let pa = RappMemPa::new(PaSpec::ganlike());
+        let gain_at = |a: f64| {
+            let x = vec![[a, 0.0]; 50];
+            let y = pa.run(&x);
+            (y[40][0].powi(2) + y[40][1].powi(2)).sqrt() / a
+        };
+        let comp = 20.0 * (gain_at(1e-3) / gain_at(0.95)).log10();
+        assert!((1.5..4.5).contains(&comp), "compression {comp} dB");
+    }
+
+    #[test]
+    fn amam_monotone() {
+        let pa = RappMemPa::new(PaSpec::ganlike());
+        let mut last = 0.0;
+        for k in 1..160 {
+            let a = 0.01 * k as f64;
+            let x = vec![[a, 0.0]; 20];
+            let y = pa.run(&x);
+            let out = (y[15][0].powi(2) + y[15][1].powi(2)).sqrt();
+            assert!(out > last, "non-monotone at {a}");
+            last = out;
+        }
+    }
+
+    #[test]
+    fn uncorrected_acpr_regime() {
+        let sig = OfdmModulator::generate(&OfdmConfig { n_symbols: 32, seed: 7, ..Default::default() }).unwrap();
+        let pa = RappMemPa::new(PaSpec::ganlike());
+        let y = pa.run(&sig.iq);
+        let r = acpr_db(&y, &AcprConfig::default()).unwrap();
+        assert!(
+            (-35.0..-28.0).contains(&r.acpr_dbc),
+            "uncorrected ACPR {} dBc",
+            r.acpr_dbc
+        );
+    }
+
+    #[test]
+    fn target_gain_backoff() {
+        let s = PaSpec::ganlike();
+        assert!((s.target_gain().abs() / s.linear_gain().abs() - 0.95).abs() < 1e-12);
+    }
+}

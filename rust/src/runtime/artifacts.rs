@@ -1,0 +1,155 @@
+//! Artifact manifest: the inventory `aot.py` writes next to the HLO
+//! text files, weight JSONs and golden vectors.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One lowered HLO executable description.
+#[derive(Clone, Debug)]
+pub struct HloEntry {
+    pub file: String,
+    /// "int" (Q2.f codes) or "float" (f32)
+    pub kind: String,
+    pub bits: u32,
+    pub act: String,
+    pub batch: usize,
+    pub time: usize,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub hidden: usize,
+    pub features: usize,
+    pub n_params: usize,
+    pub qspec_bits: u32,
+    pub pa_model: PathBuf,
+    pub weights_main: PathBuf,
+    pub weights_float: PathBuf,
+    pub sweep: Vec<(String, PathBuf)>,
+    pub hlo: Vec<HloEntry>,
+    pub golden: Vec<PathBuf>,
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&root.join("manifest.json")).context("loading manifest")?;
+        let model = j.get("model")?;
+        let weights = j.get("weights")?;
+        let mut sweep = Vec::new();
+        if let Some(sw) = weights.opt("sweep") {
+            for (name, path) in sw.as_obj()? {
+                sweep.push((name.clone(), root.join(path.as_str()?)));
+            }
+        }
+        let mut hlo = Vec::new();
+        for e in j.get("hlo")?.as_arr()? {
+            hlo.push(HloEntry {
+                file: e.get("file")?.as_str()?.to_string(),
+                kind: e.get("kind")?.as_str()?.to_string(),
+                bits: e.get("bits")?.as_usize()? as u32,
+                act: e.get("act")?.as_str()?.to_string(),
+                batch: e.get("batch")?.as_usize()?,
+                time: e.get("time")?.as_usize()?,
+            });
+        }
+        let golden = j
+            .get("golden")?
+            .as_arr()?
+            .iter()
+            .map(|g| Ok(root.join(g.as_str()?)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            root: root.to_path_buf(),
+            hidden: model.get("hidden")?.as_usize()?,
+            features: model.get("features")?.as_usize()?,
+            n_params: model.get("n_params")?.as_usize()?,
+            qspec_bits: j.get("qspec")?.get("bits")?.as_usize()? as u32,
+            pa_model: root.join(j.get("pa")?.as_str()?),
+            weights_main: root.join(weights.get("main")?.as_str()?),
+            weights_float: root.join(weights.get("float")?.as_str()?),
+            sweep,
+            hlo,
+            golden,
+        })
+    }
+
+    /// Locate the artifact tree: explicit path, $DPD_NE_ARTIFACTS, or
+    /// the crate-root `artifacts/` directory.
+    pub fn discover(explicit: Option<&Path>) -> Result<Manifest> {
+        if let Some(p) = explicit {
+            return Manifest::load(p);
+        }
+        if let Ok(env) = std::env::var("DPD_NE_ARTIFACTS") {
+            return Manifest::load(Path::new(&env));
+        }
+        let default = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if default.join("manifest.json").exists() {
+            return Manifest::load(&default);
+        }
+        bail!(
+            "no artifact tree found: pass a path, set DPD_NE_ARTIFACTS, \
+             or run `make artifacts`"
+        )
+    }
+
+    /// The preferred integer HLO entry with the longest frame.
+    pub fn best_int_hlo(&self) -> Option<&HloEntry> {
+        self.hlo
+            .iter()
+            .filter(|e| e.kind == "int")
+            .max_by_key(|e| e.time)
+    }
+
+    /// An integer HLO entry with an exact frame length.
+    pub fn int_hlo_with_time(&self, time: usize) -> Option<&HloEntry> {
+        self.hlo
+            .iter()
+            .find(|e| e.kind == "int" && e.time == time)
+    }
+
+    pub fn hlo_path(&self, e: &HloEntry) -> PathBuf {
+        self.root.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let Some(root) = artifacts_root() else {
+            eprintln!("skipping (no artifacts)");
+            return;
+        };
+        let m = Manifest::load(&root).unwrap();
+        assert_eq!(m.n_params, 502);
+        assert_eq!(m.hidden, 10);
+        assert_eq!(m.qspec_bits, 12);
+        assert!(!m.hlo.is_empty());
+        assert!(m.best_int_hlo().is_some());
+        assert!(m.pa_model.exists());
+        assert!(m.weights_main.exists());
+        for g in &m.golden {
+            assert!(g.exists(), "{g:?} missing");
+        }
+        // sweep covers the Fig. 3 grid
+        assert!(m.sweep.len() >= 4);
+    }
+
+    #[test]
+    fn discover_fails_cleanly_without_tree() {
+        let err = Manifest::load(Path::new("/nonexistent/nowhere")).unwrap_err();
+        assert!(format!("{err:#}").contains("manifest"));
+    }
+}

@@ -1,0 +1,181 @@
+//! HLO execution engine: compile-once, execute-many wrapper around the
+//! `xla` crate's PJRT CPU client.
+//!
+//! The artifacts are HLO **text** (not serialized protos): jax >= 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids (see /opt/xla-example/README.md). The
+//! lowered modules take one `(batch, time, 2)` tensor and return a
+//! 1-tuple of the same shape; `to_tuple1()` unwraps it.
+//!
+//! Frame semantics: the lowered GRU resets its hidden state at frame
+//! start (h0 = 0), matching the paper's frame-length-50 training
+//! convention. Streaming callers feed contiguous frames and accept the
+//! per-frame transient, or use the native engines for sample streaming.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::fixed::QSpec;
+
+/// A compiled GRU-DPD HLO executable (integer or float variant).
+pub struct HloGruEngine {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub time: usize,
+    pub is_int: bool,
+    pub spec: Option<QSpec>,
+    /// executions performed (for stats)
+    pub frames_run: u64,
+}
+
+impl HloGruEngine {
+    /// Load + compile an HLO text artifact on a PJRT client.
+    pub fn load(
+        client: &xla::PjRtClient,
+        path: &Path,
+        batch: usize,
+        time: usize,
+        is_int: bool,
+        spec: Option<QSpec>,
+    ) -> Result<HloGruEngine> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(HloGruEngine { exe, batch, time, is_int, spec, frames_run: 0 })
+    }
+
+    /// Execute one integer frame of exactly `time` samples (codes).
+    pub fn run_frame_codes(&mut self, iq: &[[i32; 2]]) -> Result<Vec<[i32; 2]>> {
+        ensure!(self.is_int, "not an integer engine");
+        ensure!(self.batch == 1, "batch>1 not wired");
+        ensure!(
+            iq.len() == self.time,
+            "frame length {} != engine time {}",
+            iq.len(),
+            self.time
+        );
+        let flat: Vec<i32> = iq.iter().flat_map(|p| [p[0], p[1]]).collect();
+        let lit = xla::Literal::vec1(&flat).reshape(&[1, self.time as i64, 2])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let vals = out.to_vec::<i32>()?;
+        ensure!(vals.len() == 2 * self.time, "unexpected output size");
+        self.frames_run += 1;
+        Ok(vals.chunks_exact(2).map(|c| [c[0], c[1]]).collect())
+    }
+
+    /// Execute one float frame of exactly `time` samples.
+    pub fn run_frame_f32(&mut self, iq: &[[f32; 2]]) -> Result<Vec<[f32; 2]>> {
+        ensure!(!self.is_int, "not a float engine");
+        ensure!(iq.len() == self.time, "frame length mismatch");
+        let flat: Vec<f32> = iq.iter().flat_map(|p| [p[0], p[1]]).collect();
+        let lit = xla::Literal::vec1(&flat).reshape(&[1, self.time as i64, 2])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let vals = out.to_vec::<f32>()?;
+        self.frames_run += 1;
+        Ok(vals.chunks_exact(2).map(|c| [c[0], c[1]]).collect())
+    }
+
+    /// Process an arbitrary-length burst of f64 I/Q through the integer
+    /// engine: quantize, frame (zero-padding the tail), execute,
+    /// dequantize, trim.
+    pub fn run_burst(&mut self, iq: &[[f64; 2]]) -> Result<Vec<[f64; 2]>> {
+        let spec = self.spec.context("integer engine needs a QSpec")?;
+        let mut out = Vec::with_capacity(iq.len());
+        let t = self.time;
+        let mut frame = vec![[0i32; 2]; t];
+        let mut pos = 0;
+        while pos < iq.len() {
+            let n = t.min(iq.len() - pos);
+            for k in 0..n {
+                frame[k] = [
+                    spec.quantize(iq[pos + k][0]),
+                    spec.quantize(iq[pos + k][1]),
+                ];
+            }
+            for k in n..t {
+                frame[k] = [0, 0];
+            }
+            let y = self.run_frame_codes(&frame)?;
+            out.extend(
+                y[..n]
+                    .iter()
+                    .map(|&[i, q]| [spec.dequantize(i), spec.dequantize(q)]),
+            );
+            pos += n;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpd::qgru::{ActKind, QGruDpd};
+    use crate::dpd::weights::QGruWeights;
+    use crate::runtime::artifacts::Manifest;
+
+    fn manifest() -> Option<Manifest> {
+        Manifest::discover(None).ok()
+    }
+
+    #[test]
+    fn hlo_engine_bit_exact_with_native_qgru() {
+        // THE cross-layer test: the PJRT-executed Pallas lowering must
+        // equal the native rust datapath bit for bit on a full frame.
+        let Some(m) = manifest() else {
+            eprintln!("skipping (no artifacts)");
+            return;
+        };
+        let entry = m.int_hlo_with_time(256).expect("t256 artifact").clone();
+        let client = xla::PjRtClient::cpu().unwrap();
+        let spec = QSpec::new(entry.bits).unwrap();
+        let mut eng = HloGruEngine::load(
+            &client,
+            &m.hlo_path(&entry),
+            entry.batch,
+            entry.time,
+            true,
+            Some(spec),
+        )
+        .unwrap();
+
+        let w = QGruWeights::load_params_int(&m.weights_main, spec).unwrap();
+        let mut native = QGruDpd::new(w, ActKind::Hard);
+
+        let mut rng = crate::util::Rng::new(4242);
+        let amp = (0.6 * spec.scale()) as i64;
+        let iq: Vec<[i32; 2]> = (0..entry.time)
+            .map(|_| [rng.int_in(-amp, amp) as i32, rng.int_in(-amp, amp) as i32])
+            .collect();
+
+        let hlo_out = eng.run_frame_codes(&iq).unwrap();
+        let native_out = native.run_codes(&iq);
+        assert_eq!(hlo_out, native_out, "HLO/PJRT diverged from native datapath");
+    }
+
+    #[test]
+    fn burst_framing_handles_ragged_tail() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping (no artifacts)");
+            return;
+        };
+        let entry = m.int_hlo_with_time(256).unwrap().clone();
+        let client = xla::PjRtClient::cpu().unwrap();
+        let spec = QSpec::new(entry.bits).unwrap();
+        let mut eng =
+            HloGruEngine::load(&client, &m.hlo_path(&entry), 1, entry.time, true, Some(spec))
+                .unwrap();
+        let iq = vec![[0.1, -0.1]; 300]; // 256 + 44 tail
+        let out = eng.run_burst(&iq).unwrap();
+        assert_eq!(out.len(), 300);
+        assert_eq!(eng.frames_run, 2);
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client —
+//! the request-path twin of the build-path lowering. Python never runs
+//! here.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::Manifest;
+pub use engine::HloGruEngine;

@@ -1,0 +1,10 @@
+//! Signal generation & measurement substrate: QAM constellations,
+//! CP-OFDM modulation/demodulation (the paper's 64-QAM OFDM bench
+//! signal), PAPR statistics.
+
+pub mod ofdm;
+pub mod papr;
+pub mod qam;
+
+pub use ofdm::{OfdmConfig, OfdmModulator};
+pub use papr::{papr_db, ccdf};

@@ -1,0 +1,323 @@
+//! CP-OFDM 64-QAM modulator/demodulator — the rust twin of
+//! `python/compile/dataset.py` (same construction: RC symbol
+//! windowing + Kaiser TX lowpass; different RNG stream, same
+//! statistics), plus the receiver used for constellation EVM.
+//!
+//! Channel raster (normalized to fs): occupied BW = n_used/nfft
+//! (default 0.25), i.e. with fs mapped to the paper's 250 MSps this is
+//! a 62.5 MHz signal — the paper's 60 MHz f_BB operating point.
+
+use anyhow::{ensure, Result};
+
+use super::qam;
+use crate::dsp::fft::Fft;
+use crate::dsp::fir::{convolve_same, kaiser_lowpass};
+use crate::dsp::window::rc_edge;
+use crate::util::{C64, Rng};
+
+/// OFDM generator configuration (defaults match the python dataset).
+#[derive(Clone, Debug)]
+pub struct OfdmConfig {
+    pub nfft: usize,
+    pub n_used: usize,
+    pub cp: usize,
+    pub qam: usize,
+    pub n_symbols: usize,
+    pub rms: f64,
+    pub seed: u64,
+    /// raised-cosine overlap length (0 = rectangular)
+    pub window: usize,
+    /// TX lowpass taps (0 = no filter)
+    pub fir_taps: usize,
+    pub fir_cutoff: f64,
+    pub fir_beta: f64,
+}
+
+impl Default for OfdmConfig {
+    fn default() -> Self {
+        OfdmConfig {
+            nfft: 256,
+            n_used: 64,
+            cp: 16,
+            qam: 64,
+            n_symbols: 64,
+            rms: 0.25,
+            seed: 0,
+            window: 12,
+            fir_taps: 511,
+            fir_cutoff: 0.130,
+            fir_beta: 10.0,
+        }
+    }
+}
+
+impl OfdmConfig {
+    /// Samples per OFDM symbol including CP.
+    pub fn sym_len(&self) -> usize {
+        self.nfft + self.cp
+    }
+
+    /// Total burst length in samples.
+    pub fn total_len(&self) -> usize {
+        self.n_symbols * self.sym_len()
+    }
+
+    /// Occupied bandwidth in cycles/sample.
+    pub fn occupied_bw(&self) -> f64 {
+        self.n_used as f64 / self.nfft as f64
+    }
+
+    /// Occupied FFT bins: ±1..±n_used/2, DC unused (python parity).
+    pub fn used_bins(&self) -> Vec<usize> {
+        let half = self.n_used / 2;
+        let mut bins: Vec<usize> = (1..=half).collect();
+        bins.extend((1..=self.n_used - half).map(|k| self.nfft - k));
+        bins
+    }
+}
+
+/// A generated OFDM burst with its ground-truth symbols (for EVM).
+pub struct OfdmSignal {
+    pub cfg: OfdmConfig,
+    pub iq: Vec<[f64; 2]>,
+    /// tx_symbols[s][u] = QAM symbol on used-bin u of OFDM symbol s
+    pub tx_symbols: Vec<Vec<C64>>,
+    /// post-normalization scale actually applied (for reference)
+    pub scale: f64,
+}
+
+/// Stateless modulator namespace.
+pub struct OfdmModulator;
+
+impl OfdmModulator {
+    /// Generate a windowed, filtered CP-OFDM burst (python twin).
+    pub fn generate(cfg: &OfdmConfig) -> Result<OfdmSignal> {
+        ensure!(cfg.nfft.is_power_of_two(), "nfft must be a power of two");
+        ensure!(cfg.n_used < cfg.nfft, "n_used must be < nfft");
+        // the RC taper must fit inside the CP so the FFT body stays
+        // ISI-free (classic W-OFDM layout)
+        ensure!(cfg.window <= cfg.cp, "window must be <= cp");
+
+        let constellation = qam::constellation(cfg.qam)?;
+        let bins = cfg.used_bins();
+        let plan = Fft::new(cfg.nfft)?;
+        let mut rng = Rng::new(cfg.seed);
+        let win = cfg.window;
+        let edge = rc_edge(win.max(1));
+        let sym_len = cfg.sym_len();
+        let total = cfg.total_len();
+
+        let mut x = vec![C64::ZERO; total + win];
+        let mut tx_symbols = Vec::with_capacity(cfg.n_symbols);
+        let root_n = (cfg.nfft as f64).sqrt();
+
+        for s in 0..cfg.n_symbols {
+            // random QAM on the used bins
+            let syms: Vec<C64> = (0..cfg.n_used)
+                .map(|_| constellation[rng.below(cfg.qam as u64) as usize])
+                .collect();
+            let mut spec = vec![C64::ZERO; cfg.nfft];
+            for (u, &b) in bins.iter().enumerate() {
+                spec[b] = syms[u];
+            }
+            tx_symbols.push(syms);
+            // time domain: ifft * sqrt(nfft)
+            plan.inverse(&mut spec);
+            let td: Vec<C64> = spec.iter().map(|z| z.scale(root_n)).collect();
+
+            if win > 0 {
+                // classic W-OFDM: CP + body + `win` cyclic suffix; taper
+                // the first/last `win` samples. Consecutive symbols
+                // overlap-add only inside each other's tapered guards,
+                // so the FFT body stays ISI-free (taper <= CP).
+                let ext_len = cfg.nfft + cfg.cp + win;
+                let start = s * sym_len;
+                for i in 0..ext_len {
+                    // source index into td, cyclically: prefix = CP tail,
+                    // then body, then cyclic suffix
+                    let src = if i < cfg.cp {
+                        cfg.nfft - cfg.cp + i
+                    } else if i < cfg.cp + cfg.nfft {
+                        i - cfg.cp
+                    } else {
+                        i - (cfg.cp + cfg.nfft)
+                    };
+                    let mut w = 1.0;
+                    if i < win {
+                        w = edge[i];
+                    } else if i >= ext_len - win {
+                        w = edge[ext_len - 1 - i];
+                    }
+                    x[start + i] += td[src].scale(w);
+                }
+            } else {
+                let start = s * sym_len;
+                for i in 0..cfg.cp {
+                    x[start + i] = td[cfg.nfft - cfg.cp + i];
+                }
+                for i in 0..cfg.nfft {
+                    x[start + cfg.cp + i] = td[i];
+                }
+            }
+        }
+
+        // drop the trailing suffix skirt
+        let mut iq: Vec<[f64; 2]> = x[..total].iter().map(|z| [z.re, z.im]).collect();
+
+        // TX lowpass
+        if cfg.fir_taps > 0 {
+            let h = kaiser_lowpass(cfg.fir_taps, cfg.fir_cutoff, cfg.fir_beta);
+            iq = convolve_same(&iq, &h);
+        }
+
+        // normalize RMS
+        let p: f64 = iq.iter().map(|v| v[0] * v[0] + v[1] * v[1]).sum::<f64>() / iq.len() as f64;
+        let k = cfg.rms / p.sqrt();
+        for v in iq.iter_mut() {
+            v[0] *= k;
+            v[1] *= k;
+        }
+
+        Ok(OfdmSignal { cfg: cfg.clone(), iq, tx_symbols, scale: k })
+    }
+}
+
+impl OfdmSignal {
+    /// Demodulate a received burst (same timing as this signal) and
+    /// compute constellation EVM in dB after per-subcarrier one-tap LS
+    /// equalization — what a VSA reports.
+    ///
+    /// `rx` must be the received signal aligned to this burst (same
+    /// sample indices). Edge symbols are skipped to avoid filter/PA
+    /// warm-up transients.
+    pub fn constellation_evm_db(&self, rx: &[[f64; 2]]) -> Result<f64> {
+        let cfg = &self.cfg;
+        ensure!(rx.len() >= cfg.total_len(), "rx shorter than burst");
+        let plan = Fft::new(cfg.nfft)?;
+        let bins = cfg.used_bins();
+        let root_n = (cfg.nfft as f64).sqrt();
+        let skip = 2.min(cfg.n_symbols / 4);
+
+        // gather per-subcarrier rx/tx pairs
+        let n_used = cfg.n_used;
+        let mut rx_syms: Vec<Vec<C64>> = Vec::new();
+        let mut tx_syms: Vec<&Vec<C64>> = Vec::new();
+        for s in skip..cfg.n_symbols - skip {
+            let start = s * cfg.sym_len() + cfg.cp;
+            let mut buf: Vec<C64> = rx[start..start + cfg.nfft]
+                .iter()
+                .map(|&[re, im]| C64::new(re, im))
+                .collect();
+            plan.forward(&mut buf);
+            let row: Vec<C64> = bins.iter().map(|&b| buf[b].scale(1.0 / root_n)).collect();
+            rx_syms.push(row);
+            tx_syms.push(&self.tx_symbols[s]);
+        }
+        ensure!(!rx_syms.is_empty(), "no symbols to demodulate");
+
+        // one-tap LS equalizer per subcarrier: h_u = <rx, tx> / <tx, tx>
+        let mut err = 0.0;
+        let mut refp = 0.0;
+        for u in 0..n_used {
+            let mut num = C64::ZERO;
+            let mut den = 0.0;
+            for (r, t) in rx_syms.iter().zip(&tx_syms) {
+                num += r[u] * t[u].conj();
+                den += t[u].norm_sq();
+            }
+            let h = if den > 0.0 { num.scale(1.0 / den) } else { C64::ONE };
+            let hinv = h.recip();
+            for (r, t) in rx_syms.iter().zip(&tx_syms) {
+                let eq = r[u] * hinv;
+                err += (eq - t[u]).norm_sq();
+                refp += t[u].norm_sq();
+            }
+        }
+        Ok(10.0 * (err / refp).log10())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::welch::{band_power, welch_psd, WelchConfig};
+    use crate::signal::papr::papr_db;
+
+    #[test]
+    fn shape_rms_papr() {
+        let cfg = OfdmConfig { n_symbols: 16, ..Default::default() };
+        let sig = OfdmModulator::generate(&cfg).unwrap();
+        assert_eq!(sig.iq.len(), 16 * 272);
+        let rms: f64 = (sig.iq.iter().map(|v| v[0] * v[0] + v[1] * v[1]).sum::<f64>()
+            / sig.iq.len() as f64)
+            .sqrt();
+        assert!((rms - 0.25).abs() < 1e-12);
+        let papr = papr_db(&sig.iq);
+        assert!((7.0..13.0).contains(&papr), "PAPR {papr}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = OfdmConfig { n_symbols: 4, ..Default::default() };
+        let a = OfdmModulator::generate(&cfg).unwrap();
+        let b = OfdmModulator::generate(&cfg).unwrap();
+        assert_eq!(a.iq, b.iq);
+        let c = OfdmModulator::generate(&OfdmConfig { seed: 1, ..cfg }).unwrap();
+        assert_ne!(a.iq, c.iq);
+    }
+
+    #[test]
+    fn spectrum_contained() {
+        let cfg = OfdmConfig { n_symbols: 32, seed: 2, ..Default::default() };
+        let sig = OfdmModulator::generate(&cfg).unwrap();
+        let (f, p) = welch_psd(&sig.iq, &WelchConfig { nfft: 4096, overlap: 0.5 }).unwrap();
+        let inband = band_power(&f, &p, -0.13, 0.13);
+        let adj = band_power(&f, &p, 0.15, 0.4) + band_power(&f, &p, -0.4, -0.15);
+        let acpr = 10.0 * (adj / inband).log10();
+        assert!(acpr < -60.0, "leakage {acpr} dBc");
+    }
+
+    #[test]
+    fn used_bins_exclude_dc_and_are_symmetric() {
+        let cfg = OfdmConfig::default();
+        let bins = cfg.used_bins();
+        assert_eq!(bins.len(), 64);
+        assert!(!bins.contains(&0));
+        for &b in &bins {
+            let mirror = cfg.nfft - b;
+            assert!(bins.contains(&mirror));
+        }
+    }
+
+    #[test]
+    fn self_evm_is_low() {
+        // demodulating the clean generated signal: EVM limited only by
+        // windowing/filter ISI, must be below -35 dB
+        let cfg = OfdmConfig { n_symbols: 16, seed: 3, ..Default::default() };
+        let sig = OfdmModulator::generate(&cfg).unwrap();
+        let evm = sig.constellation_evm_db(&sig.iq).unwrap();
+        assert!(evm < -35.0, "self EVM {evm} dB");
+    }
+
+    #[test]
+    fn evm_detects_distortion() {
+        let cfg = OfdmConfig { n_symbols: 16, seed: 4, ..Default::default() };
+        let sig = OfdmModulator::generate(&cfg).unwrap();
+        // cubic distortion
+        let rx: Vec<[f64; 2]> = sig
+            .iq
+            .iter()
+            .map(|&[i, q]| {
+                let e2 = i * i + q * q;
+                [i * (1.0 - 0.5 * e2), q * (1.0 - 0.5 * e2)]
+            })
+            .collect();
+        let evm = sig.constellation_evm_db(&rx).unwrap();
+        assert!(evm > -30.0, "distorted EVM unexpectedly low: {evm}");
+    }
+
+    #[test]
+    fn occupied_bw_quarter_rate() {
+        assert!((OfdmConfig::default().occupied_bw() - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,65 @@
+//! Peak-to-average power ratio statistics.
+
+/// PAPR of an I/Q burst in dB.
+pub fn papr_db(iq: &[[f64; 2]]) -> f64 {
+    let mut peak = 0.0f64;
+    let mut sum = 0.0f64;
+    for &[i, q] in iq {
+        let p = i * i + q * q;
+        peak = peak.max(p);
+        sum += p;
+    }
+    let avg = sum / iq.len() as f64;
+    10.0 * (peak / avg).log10()
+}
+
+/// CCDF of the instantaneous power: fraction of samples whose PAPR
+/// exceeds each threshold (dB). Returns (thresholds_db, prob).
+pub fn ccdf(iq: &[[f64; 2]], thresholds_db: &[f64]) -> Vec<(f64, f64)> {
+    let n = iq.len() as f64;
+    let avg: f64 = iq.iter().map(|&[i, q]| i * i + q * q).sum::<f64>() / n;
+    thresholds_db
+        .iter()
+        .map(|&t| {
+            let lim = avg * 10f64.powf(t / 10.0);
+            let count = iq.iter().filter(|&&[i, q]| i * i + q * q > lim).count();
+            (t, count as f64 / n)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn constant_envelope_zero_papr() {
+        let iq: Vec<[f64; 2]> = (0..100)
+            .map(|t| {
+                let ph = 0.1 * t as f64;
+                [ph.cos(), ph.sin()]
+            })
+            .collect();
+        assert!(papr_db(&iq).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gaussian_papr_realistic() {
+        let mut rng = Rng::new(0);
+        let iq: Vec<[f64; 2]> = (0..100_000).map(|_| [rng.gauss(), rng.gauss()]).collect();
+        let p = papr_db(&iq);
+        assert!((7.0..14.0).contains(&p), "gaussian PAPR {p}");
+    }
+
+    #[test]
+    fn ccdf_monotone_decreasing() {
+        let mut rng = Rng::new(1);
+        let iq: Vec<[f64; 2]> = (0..10_000).map(|_| [rng.gauss(), rng.gauss()]).collect();
+        let c = ccdf(&iq, &[0.0, 3.0, 6.0, 9.0]);
+        for w in c.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        assert!(c[0].1 > 0.1); // plenty of samples above average power
+    }
+}

@@ -1,0 +1,89 @@
+//! Square-QAM constellations (unit average power) and hard-decision
+//! demapping — what the EVM receiver slices against.
+
+use anyhow::{bail, Result};
+
+use crate::util::C64;
+
+/// Square QAM constellation of the given order (4, 16, 64, 256),
+/// normalized to unit average power. Point order matches the python
+/// generator: meshgrid(levels, levels) flattened row-major, i.e.
+/// index = row*side + col with re = levels[col], im = levels[row].
+pub fn constellation(order: usize) -> Result<Vec<C64>> {
+    let side = (order as f64).sqrt().round() as usize;
+    if side * side != order {
+        bail!("square QAM only, got order {order}");
+    }
+    let levels: Vec<f64> = (0..side).map(|i| (2 * i) as f64 - (side - 1) as f64).collect();
+    let mut pts = Vec::with_capacity(order);
+    for &im in &levels {
+        for &re in &levels {
+            pts.push(C64::new(re, im));
+        }
+    }
+    let p_avg: f64 = pts.iter().map(|z| z.norm_sq()).sum::<f64>() / order as f64;
+    let k = 1.0 / p_avg.sqrt();
+    Ok(pts.into_iter().map(|z| z.scale(k)).collect())
+}
+
+/// Nearest-constellation-point index (hard decision).
+pub fn slice_symbol(points: &[C64], z: C64) -> usize {
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for (i, &p) in points.iter().enumerate() {
+        let d = (z - p).norm_sq();
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn unit_average_power() {
+        for order in [4usize, 16, 64, 256] {
+            let c = constellation(order).unwrap();
+            assert_eq!(c.len(), order);
+            let p: f64 = c.iter().map(|z| z.norm_sq()).sum::<f64>() / order as f64;
+            assert!((p - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(constellation(32).is_err());
+        assert!(constellation(8).is_err());
+    }
+
+    #[test]
+    fn qam64_matches_python_order() {
+        // python: levels = 2*arange(8)-7; meshgrid(re, im); (re+1j*im)/sqrt(42)
+        let c = constellation(64).unwrap();
+        let s = 42f64.sqrt();
+        assert!((c[0] - C64::new(-7.0 / s, -7.0 / s)).abs() < 1e-12);
+        assert!((c[7] - C64::new(7.0 / s, -7.0 / s)).abs() < 1e-12);
+        assert!((c[56] - C64::new(-7.0 / s, 7.0 / s)).abs() < 1e-12);
+        assert!((c[63] - C64::new(7.0 / s, 7.0 / s)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slicing_inverts_mapping() {
+        check("slice inverts map", 50, |rng| {
+            let c = constellation(64).unwrap();
+            let idx = rng.below(64) as usize;
+            // small noise, well inside the decision region (d_min/2 = 1/sqrt(42))
+            let noise = C64::new(rng.gauss(), rng.gauss()).scale(0.02);
+            let got = slice_symbol(&c, c[idx] + noise);
+            if got != idx {
+                return Err(format!("sliced {got} != {idx}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,182 @@
+//! Minimal complex-f64 type (no num-complex offline; this also keeps
+//! the arithmetic identical to the python reference, which works in
+//! explicit I/Q real pairs).
+
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Complex number with f64 parts. `re` = I, `im` = Q.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+    pub const ONE: C64 = C64 { re: 1.0, im: 0.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Self {
+        C64 { re, im }
+    }
+
+    /// e^{j theta}
+    #[inline]
+    pub fn cis(theta: f64) -> Self {
+        let (s, c) = theta.sin_cos();
+        C64 { re: c, im: s }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        C64 { re: self.re, im: -self.im }
+    }
+
+    /// |z|^2 (envelope squared — the preprocessor's feature).
+    #[inline]
+    pub fn norm_sq(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.norm_sq().sqrt()
+    }
+
+    #[inline]
+    pub fn arg(self) -> f64 {
+        self.im.atan2(self.re)
+    }
+
+    #[inline]
+    pub fn scale(self, k: f64) -> Self {
+        C64 { re: self.re * k, im: self.im * k }
+    }
+
+    /// Reciprocal (panics in debug on zero).
+    #[inline]
+    pub fn recip(self) -> Self {
+        let d = self.norm_sq();
+        debug_assert!(d > 0.0);
+        C64 { re: self.re / d, im: -self.im / d }
+    }
+}
+
+impl Add for C64 {
+    type Output = C64;
+    #[inline]
+    fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl Sub for C64 {
+    type Output = C64;
+    #[inline]
+    fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for C64 {
+    type Output = C64;
+    #[inline]
+    fn mul(self, o: C64) -> C64 {
+        C64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Div for C64 {
+    type Output = C64;
+    #[inline]
+    fn div(self, o: C64) -> C64 {
+        self * o.recip()
+    }
+}
+
+impl Neg for C64 {
+    type Output = C64;
+    #[inline]
+    fn neg(self) -> C64 {
+        C64::new(-self.re, -self.im)
+    }
+}
+
+impl AddAssign for C64 {
+    #[inline]
+    fn add_assign(&mut self, o: C64) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl SubAssign for C64 {
+    #[inline]
+    fn sub_assign(&mut self, o: C64) {
+        self.re -= o.re;
+        self.im -= o.im;
+    }
+}
+
+impl MulAssign for C64 {
+    #[inline]
+    fn mul_assign(&mut self, o: C64) {
+        *self = *self * o;
+    }
+}
+
+impl From<f64> for C64 {
+    #[inline]
+    fn from(re: f64) -> Self {
+        C64 { re, im: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: C64, b: C64) -> bool {
+        (a - b).abs() < 1e-12
+    }
+
+    #[test]
+    fn field_identities() {
+        let z = C64::new(3.0, -4.0);
+        assert!(close(z + C64::ZERO, z));
+        assert!(close(z * C64::ONE, z));
+        assert!(close(z * z.recip(), C64::ONE));
+        assert!(close(z / z, C64::ONE));
+        assert!(close(-(-z), z));
+    }
+
+    #[test]
+    fn abs_and_norm() {
+        let z = C64::new(3.0, 4.0);
+        assert_eq!(z.abs(), 5.0);
+        assert_eq!(z.norm_sq(), 25.0);
+        assert_eq!(z.conj().im, -4.0);
+    }
+
+    #[test]
+    fn cis_unit_circle() {
+        for k in 0..16 {
+            let t = k as f64 * 0.4;
+            let z = C64::cis(t);
+            assert!((z.abs() - 1.0).abs() < 1e-12);
+            assert!((z.arg() - t.sin().atan2(t.cos())).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mul_matches_polar() {
+        let a = C64::cis(0.7).scale(2.0);
+        let b = C64::cis(0.5).scale(3.0);
+        let p = a * b;
+        assert!((p.abs() - 6.0).abs() < 1e-12);
+        assert!((p.arg() - 1.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,10 @@
+//! Small shared utilities: deterministic RNG, JSON, complex numbers,
+//! property-test helpers.
+
+pub mod cplx;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use cplx::C64;
+pub use rng::Rng;

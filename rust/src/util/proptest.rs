@@ -1,0 +1,97 @@
+//! Tiny property-testing helper (no proptest crate offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` random
+//! inputs drawn from a deterministic seed derived from `name`, so
+//! failures are reproducible; on failure it reports the case index and
+//! the seed to re-run with.
+
+use super::rng::Rng;
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Run `f` for `cases` seeded iterations; `f` returns Err(description)
+/// on a property violation. Panics with full reproduction info.
+pub fn check<F>(name: &str, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = fnv1a(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Assert two floats are within an absolute tolerance, with context.
+pub fn assert_close(got: f64, want: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (got - want).abs() > tol {
+        return Err(format!("{what}: got {got}, want {want} (tol {tol})"));
+    }
+    Ok(())
+}
+
+/// Assert two slices are element-wise within tolerance.
+pub fn assert_close_slice(got: &[f64], want: &[f64], tol: f64, what: &str) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{what}: length {} vs {}", got.len(), want.len()));
+    }
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        if (g - w).abs() > tol {
+            return Err(format!("{what}[{i}]: got {g}, want {w} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counter", 25, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure() {
+        check("fails", 10, |rng| {
+            let v = rng.uniform();
+            if v >= 0.0 {
+                Err(format!("always fails, v={v}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        check("det", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("det", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,62 @@
+//! Integration: the HLO/PJRT engine inside the streaming coordinator —
+//! conservation + agreement with the native datapath at frame scale.
+
+use dpd_ne::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use dpd_ne::dpd::qgru::{ActKind, QGruDpd};
+use dpd_ne::dpd::weights::QGruWeights;
+use dpd_ne::fixed::QSpec;
+use dpd_ne::runtime::Manifest;
+use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
+
+#[test]
+fn hlo_pipeline_conserves_and_matches_native_frames() {
+    let Ok(m) = Manifest::discover(None) else {
+        eprintln!("skipping (no artifacts)");
+        return;
+    };
+    let frame = m.best_int_hlo().unwrap().time;
+    let sig = OfdmModulator::generate(&OfdmConfig { n_symbols: 16, seed: 5, ..Default::default() })
+        .unwrap();
+    let coord = Coordinator::new(CoordinatorConfig { engine: EngineKind::Hlo, ..Default::default() });
+    let out = coord.run_stream(&sig.iq).unwrap();
+    assert_eq!(out.iq.len(), sig.iq.len());
+
+    // native reference with per-frame hidden-state reset (the HLO
+    // frame semantics): outputs must agree exactly on the code grid
+    let spec = QSpec::new(m.qspec_bits).unwrap();
+    let w = QGruWeights::load_params_int(&m.weights_main, spec).unwrap();
+    let mut native = QGruDpd::new(w, ActKind::Hard);
+    let mut want: Vec<[f64; 2]> = Vec::new();
+    for chunk in sig.iq.chunks(frame) {
+        let mut padded: Vec<[i32; 2]> = chunk
+            .iter()
+            .map(|&[i, q]| [spec.quantize(i), spec.quantize(q)])
+            .collect();
+        padded.resize(frame, [0, 0]);
+        let y = native.run_codes(&padded);
+        want.extend(
+            y[..chunk.len()]
+                .iter()
+                .map(|&[i, q]| [spec.dequantize(i), spec.dequantize(q)]),
+        );
+    }
+    assert_eq!(out.iq.len(), want.len());
+    for (a, b) in out.iq.iter().zip(&want) {
+        assert!((a[0] - b[0]).abs() < 1e-12 && (a[1] - b[1]).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn hlo_multi_stream() {
+    let Ok(_) = Manifest::discover(None) else {
+        eprintln!("skipping (no artifacts)");
+        return;
+    };
+    let sig = OfdmModulator::generate(&OfdmConfig { n_symbols: 8, seed: 9, ..Default::default() })
+        .unwrap();
+    let coord = Coordinator::new(CoordinatorConfig { engine: EngineKind::Hlo, ..Default::default() });
+    let outs = coord
+        .run_streams(vec![sig.iq.clone(), sig.iq.clone()])
+        .unwrap();
+    assert_eq!(outs[0].iq, outs[1].iq, "identical inputs -> identical outputs");
+}
