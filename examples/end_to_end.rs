@@ -6,7 +6,8 @@
 //!     paper's 250 MSps mapping), ~2 Msample run
 //!   * L3:       the streaming coordinator with bounded queues
 //!   * engines:  native f64, bit-exact fixed-point, cycle-accurate
-//!     ASIC sim, and the AOT HLO via the embedded PJRT client
+//!     ASIC sim, the interpreted frame engine, and (with
+//!     `--features xla`) the AOT HLO via the embedded PJRT client
 //!   * plant:    the shared GaN-Doherty-like PA model
 //!   * metrics:  ACPR (Welch), NMSE-EVM, constellation EVM, throughput
 //!   * ASIC:     activity-annotated power/area at the nominal point
@@ -60,12 +61,15 @@ fn main() -> anyhow::Result<()> {
         "-".into(),
     ]);
 
-    for engine in [
+    let mut engines = vec![
         EngineKind::NativeF64,
         EngineKind::Fixed,
         EngineKind::CycleSim,
-        EngineKind::Hlo,
-    ] {
+        EngineKind::Interp,
+    ];
+    #[cfg(feature = "xla")]
+    engines.push(EngineKind::Hlo);
+    for engine in engines {
         let coord = Coordinator::new(CoordinatorConfig { engine, ..Default::default() });
         let out = coord.run_stream(&sig.iq)?;
         let y = pa.run(&out.iq);

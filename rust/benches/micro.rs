@@ -1,13 +1,14 @@
 //! Microbenchmarks of the hot paths (the §Perf baseline/tracking
 //! numbers in EXPERIMENTS.md): FFT, Welch PSD, fixed-point GRU step,
 //! float GRU step, cycle-sim step, GMP basis, coordinator pipeline,
-//! and the HLO/PJRT frame path.
+//! and the frame-engine path through the unified `DpdEngine` backend
+//! (interpreted always; HLO/PJRT under `--features xla`).
 //!
 //! Run: `cargo bench --bench micro`
 
 use std::time::Duration;
 
-use dpd_ne::bench::time_it;
+use dpd_ne::bench::{time_it, Report};
 use dpd_ne::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
 use dpd_ne::dpd::gmp::{GmpConfig, GmpDpd};
 use dpd_ne::dpd::gru::GruDpd;
@@ -18,12 +19,13 @@ use dpd_ne::dsp::fft::Fft;
 use dpd_ne::dsp::welch::{welch_psd, WelchConfig};
 use dpd_ne::fixed::QSpec;
 use dpd_ne::pa::{PaSpec, RappMemPa};
-use dpd_ne::runtime::{HloGruEngine, Manifest};
+use dpd_ne::runtime::{DpdEngine as _, EngineFactory, Manifest};
 use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
 use dpd_ne::util::{C64, Rng};
 
 fn main() -> anyhow::Result<()> {
     let budget = Duration::from_millis(400);
+    let mut report = Report::new("micro");
     println!("== microbenchmarks (hot paths) ==");
 
     // FFT 4096
@@ -34,6 +36,8 @@ fn main() -> anyhow::Result<()> {
         plan.forward(&mut buf);
     });
     println!("{}  -> {:.1} MS/s", r.summary(), r.per_second(4096.0) / 1e6);
+    report.metric("fft4096_msps", r.per_second(4096.0) / 1e6);
+    report.push(r);
 
     // Welch over 128k samples
     let sig: Vec<[f64; 2]> = (0..1 << 17).map(|_| [rng.gauss(), rng.gauss()]).collect();
@@ -41,14 +45,17 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(welch_psd(&sig, &WelchConfig::default()).unwrap());
     });
     println!("{}  -> {:.1} MS/s", r.summary(), r.per_second(sig.len() as f64) / 1e6);
+    report.push(r);
 
     // PA model
     let pa = RappMemPa::new(PaSpec::ganlike());
-    let burst: Vec<[f64; 2]> = (0..65536).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect();
+    let burst: Vec<[f64; 2]> =
+        (0..65536).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect();
     let r = time_it("pa rapp+mem 64k", budget, || {
         std::hint::black_box(pa.run(&burst));
     });
     println!("{}  -> {:.1} MS/s", r.summary(), r.per_second(burst.len() as f64) / 1e6);
+    report.push(r);
 
     // engines (need artifacts)
     if let Ok(m) = Manifest::discover(None) {
@@ -65,12 +72,15 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(qdpd.run_codes(&codes));
         });
         println!("{}  -> {:.2} MSps", r.summary(), r.per_second(codes.len() as f64) / 1e6);
+        report.metric("qgru_msps", r.per_second(codes.len() as f64) / 1e6);
+        report.push(r);
 
         let mut fdpd = GruDpd::new(fw);
         let r = time_it("gru f64 16k samples", budget, || {
             std::hint::black_box(fdpd.run(&burst[..16384]));
         });
         println!("{}  -> {:.2} MSps", r.summary(), r.per_second(16384.0) / 1e6);
+        report.push(r);
 
         let mut sim = dpd_ne::accel::CycleAccurateEngine::new(
             &qw,
@@ -81,36 +91,70 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(sim.run_codes(&codes).unwrap());
         });
         println!("{}  -> {:.2} MSps", r.summary(), r.per_second(codes.len() as f64) / 1e6);
+        report.push(r);
 
         // coordinator pipeline end to end
-        let coord = Coordinator::new(CoordinatorConfig { engine: EngineKind::Fixed, ..Default::default() });
+        let coord = Coordinator::new(CoordinatorConfig {
+            engine: EngineKind::Fixed,
+            ..Default::default()
+        });
         let r = time_it("pipeline fixed 64k samples", Duration::from_millis(800), || {
             std::hint::black_box(coord.run_stream(&burst).unwrap());
         });
         println!("{}  -> {:.2} MSps", r.summary(), r.per_second(burst.len() as f64) / 1e6);
+        report.push(r);
 
-        // HLO frame path
-        if let Some(e) = m.int_hlo_with_time(2048) {
-            let client = xla::PjRtClient::cpu()?;
-            let mut eng = HloGruEngine::load(&client, &m.hlo_path(e), 1, e.time, true, Some(spec))?;
-            let frame = &codes[..2048.min(codes.len())];
-            let frame: Vec<[i32; 2]> = frame.to_vec();
-            let r = time_it("hlo/pjrt frame 2048", Duration::from_millis(800), || {
-                std::hint::black_box(eng.run_frame_codes(&frame).unwrap());
-            });
-            println!("{}  -> {:.2} MSps", r.summary(), r.per_second(2048.0) / 1e6);
+        // frame path through the unified DpdEngine backend (interpreted)
+        let factory = EngineFactory::new(EngineKind::Interp, None)?;
+        let mut eng = factory.build()?;
+        let t = eng.frame_len().unwrap_or(2048).min(burst.len());
+        let src = burst[..t].to_vec();
+        let mut frame = src.clone();
+        let r = time_it("interp frame path (DpdEngine)", budget, || {
+            // restore the pristine input each iteration — process_frame
+            // works in place, and feeding its output back would time a
+            // progressively re-predistorted signal
+            frame.copy_from_slice(&src);
+            eng.process_frame(&mut frame).unwrap();
+        });
+        println!("{}  -> {:.2} MSps", r.summary(), r.per_second(t as f64) / 1e6);
+        report.push(r);
+
+        // HLO/PJRT frame path (same trait, xla builds only); skipped,
+        // not fatal, when the manifest has no integer HLO entry or the
+        // backend cannot execute (the vendored stub)
+        #[cfg(feature = "xla")]
+        match EngineFactory::new(EngineKind::Hlo, None).and_then(|f| f.build()) {
+            Ok(mut eng) => {
+                let t = eng.frame_len().unwrap_or(2048).min(burst.len());
+                let src = burst[..t].to_vec();
+                let mut frame = src.clone();
+                let hlo_budget = Duration::from_millis(800);
+                let r = time_it("hlo/pjrt frame path (DpdEngine)", hlo_budget, || {
+                    frame.copy_from_slice(&src);
+                    eng.process_frame(&mut frame).unwrap();
+                });
+                println!("{}  -> {:.2} MSps", r.summary(), r.per_second(t as f64) / 1e6);
+                report.push(r);
+            }
+            Err(e) => eprintln!("(hlo frame bench skipped: {e:#})"),
         }
 
         // GMP engine
-        let sig_t = OfdmModulator::generate(&OfdmConfig { n_symbols: 16, seed: 3, ..Default::default() })?;
+        let sig_t =
+            OfdmModulator::generate(&OfdmConfig { n_symbols: 16, seed: 3, ..Default::default() })?;
         let y = pa.run(&sig_t.iq);
         let mut gmp = GmpDpd::fit_ila(&GmpConfig::default(), &sig_t.iq, &y, pa.spec.target_gain())?;
         let r = time_it("gmp 16k samples", budget, || {
             std::hint::black_box(gmp.run(&burst[..16384]));
         });
         println!("{}  -> {:.2} MSps", r.summary(), r.per_second(16384.0) / 1e6);
+        report.push(r);
     } else {
         eprintln!("(engine benches skipped: no artifacts)");
     }
+
+    let path = report.write()?;
+    println!("report: {}", path.display());
     Ok(())
 }

@@ -97,22 +97,8 @@ mod tests {
     use crate::fixed::QSpec;
 
     fn weights() -> QGruWeights {
-        let mut rng = Rng::new(11);
-        let spec = QSpec::Q12;
-        let bound = (0.3 * spec.scale()) as i64;
-        let mut gen =
-            |n: usize| -> Vec<i32> { (0..n).map(|_| rng.int_in(-bound, bound) as i32).collect() };
-        QGruWeights {
-            hidden: 10,
-            features: 4,
-            spec,
-            w_ih: gen(120),
-            b_ih: gen(30),
-            w_hh: gen(300),
-            b_hh: gen(30),
-            w_fc: gen(20),
-            b_fc: gen(2),
-        }
+        // same stream as the old inline generator (seed 11, |w| <= 0.3)
+        QGruWeights::synthetic(11, QSpec::Q12)
     }
 
     #[test]

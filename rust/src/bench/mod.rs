@@ -3,8 +3,24 @@
 //! `time_it` runs a closure with warmup and repeated timed iterations,
 //! reporting mean/median/min and a robust std estimate. Used by every
 //! `benches/` target (declared with `harness = false`).
+//!
+//! Two CI hooks:
+//! * `BENCH_QUICK=1` shrinks every budget to a smoke-test size (a few
+//!   iterations) so the bench-smoke CI job finishes in seconds while
+//!   still exercising the full code path;
+//! * [`Report`] serializes results to `BENCH_<name>.json` (in
+//!   `$BENCH_OUT_DIR` or the working directory) so CI can upload them
+//!   as workflow artifacts and track the perf trajectory across PRs.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// True when the environment asks for smoke-test benches.
+pub fn quick_mode() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
 
 /// Result of a timed benchmark.
 #[derive(Clone, Debug)]
@@ -34,11 +50,13 @@ impl BenchResult {
 
 /// Time `f`, auto-scaling iteration count to fill ~`budget`.
 pub fn time_it<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    let budget = if quick_mode() { budget.min(Duration::from_millis(20)) } else { budget };
     // warmup + calibration
     let t0 = Instant::now();
     f();
     let once = t0.elapsed().max(Duration::from_nanos(100));
-    let target_iters = (budget.as_secs_f64() / once.as_secs_f64()).clamp(3.0, 1000.0) as usize;
+    let max_iters = if quick_mode() { 5.0 } else { 1000.0 };
+    let target_iters = (budget.as_secs_f64() / once.as_secs_f64()).clamp(3.0, max_iters) as usize;
 
     let mut times: Vec<Duration> = Vec::with_capacity(target_iters);
     for _ in 0..target_iters {
@@ -67,6 +85,75 @@ pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
     r
 }
 
+/// A machine-readable bench report, written as `BENCH_<name>.json`.
+pub struct Report {
+    name: String,
+    results: Vec<BenchResult>,
+    metrics: Vec<(String, f64)>,
+}
+
+impl Report {
+    pub fn new(name: &str) -> Report {
+        Report { name: name.to_string(), results: Vec::new(), metrics: Vec::new() }
+    }
+
+    /// Record a timing result.
+    pub fn push(&mut self, r: BenchResult) -> &mut Self {
+        self.results.push(r);
+        self
+    }
+
+    /// Record a derived scalar (throughput, model figure, ...).
+    pub fn metric(&mut self, key: &str, value: f64) -> &mut Self {
+        self.metrics.push((key.to_string(), value));
+        self
+    }
+
+    /// Target path: `$BENCH_OUT_DIR` (or cwd) / `BENCH_<name>.json`.
+    pub fn path(&self) -> PathBuf {
+        let dir = std::env::var("BENCH_OUT_DIR").unwrap_or_else(|_| ".".to_string());
+        PathBuf::from(dir).join(format!("BENCH_{}.json", self.name))
+    }
+
+    fn to_json(&self) -> Json {
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("iters", Json::num(r.iters as f64)),
+                    ("mean_ns", Json::num(r.mean.as_nanos() as f64)),
+                    ("median_ns", Json::num(r.median.as_nanos() as f64)),
+                    ("min_ns", Json::num(r.min.as_nanos() as f64)),
+                    ("mad_ns", Json::num(r.mad.as_nanos() as f64)),
+                ])
+            })
+            .collect();
+        let metrics: Vec<(&str, Json)> =
+            self.metrics.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect();
+        Json::obj(vec![
+            ("bench", Json::str(self.name.clone())),
+            ("quick", Json::Bool(quick_mode())),
+            ("results", Json::Arr(results)),
+            ("metrics", Json::obj(metrics)),
+        ])
+    }
+
+    /// Serialize into `dir/BENCH_<name>.json`; returns the path written.
+    pub fn write_to(&self, dir: &std::path::Path) -> anyhow::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().dump())?;
+        Ok(path)
+    }
+
+    /// Serialize to [`Report::path`]; returns the path written.
+    pub fn write(&self) -> anyhow::Result<PathBuf> {
+        let dir = std::env::var("BENCH_OUT_DIR").unwrap_or_else(|_| ".".to_string());
+        self.write_to(std::path::Path::new(&dir))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,5 +178,43 @@ mod tests {
             mad: Duration::ZERO,
         };
         assert!((r.per_second(100.0) - 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let mut rep = Report::new("unit_test_report");
+        rep.push(BenchResult {
+            name: "case".into(),
+            iters: 3,
+            mean: Duration::from_micros(5),
+            median: Duration::from_micros(5),
+            min: Duration::from_micros(4),
+            mad: Duration::from_nanos(100),
+        });
+        rep.metric("throughput_msps", 12.5);
+        let j = rep.to_json();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "unit_test_report");
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("mean_ns").unwrap().as_f64().unwrap(), 5000.0);
+        let m = j.get("metrics").unwrap();
+        assert_eq!(m.get("throughput_msps").unwrap().as_f64().unwrap(), 12.5);
+        // round trip through the serializer
+        let again = Json::parse(&j.dump()).unwrap();
+        assert_eq!(again, j);
+    }
+
+    #[test]
+    fn report_writes_named_file() {
+        // write_to avoids mutating process-global env (tests run in
+        // parallel threads that concurrently read the environment)
+        let dir = std::env::temp_dir().join("dpd_ne_bench_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let rep = Report::new("smoke");
+        let path = rep.write_to(&dir).unwrap();
+        assert!(path.ends_with("BENCH_smoke.json"));
+        assert!(path.exists());
+        let j = Json::parse_file(&path).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "smoke");
     }
 }

@@ -4,9 +4,11 @@
 //! A transmit stream flows source -> framer -> DPD engine -> sink
 //! through bounded channels (blocking = backpressure); multiple
 //! independent streams model the mMIMO fan-out (one DPD-NeuralEngine
-//! macro per antenna). Engines are selectable per stream:
-//! native f64 GRU, bit-exact fixed-point, the cycle-accurate ASIC
-//! simulator, or the AOT HLO executed via PJRT.
+//! macro per antenna). Engines are selectable per stream through the
+//! unified [`DpdEngine`](crate::runtime::DpdEngine) backend: native
+//! f64 GRU, bit-exact fixed-point, the cycle-accurate ASIC simulator,
+//! the interpreted frame engine, or — under `--features xla` — the
+//! AOT HLO executed via PJRT.
 //!
 //! Python never runs here; the HLO path executes the build-time
 //! artifacts through the embedded PJRT CPU client.

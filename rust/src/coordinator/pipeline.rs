@@ -8,43 +8,33 @@
 //!   source thread -> [frames] -> DPD worker -> [frames] -> sink
 //! ```
 //!
-//! Engines are constructed inside the worker thread (the PJRT client is
-//! not Send). Multiple streams run fully in parallel — the mMIMO
-//! deployment shape, one engine instance per antenna.
+//! Engine construction and dispatch go through the unified
+//! [`DpdEngine`](crate::runtime::DpdEngine) trait: the worker holds a
+//! `Box<dyn DpdEngine>` built by an [`EngineFactory`] *inside* the
+//! worker thread (the PJRT client behind the `Hlo` backend is not
+//! `Send`); the factory itself resolves the manifest and the frame
+//! length up front so the framer can match shape-specialized engines.
+//! Multiple streams run fully in parallel — the mMIMO deployment
+//! shape, one engine instance per antenna.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::framer::{Frame, Framer};
 use super::stats::{LatencyAgg, PipelineStats};
-use crate::dpd::qgru::{ActKind, QGruDpd};
-use crate::dpd::weights::{GruWeights, QGruWeights};
-use crate::dpd::{Dpd, GruDpd};
-use crate::fixed::QSpec;
-use crate::runtime::{HloGruEngine, Manifest};
+use crate::runtime::EngineFactory;
 
-/// Which DPD engine the worker instantiates.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum EngineKind {
-    /// f64 GRU (float reference)
-    NativeF64,
-    /// bit-exact Q2.10 fixed-point (the chip's functional model)
-    Fixed,
-    /// cycle-accurate ASIC simulator
-    CycleSim,
-    /// AOT HLO via the PJRT CPU client (frame-based)
-    Hlo,
-}
+pub use crate::runtime::EngineKind;
 
 /// Pipeline configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub engine: EngineKind,
-    /// frame length for the framer (HLO engines override with their
-    /// compiled frame size)
+    /// frame length for the framer (frame-based engines override with
+    /// their compiled frame size, see [`EngineFactory::frame_len`])
     pub frame_len: usize,
     /// bounded-channel depth (frames in flight per link)
     pub queue_depth: usize,
@@ -105,72 +95,11 @@ impl Coordinator {
     }
 }
 
-fn build_dyn_engine(cfg: &CoordinatorConfig) -> Result<Box<dyn Dpd>> {
-    let m = Manifest::discover(cfg.artifacts.as_deref())?;
-    match cfg.engine {
-        EngineKind::NativeF64 => {
-            let w = GruWeights::load(&m.weights_float)?;
-            Ok(Box::new(GruDpd::new(w)))
-        }
-        EngineKind::Fixed => {
-            let spec = QSpec::new(m.qspec_bits)?;
-            let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
-            Ok(Box::new(QGruDpd::new(w, ActKind::Hard)))
-        }
-        EngineKind::CycleSim => {
-            let spec = QSpec::new(m.qspec_bits)?;
-            let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
-            Ok(Box::new(CycleSimDpd::new(&w)))
-        }
-        EngineKind::Hlo => unreachable!("HLO handled separately"),
-    }
-}
-
-/// Adapter: the cycle-accurate simulator as a `Dpd`.
-struct CycleSimDpd {
-    sim: crate::accel::CycleAccurateEngine,
-    spec: QSpec,
-}
-
-impl CycleSimDpd {
-    fn new(w: &QGruWeights) -> CycleSimDpd {
-        CycleSimDpd {
-            sim: crate::accel::CycleAccurateEngine::new(
-                w,
-                crate::accel::act_unit::ActImpl::Hard,
-                crate::accel::fsm::HwConfig::default(),
-            ),
-            spec: w.spec,
-        }
-    }
-}
-
-impl Dpd for CycleSimDpd {
-    fn process(&mut self, iq: [f64; 2]) -> [f64; 2] {
-        let codes = [self.spec.quantize(iq[0]), self.spec.quantize(iq[1])];
-        let y = self.sim.step(codes).expect("sim step");
-        [self.spec.dequantize(y[0]), self.spec.dequantize(y[1])]
-    }
-    fn reset(&mut self) {
-        self.sim.reset();
-    }
-    fn name(&self) -> &'static str {
-        "cyclesim"
-    }
-}
-
 fn run_one(cfg: CoordinatorConfig, input: Vec<[f64; 2]>) -> Result<StreamOutput> {
-    // frame length: HLO engines are shape-specialized
-    let (frame_len, hlo_entry) = if cfg.engine == EngineKind::Hlo {
-        let m = Manifest::discover(cfg.artifacts.as_deref())?;
-        let e = m
-            .best_int_hlo()
-            .context("no integer HLO artifact")?
-            .clone();
-        ((e.time), Some((m, e)))
-    } else {
-        (cfg.frame_len, None)
-    };
+    // resolve the engine + frame geometry up front (manifest is Send;
+    // the engine itself is built inside the worker thread)
+    let factory = EngineFactory::new(cfg.engine, cfg.artifacts.as_deref())?;
+    let frame_len = factory.frame_len(cfg.frame_len);
 
     let t_start = Instant::now();
     let n_in = input.len() as u64;
@@ -192,46 +121,18 @@ fn run_one(cfg: CoordinatorConfig, input: Vec<[f64; 2]>) -> Result<StreamOutput>
         Ok(())
     });
 
-    // DPD worker thread (engine built here; PJRT client is !Send)
-    let worker_cfg = cfg.clone();
+    // DPD worker thread: all engines behind the one DpdEngine trait
     let worker = std::thread::spawn(move || -> Result<Duration> {
+        let mut eng = factory.build()?;
+        eng.reset();
         let mut busy = Duration::ZERO;
-        match hlo_entry {
-            Some((m, e)) => {
-                let client = xla::PjRtClient::cpu()?;
-                let spec = QSpec::new(e.bits)?;
-                let mut eng =
-                    HloGruEngine::load(&client, &m.hlo_path(&e), e.batch, e.time, true, Some(spec))?;
-                while let Ok(Msg::Frame(mut fr, t0)) = rx_work.recv() {
-                    let t = Instant::now();
-                    let codes: Vec<[i32; 2]> = fr
-                        .data
-                        .iter()
-                        .map(|&[i, q]| [spec.quantize(i), spec.quantize(q)])
-                        .collect();
-                    let y = eng.run_frame_codes(&codes)?;
-                    for (dst, &[i, q]) in fr.data.iter_mut().zip(&y) {
-                        *dst = [spec.dequantize(i), spec.dequantize(q)];
-                    }
-                    busy += t.elapsed();
-                    tx_done.send(Msg::Frame(fr, t0)).ok();
-                }
-                tx_done.send(Msg::Eof).ok();
-            }
-            None => {
-                let mut eng = build_dyn_engine(&worker_cfg)?;
-                eng.reset();
-                while let Ok(Msg::Frame(mut fr, t0)) = rx_work.recv() {
-                    let t = Instant::now();
-                    for s in fr.data.iter_mut() {
-                        *s = eng.process(*s);
-                    }
-                    busy += t.elapsed();
-                    tx_done.send(Msg::Frame(fr, t0)).ok();
-                }
-                tx_done.send(Msg::Eof).ok();
-            }
+        while let Ok(Msg::Frame(mut fr, t0)) = rx_work.recv() {
+            let t = Instant::now();
+            eng.process_frame(&mut fr.data)?;
+            busy += t.elapsed();
+            tx_done.send(Msg::Frame(fr, t0)).ok();
         }
+        tx_done.send(Msg::Eof).ok();
         Ok(busy)
     });
 
@@ -271,6 +172,11 @@ fn run_one(cfg: CoordinatorConfig, input: Vec<[f64; 2]>) -> Result<StreamOutput>
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dpd::qgru::{ActKind, QGruDpd};
+    use crate::dpd::weights::QGruWeights;
+    use crate::dpd::Dpd;
+    use crate::fixed::QSpec;
+    use crate::runtime::Manifest;
     use crate::util::Rng;
 
     fn artifacts_present() -> bool {
@@ -370,6 +276,27 @@ mod tests {
         .run_stream(&input)
         .unwrap();
         assert_eq!(fixed.iq, sim.iq);
+    }
+
+    #[test]
+    fn interp_engine_conserves_and_uses_artifact_frame() {
+        if !artifacts_present() {
+            eprintln!("skipping (no artifacts)");
+            return;
+        }
+        let c = Coordinator::new(CoordinatorConfig {
+            engine: EngineKind::Interp,
+            ..Default::default()
+        });
+        let input = signal(3000, 8);
+        let out = c.run_stream(&input).unwrap();
+        assert_eq!(out.iq.len(), 3000);
+        // frame count follows the artifact's compiled frame length
+        let m = Manifest::discover(None).unwrap();
+        if let Some(e) = m.best_int_hlo() {
+            let expect = (3000 + e.time - 1) / e.time;
+            assert_eq!(out.stats.frames, expect as u64);
+        }
     }
 
     #[test]

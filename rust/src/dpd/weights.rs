@@ -115,6 +115,30 @@ impl GruWeights {
 }
 
 impl QGruWeights {
+    /// Amplitude-realistic synthetic weights at the paper's dimensions
+    /// (H=10, F=4, |w| <= 0.3): the shared stimulus class used by the
+    /// accel model tests and by artifact-less bench runs. One
+    /// definition so the constructions cannot drift apart.
+    pub fn synthetic(seed: u64, spec: QSpec) -> QGruWeights {
+        let mut rng = crate::util::Rng::new(seed);
+        let hidden = 10;
+        let features = 4;
+        let bound = (0.3 * spec.scale()) as i64;
+        let mut gen =
+            |n: usize| -> Vec<i32> { (0..n).map(|_| rng.int_in(-bound, bound) as i32).collect() };
+        QGruWeights {
+            hidden,
+            features,
+            spec,
+            w_ih: gen(3 * hidden * features),
+            b_ih: gen(3 * hidden),
+            w_hh: gen(3 * hidden * hidden),
+            b_hh: gen(3 * hidden),
+            w_fc: gen(2 * hidden),
+            b_fc: gen(2),
+        }
+    }
+
     /// Load the pre-quantized `params_int` block of `weights_main.json`
     /// (written by aot.py; equals `GruWeights::quantize` of `params`).
     pub fn load_params_int(path: &Path, spec: QSpec) -> Result<QGruWeights> {

@@ -8,8 +8,10 @@
 //!   sweep        Fig. 3 precision x activation sweep
 //!   info         artifact manifest summary
 //!
-//! Common flags: --artifacts <dir>, --engine <fixed|native|cyclesim|hlo>,
-//! --streams <n>, --symbols <n>, --seed <n>
+//! Common flags: --artifacts <dir>,
+//! --engine <fixed|native|cyclesim|interp|hlo>, --streams <n>,
+//! --symbols <n>, --seed <n>. The `hlo` engine needs a build with
+//! `--features xla`; `interp` is its hermetic frame-based twin.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -50,7 +52,11 @@ fn engine_kind(flags: &HashMap<String, String>) -> Result<EngineKind> {
         "fixed" => EngineKind::Fixed,
         "native" => EngineKind::NativeF64,
         "cyclesim" => EngineKind::CycleSim,
+        "interp" => EngineKind::Interp,
+        #[cfg(feature = "xla")]
         "hlo" => EngineKind::Hlo,
+        #[cfg(not(feature = "xla"))]
+        "hlo" => bail!("engine 'hlo' needs a build with --features xla (try 'interp')"),
         other => bail!("unknown engine '{other}'"),
     })
 }
@@ -61,8 +67,9 @@ fn artifacts(flags: &HashMap<String, String>) -> Option<PathBuf> {
 
 fn usage() -> &'static str {
     "usage: dpd-ne <run|stream|asic-report|fpga-report|sweep|info> [flags]\n\
-     flags: --artifacts <dir> --engine <fixed|native|cyclesim|hlo> \
-     --streams <n> --symbols <n> --seed <n>"
+     flags: --artifacts <dir> --engine <fixed|native|cyclesim|interp|hlo> \
+     --streams <n> --symbols <n> --seed <n>\n\
+     (engine 'hlo' needs a build with --features xla)"
 }
 
 fn main() -> Result<()> {

@@ -1,10 +1,19 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client —
-//! the request-path twin of the build-path lowering. Python never runs
-//! here.
+//! Engine runtime: the artifact manifest, the unified [`DpdEngine`]
+//! backend, and (under `--features xla`) PJRT execution of the AOT
+//! HLO-text artifacts produced by `python/compile/aot.py`. Python
+//! never runs here.
+//!
+//! Default builds are hermetic: the PJRT paths ([`engine`], the `Hlo`
+//! backend) only exist with the non-default `xla` cargo feature; the
+//! interpreted fallback ([`backend::InterpGruEngine`]) covers the
+//! frame-based execution mode with the in-tree bit-exact datapath.
 
 pub mod artifacts;
+pub mod backend;
+#[cfg(feature = "xla")]
 pub mod engine;
 
 pub use artifacts::Manifest;
+pub use backend::{DpdEngine, EngineFactory, EngineKind};
+#[cfg(feature = "xla")]
 pub use engine::HloGruEngine;

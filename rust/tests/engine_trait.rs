@@ -1,0 +1,95 @@
+//! Integration: the unified `DpdEngine` backend through the public
+//! API. The parity rows run hermetically (synthetic weights, no
+//! artifact tree, no xla); the coordinator cross-check engages when
+//! `make artifacts` has populated the tree.
+
+use dpd_ne::coordinator::{Coordinator, CoordinatorConfig};
+use dpd_ne::dpd::qgru::{ActKind, QGruDpd};
+use dpd_ne::dpd::weights::GruWeights;
+use dpd_ne::fixed::QSpec;
+use dpd_ne::runtime::backend::{available_kinds, CycleSimDpd, InterpGruEngine, StreamingEngine};
+use dpd_ne::runtime::{DpdEngine, EngineFactory, EngineKind};
+use dpd_ne::util::Rng;
+
+fn synth_float_weights(seed: u64) -> GruWeights {
+    let mut rng = Rng::new(seed);
+    let hidden = 10;
+    let features = 4;
+    let mut gen = |n: usize| -> Vec<f64> { (0..n).map(|_| rng.range(-0.15, 0.15)).collect() };
+    GruWeights {
+        hidden,
+        features,
+        w_ih: gen(3 * hidden * features),
+        b_ih: gen(3 * hidden),
+        w_hh: gen(3 * hidden * hidden),
+        b_hh: gen(3 * hidden),
+        w_fc: gen(2 * hidden),
+        b_fc: gen(2),
+        meta_bits: None,
+        meta_act: None,
+        meta_val_nmse_db: None,
+    }
+}
+
+fn stimulus(n: usize, seed: u64) -> Vec<[f64; 2]> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| [rng.gauss() * 0.2, rng.gauss() * 0.2]).collect()
+}
+
+#[test]
+fn trait_objects_dispatch_uniformly() {
+    // Fixed, CycleSim and Interp share the bit-exact integer datapath;
+    // on a single sub-frame burst (one h0 reset for everybody, causal
+    // zero-padding) all three must agree exactly through the trait.
+    let qw = synth_float_weights(21).quantize(QSpec::Q12);
+    let input = stimulus(48, 5);
+
+    let engines: Vec<Box<dyn DpdEngine>> = vec![
+        Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw.clone(), ActKind::Hard)))),
+        Box::new(StreamingEngine::new(Box::new(CycleSimDpd::new(&qw)))),
+        Box::new(InterpGruEngine::new(QGruDpd::new(qw.clone(), ActKind::Hard), 64)),
+    ];
+
+    let mut outputs = Vec::new();
+    for mut eng in engines {
+        eng.reset();
+        let mut buf = input.clone();
+        eng.process_frame(&mut buf).unwrap();
+        assert_eq!(buf.len(), input.len(), "{} changed the burst length", eng.name());
+        outputs.push((eng.name().to_string(), buf));
+    }
+    for (name, out) in &outputs[1..] {
+        assert_eq!(out, &outputs[0].1, "{name} diverged from {}", outputs[0].0);
+    }
+}
+
+#[test]
+fn available_kinds_match_build_features() {
+    let kinds = available_kinds();
+    let expected = if cfg!(feature = "xla") { 5 } else { 4 };
+    assert_eq!(kinds.len(), expected);
+    assert!(kinds.contains(&EngineKind::Interp));
+}
+
+#[test]
+fn coordinator_output_matches_direct_backend_run() {
+    // artifact-gated: pipeline dispatch == direct trait dispatch
+    let Ok(factory) = EngineFactory::new(EngineKind::Fixed, None) else {
+        eprintln!("skipping (no artifacts)");
+        return;
+    };
+    let input = stimulus(1000, 9);
+
+    let mut eng = factory.build().unwrap();
+    eng.reset();
+    let mut direct = input.clone();
+    eng.process_frame(&mut direct).unwrap();
+
+    let coord = Coordinator::new(CoordinatorConfig {
+        engine: EngineKind::Fixed,
+        frame_len: 128,
+        ..Default::default()
+    });
+    let piped = coord.run_stream(&input).unwrap();
+    assert_eq!(piped.iq, direct);
+}

@@ -1,5 +1,9 @@
 //! Integration: the HLO/PJRT engine inside the streaming coordinator —
 //! conservation + agreement with the native datapath at frame scale.
+//!
+//! Compiled only with `--features xla` (the `Hlo` backend does not
+//! exist in default hermetic builds; see `runtime::backend`).
+#![cfg(feature = "xla")]
 
 use dpd_ne::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
 use dpd_ne::dpd::qgru::{ActKind, QGruDpd};

@@ -1,0 +1,138 @@
+//! Compile-time stub of the `xla` (PJRT) crate API surface used by the
+//! `dpd-ne` runtime.
+//!
+//! The container image does not ship the `xla_extension` native
+//! library, so the real `xla` crate cannot build here. This stub lets
+//! `cargo build --features xla` type-check and link the whole HLO/PJRT
+//! code path; every operation that would need a live PJRT client
+//! returns [`Error`] at runtime instead. To run the real thing, point
+//! the `xla` path dependency in `rust/Cargo.toml` at the actual crate
+//! (see DESIGN.md §Feature flags).
+//!
+//! Only the constructors touch the (absent) backend: `PjRtClient::cpu`
+//! fails first, so downstream methods are unreachable in practice but
+//! still fail cleanly if called.
+
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "PJRT unavailable: built against the vendored xla stub (see DESIGN.md to link the real xla crate)";
+
+/// Error type mirroring `xla::Error` closely enough for `?` + anyhow.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Element types `Literal` can carry (subset used by dpd-ne).
+pub trait NativeType: Copy {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+
+/// Host literal (stub: shapeless placeholder).
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub: parsing requires the native library).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation built from an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client (stub: construction always fails — no backend).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_cleanly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT unavailable"));
+    }
+
+    #[test]
+    fn literal_data_ops_succeed() {
+        let lit = Literal::vec1(&[1i32, 2, 3]);
+        assert!(lit.reshape(&[1, 3]).is_ok());
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+}
