@@ -4,7 +4,8 @@
 //! Exercises every layer on a real workload:
 //!   * signal:   windowed, TX-filtered 64-QAM CP-OFDM (62.5 MHz @ the
 //!     paper's 250 MSps mapping), ~2 Msample run
-//!   * L3:       the streaming coordinator with bounded queues
+//!   * L3:       one long-lived `DpdService` pool hosting a
+//!     heterogeneous session per engine (manifest resolved once)
 //!   * engines:  native f64, bit-exact fixed-point, cycle-accurate
 //!     ASIC sim, the interpreted frame engine, and (with
 //!     `--features xla`) the AOT HLO via the embedded PJRT client
@@ -17,19 +18,24 @@
 //! ```
 
 use dpd_ne::accel::AsicSpec;
-use dpd_ne::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use dpd_ne::coordinator::{DpdService, EngineKind, ServiceConfig, SessionConfig};
 use dpd_ne::dpd::weights::QGruWeights;
 use dpd_ne::fixed::QSpec;
 use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
 use dpd_ne::metrics::evm::evm_db_nmse;
 use dpd_ne::pa::{PaSpec, RappMemPa};
 use dpd_ne::report::{f1, f2, Table};
-use dpd_ne::runtime::Manifest;
 use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
 use dpd_ne::signal::papr::papr_db;
 
 fn main() -> anyhow::Result<()> {
-    let m = Manifest::discover(None)?;
+    // the service resolves the artifact tree once; everything below —
+    // PA model, per-engine sessions, ASIC weights — reuses it
+    let service = DpdService::start(ServiceConfig::default())?;
+    let m = service
+        .manifest()
+        .ok_or_else(|| anyhow::anyhow!("no artifact tree found — run `make artifacts` first"))?
+        .clone();
     let pa = RappMemPa::new(PaSpec::load(&m.pa_model)?);
     let g = pa.spec.target_gain();
 
@@ -69,9 +75,16 @@ fn main() -> anyhow::Result<()> {
     ];
     #[cfg(feature = "xla")]
     engines.push(EngineKind::Hlo);
+
+    // one persistent service hosts every engine as a session; each
+    // session gets the burst pushed in chunks, state carried across
+    // pushes
     for engine in engines {
-        let coord = Coordinator::new(CoordinatorConfig { engine, ..Default::default() });
-        let out = coord.run_stream(&sig.iq)?;
+        let mut session = service.open_session(SessionConfig { engine, ..Default::default() })?;
+        for chunk in sig.iq.chunks(8192) {
+            session.push(chunk)?;
+        }
+        let out = session.finish()?;
         let y = pa.run(&out.iq);
         let acpr = acpr_db(&y, &AcprConfig::default())?;
         let evm = evm_db_nmse(&y, &sig.iq, g);
@@ -86,6 +99,7 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     println!("{}", t.render());
+    service.shutdown()?;
 
     // ASIC nominal operating point from the same weights
     let w = QGruWeights::load_params_int(&m.weights_main, QSpec::new(m.qspec_bits)?)?;

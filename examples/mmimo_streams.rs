@@ -1,20 +1,24 @@
 //! mMIMO fan-out scaling — the deployment the paper's introduction
-//! motivates: one DPD engine instance per antenna stream.
+//! motivates: one resident DPD engine instance per antenna stream.
 //!
-//! Runs 1..=8 parallel antenna streams through the coordinator and
-//! reports per-stream and aggregate throughput scaling.
+//! One persistent [`DpdService`] pool (8 workers) is started once;
+//! each antenna count then maps to that many concurrent
+//! [`StreamSession`]s on the *same* pool — no per-run thread-triple
+//! setup/teardown, the manifest resolved a single time — and reports
+//! per-stream and aggregate throughput scaling.
 //!
 //! ```bash
 //! cargo run --release --example mmimo_streams
 //! ```
 
-use dpd_ne::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use dpd_ne::coordinator::{DpdService, EngineKind, ServiceConfig, SessionConfig};
 use dpd_ne::report::{f2, Table};
 use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
 
 fn main() -> anyhow::Result<()> {
+    let service = DpdService::start(ServiceConfig { workers: 8, ..Default::default() })?;
     let mut t = Table::new(
-        "mMIMO scaling (fixed-point engine, one instance per antenna)",
+        "mMIMO scaling (fixed-point engine, one session per antenna on one pool)",
         &["streams", "aggregate MSps", "per-stream MSps", "scaling eff."],
     );
     let mut base = 0.0;
@@ -31,14 +35,37 @@ fn main() -> anyhow::Result<()> {
             })
             .collect();
         let total: usize = inputs.iter().map(|v| v.len()).sum();
-        let coord = Coordinator::new(CoordinatorConfig {
-            engine: EngineKind::Fixed,
-            ..Default::default()
-        });
+
+        // open all antenna sessions up front (spreads across the
+        // pool), then drive each from its own feeder thread
+        let mut sessions = Vec::with_capacity(n);
+        for _ in 0..n {
+            sessions.push(service.open_session(SessionConfig {
+                engine: EngineKind::Fixed,
+                ..Default::default()
+            })?);
+        }
         let t0 = std::time::Instant::now();
-        let outs = coord.run_streams(inputs)?;
+        let outs = std::thread::scope(|scope| {
+            let handles: Vec<_> = inputs
+                .into_iter()
+                .zip(sessions)
+                .map(|(input, mut session)| {
+                    scope.spawn(move || -> anyhow::Result<usize> {
+                        for chunk in input.chunks(4096) {
+                            session.push(chunk)?;
+                        }
+                        Ok(session.finish()?.iq.len())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("antenna session thread panicked"))
+                .collect::<anyhow::Result<Vec<usize>>>()
+        })?;
         let wall = t0.elapsed();
-        assert_eq!(outs.iter().map(|o| o.iq.len()).sum::<usize>(), total);
+        assert_eq!(outs.iter().sum::<usize>(), total);
         let agg = total as f64 / wall.as_secs_f64() / 1e6;
         if n == 1 {
             base = agg;
@@ -51,5 +78,5 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     println!("{}", t.render());
-    Ok(())
+    service.shutdown()
 }

@@ -1,33 +1,31 @@
 //! Quickstart: the 60-second tour.
 //!
-//! Loads the trained artifacts, pushes one OFDM burst through the
-//! bit-exact DPD engine and the GaN-like PA, and prints the paper's
-//! headline metrics (ACPR / EVM) with and without DPD.
+//! Starts the streaming runtime ([`DpdService`]), opens one session on
+//! the bit-exact DPD engine, pushes an OFDM burst through it and the
+//! GaN-like PA, and prints the paper's headline metrics (ACPR / EVM)
+//! with and without DPD.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use dpd_ne::dpd::qgru::{ActKind, QGruDpd};
-use dpd_ne::dpd::weights::QGruWeights;
-use dpd_ne::dpd::Dpd;
-use dpd_ne::fixed::QSpec;
+use dpd_ne::coordinator::{DpdService, EngineKind, ServiceConfig, SessionConfig};
 use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
 use dpd_ne::metrics::evm::evm_db_nmse;
 use dpd_ne::pa::{PaSpec, RappMemPa};
-use dpd_ne::runtime::Manifest;
 use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
 
 fn main() -> anyhow::Result<()> {
-    // 1. artifacts: trained weights + the shared PA model
-    let m = Manifest::discover(None)?;
+    // 1. the service: resolves the trained artifacts once and spawns
+    //    the persistent worker pool every session runs on
+    let service = DpdService::start(ServiceConfig { workers: 1, ..Default::default() })?;
+    let m = service
+        .manifest()
+        .ok_or_else(|| anyhow::anyhow!("no artifact tree found — run `make artifacts` first"))?;
     let pa = RappMemPa::new(PaSpec::load(&m.pa_model)?);
-    let spec = QSpec::new(m.qspec_bits)?;
-    let weights = QGruWeights::load_params_int(&m.weights_main, spec)?;
     println!(
-        "loaded DPD-NeuralEngine model: {} params, Q2.{} fixed point",
-        m.n_params,
-        spec.frac()
+        "loaded DPD-NeuralEngine model: {} params, {}-bit fixed point",
+        m.n_params, m.qspec_bits
     );
 
     // 2. a 64-QAM OFDM burst (the paper's bench signal, scaled)
@@ -37,9 +35,13 @@ fn main() -> anyhow::Result<()> {
     let y_off = pa.run(&sig.iq);
     let acpr_off = acpr_db(&y_off, &AcprConfig::default())?.acpr_dbc;
 
-    // 4. predistort with the chip's bit-exact datapath, then the PA
-    let mut dpd = QGruDpd::new(weights, ActKind::Hard);
-    let z = dpd.run(&sig.iq);
+    // 4. predistort through a session on the chip's bit-exact
+    //    datapath (hidden state would persist across further pushes),
+    //    then the PA
+    let mut session =
+        service.open_session(SessionConfig { engine: EngineKind::Fixed, ..Default::default() })?;
+    session.push(&sig.iq)?;
+    let z = session.finish()?.iq;
     let y_on = pa.run(&z);
     let acpr_on = acpr_db(&y_on, &AcprConfig::default())?.acpr_dbc;
     let evm_on = evm_db_nmse(&y_on, &sig.iq, pa.spec.target_gain());
@@ -48,5 +50,5 @@ fn main() -> anyhow::Result<()> {
     println!("ACPR with DPD    : {acpr_on:6.1} dBc   (paper: -45.3 dBc)");
     println!("EVM with DPD     : {evm_on:6.1} dB    (paper: -39.8 dB)");
     println!("improvement      : {:6.1} dB", acpr_off - acpr_on);
-    Ok(())
+    service.shutdown()
 }

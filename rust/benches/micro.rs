@@ -1,15 +1,20 @@
 //! Microbenchmarks of the hot paths (the §Perf baseline/tracking
 //! numbers in EXPERIMENTS.md): FFT, Welch PSD, fixed-point GRU step,
-//! float GRU step, cycle-sim step, GMP basis, coordinator pipeline,
-//! and the frame-engine path through the unified `DpdEngine` backend
-//! (interpreted always; HLO/PJRT under `--features xla`).
+//! float GRU step, cycle-sim step, GMP basis, the session path
+//! through a persistent `DpdService` pool (hermetic: synthetic
+//! weights, so it runs — and is tracked by CI — without artifacts),
+//! the one-shot coordinator wrapper, and the frame-engine path
+//! through the unified `DpdEngine` backend (interpreted always;
+//! HLO/PJRT under `--features xla`).
 //!
 //! Run: `cargo bench --bench micro`
 
 use std::time::Duration;
 
 use dpd_ne::bench::{time_it, Report};
-use dpd_ne::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use dpd_ne::coordinator::{
+    Coordinator, CoordinatorConfig, DpdService, EngineKind, ServiceConfig, SessionConfig,
+};
 use dpd_ne::dpd::gmp::{GmpConfig, GmpDpd};
 use dpd_ne::dpd::gru::GruDpd;
 use dpd_ne::dpd::qgru::{ActKind, QGruDpd};
@@ -56,6 +61,30 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{}  -> {:.1} MS/s", r.summary(), r.per_second(burst.len() as f64) / 1e6);
     report.push(r);
+
+    // session-path throughput over a persistent DpdService worker:
+    // push/drain 64k samples per iteration through a resident
+    // bit-exact engine (synthetic weights — hermetic, so the CI
+    // bench-smoke job tracks session_msps without an artifact tree)
+    {
+        use dpd_ne::runtime::backend::StreamingEngine;
+        let service = DpdService::start(ServiceConfig { workers: 1, ..Default::default() })?;
+        let mut sess = service.open_session_with(SessionConfig::default(), || {
+            let qw = QGruWeights::synthetic(11, QSpec::Q12);
+            Ok(Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw, ActKind::Hard)))))
+        })?;
+        let r = time_it("session push/drain 64k (DpdService)", Duration::from_millis(800), || {
+            for chunk in burst.chunks(4096) {
+                sess.push(chunk).unwrap();
+            }
+            std::hint::black_box(sess.drain().unwrap());
+        });
+        println!("{}  -> {:.2} MSps", r.summary(), r.per_second(burst.len() as f64) / 1e6);
+        report.metric("session_msps", r.per_second(burst.len() as f64) / 1e6);
+        report.push(r);
+        let _ = sess.finish()?;
+        service.shutdown()?;
+    }
 
     // engines (need artifacts)
     if let Ok(m) = Manifest::discover(None) {

@@ -1,22 +1,32 @@
 //! L3 coordinator — the streaming transmit-chain runtime around the
 //! accelerator (the "DBE" of the paper's introduction).
 //!
-//! A transmit stream flows source -> framer -> DPD engine -> sink
-//! through bounded channels (blocking = backpressure); multiple
-//! independent streams model the mMIMO fan-out (one DPD-NeuralEngine
-//! macro per antenna). Engines are selectable per stream through the
-//! unified [`DpdEngine`](crate::runtime::DpdEngine) backend: native
-//! f64 GRU, bit-exact fixed-point, the cycle-accurate ASIC simulator,
-//! the interpreted frame engine, or — under `--features xla` — the
-//! AOT HLO executed via PJRT.
+//! The runtime surface is the long-lived [`DpdService`]: a persistent
+//! pool of worker threads, each owning its resident engines, that
+//! [`StreamSession`]s attach to. A session pushes I/Q incrementally
+//! through bounded channels (blocking = backpressure), GRU hidden
+//! state persists across pushes, and heterogeneous sessions (say a
+//! `Fixed` production stream next to a `CycleSim` shadow stream
+//! auditing it) share one service — the mMIMO deployment shape, one
+//! resident DPD-NeuralEngine per antenna, running for hours.
 //!
-//! Python never runs here; the HLO path executes the build-time
-//! artifacts through the embedded PJRT CPU client.
+//! Engines are selectable per session through the unified
+//! [`DpdEngine`](crate::runtime::DpdEngine) backend: native f64 GRU,
+//! bit-exact fixed-point, the cycle-accurate ASIC simulator, the
+//! interpreted frame engine, or — under `--features xla` — the AOT
+//! HLO executed via PJRT. Python never runs here.
+//!
+//! [`Coordinator`] remains as the one-shot compatibility wrapper
+//! (open a session, push everything, finish) for batch callers.
 
 pub mod framer;
 pub mod pipeline;
+pub mod service;
+pub mod session;
 pub mod stats;
 
 pub use framer::Framer;
 pub use pipeline::{Coordinator, CoordinatorConfig, EngineKind, StreamOutput};
+pub use service::{DpdService, ServiceConfig};
+pub use session::{SessionConfig, SessionStats, StreamSession};
 pub use stats::PipelineStats;

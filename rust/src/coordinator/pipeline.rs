@@ -1,40 +1,47 @@
-//! The multi-stream streaming pipeline.
+//! One-shot compatibility wrapper over the session runtime.
 //!
-//! Per stream, three stages run on their own threads, linked by
-//! *bounded* channels (`sync_channel`) so a slow stage backpressures
-//! the producer instead of buffering unboundedly:
+//! [`Coordinator`] is the original batch-shaped API: run a whole
+//! stream (or N parallel streams) to EOF and get the output plus
+//! stats back. Since the service redesign it is a thin veneer — each
+//! call starts a [`DpdService`] pool sized to the fan-out, opens one
+//! [`StreamSession`](super::StreamSession) per stream, pushes the
+//! input in chunks and finishes:
 //!
 //! ```text
-//!   source thread -> [frames] -> DPD worker -> [frames] -> sink
+//!   run_streams(inputs)
+//!     = DpdService::start(one worker per stream)
+//!       + per stream: open_session / push chunks / finish
 //! ```
 //!
-//! Engine construction and dispatch go through the unified
-//! [`DpdEngine`](crate::runtime::DpdEngine) trait: the worker holds a
-//! `Box<dyn DpdEngine>` built by an [`EngineFactory`] *inside* the
-//! worker thread (the PJRT client behind the `Hlo` backend is not
-//! `Send`); the factory itself resolves the manifest and the frame
-//! length up front so the framer can match shape-specialized engines.
-//! Multiple streams run fully in parallel — the mMIMO deployment
-//! shape, one engine instance per antenna.
+//! Semantics are unchanged — same framing, same bit-exact outputs,
+//! same [`PipelineStats`] fields — but worker failures now propagate
+//! as errors instead of silently truncating the output (the old
+//! pipeline's sink treated a dead worker as clean EOF). Long-lived
+//! callers should use [`DpdService`] directly and keep the pool.
+//!
+//! [`DpdService`]: super::DpdService
 
 use std::path::PathBuf;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::framer::{Frame, Framer};
-use super::stats::{LatencyAgg, PipelineStats};
-use crate::runtime::EngineFactory;
+use super::service::{DpdService, ServiceConfig};
+use super::session::SessionConfig;
+use super::stats::PipelineStats;
 
 pub use crate::runtime::EngineKind;
+
+/// Chunk size the wrapper pushes with (matches the legacy source
+/// thread; any chunking yields identical output).
+const PUSH_CHUNK: usize = 1024;
 
 /// Pipeline configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub engine: EngineKind,
     /// frame length for the framer (frame-based engines override with
-    /// their compiled frame size, see [`EngineFactory::frame_len`])
+    /// their compiled frame size, see
+    /// [`EngineFactory::frame_len`](crate::runtime::EngineFactory::frame_len))
     pub frame_len: usize,
     /// bounded-channel depth (frames in flight per link)
     pub queue_depth: usize,
@@ -60,14 +67,10 @@ pub struct StreamOutput {
     pub stats: PipelineStats,
 }
 
-/// The coordinator: runs N independent streams through the pipeline.
+/// The one-shot coordinator: runs N independent streams to EOF over a
+/// transient [`DpdService`] pool.
 pub struct Coordinator {
     pub cfg: CoordinatorConfig,
-}
-
-enum Msg {
-    Frame(Frame, Instant),
-    Eof,
 }
 
 impl Coordinator {
@@ -81,92 +84,44 @@ impl Coordinator {
         Ok(outs.into_iter().next().unwrap())
     }
 
-    /// Run multiple independent streams in parallel (mMIMO shape).
+    /// Run multiple independent streams in parallel (mMIMO shape):
+    /// one worker and one session per stream.
     pub fn run_streams(&self, inputs: Vec<Vec<[f64; 2]>>) -> Result<Vec<StreamOutput>> {
-        let mut handles = Vec::new();
-        for input in inputs {
-            let cfg = self.cfg.clone();
-            handles.push(std::thread::spawn(move || run_one(cfg, input)));
-        }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("stream thread panicked"))
-            .collect()
+        let service = DpdService::start(ServiceConfig {
+            workers: inputs.len().max(1),
+            // the legacy pipeline accepted 0 as a rendezvous channel;
+            // the service requires >= 1 (outputs are identical either way)
+            queue_depth: self.cfg.queue_depth.max(1),
+            frame_len: self.cfg.frame_len,
+            artifacts: self.cfg.artifacts.clone(),
+        })?;
+        let session_cfg = SessionConfig { engine: self.cfg.engine, ..Default::default() };
+        // one thread per stream, open included: engine construction
+        // runs concurrently in the workers, as the legacy pipeline did
+        // (open_session reserves its worker slot up front, so the
+        // concurrent opens spread one-per-worker across the pool)
+        let outs = std::thread::scope(|scope| {
+            let handles: Vec<_> = inputs
+                .into_iter()
+                .map(|input| {
+                    let service = &service;
+                    scope.spawn(move || -> Result<StreamOutput> {
+                        let mut session = service.open_session(session_cfg)?;
+                        for chunk in input.chunks(PUSH_CHUNK) {
+                            session.push(chunk)?;
+                        }
+                        session.finish()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("stream session thread panicked"))
+                .collect::<Result<Vec<_>>>()
+        })?;
+        service.shutdown()?;
+        Ok(outs)
     }
-}
-
-fn run_one(cfg: CoordinatorConfig, input: Vec<[f64; 2]>) -> Result<StreamOutput> {
-    // resolve the engine + frame geometry up front (manifest is Send;
-    // the engine itself is built inside the worker thread)
-    let factory = EngineFactory::new(cfg.engine, cfg.artifacts.as_deref())?;
-    let frame_len = factory.frame_len(cfg.frame_len);
-
-    let t_start = Instant::now();
-    let n_in = input.len() as u64;
-    let (tx_work, rx_work): (SyncSender<Msg>, Receiver<Msg>) = sync_channel(cfg.queue_depth);
-    let (tx_done, rx_done): (SyncSender<Msg>, Receiver<Msg>) = sync_channel(cfg.queue_depth);
-
-    // source + framer thread
-    let src = std::thread::spawn(move || -> Result<()> {
-        let mut framer = Framer::new(frame_len);
-        for chunk in input.chunks(1024) {
-            for fr in framer.push(chunk) {
-                tx_work.send(Msg::Frame(fr, Instant::now())).ok();
-            }
-        }
-        if let Some(fr) = framer.flush() {
-            tx_work.send(Msg::Frame(fr, Instant::now())).ok();
-        }
-        tx_work.send(Msg::Eof).ok();
-        Ok(())
-    });
-
-    // DPD worker thread: all engines behind the one DpdEngine trait
-    let worker = std::thread::spawn(move || -> Result<Duration> {
-        let mut eng = factory.build()?;
-        eng.reset();
-        let mut busy = Duration::ZERO;
-        while let Ok(Msg::Frame(mut fr, t0)) = rx_work.recv() {
-            let t = Instant::now();
-            eng.process_frame(&mut fr.data)?;
-            busy += t.elapsed();
-            tx_done.send(Msg::Frame(fr, t0)).ok();
-        }
-        tx_done.send(Msg::Eof).ok();
-        Ok(busy)
-    });
-
-    // sink (this thread)
-    let mut out: Vec<[f64; 2]> = Vec::new();
-    let mut frames = 0u64;
-    let mut lat = LatencyAgg::default();
-    let mut expected_seq = 0u64;
-    while let Ok(msg) = rx_done.recv() {
-        match msg {
-            Msg::Frame(fr, t0) => {
-                anyhow::ensure!(fr.seq == expected_seq, "frame reordering detected");
-                expected_seq += 1;
-                frames += 1;
-                lat.record(t0.elapsed());
-                out.extend_from_slice(&fr.data[..fr.valid]);
-            }
-            Msg::Eof => break,
-        }
-    }
-
-    src.join().expect("source panicked")?;
-    let busy = worker.join().expect("worker panicked")?;
-    let wall = t_start.elapsed();
-    let stats = PipelineStats {
-        samples_in: n_in,
-        samples_out: out.len() as u64,
-        frames,
-        wall,
-        dpd_busy: busy,
-        lat_mean: lat.mean(),
-        lat_max: lat.max(),
-    };
-    Ok(StreamOutput { iq: out, stats })
 }
 
 #[cfg(test)]
@@ -315,5 +270,12 @@ mod tests {
         let out = c.run_stream(&input).unwrap();
         assert_eq!(out.iq.len(), 2000);
         assert!(out.stats.engine_msps() > 0.0);
+    }
+
+    #[test]
+    fn empty_stream_list_is_fine() {
+        // no artifact tree needed: no session is ever opened
+        let c = Coordinator::new(CoordinatorConfig::default());
+        assert!(c.run_streams(Vec::new()).unwrap().is_empty());
     }
 }

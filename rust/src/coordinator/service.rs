@@ -1,0 +1,373 @@
+//! The long-lived DPD runtime service: a persistent worker pool that
+//! streaming sessions attach to.
+//!
+//! The silicon this repo reproduces runs *continuously* — 250 MSps of
+//! I/Q flows through one resident GRU engine indefinitely — so the
+//! runtime surface is shaped the same way: [`DpdService::start`]
+//! spawns N worker threads once, and [`DpdService::open_session`]
+//! pins a [`StreamSession`](super::StreamSession) to the least-loaded
+//! worker. Each worker owns its engines (built *in-thread* through
+//! [`EngineFactory`], preserving the constraint that the PJRT client
+//! behind the `Hlo` backend is not `Send`), and GRU hidden state
+//! persists for as long as the session lives — across every `push`.
+//!
+//! ```text
+//!   DpdService::start(cfg)                 worker 0   worker 1  ...
+//!        │  resolve manifest once             │          │
+//!        │  spawn worker pool ───────────────▶│          │
+//!   open_session(cfg) ── Cmd::Open ──────────▶│ build engine (in-thread)
+//!        │◀── ack (name, frame len) ──────────│          │
+//!   session.push(iq) ── Cmd::Frame ──────────▶│ process  │
+//!        │◀── OutMsg::Frame ──────────────────│          │
+//!   session.finish() ── Cmd::Finish ─────────▶│ drop engine
+//!        │◀── OutMsg::Finished ───────────────│          │
+//! ```
+//!
+//! Channels are *bounded* in both directions, so a slow engine
+//! backpressures `push` and a slow consumer backpressures its own
+//! session (its in-flight cap stops new frames). The worker itself
+//! can never block placing output — each session caps its unabsorbed
+//! frames below its output queue's capacity (see the session module
+//! docs) — so one stalled session cannot stall its worker peers, and
+//! the pool is deadlock-free even when one thread multiplexes many
+//! sessions on one worker.
+//!
+//! Worker errors are *propagated*, never swallowed: an engine failure
+//! is carried to the session as [`OutMsg::Err`] and surfaces from
+//! `push`/`drain`/`finish`; the worker itself survives and keeps
+//! serving its other sessions.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::framer::Frame;
+use super::session::{SessionConfig, StreamSession};
+use crate::runtime::{DpdEngine, EngineFactory, Manifest};
+
+/// Configuration of the worker pool.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// worker threads (each owns its resident engines)
+    pub workers: usize,
+    /// bounded-channel depth: frames in flight per worker command
+    /// queue and per session output queue
+    pub queue_depth: usize,
+    /// default framer length for sessions on streaming engines (frame
+    /// engines override with their compiled shape)
+    pub frame_len: usize,
+    /// artifact tree (None = discover); resolved once at `start`,
+    /// shared by every session
+    pub artifacts: Option<PathBuf>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { workers: 4, queue_depth: 4, frame_len: 2048, artifacts: None }
+    }
+}
+
+/// How a worker constructs a session's engine, on its own thread.
+pub(crate) type EngineBuild = Box<dyn FnOnce() -> Result<Box<dyn DpdEngine>> + Send>;
+
+/// Open acknowledgement: what the worker learned building the engine.
+pub(crate) struct OpenAck {
+    pub name: &'static str,
+    pub frame_len: Option<usize>,
+}
+
+/// Commands a session (or the service) sends to its worker.
+pub(crate) enum Cmd {
+    Open {
+        id: u64,
+        build: EngineBuild,
+        out: SyncSender<OutMsg>,
+        reply: SyncSender<Result<OpenAck>>,
+    },
+    Frame {
+        id: u64,
+        frame: Frame,
+        t0: Instant,
+    },
+    Reset {
+        id: u64,
+    },
+    /// Orderly close: worker drops the engine and confirms with
+    /// [`OutMsg::Finished`] after all queued frames are processed.
+    Finish {
+        id: u64,
+    },
+    /// Abandoned session (dropped without `finish`): drop the engine,
+    /// no confirmation.
+    Close {
+        id: u64,
+    },
+}
+
+/// What a worker sends back on a session's output channel.
+pub(crate) enum OutMsg {
+    Frame { frame: Frame, t0: Instant, busy: Duration },
+    /// The engine failed; the worker dropped the session and stays up.
+    Err(anyhow::Error),
+    Finished,
+}
+
+struct Active {
+    engine: Box<dyn DpdEngine>,
+    out: SyncSender<OutMsg>,
+}
+
+/// The worker event loop: owns every engine of the sessions pinned to
+/// it, processes commands strictly in order (per-session FIFO), exits
+/// when the service and all its sessions have dropped their senders.
+fn worker_loop(rx: Receiver<Cmd>) {
+    let mut sessions: HashMap<u64, Active> = HashMap::new();
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Open { id, build, out, reply } => match build() {
+                Ok(mut engine) => {
+                    engine.reset();
+                    let ack = OpenAck { name: engine.name(), frame_len: engine.frame_len() };
+                    // only keep the session if the opener is still there
+                    if reply.send(Ok(ack)).is_ok() {
+                        sessions.insert(id, Active { engine, out });
+                    }
+                }
+                Err(e) => {
+                    reply.send(Err(e.context("building session engine"))).ok();
+                }
+            },
+            Cmd::Frame { id, mut frame, t0 } => {
+                // unknown id: the session already failed or closed —
+                // frames still in the queue are dropped deliberately
+                let Some(a) = sessions.get_mut(&id) else { continue };
+                let t = Instant::now();
+                match a.engine.process_frame(&mut frame.data) {
+                    Ok(()) => {
+                        let busy = t.elapsed();
+                        if a.out.send(OutMsg::Frame { frame, t0, busy }).is_err() {
+                            // receiver gone: session dropped mid-flight
+                            sessions.remove(&id);
+                        }
+                    }
+                    Err(e) => {
+                        // propagate, don't swallow: the error reaches
+                        // the caller; this worker keeps serving peers
+                        let a = sessions.remove(&id).expect("just found");
+                        a.out.send(OutMsg::Err(e.context("DPD engine failed"))).ok();
+                    }
+                }
+            }
+            Cmd::Reset { id } => {
+                if let Some(a) = sessions.get_mut(&id) {
+                    a.engine.reset();
+                }
+            }
+            Cmd::Finish { id } => {
+                if let Some(a) = sessions.remove(&id) {
+                    a.out.send(OutMsg::Finished).ok();
+                }
+            }
+            Cmd::Close { id } => {
+                sessions.remove(&id);
+            }
+        }
+    }
+}
+
+struct Worker {
+    cmd: SyncSender<Cmd>,
+    /// open sessions pinned here (placement + `Drop` bookkeeping)
+    load: Arc<AtomicUsize>,
+    handle: JoinHandle<()>,
+}
+
+/// The long-lived DPD service: a persistent pool of engine workers
+/// that [`StreamSession`]s attach to. See the module docs for the
+/// lifecycle; [`Coordinator`](super::Coordinator) remains as a thin
+/// one-shot compatibility wrapper over this.
+pub struct DpdService {
+    cfg: ServiceConfig,
+    /// resolved once at start; `None` when no artifact tree exists
+    /// (custom-engine sessions still work, kind-based ones error)
+    manifest: Option<Arc<Manifest>>,
+    workers: Vec<Worker>,
+    next_id: AtomicU64,
+}
+
+impl DpdService {
+    /// Spawn the worker pool and resolve the artifact manifest once.
+    ///
+    /// A missing artifact tree is *not* fatal here: sessions opened
+    /// with [`DpdService::open_session_with`] bring their own engines
+    /// and never need it; [`DpdService::open_session`] reports the
+    /// discovery error at open time instead.
+    pub fn start(cfg: ServiceConfig) -> Result<DpdService> {
+        anyhow::ensure!(cfg.workers > 0, "ServiceConfig.workers must be > 0");
+        anyhow::ensure!(cfg.queue_depth > 0, "ServiceConfig.queue_depth must be > 0");
+        anyhow::ensure!(cfg.frame_len > 0, "ServiceConfig.frame_len must be > 0");
+        let manifest = Manifest::discover(cfg.artifacts.as_deref()).ok().map(Arc::new);
+        let workers = (0..cfg.workers)
+            .map(|i| {
+                let (cmd, rx) = sync_channel(cfg.queue_depth);
+                let handle = std::thread::Builder::new()
+                    .name(format!("dpd-worker-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .map_err(|e| anyhow!("spawning worker {i}: {e}"))?;
+                Ok(Worker { cmd, load: Arc::new(AtomicUsize::new(0)), handle })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DpdService { cfg, manifest, workers, next_id: AtomicU64::new(0) })
+    }
+
+    /// Pool size.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The manifest shared by every kind-based session, if an
+    /// artifact tree was found at start.
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.manifest.as_deref()
+    }
+
+    /// Open sessions per worker right now (snapshot).
+    pub fn loads(&self) -> Vec<usize> {
+        self.workers.iter().map(|w| w.load.load(Ordering::SeqCst)).collect()
+    }
+
+    /// Open a session whose engine is built by kind against the
+    /// shared manifest (resolved once for the whole service). The
+    /// engine kind is per-session, so heterogeneous sessions — e.g. a
+    /// `Fixed` production session plus a `CycleSim` shadow session
+    /// auditing it — share one pool.
+    pub fn open_session(&self, cfg: SessionConfig) -> Result<StreamSession> {
+        let manifest = match &self.manifest {
+            Some(m) => Arc::clone(m),
+            // no tree at start: retry so the caller gets the real
+            // discovery error (and late-appearing trees still work)
+            None => Arc::new(
+                Manifest::discover(self.cfg.artifacts.as_deref())
+                    .context("DpdService found no artifact tree for a kind-based session")?,
+            ),
+        };
+        let factory = EngineFactory::from_manifest(cfg.engine, manifest)?;
+        self.open_session_with(cfg, move || factory.build())
+    }
+
+    /// Open a session around a caller-supplied engine constructor,
+    /// run on the worker thread that will own the engine. This is the
+    /// primitive `open_session` builds on; it needs no artifact tree,
+    /// which is what lets session tests (and the hermetic benches)
+    /// run on synthetic weights.
+    pub fn open_session_with<F>(&self, cfg: SessionConfig, build: F) -> Result<StreamSession>
+    where
+        F: FnOnce() -> Result<Box<dyn DpdEngine>> + Send + 'static,
+    {
+        let (wi, worker) = self
+            .workers
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, w)| w.load.load(Ordering::SeqCst))
+            .expect("pool has at least one worker");
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let queue_depth = cfg.queue_depth.unwrap_or(self.cfg.queue_depth);
+        anyhow::ensure!(queue_depth > 0, "SessionConfig.queue_depth must be > 0");
+        anyhow::ensure!(cfg.frame_len != Some(0), "SessionConfig.frame_len must be > 0");
+        // reserve the slot before the (possibly slow) engine build so
+        // concurrent opens spread across the pool
+        worker.load.fetch_add(1, Ordering::SeqCst);
+        let open = (|| -> Result<(OpenAck, Receiver<OutMsg>)> {
+            // +1 slot: frames are capped at `queue_depth` by the
+            // session, and the spare slot guarantees the terminal
+            // `Finished`/`Err` message also never blocks the worker
+            let (out_tx, out_rx) = sync_channel(queue_depth + 1);
+            let (reply_tx, reply_rx) = sync_channel(1);
+            worker
+                .cmd
+                .send(Cmd::Open { id, build: Box::new(build), out: out_tx, reply: reply_tx })
+                .map_err(|_| anyhow!("worker {wi} terminated"))?;
+            let ack = reply_rx
+                .recv()
+                .map_err(|_| anyhow!("worker {wi} died while opening the session"))?
+                .with_context(|| format!("opening session {id} on worker {wi}"))?;
+            Ok((ack, out_rx))
+        })();
+        let (ack, out_rx) = match open {
+            Ok(v) => v,
+            Err(e) => {
+                worker.load.fetch_sub(1, Ordering::SeqCst);
+                return Err(e);
+            }
+        };
+        let frame_len =
+            ack.frame_len.unwrap_or_else(|| cfg.frame_len.unwrap_or(self.cfg.frame_len));
+        Ok(StreamSession::attach(
+            id,
+            ack.name,
+            frame_len,
+            queue_depth,
+            worker.cmd.clone(),
+            out_rx,
+            Arc::clone(&worker.load),
+        ))
+    }
+
+    /// Orderly teardown: joins every worker. Finish or drop all
+    /// sessions first — workers only exit once the last session's
+    /// command handle is gone, so this blocks while sessions live.
+    /// (Plain `drop` never blocks: workers then wind down on their
+    /// own when the last handle disappears.)
+    pub fn shutdown(self) -> Result<()> {
+        for w in self.workers {
+            let Worker { cmd, handle, .. } = w;
+            drop(cmd);
+            handle.join().map_err(|_| anyhow!("a DPD worker panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let cfg = ServiceConfig::default();
+        assert!(cfg.workers > 0 && cfg.queue_depth > 0 && cfg.frame_len > 0);
+        assert!(cfg.artifacts.is_none());
+    }
+
+    #[test]
+    fn start_validates_config() {
+        assert!(DpdService::start(ServiceConfig { workers: 0, ..Default::default() }).is_err());
+        assert!(DpdService::start(ServiceConfig { queue_depth: 0, ..Default::default() }).is_err());
+        assert!(DpdService::start(ServiceConfig { frame_len: 0, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn start_and_shutdown_without_sessions() {
+        // pool lifecycle needs no artifact tree at all
+        let svc = DpdService::start(ServiceConfig { workers: 3, ..Default::default() }).unwrap();
+        assert_eq!(svc.workers(), 3);
+        assert_eq!(svc.loads(), vec![0, 0, 0]);
+        svc.shutdown().unwrap();
+    }
+
+    #[test]
+    fn service_is_sync_and_sessions_are_send() {
+        fn assert_sync<T: Sync>() {}
+        fn assert_send<T: Send>() {}
+        // the compat wrapper and the mMIMO example drive one service
+        // from many threads: &DpdService crosses threads, sessions move
+        assert_sync::<DpdService>();
+        assert_send::<StreamSession>();
+    }
+}

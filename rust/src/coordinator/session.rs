@@ -1,0 +1,430 @@
+//! A long-lived streaming session on a [`DpdService`] worker.
+//!
+//! A [`StreamSession`] is the incremental face of the transmit chain:
+//! the caller `push`es I/Q in chunks of any size, the session frames
+//! them and feeds its worker through the bounded command channel
+//! (blocking = backpressure), and predistorted samples come back via
+//! `drain`/`finish`. The GRU hidden state lives in the worker-owned
+//! engine and **persists across pushes** for the life of the session —
+//! the silicon's continuous operating mode, and the property that
+//! makes temporal-delta tricks (DeltaDPD-style) expressible at all.
+//!
+//! Deadlock freedom rests on one invariant: a session keeps at most
+//! `queue_depth` frames in flight (unabsorbed), and its output
+//! channel holds `queue_depth + 1` slots — so the worker can *always*
+//! place completed output (and the final `Finished`/`Err`) without
+//! blocking, which means the worker always drains its command queue,
+//! which means a blocked `push` (absorbing its own output while it
+//! waits) always makes progress. One thread can therefore multiplex
+//! any number of sessions — even sessions sharing a worker — without
+//! a consumer thread per session.
+//!
+//! [`DpdService`]: super::DpdService
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::framer::Framer;
+use super::service::{Cmd, OutMsg};
+use super::stats::{LatencyAgg, PipelineStats};
+use super::StreamOutput;
+use crate::runtime::EngineKind;
+
+/// Per-session configuration. `None` fields inherit the service
+/// defaults; `engine` only matters for [`DpdService::open_session`]
+/// (kind-based construction against the shared manifest) — sessions
+/// opened with `open_session_with` bring their own engine.
+///
+/// [`DpdService::open_session`]: super::DpdService::open_session
+#[derive(Clone, Copy, Debug)]
+pub struct SessionConfig {
+    /// engine kind for manifest-backed sessions (per-session, so one
+    /// service can host heterogeneous sessions)
+    pub engine: EngineKind,
+    /// framer length override (frame engines still win with their
+    /// compiled shape)
+    pub frame_len: Option<usize>,
+    /// output-queue depth override
+    pub queue_depth: Option<usize>,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { engine: EngineKind::Fixed, frame_len: None, queue_depth: None }
+    }
+}
+
+/// Live snapshot of a session's pipeline counters: the
+/// [`PipelineStats`] fields plus the in-flight depth. Values are as
+/// of the last `push`/`drain` (those calls absorb worker output).
+#[derive(Clone, Debug)]
+pub struct SessionStats {
+    /// engine label (from the worker-built engine)
+    pub engine: &'static str,
+    pub samples_in: u64,
+    /// samples the engine has completed (drained or awaiting drain)
+    pub samples_out: u64,
+    pub frames: u64,
+    /// frames sent to the worker and not yet returned
+    pub in_flight: u64,
+    /// wall-clock since the session opened
+    pub wall: Duration,
+    pub dpd_busy: Duration,
+    pub lat_mean: Duration,
+    pub lat_max: Duration,
+}
+
+impl SessionStats {
+    /// End-to-end throughput in Msamples/s so far.
+    pub fn throughput_msps(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.samples_out as f64 / self.wall.as_secs_f64() / 1e6
+    }
+
+    /// DPD-stage-only throughput (what the engine itself sustains).
+    pub fn engine_msps(&self) -> f64 {
+        if self.dpd_busy.is_zero() {
+            return 0.0;
+        }
+        self.samples_out as f64 / self.dpd_busy.as_secs_f64() / 1e6
+    }
+
+    /// The one-shot stats shape ([`PipelineStats`]) this snapshot
+    /// extends — what `finish` reports and the compat wrapper returns.
+    pub fn to_pipeline(&self) -> PipelineStats {
+        PipelineStats {
+            samples_in: self.samples_in,
+            samples_out: self.samples_out,
+            frames: self.frames,
+            wall: self.wall,
+            dpd_busy: self.dpd_busy,
+            lat_mean: self.lat_mean,
+            lat_max: self.lat_max,
+        }
+    }
+}
+
+/// A streaming session pinned to one service worker. Obtained from
+/// [`DpdService::open_session`] / [`open_session_with`]; consumed by
+/// [`StreamSession::finish`]. Dropping without `finish` abandons the
+/// stream (the worker frees the engine; queued output is discarded).
+///
+/// [`DpdService::open_session`]: super::DpdService::open_session
+/// [`open_session_with`]: super::DpdService::open_session_with
+pub struct StreamSession {
+    id: u64,
+    engine_name: &'static str,
+    cmd: SyncSender<Cmd>,
+    out: Receiver<OutMsg>,
+    framer: Framer,
+    frame_len: usize,
+    /// in-flight cap = output-queue depth (see the module docs: this
+    /// is what keeps the worker from ever blocking on our output)
+    depth: u64,
+    /// predistorted samples absorbed from the worker, not yet drained
+    ready: Vec<[f64; 2]>,
+    in_flight: u64,
+    expected_seq: u64,
+    samples_in: u64,
+    samples_out: u64,
+    frames_done: u64,
+    busy: Duration,
+    lat: LatencyAgg,
+    t_open: Instant,
+    load: Arc<AtomicUsize>,
+    /// sticky failure (formatted chain) — every later call reports it
+    error: Option<String>,
+    closed: bool,
+}
+
+impl StreamSession {
+    pub(crate) fn attach(
+        id: u64,
+        engine_name: &'static str,
+        frame_len: usize,
+        depth: usize,
+        cmd: SyncSender<Cmd>,
+        out: Receiver<OutMsg>,
+        load: Arc<AtomicUsize>,
+    ) -> StreamSession {
+        StreamSession {
+            id,
+            engine_name,
+            cmd,
+            out,
+            framer: Framer::new(frame_len),
+            frame_len,
+            depth: depth as u64,
+            ready: Vec::new(),
+            in_flight: 0,
+            expected_seq: 0,
+            samples_in: 0,
+            samples_out: 0,
+            frames_done: 0,
+            busy: Duration::ZERO,
+            lat: LatencyAgg::default(),
+            t_open: Instant::now(),
+            load,
+            error: None,
+            closed: false,
+        }
+    }
+
+    /// Session id (unique within its service).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Label of the worker-built engine (e.g. `"qgru-hard"`).
+    pub fn engine(&self) -> &'static str {
+        self.engine_name
+    }
+
+    /// The frame length this session cuts the stream into.
+    pub fn frame_len(&self) -> usize {
+        self.frame_len
+    }
+
+    /// Push a chunk of I/Q samples — any length, any chunking; the
+    /// session frames them internally and the engine's hidden state
+    /// carries across pushes. Blocks (backpressure) when the worker
+    /// queue is full, draining completed output meanwhile.
+    pub fn push(&mut self, samples: &[[f64; 2]]) -> Result<()> {
+        self.check()?;
+        self.samples_in += samples.len() as u64;
+        for frame in self.framer.push(samples) {
+            self.send_cmd(Cmd::Frame { id: self.id, frame, t0: Instant::now() })?;
+        }
+        // opportunistic: keep the output queue shallow
+        self.pump(false)
+    }
+
+    /// Take every predistorted sample completed so far (non-blocking).
+    pub fn drain(&mut self) -> Result<Vec<[f64; 2]>> {
+        self.pump(false)?;
+        self.check()?;
+        Ok(std::mem::take(&mut self.ready))
+    }
+
+    /// Live stats snapshot (see [`SessionStats`]).
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            engine: self.engine_name,
+            samples_in: self.samples_in,
+            samples_out: self.samples_out,
+            frames: self.frames_done,
+            in_flight: self.in_flight,
+            wall: self.t_open.elapsed(),
+            dpd_busy: self.busy,
+            lat_mean: self.lat.mean(),
+            lat_max: self.lat.max(),
+        }
+    }
+
+    /// Reset the engine's hidden state, in stream order: a partial
+    /// frame is flushed (zero-padded, trimmed on output) first, so
+    /// samples pushed after `reset` behave exactly like the start of
+    /// a fresh stream.
+    pub fn reset(&mut self) -> Result<()> {
+        self.check()?;
+        if let Some(tail) = self.framer.flush() {
+            self.send_cmd(Cmd::Frame { id: self.id, frame: tail, t0: Instant::now() })?;
+        }
+        self.send_cmd(Cmd::Reset { id: self.id })
+    }
+
+    /// Flush the tail, wait for every in-flight frame, close the
+    /// session and return the not-yet-drained output plus final stats
+    /// (`stats.samples_out` counts the whole stream even if part of
+    /// it was consumed incrementally via `drain`).
+    pub fn finish(mut self) -> Result<StreamOutput> {
+        self.check()?;
+        if let Some(tail) = self.framer.flush() {
+            self.send_cmd(Cmd::Frame { id: self.id, frame: tail, t0: Instant::now() })?;
+        }
+        self.send_cmd(Cmd::Finish { id: self.id })?;
+        loop {
+            match self.out.recv() {
+                Ok(OutMsg::Finished) => break,
+                Ok(msg) => self.absorb(msg)?,
+                Err(_) => {
+                    self.error = Some("worker dropped the session".into());
+                    self.check()?;
+                }
+            }
+        }
+        self.closed = true;
+        self.load.fetch_sub(1, Ordering::SeqCst);
+        let mut stats = self.stats().to_pipeline();
+        stats.wall = self.t_open.elapsed();
+        Ok(StreamOutput { iq: std::mem::take(&mut self.ready), stats })
+    }
+
+    /// Fail fast on a sticky error.
+    fn check(&self) -> Result<()> {
+        match &self.error {
+            Some(msg) => bail!("session {} failed: {msg}", self.id),
+            None => Ok(()),
+        }
+    }
+
+    /// Send a command to the worker without ever deadlocking: frames
+    /// first wait under the in-flight cap, and a full command queue is
+    /// ridden out by absorbing our own output while the worker (which
+    /// never blocks on output) drains it.
+    fn send_cmd(&mut self, msg: Cmd) -> Result<()> {
+        let is_frame = matches!(msg, Cmd::Frame { .. });
+        // the deadlock-freedom invariant (module docs): never exceed
+        // `depth` unabsorbed frames, so completed output always fits
+        // in our output queue and the worker never blocks sending it
+        while is_frame && self.in_flight >= self.depth {
+            self.pump(true)?;
+        }
+        let mut msg = msg;
+        loop {
+            match self.cmd.try_send(msg) {
+                Ok(()) => {
+                    if is_frame {
+                        self.in_flight += 1;
+                    }
+                    return Ok(());
+                }
+                Err(TrySendError::Full(m)) => {
+                    msg = m;
+                    self.pump(true)?;
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    self.error = Some("worker terminated (service shut down?)".into());
+                    return self.check();
+                }
+            }
+        }
+    }
+
+    /// Absorb completed output. `wait_one = true` blocks briefly for
+    /// the first message (used while the command queue is full);
+    /// otherwise strictly non-blocking.
+    fn pump(&mut self, wait_one: bool) -> Result<()> {
+        let mut wait = wait_one;
+        loop {
+            let msg = if wait {
+                match self.out.recv_timeout(Duration::from_millis(1)) {
+                    Ok(m) => m,
+                    Err(RecvTimeoutError::Timeout) => return Ok(()),
+                    Err(RecvTimeoutError::Disconnected) => return self.on_disconnect(),
+                }
+            } else {
+                match self.out.try_recv() {
+                    Ok(m) => m,
+                    Err(TryRecvError::Empty) => return Ok(()),
+                    Err(TryRecvError::Disconnected) => return self.on_disconnect(),
+                }
+            };
+            wait = false;
+            self.absorb(msg)?;
+        }
+    }
+
+    fn on_disconnect(&mut self) -> Result<()> {
+        // the worker dropped our output sender without an Err/Finished:
+        // only legitimate when nothing was pending
+        if self.error.is_none() && (self.in_flight > 0 || !self.closed) {
+            self.error = Some("worker dropped the session".into());
+        }
+        self.check()
+    }
+
+    fn absorb(&mut self, msg: OutMsg) -> Result<()> {
+        match msg {
+            OutMsg::Frame { frame, t0, busy } => {
+                anyhow::ensure!(frame.seq == self.expected_seq, "frame reordering detected");
+                self.expected_seq += 1;
+                self.frames_done += 1;
+                self.in_flight = self.in_flight.saturating_sub(1);
+                self.busy += busy;
+                self.lat.record(t0.elapsed());
+                self.samples_out += frame.valid as u64;
+                self.ready.extend_from_slice(&frame.data[..frame.valid]);
+                Ok(())
+            }
+            OutMsg::Err(e) => {
+                // the worker already dropped the session state
+                self.in_flight = 0;
+                self.error = Some(format!("{e:#}"));
+                self.check()
+            }
+            OutMsg::Finished => Err(anyhow!("protocol error: unexpected Finished")),
+        }
+    }
+}
+
+impl Drop for StreamSession {
+    fn drop(&mut self) {
+        if !self.closed {
+            // blocking send so the worker reliably frees the engine
+            // (bounded wait: the worker never blocks on output, so its
+            // command queue always drains); an Err here means the
+            // worker is already gone, which frees everything anyway
+            self.cmd.send(Cmd::Close { id: self.id }).ok();
+            self.load.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_config_defaults_inherit_service() {
+        let cfg = SessionConfig::default();
+        assert_eq!(cfg.engine, EngineKind::Fixed);
+        assert!(cfg.frame_len.is_none() && cfg.queue_depth.is_none());
+    }
+
+    #[test]
+    fn session_stats_math_and_pipeline_mapping() {
+        let s = SessionStats {
+            engine: "fixture",
+            samples_in: 2_000_000,
+            samples_out: 1_000_000,
+            frames: 10,
+            in_flight: 3,
+            wall: Duration::from_millis(100),
+            dpd_busy: Duration::from_millis(50),
+            lat_mean: Duration::from_micros(20),
+            lat_max: Duration::from_micros(90),
+        };
+        assert!((s.throughput_msps() - 10.0).abs() < 1e-9);
+        assert!((s.engine_msps() - 20.0).abs() < 1e-9);
+        let p = s.to_pipeline();
+        assert_eq!(p.samples_in, 2_000_000);
+        assert_eq!(p.samples_out, 1_000_000);
+        assert_eq!(p.frames, 10);
+        assert_eq!(p.lat_max, Duration::from_micros(90));
+        assert!((p.engine_msps() - s.engine_msps()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_division_safe() {
+        let s = SessionStats {
+            engine: "x",
+            samples_in: 0,
+            samples_out: 0,
+            frames: 0,
+            in_flight: 0,
+            wall: Duration::ZERO,
+            dpd_busy: Duration::ZERO,
+            lat_mean: Duration::ZERO,
+            lat_max: Duration::ZERO,
+        };
+        assert_eq!(s.throughput_msps(), 0.0);
+        assert_eq!(s.engine_msps(), 0.0);
+    }
+}

@@ -2,7 +2,9 @@
 //!
 //! Subcommands (hand-rolled parser; no clap offline):
 //!   run          end-to-end linearization (OFDM -> DPD -> PA -> ACPR/EVM)
-//!   stream       multi-stream coordinator throughput run
+//!   serve        long-lived DpdService: N sessions multiplexed on a
+//!                persistent worker pool (+ optional shadow-audit session)
+//!   stream       multi-stream one-shot throughput run (compat wrapper)
 //!   asic-report  Fig. 5 post-layout-style spec from the models
 //!   fpga-report  Table I / Fig. 4 resource estimates
 //!   sweep        Fig. 3 precision x activation sweep
@@ -10,15 +12,19 @@
 //!
 //! Common flags: --artifacts <dir>,
 //! --engine <fixed|native|cyclesim|interp|hlo>, --streams <n>,
-//! --symbols <n>, --seed <n>. The `hlo` engine needs a build with
-//! `--features xla`; `interp` is its hermetic frame-based twin.
+//! --symbols <n>, --seed <n>; `serve` adds --sessions <n>,
+//! --workers <n>, --rounds <n> and --shadow <engine>. The `hlo`
+//! engine needs a build with `--features xla`; `interp` is its
+//! hermetic frame-based twin.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use dpd_ne::coordinator::{Coordinator, CoordinatorConfig, EngineKind};
+use dpd_ne::coordinator::{
+    Coordinator, CoordinatorConfig, DpdService, EngineKind, ServiceConfig, SessionConfig,
+};
 use dpd_ne::dpd::qgru::{ActKind, LutTables, QGruDpd};
 use dpd_ne::dpd::weights::{GruWeights, QGruWeights};
 use dpd_ne::dpd::Dpd;
@@ -47,8 +53,8 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     (pos, flags)
 }
 
-fn engine_kind(flags: &HashMap<String, String>) -> Result<EngineKind> {
-    Ok(match flags.get("engine").map(String::as_str).unwrap_or("fixed") {
+fn parse_engine(name: &str) -> Result<EngineKind> {
+    Ok(match name {
         "fixed" => EngineKind::Fixed,
         "native" => EngineKind::NativeF64,
         "cyclesim" => EngineKind::CycleSim,
@@ -61,14 +67,19 @@ fn engine_kind(flags: &HashMap<String, String>) -> Result<EngineKind> {
     })
 }
 
+fn engine_kind(flags: &HashMap<String, String>) -> Result<EngineKind> {
+    parse_engine(flags.get("engine").map(String::as_str).unwrap_or("fixed"))
+}
+
 fn artifacts(flags: &HashMap<String, String>) -> Option<PathBuf> {
     flags.get("artifacts").map(PathBuf::from)
 }
 
 fn usage() -> &'static str {
-    "usage: dpd-ne <run|stream|asic-report|fpga-report|sweep|info> [flags]\n\
+    "usage: dpd-ne <run|serve|stream|asic-report|fpga-report|sweep|info> [flags]\n\
      flags: --artifacts <dir> --engine <fixed|native|cyclesim|interp|hlo> \
      --streams <n> --symbols <n> --seed <n>\n\
+     serve: --sessions <n> --workers <n> --rounds <n> --shadow <engine>\n\
      (engine 'hlo' needs a build with --features xla)"
 }
 
@@ -81,6 +92,7 @@ fn main() -> Result<()> {
     let (_pos, flags) = parse_flags(&args[1..]);
     match cmd.as_str() {
         "run" => cmd_run(&flags),
+        "serve" => cmd_serve(&flags),
         "stream" => cmd_stream(&flags),
         "asic-report" => cmd_asic_report(&flags),
         "fpga-report" => cmd_fpga_report(),
@@ -167,6 +179,113 @@ fn cmd_stream(flags: &HashMap<String, String>) -> Result<()> {
         outs.len()
     );
     Ok(())
+}
+
+/// The service-native path: one persistent worker pool, N long-lived
+/// sessions multiplexed from this thread (`push` auto-drains, so no
+/// consumer thread per session is needed), engine state carried
+/// across every burst. `--shadow <engine>` opens one more session
+/// that mirrors session 0's input for an on-line parity audit —
+/// e.g. `--engine fixed --shadow cyclesim` checks the functional
+/// model against the cycle-accurate ASIC simulator while serving.
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let n_sessions: usize = flags.get("sessions").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let n_workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let rounds: usize = flags.get("rounds").map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let engine = engine_kind(flags)?;
+    let shadow_kind = flags.get("shadow").map(|s| parse_engine(s)).transpose()?;
+    let sig = test_signal(flags)?;
+
+    let service = DpdService::start(ServiceConfig {
+        workers: n_workers,
+        artifacts: artifacts(flags),
+        ..Default::default()
+    })?;
+    let mut sessions = Vec::new();
+    for _ in 0..n_sessions {
+        sessions.push(service.open_session(SessionConfig { engine, ..Default::default() })?);
+    }
+    let mut shadow = shadow_kind
+        .map(|kind| service.open_session(SessionConfig { engine: kind, ..Default::default() }))
+        .transpose()?;
+    println!(
+        "DpdService: {} workers, {} sessions ({engine:?}){}, {} samples/burst x {rounds} bursts",
+        service.workers(),
+        n_sessions,
+        match shadow_kind {
+            Some(k) => format!(" + shadow ({k:?})"),
+            None => String::new(),
+        },
+        sig.iq.len()
+    );
+
+    let mut outputs: Vec<Vec<[f64; 2]>> = vec![Vec::new(); n_sessions];
+    let mut shadow_out: Vec<[f64; 2]> = Vec::new();
+    let t0 = std::time::Instant::now();
+    for _ in 0..rounds {
+        for chunk in sig.iq.chunks(4096) {
+            for (k, s) in sessions.iter_mut().enumerate() {
+                s.push(chunk)?;
+                outputs[k].extend(s.drain()?);
+            }
+            if let Some(sh) = shadow.as_mut() {
+                sh.push(chunk)?;
+                shadow_out.extend(sh.drain()?);
+            }
+        }
+    }
+
+    let mut t = Table::new(
+        "DpdService sessions (hidden state persisted across bursts)",
+        &["session", "engine", "samples", "frames", "engine MSps", "frame lat mean"],
+    );
+    let mut agg = 0u64;
+    for (k, s) in sessions.into_iter().enumerate() {
+        let out = s.finish()?;
+        agg += out.stats.samples_out;
+        outputs[k].extend(out.iq);
+        t.row(&[
+            format!("{k}"),
+            format!("{engine:?}"),
+            out.stats.samples_out.to_string(),
+            out.stats.frames.to_string(),
+            f2(out.stats.engine_msps()),
+            format!("{:?}", out.stats.lat_mean),
+        ]);
+    }
+    if let Some(sh) = shadow.take() {
+        let out = sh.finish()?;
+        shadow_out.extend(out.iq);
+        t.row(&[
+            "shadow".into(),
+            format!("{:?}", shadow_kind.unwrap()),
+            out.stats.samples_out.to_string(),
+            out.stats.frames.to_string(),
+            f2(out.stats.engine_msps()),
+            format!("{:?}", out.stats.lat_mean),
+        ]);
+    }
+    let wall = t0.elapsed();
+    println!("{}", t.render());
+    println!(
+        "aggregate: {} samples in {:?} = {:.2} MSps across the pool",
+        agg,
+        wall,
+        agg as f64 / wall.as_secs_f64() / 1e6
+    );
+    if !shadow_out.is_empty() && !outputs.is_empty() {
+        let dev = shadow_out
+            .iter()
+            .zip(&outputs[0])
+            .map(|(a, b)| (a[0] - b[0]).abs().max((a[1] - b[1]).abs()))
+            .fold(0.0f64, f64::max);
+        if dev == 0.0 {
+            println!("shadow audit: bit-identical to session 0");
+        } else {
+            println!("shadow audit: max |dev| vs session 0 = {dev:.6}");
+        }
+    }
+    service.shutdown()
 }
 
 fn cmd_asic_report(flags: &HashMap<String, String>) -> Result<()> {

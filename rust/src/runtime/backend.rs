@@ -31,6 +31,7 @@
 //! stay hermetic (no PJRT, no network) without losing the frame path.
 
 use std::path::Path;
+use std::sync::Arc;
 
 #[cfg(feature = "xla")]
 use anyhow::Context;
@@ -248,7 +249,7 @@ impl DpdEngine for HloEngine {
 /// calls it inside the worker thread.
 pub struct EngineFactory {
     kind: EngineKind,
-    manifest: Manifest,
+    manifest: Arc<Manifest>,
     frame_len: Option<usize>,
 }
 
@@ -257,7 +258,14 @@ impl EngineFactory {
     /// frame length (frame engines inherit the lowered artifact's
     /// compiled shape).
     pub fn new(kind: EngineKind, artifacts: Option<&Path>) -> Result<EngineFactory> {
-        let manifest = Manifest::discover(artifacts)?;
+        EngineFactory::from_manifest(kind, Arc::new(Manifest::discover(artifacts)?))
+    }
+
+    /// Build a factory over an already-resolved manifest. This is how
+    /// a [`DpdService`](crate::coordinator::DpdService) shares one
+    /// manifest (discovery + JSON parse done once) across every
+    /// session it opens, instead of re-resolving per stream.
+    pub fn from_manifest(kind: EngineKind, manifest: Arc<Manifest>) -> Result<EngineFactory> {
         let frame_len = match kind {
             EngineKind::Interp => Some(
                 manifest.best_int_hlo().map(|e| e.time).unwrap_or(DEFAULT_FRAME_LEN),
@@ -277,6 +285,11 @@ impl EngineFactory {
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// The shared manifest handle (cheap to clone into more factories).
+    pub fn manifest_arc(&self) -> Arc<Manifest> {
+        Arc::clone(&self.manifest)
     }
 
     /// The frame length the framer should cut: the engine's compiled
@@ -523,6 +536,37 @@ mod tests {
                 Err(e) => panic!("{kind:?}: {e:#}"),
             }
         }
+    }
+
+    #[test]
+    fn from_manifest_shares_one_resolution() {
+        // A synthetic manifest (no artifact tree on disk) is enough to
+        // resolve factories for every streaming kind plus Interp's
+        // default frame length — the path DpdService uses to share one
+        // manifest across heterogeneous sessions.
+        let m = Arc::new(Manifest {
+            root: std::path::PathBuf::from("/synthetic"),
+            hidden: 10,
+            features: 4,
+            n_params: 502,
+            qspec_bits: 12,
+            pa_model: std::path::PathBuf::from("/synthetic/pa.json"),
+            weights_main: std::path::PathBuf::from("/synthetic/weights_main.json"),
+            weights_float: std::path::PathBuf::from("/synthetic/weights_float.json"),
+            sweep: Vec::new(),
+            hlo: Vec::new(),
+            golden: Vec::new(),
+        });
+        for kind in [EngineKind::NativeF64, EngineKind::Fixed, EngineKind::CycleSim] {
+            let f = EngineFactory::from_manifest(kind, Arc::clone(&m)).unwrap();
+            assert_eq!(f.kind(), kind);
+            assert_eq!(f.frame_len(100), 100, "streaming kinds keep the caller's frame");
+        }
+        let f = EngineFactory::from_manifest(EngineKind::Interp, Arc::clone(&m)).unwrap();
+        assert_eq!(f.frame_len(100), DEFAULT_FRAME_LEN, "no HLO entry -> default frame");
+        assert_eq!(f.manifest().n_params, 502);
+        // the resolution is genuinely shared, not copied per factory
+        assert!(Arc::ptr_eq(&f.manifest_arc(), &m));
     }
 
     /// What `artifacts.rs` also asserts, restated here because the

@@ -1,0 +1,378 @@
+//! Session-runtime contract tests — hermetic by construction.
+//!
+//! Every test here builds its engines from synthetic weights
+//! (`QGruWeights::synthetic`, the same fixture class the accel tests
+//! and artifact-less bench runs use), so parity, backpressure,
+//! error-propagation, isolation and state-persistence all run in the
+//! hermetic CI build — no `artifacts/` tree, no skips.
+//!
+//! The parity oracle is the bit-exact `QGruDpd` run directly over the
+//! whole signal: a `Fixed`-style session must reproduce it exactly no
+//! matter how the caller chunks its pushes, because the GRU hidden
+//! state persists across `push` calls for the life of the session.
+
+use anyhow::Result;
+use dpd_ne::coordinator::{DpdService, ServiceConfig, SessionConfig};
+use dpd_ne::dpd::qgru::{ActKind, QGruDpd};
+use dpd_ne::dpd::weights::QGruWeights;
+use dpd_ne::dpd::Dpd;
+use dpd_ne::fixed::QSpec;
+use dpd_ne::runtime::backend::{CycleSimDpd, StreamingEngine};
+use dpd_ne::runtime::{DpdEngine, Manifest};
+use dpd_ne::util::Rng;
+
+fn signal(n: usize, seed: u64) -> Vec<[f64; 2]> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect()
+}
+
+fn synth_weights(seed: u64) -> QGruWeights {
+    QGruWeights::synthetic(seed, QSpec::Q12)
+}
+
+/// The bit-exact streaming engine on synthetic weights — what a
+/// `Fixed` session runs, minus the artifact tree.
+fn fixed_engine(seed: u64) -> Box<dyn DpdEngine> {
+    Box::new(StreamingEngine::new(Box::new(QGruDpd::new(synth_weights(seed), ActKind::Hard))))
+}
+
+/// Same weights through the cycle-accurate ASIC simulator.
+fn cyclesim_engine(seed: u64) -> Box<dyn DpdEngine> {
+    let qw = synth_weights(seed);
+    Box::new(StreamingEngine::new(Box::new(CycleSimDpd::new(&qw))))
+}
+
+/// Oracle: one continuous run over the whole signal, state never reset.
+fn direct(seed: u64, input: &[[f64; 2]]) -> Vec<[f64; 2]> {
+    let mut d = QGruDpd::new(synth_weights(seed), ActKind::Hard);
+    d.run(input)
+}
+
+/// Identity engine that fails after `after` frames — the deliberately
+/// failing worker of the error-propagation tests.
+struct FailingEngine {
+    after: usize,
+    seen: usize,
+}
+
+impl DpdEngine for FailingEngine {
+    fn name(&self) -> &'static str {
+        "failing"
+    }
+    fn process_frame(&mut self, _iq: &mut [[f64; 2]]) -> Result<()> {
+        self.seen += 1;
+        anyhow::ensure!(self.seen <= self.after, "injected engine failure");
+        Ok(())
+    }
+    fn reset(&mut self) {}
+}
+
+#[test]
+fn parity_any_chunking_matches_whole_signal_run() {
+    // The headline contract: pushing in arbitrary chunk sizes (with
+    // interleaved drains) is bit-identical to one direct engine run —
+    // frame boundaries and push boundaries must not disturb state.
+    let input = signal(1500, 7);
+    let want = direct(42, &input);
+    let service =
+        DpdService::start(ServiceConfig { workers: 2, frame_len: 128, ..Default::default() })
+            .unwrap();
+    for chunks in [vec![1500], vec![1, 3, 17, 64, 255, 1024, 136], vec![499, 499, 499, 3]] {
+        let mut sess =
+            service.open_session_with(SessionConfig::default(), || Ok(fixed_engine(42))).unwrap();
+        let mut got = Vec::new();
+        let mut i = 0;
+        for c in chunks {
+            sess.push(&input[i..i + c]).unwrap();
+            i += c;
+            got.extend(sess.drain().unwrap());
+        }
+        assert_eq!(i, input.len());
+        let out = sess.finish().unwrap();
+        got.extend(out.iq);
+        assert_eq!(got, want);
+        assert_eq!(out.stats.samples_in as usize, input.len());
+        assert_eq!(out.stats.samples_out as usize, input.len());
+    }
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn reset_restarts_the_stream_mid_session() {
+    let a = signal(333, 1);
+    let b = signal(700, 2);
+    let service =
+        DpdService::start(ServiceConfig { workers: 1, frame_len: 64, ..Default::default() })
+            .unwrap();
+    let mut sess =
+        service.open_session_with(SessionConfig::default(), || Ok(fixed_engine(9))).unwrap();
+    sess.push(&a).unwrap();
+    sess.reset().unwrap();
+    sess.push(&b).unwrap();
+    let got = sess.finish().unwrap();
+    // each segment behaves like a fresh stream (h reset in between)
+    let mut want = direct(9, &a);
+    want.extend(direct(9, &b));
+    assert_eq!(got.iq, want);
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn backpressure_tiny_queues_push_never_deadlocks() {
+    // queue_depth 1 both ways, no manual drains: push's opportunistic
+    // output absorption is what keeps the loop moving
+    let input = signal(5000, 3);
+    let service = DpdService::start(ServiceConfig {
+        workers: 1,
+        queue_depth: 1,
+        frame_len: 16,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut sess =
+        service.open_session_with(SessionConfig::default(), || Ok(fixed_engine(5))).unwrap();
+    for chunk in input.chunks(777) {
+        sess.push(chunk).unwrap();
+    }
+    let out = sess.finish().unwrap();
+    assert_eq!(out.iq, direct(5, &input));
+    assert_eq!(out.stats.frames, (5000 + 15) / 16);
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn single_thread_multiplexing_coworker_sessions_never_deadlocks() {
+    // The adversarial shape for the in-flight-cap invariant: two
+    // sessions pinned to the same worker, driven alternately from one
+    // thread, pushes large enough (62 frames each at depth 1) to
+    // overrun every queue, no drains in between. Without the cap the
+    // worker could block on session A's full output queue while B's
+    // push spins on the shared command queue — a livelock.
+    let service = DpdService::start(ServiceConfig {
+        workers: 1,
+        queue_depth: 1,
+        frame_len: 16,
+        ..Default::default()
+    })
+    .unwrap();
+    let a_in = signal(2000, 31);
+    let b_in = signal(2000, 32);
+    let mut a =
+        service.open_session_with(SessionConfig::default(), || Ok(fixed_engine(51))).unwrap();
+    let mut b =
+        service.open_session_with(SessionConfig::default(), || Ok(fixed_engine(52))).unwrap();
+    for (ca, cb) in a_in.chunks(1000).zip(b_in.chunks(1000)) {
+        a.push(ca).unwrap();
+        b.push(cb).unwrap();
+    }
+    assert_eq!(a.finish().unwrap().iq, direct(51, &a_in));
+    assert_eq!(b.finish().unwrap().iq, direct(52, &b_in));
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn worker_error_propagates_and_worker_survives() {
+    // Regression for the old pipeline bug: a dead engine used to look
+    // like clean EOF and silently truncate the output. Now the error
+    // must surface from push or finish — never an Ok with short data.
+    let service =
+        DpdService::start(ServiceConfig { workers: 1, frame_len: 32, ..Default::default() })
+            .unwrap();
+    let mut sess = service
+        .open_session_with(SessionConfig::default(), || {
+            Ok(Box::new(FailingEngine { after: 2, seen: 0 }))
+        })
+        .unwrap();
+    let input = signal(32 * 10, 4);
+    let mut push_err = None;
+    for chunk in input.chunks(64) {
+        if let Err(e) = sess.push(chunk) {
+            push_err = Some(e);
+            break;
+        }
+    }
+    let err = match push_err {
+        Some(e) => e,
+        None => sess.finish().expect_err("failure must not be swallowed"),
+    };
+    assert!(
+        format!("{err:#}").contains("injected engine failure"),
+        "error lost its cause: {err:#}"
+    );
+
+    // the worker itself survives the engine failure and serves the
+    // next session correctly
+    let input = signal(200, 6);
+    let mut sess =
+        service.open_session_with(SessionConfig::default(), || Ok(fixed_engine(6))).unwrap();
+    sess.push(&input).unwrap();
+    assert_eq!(sess.finish().unwrap().iq, direct(6, &input));
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn error_is_sticky_across_calls() {
+    let service =
+        DpdService::start(ServiceConfig { workers: 1, frame_len: 8, ..Default::default() })
+            .unwrap();
+    let mut sess = service
+        .open_session_with(SessionConfig::default(), || {
+            Ok(Box::new(FailingEngine { after: 0, seen: 0 }))
+        })
+        .unwrap();
+    let input = signal(64, 8);
+    // drive until the failure lands, then every call must keep failing
+    let mut saw_err = false;
+    for _ in 0..100 {
+        if sess.push(&input).is_err() {
+            saw_err = true;
+            break;
+        }
+    }
+    assert!(saw_err, "failure never surfaced");
+    assert!(sess.drain().is_err());
+    assert!(sess.reset().is_err());
+    assert!(sess.finish().is_err());
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn sessions_are_isolated_even_on_a_shared_worker() {
+    // 3 sessions on 2 workers: at least two share a worker; each
+    // session has its own weights, input and state
+    let service =
+        DpdService::start(ServiceConfig { workers: 2, frame_len: 64, ..Default::default() })
+            .unwrap();
+    let seeds = [21u64, 22, 23];
+    let inputs: Vec<Vec<[f64; 2]>> = (0..3).map(|k| signal(901, 40 + k as u64)).collect();
+    let mut sessions: Vec<_> = seeds
+        .iter()
+        .map(|&s| {
+            service.open_session_with(SessionConfig::default(), move || Ok(fixed_engine(s))).unwrap()
+        })
+        .collect();
+    assert_eq!(service.loads().iter().sum::<usize>(), 3);
+    // interleave pushes round-robin from one thread
+    for chunk_idx in 0..(901 + 200) / 201 {
+        for (k, sess) in sessions.iter_mut().enumerate() {
+            let lo = chunk_idx * 201;
+            let hi = (lo + 201).min(inputs[k].len());
+            if lo < hi {
+                sess.push(&inputs[k][lo..hi]).unwrap();
+            }
+        }
+    }
+    for (k, sess) in sessions.into_iter().enumerate() {
+        let out = sess.finish().unwrap();
+        assert_eq!(out.iq, direct(seeds[k], &inputs[k]), "session {k} contaminated");
+    }
+    assert_eq!(service.loads().iter().sum::<usize>(), 0);
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn heterogeneous_shadow_session_audits_bit_exactly() {
+    // the on-line parity-audit deployment: a Fixed production session
+    // and a CycleSim shadow session on one service, identical input —
+    // the shared integer datapath makes them bit-identical
+    let input = signal(600, 17);
+    let service =
+        DpdService::start(ServiceConfig { workers: 2, frame_len: 50, ..Default::default() })
+            .unwrap();
+    let mut prod =
+        service.open_session_with(SessionConfig::default(), || Ok(fixed_engine(33))).unwrap();
+    let mut shadow =
+        service.open_session_with(SessionConfig::default(), || Ok(cyclesim_engine(33))).unwrap();
+    for chunk in input.chunks(97) {
+        prod.push(chunk).unwrap();
+        shadow.push(chunk).unwrap();
+    }
+    let a = prod.finish().unwrap();
+    let b = shadow.finish().unwrap();
+    assert_eq!(a.iq, b.iq, "cycle-accurate shadow diverged from the functional model");
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn drop_without_finish_frees_the_worker() {
+    let service =
+        DpdService::start(ServiceConfig { workers: 1, frame_len: 32, ..Default::default() })
+            .unwrap();
+    {
+        let mut sess =
+            service.open_session_with(SessionConfig::default(), || Ok(fixed_engine(2))).unwrap();
+        sess.push(&signal(500, 5)).unwrap();
+        assert_eq!(service.loads(), vec![1]);
+        // dropped here, mid-stream, without finish
+    }
+    assert_eq!(service.loads(), vec![0]);
+    // the worker keeps serving
+    let input = signal(300, 11);
+    let mut sess =
+        service.open_session_with(SessionConfig::default(), || Ok(fixed_engine(3))).unwrap();
+    sess.push(&input).unwrap();
+    assert_eq!(sess.finish().unwrap().iq, direct(3, &input));
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn empty_session_finishes_clean() {
+    let service = DpdService::start(ServiceConfig { workers: 1, ..Default::default() }).unwrap();
+    let sess =
+        service.open_session_with(SessionConfig::default(), || Ok(fixed_engine(1))).unwrap();
+    assert_eq!(sess.engine(), "qgru-hard");
+    let out = sess.finish().unwrap();
+    assert!(out.iq.is_empty());
+    assert_eq!(out.stats.samples_in, 0);
+    assert_eq!(out.stats.frames, 0);
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn stats_snapshot_tracks_the_stream() {
+    let service =
+        DpdService::start(ServiceConfig { workers: 1, frame_len: 100, ..Default::default() })
+            .unwrap();
+    let mut sess =
+        service.open_session_with(SessionConfig::default(), || Ok(fixed_engine(4))).unwrap();
+    let input = signal(950, 14);
+    let mut drained = Vec::new();
+    sess.push(&input[..600]).unwrap();
+    drained.extend(sess.drain().unwrap());
+    let st = sess.stats();
+    assert_eq!(st.samples_in, 600);
+    assert!(st.samples_out <= 600);
+    assert!(st.in_flight <= 6, "in-flight beyond what was framed");
+    sess.push(&input[600..]).unwrap();
+    drained.extend(sess.drain().unwrap());
+    let out = sess.finish().unwrap();
+    // finish returns the remainder; totals cover the whole stream
+    drained.extend(out.iq);
+    assert_eq!(drained, direct(4, &input));
+    assert_eq!(out.stats.samples_in, 950);
+    assert_eq!(out.stats.samples_out, 950);
+    assert_eq!(out.stats.frames, 10);
+    assert!(out.stats.lat_max >= out.stats.lat_mean);
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn kind_sessions_need_the_artifact_tree() {
+    let service = DpdService::start(ServiceConfig { workers: 1, ..Default::default() }).unwrap();
+    match Manifest::discover(None) {
+        Ok(_) => {
+            // tree present (local dev): kind-based open works end to end
+            let input = signal(256, 19);
+            let mut sess = service.open_session(SessionConfig::default()).unwrap();
+            sess.push(&input).unwrap();
+            assert_eq!(sess.finish().unwrap().iq.len(), input.len());
+        }
+        Err(_) => {
+            // hermetic CI: the discovery failure reaches the caller
+            // with a pointer at the missing artifacts
+            let err = service.open_session(SessionConfig::default()).unwrap_err();
+            assert!(format!("{err:#}").contains("artifact"), "unhelpful error: {err:#}");
+        }
+    }
+    service.shutdown().unwrap();
+}

@@ -1,0 +1,104 @@
+//! Service stress: many short-lived sessions churning next to one
+//! long-lived session on a deliberately small pool with depth-1
+//! queues — maximal contention on the worker command channels. A
+//! watchdog fails the test if the whole run doesn't complete within
+//! the timeout, which is how CI detects pool deadlocks rather than
+//! hanging the job.
+//!
+//! Hermetic: synthetic weights, no artifact tree needed. CI runs this
+//! as its own step (`cargo test --release --test session_stress`).
+
+use anyhow::Result;
+use dpd_ne::coordinator::{DpdService, ServiceConfig, SessionConfig};
+use dpd_ne::dpd::qgru::{ActKind, QGruDpd};
+use dpd_ne::dpd::weights::QGruWeights;
+use dpd_ne::fixed::QSpec;
+use dpd_ne::runtime::backend::StreamingEngine;
+use dpd_ne::runtime::DpdEngine;
+use dpd_ne::util::Rng;
+
+const WATCHDOG: std::time::Duration = std::time::Duration::from_secs(120);
+
+fn signal(n: usize, seed: u64) -> Vec<[f64; 2]> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect()
+}
+
+fn fixed_engine(seed: u64) -> Box<dyn DpdEngine> {
+    let qw = QGruWeights::synthetic(seed, QSpec::Q12);
+    Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw, ActKind::Hard))))
+}
+
+fn stress() -> Result<()> {
+    let service = DpdService::start(ServiceConfig {
+        workers: 2,
+        queue_depth: 1,
+        frame_len: 32,
+        ..Default::default()
+    })?;
+    std::thread::scope(|scope| -> Result<()> {
+        let svc = &service;
+        // one long-lived session streaming for the whole run (state
+        // persists across all 100 bursts)
+        let long = scope.spawn(move || -> Result<()> {
+            let mut sess =
+                svc.open_session_with(SessionConfig::default(), || Ok(fixed_engine(1)))?;
+            let burst = signal(257, 9);
+            let (mut n_in, mut n_out) = (0usize, 0usize);
+            for _ in 0..100 {
+                sess.push(&burst)?;
+                n_in += burst.len();
+                n_out += sess.drain()?.len();
+            }
+            n_out += sess.finish()?.iq.len();
+            anyhow::ensure!(n_out == n_in, "long-lived session lost samples: {n_out}/{n_in}");
+            Ok(())
+        });
+        // churn: 4 threads x 10 short-lived sessions each, all
+        // contending for the same 2 workers
+        let churners: Vec<_> = (0..4u64)
+            .map(|t| {
+                scope.spawn(move || -> Result<()> {
+                    for k in 0..10u64 {
+                        let mut sess = svc
+                            .open_session_with(SessionConfig::default(), move || {
+                                Ok(fixed_engine(100 + t))
+                            })?;
+                        let sig = signal(500 + 37 * k as usize, t * 100 + k);
+                        for chunk in sig.chunks(123) {
+                            sess.push(chunk)?;
+                        }
+                        let out = sess.finish()?;
+                        anyhow::ensure!(
+                            out.iq.len() == sig.len(),
+                            "short session lost samples: {}/{}",
+                            out.iq.len(),
+                            sig.len()
+                        );
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        long.join().expect("long-lived session thread panicked")?;
+        for c in churners {
+            c.join().expect("churn thread panicked")?;
+        }
+        Ok(())
+    })?;
+    service.shutdown()
+}
+
+#[test]
+fn session_stress_no_deadlock_within_timeout() {
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    let runner = std::thread::spawn(move || {
+        let r = stress();
+        done_tx.send(()).ok();
+        r
+    });
+    match done_rx.recv_timeout(WATCHDOG) {
+        Ok(()) => runner.join().expect("stress runner panicked").unwrap(),
+        Err(_) => panic!("session stress did not complete within {WATCHDOG:?} — pool deadlock?"),
+    }
+}
