@@ -1,0 +1,334 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/data/golden_ofdm_q12.json — the checked-in
+golden-vector regression case for tests/golden_ofdm.rs.
+
+The file carries a small deterministic CP-OFDM 64-QAM waveform plus the
+expected end-to-end metrics (ACPR / EVM through the Rapp+memory PA,
+DPD off and DPD on via the bit-exact Q2.10 GRU on synthetic weights)
+and the first 64 predistorted output *codes* (asserted bit-exactly in
+Rust, so any change to the integer datapath fails with exact diffs).
+
+Everything metric-relevant is recomputed here from the *serialized*
+waveform text (round-tripped through JSON), with faithful ports of the
+Rust reference pipeline:
+
+* ``Rng`` — xoshiro256++/splitmix64 twin of rust/src/util/rng.rs
+  (integer-exact; only ``int_in`` is needed, for the synthetic weights);
+* the Q2.10 integer GRU step — twin of rust/src/dpd/qgru.rs (and of
+  python/compile/kernels/ref.py::int_step), integer-exact;
+* quantize/dequantize — twin of rust/src/fixed/qspec.rs, f64-exact;
+* the ganlike Rapp+memory PA, Hann/Welch PSD, band power, ACPR and
+  NMSE-EVM — f64 ports whose only divergence from the Rust originals
+  is libm/FFT ulp noise, orders of magnitude below the 0.05 dB
+  assertion tolerance.
+
+Run from the repo root:  python3 python/tools/gen_golden_ofdm.py
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+
+WEIGHTS_SEED = 7
+BITS = 12
+FRAC = BITS - 2
+SCALE = float(1 << FRAC)
+ONE = 1 << FRAC
+HALF = 1 << (FRAC - 1)
+QMIN = -(1 << (BITS - 1))
+QMAX = (1 << (BITS - 1)) - 1
+WELCH_NFFT = 2048
+TOL_DB = 0.05
+
+
+# --- rust/src/util/rng.rs twin (integer-exact) ---------------------------
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    def __init__(self, seed: int):
+        sm = seed & MASK
+        s = []
+        for _ in range(4):
+            sm = (sm + 0x9E3779B97F4A7C15) & MASK
+            z = sm
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def below(self, n: int) -> int:
+        return (self.next_u64() * n) >> 64
+
+    def int_in(self, lo: int, hi: int) -> int:
+        return lo + self.below(hi - lo + 1)
+
+
+def synthetic_weights(seed: int) -> dict:
+    """QGruWeights::synthetic twin (H=10, F=4, |w| <= 0.3)."""
+    rng = Rng(seed)
+    bound = int(0.3 * SCALE)  # `as i64` truncates toward zero
+    hidden, features = 10, 4
+
+    def gen(n: int):
+        return [rng.int_in(-bound, bound) for _ in range(n)]
+
+    return {
+        "hidden": hidden,
+        "features": features,
+        "w_ih": gen(3 * hidden * features),
+        "b_ih": gen(3 * hidden),
+        "w_hh": gen(3 * hidden * hidden),
+        "b_hh": gen(3 * hidden),
+        "w_fc": gen(2 * hidden),
+        "b_fc": gen(2),
+    }
+
+
+# --- rust/src/fixed + rust/src/dpd/qgru.rs twin (integer-exact) ----------
+
+
+def rshift_round(v: int, s: int) -> int:
+    # python's >> on negative ints is an arithmetic (floor) shift, like
+    # Rust's on i64
+    return (v + (1 << (s - 1))) >> s if s else v
+
+
+def sat(v: int) -> int:
+    return QMIN if v < QMIN else (QMAX if v > QMAX else v)
+
+
+def requant(v: int, s: int) -> int:
+    return sat(rshift_round(v, s))
+
+
+def quantize(x: float) -> int:
+    q = math.floor(x * SCALE + 0.5)
+    return QMIN if q < QMIN else (QMAX if q > QMAX else int(q))
+
+
+def hard_sigmoid(c: int) -> int:
+    v = (c >> 2) + HALF
+    return 0 if v < 0 else (ONE if v > ONE else v)
+
+
+def hard_tanh(c: int) -> int:
+    return -ONE if c < -ONE else (ONE if c > ONE else c)
+
+
+def run_qgru(w: dict, codes: list) -> list:
+    """Streaming bit-exact GRU run (h0 = 0), returns output codes."""
+    hd = w["hidden"]
+    h = [0] * hd
+    out = []
+    for ic, qc in codes:
+        p = requant(ic * ic + qc * qc, FRAC - 2)
+        p2 = requant(p * p, FRAC)
+        x = [ic, qc, p, p2]
+        gi = [
+            requant(
+                sum(w["w_ih"][r * 4 + c] * x[c] for c in range(4)) + (w["b_ih"][r] << FRAC),
+                FRAC,
+            )
+            for r in range(3 * hd)
+        ]
+        gh = [
+            requant(
+                sum(w["w_hh"][r * hd + c] * h[c] for c in range(hd)) + (w["b_hh"][r] << FRAC),
+                FRAC,
+            )
+            for r in range(3 * hd)
+        ]
+        for k in range(hd):
+            r_ = hard_sigmoid(sat(gi[k] + gh[k]))
+            z = hard_sigmoid(sat(gi[hd + k] + gh[hd + k]))
+            rh = requant(r_ * gh[2 * hd + k], FRAC)
+            n = hard_tanh(sat(gi[2 * hd + k] + rh))
+            zn = rshift_round((ONE - z) * n, FRAC)
+            zh = rshift_round(z * h[k], FRAC)
+            h[k] = sat(zn + zh)
+        y = []
+        for o in range(2):
+            fc = requant(
+                sum(w["w_fc"][o * hd + k] * h[k] for k in range(hd)) + (w["b_fc"][o] << FRAC),
+                FRAC,
+            )
+            y.append(sat(fc + x[o]))
+        out.append((y[0], y[1]))
+    return out
+
+
+# --- rust/src/pa/rapp.rs ganlike twin (f64) ------------------------------
+
+
+def pa_run(x: np.ndarray) -> np.ndarray:
+    g1 = 0.995 + 0.087j
+    asat, p, apm, bpm = 0.82, 1.1, 0.9, 1.6
+    mem_lin = [0.08 - 0.045j, -0.032 + 0.018j, 0.011 - 0.006j]
+    mem_cub = [-0.055 + 0.035j]
+    a2 = x.real * x.real + x.imag * x.imag
+    g = (1.0 + (a2 / (asat * asat)) ** p) ** (-1.0 / (2.0 * p))
+    phi = apm * a2 / (1.0 + bpm * a2)
+    s = (x * g) * (np.cos(phi) + 1j * np.sin(phi)) * g1
+    y = s.copy()
+    for d, b in enumerate(mem_lin, start=1):
+        y[d:] += b * s[:-d]
+    for d, c in enumerate(mem_cub, start=1):
+        v = s[:-d]
+        y[d:] += c * (v * (v.real * v.real + v.imag * v.imag))
+    return y
+
+
+# --- rust/src/dsp/welch.rs + metrics twins (f64) -------------------------
+
+
+def welch_psd(x: np.ndarray, nfft: int, overlap: float = 0.5):
+    i = np.arange(nfft)
+    w = np.sin(np.pi * i / (nfft - 1)) ** 2  # hann, sin^2 form
+    step = int(max(nfft * (1.0 - overlap), 1.0))
+    psd = np.zeros(nfft)
+    segs = 0
+    start = 0
+    while start + nfft <= len(x):
+        seg = x[start : start + nfft] * w
+        spec = np.fft.fft(seg)
+        psd += spec.real * spec.real + spec.imag * spec.imag
+        segs += 1
+        start += step
+    assert segs > 0
+    norm = 1.0 / segs
+    half = nfft // 2
+    shifted = np.concatenate([psd[half:], psd[:half]]) * norm
+    freqs = (np.arange(nfft) - half) / nfft
+    return freqs, shifted
+
+
+def band_power(freqs, psd, lo, hi) -> float:
+    m = (freqs >= lo) & (freqs < hi)
+    return float(psd[m].sum())
+
+
+def acpr_dbc(y: np.ndarray, nfft: int) -> float:
+    bw, offset = 0.25, 0.275
+    f, p = welch_psd(y, nfft)
+    half = bw / 2.0
+    main = band_power(f, p, -half, half)
+    lower = band_power(f, p, -offset - half, -offset + half)
+    upper = band_power(f, p, offset - half, offset + half)
+    return max(10.0 * math.log10(lower / main), 10.0 * math.log10(upper / main))
+
+
+def evm_db_nmse(y: np.ndarray, x: np.ndarray, g: complex) -> float:
+    t = x * g
+    d = y - t
+    err = d.real * d.real + d.imag * d.imag
+    ref = t.real * t.real + t.imag * t.imag
+    return 10.0 * math.log10(float(err.sum()) / float(ref.sum()))
+
+
+# --- waveform ------------------------------------------------------------
+
+
+def make_waveform() -> np.ndarray:
+    """Small deterministic CP-OFDM 64-QAM burst, RMS 0.25 (the nominal
+    drive of the whole project), 16 symbols of (256+16) samples."""
+    gen = np.random.default_rng(20260729)
+    nfft, n_used, cp, nsym = 256, 64, 16, 16
+    half = n_used // 2
+    bins = list(range(1, half + 1)) + [nfft - k for k in range(1, n_used - half + 1)]
+    levels = np.array([-7, -5, -3, -1, 1, 3, 5, 7], dtype=float) / math.sqrt(42.0)
+    syms = []
+    for _ in range(nsym):
+        re = levels[gen.integers(0, 8, n_used)]
+        im = levels[gen.integers(0, 8, n_used)]
+        freq = np.zeros(nfft, dtype=complex)
+        freq[bins] = re + 1j * im
+        t = np.fft.ifft(freq) * nfft / math.sqrt(n_used)
+        syms.append(np.concatenate([t[-cp:], t]))
+    burst = np.concatenate(syms)
+    rms = math.sqrt(float((burst.real**2 + burst.imag**2).mean()))
+    return burst * (0.25 / rms)
+
+
+def main() -> None:
+    root = pathlib.Path(__file__).resolve().parents[2]
+    out_path = root / "rust" / "tests" / "data" / "golden_ofdm_q12.json"
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+
+    raw = make_waveform()
+    # serialize first, then recompute everything from the parsed-back
+    # text: the checked-in decimals ARE the waveform
+    iq_text = json.dumps([[repr(float(v.real)), repr(float(v.imag))] for v in raw])
+    # repr round-trips exactly; embed as numbers, not strings
+    iq_text = iq_text.replace('"', "")
+    iq = json.loads(iq_text)
+    x = np.array([complex(a, b) for a, b in iq])
+
+    w = synthetic_weights(WEIGHTS_SEED)
+    codes = [(quantize(a), quantize(b)) for a, b in iq]
+    out_codes = run_qgru(w, codes)
+    z = np.array([complex(a / SCALE, b / SCALE) for a, b in out_codes])
+
+    g_target = (0.995 + 0.087j) * 0.95
+    y_off = pa_run(x)
+    y_on = pa_run(z)
+    expected = {
+        "acpr_off_dbc": acpr_dbc(y_off, WELCH_NFFT),
+        "acpr_on_dbc": acpr_dbc(y_on, WELCH_NFFT),
+        "evm_off_db": evm_db_nmse(y_off, x, g_target),
+        "evm_on_db": evm_db_nmse(y_on, x, g_target),
+        "tol_db": TOL_DB,
+    }
+    doc_head = json.dumps(
+        {
+            "meta": {
+                "description": "golden CP-OFDM 64-QAM burst + expected DPD-off/on "
+                "ACPR/EVM through the Fixed (Q2.10) engine on synthetic weights; "
+                "generated by python/tools/gen_golden_ofdm.py",
+                "weights_seed": WEIGHTS_SEED,
+                "bits": BITS,
+                "welch_nfft": WELCH_NFFT,
+                "samples": len(iq),
+            },
+            "expected": expected,
+            # the synthetic weights themselves, so a failure cleanly
+            # separates "Rng/synthetic drifted" from "datapath drifted"
+            "weights_int": {
+                k: w[k]
+                for k in ["w_ih", "b_ih", "w_hh", "b_hh", "w_fc", "b_fc"]
+            },
+            "dpd_head_codes": [list(c) for c in out_codes[:64]],
+        }
+    )
+    text = doc_head[:-1] + ',"iq":' + iq_text + "}"
+    json.loads(text)  # sanity: the emitted document is valid JSON
+    out_path.write_text(text)
+    print(f"wrote {out_path} ({out_path.stat().st_size} bytes)")
+    for k, v in expected.items():
+        print(f"  {k}: {v:.6f}" if isinstance(v, float) else f"  {k}: {v}")
+    print(f"  head codes: {out_codes[:4]} ...")
+
+
+if __name__ == "__main__":
+    main()

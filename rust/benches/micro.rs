@@ -86,6 +86,53 @@ fn main() -> anyhow::Result<()> {
         service.shutdown()?;
     }
 
+    // batched-session throughput: 8 same-weight sessions multiplexed
+    // on ONE worker with the coalescing scheduler (batch 8), pushed
+    // round-robin so the worker gathers their frames into single SoA
+    // engine calls. Also hermetic (synthetic weights): CI tracks
+    // batch_msps next to session_msps to hold the batching win — the
+    // ROADMAP's throughput lever — on the record.
+    {
+        use dpd_ne::runtime::backend::StreamingEngine;
+        let n_sessions = 8;
+        let service = DpdService::start(ServiceConfig {
+            workers: 1,
+            batch: n_sessions,
+            queue_depth: n_sessions,
+            ..Default::default()
+        })?;
+        let mut sessions = Vec::new();
+        for _ in 0..n_sessions {
+            sessions.push(service.open_session_with(SessionConfig::default(), || {
+                let qw = QGruWeights::synthetic(11, QSpec::Q12);
+                Ok(Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw, ActKind::Hard)))))
+            })?);
+        }
+        let per_session = &burst[..16384];
+        let r = time_it(
+            "batched 8 sessions x 16k (DpdService, batch 8)",
+            Duration::from_millis(800),
+            || {
+                for chunk in per_session.chunks(2048) {
+                    for sess in sessions.iter_mut() {
+                        sess.push(chunk).unwrap();
+                    }
+                }
+                for sess in sessions.iter_mut() {
+                    std::hint::black_box(sess.drain().unwrap());
+                }
+            },
+        );
+        let total = (per_session.len() * n_sessions) as f64;
+        println!("{}  -> {:.2} MSps aggregate", r.summary(), r.per_second(total) / 1e6);
+        report.metric("batch_msps", r.per_second(total) / 1e6);
+        report.push(r);
+        for sess in sessions {
+            let _ = sess.finish()?;
+        }
+        service.shutdown()?;
+    }
+
     // engines (need artifacts)
     if let Ok(m) = Manifest::discover(None) {
         let spec = QSpec::new(m.qspec_bits)?;

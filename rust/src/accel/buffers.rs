@@ -143,6 +143,26 @@ impl HiddenBuffer {
     pub fn commit(&mut self) {
         std::mem::swap(&mut self.front, &mut self.back);
     }
+
+    /// Snapshot h_{t-1} (the committed front buffer) — the complete
+    /// architectural state between samples, since the back buffer is
+    /// fully rewritten before the next commit. Used for batched lane
+    /// multiplexing; does not touch the access counters.
+    pub fn snapshot(&self) -> Vec<i32> {
+        self.front.clone()
+    }
+
+    /// Restore a snapshot taken by [`HiddenBuffer::snapshot`].
+    pub fn restore(&mut self, h: &[i32]) -> Result<()> {
+        ensure!(
+            h.len() == self.front.len(),
+            "hidden snapshot length {} != {}",
+            h.len(),
+            self.front.len()
+        );
+        self.front.copy_from_slice(h);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

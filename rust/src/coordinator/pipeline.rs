@@ -93,6 +93,8 @@ impl Coordinator {
             // the service requires >= 1 (outputs are identical either way)
             queue_depth: self.cfg.queue_depth.max(1),
             frame_len: self.cfg.frame_len,
+            // one stream per worker: nothing to coalesce in the compat path
+            batch: 1,
             artifacts: self.cfg.artifacts.clone(),
         })?;
         let session_cfg = SessionConfig { engine: self.cfg.engine, ..Default::default() };

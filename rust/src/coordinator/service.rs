@@ -36,6 +36,19 @@
 //! is carried to the session as [`OutMsg::Err`] and surfaces from
 //! `push`/`drain`/`finish`; the worker itself survives and keeps
 //! serving its other sessions.
+//!
+//! With `ServiceConfig::batch > 1` the worker runs a **coalescing
+//! scheduler**: after taking one command it opportunistically drains
+//! whatever else is already queued (never waiting — coalescing adds no
+//! latency), and gathers runs of `Frame` commands from *distinct*
+//! sessions whose engines share a batch class (same kind + identical
+//! weights, attested by a content fingerprint) into a single
+//! [`DpdEngine::run_batch`] call. Per-session GRU state rides along as
+//! a [`DpdState`] lane snapshot, per-session command order is
+//! preserved (a second frame for a session already in the group, or
+//! any control command, flushes the group first), and a failed batch
+//! fails *every* session in it with the same sticky error. See
+//! DESIGN.md §Coalescing batch scheduler.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -49,6 +62,7 @@ use anyhow::{anyhow, Context, Result};
 
 use super::framer::Frame;
 use super::session::{SessionConfig, StreamSession};
+use crate::dpd::{DpdLane, DpdState};
 use crate::runtime::{DpdEngine, EngineFactory, Manifest};
 
 /// Configuration of the worker pool.
@@ -62,6 +76,12 @@ pub struct ServiceConfig {
     /// default framer length for sessions on streaming engines (frame
     /// engines override with their compiled shape)
     pub frame_len: usize,
+    /// max sessions coalesced into one batched engine call per worker
+    /// dispatch (1 = no coalescing, the pre-batching behavior). Only
+    /// sessions whose engines share a batch class — same kind and
+    /// identical weights — and that did not opt out
+    /// ([`SessionConfig::coalesce`]) are ever grouped.
+    pub batch: usize,
     /// artifact tree (None = discover); resolved once at `start`,
     /// shared by every session
     pub artifacts: Option<PathBuf>,
@@ -69,7 +89,7 @@ pub struct ServiceConfig {
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { workers: 4, queue_depth: 4, frame_len: 2048, artifacts: None }
+        ServiceConfig { workers: 4, queue_depth: 4, frame_len: 2048, batch: 1, artifacts: None }
     }
 }
 
@@ -87,6 +107,8 @@ pub(crate) enum Cmd {
     Open {
         id: u64,
         build: EngineBuild,
+        /// whether this session may be coalesced into batched calls
+        coalesce: bool,
         out: SyncSender<OutMsg>,
         reply: SyncSender<Result<OpenAck>>,
     },
@@ -121,63 +143,196 @@ pub(crate) enum OutMsg {
 struct Active {
     engine: Box<dyn DpdEngine>,
     out: SyncSender<OutMsg>,
+    /// coalescing identity of this session's engine; `None` = never
+    /// grouped (engine opted out, or the session asked for exclusivity)
+    batch_class: Option<u64>,
 }
 
-/// The worker event loop: owns every engine of the sessions pinned to
-/// it, processes commands strictly in order (per-session FIFO), exits
-/// when the service and all its sessions have dropped their senders.
-fn worker_loop(rx: Receiver<Cmd>) {
-    let mut sessions: HashMap<u64, Active> = HashMap::new();
-    while let Ok(cmd) = rx.recv() {
-        match cmd {
-            Cmd::Open { id, build, out, reply } => match build() {
-                Ok(mut engine) => {
-                    engine.reset();
-                    let ack = OpenAck { name: engine.name(), frame_len: engine.frame_len() };
-                    // only keep the session if the opener is still there
-                    if reply.send(Ok(ack)).is_ok() {
-                        sessions.insert(id, Active { engine, out });
-                    }
-                }
-                Err(e) => {
-                    reply.send(Err(e.context("building session engine"))).ok();
-                }
-            },
-            Cmd::Frame { id, mut frame, t0 } => {
-                // unknown id: the session already failed or closed —
-                // frames still in the queue are dropped deliberately
-                let Some(a) = sessions.get_mut(&id) else { continue };
-                let t = Instant::now();
-                match a.engine.process_frame(&mut frame.data) {
-                    Ok(()) => {
-                        let busy = t.elapsed();
-                        if a.out.send(OutMsg::Frame { frame, t0, busy }).is_err() {
-                            // receiver gone: session dropped mid-flight
-                            sessions.remove(&id);
-                        }
-                    }
-                    Err(e) => {
-                        // propagate, don't swallow: the error reaches
-                        // the caller; this worker keeps serving peers
-                        let a = sessions.remove(&id).expect("just found");
-                        a.out.send(OutMsg::Err(e.context("DPD engine failed"))).ok();
-                    }
-                }
-            }
-            Cmd::Reset { id } => {
-                if let Some(a) = sessions.get_mut(&id) {
-                    a.engine.reset();
-                }
-            }
-            Cmd::Finish { id } => {
-                if let Some(a) = sessions.remove(&id) {
-                    a.out.send(OutMsg::Finished).ok();
-                }
-            }
-            Cmd::Close { id } => {
+/// One frame waiting in the scheduler's current coalescing group.
+type Pending = (u64, Frame, Instant);
+
+/// Process one frame alone on its session's engine (the batch-of-one
+/// path, identical to the pre-batching worker).
+fn run_solo(sessions: &mut HashMap<u64, Active>, id: u64, mut frame: Frame, t0: Instant) {
+    // unknown id: the session already failed or closed — frames still
+    // in the queue are dropped deliberately
+    let Some(a) = sessions.get_mut(&id) else { return };
+    let t = Instant::now();
+    match a.engine.process_frame(&mut frame.data) {
+        Ok(()) => {
+            let busy = t.elapsed();
+            if a.out.send(OutMsg::Frame { frame, t0, busy }).is_err() {
+                // receiver gone: session dropped mid-flight
                 sessions.remove(&id);
             }
         }
+        Err(e) => {
+            // propagate, don't swallow: the error reaches the caller;
+            // this worker keeps serving peers
+            let a = sessions.remove(&id).expect("just found");
+            a.out.send(OutMsg::Err(e.context("DPD engine failed"))).ok();
+        }
+    }
+}
+
+/// Flush the current coalescing group: one `run_batch` call over every
+/// member's frame, each lane carrying that session's recurrent state.
+/// A failed batch poisons every member session (same sticky error);
+/// the worker survives either way.
+fn run_group(sessions: &mut HashMap<u64, Active>, group: &mut Vec<Pending>) {
+    let mut members: Vec<Pending> = std::mem::take(group);
+    members.retain(|(id, ..)| sessions.contains_key(id));
+    if members.len() < 2 {
+        if let Some((id, frame, t0)) = members.pop() {
+            run_solo(sessions, id, frame, t0);
+        }
+        return;
+    }
+    // snapshot each member's recurrent state into its lane
+    let mut states: Vec<DpdState> =
+        members.iter().map(|(id, ..)| sessions[id].engine.save_state()).collect();
+    let runner_id = members[0].0;
+    let t = Instant::now();
+    let result = {
+        let runner = sessions.get_mut(&runner_id).expect("retained above");
+        let mut lanes: Vec<DpdLane> = members
+            .iter_mut()
+            .zip(states.iter_mut())
+            .map(|((_, frame, _), st)| DpdLane { iq: frame.data.as_mut_slice(), state: st })
+            .collect();
+        runner.engine.run_batch(&mut lanes)
+    };
+    match result {
+        Ok(()) => {
+            // amortized busy attribution: the kernel ran once for all
+            // members, each is billed an equal share
+            let busy = t.elapsed() / members.len() as u32;
+            for ((id, frame, t0), st) in members.into_iter().zip(&states) {
+                let Some(a) = sessions.get_mut(&id) else { continue };
+                if let Err(e) = a.engine.load_state(st) {
+                    let a = sessions.remove(&id).expect("just found");
+                    a.out.send(OutMsg::Err(e.context("restoring batched lane state"))).ok();
+                    continue;
+                }
+                if a.out.send(OutMsg::Frame { frame, t0, busy }).is_err() {
+                    sessions.remove(&id);
+                }
+            }
+        }
+        Err(e) => {
+            // whole-batch failure: every coalesced session observes the
+            // same sticky error (anyhow::Error is not Clone, so the
+            // formatted chain is replicated per member)
+            let msg = format!("{:#}", e.context("DPD engine failed (batched)"));
+            for (id, ..) in members {
+                if let Some(a) = sessions.remove(&id) {
+                    a.out.send(OutMsg::Err(anyhow!("{msg}"))).ok();
+                }
+            }
+        }
+    }
+}
+
+/// The worker event loop: owns every engine of the sessions pinned to
+/// it, processes commands in per-session FIFO order (distinct sessions'
+/// frames may be reordered *within* one coalesced group, which is
+/// unobservable), exits when the service and all its sessions have
+/// dropped their senders. `max_batch > 1` enables the coalescing
+/// scheduler (module docs).
+fn worker_loop(rx: Receiver<Cmd>, max_batch: usize) {
+    let mut sessions: HashMap<u64, Active> = HashMap::new();
+    let mut gathered: Vec<Cmd> = Vec::new();
+    // bound the opportunistic drain so one dispatch cannot starve the
+    // pool of fairness (frames beyond the window stay queued)
+    let gather_window = 2 * max_batch;
+    while let Ok(first) = rx.recv() {
+        gathered.push(first);
+        if max_batch > 1 {
+            // opportunistic, non-blocking: coalescing never waits for
+            // traffic, so an idle stream sees zero added latency
+            while gathered.len() < gather_window {
+                match rx.try_recv() {
+                    Ok(c) => gathered.push(c),
+                    Err(_) => break,
+                }
+            }
+        }
+        let mut group: Vec<Pending> = Vec::new();
+        let mut group_class = 0u64;
+        for cmd in gathered.drain(..) {
+            match cmd {
+                Cmd::Open { id, build, coalesce, out, reply } => {
+                    run_group(&mut sessions, &mut group);
+                    match build() {
+                        Ok(mut engine) => {
+                            engine.reset();
+                            let ack =
+                                OpenAck { name: engine.name(), frame_len: engine.frame_len() };
+                            let batch_class = if coalesce && max_batch > 1 {
+                                engine.batch_class()
+                            } else {
+                                None
+                            };
+                            // only keep the session if the opener is
+                            // still there
+                            if reply.send(Ok(ack)).is_ok() {
+                                sessions.insert(id, Active { engine, out, batch_class });
+                            }
+                        }
+                        Err(e) => {
+                            reply.send(Err(e.context("building session engine"))).ok();
+                        }
+                    }
+                }
+                Cmd::Frame { id, frame, t0 } => {
+                    let class = match sessions.get(&id) {
+                        Some(a) => a.batch_class,
+                        None => continue, // dropped deliberately (dead session)
+                    };
+                    match class {
+                        Some(class) => {
+                            // a second frame for a session already in
+                            // the group is a *sequential* dependency —
+                            // flush first; ditto a class change
+                            let conflicts = !group.is_empty()
+                                && (class != group_class
+                                    || group.iter().any(|(gid, ..)| *gid == id));
+                            if conflicts {
+                                run_group(&mut sessions, &mut group);
+                            }
+                            group_class = class;
+                            group.push((id, frame, t0));
+                            if group.len() >= max_batch {
+                                run_group(&mut sessions, &mut group);
+                            }
+                        }
+                        None => {
+                            // unbatchable session: keep global arrival
+                            // order by flushing the group first
+                            run_group(&mut sessions, &mut group);
+                            run_solo(&mut sessions, id, frame, t0);
+                        }
+                    }
+                }
+                Cmd::Reset { id } => {
+                    run_group(&mut sessions, &mut group);
+                    if let Some(a) = sessions.get_mut(&id) {
+                        a.engine.reset();
+                    }
+                }
+                Cmd::Finish { id } => {
+                    run_group(&mut sessions, &mut group);
+                    if let Some(a) = sessions.remove(&id) {
+                        a.out.send(OutMsg::Finished).ok();
+                    }
+                }
+                Cmd::Close { id } => {
+                    run_group(&mut sessions, &mut group);
+                    sessions.remove(&id);
+                }
+            }
+        }
+        run_group(&mut sessions, &mut group);
     }
 }
 
@@ -212,13 +367,22 @@ impl DpdService {
         anyhow::ensure!(cfg.workers > 0, "ServiceConfig.workers must be > 0");
         anyhow::ensure!(cfg.queue_depth > 0, "ServiceConfig.queue_depth must be > 0");
         anyhow::ensure!(cfg.frame_len > 0, "ServiceConfig.frame_len must be > 0");
+        anyhow::ensure!(cfg.batch > 0, "ServiceConfig.batch must be > 0");
         let manifest = Manifest::discover(cfg.artifacts.as_deref()).ok().map(Arc::new);
+        // coalescing headroom: a full group can only gather if the
+        // worker command channel can hold `batch` queued frames, so the
+        // channel is sized to max(queue_depth, batch) here once instead
+        // of making every caller remember the rule (per-session output
+        // queues keep their own depth — the in-flight-cap invariant is
+        // per session and unaffected by a larger command channel)
+        let channel_depth = cfg.queue_depth.max(cfg.batch);
         let workers = (0..cfg.workers)
             .map(|i| {
-                let (cmd, rx) = sync_channel(cfg.queue_depth);
+                let (cmd, rx) = sync_channel(channel_depth);
+                let batch = cfg.batch;
                 let handle = std::thread::Builder::new()
                     .name(format!("dpd-worker-{i}"))
-                    .spawn(move || worker_loop(rx))
+                    .spawn(move || worker_loop(rx, batch))
                     .map_err(|e| anyhow!("spawning worker {i}: {e}"))?;
                 Ok(Worker { cmd, load: Arc::new(AtomicUsize::new(0)), handle })
             })
@@ -291,7 +455,13 @@ impl DpdService {
             let (reply_tx, reply_rx) = sync_channel(1);
             worker
                 .cmd
-                .send(Cmd::Open { id, build: Box::new(build), out: out_tx, reply: reply_tx })
+                .send(Cmd::Open {
+                    id,
+                    build: Box::new(build),
+                    coalesce: cfg.coalesce,
+                    out: out_tx,
+                    reply: reply_tx,
+                })
                 .map_err(|_| anyhow!("worker {wi} terminated"))?;
             let ack = reply_rx
                 .recv()
@@ -350,6 +520,13 @@ mod tests {
         assert!(DpdService::start(ServiceConfig { workers: 0, ..Default::default() }).is_err());
         assert!(DpdService::start(ServiceConfig { queue_depth: 0, ..Default::default() }).is_err());
         assert!(DpdService::start(ServiceConfig { frame_len: 0, ..Default::default() }).is_err());
+        assert!(DpdService::start(ServiceConfig { batch: 0, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn config_default_is_unbatched() {
+        // batch = 1 must reproduce the pre-batching scheduler exactly
+        assert_eq!(ServiceConfig::default().batch, 1);
     }
 
     #[test]

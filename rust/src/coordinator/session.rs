@@ -50,11 +50,22 @@ pub struct SessionConfig {
     pub frame_len: Option<usize>,
     /// output-queue depth override
     pub queue_depth: Option<usize>,
+    /// whether this session's frames may be coalesced with same-class
+    /// peers into batched engine calls (when the service runs with
+    /// `ServiceConfig::batch > 1`). Outputs are bit-identical either
+    /// way — opting out (`false`) only buys a latency-critical session
+    /// exclusive engine dispatches.
+    pub coalesce: bool,
 }
 
 impl Default for SessionConfig {
     fn default() -> Self {
-        SessionConfig { engine: EngineKind::Fixed, frame_len: None, queue_depth: None }
+        SessionConfig {
+            engine: EngineKind::Fixed,
+            frame_len: None,
+            queue_depth: None,
+            coalesce: true,
+        }
     }
 }
 
@@ -386,6 +397,7 @@ mod tests {
         let cfg = SessionConfig::default();
         assert_eq!(cfg.engine, EngineKind::Fixed);
         assert!(cfg.frame_len.is_none() && cfg.queue_depth.is_none());
+        assert!(cfg.coalesce, "sessions default into the batched path");
     }
 
     #[test]

@@ -3,8 +3,10 @@
 //! Reference implementation for accuracy comparisons; the quantized
 //! twin is `qgru`.
 
+use anyhow::{bail, Result};
+
 use super::weights::GruWeights;
-use super::Dpd;
+use super::{process_lanes_sequential, Dpd, DpdLane, DpdState};
 
 /// Hardsigmoid, Eq. (7).
 #[inline]
@@ -61,6 +63,120 @@ impl GruDpd {
         let p = 4.0 * (iq[0] * iq[0] + iq[1] * iq[1]);
         [iq[0], iq[1], p, p * p]
     }
+
+    /// Structure-of-arrays batched execution over independent lanes
+    /// sharing these weights. Each lane's f64 operation chain is
+    /// exactly the scalar `process` one (same ops, same order — rustc
+    /// does not re-associate or fuse floats), so the batched path is
+    /// bit-identical to running every lane alone; the batch dimension
+    /// only turns the axpy inner loops into wide contiguous sweeps.
+    fn process_lanes_soa(&mut self, lanes: &mut [DpdLane<'_>]) -> Result<()> {
+        let hd = self.w.hidden;
+        for (b, lane) in lanes.iter().enumerate() {
+            match &*lane.state {
+                DpdState::F64(h) if h.len() == hd => {}
+                other => bail!(
+                    "gru-f64 batched lane {b}: incompatible state snapshot ({})",
+                    other.kind()
+                ),
+            }
+        }
+        let mut idx: Vec<usize> = (0..lanes.len()).collect();
+        idx.sort_by_key(|&i| lanes[i].iq.len());
+        let (mut start, mut t0) = (0usize, 0usize);
+        while start < idx.len() {
+            let t1 = lanes[idx[start]].iq.len();
+            if t1 > t0 {
+                self.span_soa(lanes, &idx[start..], t0, t1);
+                t0 = t1;
+            }
+            while start < idx.len() && lanes[idx[start]].iq.len() == t0 {
+                start += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// One lockstep span over the active lanes (all hold `t1` samples).
+    fn span_soa(&self, lanes: &mut [DpdLane<'_>], active: &[usize], t0: usize, t1: usize) {
+        let hd = self.w.hidden;
+        let rows = 3 * hd;
+        let ba = active.len();
+
+        let mut hs = vec![0.0f64; hd * ba];
+        for (j, &li) in active.iter().enumerate() {
+            if let DpdState::F64(h) = &*lanes[li].state {
+                for (k, &v) in h.iter().enumerate() {
+                    hs[k * ba + j] = v;
+                }
+            }
+        }
+        let mut xb = vec![0.0f64; 4 * ba];
+        let mut inputs = vec![[0.0f64; 2]; ba];
+        let mut gi = vec![0.0f64; rows * ba];
+        let mut gh = vec![0.0f64; rows * ba];
+
+        for t in t0..t1 {
+            for (j, &li) in active.iter().enumerate() {
+                let s = lanes[li].iq[t];
+                inputs[j] = s;
+                let x = Self::features(s);
+                for (c, &v) in x.iter().enumerate() {
+                    xb[c * ba + j] = v;
+                }
+            }
+            // gi = W_ih x + b_ih ; gh = W_hh h + b_hh (batch-fastest)
+            for (r, &b) in self.w.b_ih.iter().enumerate() {
+                gi[r * ba..(r + 1) * ba].fill(b);
+            }
+            for c in 0..4 {
+                let col = &self.wt_ih[c * rows..(c + 1) * rows];
+                let xrow = &xb[c * ba..(c + 1) * ba];
+                for (r, &w) in col.iter().enumerate() {
+                    for (a, &x) in gi[r * ba..(r + 1) * ba].iter_mut().zip(xrow) {
+                        *a += w * x;
+                    }
+                }
+            }
+            for (r, &b) in self.w.b_hh.iter().enumerate() {
+                gh[r * ba..(r + 1) * ba].fill(b);
+            }
+            for c in 0..hd {
+                let col = &self.wt_hh[c * rows..(c + 1) * rows];
+                let hrow = &hs[c * ba..(c + 1) * ba];
+                for (r, &w) in col.iter().enumerate() {
+                    for (a, &x) in gh[r * ba..(r + 1) * ba].iter_mut().zip(hrow) {
+                        *a += w * x;
+                    }
+                }
+            }
+            // gates (Eq. 2-5), the scalar expressions per lane
+            for k in 0..hd {
+                for j in 0..ba {
+                    let r = hardsigmoid(gi[k * ba + j] + gh[k * ba + j]);
+                    let z = hardsigmoid(gi[(hd + k) * ba + j] + gh[(hd + k) * ba + j]);
+                    let n = hardtanh(gi[(2 * hd + k) * ba + j] + r * gh[(2 * hd + k) * ba + j]);
+                    hs[k * ba + j] = (1.0 - z) * n + z * hs[k * ba + j];
+                }
+            }
+            // FC + residual (Eq. 6) per lane, scalar accumulation order
+            for (j, &li) in active.iter().enumerate() {
+                let mut y = [self.w.b_fc[0] + inputs[j][0], self.w.b_fc[1] + inputs[j][1]];
+                for k in 0..hd {
+                    y[0] += self.w.w_fc[k] * hs[k * ba + j];
+                    y[1] += self.w.w_fc[hd + k] * hs[k * ba + j];
+                }
+                lanes[li].iq[t] = y;
+            }
+        }
+        for (j, &li) in active.iter().enumerate() {
+            if let DpdState::F64(h) = &mut *lanes[li].state {
+                for (k, dst) in h.iter_mut().enumerate() {
+                    *dst = hs[k * ba + j];
+                }
+            }
+        }
+    }
 }
 
 impl Dpd for GruDpd {
@@ -109,6 +225,36 @@ impl Dpd for GruDpd {
 
     fn name(&self) -> &'static str {
         "gru-f64"
+    }
+
+    fn save_state(&self) -> DpdState {
+        DpdState::F64(self.h.clone())
+    }
+
+    fn load_state(&mut self, state: &DpdState) -> Result<()> {
+        match state {
+            DpdState::F64(h) if h.len() == self.w.hidden => {
+                self.h.copy_from_slice(h);
+                Ok(())
+            }
+            other => bail!(
+                "{}: incompatible state snapshot ({}) for hidden={}",
+                self.name(),
+                other.kind(),
+                self.w.hidden
+            ),
+        }
+    }
+
+    fn batch_fingerprint(&self) -> Option<u64> {
+        Some(self.w.fingerprint())
+    }
+
+    fn process_lanes(&mut self, lanes: &mut [DpdLane<'_>]) -> Result<()> {
+        if lanes.len() < 2 {
+            return process_lanes_sequential(self, lanes);
+        }
+        self.process_lanes_soa(lanes)
     }
 }
 
@@ -182,6 +328,67 @@ mod tests {
         let x = [[0.1, -0.2], [0.3, 0.05]];
         let y = dpd.run(&x);
         assert_eq!(y, x.to_vec());
+    }
+
+    #[test]
+    fn soa_lanes_bit_identical_to_sequential_fallback() {
+        // f64 is where op-order sloppiness would show up first: the
+        // SoA kernel must reproduce the scalar chain bit for bit.
+        use crate::dpd::{process_lanes_sequential, DpdLane, DpdState};
+        use crate::util::proptest::check;
+        check("gru-f64 soa vs sequential lanes", 15, |rng| {
+            let mut soa = GruDpd::new(rand_weights(rng.next_u64()));
+            let mut seq = GruDpd::new(soa.weights().clone());
+            let nb = rng.int_in(2, 6) as usize;
+            let mut data: Vec<Vec<[f64; 2]>> = (0..nb)
+                .map(|_| {
+                    let len = rng.int_in(0, 48) as usize;
+                    (0..len).map(|_| [rng.gauss() * 0.3, rng.gauss() * 0.3]).collect()
+                })
+                .collect();
+            let states: Vec<DpdState> = (0..nb)
+                .map(|_| DpdState::F64((0..10).map(|_| rng.range(-1.0, 1.0)).collect()))
+                .collect();
+            let mut data2 = data.clone();
+            let mut st_a = states.clone();
+            let mut st_b = states;
+            let mut lanes: Vec<DpdLane> = data
+                .iter_mut()
+                .zip(st_a.iter_mut())
+                .map(|(d, s)| DpdLane { iq: d.as_mut_slice(), state: s })
+                .collect();
+            soa.process_lanes(&mut lanes).map_err(|e| e.to_string())?;
+            drop(lanes);
+            let mut lanes: Vec<DpdLane> = data2
+                .iter_mut()
+                .zip(st_b.iter_mut())
+                .map(|(d, s)| DpdLane { iq: d.as_mut_slice(), state: s })
+                .collect();
+            process_lanes_sequential(&mut seq, &mut lanes).map_err(|e| e.to_string())?;
+            drop(lanes);
+            if data != data2 {
+                return Err("lane samples diverged".into());
+            }
+            if st_a != st_b {
+                return Err("lane states diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn state_snapshot_round_trips() {
+        let mut dpd = GruDpd::new(rand_weights(9));
+        let mut rng = Rng::new(10);
+        for _ in 0..40 {
+            dpd.process([rng.gauss() * 0.25, rng.gauss() * 0.25]);
+        }
+        let snap = dpd.save_state();
+        let a = dpd.process([0.1, -0.3]);
+        dpd.load_state(&snap).unwrap();
+        let b = dpd.process([0.1, -0.3]);
+        assert_eq!(a, b);
+        assert!(dpd.load_state(&crate::dpd::DpdState::I32(vec![0; 10])).is_err());
     }
 
     #[test]

@@ -19,10 +19,45 @@ pub mod gru;
 pub mod qgru;
 pub mod weights;
 
+use anyhow::{bail, Result};
+
 pub use gmp::GmpDpd;
 pub use gru::GruDpd;
 pub use qgru::QGruDpd;
 pub use weights::GruWeights;
+
+/// Recurrent-state snapshot of a streaming predistorter — one stream's
+/// lane in a batched call. Opaque to callers: only `save_state` /
+/// `load_state` on the engine kind that produced it interpret the
+/// contents.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DpdState {
+    /// the engine carries no per-stream recurrent state
+    Stateless,
+    /// integer hidden-state codes (`QGruDpd`, the cycle-accurate sim)
+    I32(Vec<i32>),
+    /// float hidden state (`GruDpd`)
+    F64(Vec<f64>),
+}
+
+impl DpdState {
+    /// Short descriptor for error messages (never dumps the payload).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            DpdState::Stateless => "stateless",
+            DpdState::I32(_) => "i32",
+            DpdState::F64(_) => "f64",
+        }
+    }
+}
+
+/// One independent stream's slot in a batched call: the samples
+/// (predistorted in place) plus that stream's recurrent state (updated
+/// in place). Lanes may have different lengths (ragged tails).
+pub struct DpdLane<'a> {
+    pub iq: &'a mut [[f64; 2]],
+    pub state: &'a mut DpdState,
+}
 
 /// A causal streaming predistorter.
 pub trait Dpd {
@@ -40,6 +75,72 @@ pub trait Dpd {
 
     /// Engine label for reports.
     fn name(&self) -> &'static str;
+
+    /// Snapshot the current stream's recurrent state. The default is
+    /// [`DpdState::Stateless`]; engines with real state must override
+    /// this *and* [`Dpd::load_state`] so the pair round-trips exactly —
+    /// that round-trip is what makes multi-lane batching bit-exact.
+    fn save_state(&self) -> DpdState {
+        DpdState::Stateless
+    }
+
+    /// Restore a snapshot produced by [`Dpd::save_state`] on the same
+    /// engine kind and shape.
+    fn load_state(&mut self, state: &DpdState) -> Result<()> {
+        match state {
+            DpdState::Stateless => Ok(()),
+            other => bail!("{}: cannot load a {} state snapshot", self.name(), other.kind()),
+        }
+    }
+
+    /// Fingerprint identifying predistorters that may share one batched
+    /// call: equal fingerprints promise identical datapaths (same kind,
+    /// dims, format, weights and activation). `None` (the default)
+    /// means "never coalesce me with anyone".
+    fn batch_fingerprint(&self) -> Option<u64> {
+        None
+    }
+
+    /// Process several independent streams in one call, each lane
+    /// carrying its own recurrent state. Must be bit-identical, lane
+    /// for lane, to processing each stream alone through
+    /// [`Dpd::process`] — the contract `tests/batch_parity.rs`
+    /// enforces. The default multiplexes the lanes sequentially over
+    /// `self` via `save_state`/`load_state`; structure-of-arrays
+    /// overrides (`QGruDpd`, `GruDpd`) vectorize across lanes.
+    ///
+    /// On error the whole batch is *reported* failed together and the
+    /// lanes must be discarded: already-processed lanes may have had
+    /// their samples and state snapshots advanced, so retrying or
+    /// salvaging individual lanes is not sound. The coalescing
+    /// scheduler relies on this to give every session of a failed
+    /// batch the same sticky error (and drops the frames).
+    fn process_lanes(&mut self, lanes: &mut [DpdLane<'_>]) -> Result<()> {
+        process_lanes_sequential(self, lanes)
+    }
+}
+
+/// The sequential fallback behind [`Dpd::process_lanes`]: multiplex
+/// the lanes one at a time over a single engine, swapping each lane's
+/// state in and out. `self`'s own stream state is preserved.
+pub fn process_lanes_sequential<D: Dpd + ?Sized>(
+    dpd: &mut D,
+    lanes: &mut [DpdLane<'_>],
+) -> Result<()> {
+    let own = dpd.save_state();
+    let mut result = Ok(());
+    for lane in lanes.iter_mut() {
+        if let Err(e) = dpd.load_state(lane.state) {
+            result = Err(e);
+            break;
+        }
+        for s in lane.iq.iter_mut() {
+            *s = dpd.process(*s);
+        }
+        *lane.state = dpd.save_state();
+    }
+    dpd.load_state(&own).ok();
+    result
 }
 
 /// The identity DPD (for "DPD off" rows in the tables).

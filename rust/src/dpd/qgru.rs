@@ -10,10 +10,13 @@
 //! (`tests/golden_parity.rs`) prove equality with the jax oracle and
 //! hence with the Pallas kernel the PJRT runtime executes.
 
+use anyhow::{bail, Result};
+
 use super::weights::QGruWeights;
-use super::Dpd;
-use crate::fixed::ops::{requantize, rshift_round, saturate_i64};
+use super::{process_lanes_sequential, Dpd, DpdLane, DpdState};
+use crate::fixed::ops::{requantize, requantize_block_i32, rshift_round, saturate_i64};
 use crate::fixed::QSpec;
+use crate::util::fnv1a_words;
 
 /// Gate activation implementation choice (§III-B of the paper).
 #[derive(Clone, Debug)]
@@ -177,8 +180,6 @@ impl QGruDpd {
             // narrow fast path: i32 accumulation, column-major axpy so
             // the 3H-wide inner loops auto-vectorize
             let rows = 3 * hd;
-            let half = 1i32 << (f - 1);
-            let (qmin, qmax) = (spec.qmin(), spec.qmax());
 
             // input matvec
             for (a, b) in self.acc.iter_mut().zip(&self.w.b_ih) {
@@ -190,9 +191,7 @@ impl QGruDpd {
                     *a += wv * xv;
                 }
             }
-            for (g, &a) in self.gi.iter_mut().zip(self.acc.iter()) {
-                *g = ((a + half) >> f).clamp(qmin, qmax);
-            }
+            requantize_block_i32(&self.acc, f, spec, &mut self.gi);
             // hidden matvec
             for (a, b) in self.acc.iter_mut().zip(&self.w.b_hh) {
                 *a = b << f;
@@ -204,9 +203,7 @@ impl QGruDpd {
                     *a += wv * xv;
                 }
             }
-            for (g, &a) in self.gh.iter_mut().zip(self.acc.iter()) {
-                *g = ((a + half) >> f).clamp(qmin, qmax);
-            }
+            requantize_block_i32(&self.acc, f, spec, &mut self.gh);
         } else {
             // wide path: i64 accumulation
             for r in 0..3 * hd {
@@ -277,6 +274,152 @@ impl QGruDpd {
         self.reset();
         iq.iter().map(|&s| self.step_codes(s)).collect()
     }
+
+    /// Structure-of-arrays batched execution over independent lanes
+    /// sharing these weights (narrow formats: bits <= 13, i32
+    /// accumulation). Every array is batch-fastest (`[rows][B]`), so
+    /// the inner accumulate loops vectorize across lanes while each
+    /// lane's per-sample operation chain stays exactly the scalar
+    /// `step_codes` one — bit-exactness by construction, enforced by
+    /// tests/batch_parity.rs. Ragged lanes run in lockstep spans
+    /// between retirements of the shortest survivors.
+    fn process_lanes_soa(&mut self, lanes: &mut [DpdLane<'_>]) -> Result<()> {
+        let hd = self.w.hidden;
+        // validate every lane up front: whole-batch failure semantics —
+        // nothing is processed when any lane snapshot is malformed
+        for (b, lane) in lanes.iter().enumerate() {
+            match &*lane.state {
+                DpdState::I32(h) if h.len() == hd => {}
+                other => bail!(
+                    "qgru batched lane {b}: incompatible state snapshot ({})",
+                    other.kind()
+                ),
+            }
+        }
+        let mut idx: Vec<usize> = (0..lanes.len()).collect();
+        idx.sort_by_key(|&i| lanes[i].iq.len());
+        let (mut start, mut t0) = (0usize, 0usize);
+        while start < idx.len() {
+            let t1 = lanes[idx[start]].iq.len();
+            if t1 > t0 {
+                self.span_soa(lanes, &idx[start..], t0, t1);
+                t0 = t1;
+            }
+            while start < idx.len() && lanes[idx[start]].iq.len() == t0 {
+                start += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// One lockstep span of the SoA kernel: samples `t0..t1` of every
+    /// active lane (all have at least `t1` samples).
+    fn span_soa(&self, lanes: &mut [DpdLane<'_>], active: &[usize], t0: usize, t1: usize) {
+        let spec = self.w.spec;
+        let f = spec.frac();
+        let hd = self.w.hidden;
+        let rows = 3 * hd;
+        let ba = active.len();
+        let (qmin, qmax) = (spec.qmin(), spec.qmax());
+        let half = 1i32 << (f - 1);
+        let one32 = 1i32 << f;
+
+        // gather per-lane hidden state into [H][B]
+        let mut hs = vec![0i32; hd * ba];
+        for (j, &li) in active.iter().enumerate() {
+            if let DpdState::I32(h) = &*lanes[li].state {
+                for (k, &v) in h.iter().enumerate() {
+                    hs[k * ba + j] = v;
+                }
+            }
+        }
+        let mut xb = vec![0i32; 4 * ba];
+        let mut in_codes = vec![[0i32; 2]; ba];
+        let mut acc = vec![0i32; rows * ba];
+        let mut gi = vec![0i32; rows * ba];
+        let mut gh = vec![0i32; rows * ba];
+
+        for t in t0..t1 {
+            // quantize + preprocess each lane — the same scalar ops
+            // `process` applies per sample
+            for (j, &li) in active.iter().enumerate() {
+                let s = lanes[li].iq[t];
+                let iq = [spec.quantize(s[0]), spec.quantize(s[1])];
+                in_codes[j] = iq;
+                let x = self.features(iq);
+                for (c, &v) in x.iter().enumerate() {
+                    xb[c * ba + j] = v;
+                }
+            }
+            // input matvec, batch-fastest inner loops
+            for (r, &b) in self.w.b_ih.iter().enumerate() {
+                acc[r * ba..(r + 1) * ba].fill(b << f);
+            }
+            for c in 0..4 {
+                let col = &self.wt_ih[c * rows..(c + 1) * rows];
+                let xrow = &xb[c * ba..(c + 1) * ba];
+                for (r, &w) in col.iter().enumerate() {
+                    for (a, &x) in acc[r * ba..(r + 1) * ba].iter_mut().zip(xrow) {
+                        *a += w * x;
+                    }
+                }
+            }
+            requantize_block_i32(&acc, f, spec, &mut gi);
+            // hidden matvec
+            for (r, &b) in self.w.b_hh.iter().enumerate() {
+                acc[r * ba..(r + 1) * ba].fill(b << f);
+            }
+            for c in 0..hd {
+                let col = &self.wt_hh[c * rows..(c + 1) * rows];
+                let hrow = &hs[c * ba..(c + 1) * ba];
+                for (r, &w) in col.iter().enumerate() {
+                    for (a, &x) in acc[r * ba..(r + 1) * ba].iter_mut().zip(hrow) {
+                        *a += w * x;
+                    }
+                }
+            }
+            requantize_block_i32(&acc, f, spec, &mut gh);
+            // gates: the scalar chain per lane, interleaved across the
+            // batch (identical integer ops and order -> identical bits)
+            for k in 0..hd {
+                for j in 0..ba {
+                    let r = self.sig((gi[k * ba + j] + gh[k * ba + j]).clamp(qmin, qmax));
+                    let z = self
+                        .sig((gi[(hd + k) * ba + j] + gh[(hd + k) * ba + j]).clamp(qmin, qmax));
+                    let rh =
+                        ((r * gh[(2 * hd + k) * ba + j] + half) >> f).clamp(qmin, qmax);
+                    let n =
+                        self.tanh_((gi[(2 * hd + k) * ba + j] + rh).clamp(qmin, qmax));
+                    let zn = ((one32 - z) * n + half) >> f;
+                    let zh = (z * hs[k * ba + j] + half) >> f;
+                    hs[k * ba + j] = (zn + zh).clamp(qmin, qmax);
+                }
+            }
+            // FC + residual per lane (i64 accumulation, like scalar)
+            for (j, &li) in active.iter().enumerate() {
+                let mut out = [0.0f64; 2];
+                for (o, dst) in out.iter_mut().enumerate() {
+                    let row = &self.w.w_fc[o * hd..(o + 1) * hd];
+                    let mut a = (self.w.b_fc[o] as i64) << f;
+                    for (k, &w) in row.iter().enumerate() {
+                        a += w as i64 * hs[k * ba + j] as i64;
+                    }
+                    let fc = requantize(a, f, spec);
+                    let y = saturate_i64(fc as i64 + in_codes[j][o] as i64, spec);
+                    *dst = spec.dequantize(y);
+                }
+                lanes[li].iq[t] = out;
+            }
+        }
+        // scatter the updated hidden states back into the snapshots
+        for (j, &li) in active.iter().enumerate() {
+            if let DpdState::I32(h) = &mut *lanes[li].state {
+                for (k, dst) in h.iter_mut().enumerate() {
+                    *dst = hs[k * ba + j];
+                }
+            }
+        }
+    }
 }
 
 impl Dpd for QGruDpd {
@@ -296,6 +439,47 @@ impl Dpd for QGruDpd {
             ActKind::Hard => "qgru-hard",
             ActKind::Lut(_) => "qgru-lut",
         }
+    }
+
+    fn save_state(&self) -> DpdState {
+        DpdState::I32(self.h.clone())
+    }
+
+    fn load_state(&mut self, state: &DpdState) -> Result<()> {
+        match state {
+            DpdState::I32(h) if h.len() == self.w.hidden => {
+                self.h.copy_from_slice(h);
+                Ok(())
+            }
+            other => bail!(
+                "{}: incompatible state snapshot ({}) for hidden={}",
+                self.name(),
+                other.kind(),
+                self.w.hidden
+            ),
+        }
+    }
+
+    fn batch_fingerprint(&self) -> Option<u64> {
+        let wfp = self.w.fingerprint();
+        Some(match &self.act {
+            ActKind::Hard => fnv1a_words("act-hard", [wfp]),
+            ActKind::Lut(t) => fnv1a_words(
+                "act-lut",
+                [wfp, t.lo.to_bits(), t.hi.to_bits(), t.addr_bits as u64]
+                    .into_iter()
+                    .chain(t.sigmoid.iter().chain(&t.tanh).map(|&v| v as u32 as u64)),
+            ),
+        })
+    }
+
+    fn process_lanes(&mut self, lanes: &mut [DpdLane<'_>]) -> Result<()> {
+        // the SoA kernel covers the narrow (i32) formats; wide formats
+        // and single lanes take the bit-identical sequential path
+        if lanes.len() < 2 || self.w.spec.bits > 13 {
+            return process_lanes_sequential(self, lanes);
+        }
+        self.process_lanes_soa(lanes)
     }
 }
 
@@ -409,6 +593,135 @@ mod tests {
         // output is on the code grid
         let back = spec.quantize(y[0][0]);
         assert!((spec.dequantize(back) - y[0][0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn state_snapshot_round_trips() {
+        let spec = QSpec::Q12;
+        let mut dpd = QGruDpd::new(rand_qweights(11, spec), ActKind::Hard);
+        let mut rng = Rng::new(12);
+        for _ in 0..50 {
+            dpd.step_codes([rng.int_in(-900, 900) as i32, rng.int_in(-900, 900) as i32]);
+        }
+        let snap = dpd.save_state();
+        let probe = [[0.21, -0.17], [-0.4, 0.33], [0.05, 0.0]];
+        let mut a = Vec::new();
+        for &s in &probe {
+            a.push(dpd.process(s));
+        }
+        // restoring the snapshot replays the identical future
+        dpd.load_state(&snap).unwrap();
+        let mut b = Vec::new();
+        for &s in &probe {
+            b.push(dpd.process(s));
+        }
+        assert_eq!(a, b);
+        // wrong-shaped or wrong-kind snapshots are rejected
+        assert!(dpd.load_state(&crate::dpd::DpdState::I32(vec![0; 3])).is_err());
+        assert!(dpd.load_state(&crate::dpd::DpdState::F64(vec![0.0; 10])).is_err());
+        assert!(dpd.load_state(&crate::dpd::DpdState::Stateless).is_err());
+    }
+
+    #[test]
+    fn soa_lanes_bit_identical_to_sequential_fallback() {
+        // The kernel-level half of the batch-parity contract: for
+        // ragged random lanes with random (valid) hidden states, the
+        // SoA kernel and the save/load sequential multiplexer produce
+        // identical samples AND identical final states.
+        use crate::dpd::{process_lanes_sequential, DpdLane, DpdState};
+        use crate::util::proptest::check;
+        check("qgru soa vs sequential lanes", 20, |rng| {
+            let spec = QSpec::Q12;
+            let w = rand_qweights(rng.next_u64(), spec);
+            let mut soa = QGruDpd::new(w.clone(), ActKind::Hard);
+            let mut seq = QGruDpd::new(w, ActKind::Hard);
+            let nb = rng.int_in(2, 8) as usize;
+            let mut data: Vec<Vec<[f64; 2]>> = (0..nb)
+                .map(|_| {
+                    let len = rng.int_in(0, 40) as usize;
+                    (0..len).map(|_| [rng.range(-0.6, 0.6), rng.range(-0.6, 0.6)]).collect()
+                })
+                .collect();
+            let states: Vec<DpdState> = (0..nb)
+                .map(|_| {
+                    DpdState::I32((0..10).map(|_| rng.int_in(-2048, 2047) as i32).collect())
+                })
+                .collect();
+            let mut data2 = data.clone();
+            let mut st_soa = states.clone();
+            let mut st_seq = states;
+
+            let mut lanes: Vec<DpdLane> = data
+                .iter_mut()
+                .zip(st_soa.iter_mut())
+                .map(|(d, s)| DpdLane { iq: d.as_mut_slice(), state: s })
+                .collect();
+            soa.process_lanes(&mut lanes).map_err(|e| e.to_string())?;
+            drop(lanes);
+
+            let mut lanes: Vec<DpdLane> = data2
+                .iter_mut()
+                .zip(st_seq.iter_mut())
+                .map(|(d, s)| DpdLane { iq: d.as_mut_slice(), state: s })
+                .collect();
+            process_lanes_sequential(&mut seq, &mut lanes).map_err(|e| e.to_string())?;
+            drop(lanes);
+
+            if data != data2 {
+                return Err(format!("lane samples diverged (nb={nb})"));
+            }
+            if st_soa != st_seq {
+                return Err(format!("lane states diverged (nb={nb})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn soa_lanes_work_for_lut_activations() {
+        use crate::dpd::{process_lanes_sequential, DpdLane, DpdState};
+        let spec = QSpec::Q12;
+        let w = rand_qweights(5, spec);
+        let tables = LutTables::default_for(spec);
+        let mut soa = QGruDpd::new(w.clone(), ActKind::Lut(tables.clone()));
+        let mut seq = QGruDpd::new(w, ActKind::Lut(tables));
+        let mut rng = Rng::new(6);
+        let mut data: Vec<Vec<[f64; 2]>> = (0..4)
+            .map(|_| (0..33).map(|_| [rng.range(-0.5, 0.5), rng.range(-0.5, 0.5)]).collect())
+            .collect();
+        let mut data2 = data.clone();
+        let mut st_a: Vec<DpdState> = (0..4).map(|_| soa.save_state()).collect();
+        let mut st_b = st_a.clone();
+        let mut lanes: Vec<DpdLane> = data
+            .iter_mut()
+            .zip(st_a.iter_mut())
+            .map(|(d, s)| DpdLane { iq: d.as_mut_slice(), state: s })
+            .collect();
+        soa.process_lanes(&mut lanes).unwrap();
+        drop(lanes);
+        let mut lanes: Vec<DpdLane> = data2
+            .iter_mut()
+            .zip(st_b.iter_mut())
+            .map(|(d, s)| DpdLane { iq: d.as_mut_slice(), state: s })
+            .collect();
+        process_lanes_sequential(&mut seq, &mut lanes).unwrap();
+        drop(lanes);
+        assert_eq!(data, data2);
+        assert_eq!(st_a, st_b);
+    }
+
+    #[test]
+    fn batch_fingerprint_separates_weights_and_activation() {
+        let spec = QSpec::Q12;
+        let w = rand_qweights(1, spec);
+        let hard = QGruDpd::new(w.clone(), ActKind::Hard);
+        let hard2 = QGruDpd::new(w.clone(), ActKind::Hard);
+        let lut = QGruDpd::new(w, ActKind::Lut(LutTables::default_for(spec)));
+        let other = QGruDpd::new(rand_qweights(2, spec), ActKind::Hard);
+        assert_eq!(hard.batch_fingerprint(), hard2.batch_fingerprint());
+        assert_ne!(hard.batch_fingerprint(), lut.batch_fingerprint());
+        assert_ne!(hard.batch_fingerprint(), other.batch_fingerprint());
+        assert!(hard.batch_fingerprint().is_some());
     }
 
     #[test]

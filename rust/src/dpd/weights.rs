@@ -96,6 +96,25 @@ impl GruWeights {
             + self.w_fc.len() + self.b_fc.len()
     }
 
+    /// Content fingerprint over dims + every weight word (f64 bit
+    /// patterns). Two `GruDpd`s with equal fingerprints compute the
+    /// same function — the batch-class test of the coalescing
+    /// scheduler.
+    pub fn fingerprint(&self) -> u64 {
+        let dims = [self.hidden as u64, self.features as u64];
+        let words = dims.into_iter().chain(
+            self.w_ih
+                .iter()
+                .chain(&self.b_ih)
+                .chain(&self.w_hh)
+                .chain(&self.b_hh)
+                .chain(&self.w_fc)
+                .chain(&self.b_fc)
+                .map(|v| v.to_bits()),
+        );
+        crate::util::fnv1a_words("gru-f64", words)
+    }
+
     /// Quantize to Q2.f codes with the canonical round-half-up rule —
     /// bit-identical to python `ref.quantize_params`.
     pub fn quantize(&self, spec: QSpec) -> QGruWeights {
@@ -137,6 +156,25 @@ impl QGruWeights {
             w_fc: gen(2 * hidden),
             b_fc: gen(2),
         }
+    }
+
+    /// Content fingerprint over format + dims + every weight code.
+    /// Equal fingerprints promise an identical integer datapath —
+    /// what lets the coalescing scheduler group sessions whose
+    /// engines share one weight set into a single batched call.
+    pub fn fingerprint(&self) -> u64 {
+        let head = [self.spec.bits as u64, self.hidden as u64, self.features as u64];
+        let words = head.into_iter().chain(
+            self.w_ih
+                .iter()
+                .chain(&self.b_ih)
+                .chain(&self.w_hh)
+                .chain(&self.b_hh)
+                .chain(&self.w_fc)
+                .chain(&self.b_fc)
+                .map(|&v| v as u32 as u64),
+        );
+        crate::util::fnv1a_words("qgru", words)
     }
 
     /// Load the pre-quantized `params_int` block of `weights_main.json`
@@ -234,6 +272,23 @@ mod tests {
         for (f, q) in w.w_ih.iter().zip(&qw.w_ih) {
             assert_eq!(*q, spec.quantize(*f));
         }
+    }
+
+    #[test]
+    fn fingerprints_identify_weight_content() {
+        let a = QGruWeights::synthetic(1, QSpec::Q12);
+        let b = QGruWeights::synthetic(1, QSpec::Q12);
+        let c = QGruWeights::synthetic(2, QSpec::Q12);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same content, same class");
+        assert_ne!(a.fingerprint(), c.fingerprint(), "different weights, different class");
+        // the format is part of the identity (same codes at 8 bits
+        // compute a different function)
+        let d = QGruWeights { spec: QSpec::new(8).unwrap(), ..a.clone() };
+        assert_ne!(a.fingerprint(), d.fingerprint());
+        // a single flipped weight changes the class
+        let mut e = a.clone();
+        e.w_hh[17] ^= 1;
+        assert_ne!(a.fingerprint(), e.fingerprint());
     }
 
     #[test]

@@ -34,6 +34,45 @@ pub fn requantize(acc: i64, s: u32, spec: QSpec) -> i32 {
     saturate_i64(rshift_round(acc, s), spec)
 }
 
+/// i32 twin of [`rshift_round`] for the narrow accumulation path
+/// (formats with `bits <= 13`, where products stay under 2^24 and sums
+/// under 2^28). Caller contract: `|v| < 2^30` so the rounding bias
+/// cannot overflow. Bit-identical to the i64 version on that domain —
+/// a property the `fixed::ops` suite checks in both debug and release
+/// (where the overflow behavior of a violated contract would differ).
+#[inline]
+pub fn rshift_round_i32(v: i32, s: u32) -> i32 {
+    if s == 0 {
+        return v;
+    }
+    (v + (1i32 << (s - 1))) >> s
+}
+
+/// Saturate a narrow accumulator into the code range.
+#[inline]
+pub fn saturate_i32(v: i32, spec: QSpec) -> i32 {
+    v.clamp(spec.qmin(), spec.qmax())
+}
+
+/// i32 requantize (shift + saturate) — the per-row op of the narrow
+/// matvec path, scalar and batched alike.
+#[inline]
+pub fn requantize_i32(acc: i32, s: u32, spec: QSpec) -> i32 {
+    saturate_i32(rshift_round_i32(acc, s), spec)
+}
+
+/// Requantize a whole accumulator block element-wise — the SoA form
+/// the batched kernels use after each matvec. Equivalent to applying
+/// [`requantize_i32`] per element in any split of the block (the
+/// "commutativity of batching" invariant the property suite pins).
+#[inline]
+pub fn requantize_block_i32(acc: &[i32], s: u32, spec: QSpec, out: &mut [i32]) {
+    debug_assert_eq!(acc.len(), out.len());
+    for (o, &a) in out.iter_mut().zip(acc) {
+        *o = requantize_i32(a, s, spec);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +124,96 @@ mod tests {
             let want = saturate_i64(rshift_round(acc, s), spec);
             if got != want {
                 return Err(format!("acc={acc}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn i32_twin_matches_i64_on_the_narrow_domain() {
+        // The batched SoA kernels accumulate in i32 (bits <= 13); the
+        // i32 requantize must agree with the canonical i64 one on the
+        // whole documented domain |v| < 2^30. Run under both debug and
+        // release in CI — a contract violation would wrap silently in
+        // release but panic in debug.
+        check("rshift_round_i32 vs i64", 800, |rng| {
+            let v = rng.int_in(-(1 << 30) + 1, (1 << 30) - 1) as i32;
+            let s = rng.int_in(0, 14) as u32;
+            let got = rshift_round_i32(v, s) as i64;
+            let want = rshift_round(v as i64, s);
+            if got != want {
+                return Err(format!("v={v} s={s}: got {got} want {want}"));
+            }
+            Ok(())
+        });
+        check("requantize_i32 vs i64", 800, |rng| {
+            let spec = QSpec::new(rng.int_in(4, 13) as u32).unwrap();
+            let v = rng.int_in(-(1 << 29), 1 << 29) as i32;
+            let got = requantize_i32(v, spec.frac(), spec);
+            let want = requantize(v as i64, spec.frac(), spec);
+            if got != want {
+                return Err(format!("v={v} bits={}: got {got} want {want}", spec.bits));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn i32_rounding_ties_toward_plus_inf() {
+        assert_eq!(rshift_round_i32(-3, 1), -1);
+        assert_eq!(rshift_round_i32(3, 1), 2);
+        assert_eq!(rshift_round_i32(-2, 2), 0);
+        assert_eq!(rshift_round_i32(2, 2), 1);
+        assert_eq!(rshift_round_i32(-12345, 0), -12345);
+    }
+
+    #[test]
+    fn i32_saturation_always_lands_in_code_range() {
+        check("requantize_i32 saturates", 600, |rng| {
+            let spec = QSpec::new(rng.int_in(4, 13) as u32).unwrap();
+            let v = rng.int_in(-(1 << 30) + 1, (1 << 30) - 1) as i32;
+            let s = rng.int_in(0, 14) as u32;
+            let got = requantize_i32(v, s, spec);
+            if got < spec.qmin() || got > spec.qmax() {
+                return Err(format!("v={v} s={s} escaped: {got}"));
+            }
+            // saturation is sticky at the rails
+            if saturate_i32(i32::MAX / 2, spec) != spec.qmax()
+                || saturate_i32(i32::MIN / 2, spec) != spec.qmin()
+            {
+                return Err("rails not clamped".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn block_requantize_commutes_with_batching() {
+        // The invariant the batched kernels lean on: requantizing a
+        // whole SoA block equals requantizing any split of it and
+        // concatenating — i.e. batching lanes together cannot change
+        // any lane's values.
+        check("requantize_block_i32 split-invariant", 300, |rng| {
+            let spec = QSpec::new(rng.int_in(4, 13) as u32).unwrap();
+            let s = spec.frac();
+            let n = rng.int_in(1, 64) as usize;
+            let acc: Vec<i32> =
+                (0..n).map(|_| rng.int_in(-(1 << 29), 1 << 29) as i32).collect();
+            let mut whole = vec![0i32; n];
+            requantize_block_i32(&acc, s, spec, &mut whole);
+            // element-wise reference
+            for (i, (&w, &a)) in whole.iter().zip(&acc).enumerate() {
+                if w != requantize_i32(a, s, spec) {
+                    return Err(format!("element {i} diverged"));
+                }
+            }
+            // arbitrary split point
+            let cut = rng.int_in(0, n as i64) as usize;
+            let mut parts = vec![0i32; n];
+            requantize_block_i32(&acc[..cut], s, spec, &mut parts[..cut]);
+            requantize_block_i32(&acc[cut..], s, spec, &mut parts[cut..]);
+            if parts != whole {
+                return Err(format!("split at {cut} changed the block"));
             }
             Ok(())
         });

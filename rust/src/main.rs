@@ -13,9 +13,11 @@
 //! Common flags: --artifacts <dir>,
 //! --engine <fixed|native|cyclesim|interp|hlo>, --streams <n>,
 //! --symbols <n>, --seed <n>; `serve` adds --sessions <n>,
-//! --workers <n>, --rounds <n> and --shadow <engine>. The `hlo`
-//! engine needs a build with `--features xla`; `interp` is its
-//! hermetic frame-based twin.
+//! --workers <n>, --rounds <n>, --shadow <engine> and --batch <n>
+//! (coalesce up to n same-engine sessions per worker dispatch into
+//! one batched engine call — bit-identical output, higher aggregate
+//! throughput). The `hlo` engine needs a build with `--features xla`;
+//! `interp` is its hermetic frame-based twin.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -79,7 +81,7 @@ fn usage() -> &'static str {
     "usage: dpd-ne <run|serve|stream|asic-report|fpga-report|sweep|info> [flags]\n\
      flags: --artifacts <dir> --engine <fixed|native|cyclesim|interp|hlo> \
      --streams <n> --symbols <n> --seed <n>\n\
-     serve: --sessions <n> --workers <n> --rounds <n> --shadow <engine>\n\
+     serve: --sessions <n> --workers <n> --rounds <n> --shadow <engine> --batch <n>\n\
      (engine 'hlo' needs a build with --features xla)"
 }
 
@@ -192,12 +194,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let n_sessions: usize = flags.get("sessions").map(|s| s.parse()).transpose()?.unwrap_or(4);
     let n_workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
     let rounds: usize = flags.get("rounds").map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let engine = engine_kind(flags)?;
     let shadow_kind = flags.get("shadow").map(|s| parse_engine(s)).transpose()?;
     let sig = test_signal(flags)?;
 
     let service = DpdService::start(ServiceConfig {
         workers: n_workers,
+        // the service sizes worker channels for coalescing headroom
+        // itself (max(queue_depth, batch)); no override needed here
+        batch,
         artifacts: artifacts(flags),
         ..Default::default()
     })?;
@@ -209,7 +215,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         .map(|kind| service.open_session(SessionConfig { engine: kind, ..Default::default() }))
         .transpose()?;
     println!(
-        "DpdService: {} workers, {} sessions ({engine:?}){}, {} samples/burst x {rounds} bursts",
+        "DpdService: {} workers, {} sessions ({engine:?}){}, batch {batch}, \
+         {} samples/burst x {rounds} bursts",
         service.workers(),
         n_sessions,
         match shadow_kind {

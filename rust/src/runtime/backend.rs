@@ -45,6 +45,9 @@ use crate::dpd::weights::{GruWeights, QGruWeights};
 use crate::dpd::{Dpd, GruDpd};
 use crate::fixed::QSpec;
 use crate::runtime::Manifest;
+use crate::util::fnv1a_words;
+
+pub use crate::dpd::{DpdLane, DpdState};
 
 /// Frame length used by `Interp` when the artifact tree carries no
 /// lowered HLO entry to inherit a shape from.
@@ -89,6 +92,73 @@ pub trait DpdEngine {
     /// Reset internal state (no-op for frame engines, which reset at
     /// every frame anyway).
     fn reset(&mut self);
+
+    /// Snapshot the current stream's recurrent state (the lane payload
+    /// of a batched call). Default: [`DpdState::Stateless`]; stateful
+    /// engines override this together with [`DpdEngine::load_state`]
+    /// so the pair round-trips exactly.
+    fn save_state(&self) -> DpdState {
+        DpdState::Stateless
+    }
+
+    /// Restore a snapshot from [`DpdEngine::save_state`] on the same
+    /// engine kind and shape.
+    fn load_state(&mut self, state: &DpdState) -> Result<()> {
+        match state {
+            DpdState::Stateless => Ok(()),
+            other => {
+                anyhow::bail!("{}: cannot load a {} state snapshot", self.name(), other.kind())
+            }
+        }
+    }
+
+    /// Coalescing identity: engines with equal `Some` classes promise
+    /// identical datapaths (kind + format + weights + activation), so
+    /// the scheduler may gather their sessions' frames into one
+    /// [`DpdEngine::run_batch`] call on any one of them. `None` (the
+    /// default) opts out of coalescing entirely.
+    fn batch_class(&self) -> Option<u64> {
+        None
+    }
+
+    /// Batched execution over several independent streams: lane k's
+    /// samples in `lanes[k].iq`, its recurrent state in
+    /// `lanes[k].state`, both updated in place. Must be bit-identical,
+    /// lane for lane, to processing each stream alone through
+    /// [`DpdEngine::process_frame`] (the batch-parity contract). On
+    /// error the whole batch is reported failed and the lanes must be
+    /// discarded (already-processed lanes may have advanced) — the
+    /// scheduler poisons every member session and drops the frames.
+    ///
+    /// The default multiplexes lanes sequentially via
+    /// `save_state`/`load_state` (valid for engines whose snapshots
+    /// round-trip their full state, and trivially for stateless frame
+    /// engines); `self`'s own stream state is preserved.
+    fn run_batch(&mut self, lanes: &mut [DpdLane<'_>]) -> Result<()> {
+        run_batch_sequential(self, lanes)
+    }
+}
+
+/// The sequential fallback behind [`DpdEngine::run_batch`].
+pub fn run_batch_sequential<E: DpdEngine + ?Sized>(
+    engine: &mut E,
+    lanes: &mut [DpdLane<'_>],
+) -> Result<()> {
+    let own = engine.save_state();
+    let mut result = Ok(());
+    for lane in lanes.iter_mut() {
+        if let Err(e) = engine.load_state(lane.state) {
+            result = Err(e);
+            break;
+        }
+        if let Err(e) = engine.process_frame(lane.iq) {
+            result = Err(e);
+            break;
+        }
+        *lane.state = engine.save_state();
+    }
+    engine.load_state(&own).ok();
+    result
 }
 
 /// Adapter: any streaming [`Dpd`] as a [`DpdEngine`].
@@ -117,12 +187,32 @@ impl DpdEngine for StreamingEngine {
     fn reset(&mut self) {
         self.inner.reset();
     }
+
+    fn save_state(&self) -> DpdState {
+        self.inner.save_state()
+    }
+
+    fn load_state(&mut self, state: &DpdState) -> Result<()> {
+        self.inner.load_state(state)
+    }
+
+    fn batch_class(&self) -> Option<u64> {
+        self.inner.batch_fingerprint()
+    }
+
+    fn run_batch(&mut self, lanes: &mut [DpdLane<'_>]) -> Result<()> {
+        // delegate to the Dpd-level batched path (SoA kernels for
+        // QGruDpd/GruDpd, sequential multiplexing otherwise)
+        self.inner.process_lanes(lanes)
+    }
 }
 
 /// Adapter: the cycle-accurate simulator as a streaming [`Dpd`].
 pub struct CycleSimDpd {
     sim: CycleAccurateEngine,
     spec: QSpec,
+    /// batch-class fingerprint, resolved once at construction
+    fingerprint: u64,
 }
 
 impl CycleSimDpd {
@@ -130,6 +220,7 @@ impl CycleSimDpd {
         CycleSimDpd {
             sim: CycleAccurateEngine::new(w, ActImpl::Hard, HwConfig::default()),
             spec: w.spec,
+            fingerprint: fnv1a_words("cyclesim-hard", [w.fingerprint()]),
         }
     }
 }
@@ -145,6 +236,21 @@ impl Dpd for CycleSimDpd {
     }
     fn name(&self) -> &'static str {
         "cyclesim"
+    }
+    fn save_state(&self) -> DpdState {
+        DpdState::I32(self.sim.hidden_state())
+    }
+    fn load_state(&mut self, state: &DpdState) -> Result<()> {
+        match state {
+            DpdState::I32(h) => self.sim.set_hidden_state(h),
+            other => anyhow::bail!("cyclesim: incompatible state snapshot ({})", other.kind()),
+        }
+    }
+    fn batch_fingerprint(&self) -> Option<u64> {
+        // sessions coalesce via the default sequential lane multiplexer
+        // (no SoA kernel for the cycle model — it exercises the trait's
+        // fallback path in the parity suite)
+        Some(self.fingerprint)
     }
 }
 
@@ -194,6 +300,15 @@ impl DpdEngine for InterpGruEngine {
     }
 
     fn reset(&mut self) {}
+
+    fn batch_class(&self) -> Option<u64> {
+        // stateless across process_frame calls (h0 resets every frame),
+        // so the default sequential run_batch is trivially bit-exact;
+        // the class still gates coalescing to identical datapaths
+        self.dpd
+            .batch_fingerprint()
+            .map(|fp| fnv1a_words("interp-frame", [fp, self.frame_len as u64]))
+    }
 }
 
 /// The PJRT-executed AOT HLO artifact as a [`DpdEngine`].
@@ -501,6 +616,105 @@ mod tests {
         let interp = InterpGruEngine::new(QGruDpd::new(qw, ActKind::Hard), 256);
         assert_eq!(interp.frame_len(), Some(256));
         assert_eq!(interp.name(), "interp-qgru");
+    }
+
+    #[test]
+    fn batch_classes_separate_kinds_weights_and_geometry() {
+        let fw = synth_float_weights(31);
+        let qw = fw.quantize(QSpec::Q12);
+        let fixed_a = StreamingEngine::new(Box::new(QGruDpd::new(qw.clone(), ActKind::Hard)));
+        let fixed_b = StreamingEngine::new(Box::new(QGruDpd::new(qw.clone(), ActKind::Hard)));
+        let cyclesim = StreamingEngine::new(Box::new(CycleSimDpd::new(&qw)));
+        let native = StreamingEngine::new(Box::new(GruDpd::new(fw.clone())));
+        let interp16 = InterpGruEngine::new(QGruDpd::new(qw.clone(), ActKind::Hard), 16);
+        let interp64 = InterpGruEngine::new(QGruDpd::new(qw.clone(), ActKind::Hard), 64);
+        // same kind + same weights coalesce
+        assert!(fixed_a.batch_class().is_some());
+        assert_eq!(fixed_a.batch_class(), fixed_b.batch_class());
+        // kinds never mix, even on identical weights
+        assert_ne!(fixed_a.batch_class(), cyclesim.batch_class());
+        assert_ne!(fixed_a.batch_class(), native.batch_class());
+        assert_ne!(fixed_a.batch_class(), interp16.batch_class());
+        // frame geometry is part of a frame engine's identity
+        assert_ne!(interp16.batch_class(), interp64.batch_class());
+        // different weights never coalesce
+        let other = synth_float_weights(32).quantize(QSpec::Q12);
+        let fixed_c = StreamingEngine::new(Box::new(QGruDpd::new(other, ActKind::Hard)));
+        assert_ne!(fixed_a.batch_class(), fixed_c.batch_class());
+    }
+
+    #[test]
+    fn run_batch_is_bit_identical_to_solo_processing() {
+        // The trait-level batch-parity contract over every hermetic
+        // engine family (the full differential suite lives in
+        // tests/batch_parity.rs; this pins the trait defaults and the
+        // StreamingEngine delegation next to their definitions).
+        let fw = synth_float_weights(21);
+        let qw = fw.quantize(QSpec::Q12);
+        type Mk<'a> = Box<dyn Fn() -> Box<dyn DpdEngine> + 'a>;
+        let makers: Vec<(Mk, &str)> = vec![
+            (
+                Box::new(|| -> Box<dyn DpdEngine> {
+                    Box::new(StreamingEngine::new(Box::new(QGruDpd::new(
+                        qw.clone(),
+                        ActKind::Hard,
+                    ))))
+                }),
+                "fixed",
+            ),
+            (
+                Box::new(|| -> Box<dyn DpdEngine> {
+                    Box::new(StreamingEngine::new(Box::new(CycleSimDpd::new(&qw))))
+                }),
+                "cyclesim",
+            ),
+            (
+                Box::new(|| -> Box<dyn DpdEngine> {
+                    Box::new(StreamingEngine::new(Box::new(GruDpd::new(fw.clone()))))
+                }),
+                "native-f64",
+            ),
+            (
+                Box::new(|| -> Box<dyn DpdEngine> {
+                    Box::new(InterpGruEngine::new(QGruDpd::new(qw.clone(), ActKind::Hard), 16))
+                }),
+                "interp",
+            ),
+        ];
+        for (mk, label) in makers {
+            let mut batched = mk();
+            batched.reset();
+            let mut solos: Vec<Box<dyn DpdEngine>> = (0..3).map(|_| mk()).collect();
+            for s in solos.iter_mut() {
+                s.reset();
+            }
+            let mut states: Vec<DpdState> =
+                solos.iter().map(|_| batched.save_state()).collect();
+            let mut rng = Rng::new(77);
+            // several rounds: lane states must carry streams across
+            // run_batch calls exactly like the solo engines' own state
+            for round in 0..3 {
+                let lens = [17 + round, 40, 8];
+                let mut chunks: Vec<Vec<[f64; 2]>> = lens
+                    .iter()
+                    .map(|&n| {
+                        (0..n).map(|_| [rng.gauss() * 0.2, rng.gauss() * 0.2]).collect()
+                    })
+                    .collect();
+                let mut want = chunks.clone();
+                for (s, w) in solos.iter_mut().zip(want.iter_mut()) {
+                    s.process_frame(w).unwrap();
+                }
+                let mut lanes: Vec<DpdLane> = chunks
+                    .iter_mut()
+                    .zip(states.iter_mut())
+                    .map(|(c, st)| DpdLane { iq: c.as_mut_slice(), state: st })
+                    .collect();
+                batched.run_batch(&mut lanes).unwrap();
+                drop(lanes);
+                assert_eq!(chunks, want, "{label}: batched lanes diverged in round {round}");
+            }
+        }
     }
 
     #[test]

@@ -14,6 +14,6 @@ pub mod backend;
 pub mod engine;
 
 pub use artifacts::Manifest;
-pub use backend::{DpdEngine, EngineFactory, EngineKind};
+pub use backend::{DpdEngine, DpdLane, DpdState, EngineFactory, EngineKind};
 #[cfg(feature = "xla")]
 pub use engine::HloGruEngine;

@@ -8,3 +8,29 @@ pub mod rng;
 
 pub use cplx::C64;
 pub use rng::Rng;
+
+/// FNV-style 64-bit content hash over a tag string plus a word stream
+/// (the xor-multiply construction of FNV-1a with the crate's
+/// historical multiplier — not the canonical FNV-64 prime, so outputs
+/// will not match external FNV tools). Used for property-test seeds
+/// (`util::proptest`, empty word stream) and as the fingerprint behind
+/// batch-class identification: equal fingerprints are taken to mean
+/// identical datapaths, and the 64-bit space makes an accidental
+/// collision between *different* weight sets negligible.
+pub fn fnv1a_words(tag: &str, words: impl IntoIterator<Item = u64>) -> u64 {
+    const P: u64 = 0x1000_0000_01b3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in tag.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(P);
+    }
+    for w in words {
+        let mut v = w;
+        for _ in 0..8 {
+            h ^= v & 0xff;
+            h = h.wrapping_mul(P);
+            v >>= 8;
+        }
+    }
+    h
+}

@@ -3,17 +3,23 @@
 //! `check(name, cases, |rng| ...)` runs a closure over `cases` random
 //! inputs drawn from a deterministic seed derived from `name`, so
 //! failures are reproducible; on failure it reports the case index and
-//! the seed to re-run with.
+//! the seed to re-run with. Set `DPD_PROPTEST_SEED=<seed>` to replay a
+//! reported failure: case 0 then starts at exactly that seed (the
+//! shrinking workflow — re-run one seed, tighten the property, repeat).
 
 use super::rng::Rng;
 
-fn fnv1a(s: &str) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x1000_0000_01b3);
+/// Base seed for a property: the env override when set (reproducible
+/// replay of a reported failure), else a stable hash of the name
+/// (the shared content hash with an empty word stream).
+fn base_seed(name: &str) -> u64 {
+    match std::env::var("DPD_PROPTEST_SEED") {
+        Ok(s) => s
+            .trim()
+            .parse::<u64>()
+            .unwrap_or_else(|_| panic!("DPD_PROPTEST_SEED must be a u64, got '{s}'")),
+        Err(_) => super::fnv1a_words(name, std::iter::empty()),
     }
-    h
 }
 
 /// Run `f` for `cases` seeded iterations; `f` returns Err(description)
@@ -22,12 +28,15 @@ pub fn check<F>(name: &str, cases: usize, mut f: F)
 where
     F: FnMut(&mut Rng) -> Result<(), String>,
 {
-    let base = fnv1a(name);
+    let base = base_seed(name);
     for case in 0..cases {
         let seed = base.wrapping_add(case as u64);
         let mut rng = Rng::new(seed);
         if let Err(msg) = f(&mut rng) {
-            panic!("property '{name}' failed at case {case} (seed {seed}): {msg}");
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}): {msg}\n\
+                 replay with DPD_PROPTEST_SEED={seed}"
+            );
         }
     }
 }

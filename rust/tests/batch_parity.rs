@@ -1,0 +1,321 @@
+//! Differential batch-parity suite — the proof obligation of the
+//! coalescing scheduler and the SoA batched kernels.
+//!
+//! The paper's value proposition is *bit-faithful* quantized GRU
+//! behavior, so the batched execution path may not change a single
+//! output bit: for every hermetic `EngineKind` construction
+//! (NativeF64, Fixed, CycleSim, Interp) and B ∈ {1, 2, 4, 8}
+//! interleaved streams, a `DpdService` running with `batch = B` must
+//! produce output bit-identical to the same streams run sequentially
+//! (`batch = 1`) — including across mid-stream `reset`, ragged chunk
+//! sizes, ragged tails, and sessions of *different* weight classes
+//! sharing the worker. The `Fixed`/`CycleSim` cases are additionally
+//! pinned to the direct single-engine oracle.
+//!
+//! Hermetic by construction (synthetic weights); CI runs this suite in
+//! both debug and `--release` (the narrow i32 kernels would wrap
+//! silently in release if an overflow-contract bug slipped in, but
+//! panic in debug).
+
+use dpd_ne::coordinator::{DpdService, ServiceConfig, SessionConfig, StreamSession};
+use dpd_ne::dpd::qgru::{ActKind, QGruDpd};
+use dpd_ne::dpd::weights::{GruWeights, QGruWeights};
+use dpd_ne::dpd::{Dpd, GruDpd};
+use dpd_ne::fixed::QSpec;
+use dpd_ne::runtime::backend::{CycleSimDpd, InterpGruEngine, StreamingEngine};
+use dpd_ne::runtime::DpdEngine;
+use dpd_ne::util::Rng;
+
+const FRAME_LEN: usize = 128;
+
+fn signal(n: usize, seed: u64) -> Vec<[f64; 2]> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect()
+}
+
+fn synth_float_weights(seed: u64) -> GruWeights {
+    let mut rng = Rng::new(seed);
+    let hidden = 10;
+    let features = 4;
+    let mut gen = |n: usize| -> Vec<f64> { (0..n).map(|_| rng.range(-0.15, 0.15)).collect() };
+    GruWeights {
+        hidden,
+        features,
+        w_ih: gen(3 * hidden * features),
+        b_ih: gen(3 * hidden),
+        w_hh: gen(3 * hidden * hidden),
+        b_hh: gen(3 * hidden),
+        w_fc: gen(2 * hidden),
+        b_fc: gen(2),
+        meta_bits: None,
+        meta_act: None,
+        meta_val_nmse_db: None,
+    }
+}
+
+type Ctor = fn(u64) -> Box<dyn DpdEngine>;
+
+fn fixed_engine(seed: u64) -> Box<dyn DpdEngine> {
+    let qw = QGruWeights::synthetic(seed, QSpec::Q12);
+    Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw, ActKind::Hard))))
+}
+
+fn native_engine(seed: u64) -> Box<dyn DpdEngine> {
+    Box::new(StreamingEngine::new(Box::new(GruDpd::new(synth_float_weights(seed)))))
+}
+
+fn cyclesim_engine(seed: u64) -> Box<dyn DpdEngine> {
+    let qw = QGruWeights::synthetic(seed, QSpec::Q12);
+    Box::new(StreamingEngine::new(Box::new(CycleSimDpd::new(&qw))))
+}
+
+fn interp_engine(seed: u64) -> Box<dyn DpdEngine> {
+    let qw = QGruWeights::synthetic(seed, QSpec::Q12);
+    Box::new(InterpGruEngine::new(QGruDpd::new(qw, ActKind::Hard), FRAME_LEN))
+}
+
+/// Route a seed code to a kind — lets one helper run heterogeneous
+/// session mixes (codes >= 100 become CycleSim on seed-100).
+fn mixed_engine(code: u64) -> Box<dyn DpdEngine> {
+    if code >= 100 {
+        cyclesim_engine(code - 100)
+    } else {
+        fixed_engine(code)
+    }
+}
+
+/// Direct single-engine oracle: one continuous bit-exact run.
+fn direct(seed: u64, input: &[[f64; 2]]) -> Vec<[f64; 2]> {
+    QGruDpd::new(QGruWeights::synthetic(seed, QSpec::Q12), ActKind::Hard).run(input)
+}
+
+/// Drive `seeds.len()` sessions through one single-worker service with
+/// the given coalescing width, interleaving irregular chunk pushes
+/// (with interleaved drains) and per-session mid-stream resets at
+/// exact sample positions. Fully deterministic in everything except
+/// the scheduler's internal grouping — which is exactly what must not
+/// matter.
+fn run_sessions(
+    batch: usize,
+    ctor: Ctor,
+    seeds: &[u64],
+    inputs: &[Vec<[f64; 2]>],
+    reset_at: &[Option<usize>],
+) -> Vec<Vec<[f64; 2]>> {
+    let service = DpdService::start(ServiceConfig {
+        workers: 1,
+        frame_len: FRAME_LEN,
+        queue_depth: batch.max(4),
+        batch,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut sessions: Vec<StreamSession> = seeds
+        .iter()
+        .map(|&s| {
+            service.open_session_with(SessionConfig::default(), move || Ok(ctor(s))).unwrap()
+        })
+        .collect();
+    let mut outs: Vec<Vec<[f64; 2]>> = vec![Vec::new(); sessions.len()];
+    let mut pos = vec![0usize; sessions.len()];
+    let mut did_reset = vec![false; sessions.len()];
+    let chunk_cycle = [3usize, 17, 128, 61, 255, 1, 96];
+    let mut round = 0usize;
+    loop {
+        let mut progress = false;
+        for (k, sess) in sessions.iter_mut().enumerate() {
+            let n = inputs[k].len();
+            if pos[k] >= n {
+                continue;
+            }
+            progress = true;
+            if let Some(r) = reset_at[k] {
+                if !did_reset[k] && pos[k] == r {
+                    sess.reset().unwrap();
+                    did_reset[k] = true;
+                }
+            }
+            let mut c = chunk_cycle[(round + k) % chunk_cycle.len()].min(n - pos[k]);
+            if let Some(r) = reset_at[k] {
+                // stop exactly at the reset point so every run (and the
+                // oracle) sees the reset at the same stream position
+                if !did_reset[k] && pos[k] < r {
+                    c = c.min(r - pos[k]);
+                }
+            }
+            sess.push(&inputs[k][pos[k]..pos[k] + c]).unwrap();
+            pos[k] += c;
+            outs[k].extend(sess.drain().unwrap());
+        }
+        round += 1;
+        if !progress {
+            break;
+        }
+    }
+    for (k, sess) in sessions.into_iter().enumerate() {
+        let out = sess.finish().unwrap();
+        outs[k].extend(out.iq);
+        assert_eq!(out.stats.samples_in as usize, inputs[k].len(), "session {k} lost input");
+        assert_eq!(out.stats.samples_out as usize, inputs[k].len(), "session {k} lost output");
+    }
+    service.shutdown().unwrap();
+    outs
+}
+
+/// Oracle for a (possibly reset) stream: causality makes the session's
+/// zero-padded tail frames invisible in the trimmed output, so each
+/// segment equals a plain continuous run.
+fn oracle(seed: u64, input: &[[f64; 2]], reset_at: Option<usize>) -> Vec<[f64; 2]> {
+    match reset_at {
+        None => direct(seed, input),
+        Some(r) => {
+            let mut want = direct(seed, &input[..r]);
+            want.extend(direct(seed, &input[r..]));
+            want
+        }
+    }
+}
+
+#[test]
+fn batched_is_bit_identical_to_sequential_for_every_hermetic_kind() {
+    // The headline contract. Streams have pairwise-different content,
+    // ragged lengths (tail frames get zero-padded), one mid-stream
+    // reset, and irregular interleaved chunking — the batched service
+    // must reproduce the sequential service bit for bit.
+    let kinds: [(&str, Ctor); 4] = [
+        ("fixed", fixed_engine),
+        ("native-f64", native_engine),
+        ("cyclesim", cyclesim_engine),
+        ("interp", interp_engine),
+    ];
+    for (label, ctor) in kinds {
+        for b in [1usize, 2, 4, 8] {
+            let seeds = vec![42u64; b];
+            let inputs: Vec<Vec<[f64; 2]>> =
+                (0..b).map(|k| signal(900 + 61 * k, 100 + k as u64)).collect();
+            let reset_at: Vec<Option<usize>> =
+                (0..b).map(|k| if k == 1 { Some(411) } else { None }).collect();
+            let seq = run_sessions(1, ctor, &seeds, &inputs, &reset_at);
+            let bat = run_sessions(b, ctor, &seeds, &inputs, &reset_at);
+            assert_eq!(seq, bat, "{label} B={b}: batched path diverged from sequential");
+        }
+    }
+}
+
+#[test]
+fn batched_fixed_sessions_match_the_direct_oracle_across_reset() {
+    // Differential parity alone could hide a bug present in *both*
+    // paths; the Fixed case is therefore also pinned to the direct
+    // bit-exact engine run, including a reset landing exactly on a
+    // frame boundary (no partial flush) and one inside a frame.
+    let b = 4;
+    let seeds = vec![7u64; b];
+    let inputs: Vec<Vec<[f64; 2]>> =
+        (0..b).map(|k| signal(1000 + 13 * k, 500 + k as u64)).collect();
+    let reset_at = vec![None, Some(300), Some(FRAME_LEN * 2), None];
+    let outs = run_sessions(b, fixed_engine, &seeds, &inputs, &reset_at);
+    for k in 0..b {
+        let want = oracle(seeds[k], &inputs[k], reset_at[k]);
+        assert_eq!(outs[k], want, "session {k} diverged from the direct oracle");
+    }
+}
+
+#[test]
+fn batch_one_lane_equals_unbatched_scheduler() {
+    // B=1 with a wide coalescing window: groups of one must take the
+    // plain solo path (and stay bit-exact to the oracle).
+    let seeds = vec![3u64];
+    let inputs = vec![signal(700, 9)];
+    let outs = run_sessions(8, fixed_engine, &seeds, &inputs, &[None]);
+    assert_eq!(outs[0], direct(3, &inputs[0]));
+}
+
+#[test]
+fn different_weight_classes_never_coalesce_or_contaminate() {
+    // Four sessions, two weight classes: the scheduler may only group
+    // same-class frames; every session must still match its own oracle.
+    let seeds = vec![11u64, 12, 11, 12];
+    let inputs: Vec<Vec<[f64; 2]>> =
+        (0..4).map(|k| signal(800 + 29 * k, 700 + k as u64)).collect();
+    let reset_at = vec![None; 4];
+    let outs = run_sessions(4, fixed_engine, &seeds, &inputs, &reset_at);
+    for k in 0..4 {
+        assert_eq!(outs[k], direct(seeds[k], &inputs[k]), "session {k} contaminated");
+    }
+    // and the differential check on top
+    let seq = run_sessions(1, fixed_engine, &seeds, &inputs, &reset_at);
+    assert_eq!(outs, seq);
+}
+
+#[test]
+fn heterogeneous_kinds_share_a_batched_worker_bit_exactly() {
+    // Fixed and CycleSim sessions multiplexed on one batched worker:
+    // kinds never group together, but both share the integer datapath,
+    // so all four outputs equal the same direct oracle.
+    let seeds = vec![5u64, 105, 5, 105]; // two fixed(5), two cyclesim(5)
+    let inputs: Vec<Vec<[f64; 2]>> = (0..4).map(|_| signal(600, 17)).collect();
+    let reset_at = vec![None; 4];
+    let outs = run_sessions(4, mixed_engine, &seeds, &inputs, &reset_at);
+    let want = direct(5, &inputs[0]);
+    for (k, out) in outs.iter().enumerate() {
+        assert_eq!(out, &want, "lane {k} (mixed kinds) diverged");
+    }
+}
+
+#[test]
+fn coalesce_opt_out_stays_bit_identical() {
+    // Two of four same-class sessions opt out of coalescing; outputs
+    // must be unchanged (the flag is a latency knob, not a semantic).
+    let service = DpdService::start(ServiceConfig {
+        workers: 1,
+        frame_len: 64,
+        queue_depth: 4,
+        batch: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    let inputs: Vec<Vec<[f64; 2]>> = (0..4).map(|k| signal(500, 30 + k as u64)).collect();
+    let mut sessions: Vec<StreamSession> = (0..4)
+        .map(|k| {
+            let cfg = SessionConfig { coalesce: k % 2 == 0, ..Default::default() };
+            service.open_session_with(cfg, move || Ok(fixed_engine(21))).unwrap()
+        })
+        .collect();
+    for chunk_idx in 0..5 {
+        for (k, sess) in sessions.iter_mut().enumerate() {
+            let lo = chunk_idx * 100;
+            sess.push(&inputs[k][lo..lo + 100]).unwrap();
+        }
+    }
+    for (k, sess) in sessions.into_iter().enumerate() {
+        let out = sess.finish().unwrap();
+        assert_eq!(out.iq, direct(21, &inputs[k]), "session {k} diverged");
+    }
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn ragged_tails_zero_pad_identically_in_batched_groups() {
+    // Streams whose lengths are *not* multiples of the frame length:
+    // the framer pads the tails, the batched kernel must reproduce the
+    // per-stream padding semantics exactly (including trim-on-output).
+    for b in [2usize, 4, 8] {
+        let seeds = vec![77u64; b];
+        // lengths straddle frame boundaries: 1 below, exact, 1 above...
+        let inputs: Vec<Vec<[f64; 2]>> = (0..b)
+            .map(|k| {
+                let len = FRAME_LEN * 3 + [FRAME_LEN - 1, 0, 1, 37][k % 4];
+                signal(len, 900 + k as u64)
+            })
+            .collect();
+        let reset_at = vec![None; b];
+        let outs = run_sessions(b, fixed_engine, &seeds, &inputs, &reset_at);
+        for k in 0..b {
+            assert_eq!(
+                outs[k],
+                direct(77, &inputs[k]),
+                "B={b} session {k}: ragged tail diverged"
+            );
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Golden-vector end-to-end regression — hermetic, checked-in data.
+//!
+//! `tests/data/golden_ofdm_q12.json` (written by
+//! `python/tools/gen_golden_ofdm.py`) carries a small deterministic
+//! CP-OFDM 64-QAM waveform plus the expected ACPR/EVM for DPD-off and
+//! DPD-on through the bit-exact `Fixed` (Q2.10) engine on synthetic
+//! weights, and the first 64 predistorted output *codes*.
+//!
+//! Three nested regression rings, coarsest failure first:
+//!
+//! 1. `QGruWeights::synthetic` must reproduce the checked-in weights
+//!    exactly (catches Rng / synthetic-constructor drift);
+//! 2. the integer datapath must reproduce the head output codes
+//!    bit-for-bit (catches any rounding/saturation/matvec change,
+//!    with exact diffs);
+//! 3. the analog metrics (Welch ACPR, NMSE-EVM through the Rapp+memory
+//!    PA) must land within ±0.05 dB of the expected values (catches
+//!    numeric drift anywhere in the DSP/PA/metrics substrate).
+//!
+//! The generator's GRU port is itself cross-validated bit-exactly
+//! against the canonical jax oracle (`kernels/ref.py::int_forward`),
+//! the same oracle `tests/golden_parity.rs` pins the Rust engines to.
+//! Note the expected values are a *drift detector*, not a quality
+//! claim — the synthetic weights are random, so "DPD on" does not
+//! linearize anything here.
+
+use std::path::PathBuf;
+
+use dpd_ne::dpd::qgru::{ActKind, QGruDpd};
+use dpd_ne::dpd::weights::QGruWeights;
+use dpd_ne::dsp::welch::WelchConfig;
+use dpd_ne::fixed::QSpec;
+use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
+use dpd_ne::metrics::evm::evm_db_nmse;
+use dpd_ne::pa::{PaSpec, RappMemPa};
+use dpd_ne::util::json::Json;
+
+fn data() -> Json {
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/golden_ofdm_q12.json");
+    Json::parse_file(&path).expect("golden data file must parse")
+}
+
+fn load_iq(j: &Json) -> Vec<[f64; 2]> {
+    j.get("iq")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| {
+            let v = p.as_f64_vec().unwrap();
+            [v[0], v[1]]
+        })
+        .collect()
+}
+
+fn load_code_pairs(j: &Json) -> Vec<[i32; 2]> {
+    j.as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| {
+            let v = p.as_i32_vec().unwrap();
+            [v[0], v[1]]
+        })
+        .collect()
+}
+
+#[test]
+fn synthetic_weights_match_the_checked_in_golden_set() {
+    let j = data();
+    let seed = j.get("meta").unwrap().get("weights_seed").unwrap().as_usize().unwrap() as u64;
+    let w = QGruWeights::synthetic(seed, QSpec::Q12);
+    let gw = j.get("weights_int").unwrap();
+    let check = |name: &str, got: &[i32]| {
+        let want = gw.get(name).unwrap().as_i32_vec().unwrap();
+        assert_eq!(got, &want[..], "{name}: synthetic weights drifted (Rng change?)");
+    };
+    check("w_ih", &w.w_ih);
+    check("b_ih", &w.b_ih);
+    check("w_hh", &w.w_hh);
+    check("b_hh", &w.b_hh);
+    check("w_fc", &w.w_fc);
+    check("b_fc", &w.b_fc);
+}
+
+#[test]
+fn golden_ofdm_acpr_evm_regression() {
+    let j = data();
+    let meta = j.get("meta").unwrap();
+    assert_eq!(meta.get("bits").unwrap().as_usize().unwrap(), 12);
+    let seed = meta.get("weights_seed").unwrap().as_usize().unwrap() as u64;
+    let nfft = meta.get("welch_nfft").unwrap().as_usize().unwrap();
+    let iq = load_iq(&j);
+    assert_eq!(iq.len(), meta.get("samples").unwrap().as_usize().unwrap());
+
+    // ring 2: bit-exact integer datapath on the golden stimulus
+    let spec = QSpec::Q12;
+    let mut dpd = QGruDpd::new(QGruWeights::synthetic(seed, spec), ActKind::Hard);
+    let codes = spec.quantize_iq(&iq);
+    let out_codes = dpd.run_codes(&codes);
+    let want_head = load_code_pairs(j.get("dpd_head_codes").unwrap());
+    assert_eq!(
+        &out_codes[..want_head.len()],
+        &want_head[..],
+        "integer datapath drifted from the golden output codes"
+    );
+    let z = spec.dequantize_iq(&out_codes);
+
+    // ring 3: analog metrics within tight tolerance
+    let pa = RappMemPa::new(PaSpec::ganlike());
+    let g = pa.spec.target_gain();
+    let y_off = pa.run(&iq);
+    let y_on = pa.run(&z);
+    let cfg = AcprConfig {
+        bw: 0.25,
+        offset: 0.275,
+        welch: WelchConfig { nfft, overlap: 0.5 },
+    };
+    let acpr_off = acpr_db(&y_off, &cfg).unwrap().acpr_dbc;
+    let acpr_on = acpr_db(&y_on, &cfg).unwrap().acpr_dbc;
+    let evm_off = evm_db_nmse(&y_off, &iq, g);
+    let evm_on = evm_db_nmse(&y_on, &iq, g);
+
+    let e = j.get("expected").unwrap();
+    let tol = e.get("tol_db").unwrap().as_f64().unwrap();
+    let check = |name: &str, got: f64| {
+        let want = e.get(name).unwrap().as_f64().unwrap();
+        assert!(
+            (got - want).abs() <= tol,
+            "{name}: got {got:.6} dB, want {want:.6} ± {tol} dB — numeric drift"
+        );
+    };
+    check("acpr_off_dbc", acpr_off);
+    check("acpr_on_dbc", acpr_on);
+    check("evm_off_db", evm_off);
+    check("evm_on_db", evm_on);
+}
+
+#[test]
+fn golden_waveform_through_batched_sessions_is_bit_exact() {
+    // Tie the golden vectors to the runtime: the same waveform pushed
+    // through coalesced Fixed sessions must reproduce the direct
+    // engine run (and hence the golden codes) exactly.
+    use dpd_ne::coordinator::{DpdService, ServiceConfig, SessionConfig};
+    use dpd_ne::runtime::backend::StreamingEngine;
+    use dpd_ne::runtime::DpdEngine;
+
+    let j = data();
+    let seed = j.get("meta").unwrap().get("weights_seed").unwrap().as_usize().unwrap() as u64;
+    let iq = load_iq(&j);
+    let spec = QSpec::Q12;
+    let mut direct = QGruDpd::new(QGruWeights::synthetic(seed, spec), ActKind::Hard);
+    let want = spec.dequantize_iq(&direct.run_codes(&spec.quantize_iq(&iq)));
+
+    let service = DpdService::start(ServiceConfig {
+        workers: 1,
+        frame_len: 256,
+        queue_depth: 4,
+        batch: 3,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut sessions: Vec<_> = (0..3)
+        .map(|_| {
+            service
+                .open_session_with(SessionConfig::default(), move || {
+                    let qw = QGruWeights::synthetic(seed, QSpec::Q12);
+                    Ok(Box::new(StreamingEngine::new(Box::new(QGruDpd::new(
+                        qw,
+                        ActKind::Hard,
+                    )))) as Box<dyn DpdEngine>)
+                })
+                .unwrap()
+        })
+        .collect();
+    let mut outs = vec![Vec::new(); sessions.len()];
+    for chunk in iq.chunks(777) {
+        for (k, s) in sessions.iter_mut().enumerate() {
+            s.push(chunk).unwrap();
+            outs[k].extend(s.drain().unwrap());
+        }
+    }
+    for (k, s) in sessions.into_iter().enumerate() {
+        outs[k].extend(s.finish().unwrap().iq);
+        assert_eq!(outs[k], want, "session {k} diverged from the golden run");
+    }
+    service.shutdown().unwrap();
+}

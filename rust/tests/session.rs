@@ -67,6 +67,44 @@ impl DpdEngine for FailingEngine {
     fn reset(&mut self) {}
 }
 
+/// Identity engine that sleeps on every frame — holds the worker busy
+/// so frames for its session peers pile up in the command queue, which
+/// makes coalesced-group formation (next frame dispatch) near-certain.
+struct SlowEngine;
+
+impl DpdEngine for SlowEngine {
+    fn name(&self) -> &'static str {
+        "slow"
+    }
+    fn process_frame(&mut self, _iq: &mut [[f64; 2]]) -> Result<()> {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        Ok(())
+    }
+    fn reset(&mut self) {}
+}
+
+/// Batchable identity engine whose batched entry point dies whenever
+/// it is actually coalesced (>= 2 lanes) — the "worker dies
+/// mid-coalesced-batch" fault of the regression suite.
+struct FailInBatchEngine;
+
+impl DpdEngine for FailInBatchEngine {
+    fn name(&self) -> &'static str {
+        "fail-in-batch"
+    }
+    fn process_frame(&mut self, _iq: &mut [[f64; 2]]) -> Result<()> {
+        Ok(())
+    }
+    fn reset(&mut self) {}
+    fn batch_class(&self) -> Option<u64> {
+        Some(0xBADB_A7C4)
+    }
+    fn run_batch(&mut self, lanes: &mut [dpd_ne::runtime::DpdLane<'_>]) -> Result<()> {
+        anyhow::ensure!(lanes.len() < 2, "injected batched engine failure");
+        dpd_ne::runtime::backend::run_batch_sequential(self, lanes)
+    }
+}
+
 #[test]
 fn parity_any_chunking_matches_whole_signal_run() {
     // The headline contract: pushing in arbitrary chunk sizes (with
@@ -202,6 +240,88 @@ fn worker_error_propagates_and_worker_survives() {
 
     // the worker itself survives the engine failure and serves the
     // next session correctly
+    let input = signal(200, 6);
+    let mut sess =
+        service.open_session_with(SessionConfig::default(), || Ok(fixed_engine(6))).unwrap();
+    sess.push(&input).unwrap();
+    assert_eq!(sess.finish().unwrap().iq, direct(6, &input));
+    service.shutdown().unwrap();
+}
+
+#[test]
+fn batched_engine_failure_poisons_every_session_in_the_group() {
+    // Extends the failing-engine coverage to the coalescing scheduler:
+    // when an engine dies *inside a batched call*, every session whose
+    // frame was coalesced into that batch must observe the sticky Err
+    // (no lane may silently succeed or truncate), and the worker must
+    // survive to serve its other sessions.
+    let service = DpdService::start(ServiceConfig {
+        workers: 1,
+        frame_len: 32,
+        queue_depth: 4,
+        batch: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    // a slow (unbatchable) session holds the worker each round while
+    // the victims' frames queue up behind it
+    let mut slow = service
+        .open_session_with(SessionConfig::default(), || {
+            Ok(Box::new(SlowEngine) as Box<dyn DpdEngine>)
+        })
+        .unwrap();
+    let mut victims: Vec<_> = (0..3)
+        .map(|_| {
+            service
+                .open_session_with(SessionConfig::default(), || {
+                    Ok(Box::new(FailInBatchEngine) as Box<dyn DpdEngine>)
+                })
+                .unwrap()
+        })
+        .collect();
+    let frame = signal(32, 1);
+    let mut poisoned = vec![false; victims.len()];
+    'drive: for _ in 0..10 {
+        slow.push(&frame).unwrap();
+        for (k, v) in victims.iter_mut().enumerate() {
+            if let Err(e) = v.push(&frame) {
+                assert!(
+                    format!("{e:#}").contains("injected batched engine failure"),
+                    "error lost its cause: {e:#}"
+                );
+                poisoned[k] = true;
+                break 'drive;
+            }
+        }
+    }
+    // the batch that failed had >= 2 lanes (the fault only fires when
+    // genuinely coalesced), and *every* session in it is poisoned
+    for (k, v) in victims.into_iter().enumerate() {
+        match v.finish() {
+            Err(e) => {
+                poisoned[k] = true;
+                let msg = format!("{e:#}");
+                assert!(
+                    msg.contains("injected batched engine failure"),
+                    "victim {k}: wrong error: {msg}"
+                );
+                assert!(msg.contains("batched"), "victim {k}: batch context lost: {msg}");
+            }
+            Ok(out) => {
+                // a session whose frame was never coalesced may finish
+                // clean — but then it must not have lost samples
+                assert_eq!(out.stats.samples_out, out.stats.samples_in, "victim {k}");
+            }
+        }
+    }
+    let n_poisoned = poisoned.iter().filter(|&&p| p).count();
+    assert!(
+        n_poisoned >= 2,
+        "a failed batch must poison every coalesced session (got {n_poisoned})"
+    );
+    // the worker survives the batched failure: the slow session keeps
+    // working and a fresh bit-exact session serves correctly
+    slow.finish().unwrap();
     let input = signal(200, 6);
     let mut sess =
         service.open_session_with(SessionConfig::default(), || Ok(fixed_engine(6))).unwrap();

@@ -29,40 +29,59 @@ fn fixed_engine(seed: u64) -> Box<dyn DpdEngine> {
     Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw, ActKind::Hard))))
 }
 
-fn stress() -> Result<()> {
+fn stress(batch: usize) -> Result<()> {
+    // queue_depth 1 keeps the original maximal-contention shape (the
+    // service itself sizes worker channels up to `batch` for gathering)
     let service = DpdService::start(ServiceConfig {
         workers: 2,
         queue_depth: 1,
         frame_len: 32,
+        batch,
         ..Default::default()
     })?;
     std::thread::scope(|scope| -> Result<()> {
         let svc = &service;
         // one long-lived session streaming for the whole run (state
-        // persists across all 100 bursts)
+        // persists across all 100 bursts); its full output is checked
+        // against the direct bit-exact oracle at the end, so batched
+        // scheduling under churn cannot silently corrupt a stream
         let long = scope.spawn(move || -> Result<()> {
             let mut sess =
                 svc.open_session_with(SessionConfig::default(), || Ok(fixed_engine(1)))?;
             let burst = signal(257, 9);
-            let (mut n_in, mut n_out) = (0usize, 0usize);
+            let mut n_in = 0usize;
+            let mut got: Vec<[f64; 2]> = Vec::new();
             for _ in 0..100 {
                 sess.push(&burst)?;
                 n_in += burst.len();
-                n_out += sess.drain()?.len();
+                got.extend(sess.drain()?);
             }
-            n_out += sess.finish()?.iq.len();
-            anyhow::ensure!(n_out == n_in, "long-lived session lost samples: {n_out}/{n_in}");
+            got.extend(sess.finish()?.iq);
+            anyhow::ensure!(
+                got.len() == n_in,
+                "long-lived session lost samples: {}/{n_in}",
+                got.len()
+            );
+            let whole: Vec<[f64; 2]> =
+                std::iter::repeat(burst).take(100).flatten().collect();
+            let mut oracle = QGruDpd::new(QGruWeights::synthetic(1, QSpec::Q12), ActKind::Hard);
+            anyhow::ensure!(
+                got == dpd_ne::dpd::Dpd::run(&mut oracle, &whole),
+                "long-lived session diverged from the bit-exact oracle"
+            );
             Ok(())
         });
-        // churn: 4 threads x 10 short-lived sessions each, all
-        // contending for the same 2 workers
+        // churn: 4 threads x 10 short-lived sessions each, all sharing
+        // one weight class (seed 100) so the coalescing scheduler (when
+        // batch > 1) genuinely groups cross-thread sessions while they
+        // contend for the same 2 workers
         let churners: Vec<_> = (0..4u64)
             .map(|t| {
                 scope.spawn(move || -> Result<()> {
                     for k in 0..10u64 {
                         let mut sess = svc
                             .open_session_with(SessionConfig::default(), move || {
-                                Ok(fixed_engine(100 + t))
+                                Ok(fixed_engine(100))
                             })?;
                         let sig = signal(500 + 37 * k as usize, t * 100 + k);
                         for chunk in sig.chunks(123) {
@@ -89,16 +108,29 @@ fn stress() -> Result<()> {
     service.shutdown()
 }
 
-#[test]
-fn session_stress_no_deadlock_within_timeout() {
+fn run_with_watchdog(batch: usize) {
     let (done_tx, done_rx) = std::sync::mpsc::channel();
     let runner = std::thread::spawn(move || {
-        let r = stress();
+        let r = stress(batch);
         done_tx.send(()).ok();
         r
     });
     match done_rx.recv_timeout(WATCHDOG) {
         Ok(()) => runner.join().expect("stress runner panicked").unwrap(),
-        Err(_) => panic!("session stress did not complete within {WATCHDOG:?} — pool deadlock?"),
+        Err(_) => panic!(
+            "session stress (batch {batch}) did not complete within {WATCHDOG:?} — pool deadlock?"
+        ),
     }
+}
+
+#[test]
+fn session_stress_no_deadlock_within_timeout() {
+    run_with_watchdog(1);
+}
+
+#[test]
+fn session_stress_batched_no_deadlock_within_timeout() {
+    // same churn, coalescing scheduler on: the gather/group/flush path
+    // must preserve the pool's deadlock-freedom invariant too
+    run_with_watchdog(4);
 }
