@@ -70,6 +70,10 @@ fn main() -> anyhow::Result<()> {
     let mut engines = vec![
         EngineKind::NativeF64,
         EngineKind::Fixed,
+        // θ=0 must land in the same row as Fixed (bit-identical);
+        // the golden θ=32 trades ≤0.5 dB for ~2.6x fewer MACs
+        EngineKind::DeltaFixed { theta: 0 },
+        EngineKind::DeltaFixed { theta: 32 },
         EngineKind::CycleSim,
         EngineKind::Interp,
     ];

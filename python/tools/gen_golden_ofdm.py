@@ -6,7 +6,11 @@ The file carries a small deterministic CP-OFDM 64-QAM waveform plus the
 expected end-to-end metrics (ACPR / EVM through the Rapp+memory PA,
 DPD off and DPD on via the bit-exact Q2.10 GRU on synthetic weights)
 and the first 64 predistorted output *codes* (asserted bit-exactly in
-Rust, so any change to the integer datapath fails with exact diffs).
+Rust, so any change to the integer datapath fails with exact diffs),
+plus a **delta trace**: the DeltaQGruDpd twin run at the golden
+threshold DELTA_THETA, pinning its head codes, column-update counts,
+MAC reduction and ACPR/EVM (the twin is validated bit-exact against
+the dense port at theta=0 before the trace is emitted).
 
 Everything metric-relevant is recomputed here from the *serialized*
 waveform text (round-tripped through JSON), with faithful ports of the
@@ -45,6 +49,11 @@ QMIN = -(1 << (BITS - 1))
 QMAX = (1 << (BITS - 1)) - 1
 WELCH_NFFT = 2048
 TOL_DB = 0.05
+# Golden delta threshold (codes) for the DeltaQGruDpd trace: chosen so
+# the measured MAC reduction clears 2x with ACPR/EVM within 0.5 dB of
+# the dense reference (the conformance suite's acceptance bar; the
+# sweep at authoring time gave 2.58x at 0.03/0.02 dB drift).
+DELTA_THETA = 32
 
 
 # --- rust/src/util/rng.rs twin (integer-exact) ---------------------------
@@ -179,6 +188,59 @@ def run_qgru(w: dict, codes: list) -> list:
     return out
 
 
+def run_qgru_delta(w: dict, codes: list, theta: int):
+    """Delta-GRU twin of rust/src/dpd/qgru.rs::DeltaQGruDpd, integer
+    exact: carried raw accumulators, per-column |delta| > theta test,
+    dense gate/FC chain. Returns (out_codes, in_updates, hid_updates).
+    theta=0 must equal run_qgru bit for bit (asserted in main)."""
+    hd = w["hidden"]
+    rows = 3 * hd
+    h = [0] * hd
+    x_prev = [0, 0, 0, 0]
+    h_prev = [0] * hd
+    acc_ih = [w["b_ih"][r] << FRAC for r in range(rows)]
+    acc_hh = [w["b_hh"][r] << FRAC for r in range(rows)]
+    in_updates = hid_updates = 0
+    out = []
+    for ic, qc in codes:
+        p = requant(ic * ic + qc * qc, FRAC - 2)
+        p2 = requant(p * p, FRAC)
+        x = [ic, qc, p, p2]
+        for c in range(4):
+            d = x[c] - x_prev[c]
+            if abs(d) > theta:
+                for r in range(rows):
+                    acc_ih[r] += w["w_ih"][r * 4 + c] * d
+                x_prev[c] = x[c]
+                in_updates += 1
+        for c in range(hd):
+            d = h[c] - h_prev[c]
+            if abs(d) > theta:
+                for r in range(rows):
+                    acc_hh[r] += w["w_hh"][r * hd + c] * d
+                h_prev[c] = h[c]
+                hid_updates += 1
+        gi = [requant(acc_ih[r], FRAC) for r in range(rows)]
+        gh = [requant(acc_hh[r], FRAC) for r in range(rows)]
+        for k in range(hd):
+            r_ = hard_sigmoid(sat(gi[k] + gh[k]))
+            z = hard_sigmoid(sat(gi[hd + k] + gh[hd + k]))
+            rh = requant(r_ * gh[2 * hd + k], FRAC)
+            n = hard_tanh(sat(gi[2 * hd + k] + rh))
+            zn = rshift_round((ONE - z) * n, FRAC)
+            zh = rshift_round(z * h[k], FRAC)
+            h[k] = sat(zn + zh)
+        y = []
+        for o in range(2):
+            fc = requant(
+                sum(w["w_fc"][o * hd + k] * h[k] for k in range(hd)) + (w["b_fc"][o] << FRAC),
+                FRAC,
+            )
+            y.append(sat(fc + x[o]))
+        out.append((y[0], y[1]))
+    return out, in_updates, hid_updates
+
+
 # --- rust/src/pa/rapp.rs ganlike twin (f64) ------------------------------
 
 
@@ -300,6 +362,32 @@ def main() -> None:
         "evm_on_db": evm_db_nmse(y_on, x, g_target),
         "tol_db": TOL_DB,
     }
+
+    # delta trace: the DeltaQGruDpd twin at theta=0 must be bit-exact
+    # to the dense run (the contract), then the pinned theta>0 trace
+    # records codes, update counts and metrics for the Rust regression
+    d0_codes, _, _ = run_qgru_delta(w, codes, 0)
+    assert d0_codes == out_codes, "delta twin at theta=0 diverged from the dense port"
+    d_codes, d_in, d_hid = run_qgru_delta(w, codes, DELTA_THETA)
+    zd = np.array([complex(a / SCALE, b / SCALE) for a, b in d_codes])
+    y_delta = pa_run(zd)
+    hd = w["hidden"]
+    dense_macs = 3 * hd * (4 + hd) + 2 * hd
+    delta_macs = (d_in + d_hid) / len(codes) * 3 * hd + 2 * hd
+    delta = {
+        "theta": DELTA_THETA,
+        "in_updates": d_in,
+        "hid_updates": d_hid,
+        "in_cols": 4 * len(codes),
+        "hid_cols": hd * len(codes),
+        "mac_reduction": dense_macs / delta_macs,
+        "acpr_on_dbc": acpr_dbc(y_delta, WELCH_NFFT),
+        "evm_on_db": evm_db_nmse(y_delta, x, g_target),
+        "head_codes": [list(c) for c in d_codes[:64]],
+    }
+    assert delta["mac_reduction"] >= 2.0, "golden theta lost the 2x MAC bar"
+    assert abs(delta["acpr_on_dbc"] - expected["acpr_on_dbc"]) <= 0.5
+    assert abs(delta["evm_on_db"] - expected["evm_on_db"]) <= 0.5
     doc_head = json.dumps(
         {
             "meta": {
@@ -319,6 +407,7 @@ def main() -> None:
                 for k in ["w_ih", "b_ih", "w_hh", "b_hh", "w_fc", "b_fc"]
             },
             "dpd_head_codes": [list(c) for c in out_codes[:64]],
+            "delta": delta,
         }
     )
     text = doc_head[:-1] + ',"iq":' + iq_text + "}"

@@ -3,9 +3,11 @@
 //! float GRU step, cycle-sim step, GMP basis, the session path
 //! through a persistent `DpdService` pool (hermetic: synthetic
 //! weights, so it runs — and is tracked by CI — without artifacts),
-//! the one-shot coordinator wrapper, and the frame-engine path
-//! through the unified `DpdEngine` backend (interpreted always;
-//! HLO/PJRT under `--features xla`).
+//! the delta-GRU fast path on the golden OFDM waveform (hermetic:
+//! dense vs delta throughput, measured MAC reduction and column-skip
+//! ratio at the golden θ), the one-shot coordinator wrapper, and the
+//! frame-engine path through the unified `DpdEngine` backend
+//! (interpreted always; HLO/PJRT under `--features xla`).
 //!
 //! Run: `cargo bench --bench micro`
 
@@ -131,6 +133,65 @@ fn main() -> anyhow::Result<()> {
             let _ = sess.finish()?;
         }
         service.shutdown()?;
+    }
+
+    // delta-GRU fast path on the checked-in golden OFDM waveform
+    // (hermetic: synthetic weights + tests/data): dense vs delta
+    // throughput at the golden θ, plus the measured MAC reduction and
+    // column-skip ratio — CI tracks delta_msps and delta_mac_reduction
+    // in BENCH_micro.json so the delta win stays on the record (the
+    // conformance suite enforces the >= 2x bar; this reports it)
+    {
+        use dpd_ne::accel::delta::DeltaCostModel;
+        use dpd_ne::accel::ops::ModelDims;
+        use dpd_ne::dpd::qgru::DeltaQGruDpd;
+        use dpd_ne::util::json::Json;
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("tests/data/golden_ofdm_q12.json");
+        let j = Json::parse_file(&path)?;
+        let seed =
+            j.get("meta")?.get("weights_seed")?.as_usize()? as u64;
+        let theta = j.get("delta")?.get("theta")?.as_usize()? as u32;
+        let iq: Vec<[f64; 2]> = j
+            .get("iq")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let v = p.as_f64_vec().unwrap();
+                [v[0], v[1]]
+            })
+            .collect();
+        let spec = QSpec::Q12;
+        let codes = spec.quantize_iq(&iq);
+        let qw = QGruWeights::synthetic(seed, spec);
+
+        let mut dense = QGruDpd::new(qw.clone(), ActKind::Hard);
+        let r = time_it("qgru dense, golden ofdm waveform", budget, || {
+            std::hint::black_box(dense.run_codes(&codes));
+        });
+        println!("{}  -> {:.2} MSps", r.summary(), r.per_second(codes.len() as f64) / 1e6);
+        report.metric("dense_golden_msps", r.per_second(codes.len() as f64) / 1e6);
+        report.push(r);
+
+        let mut delta = DeltaQGruDpd::new(qw, ActKind::Hard, theta);
+        let r = time_it("qgru delta, golden ofdm waveform", budget, || {
+            std::hint::black_box(delta.run_codes(&codes));
+        });
+        let msps = r.per_second(codes.len() as f64) / 1e6;
+        let stats = delta.stats();
+        let model = DeltaCostModel::new(ModelDims::default());
+        let reduction = model.mac_reduction(&stats);
+        println!(
+            "{}  -> {:.2} MSps  (θ={theta}: {:.2}x MAC reduction, {:.1}% columns fired)",
+            r.summary(),
+            msps,
+            reduction,
+            100.0 * stats.update_ratio()
+        );
+        report.metric("delta_msps", msps);
+        report.metric("delta_mac_reduction", reduction);
+        report.metric("delta_update_ratio", stats.update_ratio());
+        report.push(r);
     }
 
     // engines (need artifacts)

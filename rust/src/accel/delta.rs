@@ -1,0 +1,170 @@
+//! Cost model of the delta execution path — what the measured column
+//! sparsity of a [`DeltaStats`] stream is worth in MACs and energy on
+//! DeltaDPD-style hardware (arXiv:2505.06250).
+//!
+//! The functional delta engines (`dpd::qgru::DeltaQGruDpd`,
+//! `dpd::gru::DeltaGruDpd`) *count* which matvec columns actually
+//! fired; this module *prices* those counts against the dense
+//! datapath under one documented convention:
+//!
+//! * a skipped column saves its 3H MACs **and** its 3H weight-buffer
+//!   reads (delta hardware fetches a column only to fold a delta in);
+//! * gate-bias reads disappear entirely (the carried accumulators are
+//!   persistent registers, preloaded once at reset);
+//! * the FC stage (2 x H) stays dense — MACs, weight and hidden reads;
+//! * the delta tests themselves cost F + H subtract-compares per
+//!   sample (counted as ALU ops) and re-read the live vectors;
+//! * the pipeline II is unchanged — the schedule still closes the
+//!   recurrence in 8 cycles; delta skipping gates datapath *activity*
+//!   (clock-gated PE columns), so it shows up in energy and in
+//!   effective MAC throughput, not in latency.
+//!
+//! `benches/micro.rs` reports `mac_reduction` from this model next to
+//! `delta_msps`, and the conformance suite holds the golden-waveform
+//! reduction on the record.
+
+use super::engine::EngineStats;
+use super::fsm;
+use super::ops::{macs_per_sample, ModelDims};
+use super::power::EnergyModel;
+use crate::dpd::qgru::ActKind;
+use crate::dpd::DeltaStats;
+
+/// Prices measured delta activity against the dense datapath.
+#[derive(Clone, Copy, Debug)]
+pub struct DeltaCostModel {
+    pub dims: ModelDims,
+}
+
+impl DeltaCostModel {
+    pub fn new(dims: ModelDims) -> DeltaCostModel {
+        DeltaCostModel { dims }
+    }
+
+    /// Dense MACs per sample (the reduction denominator).
+    pub fn dense_macs_per_sample(&self) -> f64 {
+        macs_per_sample(self.dims) as f64
+    }
+
+    /// Measured MACs per sample on the delta path: only fired columns
+    /// pay their 3H, the FC stays dense.
+    pub fn delta_macs_per_sample(&self, s: &DeltaStats) -> f64 {
+        let h = self.dims.hidden as f64;
+        let steps = s.steps.max(1) as f64;
+        (s.in_updates + s.hid_updates) as f64 / steps * 3.0 * h + 2.0 * h
+    }
+
+    /// Measured MAC-reduction factor (dense / delta; 1.0 = no win).
+    pub fn mac_reduction(&self, s: &DeltaStats) -> f64 {
+        self.dense_macs_per_sample() / self.delta_macs_per_sample(s)
+    }
+
+    /// Project the delta stream's per-unit activity into the shape the
+    /// 22FDX energy model consumes, under the module's conventions.
+    pub fn projected_stats(&self, s: &DeltaStats) -> EngineStats {
+        let h = self.dims.hidden as u64;
+        let f = self.dims.features as u64;
+        let n = s.steps;
+        let fired = s.in_updates + s.hid_updates;
+        EngineStats {
+            samples: n,
+            cycles: n * fsm::II_CYCLES as u64,
+            macs: fired * 3 * h + n * 2 * h,
+            // dense gate/update ALU work (8 per hidden unit + 1 per
+            // output + 4 preproc) plus the F + H delta compares
+            alu_ops: n * (8 * h + 2 + 4) + n * (f + h),
+            act_ops: n * 3 * h,
+            // fired gate columns + dense FC weights + FC biases; gate
+            // biases live in the persistent accumulators
+            weight_reads: fired * 3 * h + n * (2 * h + 2),
+            // delta compares re-read the live vectors (H) + z.h (H) +
+            // FC (2H) reads of the committed hidden state
+            hidden_reads: n * 4 * h,
+            // committed hidden writes + propagated-column cache writes
+            hidden_writes: n * h + s.hid_updates,
+        }
+    }
+
+    /// Nominal-point (2 GHz, 0.9 V, 250 MSps) power of the delta
+    /// stream under the energy model.
+    pub fn projected_power_mw(&self, s: &DeltaStats, em: &EnergyModel, act: &ActKind) -> f64 {
+        em.nominal_power_mw(&self.projected_stats(s), act)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic activity record at a given update ratio.
+    fn stats_at(steps: u64, in_ratio: f64, hid_ratio: f64) -> DeltaStats {
+        let d = ModelDims::default();
+        DeltaStats {
+            steps,
+            in_updates: (steps as f64 * d.features as f64 * in_ratio) as u64,
+            in_cols: steps * d.features as u64,
+            hid_updates: (steps as f64 * d.hidden as f64 * hid_ratio) as u64,
+            hid_cols: steps * d.hidden as u64,
+        }
+    }
+
+    #[test]
+    fn dense_activity_reproduces_the_dense_cost() {
+        let m = DeltaCostModel::new(ModelDims::default());
+        let s = stats_at(100, 1.0, 1.0);
+        // every column fires -> no reduction, MACs equal the dense 440
+        assert_eq!(m.delta_macs_per_sample(&s), 440.0);
+        assert!((m.mac_reduction(&s) - 1.0).abs() < 1e-12);
+        let p = m.projected_stats(&s);
+        assert_eq!(p.macs, 100 * 440);
+        assert_eq!(p.act_ops, 100 * 30);
+        assert_eq!(p.samples, 100);
+        assert_eq!(p.cycles_per_sample(), fsm::II_CYCLES as f64);
+    }
+
+    #[test]
+    fn reduction_scales_with_sparsity() {
+        let m = DeltaCostModel::new(ModelDims::default());
+        // half the columns fire: (7 cols * 30) + 20 = 230 -> 1.91x
+        let s = stats_at(1000, 0.5, 0.5);
+        assert!((m.delta_macs_per_sample(&s) - 230.0).abs() < 1e-9);
+        assert!((m.mac_reduction(&s) - 440.0 / 230.0).abs() < 1e-9);
+        // full skip leaves only the dense FC floor
+        let s0 = stats_at(1000, 0.0, 0.0);
+        assert_eq!(m.delta_macs_per_sample(&s0), 20.0);
+        assert!(m.mac_reduction(&s0) > 20.0);
+    }
+
+    #[test]
+    fn projected_power_drops_monotonically_with_sparsity() {
+        let m = DeltaCostModel::new(ModelDims::default());
+        let em = EnergyModel::default();
+        let dense = m.projected_power_mw(&stats_at(500, 1.0, 1.0), &em, &ActKind::Hard);
+        let half = m.projected_power_mw(&stats_at(500, 0.5, 0.5), &em, &ActKind::Hard);
+        let sparse = m.projected_power_mw(&stats_at(500, 0.1, 0.1), &em, &ActKind::Hard);
+        assert!(dense > half && half > sparse, "{dense} / {half} / {sparse}");
+        // the clock/overhead floor remains: even full sparsity cannot
+        // reach zero
+        let floor = m.projected_power_mw(&stats_at(500, 0.0, 0.0), &em, &ActKind::Hard);
+        assert!(floor > 50.0, "overhead floor vanished: {floor}");
+    }
+
+    #[test]
+    fn measured_engine_activity_feeds_the_model() {
+        // End to end: run the real delta engine, price its counters.
+        use crate::dpd::qgru::DeltaQGruDpd;
+        use crate::dpd::weights::QGruWeights;
+        use crate::fixed::QSpec;
+        let w = QGruWeights::synthetic(7, QSpec::Q12);
+        let mut dpd = DeltaQGruDpd::new(w, ActKind::Hard, 16);
+        // constant stream: heavy skipping after warmup
+        let x = vec![[500, -400]; 200];
+        dpd.run_codes(&x);
+        let m = DeltaCostModel::new(ModelDims::default());
+        let red = m.mac_reduction(&dpd.stats());
+        assert!(red > 1.5, "DC stream should cut MACs substantially, got {red:.2}x");
+        let p = m.projected_stats(&dpd.stats());
+        assert_eq!(p.samples, 200);
+        assert!(p.macs < 200 * 440);
+    }
+}

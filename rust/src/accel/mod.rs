@@ -8,6 +8,9 @@
 //!   input-to-output pipeline latency (7.5 ns);
 //! * [`engine`] — the cycle-accurate simulator (bit-exact with
 //!   `dpd::qgru`, plus cycle/activity/energy accounting);
+//! * [`delta`] — the delta execution path's cost model: prices the
+//!   measured column sparsity of the `dpd` delta engines into MAC
+//!   reduction and projected energy (DeltaDPD-style clock gating);
 //! * [`power`] — the 22FDX energy model (Fig. 5's 195 mW);
 //! * [`area`] — the area model (Fig. 5's 0.2 mm^2);
 //! * [`fpga`] — the Zynq-7020 resource estimator (Table I, Fig. 4);
@@ -17,6 +20,7 @@
 pub mod act_unit;
 pub mod area;
 pub mod buffers;
+pub mod delta;
 pub mod engine;
 pub mod fpga;
 pub mod fsm;
@@ -26,5 +30,6 @@ pub mod power;
 pub mod preproc;
 pub mod spec;
 
+pub use delta::DeltaCostModel;
 pub use engine::{CycleAccurateEngine, EngineStats};
 pub use spec::AsicSpec;

@@ -74,6 +74,13 @@ pub fn ops_per_sample(d: ModelDims) -> OpCounts {
     c
 }
 
+/// Per-sample MAC count of the dense datapath (gate matvecs + FC,
+/// bias preloads free) — the denominator of the delta engine's
+/// measured MAC-reduction (`accel::delta`). Paper model: 440.
+pub fn macs_per_sample(d: ModelDims) -> usize {
+    3 * d.hidden * (d.features + d.hidden) + 2 * d.hidden
+}
+
 /// The paper's reported OP/S figure for the same model.
 pub const PAPER_OPS_PER_SAMPLE: usize = 1026;
 
@@ -95,6 +102,12 @@ mod tests {
         assert_eq!(c.adds, 1 + 120 + 300 + 30 + 20 + 22);
         assert_eq!(c.activations, 30);
         assert_eq!(c.total(), 996);
+    }
+
+    #[test]
+    fn paper_model_is_440_macs() {
+        // 120 (input matvec) + 300 (hidden matvec) + 20 (FC)
+        assert_eq!(macs_per_sample(ModelDims::default()), 440);
     }
 
     #[test]

@@ -44,11 +44,15 @@
 //! sessions whose engines share a batch class (same kind + identical
 //! weights, attested by a content fingerprint) into a single
 //! [`DpdEngine::run_batch`] call. Per-session GRU state rides along as
-//! a [`DpdState`] lane snapshot, per-session command order is
-//! preserved (a second frame for a session already in the group, or
-//! any control command, flushes the group first), and a failed batch
-//! fails *every* session in it with the same sticky error. See
-//! DESIGN.md §Coalescing batch scheduler.
+//! a [`DpdState`] lane snapshot — for delta sessions
+//! (`EngineKind::DeltaFixed`) that snapshot carries the *full* delta
+//! state (propagated vectors + raw accumulators), and the threshold θ
+//! is part of the batch class, so sessions at different θ never
+//! coalesce. Per-session command order is preserved (a second frame
+//! for a session already in the group, or any control command,
+//! flushes the group first), and a failed batch fails *every* session
+//! in it with the same sticky error. See DESIGN.md §Coalescing batch
+//! scheduler.
 
 use std::collections::HashMap;
 use std::path::PathBuf;

@@ -6,7 +6,8 @@
 use anyhow::{bail, Result};
 
 use super::weights::GruWeights;
-use super::{process_lanes_sequential, Dpd, DpdLane, DpdState};
+use super::{process_lanes_sequential, DeltaF64Snapshot, DeltaStats, Dpd, DpdLane, DpdState};
+use crate::util::fnv1a_words;
 
 /// Hardsigmoid, Eq. (7).
 #[inline]
@@ -18,6 +19,28 @@ pub fn hardsigmoid(x: f64) -> f64 {
 #[inline]
 pub fn hardtanh(x: f64) -> f64 {
     x.clamp(-1.0, 1.0)
+}
+
+/// Column-major transposes of the gate matrices (f64 twin of
+/// `qgru::transpose_gates`): wt[(c, r)] = w[r][c], 3H-contiguous per
+/// column — shared by the dense and delta engines so their layouts
+/// cannot drift apart (the θ=0 bit-exactness contract depends on both
+/// reading identical column vectors).
+fn transpose_gates_f64(w: &GruWeights) -> (Vec<f64>, Vec<f64>) {
+    let rows = 3 * w.hidden;
+    let mut wt_ih = vec![0.0; w.features * rows];
+    for r in 0..rows {
+        for c in 0..w.features {
+            wt_ih[c * rows + r] = w.w_ih[r * w.features + c];
+        }
+    }
+    let mut wt_hh = vec![0.0; w.hidden * rows];
+    for r in 0..rows {
+        for c in 0..w.hidden {
+            wt_hh[c * rows + r] = w.w_hh[r * w.hidden + c];
+        }
+    }
+    (wt_ih, wt_hh)
 }
 
 /// Streaming float GRU DPD engine.
@@ -37,19 +60,7 @@ impl GruDpd {
     pub fn new(w: GruWeights) -> GruDpd {
         let h = vec![0.0; w.hidden];
         let g = vec![0.0; 3 * w.hidden];
-        let rows = 3 * w.hidden;
-        let mut wt_ih = vec![0.0; w.features * rows];
-        for r in 0..rows {
-            for c in 0..w.features {
-                wt_ih[c * rows + r] = w.w_ih[r * w.features + c];
-            }
-        }
-        let mut wt_hh = vec![0.0; w.hidden * rows];
-        for r in 0..rows {
-            for c in 0..w.hidden {
-                wt_hh[c * rows + r] = w.w_hh[r * w.hidden + c];
-            }
-        }
+        let (wt_ih, wt_hh) = transpose_gates_f64(&w);
         GruDpd { w, h, gi: g.clone(), gh: g, wt_ih, wt_hh }
     }
 
@@ -258,6 +269,185 @@ impl Dpd for GruDpd {
     }
 }
 
+/// f64 twin of the delta execution path (`qgru::DeltaQGruDpd`) — the
+/// float reference for the delta semantics.
+///
+/// Because float addition is not associative, a carried-sum design
+/// could not be bit-identical to [`GruDpd`] at θ=0. This twin
+/// therefore caches per-column *contributions* instead: for every
+/// matvec column it keeps the product vector `w[:, c] * v_prev[c]`,
+/// refreshed only when `|v[c] - v_prev[c]| > θ`, and re-sums the
+/// cached columns in the dense engine's exact accumulation order each
+/// step. At θ=0 every changed column refreshes, so the summands and
+/// their order equal the dense engine's — bit-exact by construction
+/// (the property suite below pins it). A skipped column saves the 3H
+/// multiplies (the adds remain), which is the float model of the
+/// integer engine's skipped MACs.
+pub struct DeltaGruDpd {
+    w: GruWeights,
+    /// propagation threshold on the float feature/hidden values
+    theta: f64,
+    st: DeltaF64Snapshot,
+    /// column-major weight copies (as in [`GruDpd`])
+    wt_ih: Vec<f64>,
+    wt_hh: Vec<f64>,
+    gi: Vec<f64>,
+    gh: Vec<f64>,
+    stats: DeltaStats,
+}
+
+impl DeltaGruDpd {
+    pub fn new(w: GruWeights, theta: f64) -> DeltaGruDpd {
+        assert!(theta >= 0.0 && theta.is_finite(), "theta must be finite and >= 0");
+        let (wt_ih, wt_hh) = transpose_gates_f64(&w);
+        let st = Self::fresh_state(&w);
+        let g = vec![0.0; 3 * w.hidden];
+        DeltaGruDpd {
+            w,
+            theta,
+            st,
+            wt_ih,
+            wt_hh,
+            gi: g.clone(),
+            gh: g,
+            stats: DeltaStats::default(),
+        }
+    }
+
+    /// Reset state: h = v_prev = 0, every cached contribution 0.0
+    /// (w * 0.0 for every column — what the dense engine would add).
+    fn fresh_state(w: &GruWeights) -> DeltaF64Snapshot {
+        let rows = 3 * w.hidden;
+        DeltaF64Snapshot {
+            h: vec![0.0; w.hidden],
+            x_prev: vec![0.0; w.features],
+            h_prev: vec![0.0; w.hidden],
+            ct_ih: vec![0.0; w.features * rows],
+            ct_hh: vec![0.0; w.hidden * rows],
+        }
+    }
+
+    pub fn weights(&self) -> &GruWeights {
+        &self.w
+    }
+
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    /// Column-update activity so far.
+    pub fn stats(&self) -> DeltaStats {
+        self.stats
+    }
+}
+
+impl Dpd for DeltaGruDpd {
+    fn process(&mut self, iq: [f64; 2]) -> [f64; 2] {
+        let hd = self.w.hidden;
+        let rows = 3 * hd;
+        let x = GruDpd::features(iq);
+
+        // delta pass: refresh the cached contribution of every column
+        // whose value moved more than θ
+        for (c, &xv) in x.iter().enumerate() {
+            if (xv - self.st.x_prev[c]).abs() > self.theta {
+                let col = &self.wt_ih[c * rows..(c + 1) * rows];
+                for (ct, &wv) in self.st.ct_ih[c * rows..(c + 1) * rows].iter_mut().zip(col) {
+                    *ct = wv * xv;
+                }
+                self.st.x_prev[c] = xv;
+                self.stats.in_updates += 1;
+            }
+        }
+        for c in 0..hd {
+            let hv = self.st.h[c];
+            if (hv - self.st.h_prev[c]).abs() > self.theta {
+                let col = &self.wt_hh[c * rows..(c + 1) * rows];
+                for (ct, &wv) in self.st.ct_hh[c * rows..(c + 1) * rows].iter_mut().zip(col) {
+                    *ct = wv * hv;
+                }
+                self.st.h_prev[c] = hv;
+                self.stats.hid_updates += 1;
+            }
+        }
+        self.stats.steps += 1;
+        self.stats.in_cols += self.w.features as u64;
+        self.stats.hid_cols += hd as u64;
+
+        // re-sum the cached columns in the dense engine's exact
+        // accumulation order (bias first, then column 0..C)
+        self.gi.copy_from_slice(&self.w.b_ih);
+        for c in 0..self.w.features {
+            let col = &self.st.ct_ih[c * rows..(c + 1) * rows];
+            for (a, &ct) in self.gi.iter_mut().zip(col) {
+                *a += ct;
+            }
+        }
+        self.gh.copy_from_slice(&self.w.b_hh);
+        for c in 0..hd {
+            let col = &self.st.ct_hh[c * rows..(c + 1) * rows];
+            for (a, &ct) in self.gh.iter_mut().zip(col) {
+                *a += ct;
+            }
+        }
+
+        // gates + FC: the dense chain, op for op (Eq. 2-6)
+        for k in 0..hd {
+            let r = hardsigmoid(self.gi[k] + self.gh[k]);
+            let z = hardsigmoid(self.gi[hd + k] + self.gh[hd + k]);
+            let n = hardtanh(self.gi[2 * hd + k] + r * self.gh[2 * hd + k]);
+            self.st.h[k] = (1.0 - z) * n + z * self.st.h[k];
+        }
+        let mut y = [self.w.b_fc[0] + iq[0], self.w.b_fc[1] + iq[1]];
+        for k in 0..hd {
+            y[0] += self.w.w_fc[k] * self.st.h[k];
+            y[1] += self.w.w_fc[hd + k] * self.st.h[k];
+        }
+        y
+    }
+
+    fn reset(&mut self) {
+        self.st = Self::fresh_state(&self.w);
+    }
+
+    fn name(&self) -> &'static str {
+        "delta-gru-f64"
+    }
+
+    fn save_state(&self) -> DpdState {
+        DpdState::DeltaF64(self.st.clone())
+    }
+
+    fn load_state(&mut self, state: &DpdState) -> Result<()> {
+        let rows = 3 * self.w.hidden;
+        match state {
+            DpdState::DeltaF64(s)
+                if s.h.len() == self.w.hidden
+                    && s.h_prev.len() == self.w.hidden
+                    && s.x_prev.len() == self.w.features
+                    && s.ct_ih.len() == self.w.features * rows
+                    && s.ct_hh.len() == self.w.hidden * rows =>
+            {
+                self.st = s.clone();
+                Ok(())
+            }
+            other => bail!(
+                "{}: incompatible state snapshot ({}) for hidden={}",
+                self.name(),
+                other.kind(),
+                self.w.hidden
+            ),
+        }
+    }
+
+    fn batch_fingerprint(&self) -> Option<u64> {
+        Some(fnv1a_words(
+            "delta-gru-f64",
+            [self.w.fingerprint(), self.theta.to_bits()],
+        ))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -374,6 +564,100 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn delta_theta_zero_bit_exact_to_dense_f64() {
+        // The contribution-cache design makes the f64 delta twin
+        // bit-identical to the dense engine at θ=0 despite float
+        // non-associativity: same summands, same order.
+        use crate::util::proptest::check;
+        check("delta-gru theta=0 vs dense", 20, |rng| {
+            let w = rand_weights(rng.next_u64());
+            let mut dense = GruDpd::new(w.clone());
+            let mut delta = DeltaGruDpd::new(w, 0.0);
+            dense.reset();
+            delta.reset();
+            for t in 0..150 {
+                let iq = [rng.gauss() * 0.3, rng.gauss() * 0.3];
+                let a = dense.process(iq);
+                let b = delta.process(iq);
+                if a != b {
+                    return Err(format!("outputs diverged at sample {t}: {a:?} vs {b:?}"));
+                }
+            }
+            if dense.h != delta.st.h {
+                return Err("hidden states diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delta_f64_theta_bounds_staleness_and_tracks_dense() {
+        // θ>0: propagated values stay within θ of the live ones, and
+        // on a smooth stream the output tracks the dense engine within
+        // a small envelope while skipping a meaningful share of
+        // columns (deterministic seed — not flaky).
+        let w = rand_weights(17);
+        let theta = 0.005;
+        let mut dense = GruDpd::new(w.clone());
+        let mut delta = DeltaGruDpd::new(w, theta);
+        let mut rng = Rng::new(18);
+        // smooth random walk, small steps
+        let mut cur = [0.0f64, 0.0];
+        let (mut err, mut refp) = (0.0, 0.0);
+        for _ in 0..400 {
+            cur[0] = (cur[0] + rng.gauss() * 0.01).clamp(-0.6, 0.6);
+            cur[1] = (cur[1] + rng.gauss() * 0.01).clamp(-0.6, 0.6);
+            let a = dense.process(cur);
+            let b = delta.process(cur);
+            err += (a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2);
+            refp += a[0] * a[0] + a[1] * a[1];
+            let x = GruDpd::features(cur);
+            for (c, &xp) in delta.st.x_prev.iter().enumerate() {
+                assert!((x[c] - xp).abs() <= theta, "x_prev[{c}] staler than θ");
+            }
+        }
+        let nmse_db = 10.0 * (err / refp).log10();
+        assert!(nmse_db < -20.0, "delta drift too large: {nmse_db:.1} dB");
+        let s = delta.stats();
+        assert!(s.update_ratio() < 0.9, "smooth stream skipped nothing");
+        assert!(s.steps == 400 && s.in_cols == 1600 && s.hid_cols == 4000);
+    }
+
+    #[test]
+    fn delta_f64_state_snapshot_round_trips() {
+        let mut dpd = DeltaGruDpd::new(rand_weights(23), 0.01);
+        let mut rng = Rng::new(24);
+        for _ in 0..60 {
+            dpd.process([rng.gauss() * 0.25, rng.gauss() * 0.25]);
+        }
+        let snap = dpd.save_state();
+        let probe: Vec<[f64; 2]> =
+            (0..10).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect();
+        let a: Vec<_> = probe.iter().map(|&s| dpd.process(s)).collect();
+        dpd.load_state(&snap).unwrap();
+        let b: Vec<_> = probe.iter().map(|&s| dpd.process(s)).collect();
+        assert_eq!(a, b);
+        // plain F64 hidden snapshots are rejected: restoring h without
+        // the contribution caches would desync the engine
+        assert!(dpd.load_state(&crate::dpd::DpdState::F64(vec![0.0; 10])).is_err());
+        assert!(dpd.load_state(&crate::dpd::DpdState::Stateless).is_err());
+    }
+
+    #[test]
+    fn delta_f64_fingerprint_separates_theta_and_weights() {
+        let w = rand_weights(29);
+        let a = DeltaGruDpd::new(w.clone(), 0.0);
+        let b = DeltaGruDpd::new(w.clone(), 0.0);
+        let c = DeltaGruDpd::new(w.clone(), 0.01);
+        let dense = GruDpd::new(w);
+        let other = DeltaGruDpd::new(rand_weights(30), 0.0);
+        assert_eq!(a.batch_fingerprint(), b.batch_fingerprint());
+        assert_ne!(a.batch_fingerprint(), c.batch_fingerprint());
+        assert_ne!(a.batch_fingerprint(), other.batch_fingerprint());
+        assert_ne!(a.batch_fingerprint(), dense.batch_fingerprint());
     }
 
     #[test]

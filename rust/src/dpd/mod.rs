@@ -8,7 +8,8 @@
 //! * [`qgru`] — the bit-exact Q2.f fixed-point GRU, mirroring the
 //!   canonical integer datapath (`kernels/ref.py::int_step`)
 //!   instruction for instruction — this is the functional model of
-//!   the silicon;
+//!   the silicon; plus its delta-sparsity twin `DeltaQGruDpd`
+//!   (DeltaDPD-style column skipping, bit-exact to dense at θ=0);
 //! * [`weights`] — loaders for the artifact weight JSONs.
 //!
 //! All engines implement the [`Dpd`] trait: a causal, streaming
@@ -22,8 +23,8 @@ pub mod weights;
 use anyhow::{bail, Result};
 
 pub use gmp::GmpDpd;
-pub use gru::GruDpd;
-pub use qgru::QGruDpd;
+pub use gru::{DeltaGruDpd, GruDpd};
+pub use qgru::{DeltaQGruDpd, QGruDpd};
 pub use weights::GruWeights;
 
 /// Recurrent-state snapshot of a streaming predistorter — one stream's
@@ -38,6 +39,11 @@ pub enum DpdState {
     I32(Vec<i32>),
     /// float hidden state (`GruDpd`)
     F64(Vec<f64>),
+    /// delta-engine snapshot: hidden state plus the delta caches
+    /// (`qgru::DeltaQGruDpd`)
+    DeltaI32(DeltaSnapshot),
+    /// f64 delta-engine snapshot (`gru::DeltaGruDpd`)
+    DeltaF64(DeltaF64Snapshot),
 }
 
 impl DpdState {
@@ -47,7 +53,91 @@ impl DpdState {
             DpdState::Stateless => "stateless",
             DpdState::I32(_) => "i32",
             DpdState::F64(_) => "f64",
+            DpdState::DeltaI32(_) => "delta-i32",
+            DpdState::DeltaF64(_) => "delta-f64",
         }
+    }
+}
+
+/// The full recurrent state of the fixed-point delta engine: beyond
+/// the architectural hidden state `h`, a delta stream also carries the
+/// last *propagated* input/hidden vectors and the raw (pre-requantize)
+/// matvec accumulators they are folded into. All five pieces must
+/// travel together — restoring `h` without its caches would desync
+/// the accumulators from the propagated vectors and break the θ=0
+/// bit-exactness contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeltaSnapshot {
+    /// architectural GRU hidden state h_{t-1} (len H)
+    pub h: Vec<i32>,
+    /// last propagated input feature codes (len F)
+    pub x_prev: Vec<i32>,
+    /// last propagated hidden codes (len H)
+    pub h_prev: Vec<i32>,
+    /// running raw input accumulators: b_ih << f + W_ih · x_prev (len 3H)
+    pub acc_ih: Vec<i64>,
+    /// running raw hidden accumulators: b_hh << f + W_hh · h_prev (len 3H)
+    pub acc_hh: Vec<i64>,
+}
+
+/// f64 twin of [`DeltaSnapshot`]: the float delta engine caches
+/// per-column *contributions* (w · x_prev products) instead of running
+/// sums, so its θ=0 output is bit-identical to the dense f64 engine
+/// despite float non-associativity (see `gru::DeltaGruDpd`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeltaF64Snapshot {
+    pub h: Vec<f64>,
+    pub x_prev: Vec<f64>,
+    pub h_prev: Vec<f64>,
+    /// cached column products w_ih[:, c] * x_prev[c], column-major (F x 3H)
+    pub ct_ih: Vec<f64>,
+    /// cached column products w_hh[:, c] * h_prev[c], column-major (H x 3H)
+    pub ct_hh: Vec<f64>,
+}
+
+/// Column-update activity of a delta engine — the measured sparsity
+/// the accel cost model (`accel::delta`) turns into MAC/energy
+/// savings. Counters accumulate across the engine's whole life (like
+/// the cycle simulator's activity counters, they track total unit
+/// work, not stream identity) and survive `reset`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeltaStats {
+    /// samples processed
+    pub steps: u64,
+    /// input feature columns whose delta exceeded θ (propagated)
+    pub in_updates: u64,
+    /// input feature column opportunities (steps x F)
+    pub in_cols: u64,
+    /// hidden columns whose delta exceeded θ (propagated)
+    pub hid_updates: u64,
+    /// hidden column opportunities (steps x H)
+    pub hid_cols: u64,
+}
+
+impl DeltaStats {
+    /// Fraction of input columns that fired (1.0 = dense).
+    pub fn in_update_ratio(&self) -> f64 {
+        if self.in_cols == 0 {
+            return 1.0;
+        }
+        self.in_updates as f64 / self.in_cols as f64
+    }
+
+    /// Fraction of hidden columns that fired (1.0 = dense).
+    pub fn hid_update_ratio(&self) -> f64 {
+        if self.hid_cols == 0 {
+            return 1.0;
+        }
+        self.hid_updates as f64 / self.hid_cols as f64
+    }
+
+    /// Fraction of all matvec columns that fired.
+    pub fn update_ratio(&self) -> f64 {
+        let cols = self.in_cols + self.hid_cols;
+        if cols == 0 {
+            return 1.0;
+        }
+        (self.in_updates + self.hid_updates) as f64 / cols as f64
     }
 }
 

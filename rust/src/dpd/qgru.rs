@@ -13,8 +13,11 @@
 use anyhow::{bail, Result};
 
 use super::weights::QGruWeights;
-use super::{process_lanes_sequential, Dpd, DpdLane, DpdState};
-use crate::fixed::ops::{requantize, requantize_block_i32, rshift_round, saturate_i64};
+use super::{process_lanes_sequential, DeltaSnapshot, DeltaStats, Dpd, DpdLane, DpdState};
+use crate::fixed::ops::{
+    delta_axpy_i64, exceeds_theta, requantize, requantize_block_i32, requantize_block_i64,
+    rshift_round, saturate_i64,
+};
 use crate::fixed::QSpec;
 use crate::util::fnv1a_words;
 
@@ -79,6 +82,80 @@ impl LutTables {
     }
 }
 
+/// Hardware sigmoid on codes — one definition shared by the dense and
+/// delta engines (Hard: floor-shift PWL; Lut: ROM lookup).
+#[inline(always)]
+fn sigmoid_code(act: &ActKind, spec: QSpec, code: i32) -> i32 {
+    match act {
+        ActKind::Hard => {
+            // clip((x >> 2) + 0.5, 0, 1) — floor shift, like the
+            // hardware shifter
+            let half = 1i32 << (spec.frac() - 1);
+            let one = 1i32 << spec.frac();
+            ((code >> 2) + half).clamp(0, one)
+        }
+        ActKind::Lut(t) => t.sigmoid[t.index(code, spec)],
+    }
+}
+
+/// Hardware tanh on codes (shared, see [`sigmoid_code`]).
+#[inline(always)]
+fn tanh_code(act: &ActKind, spec: QSpec, code: i32) -> i32 {
+    match act {
+        ActKind::Hard => {
+            let one = 1i32 << spec.frac();
+            code.clamp(-one, one)
+        }
+        ActKind::Lut(t) => t.tanh[t.index(code, spec)],
+    }
+}
+
+/// Preprocessor on codes: [i, q, requant(i^2+q^2, f-2), requant(p^2, f)]
+/// — one definition shared by the dense and delta engines.
+#[inline]
+pub fn features_codes(spec: QSpec, iq: [i32; 2]) -> [i32; 4] {
+    let f = spec.frac();
+    let (i, q) = (iq[0] as i64, iq[1] as i64);
+    let p = requantize(i * i + q * q, f - 2, spec);
+    let p2 = requantize(p as i64 * p as i64, f, spec);
+    [iq[0], iq[1], p, p2]
+}
+
+/// Datapath-identity fingerprint of a weight set + activation choice —
+/// the shared core of the dense and delta engines' batch classes.
+fn act_fingerprint(act: &ActKind, wfp: u64) -> u64 {
+    match act {
+        ActKind::Hard => fnv1a_words("act-hard", [wfp]),
+        ActKind::Lut(t) => fnv1a_words(
+            "act-lut",
+            [wfp, t.lo.to_bits(), t.hi.to_bits(), t.addr_bits as u64]
+                .into_iter()
+                .chain(t.sigmoid.iter().chain(&t.tanh).map(|&v| v as u32 as u64)),
+        ),
+    }
+}
+
+/// Column-major transposes of the gate matrices: wt[(c, r)] = w[r][c],
+/// 3H-contiguous per column so per-column accumulate loops are
+/// 3H-wide SIMD axpys (shared by the dense narrow path, the SoA
+/// kernels and the delta engine).
+fn transpose_gates(w: &QGruWeights) -> (Vec<i32>, Vec<i32>) {
+    let rows = 3 * w.hidden;
+    let mut wt_ih = vec![0i32; w.features * rows];
+    for r in 0..rows {
+        for c in 0..w.features {
+            wt_ih[c * rows + r] = w.w_ih[r * w.features + c];
+        }
+    }
+    let mut wt_hh = vec![0i32; w.hidden * rows];
+    for r in 0..rows {
+        for c in 0..w.hidden {
+            wt_hh[c * rows + r] = w.w_hh[r * w.hidden + c];
+        }
+    }
+    (wt_ih, wt_hh)
+}
+
 /// Streaming bit-exact quantized GRU DPD.
 pub struct QGruDpd {
     w: QGruWeights,
@@ -99,19 +176,7 @@ impl QGruDpd {
     pub fn new(w: QGruWeights, act: ActKind) -> QGruDpd {
         let h = vec![0i32; w.hidden];
         let g = vec![0i32; 3 * w.hidden];
-        let rows = 3 * w.hidden;
-        let mut wt_ih = vec![0i32; w.features * rows];
-        for r in 0..rows {
-            for c in 0..w.features {
-                wt_ih[c * rows + r] = w.w_ih[r * w.features + c];
-            }
-        }
-        let mut wt_hh = vec![0i32; w.hidden * rows];
-        for r in 0..rows {
-            for c in 0..w.hidden {
-                wt_hh[c * rows + r] = w.w_hh[r * w.hidden + c];
-            }
-        }
+        let (wt_ih, wt_hh) = transpose_gates(&w);
         QGruDpd { w, act, h, gi: g.clone(), gh: g.clone(), wt_ih, wt_hh, acc: g }
     }
 
@@ -125,40 +190,18 @@ impl QGruDpd {
 
     #[inline(always)]
     fn sig(&self, code: i32) -> i32 {
-        let spec = self.w.spec;
-        match &self.act {
-            ActKind::Hard => {
-                // clip((x >> 2) + 0.5, 0, 1) — floor shift, like the
-                // hardware shifter
-                let half = 1i32 << (spec.frac() - 1);
-                let one = 1i32 << spec.frac();
-                ((code >> 2) + half).clamp(0, one)
-            }
-            ActKind::Lut(t) => t.sigmoid[t.index(code, spec)],
-        }
+        sigmoid_code(&self.act, self.w.spec, code)
     }
 
     #[inline(always)]
     fn tanh_(&self, code: i32) -> i32 {
-        let spec = self.w.spec;
-        match &self.act {
-            ActKind::Hard => {
-                let one = 1i32 << spec.frac();
-                code.clamp(-one, one)
-            }
-            ActKind::Lut(t) => t.tanh[t.index(code, spec)],
-        }
+        tanh_code(&self.act, self.w.spec, code)
     }
 
     /// Preprocessor on codes: [i, q, requant(i^2+q^2, f-2), requant(p^2, f)].
     #[inline]
     pub fn features(&self, iq: [i32; 2]) -> [i32; 4] {
-        let spec = self.w.spec;
-        let f = spec.frac();
-        let (i, q) = (iq[0] as i64, iq[1] as i64);
-        let p = requantize(i * i + q * q, f - 2, spec);
-        let p2 = requantize(p as i64 * p as i64, f, spec);
-        [iq[0], iq[1], p, p2]
+        features_codes(self.w.spec, iq)
     }
 
     /// One datapath step on codes. Public so the cycle-accurate
@@ -461,16 +504,7 @@ impl Dpd for QGruDpd {
     }
 
     fn batch_fingerprint(&self) -> Option<u64> {
-        let wfp = self.w.fingerprint();
-        Some(match &self.act {
-            ActKind::Hard => fnv1a_words("act-hard", [wfp]),
-            ActKind::Lut(t) => fnv1a_words(
-                "act-lut",
-                [wfp, t.lo.to_bits(), t.hi.to_bits(), t.addr_bits as u64]
-                    .into_iter()
-                    .chain(t.sigmoid.iter().chain(&t.tanh).map(|&v| v as u32 as u64)),
-            ),
-        })
+        Some(act_fingerprint(&self.act, self.w.fingerprint()))
     }
 
     fn process_lanes(&mut self, lanes: &mut [DpdLane<'_>]) -> Result<()> {
@@ -481,6 +515,242 @@ impl Dpd for QGruDpd {
         }
         self.process_lanes_soa(lanes)
     }
+}
+
+/// Delta-sparsity twin of [`QGruDpd`] — the DeltaDPD-style hot-loop
+/// fast path (arXiv:2505.06250): wideband I/Q carries heavy temporal
+/// redundancy, so instead of recomputing both gate matvecs densely
+/// every sample, the engine carries the raw (pre-requantize)
+/// accumulators across steps and folds in only the columns whose
+/// input/hidden delta exceeds a Q-format threshold θ:
+///
+/// ```text
+///   acc_ih == b_ih << f + W_ih · x_prev   (invariant, exact i64)
+///   acc_hh == b_hh << f + W_hh · h_prev
+///   per step, per column c:  |v[c] - v_prev[c]| > θ
+///       -> acc += W[:, c] · (v[c] - v_prev[c]);  v_prev[c] = v[c]
+/// ```
+///
+/// Everything downstream of the accumulators (requantize, gates,
+/// hidden update, FC + residual) is the dense chain, op for op.
+///
+/// **θ=0 bit-exactness contract:** with θ = 0 every nonzero delta
+/// propagates, so after the update pass `v_prev == v` exactly and the
+/// accumulators equal the dense matvec in exact integer arithmetic —
+/// the engine is bit-identical to [`QGruDpd`] on any stream, which
+/// the conformance matrix (`tests/conformance.rs`) and the property
+/// suite below enforce. For θ > 0 skipped columns are stale by at
+/// most θ codes each, bounding the pre-activation perturbation per
+/// row by `θ · Σ_c |w[r][c]|` before requantization (property-pinned
+/// below); linearization-quality impact is pinned by the golden delta
+/// trace (`tests/data/golden_ofdm_q12.json`).
+///
+/// Accumulation is i64 for every format: on the narrow (`bits <= 13`)
+/// domain i64 agrees bit-for-bit with the dense engine's i32 fast
+/// path (the `fixed::ops` property suite), and wide formats match the
+/// dense i64 path directly.
+pub struct DeltaQGruDpd {
+    w: QGruWeights,
+    act: ActKind,
+    /// propagation threshold in codes (0 = bit-exact dense)
+    theta: u32,
+    st: DeltaSnapshot,
+    /// column-major weight copies (see [`transpose_gates`])
+    wt_ih: Vec<i32>,
+    wt_hh: Vec<i32>,
+    gi: Vec<i32>,
+    gh: Vec<i32>,
+    stats: DeltaStats,
+}
+
+impl DeltaQGruDpd {
+    pub fn new(w: QGruWeights, act: ActKind, theta: u32) -> DeltaQGruDpd {
+        let g = vec![0i32; 3 * w.hidden];
+        let (wt_ih, wt_hh) = transpose_gates(&w);
+        let st = Self::fresh_state(&w);
+        DeltaQGruDpd {
+            w,
+            act,
+            theta,
+            st,
+            wt_ih,
+            wt_hh,
+            gi: g.clone(),
+            gh: g,
+            stats: DeltaStats::default(),
+        }
+    }
+
+    /// The reset state: h = v_prev = 0, accumulators hold only the
+    /// aligned biases (the dense matvec of the all-zero vector).
+    fn fresh_state(w: &QGruWeights) -> DeltaSnapshot {
+        let f = w.spec.frac();
+        DeltaSnapshot {
+            h: vec![0; w.hidden],
+            x_prev: vec![0; w.features],
+            h_prev: vec![0; w.hidden],
+            acc_ih: w.b_ih.iter().map(|&b| (b as i64) << f).collect(),
+            acc_hh: w.b_hh.iter().map(|&b| (b as i64) << f).collect(),
+        }
+    }
+
+    pub fn spec(&self) -> QSpec {
+        self.w.spec
+    }
+
+    pub fn weights(&self) -> &QGruWeights {
+        &self.w
+    }
+
+    pub fn theta(&self) -> u32 {
+        self.theta
+    }
+
+    /// Column-update activity so far (feeds `accel::delta`).
+    pub fn stats(&self) -> DeltaStats {
+        self.stats
+    }
+
+    /// The live delta state (read-only; tests use it to check the
+    /// staleness invariant).
+    pub fn state(&self) -> &DeltaSnapshot {
+        &self.st
+    }
+
+    /// One delta datapath step on codes. Same signature as
+    /// [`QGruDpd::step_codes`] so differential tests can drive both.
+    pub fn step_codes(&mut self, iq: [i32; 2]) -> [i32; 2] {
+        let spec = self.w.spec;
+        let f = spec.frac();
+        let hd = self.w.hidden;
+        let rows = 3 * hd;
+        let one = 1i64 << f;
+        let x = features_codes(spec, iq);
+
+        // delta pass over the input feature columns
+        for (c, &xv) in x.iter().enumerate() {
+            let d = xv - self.st.x_prev[c];
+            if exceeds_theta(d, self.theta) {
+                delta_axpy_i64(&mut self.st.acc_ih, &self.wt_ih[c * rows..(c + 1) * rows], d);
+                self.st.x_prev[c] = xv;
+                self.stats.in_updates += 1;
+            }
+        }
+        // delta pass over the hidden columns (h_{t-1} vs last propagated)
+        for c in 0..hd {
+            let d = self.st.h[c] - self.st.h_prev[c];
+            if exceeds_theta(d, self.theta) {
+                delta_axpy_i64(&mut self.st.acc_hh, &self.wt_hh[c * rows..(c + 1) * rows], d);
+                self.st.h_prev[c] = self.st.h[c];
+                self.stats.hid_updates += 1;
+            }
+        }
+        self.stats.steps += 1;
+        self.stats.in_cols += self.w.features as u64;
+        self.stats.hid_cols += hd as u64;
+
+        // readout: requantize the carried accumulators into gate codes
+        requantize_block_i64(&self.st.acc_ih, f, spec, &mut self.gi);
+        requantize_block_i64(&self.st.acc_hh, f, spec, &mut self.gh);
+
+        // gates — the dense chain (wide form; bit-identical to the
+        // narrow form on its domain, see fixed::ops)
+        for k in 0..hd {
+            let r = sigmoid_code(
+                &self.act,
+                spec,
+                saturate_i64(self.gi[k] as i64 + self.gh[k] as i64, spec),
+            );
+            let z = sigmoid_code(
+                &self.act,
+                spec,
+                saturate_i64(self.gi[hd + k] as i64 + self.gh[hd + k] as i64, spec),
+            );
+            let rh = requantize(r as i64 * self.gh[2 * hd + k] as i64, f, spec);
+            let n = tanh_code(
+                &self.act,
+                spec,
+                saturate_i64(self.gi[2 * hd + k] as i64 + rh as i64, spec),
+            );
+            let zn = rshift_round((one - z as i64) * n as i64, f);
+            let zh = rshift_round(z as i64 * self.st.h[k] as i64, f);
+            self.st.h[k] = saturate_i64(zn + zh, spec);
+        }
+
+        // FC + residual, dense (2 x H — no delta leverage there)
+        let mut y = [0i32; 2];
+        for (o, out) in y.iter_mut().enumerate() {
+            let row = &self.w.w_fc[o * hd..(o + 1) * hd];
+            let mut acc = (self.w.b_fc[o] as i64) << f;
+            for (wv, hv) in row.iter().zip(&self.st.h) {
+                acc += *wv as i64 * *hv as i64;
+            }
+            let fc = requantize(acc, f, spec);
+            *out = saturate_i64(fc as i64 + iq[o] as i64, spec);
+        }
+        y
+    }
+
+    /// Run a whole burst of codes (resets state first).
+    pub fn run_codes(&mut self, iq: &[[i32; 2]]) -> Vec<[i32; 2]> {
+        self.reset();
+        iq.iter().map(|&s| self.step_codes(s)).collect()
+    }
+}
+
+impl Dpd for DeltaQGruDpd {
+    fn process(&mut self, iq: [f64; 2]) -> [f64; 2] {
+        let spec = self.w.spec;
+        let codes = [spec.quantize(iq[0]), spec.quantize(iq[1])];
+        let y = self.step_codes(codes);
+        [spec.dequantize(y[0]), spec.dequantize(y[1])]
+    }
+
+    fn reset(&mut self) {
+        // activity counters survive (they track total work, like the
+        // cycle simulator's)
+        self.st = Self::fresh_state(&self.w);
+    }
+
+    fn name(&self) -> &'static str {
+        "delta-qgru"
+    }
+
+    fn save_state(&self) -> DpdState {
+        DpdState::DeltaI32(self.st.clone())
+    }
+
+    fn load_state(&mut self, state: &DpdState) -> Result<()> {
+        match state {
+            DpdState::DeltaI32(s)
+                if s.h.len() == self.w.hidden
+                    && s.h_prev.len() == self.w.hidden
+                    && s.x_prev.len() == self.w.features
+                    && s.acc_ih.len() == 3 * self.w.hidden
+                    && s.acc_hh.len() == 3 * self.w.hidden =>
+            {
+                self.st = s.clone();
+                Ok(())
+            }
+            other => bail!(
+                "{}: incompatible state snapshot ({}) for hidden={}",
+                self.name(),
+                other.kind(),
+                self.w.hidden
+            ),
+        }
+    }
+
+    fn batch_fingerprint(&self) -> Option<u64> {
+        // θ is part of the datapath identity: different thresholds
+        // compute different functions and must never coalesce
+        let base = act_fingerprint(&self.act, self.w.fingerprint());
+        Some(fnv1a_words("delta-theta", [base, self.theta as u64]))
+    }
+
+    // process_lanes: the sequential default is exact because the
+    // snapshot round-trips the *entire* delta state (h + v_prev +
+    // accumulators), which the batch-parity property below pins.
 }
 
 #[cfg(test)]
@@ -708,6 +978,289 @@ mod tests {
         drop(lanes);
         assert_eq!(data, data2);
         assert_eq!(st_a, st_b);
+    }
+
+    /// Random stream mixing smooth segments (delta-friendly) and hard
+    /// jumps (worst case), in codes.
+    fn mixed_stream(rng: &mut Rng, spec: QSpec, n: usize) -> Vec<[i32; 2]> {
+        let (lo, hi) = (spec.qmin() as i64, spec.qmax() as i64);
+        let mut cur = [rng.int_in(lo, hi) as i32, rng.int_in(lo, hi) as i32];
+        (0..n)
+            .map(|_| {
+                if rng.uniform() < 0.2 {
+                    // jump
+                    cur = [rng.int_in(lo, hi) as i32, rng.int_in(lo, hi) as i32];
+                } else {
+                    // small walk
+                    let step = (spec.one() / 16).max(1) as i64;
+                    cur = [
+                        (cur[0] as i64 + rng.int_in(-step, step)).clamp(lo, hi) as i32,
+                        (cur[1] as i64 + rng.int_in(-step, step)).clamp(lo, hi) as i32,
+                    ];
+                }
+                cur
+            })
+            .collect()
+    }
+
+    #[test]
+    fn delta_theta_zero_bit_exact_to_dense() {
+        // The tentpole contract: at θ=0 the delta engine equals the
+        // dense engine bit for bit — outputs AND hidden state — on any
+        // stream and any format (narrow i32 path and wide i64 path).
+        use crate::util::proptest::check;
+        check("delta theta=0 vs dense", 25, |rng| {
+            let bits = rng.int_in(4, 16) as u32;
+            let spec = QSpec::new(bits).unwrap();
+            let w = rand_qweights(rng.next_u64(), spec);
+            let mut dense = QGruDpd::new(w.clone(), ActKind::Hard);
+            let mut delta = DeltaQGruDpd::new(w, ActKind::Hard, 0);
+            let x = mixed_stream(rng, spec, 120);
+            let a = dense.run_codes(&x);
+            let b = delta.run_codes(&x);
+            if a != b {
+                let at = a.iter().zip(&b).position(|(u, v)| u != v).unwrap();
+                return Err(format!("bits={bits}: outputs diverged at sample {at}"));
+            }
+            if dense.h != delta.st.h {
+                return Err(format!("bits={bits}: hidden states diverged"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delta_theta_zero_bit_exact_with_lut_activations() {
+        let spec = QSpec::Q12;
+        let w = rand_qweights(21, spec);
+        let t = LutTables::default_for(spec);
+        let mut dense = QGruDpd::new(w.clone(), ActKind::Lut(t.clone()));
+        let mut delta = DeltaQGruDpd::new(w, ActKind::Lut(t), 0);
+        let mut rng = Rng::new(22);
+        let x = mixed_stream(&mut rng, spec, 200);
+        assert_eq!(dense.run_codes(&x), delta.run_codes(&x));
+    }
+
+    #[test]
+    fn delta_invariants_and_derived_preactivation_bound() {
+        // For random θ and random streams:
+        // (1) the accumulator invariant  acc == bias << f + W · v_prev
+        //     holds exactly after every step (the algebra the engine
+        //     rests on);
+        // (2) the propagated-vector staleness is <= θ per column, so
+        //     the gate pre-activations deviate from a dense recompute
+        //     over the *current* vectors by at most the derived bound
+        //     rshift_round(θ · Σ_c |w[r][c]|) + 1 per row — the θ>0
+        //     drift contract, per step.
+        use crate::util::proptest::check;
+        check("delta invariants + bound", 15, |rng| {
+            let spec = QSpec::Q12;
+            let f = spec.frac();
+            let w = rand_qweights(rng.next_u64(), spec);
+            let theta = rng.int_in(0, 96) as u32;
+            let mut dpd = DeltaQGruDpd::new(w.clone(), ActKind::Hard, theta);
+            let hd = w.hidden;
+            let rows = 3 * hd;
+            let x = mixed_stream(rng, spec, 60);
+            for (t, &iq) in x.iter().enumerate() {
+                let h_before = dpd.st.h.clone();
+                let feats = features_codes(spec, iq);
+                dpd.step_codes(iq);
+                // (1) exact accumulator invariant
+                for r in 0..rows {
+                    let mut want_i = (w.b_ih[r] as i64) << f;
+                    for (c, &xp) in dpd.st.x_prev.iter().enumerate() {
+                        want_i += w.w_ih[r * 4 + c] as i64 * xp as i64;
+                    }
+                    if dpd.st.acc_ih[r] != want_i {
+                        return Err(format!("t={t} row={r}: acc_ih broke the invariant"));
+                    }
+                    let mut want_h = (w.b_hh[r] as i64) << f;
+                    for (c, &hp) in dpd.st.h_prev.iter().enumerate() {
+                        want_h += w.w_hh[r * hd + c] as i64 * hp as i64;
+                    }
+                    if dpd.st.acc_hh[r] != want_h {
+                        return Err(format!("t={t} row={r}: acc_hh broke the invariant"));
+                    }
+                }
+                // staleness: after the update pass every column is
+                // within θ of the value it was tested against
+                for (c, (&xv, &xp)) in feats.iter().zip(&dpd.st.x_prev).enumerate() {
+                    if (xv - xp).unsigned_abs() > theta {
+                        return Err(format!("t={t}: x_prev[{c}] staler than θ"));
+                    }
+                }
+                for (k, (&hv, &hp)) in h_before.iter().zip(&dpd.st.h_prev).enumerate() {
+                    if (hv - hp).unsigned_abs() > theta {
+                        return Err(format!("t={t}: h_prev[{k}] staler than θ"));
+                    }
+                }
+                // (2) derived pre-activation bound vs dense recompute
+                for r in 0..rows {
+                    let mut dense_i = (w.b_ih[r] as i64) << f;
+                    let mut wsum_i = 0i64;
+                    for (c, &xv) in feats.iter().enumerate() {
+                        dense_i += w.w_ih[r * 4 + c] as i64 * xv as i64;
+                        wsum_i += (w.w_ih[r * 4 + c] as i64).abs();
+                    }
+                    let bound = rshift_round(theta as i64 * wsum_i, f) + 1;
+                    let got = dpd.gi[r] as i64;
+                    let want = requantize(dense_i, f, spec) as i64;
+                    if (got - want).abs() > bound {
+                        return Err(format!(
+                            "t={t} row={r}: gi off by {} > bound {bound} (θ={theta})",
+                            (got - want).abs()
+                        ));
+                    }
+                    let mut dense_h = (w.b_hh[r] as i64) << f;
+                    let mut wsum_h = 0i64;
+                    for (c, &hv) in h_before.iter().enumerate() {
+                        dense_h += w.w_hh[r * hd + c] as i64 * hv as i64;
+                        wsum_h += (w.w_hh[r * hd + c] as i64).abs();
+                    }
+                    let bound = rshift_round(theta as i64 * wsum_h, f) + 1;
+                    let got = dpd.gh[r] as i64;
+                    let want = requantize(dense_h, f, spec) as i64;
+                    if (got - want).abs() > bound {
+                        return Err(format!(
+                            "t={t} row={r}: gh off by {} > bound {bound} (θ={theta})",
+                            (got - want).abs()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delta_state_snapshot_round_trips() {
+        let spec = QSpec::Q12;
+        let mut dpd = DeltaQGruDpd::new(rand_qweights(31, spec), ActKind::Hard, 24);
+        let mut rng = Rng::new(32);
+        for &s in &mixed_stream(&mut rng, spec, 80) {
+            dpd.step_codes(s);
+        }
+        let snap = dpd.save_state();
+        let probe = mixed_stream(&mut rng, spec, 20);
+        let a: Vec<_> = probe.iter().map(|&s| dpd.step_codes(s)).collect();
+        dpd.load_state(&snap).unwrap();
+        let b: Vec<_> = probe.iter().map(|&s| dpd.step_codes(s)).collect();
+        assert_eq!(a, b, "snapshot must replay the identical future");
+        // wrong kinds / shapes are rejected — in particular the plain
+        // I32 hidden snapshot, which would desync the caches
+        assert!(dpd.load_state(&DpdState::I32(vec![0; 10])).is_err());
+        assert!(dpd.load_state(&DpdState::Stateless).is_err());
+        let mut bad = match dpd.save_state() {
+            DpdState::DeltaI32(s) => s,
+            _ => unreachable!(),
+        };
+        bad.acc_ih.pop();
+        assert!(dpd.load_state(&DpdState::DeltaI32(bad)).is_err());
+    }
+
+    #[test]
+    fn delta_lanes_sequential_multiplexing_is_exact() {
+        // The batched contract for the delta engine: the default
+        // sequential lane multiplexer (save/load the full snapshot)
+        // equals solo processing bit for bit, because the snapshot
+        // carries the whole delta state.
+        use crate::dpd::{DpdLane, DpdState};
+        use crate::util::proptest::check;
+        check("delta lanes vs solo", 10, |rng| {
+            let spec = QSpec::Q12;
+            let w = rand_qweights(rng.next_u64(), spec);
+            let theta = rng.int_in(0, 48) as u32;
+            let nb = rng.int_in(2, 5) as usize;
+            // desync each lane's state with a random prefix
+            let mut solos: Vec<DeltaQGruDpd> =
+                (0..nb).map(|_| DeltaQGruDpd::new(w.clone(), ActKind::Hard, theta)).collect();
+            for s in solos.iter_mut() {
+                let prefix = rng.int_in(0, 30) as usize;
+                for &c in &mixed_stream(rng, spec, prefix) {
+                    s.step_codes(c);
+                }
+            }
+            let mut states: Vec<DpdState> = solos.iter().map(|s| s.save_state()).collect();
+            let mut data: Vec<Vec<[f64; 2]>> = (0..nb)
+                .map(|_| {
+                    let len = rng.int_in(0, 40) as usize;
+                    (0..len).map(|_| [rng.range(-0.6, 0.6), rng.range(-0.6, 0.6)]).collect()
+                })
+                .collect();
+            // solo reference
+            let mut want = data.clone();
+            for (s, lane) in solos.iter_mut().zip(want.iter_mut()) {
+                for v in lane.iter_mut() {
+                    *v = s.process(*v);
+                }
+            }
+            // one engine multiplexing every lane
+            let mut mux = DeltaQGruDpd::new(w, ActKind::Hard, theta);
+            let mut lanes: Vec<DpdLane> = data
+                .iter_mut()
+                .zip(states.iter_mut())
+                .map(|(d, s)| DpdLane { iq: d.as_mut_slice(), state: s })
+                .collect();
+            mux.process_lanes(&mut lanes).map_err(|e| e.to_string())?;
+            drop(lanes);
+            if data != want {
+                return Err(format!("lane samples diverged (θ={theta})"));
+            }
+            for (k, (st, solo)) in states.iter().zip(&solos).enumerate() {
+                if *st != solo.save_state() {
+                    return Err(format!("lane {k} final state diverged (θ={theta})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delta_fingerprint_separates_theta_weights_and_activation() {
+        let spec = QSpec::Q12;
+        let w = rand_qweights(1, spec);
+        let d0a = DeltaQGruDpd::new(w.clone(), ActKind::Hard, 0);
+        let d0b = DeltaQGruDpd::new(w.clone(), ActKind::Hard, 0);
+        let d16 = DeltaQGruDpd::new(w.clone(), ActKind::Hard, 16);
+        let lut = DeltaQGruDpd::new(w.clone(), ActKind::Lut(LutTables::default_for(spec)), 0);
+        let dense = QGruDpd::new(w, ActKind::Hard);
+        let other = DeltaQGruDpd::new(rand_qweights(2, spec), ActKind::Hard, 0);
+        assert_eq!(d0a.batch_fingerprint(), d0b.batch_fingerprint());
+        // θ is part of the identity — θ=0 and θ=16 compute different
+        // functions and must never coalesce
+        assert_ne!(d0a.batch_fingerprint(), d16.batch_fingerprint());
+        assert_ne!(d0a.batch_fingerprint(), lut.batch_fingerprint());
+        assert_ne!(d0a.batch_fingerprint(), other.batch_fingerprint());
+        // delta and dense never coalesce either, even at θ=0 (their
+        // state snapshots are incompatible)
+        assert_ne!(d0a.batch_fingerprint(), dense.batch_fingerprint());
+    }
+
+    #[test]
+    fn delta_stats_count_skipped_columns() {
+        let spec = QSpec::Q12;
+        let w = rand_qweights(41, spec);
+        // constant (DC) stream: after the first sample nothing changes,
+        // so a θ>0 engine must stop firing input columns entirely
+        let mut dpd = DeltaQGruDpd::new(w, ActKind::Hard, 8);
+        let x = vec![[700, -300]; 50];
+        dpd.run_codes(&x);
+        let s = dpd.stats();
+        assert_eq!(s.steps, 50);
+        assert_eq!(s.in_cols, 200);
+        assert_eq!(s.hid_cols, 500);
+        // input columns fire only on the first sample (4 at most)
+        assert!(s.in_updates <= 4, "DC stream kept firing: {}", s.in_updates);
+        assert!(s.in_update_ratio() < 0.05);
+        // hidden settles once the GRU reaches its fixed point
+        assert!(s.hid_update_ratio() < 0.8, "hidden never settled");
+        assert!(s.update_ratio() < 0.7);
+        // θ=0 on the same stream is denser but skips exact-zero deltas
+        let w2 = rand_qweights(41, spec);
+        let mut dense_delta = DeltaQGruDpd::new(w2, ActKind::Hard, 0);
+        dense_delta.run_codes(&x);
+        assert!(dense_delta.stats().in_updates <= 8, "DC deltas are zero after warmup");
     }
 
     #[test]

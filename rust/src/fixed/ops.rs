@@ -73,6 +73,43 @@ pub fn requantize_block_i32(acc: &[i32], s: u32, spec: QSpec, out: &mut [i32]) {
     }
 }
 
+/// The delta-engine threshold test: does a column delta `d` (in codes)
+/// exceed θ? θ semantics are defined here once for every delta kernel:
+/// a column is *propagated* iff `|d| > θ`, so θ = 0 propagates every
+/// nonzero delta — which is exactly what makes the θ=0 delta path
+/// bit-identical to the dense path (skipped columns have `d == 0` and
+/// contribute nothing).
+#[inline(always)]
+pub fn exceeds_theta(d: i32, theta: u32) -> bool {
+    d.unsigned_abs() > theta
+}
+
+/// The delta-engine column update: fold a propagated column delta into
+/// the carried raw accumulators, `acc[r] += w_col[r] * d`. In exact
+/// (i64) arithmetic this keeps the invariant
+/// `acc == bias << f + W · v_prev` — the algebra that lets a delta
+/// step skip every below-threshold column while the θ=0 path stays
+/// bit-identical to recomputing the dense matvec from scratch.
+#[inline]
+pub fn delta_axpy_i64(acc: &mut [i64], w_col: &[i32], d: i32) {
+    debug_assert_eq!(acc.len(), w_col.len());
+    for (a, &w) in acc.iter_mut().zip(w_col) {
+        *a += w as i64 * d as i64;
+    }
+}
+
+/// Requantize a block of wide (i64) delta accumulators into codes —
+/// the per-step readout of the delta engine. Element-wise
+/// [`requantize`]; agrees with the narrow i32 block form on the
+/// documented narrow domain (property-pinned below).
+#[inline]
+pub fn requantize_block_i64(acc: &[i64], s: u32, spec: QSpec, out: &mut [i32]) {
+    debug_assert_eq!(acc.len(), out.len());
+    for (o, &a) in out.iter_mut().zip(acc) {
+        *o = requantize(a, s, spec);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +251,95 @@ mod tests {
             requantize_block_i32(&acc[cut..], s, spec, &mut parts[cut..]);
             if parts != whole {
                 return Err(format!("split at {cut} changed the block"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn theta_test_defines_the_propagation_rule() {
+        // |d| > θ, strictly: θ=0 propagates every nonzero delta and
+        // nothing else (the θ=0 bit-exactness hinge), θ=k skips
+        // exactly |d| <= k
+        assert!(!exceeds_theta(0, 0));
+        assert!(exceeds_theta(1, 0));
+        assert!(exceeds_theta(-1, 0));
+        assert!(!exceeds_theta(5, 5));
+        assert!(!exceeds_theta(-5, 5));
+        assert!(exceeds_theta(6, 5));
+        assert!(exceeds_theta(-6, 5));
+        // i32::MIN must not overflow the magnitude test: |MIN| = 2^31
+        // sits exactly one above i32::MAX as a u32
+        assert!(exceeds_theta(i32::MIN, i32::MAX as u32));
+        assert!(!exceeds_theta(i32::MIN, 1u32 << 31));
+    }
+
+    #[test]
+    fn delta_axpy_reconstructs_the_dense_matvec() {
+        // The accumulator invariant: starting from bias << f and
+        // applying delta_axpy for an arbitrary update schedule that
+        // ends with every column at its final value reproduces the
+        // dense accumulator exactly.
+        check("delta axpy vs dense recompute", 300, |rng| {
+            let rows = rng.int_in(1, 40) as usize;
+            let cols = rng.int_in(1, 12) as usize;
+            let f = rng.int_in(2, 12) as u32;
+            let w: Vec<i32> =
+                (0..rows * cols).map(|_| rng.int_in(-2048, 2047) as i32).collect();
+            let bias: Vec<i32> = (0..rows).map(|_| rng.int_in(-2048, 2047) as i32).collect();
+            let x: Vec<i32> = (0..cols).map(|_| rng.int_in(-2048, 2047) as i32).collect();
+            // delta path: several intermediate values per column, each
+            // folded as a delta from the previous one
+            let mut acc: Vec<i64> = bias.iter().map(|&b| (b as i64) << f).collect();
+            let mut prev = vec![0i32; cols];
+            let hops = rng.int_in(1, 3);
+            for _ in 0..hops {
+                for c in 0..cols {
+                    let v = rng.int_in(-2048, 2047) as i32;
+                    delta_axpy_i64(&mut acc, &w[c * rows..(c + 1) * rows], v - prev[c]);
+                    prev[c] = v;
+                }
+            }
+            for c in 0..cols {
+                delta_axpy_i64(&mut acc, &w[c * rows..(c + 1) * rows], x[c] - prev[c]);
+            }
+            // dense recompute
+            for r in 0..rows {
+                let mut dense = (bias[r] as i64) << f;
+                for c in 0..cols {
+                    dense += w[c * rows + r] as i64 * x[c] as i64;
+                }
+                if acc[r] != dense {
+                    return Err(format!("row {r}: delta {} vs dense {dense}", acc[r]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn i64_block_requantize_matches_elementwise_and_narrow_twin() {
+        check("requantize_block_i64 vs requantize / i32 block", 300, |rng| {
+            let spec = QSpec::new(rng.int_in(4, 13) as u32).unwrap();
+            let s = spec.frac();
+            let n = rng.int_in(1, 48) as usize;
+            // narrow-domain accumulators so the i32 twin is also valid
+            let acc: Vec<i64> =
+                (0..n).map(|_| rng.int_in(-(1 << 29), 1 << 29)).collect();
+            let mut wide = vec![0i32; n];
+            requantize_block_i64(&acc, s, spec, &mut wide);
+            let acc32: Vec<i32> = acc.iter().map(|&a| a as i32).collect();
+            let mut narrow = vec![0i32; n];
+            requantize_block_i32(&acc32, s, spec, &mut narrow);
+            for (i, (&a, (&w, &nr))) in
+                acc.iter().zip(wide.iter().zip(&narrow)).enumerate()
+            {
+                if w != requantize(a, s, spec) {
+                    return Err(format!("element {i} diverged from requantize"));
+                }
+                if w != nr {
+                    return Err(format!("element {i}: i64 block {w} vs i32 block {nr}"));
+                }
             }
             Ok(())
         });

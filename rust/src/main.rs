@@ -11,12 +11,15 @@
 //!   info         artifact manifest summary
 //!
 //! Common flags: --artifacts <dir>,
-//! --engine <fixed|native|cyclesim|interp|hlo>, --streams <n>,
+//! --engine <fixed|delta|native|cyclesim|interp|hlo>, --streams <n>,
 //! --symbols <n>, --seed <n>; `serve` adds --sessions <n>,
 //! --workers <n>, --rounds <n>, --shadow <engine> and --batch <n>
 //! (coalesce up to n same-engine sessions per worker dispatch into
 //! one batched engine call — bit-identical output, higher aggregate
-//! throughput). The `hlo` engine needs a build with `--features xla`;
+//! throughput). The `delta` engine takes --delta-theta <codes>
+//! (the DeltaDPD column-skip threshold; 0 is bit-identical to
+//! `fixed`, so `--engine delta --shadow fixed` is a live equivalence
+//! audit). The `hlo` engine needs a build with `--features xla`;
 //! `interp` is its hermetic frame-based twin.
 
 use std::collections::HashMap;
@@ -55,12 +58,17 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     (pos, flags)
 }
 
-fn parse_engine(name: &str) -> Result<EngineKind> {
+fn parse_engine(name: &str, flags: &HashMap<String, String>) -> Result<EngineKind> {
     Ok(match name {
         "fixed" => EngineKind::Fixed,
         "native" => EngineKind::NativeF64,
         "cyclesim" => EngineKind::CycleSim,
         "interp" => EngineKind::Interp,
+        // the delta-sparsity fast path; θ in codes via --delta-theta
+        // (0 = bit-identical to 'fixed', the conformance contract)
+        "delta" => EngineKind::DeltaFixed {
+            theta: flags.get("delta-theta").map(|s| s.parse()).transpose()?.unwrap_or(0),
+        },
         #[cfg(feature = "xla")]
         "hlo" => EngineKind::Hlo,
         #[cfg(not(feature = "xla"))]
@@ -70,7 +78,7 @@ fn parse_engine(name: &str) -> Result<EngineKind> {
 }
 
 fn engine_kind(flags: &HashMap<String, String>) -> Result<EngineKind> {
-    parse_engine(flags.get("engine").map(String::as_str).unwrap_or("fixed"))
+    parse_engine(flags.get("engine").map(String::as_str).unwrap_or("fixed"), flags)
 }
 
 fn artifacts(flags: &HashMap<String, String>) -> Option<PathBuf> {
@@ -79,9 +87,10 @@ fn artifacts(flags: &HashMap<String, String>) -> Option<PathBuf> {
 
 fn usage() -> &'static str {
     "usage: dpd-ne <run|serve|stream|asic-report|fpga-report|sweep|info> [flags]\n\
-     flags: --artifacts <dir> --engine <fixed|native|cyclesim|interp|hlo> \
+     flags: --artifacts <dir> --engine <fixed|delta|native|cyclesim|interp|hlo> \
      --streams <n> --symbols <n> --seed <n>\n\
      serve: --sessions <n> --workers <n> --rounds <n> --shadow <engine> --batch <n>\n\
+     delta: --delta-theta <codes> (0 = bit-identical to 'fixed'; try 32)\n\
      (engine 'hlo' needs a build with --features xla)"
 }
 
@@ -196,7 +205,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let rounds: usize = flags.get("rounds").map(|s| s.parse()).transpose()?.unwrap_or(3);
     let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(1);
     let engine = engine_kind(flags)?;
-    let shadow_kind = flags.get("shadow").map(|s| parse_engine(s)).transpose()?;
+    let shadow_kind = flags.get("shadow").map(|s| parse_engine(s, flags)).transpose()?;
     let sig = test_signal(flags)?;
 
     let service = DpdService::start(ServiceConfig {

@@ -96,6 +96,45 @@ mod tests {
     }
 
     #[test]
+    fn two_tone_cubic_matches_closed_form() {
+        // The meter itself, pinned against algebra — this is what the
+        // conformance matrix's tolerance assertions rest on. A real
+        // two-tone x = 2A cos(2π f0 n) through the exact cubic
+        // y = x − c|x|²x produces per-tone components A − 3cA³ at ±f0
+        // and IM3 components cA³ at ±3f0 (no higher orders exist), so
+        //   ACPR = 10 log10( (cA³)² / (2 (A − 3cA³)²) )
+        // exactly. The raster is chosen leakage-safe: f0 bin-centered
+        // (bin 20 of 2048), tone and IM3 bins ≥ 18 bins from every
+        // band edge, so the Hann spread stays inside its band, and
+        // the burst is segment-periodic (no edge effects).
+        let (nfft, f0) = (2048usize, 20.0 / 2048.0);
+        let cfg = AcprConfig {
+            bw: 0.04,
+            offset: 0.04,
+            welch: crate::dsp::welch::WelchConfig { nfft, overlap: 0.5 },
+        };
+        for (a, c) in [(0.5, 0.3), (0.4, 0.5), (0.6, 0.2)] {
+            let iq: Vec<[f64; 2]> = (0..2 * nfft)
+                .map(|n| {
+                    let x = 2.0 * a * (2.0 * std::f64::consts::PI * f0 * n as f64).cos();
+                    [x - c * x * x * x, 0.0]
+                })
+                .collect();
+            let got = acpr_db(&iq, &cfg).unwrap();
+            let im3 = c * a * a * a;
+            let tone = a - 3.0 * c * a * a * a;
+            let want = 10.0 * ((im3 * im3) / (2.0 * tone * tone)).log10();
+            assert!(
+                (got.acpr_dbc - want).abs() < 0.05,
+                "A={a} c={c}: measured {:.4} vs closed-form {want:.4}",
+                got.acpr_dbc
+            );
+            // the cubic is symmetric: both adjacent channels equal
+            assert!((got.lower_dbc - got.upper_dbc).abs() < 1e-6);
+        }
+    }
+
+    #[test]
     fn scale_invariant() {
         let sig = OfdmModulator::generate(&OfdmConfig { n_symbols: 16, seed: 4, ..Default::default() }).unwrap();
         let scaled: Vec<[f64; 2]> = sig.iq.iter().map(|&[i, q]| [3.0 * i, 3.0 * q]).collect();

@@ -74,6 +74,51 @@ mod tests {
     }
 
     #[test]
+    fn known_qam_references_match_closed_form() {
+        // Pin the meter against a known-QAM stream with analytically
+        // known errors (what the conformance tolerances lean on).
+        use crate::signal::qam::constellation;
+        let c64 = constellation(64).unwrap();
+        let g = C64::new(0.9, 0.25);
+        // cycle through the whole (unit-average-power) constellation
+        // so signal power is exactly 1 per symbol on average
+        let x: Vec<[f64; 2]> = (0..640).map(|i| {
+            let p = c64[i % 64];
+            [p.re, p.im]
+        }).collect();
+
+        // (1) pure relative gain error: y = g x (1 + eps)
+        //     -> EVM = 20 log10(eps) exactly, independent of g
+        for eps in [0.01, 0.1] {
+            let y: Vec<[f64; 2]> = x
+                .iter()
+                .map(|&[i, q]| {
+                    let v = C64::new(i, q) * g * C64::new(1.0 + eps, 0.0);
+                    [v.re, v.im]
+                })
+                .collect();
+            let got = evm_db_nmse(&y, &x, g);
+            let want = 20.0 * eps.log10();
+            assert!((got - want).abs() < 1e-9, "eps={eps}: got {got}, want {want}");
+        }
+
+        // (2) constant displacement d on I of every received symbol:
+        //     error power N d², reference power N |g|² (unit-power
+        //     constellation) -> EVM = 10 log10(d² / |g|²)
+        let d = 0.03;
+        let y: Vec<[f64; 2]> = x
+            .iter()
+            .map(|&[i, q]| {
+                let v = C64::new(i, q) * g;
+                [v.re + d, v.im]
+            })
+            .collect();
+        let got = evm_db_nmse(&y, &x, g);
+        let want = 10.0 * (d * d / g.norm_sq()).log10();
+        assert!((got - want).abs() < 1e-9, "displacement: got {got}, want {want}");
+    }
+
+    #[test]
     fn evm_monotone_in_noise() {
         let mut rng = crate::util::Rng::new(1);
         let x: Vec<[f64; 2]> = (0..512).map(|_| [rng.gauss(), rng.gauss()]).collect();

@@ -15,10 +15,13 @@
 //!   artifact's training convention). They report the length through
 //!   [`DpdEngine::frame_len`] so the framer can match it.
 //!
-//! Parity contract (enforced by the unit tests below and the golden
-//! vectors): `Fixed`, `CycleSim` and `Interp` share the bit-exact
-//! integer datapath — equal inputs give *identical* outputs (modulo
-//! the frame-reset semantics of `Interp`). `NativeF64` is the float
+//! Parity contract (enforced by the unit tests below, the golden
+//! vectors and the conformance matrix in `tests/conformance.rs`):
+//! `Fixed`, `CycleSim`, `Interp` and `DeltaFixed` at θ=0 share the
+//! bit-exact integer datapath — equal inputs give *identical* outputs
+//! (modulo the frame-reset semantics of `Interp`). `DeltaFixed` with
+//! θ>0 deliberately trades bounded drift for skipped MACs (golden
+//! delta trace pins the envelope). `NativeF64` is the float
 //! reference; it tracks the integer engines within the quantization
 //! envelope (documented tolerance: NMSE better than -12 dB and
 //! per-sample deviation under 0.3 on small-signal stimulus at Q2.10).
@@ -40,7 +43,7 @@ use anyhow::Result;
 use crate::accel::act_unit::ActImpl;
 use crate::accel::fsm::HwConfig;
 use crate::accel::CycleAccurateEngine;
-use crate::dpd::qgru::{ActKind, QGruDpd};
+use crate::dpd::qgru::{ActKind, DeltaQGruDpd, QGruDpd};
 use crate::dpd::weights::{GruWeights, QGruWeights};
 use crate::dpd::{Dpd, GruDpd};
 use crate::fixed::QSpec;
@@ -60,6 +63,14 @@ pub enum EngineKind {
     NativeF64,
     /// bit-exact Q2.10 fixed-point (the chip's functional model)
     Fixed,
+    /// delta-sparsity fixed-point: `Fixed`'s hot loop with DeltaDPD
+    /// column skipping at threshold `theta` (codes). θ=0 is
+    /// bit-identical to `Fixed` — the contract the conformance matrix
+    /// enforces; θ>0 trades bounded ACPR/EVM drift for skipped MACs
+    DeltaFixed {
+        /// propagation threshold in Q-format codes
+        theta: u32,
+    },
     /// cycle-accurate ASIC simulator
     CycleSim,
     /// interpreted frame engine: the bit-exact `QGruDpd` run with the
@@ -426,6 +437,15 @@ impl EngineFactory {
                 let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
                 Box::new(StreamingEngine::new(Box::new(QGruDpd::new(w, ActKind::Hard))))
             }
+            EngineKind::DeltaFixed { theta } => {
+                let spec = QSpec::new(m.qspec_bits)?;
+                let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
+                Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
+                    w,
+                    ActKind::Hard,
+                    theta,
+                ))))
+            }
             EngineKind::CycleSim => {
                 let spec = QSpec::new(m.qspec_bits)?;
                 let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
@@ -448,6 +468,7 @@ pub fn available_kinds() -> Vec<EngineKind> {
     let mut kinds = vec![
         EngineKind::NativeF64,
         EngineKind::Fixed,
+        EngineKind::DeltaFixed { theta: 0 },
         EngineKind::CycleSim,
         EngineKind::Interp,
     ];
@@ -526,6 +547,15 @@ mod tests {
                 Box::new(StreamingEngine::new(Box::new(CycleSimDpd::new(&qw)))),
                 true,
                 "cyclesim",
+            ),
+            (
+                Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
+                    qw.clone(),
+                    ActKind::Hard,
+                    0,
+                )))),
+                true,
+                "delta-fixed@0",
             ),
             (
                 Box::new(StreamingEngine::new(Box::new(GruDpd::new(fw.clone())))),
@@ -637,6 +667,21 @@ mod tests {
         assert_ne!(fixed_a.batch_class(), interp16.batch_class());
         // frame geometry is part of a frame engine's identity
         assert_ne!(interp16.batch_class(), interp64.batch_class());
+        // the delta engine is its own class: never mixed with Fixed
+        // (even at θ=0) and split by θ
+        let delta0 = StreamingEngine::new(Box::new(DeltaQGruDpd::new(
+            qw.clone(),
+            ActKind::Hard,
+            0,
+        )));
+        let delta8 = StreamingEngine::new(Box::new(DeltaQGruDpd::new(
+            qw.clone(),
+            ActKind::Hard,
+            8,
+        )));
+        assert!(delta0.batch_class().is_some());
+        assert_ne!(delta0.batch_class(), fixed_a.batch_class());
+        assert_ne!(delta0.batch_class(), delta8.batch_class());
         // different weights never coalesce
         let other = synth_float_weights(32).quantize(QSpec::Q12);
         let fixed_c = StreamingEngine::new(Box::new(QGruDpd::new(other, ActKind::Hard)));
@@ -680,6 +725,18 @@ mod tests {
                 }),
                 "interp",
             ),
+            (
+                Box::new(|| -> Box<dyn DpdEngine> {
+                    // θ>0 on purpose: lane snapshots must round-trip
+                    // the delta caches, not just the hidden state
+                    Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
+                        qw.clone(),
+                        ActKind::Hard,
+                        24,
+                    ))))
+                }),
+                "delta-fixed@24",
+            ),
         ];
         for (mk, label) in makers {
             let mut batched = mk();
@@ -722,6 +779,7 @@ mod tests {
         let kinds = available_kinds();
         assert!(kinds.contains(&EngineKind::NativeF64));
         assert!(kinds.contains(&EngineKind::Fixed));
+        assert!(kinds.contains(&EngineKind::DeltaFixed { theta: 0 }));
         assert!(kinds.contains(&EngineKind::CycleSim));
         assert!(kinds.contains(&EngineKind::Interp));
     }
@@ -771,7 +829,12 @@ mod tests {
             hlo: Vec::new(),
             golden: Vec::new(),
         });
-        for kind in [EngineKind::NativeF64, EngineKind::Fixed, EngineKind::CycleSim] {
+        for kind in [
+            EngineKind::NativeF64,
+            EngineKind::Fixed,
+            EngineKind::DeltaFixed { theta: 32 },
+            EngineKind::CycleSim,
+        ] {
             let f = EngineFactory::from_manifest(kind, Arc::clone(&m)).unwrap();
             assert_eq!(f.kind(), kind);
             assert_eq!(f.frame_len(100), 100, "streaming kinds keep the caller's frame");

@@ -1,0 +1,409 @@
+//! Scenario DSL for the cross-engine conformance matrix.
+//!
+//! The engine zoo (NativeF64, Fixed, DeltaFixed, CycleSim, Interp,
+//! Hlo) stays honest only if every engine is driven through the same
+//! gauntlet of operating conditions and compared under its documented
+//! contract. This module is the shared harness: a [`Scenario`] is a
+//! script of bursts, mid-stream resets and save/load round-trips over
+//! generated stimuli (OFDM, tone pairs, silence/DC, full-scale
+//! saturation); [`run_scalar`] plays it through one engine's
+//! `process_frame` path, [`run_batched`] plays it through `run_batch`
+//! with ragged per-lane tails, and [`lane_scenario`] derives the
+//! per-lane reference script so the two can be compared lane for
+//! lane. `tests/conformance.rs` instantiates the full matrix:
+//! bit-exactness inside the integer family (Fixed ≡ DeltaFixed@θ=0 ≡
+//! CycleSim), scalar ≡ batched for every engine, envelope tolerances
+//! for the float reference, and bounded ACPR/EVM drift for θ>0.
+//!
+//! The harness lives in `util` so unit suites can reuse it, but it is
+//! engine-agnostic on purpose: everything it knows about an engine is
+//! the [`DpdEngine`] trait.
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::{DpdEngine, DpdLane, DpdState};
+use crate::signal::ofdm::{OfdmConfig, OfdmModulator};
+use crate::util::Rng;
+
+/// A stimulus generator — each variant renders a deterministic burst.
+#[derive(Clone, Debug)]
+pub enum Stimulus {
+    /// CP-OFDM 64-QAM burst at the project's nominal RMS 0.25
+    Ofdm { symbols: usize, seed: u64 },
+    /// two complex tones at normalized frequencies f1, f2
+    TonePair { f1: f64, f2: f64, amp: f64, n: usize },
+    /// all-zero samples (the deepest delta-skip path)
+    Silence { n: usize },
+    /// a constant I/Q level (DC — nonzero but changeless)
+    Dc { i: f64, q: f64, n: usize },
+    /// uniform samples spanning the whole representable range, so the
+    /// quantizer and datapath saturate hard
+    FullScale { seed: u64, n: usize },
+    /// small-signal gaussian noise at a given RMS
+    Gauss { seed: u64, n: usize, rms: f64 },
+}
+
+impl Stimulus {
+    /// Render the burst (deterministic in the variant's parameters).
+    pub fn render(&self) -> Vec<[f64; 2]> {
+        match *self {
+            Stimulus::Ofdm { symbols, seed } => {
+                OfdmModulator::generate(&OfdmConfig {
+                    n_symbols: symbols,
+                    seed,
+                    ..Default::default()
+                })
+                .expect("default OFDM config is valid")
+                .iq
+            }
+            Stimulus::TonePair { f1, f2, amp, n } => (0..n)
+                .map(|t| {
+                    let (p1, p2) = (
+                        2.0 * std::f64::consts::PI * f1 * t as f64,
+                        2.0 * std::f64::consts::PI * f2 * t as f64,
+                    );
+                    [amp * (p1.cos() + p2.cos()), amp * (p1.sin() + p2.sin())]
+                })
+                .collect(),
+            Stimulus::Silence { n } => vec![[0.0, 0.0]; n],
+            Stimulus::Dc { i, q, n } => vec![[i, q]; n],
+            Stimulus::FullScale { seed, n } => {
+                let mut rng = Rng::new(seed);
+                (0..n).map(|_| [rng.range(-1.999, 1.999), rng.range(-1.999, 1.999)]).collect()
+            }
+            Stimulus::Gauss { seed, n, rms } => {
+                let mut rng = Rng::new(seed);
+                (0..n).map(|_| [rng.gauss() * rms, rng.gauss() * rms]).collect()
+            }
+        }
+    }
+}
+
+/// One step of a scenario script.
+#[derive(Clone, Debug)]
+pub enum Step {
+    /// process a burst (output collected)
+    Burst(Vec<[f64; 2]>),
+    /// mid-stream engine reset
+    Reset,
+    /// snapshot the state, process the burst, restore, process again:
+    /// both futures must match exactly (the restored run's output is
+    /// collected)
+    SaveLoadReplay(Vec<[f64; 2]>),
+}
+
+/// A named script of steps, played identically against every engine.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub steps: Vec<Step>,
+}
+
+impl Scenario {
+    pub fn new(name: &str, steps: Vec<Step>) -> Scenario {
+        Scenario { name: name.to_string(), steps }
+    }
+
+    /// Total samples a scalar run of this scenario emits.
+    pub fn len(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| match s {
+                Step::Burst(b) | Step::SaveLoadReplay(b) => b.len(),
+                Step::Reset => 0,
+            })
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// How many samples lane `k` drops from the tail of every burst —
+/// ragged lanes are part of the batched contract, so the grid bakes
+/// them in rather than treating raggedness as a special case.
+fn ragged_cut(lane: usize) -> usize {
+    lane * 3
+}
+
+/// The per-lane variant of a scenario: lane k's bursts lose
+/// `ragged_cut(k)` tail samples. Lane 0 is the scenario itself.
+pub fn lane_scenario(s: &Scenario, lane: usize) -> Scenario {
+    let cut = ragged_cut(lane);
+    let trim = |b: &Vec<[f64; 2]>| -> Vec<[f64; 2]> { b[..b.len().saturating_sub(cut)].to_vec() };
+    Scenario {
+        name: format!("{}[lane {lane}]", s.name),
+        steps: s
+            .steps
+            .iter()
+            .map(|st| match st {
+                Step::Burst(b) => Step::Burst(trim(b)),
+                Step::SaveLoadReplay(b) => Step::SaveLoadReplay(trim(b)),
+                Step::Reset => Step::Reset,
+            })
+            .collect(),
+    }
+}
+
+/// Play a scenario through one engine's scalar (`process_frame`) path.
+/// Returns the concatenated output samples.
+pub fn run_scalar(engine: &mut dyn DpdEngine, s: &Scenario) -> Result<Vec<[f64; 2]>> {
+    engine.reset();
+    let mut out = Vec::with_capacity(s.len());
+    for step in &s.steps {
+        match step {
+            Step::Burst(b) => {
+                let mut buf = b.clone();
+                engine.process_frame(&mut buf)?;
+                out.extend_from_slice(&buf);
+            }
+            Step::Reset => engine.reset(),
+            Step::SaveLoadReplay(b) => {
+                let snap = engine.save_state();
+                let mut first = b.clone();
+                engine.process_frame(&mut first)?;
+                engine.load_state(&snap)?;
+                let mut again = b.clone();
+                engine.process_frame(&mut again)?;
+                ensure!(
+                    first == again,
+                    "{}: scenario '{}': save/load round-trip diverged",
+                    engine.name(),
+                    s.name
+                );
+                out.extend_from_slice(&again);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Play a scenario through one engine's batched (`run_batch`) path,
+/// with `lanes` independent streams whose bursts have ragged tails
+/// (lane k follows [`lane_scenario`]`(s, k)`). Every lane's state is
+/// carried in its own [`DpdState`] snapshot, exactly like the
+/// coalescing scheduler does. Returns per-lane concatenated outputs.
+pub fn run_batched(
+    engine: &mut dyn DpdEngine,
+    s: &Scenario,
+    lanes: usize,
+) -> Result<Vec<Vec<[f64; 2]>>> {
+    ensure!(lanes > 0, "need at least one lane");
+    engine.reset();
+    let name = engine.name();
+    let fresh = engine.save_state();
+    let mut states: Vec<DpdState> = vec![fresh.clone(); lanes];
+    let mut out: Vec<Vec<[f64; 2]>> = vec![Vec::new(); lanes];
+
+    let mut run_step = |states: &mut Vec<DpdState>,
+                        bufs: &mut Vec<Vec<[f64; 2]>>|
+     -> Result<()> {
+        let mut lane_views: Vec<DpdLane> = bufs
+            .iter_mut()
+            .zip(states.iter_mut())
+            .map(|(b, st)| DpdLane { iq: b.as_mut_slice(), state: st })
+            .collect();
+        engine.run_batch(&mut lane_views)
+    };
+
+    for step in &s.steps {
+        match step {
+            Step::Burst(b) => {
+                let mut bufs: Vec<Vec<[f64; 2]>> = (0..lanes)
+                    .map(|k| b[..b.len().saturating_sub(ragged_cut(k))].to_vec())
+                    .collect();
+                run_step(&mut states, &mut bufs)?;
+                for (o, buf) in out.iter_mut().zip(bufs) {
+                    o.extend(buf);
+                }
+            }
+            Step::Reset => {
+                for st in states.iter_mut() {
+                    *st = fresh.clone();
+                }
+            }
+            Step::SaveLoadReplay(b) => {
+                let make_bufs = || -> Vec<Vec<[f64; 2]>> {
+                    (0..lanes)
+                        .map(|k| b[..b.len().saturating_sub(ragged_cut(k))].to_vec())
+                        .collect()
+                };
+                let snap = states.clone();
+                let mut first = make_bufs();
+                run_step(&mut states, &mut first)?;
+                states = snap;
+                let mut again = make_bufs();
+                run_step(&mut states, &mut again)?;
+                ensure!(
+                    first == again,
+                    "{name}: scenario '{}': batched save/load round-trip diverged",
+                    s.name
+                );
+                for (o, buf) in out.iter_mut().zip(again) {
+                    o.extend(buf);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The standard conformance grid: every operating condition the
+/// matrix must hold across — OFDM bursts, tone pairs, silence/DC,
+/// full-scale saturation, mid-stream resets, save/load round-trips.
+/// Ragged batch tails come from [`run_batched`] itself. `seed` varies
+/// the stimuli without changing the scenario structure.
+pub fn standard_grid(seed: u64) -> Vec<Scenario> {
+    let gauss = |s: u64, n: usize| Stimulus::Gauss { seed: seed ^ s, n, rms: 0.2 }.render();
+    vec![
+        Scenario::new(
+            "ofdm-burst",
+            vec![Step::Burst(Stimulus::Ofdm { symbols: 4, seed }.render())],
+        ),
+        Scenario::new(
+            "tone-pair",
+            vec![Step::Burst(
+                Stimulus::TonePair { f1: 0.01171875, f2: 0.0234375, amp: 0.25, n: 512 }.render(),
+            )],
+        ),
+        Scenario::new(
+            "silence-dc-silence",
+            vec![
+                Step::Burst(Stimulus::Silence { n: 64 }.render()),
+                Step::Burst(Stimulus::Dc { i: 0.45, q: -0.3, n: 128 }.render()),
+                Step::Burst(Stimulus::Silence { n: 64 }.render()),
+            ],
+        ),
+        Scenario::new(
+            "full-scale-saturation",
+            vec![Step::Burst(Stimulus::FullScale { seed: seed ^ 0xf5, n: 256 }.render())],
+        ),
+        Scenario::new(
+            "midstream-reset",
+            vec![
+                Step::Burst(gauss(1, 200)),
+                Step::Reset,
+                Step::Burst(gauss(2, 200)),
+                Step::Reset,
+                Step::Burst(gauss(3, 77)),
+            ],
+        ),
+        Scenario::new(
+            "save-load-roundtrip",
+            vec![
+                Step::Burst(gauss(4, 150)),
+                Step::SaveLoadReplay(gauss(5, 100)),
+                Step::Burst(gauss(6, 150)),
+            ],
+        ),
+        Scenario::new(
+            "mixed-gauntlet",
+            vec![
+                Step::Burst(Stimulus::Ofdm { symbols: 1, seed: seed ^ 9 }.render()),
+                Step::Burst(Stimulus::Silence { n: 40 }.render()),
+                Step::SaveLoadReplay(gauss(7, 60)),
+                Step::Burst(Stimulus::FullScale { seed: seed ^ 10, n: 90 }.render()),
+                Step::Reset,
+                Step::Burst(Stimulus::Dc { i: -0.2, q: 0.55, n: 70 }.render()),
+                Step::Burst(gauss(8, 130)),
+            ],
+        ),
+    ]
+}
+
+/// Largest per-component deviation between two sample streams
+/// (panics on length mismatch — that is already a conformance bug).
+pub fn max_abs_dev(a: &[[f64; 2]], b: &[[f64; 2]]) -> f64 {
+    assert_eq!(a.len(), b.len(), "stream lengths diverged");
+    a.iter()
+        .zip(b)
+        .map(|(u, v)| (u[0] - v[0]).abs().max((u[1] - v[1]).abs()))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stimuli_render_deterministically() {
+        for s in [
+            Stimulus::Ofdm { symbols: 1, seed: 3 },
+            Stimulus::TonePair { f1: 0.01, f2: 0.03, amp: 0.3, n: 64 },
+            Stimulus::Silence { n: 10 },
+            Stimulus::Dc { i: 0.1, q: 0.2, n: 10 },
+            Stimulus::FullScale { seed: 5, n: 32 },
+            Stimulus::Gauss { seed: 7, n: 32, rms: 0.25 },
+        ] {
+            let a = s.render();
+            let b = s.render();
+            assert_eq!(a, b, "{s:?} not deterministic");
+            assert!(!a.is_empty());
+        }
+    }
+
+    #[test]
+    fn full_scale_actually_saturates() {
+        let b = Stimulus::FullScale { seed: 1, n: 512 }.render();
+        assert!(b.iter().any(|s| s[0].abs() > 1.8 || s[1].abs() > 1.8));
+    }
+
+    #[test]
+    fn grid_covers_the_contracted_conditions() {
+        let grid = standard_grid(42);
+        let names: Vec<&str> = grid.iter().map(|s| s.name.as_str()).collect();
+        for want in [
+            "ofdm-burst",
+            "tone-pair",
+            "silence-dc-silence",
+            "full-scale-saturation",
+            "midstream-reset",
+            "save-load-roundtrip",
+            "mixed-gauntlet",
+        ] {
+            assert!(names.contains(&want), "grid lost scenario '{want}'");
+        }
+        assert!(grid.iter().any(|s| s.steps.iter().any(|st| matches!(st, Step::Reset))));
+        assert!(grid
+            .iter()
+            .any(|s| s.steps.iter().any(|st| matches!(st, Step::SaveLoadReplay(_)))));
+        for s in &grid {
+            assert!(!s.is_empty(), "scenario '{}' emits nothing", s.name);
+        }
+    }
+
+    #[test]
+    fn lane_scenarios_are_ragged() {
+        let s = Scenario::new("t", vec![Step::Burst(vec![[0.0, 0.0]; 20])]);
+        assert_eq!(lane_scenario(&s, 0).len(), 20);
+        assert_eq!(lane_scenario(&s, 1).len(), 17);
+        assert_eq!(lane_scenario(&s, 4).len(), 8);
+    }
+
+    #[test]
+    fn harness_against_a_real_engine() {
+        // scalar vs batched on the bit-exact fixed engine: the harness
+        // itself must not perturb the stream
+        use crate::dpd::qgru::{ActKind, QGruDpd};
+        use crate::dpd::weights::QGruWeights;
+        use crate::fixed::QSpec;
+        use crate::runtime::backend::StreamingEngine;
+        let mk = || {
+            StreamingEngine::new(Box::new(QGruDpd::new(
+                QGruWeights::synthetic(3, QSpec::Q12),
+                ActKind::Hard,
+            )))
+        };
+        for sc in standard_grid(7) {
+            let mut scalar_refs = Vec::new();
+            for k in 0..3 {
+                let mut e = mk();
+                scalar_refs.push(run_scalar(&mut e, &lane_scenario(&sc, k)).unwrap());
+            }
+            let mut batched = mk();
+            let lanes = run_batched(&mut batched, &sc, 3).unwrap();
+            assert_eq!(lanes, scalar_refs, "scenario '{}' diverged", sc.name);
+        }
+    }
+}

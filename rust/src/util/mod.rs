@@ -1,6 +1,7 @@
 //! Small shared utilities: deterministic RNG, JSON, complex numbers,
-//! property-test helpers.
+//! property-test helpers, and the cross-engine conformance harness.
 
+pub mod conformance;
 pub mod cplx;
 pub mod json;
 pub mod proptest;

@@ -2,10 +2,21 @@
 //!
 //! `check(name, cases, |rng| ...)` runs a closure over `cases` random
 //! inputs drawn from a deterministic seed derived from `name`, so
-//! failures are reproducible; on failure it reports the case index and
-//! the seed to re-run with. Set `DPD_PROPTEST_SEED=<seed>` to replay a
-//! reported failure: case 0 then starts at exactly that seed (the
-//! shrinking workflow — re-run one seed, tighten the property, repeat).
+//! failures are reproducible. On failure it reports, inline: the case
+//! index, the seed, the property's own message, AND the failing
+//! case's **shrunk input** — the recorded draw tape greedily
+//! minimized (values zeroed/halved while the property keeps failing),
+//! so the offending values are visible in the panic itself instead of
+//! forcing a manual env-replay round-trip.
+//!
+//! Replay knobs:
+//! * `DPD_PROPTEST_SEED=<u64>` — case 0 starts at exactly that seed
+//!   (re-run one reported case);
+//! * `DPD_PROPTEST_TAPE=<v,v,...>` (or `@<path>` to a file holding
+//!   the same comma-separated form) — run a single case whose draws
+//!   are served from the given tape (the shrunk input printed by a
+//!   failure; large tapes are spilled to a temp file and reported as
+//!   `@<path>`), on top of the seed above when both are set.
 
 use super::rng::Rng;
 
@@ -22,20 +33,129 @@ fn base_seed(name: &str) -> u64 {
     }
 }
 
+/// Parse the replay tape override, if any. `@<path>` loads the
+/// comma-separated tape from a file (how large shrunk inputs are
+/// reported; see [`tape_replay_command`]).
+fn env_tape() -> Option<Vec<u64>> {
+    let s = std::env::var("DPD_PROPTEST_TAPE").ok()?;
+    let s = match s.strip_prefix('@') {
+        Some(path) => std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("DPD_PROPTEST_TAPE file '{path}': {e}")),
+        None => s,
+    };
+    Some(
+        s.split(',')
+            .map(|v| {
+                v.trim()
+                    .parse::<u64>()
+                    .unwrap_or_else(|_| panic!("DPD_PROPTEST_TAPE must be u64s, got '{v}'"))
+            })
+            .collect(),
+    )
+}
+
+/// The copy-pasteable replay setting for a shrunk tape: the full
+/// comma-separated tape inline when it is short enough, else spilled
+/// to a temp file and referenced as `@<path>` — the value must always
+/// reproduce the failure verbatim, never a truncated prefix.
+fn tape_replay_command(name: &str, seed: u64, tape: &[u64]) -> String {
+    let csv: Vec<String> = tape.iter().map(u64::to_string).collect();
+    let csv = csv.join(",");
+    if tape.len() <= 64 {
+        return format!("DPD_PROPTEST_TAPE='{csv}'");
+    }
+    let slug: String =
+        name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '-' }).collect();
+    let path = std::env::temp_dir().join(format!("dpd_proptest_{slug}_{seed}.tape"));
+    match std::fs::write(&path, &csv) {
+        Ok(()) => format!("DPD_PROPTEST_TAPE=@{}", path.display()),
+        // fall back to the inline form — long, but always correct
+        Err(_) => format!("DPD_PROPTEST_TAPE='{csv}'"),
+    }
+}
+
+/// Greedy tape minimization: try zeroing, halving and decrementing
+/// each draw while the property still fails; keep the smallest
+/// failing tape (bounded by a fixed re-run budget). Returns the
+/// shrunk tape and its failure message.
+fn shrink<F>(seed: u64, tape: Vec<u64>, msg: String, f: &mut F) -> (Vec<u64>, String)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut best_tape = tape;
+    let mut best_msg = msg;
+    let mut budget = 256usize;
+    let mut improved = true;
+    while improved && budget > 0 {
+        improved = false;
+        'outer: for i in 0..best_tape.len() {
+            let orig = best_tape[i];
+            for cand in [0u64, orig >> 1] {
+                if cand == orig || budget == 0 {
+                    continue;
+                }
+                budget -= 1;
+                let mut t = best_tape.clone();
+                t[i] = cand;
+                let mut rng = Rng::replaying(seed, t);
+                if let Err(m) = f(&mut rng) {
+                    // keep what was actually consumed: control flow may
+                    // have shifted, and the consumed tape is the one
+                    // that replays this failure exactly
+                    best_tape = rng.take_trace();
+                    best_msg = m;
+                    improved = true;
+                    break 'outer;
+                }
+            }
+        }
+    }
+    (best_tape, best_msg)
+}
+
+/// Render a tape for the panic message (capped — shrunk tapes are
+/// mostly zeros, but some properties draw thousands of values).
+fn render_tape(tape: &[u64]) -> String {
+    const SHOW: usize = 64;
+    let head: Vec<String> = tape.iter().take(SHOW).map(u64::to_string).collect();
+    if tape.len() > SHOW {
+        format!("{} (+{} more draws)", head.join(","), tape.len() - SHOW)
+    } else {
+        head.join(",")
+    }
+}
+
 /// Run `f` for `cases` seeded iterations; `f` returns Err(description)
-/// on a property violation. Panics with full reproduction info.
+/// on a property violation. Panics with full reproduction info: seed,
+/// original failure, and the shrunk input tape inline.
 pub fn check<F>(name: &str, cases: usize, mut f: F)
 where
     F: FnMut(&mut Rng) -> Result<(), String>,
 {
     let base = base_seed(name);
+    if let Some(tape) = env_tape() {
+        // single-case tape replay (the shrunk input from a report)
+        let mut rng = Rng::replaying(base, tape);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed replaying DPD_PROPTEST_TAPE (seed {base}): {msg}");
+        }
+        return;
+    }
     for case in 0..cases {
         let seed = base.wrapping_add(case as u64);
-        let mut rng = Rng::new(seed);
+        let mut rng = Rng::traced(seed);
         if let Err(msg) = f(&mut rng) {
+            let tape = rng.take_trace();
+            let (shrunk, shrunk_msg) = shrink(seed, tape, msg.clone(), &mut f);
             panic!(
                 "property '{name}' failed at case {case} (seed {seed}): {msg}\n\
-                 replay with DPD_PROPTEST_SEED={seed}"
+                 shrunk input ({} draws): [{}]\n\
+                 shrunk failure: {shrunk_msg}\n\
+                 replay with DPD_PROPTEST_SEED={seed} (the case), or additionally\n\
+                 {} (the shrunk input)",
+                shrunk.len(),
+                render_tape(&shrunk),
+                tape_replay_command(name, seed, &shrunk),
             );
         }
     }
@@ -87,6 +207,61 @@ mod tests {
                 Ok(())
             }
         });
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input")]
+    fn check_reports_shrunk_input_inline() {
+        check("shrinks", 5, |rng| {
+            let v = rng.next_u64();
+            if v > 10 {
+                Err(format!("v={v} too big"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinker_minimizes_failing_draws() {
+        // property: fails iff the first draw exceeds 1000. Any failing
+        // tape shrinks toward the boundary: halving stops working at
+        // <= 1000, so the shrunk head stays > 1000 but gets small.
+        let mut f = |rng: &mut Rng| -> Result<(), String> {
+            let v = rng.next_u64();
+            if v > 1000 {
+                Err(format!("v={v}"))
+            } else {
+                Ok(())
+            }
+        };
+        let mut rng = Rng::traced(1);
+        let first = rng.next_u64();
+        assert!(first > 1000, "seed 1's first draw is astronomically likely > 1000");
+        let tape = rng.take_trace();
+        let (shrunk, msg) = shrink(1, tape, format!("v={first}"), &mut f);
+        assert_eq!(shrunk.len(), 1);
+        assert!(shrunk[0] > 1000, "shrunk tape must still fail");
+        assert!(shrunk[0] <= 2001, "halving should reach the boundary, got {}", shrunk[0]);
+        assert!(msg.starts_with("v="));
+        // replaying the shrunk tape reproduces the shrunk failure
+        let mut rep = Rng::replaying(1, shrunk.clone());
+        assert_eq!(f(&mut rep), Err(msg));
+    }
+
+    #[test]
+    fn replay_command_is_always_complete() {
+        // short tapes inline verbatim
+        let cmd = tape_replay_command("p", 1, &[5, 6, 7]);
+        assert_eq!(cmd, "DPD_PROPTEST_TAPE='5,6,7'");
+        // long tapes spill to a file that holds the FULL tape — the
+        // reported command must reproduce the failure, never a prefix
+        let tape: Vec<u64> = (0..500).collect();
+        let cmd = tape_replay_command("some name!", 2, &tape);
+        let path = cmd.strip_prefix("DPD_PROPTEST_TAPE=@").expect("file form");
+        let read = std::fs::read_to_string(path).unwrap();
+        let parsed: Vec<u64> = read.split(',').map(|v| v.parse().unwrap()).collect();
+        assert_eq!(parsed, tape);
     }
 
     #[test]

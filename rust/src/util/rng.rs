@@ -11,6 +11,19 @@ pub struct Rng {
     s: [u64; 4],
     /// cached second Box-Muller sample
     gauss_spare: Option<f64>,
+    /// draw-tape recorder: every `next_u64` result, in order (the
+    /// property-test harness uses this to show and shrink a failing
+    /// case's inputs). `None` (the default) costs nothing.
+    trace: Option<Vec<u64>>,
+    /// replay tape: draws are served from here until exhausted, then
+    /// generation resumes from the seeded state
+    replay: Option<ReplayTape>,
+}
+
+#[derive(Clone, Debug)]
+struct ReplayTape {
+    vals: Vec<u64>,
+    pos: usize,
 }
 
 fn splitmix64(state: &mut u64) -> u64 {
@@ -31,12 +44,36 @@ impl Rng {
             splitmix64(&mut sm),
             splitmix64(&mut sm),
         ];
-        Rng { s, gauss_spare: None }
+        Rng { s, gauss_spare: None, trace: None, replay: None }
     }
 
-    /// Next raw u64.
+    /// Like [`Rng::new`] but recording every draw — the stream is
+    /// identical, only the tape is kept (see [`Rng::take_trace`]).
+    pub fn traced(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        rng.trace = Some(Vec::new());
+        rng
+    }
+
+    /// A recording generator that first replays `tape`, then falls
+    /// back to the seeded stream once the tape is exhausted. Replaying
+    /// an unmodified trace from the same seed reproduces the original
+    /// draw sequence exactly; the property-test shrinker perturbs the
+    /// tape to minimize failing inputs.
+    pub fn replaying(seed: u64, tape: Vec<u64>) -> Self {
+        let mut rng = Rng::traced(seed);
+        rng.replay = Some(ReplayTape { vals: tape, pos: 0 });
+        rng
+    }
+
+    /// Take the recorded draw tape (empty when not tracing).
+    pub fn take_trace(&mut self) -> Vec<u64> {
+        self.trace.take().unwrap_or_default()
+    }
+
+    /// The raw xoshiro256++ step (generation only, no tape).
     #[inline]
-    pub fn next_u64(&mut self) -> u64 {
+    fn gen_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[0]
             .wrapping_add(s[3])
@@ -50,6 +87,25 @@ impl Rng {
         s[2] ^= t;
         s[3] = s[3].rotate_left(45);
         result
+    }
+
+    /// Next raw u64 (replay tape first, then the seeded stream; traced
+    /// when recording).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let replayed = match self.replay.as_mut() {
+            Some(t) if t.pos < t.vals.len() => {
+                let v = t.vals[t.pos];
+                t.pos += 1;
+                Some(v)
+            }
+            _ => None,
+        };
+        let v = replayed.unwrap_or_else(|| self.gen_u64());
+        if let Some(t) = self.trace.as_mut() {
+            t.push(v);
+        }
+        v
     }
 
     /// Uniform f64 in [0, 1).
@@ -171,6 +227,39 @@ mod tests {
             seen[v] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn traced_stream_equals_plain_stream() {
+        let mut plain = Rng::new(99);
+        let mut traced = Rng::traced(99);
+        let want: Vec<u64> = (0..50).map(|_| plain.next_u64()).collect();
+        let got: Vec<u64> = (0..50).map(|_| traced.next_u64()).collect();
+        assert_eq!(got, want, "tracing must not perturb generation");
+        assert_eq!(traced.take_trace(), want);
+        assert!(traced.take_trace().is_empty(), "tape is taken, not copied");
+    }
+
+    #[test]
+    fn replay_reproduces_then_resumes_generation() {
+        let mut orig = Rng::traced(7);
+        let first: Vec<u64> = (0..10).map(|_| orig.next_u64()).collect();
+        let tape = orig.take_trace();
+        // full replay: identical draws, then the post-tape stream
+        // continues from the *seed's* own stream
+        let mut rep = Rng::replaying(7, tape.clone());
+        let again: Vec<u64> = (0..10).map(|_| rep.next_u64()).collect();
+        assert_eq!(again, first);
+        // a perturbed tape serves the perturbed values
+        let mut mutated = tape;
+        mutated[3] = 0;
+        let mut rep = Rng::replaying(7, mutated.clone());
+        let got: Vec<u64> = (0..10).map(|_| rep.next_u64()).collect();
+        assert_eq!(got, mutated);
+        // derived draws flow through the tape too
+        let mut rep = Rng::replaying(1, vec![0, u64::MAX]);
+        assert_eq!(rep.below(10), 0);
+        assert_eq!(rep.below(10), 9);
     }
 
     #[test]

@@ -1,0 +1,310 @@
+//! The cross-engine conformance matrix — every hermetic engine
+//! through the shared scenario grid (`util::conformance`), asserted
+//! under its documented contract:
+//!
+//! * **bit-exact family** — `Fixed`, `CycleSim` and `DeltaFixed@θ=0`
+//!   share the integer datapath: identical outputs on every scenario,
+//!   scalar and batched alike;
+//! * **scalar ≡ batched** — for *every* engine (including the float
+//!   reference and the frame engine), `run_batch` over ragged lanes
+//!   is bit-identical to per-lane scalar processing;
+//! * **float envelope** — `NativeF64` tracks the integer reference
+//!   within the documented small-signal tolerance (NMSE < -12 dB,
+//!   per-sample |dev| < 0.3);
+//! * **θ>0 drift bound** — `DeltaFixed` at the golden θ keeps
+//!   ACPR/EVM within 0.5 dB of the dense golden reference on the
+//!   golden OFDM waveform while cutting MACs by at least 2x (the
+//!   delta fast path's acceptance bar).
+//!
+//! Scenario coverage: OFDM bursts, tone pairs, silence/DC, full-scale
+//! saturation, mid-stream resets, save/load round-trips, ragged batch
+//! tails (see `util::conformance::standard_grid`).
+
+use std::path::PathBuf;
+
+use dpd_ne::accel::delta::DeltaCostModel;
+use dpd_ne::accel::ops::ModelDims;
+use dpd_ne::dpd::qgru::{ActKind, DeltaQGruDpd, QGruDpd};
+use dpd_ne::dpd::weights::{GruWeights, QGruWeights};
+use dpd_ne::dpd::GruDpd;
+use dpd_ne::fixed::QSpec;
+use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
+use dpd_ne::metrics::evm::{evm_db_nmse, nmse_db};
+use dpd_ne::pa::{PaSpec, RappMemPa};
+use dpd_ne::runtime::backend::{CycleSimDpd, InterpGruEngine, StreamingEngine};
+use dpd_ne::runtime::DpdEngine;
+use dpd_ne::util::conformance::{
+    lane_scenario, max_abs_dev, run_batched, run_scalar, standard_grid, Scenario,
+};
+use dpd_ne::util::json::Json;
+use dpd_ne::util::Rng;
+
+const GRID_SEED: u64 = 20260729;
+/// The golden delta threshold (codes) — must match the `delta.theta`
+/// pinned in tests/data/golden_ofdm_q12.json.
+const GOLDEN_THETA: u32 = 32;
+
+fn synth_float_weights(seed: u64) -> GruWeights {
+    let mut rng = Rng::new(seed);
+    let hidden = 10;
+    let features = 4;
+    let mut gen = |n: usize| -> Vec<f64> { (0..n).map(|_| rng.range(-0.15, 0.15)).collect() };
+    GruWeights {
+        hidden,
+        features,
+        w_ih: gen(3 * hidden * features),
+        b_ih: gen(3 * hidden),
+        w_hh: gen(3 * hidden * hidden),
+        b_hh: gen(3 * hidden),
+        w_fc: gen(2 * hidden),
+        b_fc: gen(2),
+        meta_bits: None,
+        meta_act: None,
+        meta_val_nmse_db: None,
+    }
+}
+
+fn qweights() -> QGruWeights {
+    synth_float_weights(42).quantize(QSpec::Q12)
+}
+
+/// Every hermetic engine under test, by label. The `Hlo` backend is
+/// not in the matrix: it needs an artifact tree and the xla feature,
+/// and its hermetic twin `Interp` carries the frame-semantics slot.
+fn makers() -> Vec<(&'static str, Box<dyn Fn() -> Box<dyn DpdEngine>>)> {
+    let qw = qweights();
+    let fw = synth_float_weights(42);
+    let mk_fixed = {
+        let qw = qw.clone();
+        move || -> Box<dyn DpdEngine> {
+            Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw.clone(), ActKind::Hard))))
+        }
+    };
+    let mk_cyclesim = {
+        let qw = qw.clone();
+        move || -> Box<dyn DpdEngine> {
+            Box::new(StreamingEngine::new(Box::new(CycleSimDpd::new(&qw))))
+        }
+    };
+    let mk_delta0 = {
+        let qw = qw.clone();
+        move || -> Box<dyn DpdEngine> {
+            Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
+                qw.clone(),
+                ActKind::Hard,
+                0,
+            ))))
+        }
+    };
+    let mk_delta_g = {
+        let qw = qw.clone();
+        move || -> Box<dyn DpdEngine> {
+            Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
+                qw.clone(),
+                ActKind::Hard,
+                GOLDEN_THETA,
+            ))))
+        }
+    };
+    let mk_native = {
+        let fw = fw.clone();
+        move || -> Box<dyn DpdEngine> {
+            Box::new(StreamingEngine::new(Box::new(GruDpd::new(fw.clone()))))
+        }
+    };
+    let mk_interp = move || -> Box<dyn DpdEngine> {
+        Box::new(InterpGruEngine::new(QGruDpd::new(qw.clone(), ActKind::Hard), 64))
+    };
+    vec![
+        ("fixed", Box::new(mk_fixed)),
+        ("cyclesim", Box::new(mk_cyclesim)),
+        ("delta-fixed@0", Box::new(mk_delta0)),
+        ("delta-fixed@golden", Box::new(mk_delta_g)),
+        ("native-f64", Box::new(mk_native)),
+        ("interp", Box::new(mk_interp)),
+    ]
+}
+
+fn scalar_run(mk: &dyn Fn() -> Box<dyn DpdEngine>, sc: &Scenario) -> Vec<[f64; 2]> {
+    let mut e = mk();
+    run_scalar(e.as_mut(), sc).unwrap_or_else(|err| panic!("scenario '{}': {err:#}", sc.name))
+}
+
+/// Look an engine up by label — the matrix selects members by name so
+/// reordering or extending `makers()` (as the README invites) can
+/// never silently drop an engine from a contract.
+fn maker_by_label<'a>(
+    makers: &'a [(&'static str, Box<dyn Fn() -> Box<dyn DpdEngine>>)],
+    label: &str,
+) -> &'a dyn Fn() -> Box<dyn DpdEngine> {
+    makers
+        .iter()
+        .find(|(l, _)| *l == label)
+        .unwrap_or_else(|| panic!("engine '{label}' missing from the matrix"))
+        .1
+        .as_ref()
+}
+
+#[test]
+fn integer_family_is_bit_exact_across_the_grid() {
+    // Fixed is the reference; CycleSim and DeltaFixed@0 must equal it
+    // bit for bit on every scenario — the θ=0 tentpole contract.
+    let makers = makers();
+    let reference = maker_by_label(&makers, "fixed");
+    for sc in standard_grid(GRID_SEED) {
+        let want = scalar_run(reference, &sc);
+        for label in ["cyclesim", "delta-fixed@0"] {
+            let got = scalar_run(maker_by_label(&makers, label), &sc);
+            assert_eq!(
+                got, want,
+                "{label}: scenario '{}' diverged from the Fixed reference",
+                sc.name
+            );
+        }
+    }
+}
+
+#[test]
+fn every_engine_is_batch_scalar_consistent_across_the_grid() {
+    // The batched path (ragged lanes, lane-carried state) must be
+    // bit-identical to per-lane scalar processing for EVERY engine —
+    // integer, delta at any θ, float and frame alike.
+    for (label, mk) in makers() {
+        for sc in standard_grid(GRID_SEED) {
+            for lanes in [2usize, 4] {
+                let want: Vec<Vec<[f64; 2]>> =
+                    (0..lanes).map(|k| scalar_run(mk.as_ref(), &lane_scenario(&sc, k))).collect();
+                let mut batched = mk();
+                let got = run_batched(batched.as_mut(), &sc, lanes).unwrap_or_else(|err| {
+                    panic!("{label}: scenario '{}' x{lanes}: {err:#}", sc.name)
+                });
+                assert_eq!(
+                    got, want,
+                    "{label}: scenario '{}' batched x{lanes} diverged from scalar",
+                    sc.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn native_f64_stays_inside_the_quantization_envelope() {
+    // The float reference's documented small-signal tolerance vs the
+    // integer datapath: NMSE < -12 dB, per-sample |dev| < 0.3.
+    let makers = makers();
+    let fixed = maker_by_label(&makers, "fixed");
+    let native = maker_by_label(&makers, "native-f64");
+    let small_signal =
+        ["ofdm-burst", "tone-pair", "midstream-reset", "save-load-roundtrip"];
+    for sc in standard_grid(GRID_SEED) {
+        if !small_signal.contains(&sc.name.as_str()) {
+            continue;
+        }
+        let want = scalar_run(fixed, &sc);
+        let got = scalar_run(native, &sc);
+        assert!(
+            max_abs_dev(&got, &want) < 0.3,
+            "native-f64: scenario '{}' beyond the per-sample envelope",
+            sc.name
+        );
+        let nmse = nmse_db(&got, &want);
+        assert!(
+            nmse < -12.0,
+            "native-f64: scenario '{}' NMSE {nmse:.1} dB vs integer reference",
+            sc.name
+        );
+    }
+}
+
+#[test]
+fn golden_theta_bounds_linearization_drift_and_cuts_macs() {
+    // The θ>0 acceptance bar, on the checked-in golden OFDM waveform:
+    // ACPR/EVM through the PA within 0.5 dB of the dense golden
+    // reference, at a measured MAC reduction of at least 2x.
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/golden_ofdm_q12.json");
+    let j = Json::parse_file(&path).expect("golden data file must parse");
+    let meta = j.get("meta").unwrap();
+    let seed = meta.get("weights_seed").unwrap().as_usize().unwrap() as u64;
+    let nfft = meta.get("welch_nfft").unwrap().as_usize().unwrap();
+    let iq: Vec<[f64; 2]> = j
+        .get("iq")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| {
+            let v = p.as_f64_vec().unwrap();
+            [v[0], v[1]]
+        })
+        .collect();
+
+    let spec = QSpec::Q12;
+    let w = QGruWeights::synthetic(seed, spec);
+    let mut dpd = DeltaQGruDpd::new(w, ActKind::Hard, GOLDEN_THETA);
+    let codes = spec.quantize_iq(&iq);
+    let out = dpd.run_codes(&codes);
+    let z = spec.dequantize_iq(&out);
+
+    // measured MAC reduction on this exact waveform
+    let red = DeltaCostModel::new(ModelDims::default()).mac_reduction(&dpd.stats());
+    assert!(
+        red >= 2.0,
+        "θ={GOLDEN_THETA} reduces MACs only {red:.2}x on the golden waveform (need >= 2x)"
+    );
+
+    // linearization drift vs the dense golden reference
+    let pa = RappMemPa::new(PaSpec::ganlike());
+    let g = pa.spec.target_gain();
+    let y = pa.run(&z);
+    let cfg = AcprConfig {
+        bw: 0.25,
+        offset: 0.275,
+        welch: dpd_ne::dsp::welch::WelchConfig { nfft, overlap: 0.5 },
+    };
+    let acpr = acpr_db(&y, &cfg).unwrap().acpr_dbc;
+    let evm = evm_db_nmse(&y, &iq, g);
+    let e = j.get("expected").unwrap();
+    let acpr_dense = e.get("acpr_on_dbc").unwrap().as_f64().unwrap();
+    let evm_dense = e.get("evm_on_db").unwrap().as_f64().unwrap();
+    assert!(
+        (acpr - acpr_dense).abs() <= 0.5,
+        "θ={GOLDEN_THETA}: ACPR drifted {:.3} dB (> 0.5)",
+        (acpr - acpr_dense).abs()
+    );
+    assert!(
+        (evm - evm_dense).abs() <= 0.5,
+        "θ={GOLDEN_THETA}: EVM drifted {:.3} dB (> 0.5)",
+        (evm - evm_dense).abs()
+    );
+}
+
+#[test]
+fn delta_theta_zero_is_bit_exact_on_the_golden_waveform_too() {
+    // Belt and braces beyond the synthetic grid: on the checked-in
+    // waveform the θ=0 delta engine reproduces the dense engine's
+    // pinned head codes exactly.
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/golden_ofdm_q12.json");
+    let j = Json::parse_file(&path).expect("golden data file must parse");
+    let seed =
+        j.get("meta").unwrap().get("weights_seed").unwrap().as_usize().unwrap() as u64;
+    let iq: Vec<[f64; 2]> = j
+        .get("iq")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| {
+            let v = p.as_f64_vec().unwrap();
+            [v[0], v[1]]
+        })
+        .collect();
+    let spec = QSpec::Q12;
+    let w = QGruWeights::synthetic(seed, spec);
+    let codes = spec.quantize_iq(&iq);
+    let mut dense = QGruDpd::new(w.clone(), ActKind::Hard);
+    let mut delta = DeltaQGruDpd::new(w, ActKind::Hard, 0);
+    assert_eq!(dense.run_codes(&codes), delta.run_codes(&codes));
+}

@@ -66,9 +66,10 @@ fn trait_objects_dispatch_uniformly() {
 #[test]
 fn available_kinds_match_build_features() {
     let kinds = available_kinds();
-    let expected = if cfg!(feature = "xla") { 5 } else { 4 };
+    let expected = if cfg!(feature = "xla") { 6 } else { 5 };
     assert_eq!(kinds.len(), expected);
     assert!(kinds.contains(&EngineKind::Interp));
+    assert!(kinds.contains(&EngineKind::DeltaFixed { theta: 0 }));
 }
 
 #[test]

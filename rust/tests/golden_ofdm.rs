@@ -137,6 +137,61 @@ fn golden_ofdm_acpr_evm_regression() {
 }
 
 #[test]
+fn golden_delta_trace_regression() {
+    // The pinned θ>0 delta trace: head codes bit-exact, column-update
+    // counts exact, ACPR/EVM within the golden tolerance — so any
+    // change to the delta kernel's threshold test, accumulator algebra
+    // or propagation bookkeeping fails with exact diffs, cross-checked
+    // against the generator's independently-written Python twin.
+    use dpd_ne::accel::delta::DeltaCostModel;
+    use dpd_ne::accel::ops::ModelDims;
+    use dpd_ne::dpd::qgru::DeltaQGruDpd;
+
+    let j = data();
+    let meta = j.get("meta").unwrap();
+    let seed = meta.get("weights_seed").unwrap().as_usize().unwrap() as u64;
+    let nfft = meta.get("welch_nfft").unwrap().as_usize().unwrap();
+    let d = j.get("delta").unwrap();
+    let theta = d.get("theta").unwrap().as_usize().unwrap() as u32;
+    let iq = load_iq(&j);
+
+    let spec = QSpec::Q12;
+    let mut dpd = DeltaQGruDpd::new(QGruWeights::synthetic(seed, spec), ActKind::Hard, theta);
+    let out_codes = dpd.run_codes(&spec.quantize_iq(&iq));
+
+    // ring 2: bit-exact delta datapath + exact skip accounting
+    let want_head = load_code_pairs(d.get("head_codes").unwrap());
+    assert_eq!(
+        &out_codes[..want_head.len()],
+        &want_head[..],
+        "delta datapath drifted from the golden delta codes"
+    );
+    let s = dpd.stats();
+    assert_eq!(s.in_updates, d.get("in_updates").unwrap().as_usize().unwrap() as u64);
+    assert_eq!(s.hid_updates, d.get("hid_updates").unwrap().as_usize().unwrap() as u64);
+    assert_eq!(s.in_cols, d.get("in_cols").unwrap().as_usize().unwrap() as u64);
+    assert_eq!(s.hid_cols, d.get("hid_cols").unwrap().as_usize().unwrap() as u64);
+    let red = DeltaCostModel::new(ModelDims::default()).mac_reduction(&s);
+    let want_red = d.get("mac_reduction").unwrap().as_f64().unwrap();
+    assert!((red - want_red).abs() < 1e-9, "MAC reduction {red} vs pinned {want_red}");
+    assert!(red >= 2.0, "golden θ lost the 2x MAC bar: {red:.2}x");
+
+    // ring 3: delta metrics within the golden tolerance
+    let z = spec.dequantize_iq(&out_codes);
+    let pa = RappMemPa::new(PaSpec::ganlike());
+    let g = pa.spec.target_gain();
+    let y = pa.run(&z);
+    let cfg = AcprConfig { bw: 0.25, offset: 0.275, welch: WelchConfig { nfft, overlap: 0.5 } };
+    let tol = j.get("expected").unwrap().get("tol_db").unwrap().as_f64().unwrap();
+    let acpr = acpr_db(&y, &cfg).unwrap().acpr_dbc;
+    let evm = evm_db_nmse(&y, &iq, g);
+    let want_acpr = d.get("acpr_on_dbc").unwrap().as_f64().unwrap();
+    let want_evm = d.get("evm_on_db").unwrap().as_f64().unwrap();
+    assert!((acpr - want_acpr).abs() <= tol, "delta ACPR {acpr:.6} vs {want_acpr:.6} ± {tol}");
+    assert!((evm - want_evm).abs() <= tol, "delta EVM {evm:.6} vs {want_evm:.6} ± {tol}");
+}
+
+#[test]
 fn golden_waveform_through_batched_sessions_is_bit_exact() {
     // Tie the golden vectors to the runtime: the same waveform pushed
     // through coalesced Fixed sessions must reproduce the direct
