@@ -18,12 +18,14 @@
 //! ```
 
 use dpd_ne::accel::AsicSpec;
-use dpd_ne::coordinator::{DpdService, EngineKind, ServiceConfig, SessionConfig};
+use dpd_ne::coordinator::{
+    DpdService, EngineKind, ServiceConfig, SessionAdaptConfig, SessionConfig,
+};
 use dpd_ne::dpd::weights::QGruWeights;
 use dpd_ne::fixed::QSpec;
 use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
 use dpd_ne::metrics::evm::evm_db_nmse;
-use dpd_ne::pa::{PaSpec, RappMemPa};
+use dpd_ne::pa::{DriftTrajectory, DriftingPa, PaSpec, RappMemPa};
 use dpd_ne::report::{f1, f2, Table};
 use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
 use dpd_ne::signal::papr::papr_db;
@@ -103,6 +105,57 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     println!("{}", t.render());
+
+    // closed-loop adaptation: step the PA through the reference drift
+    // and let the adaptive session (ILA trainer + engine hot-swaps)
+    // pull the linearization back. Opening through `open_session`
+    // loads the float twin from the manifest and inherits its
+    // qspec_bits, so the adaptive and frozen sessions deploy the same
+    // integer format.
+    let mut drifted = DriftingPa::new(pa.spec.clone(), DriftTrajectory::reference(0));
+    let acfg = SessionAdaptConfig { refresh_interval: 1 << 15, ..Default::default() };
+    let mut session = service.open_session(SessionConfig {
+        engine: EngineKind::Fixed,
+        adapt: Some(acfg),
+        ..Default::default()
+    })?;
+    let y_drift_frozen = {
+        // frozen DPD on the drifted PA: the "before adaptation" point
+        let cfg = SessionConfig { engine: EngineKind::Fixed, ..Default::default() };
+        let mut s = service.open_session(cfg)?;
+        for chunk in sig.iq.chunks(8192) {
+            s.push(chunk)?;
+        }
+        let u = s.finish()?.iq;
+        DriftingPa::new(pa.spec.clone(), DriftTrajectory::reference(0)).run(&u)
+    };
+    let acpr_frozen = acpr_db(&y_drift_frozen, &AcprConfig::default())?;
+    let mut x_fifo: Vec<[f64; 2]> = Vec::new();
+    for _round in 0..3 {
+        for chunk in sig.iq.chunks(8192) {
+            session.push(chunk)?;
+            x_fifo.extend_from_slice(chunk);
+            let u = session.drain()?;
+            if u.is_empty() {
+                continue;
+            }
+            let x: Vec<[f64; 2]> = x_fifo.drain(..u.len()).collect();
+            let y = drifted.run(&u);
+            session.adapt_feedback(&x, &u, &y)?;
+        }
+    }
+    session.adapt_barrier()?;
+    let astats = session.adapt_stats().expect("adaptive session");
+    println!(
+        "closed loop vs drifted PA: frozen DPD {} dBc; after {} refreshes ({} samples, \
+         recent train NMSE {:.1} dB) window ACPR {} dBc",
+        f1(acpr_frozen.acpr_dbc),
+        astats.refreshes,
+        astats.samples,
+        astats.recent_nmse_db,
+        astats.window_acpr_dbc.map(f1).unwrap_or_else(|| "-".into()),
+    );
+    let _ = session.finish()?;
     service.shutdown()?;
 
     // ASIC nominal operating point from the same weights

@@ -5,7 +5,10 @@
 //! weights, so it runs — and is tracked by CI — without artifacts),
 //! the delta-GRU fast path on the golden OFDM waveform (hermetic:
 //! dense vs delta throughput, measured MAC reduction and column-skip
-//! ratio at the golden θ), the one-shot coordinator wrapper, and the
+//! ratio at the golden θ), the closed-loop adaptation path on the
+//! golden adapt waveform (hermetic: refresh-cycle rate through the
+//! ILA trainer + re-quantization bridge, and the reference-drift
+//! cost/recovery numbers), the one-shot coordinator wrapper, and the
 //! frame-engine path through the unified `DpdEngine` backend
 //! (interpreted always; HLO/PJRT under `--features xla`).
 //!
@@ -25,6 +28,7 @@ use dpd_ne::dpd::Dpd;
 use dpd_ne::dsp::fft::Fft;
 use dpd_ne::dsp::welch::{welch_psd, WelchConfig};
 use dpd_ne::fixed::QSpec;
+use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
 use dpd_ne::pa::{PaSpec, RappMemPa};
 use dpd_ne::runtime::{DpdEngine as _, EngineFactory, Manifest};
 use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
@@ -192,6 +196,98 @@ fn main() -> anyhow::Result<()> {
         report.metric("delta_mac_reduction", reduction);
         report.metric("delta_update_ratio", stats.update_ratio());
         report.push(r);
+    }
+
+    // closed-loop adaptation on the golden adapt waveform (hermetic):
+    // the sustained refresh-cycle rate (train one refresh interval of
+    // feedback + re-quantize + rebuild the deployed engine) and the
+    // reference-drift recovery numbers — CI tracks adapt_refresh_hz
+    // and adapt_recovered_acpr_db so the closed loop's speed and
+    // effectiveness stay on the record next to the delta metrics
+    {
+        use dpd_ne::dpd::adapt::{identity_init, AdaptConfig, AdaptTrainer};
+        use dpd_ne::pa::{DriftTrajectory, DriftingPa};
+        use dpd_ne::util::json::Json;
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("tests/data/golden_ofdm_q12.json");
+        let j = Json::parse_file(&path)?;
+        let a = j.get("adapt")?;
+        let iq: Vec<[f64; 2]> = j
+            .get("adapt_waveform")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let v = p.as_f64_vec().unwrap();
+                [v[0], v[1]]
+            })
+            .collect();
+        let seed = a.get("init_seed")?.as_usize()? as u64;
+        let gate_bound = a.get("gate_bound")?.as_f64()?;
+        let passes = a.get("passes")?.as_usize()?;
+        let d = a.get("drift")?;
+        let drift = DriftTrajectory {
+            gain_db: d.get("gain_db")?.as_f64()?,
+            sat_scale: d.get("sat_scale")?.as_f64()?,
+            phase_add: d.get("phase_add")?.as_f64()?,
+            ramp_samples: 0,
+        };
+        let spec = QSpec::Q12;
+
+        // refresh-cycle rate: one 4096-sample training interval plus
+        // the re-quantization bridge and engine rebuild per iteration
+        let fb_u = &iq[..4096];
+        let fb_y = pa.run(fb_u);
+        let mut tr =
+            AdaptTrainer::new(identity_init(seed, 10, gate_bound), AdaptConfig::default())?;
+        let r = time_it("adapt refresh cycle (4096-sample interval)", budget, || {
+            tr.observe(fb_u, &fb_y).unwrap();
+            let eng = QGruDpd::new(tr.quantized(spec), ActKind::Hard);
+            std::hint::black_box(eng);
+        });
+        let hz = r.per_second(1.0);
+        println!(
+            "{}  -> {:.1} refreshes/s ({:.2} MSps of feedback absorbed)",
+            r.summary(),
+            hz,
+            r.per_second(fb_u.len() as f64) / 1e6
+        );
+        report.metric("adapt_refresh_hz", hz);
+        report.push(r);
+
+        // recovery numbers (the tests/adapt.rs protocol, reported):
+        // phase A on the nominal plant, reference drift, phase B
+        let acpr_cfg = AcprConfig {
+            welch: dpd_ne::dsp::welch::WelchConfig { nfft: 2048, overlap: 0.5 },
+            ..Default::default()
+        };
+        let deployed_acpr = |tr: &AdaptTrainer, traj: DriftTrajectory| -> f64 {
+            let mut eng = QGruDpd::new(tr.quantized(spec), ActKind::Hard);
+            let z = spec.dequantize_iq(&eng.run_codes(&spec.quantize_iq(&iq)));
+            let y = DriftingPa::new(PaSpec::ganlike(), traj).run(&z);
+            acpr_db(&y, &acpr_cfg).unwrap().acpr_dbc
+        };
+        let mut tr =
+            AdaptTrainer::new(identity_init(seed, 10, gate_bound), AdaptConfig::default())?;
+        let mut closed_loop = |tr: &mut AdaptTrainer, traj: DriftTrajectory, n: usize| {
+            for _ in 0..n {
+                let u = GruDpd::new(tr.snapshot()).run(&iq);
+                let y = DriftingPa::new(PaSpec::ganlike(), traj).run(&u);
+                tr.observe(&u, &y).unwrap();
+            }
+        };
+        let nominal = DriftTrajectory::none();
+        closed_loop(&mut tr, nominal, passes);
+        let a_nom = deployed_acpr(&tr, nominal);
+        let a_frozen = deployed_acpr(&tr, drift);
+        closed_loop(&mut tr, drift, passes);
+        let a_rec = deployed_acpr(&tr, drift);
+        println!(
+            "adapt recovery: adapted {a_nom:.2} dBc, drift cost {:.2} dB, recovered {:.2} dB",
+            a_frozen - a_nom,
+            a_frozen - a_rec
+        );
+        report.metric("adapt_drift_cost_db", a_frozen - a_nom);
+        report.metric("adapt_recovered_acpr_db", a_frozen - a_rec);
     }
 
     // engines (need artifacts)

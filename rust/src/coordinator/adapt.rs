@@ -1,0 +1,405 @@
+//! The service-side closed-loop adaptation plane: a background adapt
+//! worker that every adaptive [`StreamSession`](super::StreamSession)
+//! feeds PA observations into, and the engine hot-swap path back to
+//! the session's worker.
+//!
+//! ```text
+//!   caller ── x ──► StreamSession ── Cmd::Frame ──► engine worker
+//!     │  push/drain                      ▲               │ u
+//!     │                                  │ Cmd::Swap     ▼
+//!     └─ adapt_feedback(x, u, y) ──► adapt worker   (deployed DPD)
+//!            (y from the PA / feedback receiver)
+//! ```
+//!
+//! The adapt worker owns one [`AdaptTrainer`] per registered session.
+//! Feedback bursts stream in over a bounded channel (a slow trainer
+//! backpressures `adapt_feedback`, never the data path), the trainer
+//! runs its ILA windows in-thread, and every
+//! [`SessionAdaptConfig::refresh_interval`] consumed samples it
+//! re-quantizes the float twin and sends the session's engine worker a
+//! [`Cmd::Swap`] — an **atomic hot-swap at a frame boundary**: worker
+//! commands are serialized, so every frame that was queued before the
+//! swap runs on the old engine, every frame after it on the new one,
+//! and a coalescing group in progress is flushed first. The swapped-in
+//! engine starts from reset state exactly like a freshly opened one
+//! (`tests/adapt.rs` pins both sides of the boundary bit-exactly).
+//!
+//! Linearization quality is metered in-thread: feedback accumulates
+//! into a measurement window and each full window yields ACPR (Welch)
+//! and EVM (against `ĝ·backoff·x`) into the session-shared
+//! [`AdaptStats`] — the window just before a refresh is kept as the
+//! *pre* metric and the first full window after it as *post*, so
+//! before/after linearization of every hot-swap is on the record in
+//! [`SessionStats`](super::SessionStats).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use super::service::{Cmd, EngineBuild};
+use crate::dpd::adapt::{AdaptConfig, AdaptTrainer};
+use crate::dpd::qgru::{ActKind, DeltaQGruDpd, QGruDpd};
+use crate::dpd::{GruDpd, GruWeights};
+use crate::fixed::QSpec;
+use crate::metrics::acpr::{acpr_db, AcprConfig};
+use crate::metrics::evm::evm_db_nmse;
+use crate::runtime::backend::StreamingEngine;
+use crate::runtime::{DpdEngine, EngineKind};
+use crate::util::C64;
+
+/// Per-session adaptation configuration (rides in
+/// [`SessionConfig`](super::SessionConfig)).
+#[derive(Clone, Copy, Debug)]
+pub struct SessionAdaptConfig {
+    /// trainer hyperparameters
+    pub trainer: AdaptConfig,
+    /// feedback samples consumed between engine refreshes
+    pub refresh_interval: u64,
+    /// integer format of re-quantized weight sets (and of the initial
+    /// engine). `None` inherits: manifest-backed sessions take the
+    /// artifact tree's `qspec_bits` (so adaptive and frozen sessions
+    /// on one service deploy the same format), hermetic
+    /// `open_adaptive_session` callers get the project's Q2.10
+    pub bits: Option<u32>,
+    /// measurement-window length for the ACPR/EVM meters
+    pub meter_window: usize,
+    /// Welch FFT size of the meter (must fit the window)
+    pub meter_nfft: usize,
+}
+
+impl Default for SessionAdaptConfig {
+    fn default() -> Self {
+        SessionAdaptConfig {
+            trainer: AdaptConfig::default(),
+            refresh_interval: 1 << 16,
+            bits: None,
+            meter_window: 4096,
+            meter_nfft: 1024,
+        }
+    }
+}
+
+/// Live adaptation metrics, shared between the adapt worker and the
+/// owning session (surfaced through `SessionStats::adapt`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdaptStats {
+    /// engine hot-swaps performed
+    pub refreshes: u64,
+    /// feedback samples consumed by the trainer
+    pub samples: u64,
+    /// optimizer steps taken
+    pub steps: u64,
+    /// lifetime training NMSE (dB)
+    pub nmse_db: f64,
+    /// recent training NMSE (dB, per-window EMA) — the convergence
+    /// signal to watch; the lifetime average is history-dominated
+    pub recent_nmse_db: f64,
+    /// ACPR / EVM of the most recent completed measurement window
+    pub window_acpr_dbc: Option<f64>,
+    pub window_evm_db: Option<f64>,
+    /// the window completed just before the latest refresh
+    pub pre_refresh_acpr_dbc: Option<f64>,
+    pub pre_refresh_evm_db: Option<f64>,
+    /// the first window completed after the latest refresh
+    pub post_refresh_acpr_dbc: Option<f64>,
+    pub post_refresh_evm_db: Option<f64>,
+}
+
+impl AdaptStats {
+    /// ACPR recovered across the latest refresh (positive = better).
+    pub fn refresh_acpr_gain_db(&self) -> Option<f64> {
+        Some(self.pre_refresh_acpr_dbc? - self.post_refresh_acpr_dbc?)
+    }
+}
+
+/// How the adapt worker turns the adapted float twin into a fresh
+/// engine at every refresh: it snapshots/re-quantizes the weights on
+/// its own thread, but hands the worker an [`EngineBuild`] closure so
+/// the engine itself is still constructed *in the worker thread* that
+/// will own it (the same in-thread-construction rule `Cmd::Open`
+/// follows).
+pub(crate) type Rebuild = Box<dyn Fn(&GruWeights) -> EngineBuild + Send>;
+
+/// The refresh bridge for a weights-backed engine kind: re-quantize
+/// the float twin through the canonical bridge and construct the
+/// matching streaming engine. Frame/simulator kinds have no refresh
+/// path (the cycle model and the AOT artifact are compile-time weight
+/// sets) and are rejected at session-open time.
+pub(crate) fn rebuild_for_kind(kind: EngineKind, spec: QSpec) -> Result<Rebuild> {
+    Ok(match kind {
+        EngineKind::NativeF64 => Box::new(move |w: &GruWeights| -> EngineBuild {
+            let w = w.clone();
+            Box::new(move || {
+                Ok(Box::new(StreamingEngine::new(Box::new(GruDpd::new(w))))
+                    as Box<dyn DpdEngine>)
+            })
+        }),
+        EngineKind::Fixed => Box::new(move |w: &GruWeights| -> EngineBuild {
+            let qw = w.quantize(spec);
+            Box::new(move || {
+                Ok(Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw, ActKind::Hard))))
+                    as Box<dyn DpdEngine>)
+            })
+        }),
+        EngineKind::DeltaFixed { theta } => Box::new(move |w: &GruWeights| -> EngineBuild {
+            let qw = w.quantize(spec);
+            Box::new(move || {
+                Ok(Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
+                    qw,
+                    ActKind::Hard,
+                    theta,
+                )))) as Box<dyn DpdEngine>)
+            })
+        }),
+        other => bail!(
+            "engine kind {other:?} has no adaptation refresh path \
+             (use NativeF64, Fixed or DeltaFixed)"
+        ),
+    })
+}
+
+/// Commands a session (or `open_session`) sends to the adapt worker.
+pub(crate) enum AdaptCmd {
+    Open {
+        id: u64,
+        trainer: Box<AdaptTrainer>,
+        cfg: SessionAdaptConfig,
+        rebuild: Rebuild,
+        /// the session's engine worker (swap target)
+        worker_cmd: SyncSender<Cmd>,
+        shared: Arc<Mutex<AdaptStats>>,
+    },
+    /// One feedback burst: original samples `x`, deployed-DPD output
+    /// `u` (what entered the PA), PA observation `y`.
+    Feedback {
+        id: u64,
+        x: Vec<[f64; 2]>,
+        u: Vec<[f64; 2]>,
+        y: Vec<[f64; 2]>,
+    },
+    /// Barrier: replied to once every command queued before it has
+    /// been fully processed (feedback consumed, swaps *sent*).
+    Sync { id: u64, reply: SyncSender<()> },
+    Close { id: u64 },
+}
+
+struct Slot {
+    trainer: Box<AdaptTrainer>,
+    cfg: SessionAdaptConfig,
+    rebuild: Rebuild,
+    worker_cmd: SyncSender<Cmd>,
+    shared: Arc<Mutex<AdaptStats>>,
+    refreshes: u64,
+    /// trainer-consumed samples since the last swap (full BPTT windows
+    /// only — pushed-but-pending or skipped silence doesn't count)
+    since_refresh: u64,
+    /// optimizer steps at the last swap: a refresh only fires when the
+    /// twin actually trained since then (re-deploying an unchanged
+    /// generation would pointlessly reset the live engine's state)
+    steps_at_refresh: u64,
+    /// measurement accumulators (original x, PA observation y)
+    meter_x: Vec<[f64; 2]>,
+    meter_y: Vec<[f64; 2]>,
+    /// latest completed window metrics
+    window: Option<(f64, f64)>,
+    /// pre-refresh metrics latched at the latest swap
+    pre: Option<(f64, f64)>,
+    /// true until the first post-refresh window completes
+    await_post: bool,
+}
+
+impl Slot {
+    fn publish(&self) {
+        let p = self.trainer.progress();
+        let mut s = self.shared.lock().expect("adapt stats lock");
+        s.refreshes = self.refreshes;
+        s.samples = p.samples;
+        s.steps = p.steps;
+        s.nmse_db = p.nmse_db;
+        s.recent_nmse_db = p.recent_nmse_db;
+        s.window_acpr_dbc = self.window.map(|w| w.0);
+        s.window_evm_db = self.window.map(|w| w.1);
+        s.pre_refresh_acpr_dbc = self.pre.map(|w| w.0);
+        s.pre_refresh_evm_db = self.pre.map(|w| w.1);
+        // while a post-refresh window is still pending the post slots
+        // are cleared; once it lands, meter() wrote it directly and
+        // publish leaves it alone
+        if self.await_post {
+            s.post_refresh_acpr_dbc = None;
+            s.post_refresh_evm_db = None;
+        }
+    }
+
+    /// Fold a feedback burst into the measurement window; on a full
+    /// window compute ACPR/EVM and rotate the pre/post bookkeeping.
+    fn meter(&mut self, x: &[[f64; 2]], y: &[[f64; 2]]) {
+        self.meter_x.extend_from_slice(x);
+        self.meter_y.extend_from_slice(y);
+        let win = self.cfg.meter_window;
+        while self.meter_x.len() >= win {
+            let wx: Vec<[f64; 2]> = self.meter_x.drain(..win).collect();
+            let wy: Vec<[f64; 2]> = self.meter_y.drain(..win).collect();
+            let cfg = AcprConfig {
+                welch: crate::dsp::welch::WelchConfig {
+                    nfft: self.cfg.meter_nfft,
+                    overlap: 0.5,
+                },
+                ..Default::default()
+            };
+            let Ok(acpr) = acpr_db(&wy, &cfg) else { continue };
+            let g = self
+                .trainer
+                .gain_est()
+                .map(|g| g.scale(self.trainer.config().backoff))
+                .unwrap_or(C64::ONE);
+            let evm = evm_db_nmse(&wy, &wx, g);
+            self.window = Some((acpr.acpr_dbc, evm));
+            if self.await_post {
+                self.await_post = false;
+                let mut s = self.shared.lock().expect("adapt stats lock");
+                s.post_refresh_acpr_dbc = Some(acpr.acpr_dbc);
+                s.post_refresh_evm_db = Some(evm);
+            }
+        }
+    }
+
+    /// Re-quantize the twin and hot-swap the session engine.
+    fn refresh(&mut self, id: u64) {
+        let build = (self.rebuild)(&self.trainer.snapshot());
+        // blocking send is safe: the engine worker never blocks on
+        // session output, so its command queue always drains; a failed
+        // in-worker build poisons the session like any engine failure
+        self.worker_cmd.send(Cmd::Swap { id, build }).ok();
+        self.refreshes += 1;
+        self.since_refresh = 0;
+        self.steps_at_refresh = self.trainer.progress().steps;
+        self.pre = self.window;
+        self.await_post = true;
+        // drop buffered pre-swap feedback so the latched post-refresh
+        // window measures the *new* generation, not a window dominated
+        // by samples the old engine predistorted
+        self.meter_x.clear();
+        self.meter_y.clear();
+    }
+}
+
+/// The adapt worker event loop: one thread per service, multiplexing
+/// every adaptive session's trainer. Exits when the service and all
+/// sessions have dropped their senders.
+pub(crate) fn adapt_worker_loop(rx: Receiver<AdaptCmd>) {
+    let mut slots: HashMap<u64, Slot> = HashMap::new();
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            AdaptCmd::Open { id, trainer, cfg, rebuild, worker_cmd, shared } => {
+                slots.insert(
+                    id,
+                    Slot {
+                        trainer,
+                        cfg,
+                        rebuild,
+                        worker_cmd,
+                        shared,
+                        refreshes: 0,
+                        since_refresh: 0,
+                        steps_at_refresh: 0,
+                        meter_x: Vec::new(),
+                        meter_y: Vec::new(),
+                        window: None,
+                        pre: None,
+                        await_post: false,
+                    },
+                );
+            }
+            AdaptCmd::Feedback { id, x, u, y } => {
+                let Some(slot) = slots.get_mut(&id) else { continue };
+                let consumed_before = slot.trainer.progress().samples;
+                // a malformed burst (length mismatch) poisons nothing:
+                // the trainer rejects it and the slot just skips
+                if slot.trainer.observe(&u, &y).is_err() {
+                    continue;
+                }
+                slot.meter(&x, &y);
+                let p = slot.trainer.progress();
+                // refresh cadence counts samples the trainer actually
+                // consumed (full windows), and only fires when the
+                // twin trained since the last swap — a silence gap must
+                // not hot-swap an unchanged generation and reset the
+                // live engine's state for nothing
+                slot.since_refresh += p.samples - consumed_before;
+                if slot.since_refresh >= slot.cfg.refresh_interval
+                    && p.steps > slot.steps_at_refresh
+                {
+                    slot.refresh(id);
+                }
+                slot.publish();
+            }
+            AdaptCmd::Sync { reply, .. } => {
+                reply.send(()).ok();
+            }
+            AdaptCmd::Close { id } => {
+                slots.remove(&id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpd::adapt::identity_init;
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let cfg = SessionAdaptConfig::default();
+        assert!(cfg.refresh_interval > 0);
+        assert!(cfg.meter_window >= cfg.meter_nfft);
+        assert_eq!(cfg.bits, None, "format is inherited unless pinned");
+    }
+
+    #[test]
+    fn rebuild_covers_the_refreshable_kinds_and_rejects_the_rest() {
+        let spec = QSpec::Q12;
+        let w = identity_init(3, 10, 0.15);
+        for kind in [
+            EngineKind::NativeF64,
+            EngineKind::Fixed,
+            EngineKind::DeltaFixed { theta: 16 },
+        ] {
+            let rebuild = rebuild_for_kind(kind, spec).unwrap();
+            let mut eng = rebuild(&w)().unwrap();
+            let mut burst = vec![[0.1, -0.05]; 8];
+            eng.reset();
+            eng.process_frame(&mut burst).unwrap();
+            assert!(eng.batch_class().is_some(), "{kind:?} engines stay coalescible");
+        }
+        assert!(rebuild_for_kind(EngineKind::Interp, spec).is_err());
+        assert!(rebuild_for_kind(EngineKind::CycleSim, spec).is_err());
+    }
+
+    #[test]
+    fn rebuilt_engines_track_the_weight_generation() {
+        // the coalescer separation: engines rebuilt from different
+        // float twins land in different batch classes
+        let spec = QSpec::Q12;
+        let rebuild = rebuild_for_kind(EngineKind::Fixed, spec).unwrap();
+        let w0 = identity_init(3, 10, 0.15);
+        let mut w1 = w0.clone();
+        w1.w_fc[0] += 0.25;
+        let a = rebuild(&w0)().unwrap().batch_class();
+        let b = rebuild(&w0)().unwrap().batch_class();
+        let c = rebuild(&w1)().unwrap().batch_class();
+        assert_eq!(a, b, "same generation, same class");
+        assert_ne!(a, c, "refreshed generation must never coalesce with the old");
+    }
+
+    #[test]
+    fn refresh_gain_math() {
+        let mut s = AdaptStats::default();
+        assert!(s.refresh_acpr_gain_db().is_none());
+        s.pre_refresh_acpr_dbc = Some(-30.0);
+        s.post_refresh_acpr_dbc = Some(-38.5);
+        assert!((s.refresh_acpr_gain_db().unwrap() - 8.5).abs() < 1e-12);
+    }
+}

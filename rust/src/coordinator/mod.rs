@@ -16,15 +16,23 @@
 //! interpreted frame engine, or — under `--features xla` — the AOT
 //! HLO executed via PJRT. Python never runs here.
 //!
+//! Closed-loop adaptation ([`adapt`]) rides on the same service: an
+//! adaptive session feeds PA observations to a background trainer,
+//! which periodically re-quantizes the float twin and hot-swaps the
+//! session's engine at a frame boundary — the runtime's answer to an
+//! amplifier that drifts with temperature, bias and carrier setup.
+//!
 //! [`Coordinator`] remains as the one-shot compatibility wrapper
 //! (open a session, push everything, finish) for batch callers.
 
+pub mod adapt;
 pub mod framer;
 pub mod pipeline;
 pub mod service;
 pub mod session;
 pub mod stats;
 
+pub use adapt::{AdaptStats, SessionAdaptConfig};
 pub use framer::Framer;
 pub use pipeline::{Coordinator, CoordinatorConfig, EngineKind, StreamOutput};
 pub use service::{DpdService, ServiceConfig};

@@ -53,20 +53,33 @@
 //! flushes the group first), and a failed batch fails *every* session
 //! in it with the same sticky error. See DESIGN.md §Coalescing batch
 //! scheduler.
+//!
+//! The service also hosts one background **adapt worker**
+//! ([`super::adapt`]): adaptive sessions stream PA feedback to it, an
+//! ILA trainer adapts their float twin in-thread, and every refresh
+//! interval it re-quantizes fresh integer weights and hot-swaps the
+//! session's engine through [`Cmd::Swap`] — atomic at a frame
+//! boundary, with the new engine built in the worker thread like any
+//! `Open`. See DESIGN.md §Closed-loop adaptation.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
+use super::adapt::{
+    adapt_worker_loop, rebuild_for_kind, AdaptCmd, AdaptStats, SessionAdaptConfig,
+};
 use super::framer::Frame;
-use super::session::{SessionConfig, StreamSession};
-use crate::dpd::{DpdLane, DpdState};
+use super::session::{AdaptLink, SessionConfig, StreamSession};
+use crate::dpd::adapt::AdaptTrainer;
+use crate::dpd::{DpdLane, DpdState, GruWeights};
+use crate::fixed::QSpec;
 use crate::runtime::{DpdEngine, EngineFactory, Manifest};
 
 /// Configuration of the worker pool.
@@ -134,6 +147,15 @@ pub(crate) enum Cmd {
     Close {
         id: u64,
     },
+    /// Hot-swap the session's engine (the adapt worker's refresh
+    /// path). Atomic at a frame boundary by construction: commands are
+    /// serialized, a coalescing group in progress is flushed first,
+    /// and the replacement is built in-thread (like `Open`) and starts
+    /// from reset state. A failed build poisons the session.
+    Swap {
+        id: u64,
+        build: EngineBuild,
+    },
 }
 
 /// What a worker sends back on a session's output channel.
@@ -150,6 +172,9 @@ struct Active {
     /// coalescing identity of this session's engine; `None` = never
     /// grouped (engine opted out, or the session asked for exclusivity)
     batch_class: Option<u64>,
+    /// whether this session opted into coalescing (kept so an engine
+    /// hot-swap can recompute `batch_class` for the new generation)
+    coalesce: bool,
 }
 
 /// One frame waiting in the scheduler's current coalescing group.
@@ -280,7 +305,8 @@ fn worker_loop(rx: Receiver<Cmd>, max_batch: usize) {
                             // only keep the session if the opener is
                             // still there
                             if reply.send(Ok(ack)).is_ok() {
-                                sessions.insert(id, Active { engine, out, batch_class });
+                                sessions
+                                    .insert(id, Active { engine, out, batch_class, coalesce });
                             }
                         }
                         Err(e) => {
@@ -334,6 +360,31 @@ fn worker_loop(rx: Receiver<Cmd>, max_batch: usize) {
                     run_group(&mut sessions, &mut group);
                     sessions.remove(&id);
                 }
+                Cmd::Swap { id, build } => {
+                    // the frame-boundary hot-swap: any coalescing group
+                    // is flushed first, so frames queued before this
+                    // command ran on the old engine and frames after it
+                    // run on the new one — nothing straddles the swap
+                    run_group(&mut sessions, &mut group);
+                    let Some(a) = sessions.get_mut(&id) else { continue };
+                    match build() {
+                        Ok(mut engine) => {
+                            engine.reset();
+                            a.batch_class = if a.coalesce && max_batch > 1 {
+                                engine.batch_class()
+                            } else {
+                                None
+                            };
+                            a.engine = engine;
+                        }
+                        Err(e) => {
+                            let a = sessions.remove(&id).expect("just found");
+                            a.out
+                                .send(OutMsg::Err(e.context("hot-swapping session engine")))
+                                .ok();
+                        }
+                    }
+                }
             }
         }
         run_group(&mut sessions, &mut group);
@@ -357,6 +408,10 @@ pub struct DpdService {
     /// (custom-engine sessions still work, kind-based ones error)
     manifest: Option<Arc<Manifest>>,
     workers: Vec<Worker>,
+    /// the closed-loop adaptation worker (one per service; idle until
+    /// an adaptive session registers)
+    adapt_tx: SyncSender<AdaptCmd>,
+    adapt_handle: JoinHandle<()>,
     next_id: AtomicU64,
 }
 
@@ -391,7 +446,22 @@ impl DpdService {
                 Ok(Worker { cmd, load: Arc::new(AtomicUsize::new(0)), handle })
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(DpdService { cfg, manifest, workers, next_id: AtomicU64::new(0) })
+        // the adaptation worker: one per service, blocked on its
+        // channel until a session registers; bounded so a slow trainer
+        // backpressures `adapt_feedback`, never the data path
+        let (adapt_tx, adapt_rx) = sync_channel(8);
+        let adapt_handle = std::thread::Builder::new()
+            .name("dpd-adapt".to_string())
+            .spawn(move || adapt_worker_loop(adapt_rx))
+            .map_err(|e| anyhow!("spawning the adapt worker: {e}"))?;
+        Ok(DpdService {
+            cfg,
+            manifest,
+            workers,
+            adapt_tx,
+            adapt_handle,
+            next_id: AtomicU64::new(0),
+        })
     }
 
     /// Pool size.
@@ -415,6 +485,15 @@ impl DpdService {
     /// engine kind is per-session, so heterogeneous sessions — e.g. a
     /// `Fixed` production session plus a `CycleSim` shadow session
     /// auditing it — share one pool.
+    ///
+    /// With [`SessionConfig::adapt`] set, the session opens in
+    /// closed-loop mode: the float twin is loaded from the manifest's
+    /// `weights_float`, the initial engine is built from it through
+    /// the re-quantization bridge, and PA feedback pushed via
+    /// [`StreamSession::adapt_feedback`] drives periodic engine
+    /// hot-swaps (see [`open_adaptive_session`]).
+    ///
+    /// [`open_adaptive_session`]: DpdService::open_adaptive_session
     pub fn open_session(&self, cfg: SessionConfig) -> Result<StreamSession> {
         let manifest = match &self.manifest {
             Some(m) => Arc::clone(m),
@@ -425,8 +504,65 @@ impl DpdService {
                     .context("DpdService found no artifact tree for a kind-based session")?,
             ),
         };
+        if let Some(acfg) = cfg.adapt {
+            let w0 = GruWeights::load(&manifest.weights_float)
+                .context("loading the float twin for an adaptive session")?;
+            // inherit the artifact tree's integer format unless the
+            // caller pinned one: adaptive and frozen sessions on the
+            // same service must deploy the same Q-format
+            let acfg =
+                SessionAdaptConfig { bits: acfg.bits.or(Some(manifest.qspec_bits)), ..acfg };
+            return self.open_adaptive_session(SessionConfig { adapt: Some(acfg), ..cfg }, w0);
+        }
         let factory = EngineFactory::from_manifest(cfg.engine, manifest)?;
         self.open_session_with(cfg, move || factory.build())
+    }
+
+    /// Open a closed-loop adaptive session from an explicit float twin
+    /// (no artifact tree needed — the hermetic path the adaptation
+    /// tests and benches use). `cfg.adapt` must be set; `cfg.engine`
+    /// must be a refreshable kind (`NativeF64`, `Fixed` or
+    /// `DeltaFixed`). The initial engine is generation 0 of the
+    /// re-quantization bridge applied to `w0`, so the deployed engine
+    /// and the trainer twin start from the same function.
+    pub fn open_adaptive_session(
+        &self,
+        cfg: SessionConfig,
+        w0: GruWeights,
+    ) -> Result<StreamSession> {
+        let acfg = cfg
+            .adapt
+            .ok_or_else(|| anyhow!("open_adaptive_session needs SessionConfig.adapt"))?;
+        anyhow::ensure!(acfg.refresh_interval > 0, "adapt.refresh_interval must be > 0");
+        anyhow::ensure!(
+            acfg.meter_nfft >= 2 && acfg.meter_nfft.is_power_of_two(),
+            "adapt.meter_nfft must be a power of two >= 2 (the Welch FFT size)"
+        );
+        anyhow::ensure!(
+            acfg.meter_window >= acfg.meter_nfft,
+            "adapt.meter_window must hold at least one Welch segment"
+        );
+        let spec = QSpec::new(acfg.bits.unwrap_or(12))?;
+        let rebuild = rebuild_for_kind(cfg.engine, spec)?;
+        let trainer = AdaptTrainer::new(w0.clone(), acfg.trainer)?;
+        let initial = rebuild(&w0);
+        // strip `adapt` before delegating: the inner opener would
+        // reject it (custom engines can't be refreshed without w0)
+        let mut session =
+            self.open_session_with(SessionConfig { adapt: None, ..cfg }, initial)?;
+        let shared = Arc::new(Mutex::new(AdaptStats::default()));
+        self.adapt_tx
+            .send(AdaptCmd::Open {
+                id: session.id(),
+                trainer: Box::new(trainer),
+                cfg: acfg,
+                rebuild,
+                worker_cmd: session.worker_cmd(),
+                shared: Arc::clone(&shared),
+            })
+            .map_err(|_| anyhow!("the adapt worker terminated"))?;
+        session.attach_adapt(AdaptLink { tx: self.adapt_tx.clone(), shared });
+        Ok(session)
     }
 
     /// Open a session around a caller-supplied engine constructor,
@@ -438,6 +574,11 @@ impl DpdService {
     where
         F: FnOnce() -> Result<Box<dyn DpdEngine>> + Send + 'static,
     {
+        anyhow::ensure!(
+            cfg.adapt.is_none(),
+            "adaptive sessions need a float twin — use open_session (manifest) or \
+             open_adaptive_session (explicit weights), not open_session_with"
+        );
         let (wi, worker) = self
             .workers
             .iter()
@@ -504,6 +645,8 @@ impl DpdService {
             drop(cmd);
             handle.join().map_err(|_| anyhow!("a DPD worker panicked"))?;
         }
+        drop(self.adapt_tx);
+        self.adapt_handle.join().map_err(|_| anyhow!("the adapt worker panicked"))?;
         Ok(())
     }
 }

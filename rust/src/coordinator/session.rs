@@ -22,12 +22,15 @@
 //! [`DpdService`]: super::DpdService
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
-use std::sync::Arc;
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use super::adapt::{AdaptCmd, AdaptStats, SessionAdaptConfig};
 use super::framer::Framer;
 use super::service::{Cmd, OutMsg};
 use super::stats::{LatencyAgg, PipelineStats};
@@ -56,6 +59,13 @@ pub struct SessionConfig {
     /// way — opting out (`false`) only buys a latency-critical session
     /// exclusive engine dispatches.
     pub coalesce: bool,
+    /// closed-loop adaptation: when set, the session owns an
+    /// [`AdaptTrainer`](crate::dpd::AdaptTrainer) slot on the service's
+    /// adapt worker, accepts PA feedback through
+    /// [`StreamSession::adapt_feedback`], and its engine is hot-swapped
+    /// to a freshly re-quantized weight generation every
+    /// `refresh_interval` feedback samples.
+    pub adapt: Option<SessionAdaptConfig>,
 }
 
 impl Default for SessionConfig {
@@ -65,6 +75,7 @@ impl Default for SessionConfig {
             frame_len: None,
             queue_depth: None,
             coalesce: true,
+            adapt: None,
         }
     }
 }
@@ -87,6 +98,10 @@ pub struct SessionStats {
     pub dpd_busy: Duration,
     pub lat_mean: Duration,
     pub lat_max: Duration,
+    /// closed-loop adaptation metrics (None for non-adaptive sessions):
+    /// refresh count, trainer progress, and the before/after ACPR/EVM
+    /// of the latest engine hot-swap
+    pub adapt: Option<AdaptStats>,
 }
 
 impl SessionStats {
@@ -152,6 +167,16 @@ pub struct StreamSession {
     /// sticky failure (formatted chain) — every later call reports it
     error: Option<String>,
     closed: bool,
+    /// closed-loop adaptation plumbing (adaptive sessions only)
+    adapt: Option<AdaptLink>,
+}
+
+/// The session's handle onto the service adapt worker: the command
+/// channel feedback flows through, and the stats block the worker
+/// publishes into.
+pub(crate) struct AdaptLink {
+    pub(crate) tx: SyncSender<AdaptCmd>,
+    pub(crate) shared: Arc<Mutex<AdaptStats>>,
 }
 
 impl StreamSession {
@@ -184,7 +209,18 @@ impl StreamSession {
             load,
             error: None,
             closed: false,
+            adapt: None,
         }
+    }
+
+    /// Wire the adapt-worker link (service-side, right after open).
+    pub(crate) fn attach_adapt(&mut self, link: AdaptLink) {
+        self.adapt = Some(link);
+    }
+
+    /// The worker command channel (the adapt worker's swap target).
+    pub(crate) fn worker_cmd(&self) -> SyncSender<Cmd> {
+        self.cmd.clone()
     }
 
     /// Session id (unique within its service).
@@ -235,7 +271,73 @@ impl StreamSession {
             dpd_busy: self.busy,
             lat_mean: self.lat.mean(),
             lat_max: self.lat.max(),
+            adapt: self.adapt_stats(),
         }
+    }
+
+    /// Whether this session runs the closed adaptation loop.
+    pub fn is_adaptive(&self) -> bool {
+        self.adapt.is_some()
+    }
+
+    /// Live adaptation metrics (None for non-adaptive sessions).
+    pub fn adapt_stats(&self) -> Option<AdaptStats> {
+        self.adapt.as_ref().map(|l| *l.shared.lock().expect("adapt stats lock"))
+    }
+
+    /// Push one burst of PA feedback into the adaptation loop: `x` the
+    /// original samples, `u` the deployed DPD's output for them (what
+    /// entered the amplifier), `y` the feedback receiver's observation
+    /// of the PA output. All three must be equal length and aligned
+    /// sample-for-sample. Blocks (backpressure) when the adapt worker
+    /// is behind; the data path is unaffected. The trainer consumes
+    /// the pairs in BPTT windows and hot-swaps this session's engine
+    /// every `refresh_interval` *consumed* samples (silence the
+    /// trainer skips never triggers a swap) — see
+    /// [`SessionStats::adapt`] for before/after linearization metrics.
+    pub fn adapt_feedback(
+        &mut self,
+        x: &[[f64; 2]],
+        u: &[[f64; 2]],
+        y: &[[f64; 2]],
+    ) -> Result<()> {
+        self.check()?;
+        anyhow::ensure!(
+            x.len() == u.len() && u.len() == y.len(),
+            "adapt_feedback bursts must align: x {} / u {} / y {}",
+            x.len(),
+            u.len(),
+            y.len()
+        );
+        let Some(link) = &self.adapt else {
+            bail!("session {} is not adaptive (SessionConfig.adapt not set)", self.id)
+        };
+        link.tx
+            .send(AdaptCmd::Feedback {
+                id: self.id,
+                x: x.to_vec(),
+                u: u.to_vec(),
+                y: y.to_vec(),
+            })
+            .map_err(|_| anyhow!("the adapt worker terminated"))
+    }
+
+    /// Barrier: returns once the adapt worker has consumed every
+    /// feedback burst pushed so far — any refresh they triggered has
+    /// been *sent* to the engine worker, so frames pushed after this
+    /// call run on the refreshed engine. (Deterministic swap-boundary
+    /// control for tests and the CLI demo; production callers can just
+    /// stream and let refreshes land asynchronously.)
+    pub fn adapt_barrier(&mut self) -> Result<()> {
+        self.check()?;
+        let Some(link) = &self.adapt else {
+            bail!("session {} is not adaptive (SessionConfig.adapt not set)", self.id)
+        };
+        let (reply_tx, reply_rx) = sync_channel(1);
+        link.tx
+            .send(AdaptCmd::Sync { id: self.id, reply: reply_tx })
+            .map_err(|_| anyhow!("the adapt worker terminated"))?;
+        reply_rx.recv().map_err(|_| anyhow!("the adapt worker died mid-barrier"))
     }
 
     /// Reset the engine's hidden state, in stream order: a partial
@@ -272,6 +374,9 @@ impl StreamSession {
         }
         self.closed = true;
         self.load.fetch_sub(1, Ordering::SeqCst);
+        if let Some(link) = self.adapt.take() {
+            link.tx.send(AdaptCmd::Close { id: self.id }).ok();
+        }
         let mut stats = self.stats().to_pipeline();
         stats.wall = self.t_open.elapsed();
         Ok(StreamOutput { iq: std::mem::take(&mut self.ready), stats })
@@ -384,6 +489,9 @@ impl Drop for StreamSession {
             // worker is already gone, which frees everything anyway
             self.cmd.send(Cmd::Close { id: self.id }).ok();
             self.load.fetch_sub(1, Ordering::SeqCst);
+            if let Some(link) = self.adapt.take() {
+                link.tx.send(AdaptCmd::Close { id: self.id }).ok();
+            }
         }
     }
 }
@@ -398,6 +506,7 @@ mod tests {
         assert_eq!(cfg.engine, EngineKind::Fixed);
         assert!(cfg.frame_len.is_none() && cfg.queue_depth.is_none());
         assert!(cfg.coalesce, "sessions default into the batched path");
+        assert!(cfg.adapt.is_none(), "sessions default to a frozen engine");
     }
 
     #[test]
@@ -412,6 +521,7 @@ mod tests {
             dpd_busy: Duration::from_millis(50),
             lat_mean: Duration::from_micros(20),
             lat_max: Duration::from_micros(90),
+            adapt: None,
         };
         assert!((s.throughput_msps() - 10.0).abs() < 1e-9);
         assert!((s.engine_msps() - 20.0).abs() < 1e-9);
@@ -435,6 +545,7 @@ mod tests {
             dpd_busy: Duration::ZERO,
             lat_mean: Duration::ZERO,
             lat_max: Duration::ZERO,
+            adapt: None,
         };
         assert_eq!(s.throughput_msps(), 0.0);
         assert_eq!(s.engine_msps(), 0.0);

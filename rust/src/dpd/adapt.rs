@@ -1,0 +1,813 @@
+//! Closed-loop adaptation: the indirect-learning-architecture (ILA)
+//! trainer that keeps the f64 GRU twin tracking a drifting amplifier.
+//!
+//! The deployment loop (OpenDPDv2's argument made runnable, under the
+//! weight-refresh assumption DeltaDPD bakes in):
+//!
+//! ```text
+//!   x ──► DPD (deployed QGruDpd) ──► u ──► PA ──► y
+//!                 ▲                  │           │
+//!                 │ re-quantize      └─►(u, y)──►│ feedback
+//!           AdaptTrainer (f64 twin) ◄────────────┘
+//! ```
+//!
+//! The trainer learns the PA *postinverse*: feed the normalized
+//! feedback `v = y / (backoff · ĝ)` through the float GRU and regress
+//! its output onto the actual PA input `u` (squared error, tracked as
+//! NMSE) — at the ILA fixed point the deployed chain linearizes to
+//! gain `backoff · ĝ`, i.e. `backoff` is genuine peak headroom. At
+//! the fixed point the postinverse equals the predistorter
+//! (the classic ILA identity), so a snapshot of the adapted float
+//! weights — re-quantized through the canonical round-half-up bridge
+//! ([`GruWeights::quantize`], bit-identical to the Python oracle) — is
+//! a fresh deployable integer weight set. The complex reference gain
+//! `ĝ` is estimated online (per-window least squares, EMA-smoothed):
+//! a drifting amplifier's gain moves, and regressing against a stale
+//! fixed gain would drive the DPD into saturation chasing an
+//! infeasible target (measured: recovery fails without it).
+//!
+//! Training is streamed: `observe(u, y)` buffers feedback pairs and
+//! runs one truncated-BPTT window (length [`AdaptConfig::window`])
+//! plus one Adam step per full window, carrying the GRU hidden state
+//! across windows. Everything is plain f64 — this is the *float twin*
+//! path; the deployed integer engines never train.
+//!
+//! Weight generations: every snapshot carries a fresh content
+//! fingerprint ([`QGruWeights::fingerprint`]), so the coalescing batch
+//! scheduler can never group sessions running different weight
+//! generations — refreshed and stale engines are distinct batch
+//! classes by construction (pinned in `tests/adapt.rs`).
+
+use anyhow::{ensure, Result};
+
+use super::gru::{hardsigmoid, hardtanh, GruDpd};
+use super::weights::{GruWeights, QGruWeights};
+use crate::fixed::QSpec;
+use crate::util::C64;
+
+/// EMA coefficient of the per-window NMSE tracked by
+/// [`AdaptTrainer::recent_nmse_db`] (~ the last 20 windows dominate).
+const RECENT_NMSE_EMA: f64 = 0.05;
+
+/// Trainer hyperparameters. The defaults are the measured operating
+/// point of the adaptation tests and the `serve --adapt` demo
+/// (validated on the golden adapt waveform: ~13 dB ACPR improvement
+/// from scratch — reaching the paper's −45.3 dBc — and ~9 dB
+/// re-convergence after the reference drift).
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptConfig {
+    /// Adam learning rate
+    pub lr: f64,
+    /// BPTT truncation window (samples per optimizer step)
+    pub window: usize,
+    /// target linearization gain as a fraction of the estimated PA
+    /// gain (peak headroom, like `PaSpec::target_backoff`)
+    pub backoff: f64,
+    /// EMA coefficient of the per-window least-squares gain estimate
+    pub gain_ema: f64,
+    /// Adam first-moment decay
+    pub beta1: f64,
+    /// Adam second-moment decay
+    pub beta2: f64,
+    /// Adam denominator epsilon
+    pub eps: f64,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        AdaptConfig {
+            lr: 3e-3,
+            window: 32,
+            backoff: 0.95,
+            gain_ema: 0.1,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+}
+
+/// Per-tensor buffers matching the [`GruWeights`] layout (gradients,
+/// Adam moments).
+#[derive(Clone, Debug)]
+struct Tensors {
+    w_ih: Vec<f64>,
+    b_ih: Vec<f64>,
+    w_hh: Vec<f64>,
+    b_hh: Vec<f64>,
+    w_fc: Vec<f64>,
+    b_fc: Vec<f64>,
+}
+
+impl Tensors {
+    fn zeros_like(w: &GruWeights) -> Tensors {
+        Tensors {
+            w_ih: vec![0.0; w.w_ih.len()],
+            b_ih: vec![0.0; w.b_ih.len()],
+            w_hh: vec![0.0; w.w_hh.len()],
+            b_hh: vec![0.0; w.b_hh.len()],
+            w_fc: vec![0.0; w.w_fc.len()],
+            b_fc: vec![0.0; w.b_fc.len()],
+        }
+    }
+
+    fn zero(&mut self) {
+        for t in [
+            &mut self.w_ih,
+            &mut self.b_ih,
+            &mut self.w_hh,
+            &mut self.b_hh,
+            &mut self.w_fc,
+            &mut self.b_fc,
+        ] {
+            t.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+}
+
+/// Live adaptation counters (what [`SessionStats`] surfaces).
+///
+/// [`SessionStats`]: crate::coordinator::SessionStats
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdaptProgress {
+    /// feedback samples consumed by completed windows
+    pub samples: u64,
+    /// optimizer steps taken (completed BPTT windows)
+    pub steps: u64,
+    /// lifetime training NMSE in dB (postinverse error vs PA input,
+    /// accumulated since the trainer started)
+    pub nmse_db: f64,
+    /// recent training NMSE in dB (EMA over per-window NMSE) — the
+    /// convergence signal an operator should watch: the lifetime
+    /// average stays dominated by the large from-scratch early error
+    /// and barely moves on a drift event
+    pub recent_nmse_db: f64,
+    /// current complex gain estimate (None until the first window)
+    pub gain_est: Option<[f64; 2]>,
+}
+
+/// The streamed ILA trainer over the f64 GRU twin (module docs).
+pub struct AdaptTrainer {
+    w: GruWeights,
+    cfg: AdaptConfig,
+    m: Tensors,
+    v: Tensors,
+    grads: Tensors,
+    /// running beta powers for Adam bias correction (kept as products,
+    /// not `powf`, so trajectories are exactly reproducible)
+    b1_pow: f64,
+    b2_pow: f64,
+    steps: u64,
+    /// carried hidden state across windows (truncated BPTT)
+    h: Vec<f64>,
+    g_est: Option<C64>,
+    /// buffered partial window: (pa input u, pa output y)
+    pend_u: Vec<[f64; 2]>,
+    pend_y: Vec<[f64; 2]>,
+    err_acc: f64,
+    ref_acc: f64,
+    /// EMA of the per-window error/reference power ratio (the recent
+    /// convergence signal; coefficient [`RECENT_NMSE_EMA`])
+    recent_ratio: Option<f64>,
+    samples: u64,
+    // per-window scratch (allocated once)
+    hs: Vec<f64>,
+    xs: Vec<f64>,
+    gis: Vec<f64>,
+    ghs: Vec<f64>,
+    rs: Vec<f64>,
+    zs: Vec<f64>,
+    ns: Vec<f64>,
+    es: Vec<f64>,
+    dh: Vec<f64>,
+    dgi_row: Vec<f64>,
+    dgh_row: Vec<f64>,
+}
+
+impl AdaptTrainer {
+    /// Start from an initial float twin. Any hidden size works; the
+    /// feature preprocessor is the fixed 4-feature conditioning of the
+    /// paper's model.
+    pub fn new(w0: GruWeights, cfg: AdaptConfig) -> Result<AdaptTrainer> {
+        ensure!(w0.features == 4, "AdaptTrainer needs the 4-feature conditioning");
+        ensure!(cfg.window >= 2, "AdaptConfig.window must be >= 2");
+        ensure!(cfg.lr > 0.0 && cfg.lr.is_finite(), "AdaptConfig.lr must be positive");
+        ensure!((0.0..=1.0).contains(&cfg.gain_ema), "AdaptConfig.gain_ema in [0, 1]");
+        ensure!(cfg.backoff > 0.0, "AdaptConfig.backoff must be positive");
+        let hd = w0.hidden;
+        let t = cfg.window;
+        let m = Tensors::zeros_like(&w0);
+        Ok(AdaptTrainer {
+            v: m.clone(),
+            grads: m.clone(),
+            m,
+            b1_pow: 1.0,
+            b2_pow: 1.0,
+            steps: 0,
+            h: vec![0.0; hd],
+            g_est: None,
+            pend_u: Vec::new(),
+            pend_y: Vec::new(),
+            err_acc: 0.0,
+            ref_acc: 0.0,
+            recent_ratio: None,
+            samples: 0,
+            hs: vec![0.0; (t + 1) * hd],
+            xs: vec![0.0; t * 4],
+            gis: vec![0.0; t * 3 * hd],
+            ghs: vec![0.0; t * 3 * hd],
+            rs: vec![0.0; t * hd],
+            zs: vec![0.0; t * hd],
+            ns: vec![0.0; t * hd],
+            es: vec![0.0; t * 2],
+            dh: vec![0.0; hd],
+            dgi_row: vec![0.0; 3 * hd],
+            dgh_row: vec![0.0; 3 * hd],
+            w: w0,
+            cfg,
+        })
+    }
+
+    /// The live float twin (the weights being adapted).
+    pub fn weights(&self) -> &GruWeights {
+        &self.w
+    }
+
+    pub fn config(&self) -> AdaptConfig {
+        self.cfg
+    }
+
+    /// Lifetime training NMSE (postinverse output vs PA input) in dB,
+    /// accumulated over every window since the trainer started.
+    pub fn nmse_db(&self) -> f64 {
+        if self.ref_acc == 0.0 {
+            return 0.0;
+        }
+        10.0 * (self.err_acc / self.ref_acc).log10()
+    }
+
+    /// Recent training NMSE in dB: an EMA over per-window NMSE. This
+    /// is the convergence signal to watch — the lifetime average stays
+    /// dominated by the from-scratch early error and barely reacts to
+    /// a drift event, while this one tracks the current fit.
+    pub fn recent_nmse_db(&self) -> f64 {
+        match self.recent_ratio {
+            Some(r) if r > 0.0 => 10.0 * r.log10(),
+            _ => self.nmse_db(),
+        }
+    }
+
+    /// Current complex PA gain estimate.
+    pub fn gain_est(&self) -> Option<C64> {
+        self.g_est
+    }
+
+    /// Live counters snapshot.
+    pub fn progress(&self) -> AdaptProgress {
+        AdaptProgress {
+            samples: self.samples,
+            steps: self.steps,
+            nmse_db: self.nmse_db(),
+            recent_nmse_db: self.recent_nmse_db(),
+            gain_est: self.g_est.map(|g| [g.re, g.im]),
+        }
+    }
+
+    /// **The re-quantization bridge**: snapshot the adapted float twin
+    /// into a fresh integer weight set through the canonical
+    /// round-half-up quantizer — bit-identical to the Python oracle
+    /// (`ref.quantize_params`), which the golden adapt vectors pin.
+    /// Out-of-range weights saturate onto the code grid (part of the
+    /// bridge's contract; the adaptation tests measure post-bridge
+    /// linearization *including* that clamp). The returned set carries
+    /// its own content fingerprint, i.e. a new weight *generation* the
+    /// batch coalescer will never mix with the old one.
+    pub fn quantized(&self, spec: QSpec) -> QGruWeights {
+        self.w.quantize(spec)
+    }
+
+    /// Snapshot the float twin itself (e.g. to refresh a `NativeF64`
+    /// session engine).
+    pub fn snapshot(&self) -> GruWeights {
+        self.w.clone()
+    }
+
+    /// Stream one feedback burst: `u` is what entered the amplifier
+    /// (the deployed DPD's output), `y` what came back from the
+    /// feedback receiver. Pairs are buffered and consumed in
+    /// [`AdaptConfig::window`]-sized BPTT windows; a partial tail
+    /// waits for the next burst.
+    pub fn observe(&mut self, u: &[[f64; 2]], y: &[[f64; 2]]) -> Result<()> {
+        ensure!(u.len() == y.len(), "feedback burst length mismatch: {} vs {}", u.len(), y.len());
+        self.pend_u.extend_from_slice(u);
+        self.pend_y.extend_from_slice(y);
+        let t = self.cfg.window;
+        let full = (self.pend_u.len() / t) * t;
+        if full == 0 {
+            return Ok(());
+        }
+        // take the buffers out for the duration of the windows (they
+        // alias `self`), then slide the tail down in place and hand
+        // the same allocations back — no per-burst reallocation
+        let mut pu = std::mem::take(&mut self.pend_u);
+        let mut py = std::mem::take(&mut self.pend_y);
+        for s in (0..full).step_by(t) {
+            self.train_window(&pu[s..s + t], &py[s..s + t]);
+        }
+        let rem = pu.len() - full;
+        pu.copy_within(full.., 0);
+        pu.truncate(rem);
+        py.copy_within(full.., 0);
+        py.truncate(rem);
+        self.pend_u = pu;
+        self.pend_y = py;
+        Ok(())
+    }
+
+    /// One BPTT window + Adam step over `window` feedback pairs.
+    fn train_window(&mut self, u: &[[f64; 2]], y: &[[f64; 2]]) {
+        let t_len = u.len();
+        // per-window least-squares complex gain y ~= g * u, EMA-smoothed
+        let mut num = C64::ZERO;
+        let mut den = 0.0;
+        for (uu, yy) in u.iter().zip(y) {
+            let cu = C64::new(uu[0], uu[1]);
+            let cy = C64::new(yy[0], yy[1]);
+            num = num + cy * cu.conj();
+            den += cu.norm_sq();
+        }
+        // a window with (effectively) zero PA input carries no gain
+        // information and no usable regression target — skip it
+        // entirely, whether it's startup silence or a mid-stream idle
+        // carrier. Training on it would drag the twin toward f(·)=0
+        // and its steps could trigger a pointless engine hot-swap.
+        if den <= 1e-30 {
+            return;
+        }
+        let gw = num.scale(1.0 / den);
+        let g = match self.g_est {
+            None => gw,
+            Some(g) => g.scale(1.0 - self.cfg.gain_ema) + gw.scale(self.cfg.gain_ema),
+        };
+        self.g_est = Some(g);
+        // v = y / (backoff · g): the normalized postinverse input. At
+        // the ILA fixed point the deployed chain then realizes
+        // y = backoff·ĝ·x — backoff < 1 really is peak *headroom*
+        // (normalizing by backoff/ĝ instead would converge to ĝ/backoff,
+        // driving the PA hotter and inverting the knob).
+        let q = g.scale(self.cfg.backoff).recip();
+
+        let hd = self.w.hidden;
+        let rows = 3 * hd;
+        let (mut w_err, mut w_ref) = (0.0f64, 0.0f64);
+        // ---- forward, recording every intermediate ----
+        self.hs[..hd].copy_from_slice(&self.h);
+        for t in 0..t_len {
+            let cv = C64::new(y[t][0], y[t][1]) * q;
+            let x = GruDpd::features([cv.re, cv.im]);
+            self.xs[t * 4..t * 4 + 4].copy_from_slice(&x);
+            let (h_prev, rest) = self.hs[t * hd..].split_at_mut(hd);
+            let h_next = &mut rest[..hd];
+            let gi = &mut self.gis[t * rows..(t + 1) * rows];
+            for r in 0..rows {
+                let row = &self.w.w_ih[r * 4..(r + 1) * 4];
+                gi[r] = self.w.b_ih[r]
+                    + row[0] * x[0]
+                    + row[1] * x[1]
+                    + row[2] * x[2]
+                    + row[3] * x[3];
+            }
+            let gh = &mut self.ghs[t * rows..(t + 1) * rows];
+            for r in 0..rows {
+                let row = &self.w.w_hh[r * hd..(r + 1) * hd];
+                let mut acc = self.w.b_hh[r];
+                for (wv, hv) in row.iter().zip(h_prev.iter()) {
+                    acc += wv * hv;
+                }
+                gh[r] = acc;
+            }
+            for k in 0..hd {
+                let r = hardsigmoid(gi[k] + gh[k]);
+                let z = hardsigmoid(gi[hd + k] + gh[hd + k]);
+                let n = hardtanh(gi[2 * hd + k] + r * gh[2 * hd + k]);
+                self.rs[t * hd + k] = r;
+                self.zs[t * hd + k] = z;
+                self.ns[t * hd + k] = n;
+                h_next[k] = (1.0 - z) * n + z * h_prev[k];
+            }
+            for o in 0..2 {
+                let row = &self.w.w_fc[o * hd..(o + 1) * hd];
+                let mut yy = self.w.b_fc[o] + [cv.re, cv.im][o];
+                for (wv, hv) in row.iter().zip(h_next.iter()) {
+                    yy += wv * hv;
+                }
+                self.es[t * 2 + o] = yy - u[t][o];
+            }
+            w_err += self.es[t * 2] * self.es[t * 2] + self.es[t * 2 + 1] * self.es[t * 2 + 1];
+            w_ref += u[t][0] * u[t][0] + u[t][1] * u[t][1];
+        }
+        self.err_acc += w_err;
+        self.ref_acc += w_ref;
+        if w_ref > 0.0 {
+            let ratio = w_err / w_ref;
+            self.recent_ratio = Some(match self.recent_ratio {
+                None => ratio,
+                Some(r) => r * (1.0 - RECENT_NMSE_EMA) + ratio * RECENT_NMSE_EMA,
+            });
+        }
+        self.h.copy_from_slice(&self.hs[t_len * hd..(t_len + 1) * hd]);
+        self.samples += t_len as u64;
+
+        // ---- backward (reverse-mode through the window) ----
+        self.grads.zero();
+        self.dh.iter_mut().for_each(|v| *v = 0.0);
+        let g = &mut self.grads;
+        let dh = &mut self.dh;
+        let dgi_row = &mut self.dgi_row;
+        let dgh_row = &mut self.dgh_row;
+        let scale = 2.0 / t_len as f64;
+        for t in (0..t_len).rev() {
+            let h_prev = &self.hs[t * hd..(t + 1) * hd];
+            let h_next = &self.hs[(t + 1) * hd..(t + 2) * hd];
+            let gi = &self.gis[t * rows..(t + 1) * rows];
+            let gh = &self.ghs[t * rows..(t + 1) * rows];
+            let (rs, zs, ns) = (
+                &self.rs[t * hd..(t + 1) * hd],
+                &self.zs[t * hd..(t + 1) * hd],
+                &self.ns[t * hd..(t + 1) * hd],
+            );
+            // output layer
+            for o in 0..2 {
+                let dy = self.es[t * 2 + o] * scale;
+                g.b_fc[o] += dy;
+                let row_g = &mut g.w_fc[o * hd..(o + 1) * hd];
+                let row_w = &self.w.w_fc[o * hd..(o + 1) * hd];
+                for k in 0..hd {
+                    row_g[k] += dy * h_next[k];
+                    dh[k] += row_w[k] * dy;
+                }
+            }
+            // gate pass — STAGED: first derive every pre-activation
+            // gradient from the untouched dL/dh_t, only then fold the
+            // W_hh backprop into dh (mixing the two in one loop would
+            // contaminate dL/dh_t for later units with dL/dh_{t-1}
+            // contributions — the finite-difference suite pins this).
+            // hardsigmoid grad = 0.25 inside (-2, 2), hardtanh grad = 1
+            // inside (-1, 1), 0 outside.
+            for k in 0..hd {
+                let dhk = dh[k];
+                let dz = dhk * (h_prev[k] - ns[k]);
+                let dn = dhk * (1.0 - zs[k]);
+                let a_n = gi[2 * hd + k] + rs[k] * gh[2 * hd + k];
+                let dan = if a_n > -1.0 && a_n < 1.0 { dn } else { 0.0 };
+                let dr = dan * gh[2 * hd + k];
+                let a_r = gi[k] + gh[k];
+                let dar = if a_r > -2.0 && a_r < 2.0 { dr * 0.25 } else { 0.0 };
+                let a_z = gi[hd + k] + gh[hd + k];
+                let daz = if a_z > -2.0 && a_z < 2.0 { dz * 0.25 } else { 0.0 };
+                // dgi rows: [r at k, z at hd+k, n at 2hd+k]; dgh the
+                // same except the n row is scaled by r
+                dgi_row[k] = dar;
+                dgi_row[hd + k] = daz;
+                dgi_row[2 * hd + k] = dan;
+                dgh_row[k] = dar;
+                dgh_row[hd + k] = daz;
+                dgh_row[2 * hd + k] = dan * rs[k];
+            }
+            // direct carry into h_{t-1} through the z gate
+            for k in 0..hd {
+                dh[k] *= zs[k];
+            }
+            // parameter gradients + the W_hh path into h_{t-1}
+            let x = &self.xs[t * 4..t * 4 + 4];
+            for r_idx in 0..rows {
+                let dgi_r = dgi_row[r_idx];
+                let dgh_r = dgh_row[r_idx];
+                g.b_ih[r_idx] += dgi_r;
+                let row = &mut g.w_ih[r_idx * 4..r_idx * 4 + 4];
+                for c in 0..4 {
+                    row[c] += dgi_r * x[c];
+                }
+                g.b_hh[r_idx] += dgh_r;
+                let row_g = &mut g.w_hh[r_idx * hd..(r_idx + 1) * hd];
+                let row_w = &self.w.w_hh[r_idx * hd..(r_idx + 1) * hd];
+                for c in 0..hd {
+                    row_g[c] += dgh_r * h_prev[c];
+                    dh[c] += row_w[c] * dgh_r;
+                }
+            }
+        }
+
+        // ---- Adam step ----
+        self.steps += 1;
+        self.b1_pow *= self.cfg.beta1;
+        self.b2_pow *= self.cfg.beta2;
+        let bc1 = 1.0 - self.b1_pow;
+        let bc2 = 1.0 - self.b2_pow;
+        let (lr, b1, b2, eps) = (self.cfg.lr, self.cfg.beta1, self.cfg.beta2, self.cfg.eps);
+        let mut apply = |p: &mut [f64], gr: &[f64], m: &mut [f64], v: &mut [f64]| {
+            for i in 0..p.len() {
+                m[i] = b1 * m[i] + (1.0 - b1) * gr[i];
+                v[i] = b2 * v[i] + (1.0 - b2) * gr[i] * gr[i];
+                p[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
+            }
+        };
+        apply(&mut self.w.w_ih, &self.grads.w_ih, &mut self.m.w_ih, &mut self.v.w_ih);
+        apply(&mut self.w.b_ih, &self.grads.b_ih, &mut self.m.b_ih, &mut self.v.b_ih);
+        apply(&mut self.w.w_hh, &self.grads.w_hh, &mut self.m.w_hh, &mut self.v.w_hh);
+        apply(&mut self.w.b_hh, &self.grads.b_hh, &mut self.m.b_hh, &mut self.v.b_hh);
+        apply(&mut self.w.w_fc, &self.grads.w_fc, &mut self.m.w_fc, &mut self.v.w_fc);
+        apply(&mut self.w.b_fc, &self.grads.b_fc, &mut self.m.b_fc, &mut self.v.b_fc);
+    }
+}
+
+/// Deterministic small-random initial twin for from-scratch adaptation
+/// (gates uniform in ±`gate_bound`, FC zero so the initial DPD is the
+/// exact identity through the residual path — `serve --adapt` and the
+/// tests start here).
+pub fn identity_init(seed: u64, hidden: usize, gate_bound: f64) -> GruWeights {
+    let mut rng = crate::util::Rng::new(seed);
+    let mut gen =
+        |n: usize| -> Vec<f64> { (0..n).map(|_| rng.range(-gate_bound, gate_bound)).collect() };
+    GruWeights {
+        hidden,
+        features: 4,
+        w_ih: gen(3 * hidden * 4),
+        b_ih: gen(3 * hidden),
+        w_hh: gen(3 * hidden * hidden),
+        b_hh: gen(3 * hidden),
+        w_fc: vec![0.0; 2 * hidden],
+        b_fc: vec![0.0; 2],
+        meta_bits: None,
+        meta_act: None,
+        meta_val_nmse_db: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpd::Dpd;
+    use crate::util::Rng;
+
+    fn loss_of(
+        w: &GruWeights,
+        cfg: AdaptConfig,
+        h0: &[f64],
+        u: &[[f64; 2]],
+        v: &[[f64; 2]],
+    ) -> f64 {
+        // forward-only reference loss: mean squared error over the
+        // window, computed with a plain GruDpd clone of the math
+        let hd = w.hidden;
+        let mut h = h0.to_vec();
+        let mut loss = 0.0;
+        for (uu, vv) in u.iter().zip(v) {
+            let x = GruDpd::features(*vv);
+            let mut gi = vec![0.0; 3 * hd];
+            let mut gh = vec![0.0; 3 * hd];
+            for r in 0..3 * hd {
+                let row = &w.w_ih[r * 4..(r + 1) * 4];
+                gi[r] = w.b_ih[r] + row[0] * x[0] + row[1] * x[1] + row[2] * x[2] + row[3] * x[3];
+                let rowh = &w.w_hh[r * hd..(r + 1) * hd];
+                gh[r] = w.b_hh[r] + rowh.iter().zip(&h).map(|(a, b)| a * b).sum::<f64>();
+            }
+            for k in 0..hd {
+                let r = hardsigmoid(gi[k] + gh[k]);
+                let z = hardsigmoid(gi[hd + k] + gh[hd + k]);
+                let n = hardtanh(gi[2 * hd + k] + r * gh[2 * hd + k]);
+                h[k] = (1.0 - z) * n + z * h[k];
+            }
+            for o in 0..2 {
+                let row = &w.w_fc[o * hd..(o + 1) * hd];
+                let y = w.b_fc[o] + vv[o] + row.iter().zip(&h).map(|(a, b)| a * b).sum::<f64>();
+                let e = y - uu[o];
+                loss += e * e;
+            }
+        }
+        let _ = cfg;
+        loss / u.len() as f64
+    }
+
+    #[test]
+    fn bptt_gradients_match_finite_differences() {
+        // The correctness anchor of the whole trainer: analytic BPTT
+        // gradients against central finite differences on every tensor,
+        // for random weights, hidden state and stimulus. Activation
+        // kinks (hardsigmoid/hardtanh breakpoints) are measure-zero
+        // under random continuous inputs; tolerance covers fd noise.
+        let mut rng = Rng::new(41);
+        for case in 0..3 {
+            let w0 = identity_init(100 + case, 10, 0.25);
+            // non-zero FC so the output path has gradient flow
+            let mut w0 = w0;
+            w0.w_fc.iter_mut().for_each(|v| *v = rng.range(-0.2, 0.2));
+            w0.b_fc.iter_mut().for_each(|v| *v = rng.range(-0.05, 0.05));
+            // window 8 = one exact window per observe; lr tiny so the
+            // recorded grads correspond to the probed weights while the
+            // Adam machinery still runs
+            let cfg = AdaptConfig { window: 8, lr: 1e-12, ..Default::default() };
+            let mut tr = AdaptTrainer::new(w0.clone(), cfg).unwrap();
+            let h0: Vec<f64> = (0..10).map(|_| rng.range(-0.5, 0.5)).collect();
+            tr.h.copy_from_slice(&h0);
+            // fix the gain estimate so v is a known pure function of y
+            tr.g_est = Some(C64::new(1.0, 0.0));
+            let u: Vec<[f64; 2]> =
+                (0..8).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect();
+            let y: Vec<[f64; 2]> =
+                (0..8).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect();
+            // the normalized input the trainer will derive from y
+            let q = {
+                // EMA update with den > 0 moves g_est; replicate it
+                let mut num = C64::ZERO;
+                let mut den = 0.0;
+                for (uu, yy) in u.iter().zip(&y) {
+                    num = num + C64::new(yy[0], yy[1]) * C64::new(uu[0], uu[1]).conj();
+                    den += uu[0] * uu[0] + uu[1] * uu[1];
+                }
+                let gw = num.scale(1.0 / den);
+                (C64::new(1.0, 0.0).scale(1.0 - cfg.gain_ema) + gw.scale(cfg.gain_ema))
+                    .scale(cfg.backoff)
+                    .recip()
+            };
+            let v: Vec<[f64; 2]> = y
+                .iter()
+                .map(|&[a, b]| {
+                    let c = C64::new(a, b) * q;
+                    [c.re, c.im]
+                })
+                .collect();
+            tr.observe(&u, &y).unwrap();
+            let analytic = tr.grads.clone();
+            let eps = 1e-6;
+            let mut check = |get: &dyn Fn(&GruWeights) -> &Vec<f64>,
+                             set: &dyn Fn(&mut GruWeights, usize, f64),
+                             grad: &[f64],
+                             name: &str| {
+                let n = get(&w0).len();
+                // probe a deterministic subset (fd is O(n) forwards)
+                for i in (0..n).step_by(1 + n / 17) {
+                    let base = get(&w0)[i];
+                    let mut wp = w0.clone();
+                    set(&mut wp, i, base + eps);
+                    let lp = loss_of(&wp, cfg, &h0, &u, &v);
+                    let mut wm = w0.clone();
+                    set(&mut wm, i, base - eps);
+                    let lm = loss_of(&wm, cfg, &h0, &u, &v);
+                    let fd = (lp - lm) / (2.0 * eps);
+                    let an = grad[i];
+                    let tol = 1e-5 + 1e-4 * fd.abs().max(an.abs());
+                    assert!(
+                        (fd - an).abs() < tol,
+                        "case {case} {name}[{i}]: analytic {an:.3e} vs fd {fd:.3e}"
+                    );
+                }
+            };
+            check(&|w| &w.w_ih, &|w, i, v| w.w_ih[i] = v, &analytic.w_ih, "w_ih");
+            check(&|w| &w.b_ih, &|w, i, v| w.b_ih[i] = v, &analytic.b_ih, "b_ih");
+            check(&|w| &w.w_hh, &|w, i, v| w.w_hh[i] = v, &analytic.w_hh, "w_hh");
+            check(&|w| &w.b_hh, &|w, i, v| w.b_hh[i] = v, &analytic.b_hh, "b_hh");
+            check(&|w| &w.w_fc, &|w, i, v| w.w_fc[i] = v, &analytic.w_fc, "w_fc");
+            check(&|w| &w.b_fc, &|w, i, v| w.b_fc[i] = v, &analytic.b_fc, "b_fc");
+        }
+    }
+
+    #[test]
+    fn identity_init_is_the_identity_dpd() {
+        let w = identity_init(7, 10, 0.15);
+        let mut dpd = GruDpd::new(w);
+        let x = [[0.21, -0.17], [0.0, 0.0], [-0.6, 0.45]];
+        assert_eq!(dpd.run(&x), x.to_vec());
+    }
+
+    #[test]
+    fn trainer_learns_a_static_postinverse() {
+        // Toy inverse problem: y = u * (1 - 0.25 |u|^2) (a memoryless
+        // cubic "PA" with unit gain). The trainer must drive its NMSE
+        // well below the identity baseline within a modest budget.
+        fn burst(tr: &mut AdaptTrainer, rng: &mut Rng) {
+            let u: Vec<[f64; 2]> =
+                (0..1024).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect();
+            let y: Vec<[f64; 2]> = u
+                .iter()
+                .map(|&[i, q]| {
+                    let e2 = i * i + q * q;
+                    [i * (1.0 - 0.25 * e2), q * (1.0 - 0.25 * e2)]
+                })
+                .collect();
+            tr.observe(&u, &y).unwrap();
+        }
+        // recent-window NMSE via accumulator deltas (the running
+        // nmse_db is a lifetime average — early error would mask the
+        // converged quality)
+        fn recent(tr: &mut AdaptTrainer, rng: &mut Rng, bursts: usize) -> f64 {
+            let (e0, r0) = (tr.err_acc, tr.ref_acc);
+            for _ in 0..bursts {
+                burst(tr, rng);
+            }
+            10.0 * ((tr.err_acc - e0) / (tr.ref_acc - r0)).log10()
+        }
+        let mut rng = Rng::new(5);
+        let mut tr =
+            AdaptTrainer::new(identity_init(11, 10, 0.15), AdaptConfig::default()).unwrap();
+        // identity baseline: the first bursts, before training bites
+        let early = recent(&mut tr, &mut rng, 2);
+        for _ in 0..26 {
+            burst(&mut tr, &mut rng);
+        }
+        let late = recent(&mut tr, &mut rng, 4);
+        // measured 12.8 dB on this seed; 6 dB keeps cross-platform
+        // float headroom
+        assert!(
+            late < early - 6.0,
+            "trainer failed to learn: early {early:.1} dB -> late {late:.1} dB"
+        );
+        // the recent EMA tracks the converged fit, unlike the lifetime
+        // average that stays pinned near the early error
+        assert!(
+            tr.recent_nmse_db() < early - 6.0,
+            "recent NMSE ({:.1}) should track the converged windows",
+            tr.recent_nmse_db()
+        );
+        assert!(tr.progress().steps > 0 && tr.progress().samples > 0);
+        let g = tr.gain_est().unwrap();
+        assert!((g.abs() - 1.0).abs() < 0.1, "gain estimate off: {:?}", g);
+    }
+
+    #[test]
+    fn observe_buffers_partial_windows_chunk_invariantly() {
+        // feeding the same stream in different chunkings must produce
+        // the identical weight trajectory (windows are cut from the
+        // buffered stream, not from burst boundaries)
+        let mut rng = Rng::new(9);
+        let u: Vec<[f64; 2]> =
+            (0..999).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect();
+        let y: Vec<[f64; 2]> =
+            u.iter().map(|&[a, b]| [0.9 * a - 0.1 * b, 0.1 * a + 0.9 * b]).collect();
+        let mut a = AdaptTrainer::new(identity_init(3, 10, 0.15), AdaptConfig::default()).unwrap();
+        a.observe(&u, &y).unwrap();
+        let mut b = AdaptTrainer::new(identity_init(3, 10, 0.15), AdaptConfig::default()).unwrap();
+        let mut s = 0;
+        for chunk in [7usize, 131, 64, 500, 297] {
+            let e = (s + chunk).min(u.len());
+            b.observe(&u[s..e], &y[s..e]).unwrap();
+            s = e;
+        }
+        assert_eq!(a.weights().w_ih, b.weights().w_ih);
+        assert_eq!(a.weights().w_hh, b.weights().w_hh);
+        assert_eq!(a.weights().w_fc, b.weights().w_fc);
+        assert_eq!(a.samples, b.samples);
+        // 999 = 31 full windows + 7 pending
+        assert_eq!(a.samples, 31 * 32);
+        assert_eq!(a.pend_u.len(), 7);
+        // mismatched burst lengths are rejected
+        assert!(a.observe(&u[..3], &y[..2]).is_err());
+    }
+
+    #[test]
+    fn silence_windows_never_train() {
+        let mut tr = AdaptTrainer::new(identity_init(1, 10, 0.15), AdaptConfig::default()).unwrap();
+        let zeros = vec![[0.0, 0.0]; 64];
+        tr.observe(&zeros, &zeros).unwrap();
+        assert!(tr.gain_est().is_none(), "no gain information in silence");
+        assert_eq!(tr.progress().steps, 0);
+        let u = vec![[0.2, -0.1]; 64];
+        tr.observe(&u, &u).unwrap();
+        assert!(tr.gain_est().is_some());
+        let after_signal = tr.progress();
+        assert!(after_signal.steps > 0);
+        // a mid-stream idle carrier must not train either: zero input
+        // would drag the twin toward f(·)=0 and its steps could
+        // trigger a pointless engine hot-swap
+        let w_before = tr.weights().clone();
+        tr.observe(&zeros, &zeros).unwrap();
+        assert_eq!(tr.progress().steps, after_signal.steps, "silence trained mid-stream");
+        assert_eq!(tr.progress().samples, after_signal.samples);
+        assert_eq!(tr.weights().w_fc, w_before.w_fc, "silence perturbed the twin");
+        // and signal resumes training afterwards
+        tr.observe(&u, &u).unwrap();
+        assert!(tr.progress().steps > after_signal.steps);
+    }
+
+    #[test]
+    fn quantized_bridge_equals_the_canonical_quantizer() {
+        let mut w = identity_init(21, 10, 0.4);
+        // include out-of-range values: the bridge must saturate them
+        w.w_hh[3] = 3.7;
+        w.w_hh[5] = -9.9;
+        let tr = AdaptTrainer::new(w.clone(), AdaptConfig::default()).unwrap();
+        let spec = QSpec::Q12;
+        let qw = tr.quantized(spec);
+        for (f, q) in w.w_hh.iter().zip(&qw.w_hh) {
+            assert_eq!(*q, spec.quantize(*f));
+        }
+        assert_eq!(qw.w_hh[3], spec.qmax(), "out-of-range weight must clamp");
+        assert_eq!(qw.w_hh[5], spec.qmin());
+        // a refreshed set is a new weight generation: distinct content
+        // fingerprint (hence distinct batch class downstream)
+        let mut w2 = w.clone();
+        w2.w_ih[0] += 0.01;
+        let tr2 = AdaptTrainer::new(w2, AdaptConfig::default()).unwrap();
+        assert_ne!(tr.quantized(spec).fingerprint(), tr2.quantized(spec).fingerprint());
+    }
+}

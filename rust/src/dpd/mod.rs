@@ -10,11 +10,15 @@
 //!   instruction for instruction — this is the functional model of
 //!   the silicon; plus its delta-sparsity twin `DeltaQGruDpd`
 //!   (DeltaDPD-style column skipping, bit-exact to dense at θ=0);
-//! * [`weights`] — loaders for the artifact weight JSONs.
+//! * [`weights`] — loaders for the artifact weight JSONs;
+//! * [`adapt`] — the closed-loop ILA trainer that adapts the float
+//!   twin against PA feedback and re-quantizes fresh integer weight
+//!   sets (the runtime's answer to a drifting amplifier).
 //!
 //! All engines implement the [`Dpd`] trait: a causal, streaming
 //! sample-in/sample-out predistorter.
 
+pub mod adapt;
 pub mod gmp;
 pub mod gru;
 pub mod qgru;
@@ -22,6 +26,7 @@ pub mod weights;
 
 use anyhow::{bail, Result};
 
+pub use adapt::{AdaptConfig, AdaptProgress, AdaptTrainer};
 pub use gmp::GmpDpd;
 pub use gru::{DeltaGruDpd, GruDpd};
 pub use qgru::{DeltaQGruDpd, QGruDpd};

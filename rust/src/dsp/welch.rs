@@ -28,6 +28,14 @@ impl Default for WelchConfig {
 /// the axis runs -0.5 .. 0.5 — the natural layout for band-power
 /// integration. PSD is in linear power units (per-bin power density up
 /// to a constant factor; ACPR/band ratios are scale-free).
+///
+/// Trailing samples that don't fill a whole segment are *not*
+/// discarded: when at least half a segment remains past the last full
+/// one, it is measured as a final zero-padded segment under its own
+/// (shorter) Hann window, its power compensated by the window-energy
+/// ratio so a stationary signal's tail weighs like a full segment in
+/// the average. (Dropping the tail — the pre-fix behavior — silently
+/// truncated short-burst ACPR by up to `nfft - 1` samples.)
 pub fn welch_psd(x: &[[f64; 2]], cfg: &WelchConfig) -> Result<(Vec<f64>, Vec<f64>)> {
     let n = cfg.nfft;
     let plan = Fft::new(n)?;
@@ -50,7 +58,41 @@ pub fn welch_psd(x: &[[f64; 2]], cfg: &WelchConfig) -> Result<(Vec<f64>, Vec<f64
         segs += 1;
         start += step;
     }
-    anyhow::ensure!(segs > 0, "signal shorter than one Welch segment ({n})");
+    // Final partial segment — only when at least half a segment of
+    // samples lies past the end of the last full segment (i.e. would
+    // otherwise go unmeasured; overlap re-coverage doesn't count). The
+    // tail runs from the next grid position under its own (shorter)
+    // Hann window, zero-padded to the FFT size, its power scaled by
+    // the window-energy ratio U_full/U_tail.
+    let covered = if segs > 0 { start - step + n } else { 0 };
+    let unmeasured = x.len() - covered.min(x.len());
+    let rem = x.len() - start.min(x.len());
+    if 2 * unmeasured >= n {
+        let wt = hann(rem);
+        let u_full: f64 = w.iter().map(|&v| v * v).sum();
+        let u_tail: f64 = wt.iter().map(|&v| v * v).sum();
+        // a degenerate tail window carries (numerically) no energy —
+        // hann(2) is [0, sin(π)²] ≈ [0, 1.5e-32] — and compensating by
+        // u_full/u_tail would blow the segment up into garbage; skip
+        // it instead, and with no full segment either the too-short
+        // error below still fires
+        if u_tail > u_full * 1e-12 {
+            for i in 0..rem {
+                let [re, im] = x[start + i];
+                buf[i] = C64::new(re * wt[i], im * wt[i]);
+            }
+            for b in buf.iter_mut().skip(rem) {
+                *b = C64::ZERO;
+            }
+            plan.forward(&mut buf);
+            let comp = u_full / u_tail;
+            for i in 0..n {
+                psd[i] += buf[i].norm_sq() * comp;
+            }
+            segs += 1;
+        }
+    }
+    anyhow::ensure!(segs > 0, "signal shorter than half a Welch segment ({n})");
 
     let norm = 1.0 / segs as f64;
     // fftshift
@@ -133,6 +175,110 @@ mod tests {
     fn errors_on_short_signal() {
         let x = vec![[0.0, 0.0]; 100];
         assert!(welch_psd(&x, &WelchConfig { nfft: 256, overlap: 0.5 }).is_err());
+    }
+
+    #[test]
+    fn tail_segment_regression_content_in_the_tail_is_measured() {
+        // The tail-drop bug: with `while start + n <= len` alone, a
+        // burst of 1.5·nfft at overlap 0 loses its last nfft/2 samples
+        // entirely. Put the only signal content there — pre-fix this
+        // tone is invisible (leakage floor, < -100 dB); post-fix the
+        // tail segment surfaces it at full band power.
+        let n = 512usize;
+        let mut x = vec![[0.0, 0.0]; 3 * n / 2];
+        for (t, s) in x.iter_mut().enumerate().skip(n) {
+            let ph = 2.0 * std::f64::consts::PI * 0.125 * t as f64;
+            *s = [ph.cos(), ph.sin()];
+        }
+        // tiny carrier in the head so the reference band is nonzero
+        for (t, s) in x.iter_mut().enumerate().take(n) {
+            let ph = 2.0 * std::f64::consts::PI * (-0.125) * t as f64;
+            *s = [1e-3 * ph.cos(), 1e-3 * ph.sin()];
+        }
+        let (f, p) = welch_psd(&x, &WelchConfig { nfft: n, overlap: 0.0 }).unwrap();
+        let tail_band = band_power(&f, &p, 0.1, 0.15);
+        let head_band = band_power(&f, &p, -0.15, -0.1);
+        let ratio_db = 10.0 * (tail_band / head_band).log10();
+        // the tail tone is 60 dB louder than the head carrier; pre-fix
+        // this ratio sits below -40 dB (pure leakage of the head seg)
+        assert!(ratio_db > 40.0, "tail content lost: {ratio_db:.1} dB");
+    }
+
+    #[test]
+    fn tail_segment_tone_burst_band_ratio_matches_full_length() {
+        // 1.5·nfft tone at overlap 0 (the maximal-truncation shape):
+        // the in-band fraction must equal the full-length measurement,
+        // i.e. the compensated zero-padded tail segment neither loses
+        // nor invents band power.
+        let n = 512usize;
+        let cfg = WelchConfig { nfft: n, overlap: 0.0 };
+        let ratio = |len: usize| -> f64 {
+            let x = tone(0.125, len);
+            let (f, p) = welch_psd(&x, &cfg).unwrap();
+            let inband = band_power(&f, &p, 0.115, 0.135);
+            let total = band_power(&f, &p, -0.5, 0.5);
+            10.0 * (inband / total).log10()
+        };
+        let short = ratio(3 * n / 2); // 1 full segment + half-segment tail
+        let long = ratio(8 * n); // full segments only
+        assert!(
+            (short - long).abs() < 0.05,
+            "1.5·nfft burst band ratio {short:.4} dB vs full-length {long:.4} dB"
+        );
+    }
+
+    #[test]
+    fn tail_segment_only_fires_on_unmeasured_samples() {
+        // At 50% overlap a 1.5·nfft burst is already fully covered by
+        // the two overlapping segments — no tail segment is added, so
+        // the result equals the pre-fix value exactly (the fix only
+        // measures samples that would otherwise be dropped).
+        let n = 256usize;
+        let x = tone(0.1, 3 * n / 2);
+        let (_, p) = welch_psd(&x, &WelchConfig { nfft: n, overlap: 0.5 }).unwrap();
+        // reference: the two 50%-overlap segments, averaged, by hand
+        let plan = crate::dsp::fft::Fft::new(n).unwrap();
+        let w = hann(n);
+        let mut want = vec![0.0; n];
+        for start in [0, n / 2] {
+            let mut buf: Vec<crate::util::C64> = (0..n)
+                .map(|i| crate::util::C64::new(x[start + i][0] * w[i], x[start + i][1] * w[i]))
+                .collect();
+            plan.forward(&mut buf);
+            for (acc, b) in want.iter_mut().zip(&buf) {
+                *acc += b.norm_sq();
+            }
+        }
+        let half = n / 2;
+        for i in 0..n {
+            // same op order as welch_psd: accumulate, then scale once
+            assert_eq!(p[i], want[(i + half) % n] * 0.5, "bin {i} diverged");
+        }
+    }
+
+    #[test]
+    fn degenerate_tail_window_stays_a_hard_error() {
+        // hann(2) is all zeros: a 2-sample signal at nfft 4 must keep
+        // erroring like the pre-fix code, not return a NaN PSD from a
+        // zero-energy compensated tail segment
+        let x = vec![[1.0, 0.0]; 2];
+        assert!(welch_psd(&x, &WelchConfig { nfft: 4, overlap: 0.5 }).is_err());
+        // 3 tail samples carry window energy again and measure cleanly
+        let x = vec![[1.0, 0.0]; 3];
+        let (_, p) = welch_psd(&x, &WelchConfig { nfft: 4, overlap: 0.5 }).unwrap();
+        assert!(p.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn sub_segment_burst_measurable_above_half() {
+        // >= nfft/2 samples now measure (zero-padded single segment);
+        // below half a segment stays a hard error
+        let x = tone(0.1, 160);
+        let cfg = WelchConfig { nfft: 256, overlap: 0.5 };
+        let (f, p) = welch_psd(&x, &cfg).unwrap();
+        let imax = (0..p.len()).max_by(|&a, &b| p[a].total_cmp(&p[b])).unwrap();
+        assert!((f[imax] - 0.1).abs() < 4.0 / 256.0);
+        assert!(welch_psd(&tone(0.1, 127), &cfg).is_err());
     }
 
     #[test]

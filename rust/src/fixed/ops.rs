@@ -14,12 +14,39 @@ use super::QSpec;
 ///
 /// This is the requantization step after every multiply (products of
 /// two Q2.f codes carry 2f fractional bits).
+///
+/// **Caller contract:** `v <= i64::MAX - (1 << (s-1))` — the rounding
+/// bias must not overflow the add (wrap in release, panic in debug;
+/// enforced by the `debug_assert!` below). Every datapath call site
+/// satisfies this by construction (accumulators are bounded by
+/// `|bias| << f + Σ|w|·|x|`, orders of magnitude below the rail); a
+/// caller that can legally hold arbitrary i64 accumulators must use
+/// [`rshift_round_sat`] instead, as [`requantize`] does.
 #[inline]
 pub fn rshift_round(v: i64, s: u32) -> i64 {
     if s == 0 {
         return v;
     }
+    debug_assert!(
+        v <= i64::MAX - (1i64 << (s - 1)),
+        "rshift_round bias overflow: v={v} s={s} violates the caller contract"
+    );
     (v + (1i64 << (s - 1))) >> s
+}
+
+/// Total (contract-free) form of [`rshift_round`]: the rounding bias
+/// is added with saturating arithmetic, so any i64 input is safe. On
+/// the documented domain of [`rshift_round`] the two are bit-identical
+/// (property-pinned below); within `2^(s-1)` of `i64::MAX` — where the
+/// plain form would wrap — this saturates the bias instead, which
+/// under-rounds the result by at most 1 LSB right at the rail (and the
+/// only production caller, [`requantize`], clamps far below it anyway).
+#[inline]
+pub fn rshift_round_sat(v: i64, s: u32) -> i64 {
+    if s == 0 {
+        return v;
+    }
+    v.saturating_add(1i64 << (s - 1)) >> s
 }
 
 /// Saturate a wide accumulator into the Q2.f code range.
@@ -29,22 +56,35 @@ pub fn saturate_i64(v: i64, spec: QSpec) -> i32 {
 }
 
 /// Requantize: shift by `s` then saturate (the common composition).
+///
+/// Takes *any* i64 accumulator — this is the one entry point whose
+/// callers may legally approach the i64 rail (the signature promises
+/// nothing less), so the shift uses the saturating-bias form: for
+/// `acc > i64::MAX - 2^(s-1)` the plain rounding add would wrap to a
+/// huge negative value and requantize to `qmin` instead of `qmax`
+/// (silently in release, panicking in debug). The saturating form is
+/// bit-identical everywhere else and clamps correctly at the rails.
 #[inline]
 pub fn requantize(acc: i64, s: u32, spec: QSpec) -> i32 {
-    saturate_i64(rshift_round(acc, s), spec)
+    saturate_i64(rshift_round_sat(acc, s), spec)
 }
 
 /// i32 twin of [`rshift_round`] for the narrow accumulation path
 /// (formats with `bits <= 13`, where products stay under 2^24 and sums
 /// under 2^28). Caller contract: `|v| < 2^30` so the rounding bias
-/// cannot overflow. Bit-identical to the i64 version on that domain —
-/// a property the `fixed::ops` suite checks in both debug and release
-/// (where the overflow behavior of a violated contract would differ).
+/// cannot overflow (debug-asserted like the i64 form). Bit-identical
+/// to the i64 version on that domain — a property the `fixed::ops`
+/// suite checks in both debug and release (where the overflow behavior
+/// of a violated contract would differ).
 #[inline]
 pub fn rshift_round_i32(v: i32, s: u32) -> i32 {
     if s == 0 {
         return v;
     }
+    debug_assert!(
+        v <= i32::MAX - (1i32 << (s - 1)),
+        "rshift_round_i32 bias overflow: v={v} s={s} violates the caller contract"
+    );
     (v + (1i32 << (s - 1))) >> s
 }
 
@@ -141,6 +181,47 @@ mod tests {
     #[test]
     fn rshift_round_zero_shift_identity() {
         assert_eq!(rshift_round(-12345, 0), -12345);
+        assert_eq!(rshift_round_sat(-12345, 0), -12345);
+    }
+
+    #[test]
+    fn saturating_form_bit_identical_on_the_contract_domain() {
+        // rshift_round_sat must equal rshift_round everywhere the
+        // caller contract holds — run in debug AND release (the plain
+        // form would wrap silently in release on a violation)
+        check("rshift_round_sat vs rshift_round", 800, |rng| {
+            let s = rng.int_in(1, 40) as u32;
+            let v = rng.int_in(-(1 << 60), (1 << 60) - 1);
+            let got = rshift_round_sat(v, s);
+            let want = rshift_round(v, s);
+            if got != want {
+                return Err(format!("v={v} s={s}: sat {got} vs plain {want}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn requantize_safe_at_the_i64_rails() {
+        // The rounding-bias overflow regression: pre-fix,
+        // `requantize(v, s, spec)` for v within 2^(s-1) of i64::MAX
+        // computed `v + (1 << (s-1))` — wrapping to a huge negative in
+        // release (requantizing to qmin instead of qmax) and panicking
+        // in debug. The saturating form must clamp to qmax.
+        for bits in [8u32, 12, 16] {
+            let spec = QSpec::new(bits).unwrap();
+            let s = spec.frac();
+            for v in [i64::MAX, i64::MAX - 1, i64::MAX - (1 << (s - 1)) + 1] {
+                assert_eq!(requantize(v, s, spec), spec.qmax(), "bits={bits} v={v}");
+            }
+            assert_eq!(requantize(i64::MIN, s, spec), spec.qmin());
+            assert_eq!(requantize(i64::MIN + 1, s, spec), spec.qmin());
+            // just inside the plain form's contract: both forms agree
+            let edge = i64::MAX - (1 << (s - 1));
+            assert_eq!(rshift_round_sat(edge, s), rshift_round(edge, s));
+        }
+        // saturating bias at the very rail: documented semantics
+        assert_eq!(rshift_round_sat(i64::MAX, 4), i64::MAX >> 4);
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //! Subcommands (hand-rolled parser; no clap offline):
 //!   run          end-to-end linearization (OFDM -> DPD -> PA -> ACPR/EVM)
 //!   serve        long-lived DpdService: N sessions multiplexed on a
-//!                persistent worker pool (+ optional shadow-audit session)
+//!                persistent worker pool (+ optional shadow-audit session);
+//!                `--adapt` runs the closed adaptation loop against a
+//!                drifting PA (ILA trainer + periodic engine hot-swaps,
+//!                knobs --drift-ramp / --refresh-interval)
 //!   stream       multi-stream one-shot throughput run (compat wrapper)
 //!   asic-report  Fig. 5 post-layout-style spec from the models
 //!   fpga-report  Table I / Fig. 4 resource estimates
@@ -28,7 +31,8 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use dpd_ne::coordinator::{
-    Coordinator, CoordinatorConfig, DpdService, EngineKind, ServiceConfig, SessionConfig,
+    Coordinator, CoordinatorConfig, DpdService, EngineKind, ServiceConfig, SessionAdaptConfig,
+    SessionConfig,
 };
 use dpd_ne::dpd::qgru::{ActKind, LutTables, QGruDpd};
 use dpd_ne::dpd::weights::{GruWeights, QGruWeights};
@@ -36,7 +40,7 @@ use dpd_ne::dpd::Dpd;
 use dpd_ne::fixed::QSpec;
 use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
 use dpd_ne::metrics::evm::evm_db_nmse;
-use dpd_ne::pa::{PaSpec, RappMemPa};
+use dpd_ne::pa::{DriftTrajectory, DriftingPa, PaSpec, RappMemPa};
 use dpd_ne::report::{f1, f2, f3, Table};
 use dpd_ne::runtime::Manifest;
 use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
@@ -47,9 +51,18 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut i = 0;
     while i < args.len() {
         if let Some(name) = args[i].strip_prefix("--") {
-            let val = args.get(i + 1).cloned().unwrap_or_default();
-            flags.insert(name.to_string(), val);
-            i += 2;
+            // a following token that is itself a flag means this one is
+            // bare (e.g. `serve --adapt --engine fixed`)
+            match args.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    flags.insert(name.to_string(), v.clone());
+                    i += 2;
+                }
+                _ => {
+                    flags.insert(name.to_string(), String::new());
+                    i += 1;
+                }
+            }
         } else {
             pos.push(args[i].clone());
             i += 1;
@@ -90,6 +103,8 @@ fn usage() -> &'static str {
      flags: --artifacts <dir> --engine <fixed|delta|native|cyclesim|interp|hlo> \
      --streams <n> --symbols <n> --seed <n>\n\
      serve: --sessions <n> --workers <n> --rounds <n> --shadow <engine> --batch <n>\n\
+     serve --adapt: closed-loop tracking of a drifting PA \
+     (--drift-ramp <samples> --refresh-interval <samples>)\n\
      delta: --delta-theta <codes> (0 = bit-identical to 'fixed'; try 32)\n\
      (engine 'hlo' needs a build with --features xla)"
 }
@@ -200,6 +215,9 @@ fn cmd_stream(flags: &HashMap<String, String>) -> Result<()> {
 /// e.g. `--engine fixed --shadow cyclesim` checks the functional
 /// model against the cycle-accurate ASIC simulator while serving.
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    if flags.contains_key("adapt") {
+        return cmd_serve_adapt(flags);
+    }
     let n_sessions: usize = flags.get("sessions").map(|s| s.parse()).transpose()?.unwrap_or(4);
     let n_workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
     let rounds: usize = flags.get("rounds").map(|s| s.parse()).transpose()?.unwrap_or(3);
@@ -301,6 +319,92 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             println!("shadow audit: max |dev| vs session 0 = {dev:.6}");
         }
     }
+    service.shutdown()
+}
+
+/// `serve --adapt`: the closed-loop demo — one adaptive session
+/// tracking a drifting amplifier. The original samples stream through
+/// the deployed (re-quantized) engine, the predistorted output feeds a
+/// [`DriftingPa`] whose parameters follow the reference trajectory,
+/// and the observed PA output is pushed back via `adapt_feedback`; the
+/// background adapt worker trains the float twin and hot-swaps the
+/// engine every `--refresh-interval` samples. Knobs: `--drift-ramp`
+/// (samples to full excursion, 0 = step), `--refresh-interval`,
+/// `--rounds`, `--engine <fixed|delta|native>`.
+fn cmd_serve_adapt(flags: &HashMap<String, String>) -> Result<()> {
+    // defaults sized so the stock invocation actually demonstrates the
+    // loop: 8 rounds x 24 symbols = ~52k feedback samples -> several
+    // hot-swaps (refresh every 16k) across a full drift excursion
+    // (ramp 32k)
+    let rounds: usize = flags.get("rounds").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let ramp: u64 = flags.get("drift-ramp").map(|s| s.parse()).transpose()?.unwrap_or(1 << 15);
+    let refresh: u64 =
+        flags.get("refresh-interval").map(|s| s.parse()).transpose()?.unwrap_or(1 << 14);
+    let engine = engine_kind(flags)?;
+    let sig = test_signal(flags)?;
+
+    let service = DpdService::start(ServiceConfig {
+        workers: 1,
+        artifacts: artifacts(flags),
+        ..Default::default()
+    })?;
+    let m = service
+        .manifest()
+        .ok_or_else(|| anyhow::anyhow!("serve --adapt needs an artifact tree (make artifacts)"))?
+        .clone();
+    let mut pa = DriftingPa::new(PaSpec::load(&m.pa_model)?, DriftTrajectory::reference(ramp));
+    let acfg = SessionAdaptConfig { refresh_interval: refresh, ..Default::default() };
+    let mut session =
+        service.open_session(SessionConfig { engine, adapt: Some(acfg), ..Default::default() })?;
+    println!(
+        "closed loop: engine {engine:?}, drift ramp {ramp} samples, refresh every {refresh}, \
+         {} samples/round x {rounds} rounds",
+        sig.iq.len()
+    );
+
+    let mut t = Table::new(
+        "Closed-loop adaptation against the drifting PA",
+        &[
+            "round",
+            "drift",
+            "refreshes",
+            "recent NMSE (dB)",
+            "window ACPR (dBc)",
+            "last swap ΔACPR (dB)",
+        ],
+    );
+    // alignment queue: x samples pushed but not yet drained as u
+    let mut x_fifo: Vec<[f64; 2]> = Vec::new();
+    for round in 0..rounds {
+        for chunk in sig.iq.chunks(4096) {
+            session.push(chunk)?;
+            x_fifo.extend_from_slice(chunk);
+            let u = session.drain()?;
+            if u.is_empty() {
+                continue;
+            }
+            let x: Vec<[f64; 2]> = x_fifo.drain(..u.len()).collect();
+            let y = pa.run(&u);
+            session.adapt_feedback(&x, &u, &y)?;
+        }
+        session.adapt_barrier()?;
+        let s = session.adapt_stats().expect("adaptive session");
+        t.row(&[
+            format!("{round}"),
+            format!("{:.2}", pa.trajectory().fraction_at(pa.clock())),
+            s.refreshes.to_string(),
+            f1(s.recent_nmse_db),
+            s.window_acpr_dbc.map(f1).unwrap_or_else(|| "-".into()),
+            s.refresh_acpr_gain_db().map(f1).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    let out = session.finish()?;
+    println!("{}", t.render());
+    println!(
+        "stream: {} samples at {:.2} MSps engine throughput",
+        out.stats.samples_out,
+        out.stats.engine_msps()
+    );
     service.shutdown()
 }
 

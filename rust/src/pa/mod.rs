@@ -6,6 +6,8 @@
 //! `artifacts/pa_model.json` so the rust evaluation plant is the same
 //! amplifier the python side trained against.
 
+pub mod drift;
 pub mod rapp;
 
+pub use drift::{DriftTrajectory, DriftingPa};
 pub use rapp::{PaSpec, RappMemPa};

@@ -328,6 +328,9 @@ pub struct HloEngine {
     // the client must outlive the executable compiled on it
     _client: xla::PjRtClient,
     inner: crate::runtime::HloGruEngine,
+    /// coalescing identity of the compiled artifact (file + shape +
+    /// format), resolved once at load
+    batch_class: u64,
 }
 
 #[cfg(feature = "xla")]
@@ -345,7 +348,20 @@ impl HloEngine {
             true,
             Some(spec),
         )?;
-        Ok(HloEngine { _client: client, inner })
+        // coalescing identity is *content*-true like every other
+        // engine's (weight fingerprints): hash the compiled artifact's
+        // bytes + shape + format, so regenerating the tree in place
+        // can never alias a stale executable with a fresh one
+        let path = m.hlo_path(&e);
+        let text = std::fs::read(&path)
+            .with_context(|| format!("reading {} for the batch class", path.display()))?;
+        let batch_class = fnv1a_words(
+            "hlo-frame",
+            [e.batch as u64, e.time as u64, e.bits as u64]
+                .into_iter()
+                .chain(text.into_iter().map(u64::from)),
+        );
+        Ok(HloEngine { _client: client, inner, batch_class })
     }
 }
 
@@ -365,7 +381,19 @@ impl DpdEngine for HloEngine {
         Ok(())
     }
 
+    // Frame engine: hidden state resets at every frame start (the AOT
+    // artifact's training convention), so there is no cross-frame
+    // stream state to reset or snapshot — the `save_state`/`load_state`
+    // defaults (`Stateless`) are exact, and the default sequential
+    // `run_batch` is trivially bit-identical to solo processing.
     fn reset(&mut self) {}
+
+    fn batch_class(&self) -> Option<u64> {
+        // stateless per frame (like Interp): sequential lane
+        // multiplexing is exact, and the class gates coalescing to
+        // sessions compiled against the identical artifact
+        Some(self.batch_class)
+    }
 }
 
 /// Resolves an [`EngineKind`] against an artifact tree and builds

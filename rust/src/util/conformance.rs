@@ -41,6 +41,12 @@ pub enum Stimulus {
     FullScale { seed: u64, n: usize },
     /// small-signal gaussian noise at a given RMS
     Gauss { seed: u64, n: usize, rms: f64 },
+    /// envelope drift: gaussian whose RMS ramps linearly `rms0 ->
+    /// rms1` across the burst — the non-stationary drive of the
+    /// closed-loop adaptation scenarios (a drifting PA's feedback
+    /// statistics move exactly like this, so engines must stay
+    /// contract-clean under a moving envelope)
+    Drift { seed: u64, n: usize, rms0: f64, rms1: f64 },
 }
 
 impl Stimulus {
@@ -74,6 +80,16 @@ impl Stimulus {
             Stimulus::Gauss { seed, n, rms } => {
                 let mut rng = Rng::new(seed);
                 (0..n).map(|_| [rng.gauss() * rms, rng.gauss() * rms]).collect()
+            }
+            Stimulus::Drift { seed, n, rms0, rms1 } => {
+                let mut rng = Rng::new(seed);
+                let span = (n.max(2) - 1) as f64;
+                (0..n)
+                    .map(|t| {
+                        let rms = rms0 + (rms1 - rms0) * t as f64 / span;
+                        [rng.gauss() * rms, rng.gauss() * rms]
+                    })
+                    .collect()
             }
         }
     }
@@ -298,6 +314,28 @@ pub fn standard_grid(seed: u64) -> Vec<Scenario> {
             ],
         ),
         Scenario::new(
+            // the closed-loop runtime's shape replayed as a scenario:
+            // a drifting envelope streams in, the engine is refreshed
+            // at a frame boundary (hot-swapped engines start from
+            // reset state — Reset is exactly the swap's semantics),
+            // the drift trajectory continues on the fresh engine, and
+            // a save/load round-trip must still replay exactly under
+            // a moving envelope
+            "adapt-replay",
+            vec![
+                Step::Burst(
+                    Stimulus::Drift { seed: seed ^ 0xad, n: 300, rms0: 0.15, rms1: 0.45 }.render(),
+                ),
+                Step::Reset,
+                Step::Burst(
+                    Stimulus::Drift { seed: seed ^ 0xae, n: 300, rms0: 0.45, rms1: 0.2 }.render(),
+                ),
+                Step::SaveLoadReplay(
+                    Stimulus::Drift { seed: seed ^ 0xaf, n: 120, rms0: 0.2, rms1: 0.6 }.render(),
+                ),
+            ],
+        ),
+        Scenario::new(
             "mixed-gauntlet",
             vec![
                 Step::Burst(Stimulus::Ofdm { symbols: 1, seed: seed ^ 9 }.render()),
@@ -335,6 +373,7 @@ mod tests {
             Stimulus::Dc { i: 0.1, q: 0.2, n: 10 },
             Stimulus::FullScale { seed: 5, n: 32 },
             Stimulus::Gauss { seed: 7, n: 32, rms: 0.25 },
+            Stimulus::Drift { seed: 9, n: 32, rms0: 0.1, rms1: 0.5 },
         ] {
             let a = s.render();
             let b = s.render();
@@ -360,6 +399,7 @@ mod tests {
             "full-scale-saturation",
             "midstream-reset",
             "save-load-roundtrip",
+            "adapt-replay",
             "mixed-gauntlet",
         ] {
             assert!(names.contains(&want), "grid lost scenario '{want}'");
@@ -371,6 +411,17 @@ mod tests {
         for s in &grid {
             assert!(!s.is_empty(), "scenario '{}' emits nothing", s.name);
         }
+    }
+
+    #[test]
+    fn drift_stimulus_envelope_actually_ramps() {
+        let b = Stimulus::Drift { seed: 3, n: 4000, rms0: 0.05, rms1: 0.5 }.render();
+        let power = |s: &[[f64; 2]]| -> f64 {
+            s.iter().map(|v| v[0] * v[0] + v[1] * v[1]).sum::<f64>() / s.len() as f64
+        };
+        let head = power(&b[..1000]);
+        let tail = power(&b[3000..]);
+        assert!(tail > 10.0 * head, "envelope did not ramp: head {head:.4} tail {tail:.4}");
     }
 
     #[test]
