@@ -6,9 +6,11 @@
 //!     paper's 250 MSps mapping), ~2 Msample run
 //!   * L3:       one long-lived `DpdService` pool hosting a
 //!     heterogeneous session per engine (manifest resolved once)
-//!   * engines:  native f64, bit-exact fixed-point, cycle-accurate
-//!     ASIC sim, the interpreted frame engine, and (with
-//!     `--features xla`) the AOT HLO via the embedded PJRT client
+//!   * engines:  every kind in `EngineFactory::available_kinds()` —
+//!     native f64, bit-exact fixed-point (scalar and AVX2 SIMD
+//!     kernels), delta-sparsity, cycle-accurate ASIC sim, the
+//!     interpreted frame engine, and (with `--features xla`) the AOT
+//!     HLO via the embedded PJRT client
 //!   * plant:    the shared GaN-Doherty-like PA model
 //!   * metrics:  ACPR (Welch), NMSE-EVM, constellation EVM, throughput
 //!   * ASIC:     activity-annotated power/area at the nominal point
@@ -27,6 +29,7 @@ use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
 use dpd_ne::metrics::evm::evm_db_nmse;
 use dpd_ne::pa::{DriftTrajectory, DriftingPa, PaSpec, RappMemPa};
 use dpd_ne::report::{f1, f2, Table};
+use dpd_ne::runtime::EngineFactory;
 use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
 use dpd_ne::signal::papr::papr_db;
 
@@ -69,18 +72,33 @@ fn main() -> anyhow::Result<()> {
         "-".into(),
     ]);
 
-    let mut engines = vec![
-        EngineKind::NativeF64,
-        EngineKind::Fixed,
-        // θ=0 must land in the same row as Fixed (bit-identical);
-        // the golden θ=32 trades ≤0.5 dB for ~2.6x fewer MACs
-        EngineKind::DeltaFixed { theta: 0 },
-        EngineKind::DeltaFixed { theta: 32 },
-        EngineKind::CycleSim,
-        EngineKind::Interp,
-    ];
-    #[cfg(feature = "xla")]
-    engines.push(EngineKind::Hlo);
+    // the engine list comes from the factory registry — every kind
+    // this build can construct, never a hardcoded copy. The delta rows
+    // are widened from the registry's θ=0 defaults: θ=0 must land in
+    // the same row as Fixed (bit-identical), and the golden θ=32
+    // trades ≤0.5 dB for ~2.6x fewer MACs — solo and SIMD-composed.
+    let mut engines = Vec::new();
+    for d in EngineFactory::available_kinds() {
+        if let Some(active) = d.simd {
+            println!(
+                "engine {:<16} (syntax {:<16}) vector kernel {}",
+                d.spec,
+                d.syntax,
+                if active { "active" } else { "scalar fallback" }
+            );
+        }
+        engines.push(d.kind);
+        match d.kind {
+            EngineKind::DeltaFixed { .. } => {
+                engines.push(EngineKind::DeltaFixed { theta: 32 });
+            }
+            EngineKind::DeltaFixedSimd { .. } => {
+                engines.push(EngineKind::DeltaFixedSimd { theta: 32 });
+            }
+            _ => {}
+        }
+    }
+    println!();
 
     // one persistent service hosts every engine as a session; each
     // session gets the burst pushed in chunks, state carried across
@@ -96,7 +114,7 @@ fn main() -> anyhow::Result<()> {
         let evm = evm_db_nmse(&y, &sig.iq, g);
         let cevm = sig.constellation_evm_db(&y)?;
         t.row(&[
-            format!("{engine:?}"),
+            format!("{engine}"),
             f1(acpr.acpr_dbc),
             f1(evm),
             f1(cevm),

@@ -27,7 +27,7 @@ use dpd_ne::dpd::weights::{GruWeights, QGruWeights};
 use dpd_ne::dpd::Dpd;
 use dpd_ne::dsp::fft::Fft;
 use dpd_ne::dsp::welch::{welch_psd, WelchConfig};
-use dpd_ne::fixed::QSpec;
+use dpd_ne::fixed::{QSpec, SimdKernel};
 use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
 use dpd_ne::pa::{PaSpec, RappMemPa};
 use dpd_ne::runtime::{DpdEngine as _, EngineFactory, Manifest};
@@ -139,6 +139,42 @@ fn main() -> anyhow::Result<()> {
         service.shutdown()?;
     }
 
+    // SIMD gate-kernel session path: the same 64k push/drain harness
+    // as session_msps, but the resident engine is built on the AVX2
+    // `GateKernel` (the `fixed+simd` spec). When the host lacks AVX2
+    // (or DPD_SIMD=off forces the fallback) the scalar kernel runs
+    // instead and the metric is still emitted — simd_kernel_active
+    // records which kernel actually produced the number, so CI can
+    // track simd_msps / session_msps only where the vector path ran.
+    {
+        use dpd_ne::runtime::backend::StreamingEngine;
+        let kernel = SimdKernel::try_new();
+        report.metric("simd_kernel_active", if kernel.is_some() { 1.0 } else { 0.0 });
+        if kernel.is_none() {
+            eprintln!("(simd session bench: no AVX2 — timing the scalar fallback kernel)");
+        }
+        let service = DpdService::start(ServiceConfig { workers: 1, ..Default::default() })?;
+        let mut sess = service.open_session_with(SessionConfig::default(), || {
+            let qw = QGruWeights::synthetic(11, QSpec::Q12);
+            let dpd: Box<dyn Dpd> = match kernel {
+                Some(k) => Box::new(QGruDpd::with_kernel(qw, ActKind::Hard, k)),
+                None => Box::new(QGruDpd::new(qw, ActKind::Hard)),
+            };
+            Ok(Box::new(StreamingEngine::new(dpd)))
+        })?;
+        let r = time_it("session push/drain 64k (simd kernel)", Duration::from_millis(800), || {
+            for chunk in burst.chunks(4096) {
+                sess.push(chunk).unwrap();
+            }
+            std::hint::black_box(sess.drain().unwrap());
+        });
+        println!("{}  -> {:.2} MSps", r.summary(), r.per_second(burst.len() as f64) / 1e6);
+        report.metric("simd_msps", r.per_second(burst.len() as f64) / 1e6);
+        report.push(r);
+        let _ = sess.finish()?;
+        service.shutdown()?;
+    }
+
     // delta-GRU fast path on the checked-in golden OFDM waveform
     // (hermetic: synthetic weights + tests/data): dense vs delta
     // throughput at the golden θ, plus the measured MAC reduction and
@@ -177,7 +213,7 @@ fn main() -> anyhow::Result<()> {
         report.metric("dense_golden_msps", r.per_second(codes.len() as f64) / 1e6);
         report.push(r);
 
-        let mut delta = DeltaQGruDpd::new(qw, ActKind::Hard, theta);
+        let mut delta = DeltaQGruDpd::new(qw.clone(), ActKind::Hard, theta);
         let r = time_it("qgru delta, golden ofdm waveform", budget, || {
             std::hint::black_box(delta.run_codes(&codes));
         });
@@ -196,6 +232,28 @@ fn main() -> anyhow::Result<()> {
         report.metric("delta_mac_reduction", reduction);
         report.metric("delta_update_ratio", stats.update_ratio());
         report.push(r);
+
+        // the composed path (`delta:θ+simd`): the surviving dense
+        // columns after the θ-gate, issued through the AVX2 kernel.
+        // Without AVX2 the scalar delta number above is re-reported so
+        // the metric never disappears from BENCH_micro.json.
+        let simd_delta_msps = match SimdKernel::try_new() {
+            Some(k) => {
+                let mut d = DeltaQGruDpd::with_kernel(qw, ActKind::Hard, theta, k);
+                let r = time_it("qgru delta+simd, golden ofdm waveform", budget, || {
+                    std::hint::black_box(d.run_codes(&codes));
+                });
+                let m = r.per_second(codes.len() as f64) / 1e6;
+                println!("{}  -> {:.2} MSps", r.summary(), m);
+                report.push(r);
+                m
+            }
+            None => {
+                eprintln!("(delta+simd bench: no AVX2 — reporting the scalar-kernel number)");
+                msps
+            }
+        };
+        report.metric("simd_delta_msps", simd_delta_msps);
     }
 
     // closed-loop adaptation on the golden adapt waveform (hermetic):

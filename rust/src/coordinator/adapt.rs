@@ -42,6 +42,7 @@ use super::service::{Cmd, EngineBuild};
 use crate::dpd::adapt::{AdaptConfig, AdaptTrainer};
 use crate::dpd::qgru::{ActKind, DeltaQGruDpd, QGruDpd};
 use crate::dpd::{GruDpd, GruWeights};
+use crate::fixed::kernel::{resolve_simd, SimdPolicy};
 use crate::fixed::QSpec;
 use crate::metrics::acpr::{acpr_db, AcprConfig};
 use crate::metrics::evm::evm_db_nmse;
@@ -127,7 +128,16 @@ pub(crate) type Rebuild = Box<dyn Fn(&GruWeights) -> EngineBuild + Send>;
 /// matching streaming engine. Frame/simulator kinds have no refresh
 /// path (the cycle model and the AOT artifact are compile-time weight
 /// sets) and are rejected at session-open time.
-pub(crate) fn rebuild_for_kind(kind: EngineKind, spec: QSpec) -> Result<Rebuild> {
+///
+/// `simd` is the service's kernel policy; it only matters for the
+/// `*Simd` kinds, where the kernel is resolved once here (the host
+/// does not change mid-session) and every refreshed generation keeps
+/// it — so a hot-swap can never flip the kernel under a session.
+pub(crate) fn rebuild_for_kind(
+    kind: EngineKind,
+    spec: QSpec,
+    simd: SimdPolicy,
+) -> Result<Rebuild> {
     Ok(match kind {
         EngineKind::NativeF64 => Box::new(move |w: &GruWeights| -> EngineBuild {
             let w = w.clone();
@@ -153,9 +163,44 @@ pub(crate) fn rebuild_for_kind(kind: EngineKind, spec: QSpec) -> Result<Rebuild>
                 )))) as Box<dyn DpdEngine>)
             })
         }),
+        EngineKind::FixedSimd => {
+            let kernel = resolve_simd(simd);
+            Box::new(move |w: &GruWeights| -> EngineBuild {
+                let qw = w.quantize(spec);
+                Box::new(move || {
+                    Ok(match kernel {
+                        Some(k) => Box::new(StreamingEngine::new(Box::new(
+                            QGruDpd::with_kernel(qw, ActKind::Hard, k),
+                        ))) as Box<dyn DpdEngine>,
+                        None => Box::new(StreamingEngine::new(Box::new(QGruDpd::new(
+                            qw,
+                            ActKind::Hard,
+                        )))) as Box<dyn DpdEngine>,
+                    })
+                })
+            })
+        }
+        EngineKind::DeltaFixedSimd { theta } => {
+            let kernel = resolve_simd(simd);
+            Box::new(move |w: &GruWeights| -> EngineBuild {
+                let qw = w.quantize(spec);
+                Box::new(move || {
+                    Ok(match kernel {
+                        Some(k) => Box::new(StreamingEngine::new(Box::new(
+                            DeltaQGruDpd::with_kernel(qw, ActKind::Hard, theta, k),
+                        ))) as Box<dyn DpdEngine>,
+                        None => Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
+                            qw,
+                            ActKind::Hard,
+                            theta,
+                        )))) as Box<dyn DpdEngine>,
+                    })
+                })
+            })
+        }
         other => bail!(
             "engine kind {other:?} has no adaptation refresh path \
-             (use NativeF64, Fixed or DeltaFixed)"
+             (use NativeF64, Fixed, DeltaFixed or their +simd forms)"
         ),
     })
 }
@@ -366,16 +411,27 @@ mod tests {
             EngineKind::NativeF64,
             EngineKind::Fixed,
             EngineKind::DeltaFixed { theta: 16 },
+            EngineKind::FixedSimd,
+            EngineKind::DeltaFixedSimd { theta: 16 },
         ] {
-            let rebuild = rebuild_for_kind(kind, spec).unwrap();
+            let rebuild = rebuild_for_kind(kind, spec, SimdPolicy::Auto).unwrap();
             let mut eng = rebuild(&w)().unwrap();
             let mut burst = vec![[0.1, -0.05]; 8];
             eng.reset();
             eng.process_frame(&mut burst).unwrap();
             assert!(eng.batch_class().is_some(), "{kind:?} engines stay coalescible");
         }
-        assert!(rebuild_for_kind(EngineKind::Interp, spec).is_err());
-        assert!(rebuild_for_kind(EngineKind::CycleSim, spec).is_err());
+        assert!(rebuild_for_kind(EngineKind::Interp, spec, SimdPolicy::Auto).is_err());
+        assert!(rebuild_for_kind(EngineKind::CycleSim, spec, SimdPolicy::Auto).is_err());
+        // a refreshed simd engine under the Off policy is the scalar
+        // datapath — and still lands in the same batch class, so the
+        // kernel never splits coalescing
+        let rebuild =
+            rebuild_for_kind(EngineKind::FixedSimd, spec, SimdPolicy::Off).unwrap();
+        let forced = rebuild(&w)().unwrap();
+        let plain = rebuild_for_kind(EngineKind::Fixed, spec, SimdPolicy::Auto).unwrap()(&w)()
+            .unwrap();
+        assert_eq!(forced.batch_class(), plain.batch_class());
     }
 
     #[test]
@@ -383,7 +439,7 @@ mod tests {
         // the coalescer separation: engines rebuilt from different
         // float twins land in different batch classes
         let spec = QSpec::Q12;
-        let rebuild = rebuild_for_kind(EngineKind::Fixed, spec).unwrap();
+        let rebuild = rebuild_for_kind(EngineKind::Fixed, spec, SimdPolicy::Auto).unwrap();
         let w0 = identity_init(3, 10, 0.15);
         let mut w1 = w0.clone();
         w1.w_fc[0] += 0.25;

@@ -96,6 +96,7 @@ impl Coordinator {
             // one stream per worker: nothing to coalesce in the compat path
             batch: 1,
             artifacts: self.cfg.artifacts.clone(),
+            ..Default::default()
         })?;
         let session_cfg = SessionConfig { engine: self.cfg.engine, ..Default::default() };
         // one thread per stream, open included: engine construction

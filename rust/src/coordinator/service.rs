@@ -79,6 +79,7 @@ use super::framer::Frame;
 use super::session::{AdaptLink, SessionConfig, StreamSession};
 use crate::dpd::adapt::AdaptTrainer;
 use crate::dpd::{DpdLane, DpdState, GruWeights};
+use crate::fixed::kernel::SimdPolicy;
 use crate::fixed::QSpec;
 use crate::runtime::{DpdEngine, EngineFactory, Manifest};
 
@@ -102,11 +103,24 @@ pub struct ServiceConfig {
     /// artifact tree (None = discover); resolved once at `start`,
     /// shared by every session
     pub artifacts: Option<PathBuf>,
+    /// kernel policy for `*Simd` engine kinds opened on this service:
+    /// [`SimdPolicy::Auto`] honors host detection and the `DPD_SIMD`
+    /// env override; [`SimdPolicy::Off`] forces the scalar kernel.
+    /// Either way the engines are bit-identical (the kernel seam's
+    /// contract) and coalescing classes do not depend on the choice.
+    pub simd: SimdPolicy,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { workers: 4, queue_depth: 4, frame_len: 2048, batch: 1, artifacts: None }
+        ServiceConfig {
+            workers: 4,
+            queue_depth: 4,
+            frame_len: 2048,
+            batch: 1,
+            artifacts: None,
+            simd: SimdPolicy::default(),
+        }
     }
 }
 
@@ -514,7 +528,8 @@ impl DpdService {
                 SessionAdaptConfig { bits: acfg.bits.or(Some(manifest.qspec_bits)), ..acfg };
             return self.open_adaptive_session(SessionConfig { adapt: Some(acfg), ..cfg }, w0);
         }
-        let factory = EngineFactory::from_manifest(cfg.engine, manifest)?;
+        let factory =
+            EngineFactory::from_manifest(cfg.engine, manifest)?.with_simd_policy(self.cfg.simd);
         self.open_session_with(cfg, move || factory.build())
     }
 
@@ -543,7 +558,7 @@ impl DpdService {
             "adapt.meter_window must hold at least one Welch segment"
         );
         let spec = QSpec::new(acfg.bits.unwrap_or(12))?;
-        let rebuild = rebuild_for_kind(cfg.engine, spec)?;
+        let rebuild = rebuild_for_kind(cfg.engine, spec, self.cfg.simd)?;
         let trainer = AdaptTrainer::new(w0.clone(), acfg.trainer)?;
         let initial = rebuild(&w0);
         // strip `adapt` before delegating: the inner opener would

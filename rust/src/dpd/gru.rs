@@ -2,6 +2,19 @@
 //! output and conditioned features, see DESIGN.md §Hardware-Adaptation).
 //! Reference implementation for accuracy comparisons; the quantized
 //! twin is `qgru`.
+//!
+//! The twin discipline and the kernel seam: `qgru`'s integer engines
+//! are generic over a [`crate::fixed::GateKernel`] (scalar or AVX2)
+//! and store their transposed gate matrices in a lane-padded blocked
+//! layout. This f64 twin deliberately stays scalar and unpadded — it
+//! is the accuracy oracle, not a throughput path, and keeping exactly
+//! one layout here means a layout bug on the integer side shows up as
+//! a twin divergence instead of being mirrored into the reference.
+//! The structural correspondence that matters is per *column*:
+//! `transpose_gates_f64` and `qgru::transpose_gates_blocked` agree on
+//! the first `3*hidden` entries of every column; the integer side's
+//! pad tail (zero weights, zero accumulator contributions) is an
+//! implementation detail the kernels never let escape.
 
 use anyhow::{bail, Result};
 
@@ -22,8 +35,8 @@ pub fn hardtanh(x: f64) -> f64 {
 }
 
 /// Column-major transposes of the gate matrices (f64 twin of
-/// `qgru::transpose_gates`): wt[(c, r)] = w[r][c], 3H-contiguous per
-/// column — shared by the dense and delta engines so their layouts
+/// `qgru::transpose_gates_blocked`, minus the lane padding):
+/// wt[(c, r)] = w[r][c], 3H-contiguous per column — shared by the dense and delta engines so their layouts
 /// cannot drift apart (the θ=0 bit-exactness contract depends on both
 /// reading identical column vectors).
 fn transpose_gates_f64(w: &GruWeights) -> (Vec<f64>, Vec<f64>) {

@@ -14,10 +14,8 @@ use anyhow::{bail, Result};
 
 use super::weights::QGruWeights;
 use super::{process_lanes_sequential, DeltaSnapshot, DeltaStats, Dpd, DpdLane, DpdState};
-use crate::fixed::ops::{
-    delta_axpy_i64, exceeds_theta, requantize, requantize_block_i32, requantize_block_i64,
-    rshift_round, saturate_i64,
-};
+use crate::fixed::kernel::{blocked_stride, GateKernel, ScalarKernel};
+use crate::fixed::ops::{exceeds_theta, requantize, rshift_round, saturate_i64};
 use crate::fixed::QSpec;
 use crate::util::fnv1a_words;
 
@@ -135,49 +133,91 @@ fn act_fingerprint(act: &ActKind, wfp: u64) -> u64 {
     }
 }
 
-/// Column-major transposes of the gate matrices: wt[(c, r)] = w[r][c],
-/// 3H-contiguous per column so per-column accumulate loops are
-/// 3H-wide SIMD axpys (shared by the dense narrow path, the SoA
-/// kernels and the delta engine).
-fn transpose_gates(w: &QGruWeights) -> (Vec<i32>, Vec<i32>) {
+/// Column-major, lane-blocked transposes of the gate matrices:
+/// wt[(c, r)] = w[r][c], with every column padded from 3H up to
+/// `stride` (the kernel's lane multiple) with zero weights — the
+/// cache-blocked layout. Per-column accumulate loops are then
+/// tail-free `stride`-wide axpys (shared by the dense narrow path,
+/// the SoA kernels and the delta engine), and the padding contributes
+/// exactly nothing to any accumulator. With `lanes = 1` (the scalar
+/// kernel) this degenerates to the historical unpadded transpose.
+fn transpose_gates_blocked(w: &QGruWeights, lanes: usize) -> (Vec<i32>, Vec<i32>, usize) {
     let rows = 3 * w.hidden;
-    let mut wt_ih = vec![0i32; w.features * rows];
+    let stride = blocked_stride(rows, lanes);
+    let mut wt_ih = vec![0i32; w.features * stride];
     for r in 0..rows {
         for c in 0..w.features {
-            wt_ih[c * rows + r] = w.w_ih[r * w.features + c];
+            wt_ih[c * stride + r] = w.w_ih[r * w.features + c];
         }
     }
-    let mut wt_hh = vec![0i32; w.hidden * rows];
+    let mut wt_hh = vec![0i32; w.hidden * stride];
     for r in 0..rows {
         for c in 0..w.hidden {
-            wt_hh[c * rows + r] = w.w_hh[r * w.hidden + c];
+            wt_hh[c * stride + r] = w.w_hh[r * w.hidden + c];
         }
     }
-    (wt_ih, wt_hh)
+    (wt_ih, wt_hh, stride)
 }
 
-/// Streaming bit-exact quantized GRU DPD.
-pub struct QGruDpd {
+/// Streaming bit-exact quantized GRU DPD, generic over the gate
+/// kernel behind the matvec inner loops (`fixed::kernel`). Dispatch
+/// is static — the kernel is part of the engine's type — and defaults
+/// to [`ScalarKernel`], so `QGruDpd::new` call sites stay unchanged;
+/// the factory picks [`crate::fixed::SimdKernel`] via
+/// [`QGruDpd::with_kernel`] when the host supports it. Every kernel
+/// is bit-exact to scalar (the `fixed::kernel` contract), so the
+/// choice never appears in the batch class.
+pub struct QGruDpd<K: GateKernel = ScalarKernel> {
     w: QGruWeights,
     act: ActKind,
     /// hidden-state codes
     h: Vec<i32>,
     gi: Vec<i32>,
     gh: Vec<i32>,
-    /// column-major weight copies for the vectorized narrow path
-    /// (bits <= 13): wt_ih[(col, r)] = w_ih[r][col], 3H-contiguous per
-    /// column so the accumulate loop is a 3H-wide SIMD axpy.
+    /// lane-blocked column-major weight copies for the narrow path
+    /// (bits <= 13): wt_ih[(col, r)] = w_ih[r][col], `stride`
+    /// contiguous per column (see [`transpose_gates_blocked`]).
     wt_ih: Vec<i32>,
     wt_hh: Vec<i32>,
     acc: Vec<i32>,
+    /// per-column stride of `wt_ih`/`wt_hh` (= 3H rounded up to the
+    /// kernel's lanes; also the length of `acc`/`gi`/`gh`, whose
+    /// padding entries stay zero forever)
+    stride: usize,
+    kernel: K,
 }
 
 impl QGruDpd {
+    /// Scalar-kernel constructor (the portable default).
     pub fn new(w: QGruWeights, act: ActKind) -> QGruDpd {
+        QGruDpd::with_kernel(w, act, ScalarKernel)
+    }
+}
+
+impl<K: GateKernel> QGruDpd<K> {
+    /// Construct over an explicit gate kernel — the single dispatch
+    /// point the engine factory selects at construction time.
+    pub fn with_kernel(w: QGruWeights, act: ActKind, kernel: K) -> QGruDpd<K> {
         let h = vec![0i32; w.hidden];
-        let g = vec![0i32; 3 * w.hidden];
-        let (wt_ih, wt_hh) = transpose_gates(&w);
-        QGruDpd { w, act, h, gi: g.clone(), gh: g.clone(), wt_ih, wt_hh, acc: g }
+        let (wt_ih, wt_hh, stride) = transpose_gates_blocked(&w, K::LANES);
+        QGruDpd {
+            h,
+            gi: vec![0i32; stride],
+            gh: vec![0i32; stride],
+            wt_ih,
+            wt_hh,
+            acc: vec![0i32; stride],
+            stride,
+            kernel,
+            w,
+            act,
+        }
+    }
+
+    /// The active kernel's label (diagnostics; not part of the
+    /// datapath identity).
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
     }
 
     pub fn spec(&self) -> QSpec {
@@ -220,33 +260,30 @@ impl QGruDpd {
         let x = self.features(iq);
 
         if spec.bits <= 13 {
-            // narrow fast path: i32 accumulation, column-major axpy so
-            // the 3H-wide inner loops auto-vectorize
-            let rows = 3 * hd;
+            // narrow fast path: i32 accumulation through the gate
+            // kernel — per-column axpys over the lane-blocked stride
+            // (tail-free for the SIMD kernel; the padding weights are
+            // zero, so padded accumulator entries stay zero)
+            let stride = self.stride;
+            let k = self.kernel;
 
             // input matvec
             for (a, b) in self.acc.iter_mut().zip(&self.w.b_ih) {
                 *a = b << f;
             }
             for (c, &xv) in x.iter().enumerate() {
-                let col = &self.wt_ih[c * rows..(c + 1) * rows];
-                for (a, &wv) in self.acc.iter_mut().zip(col) {
-                    *a += wv * xv;
-                }
+                k.axpy_i32(&mut self.acc, &self.wt_ih[c * stride..(c + 1) * stride], xv);
             }
-            requantize_block_i32(&self.acc, f, spec, &mut self.gi);
+            k.requantize_block_i32(&self.acc, f, spec, &mut self.gi);
             // hidden matvec
             for (a, b) in self.acc.iter_mut().zip(&self.w.b_hh) {
                 *a = b << f;
             }
             for c in 0..hd {
                 let xv = self.h[c];
-                let col = &self.wt_hh[c * rows..(c + 1) * rows];
-                for (a, &wv) in self.acc.iter_mut().zip(col) {
-                    *a += wv * xv;
-                }
+                k.axpy_i32(&mut self.acc, &self.wt_hh[c * stride..(c + 1) * stride], xv);
             }
-            requantize_block_i32(&self.acc, f, spec, &mut self.gh);
+            k.requantize_block_i32(&self.acc, f, spec, &mut self.gh);
         } else {
             // wide path: i64 accumulation
             for r in 0..3 * hd {
@@ -362,6 +399,8 @@ impl QGruDpd {
         let f = spec.frac();
         let hd = self.w.hidden;
         let rows = 3 * hd;
+        let stride = self.stride;
+        let k = self.kernel;
         let ba = active.len();
         let (qmin, qmax) = (spec.qmin(), spec.qmax());
         let half = 1i32 << (f - 1);
@@ -399,29 +438,27 @@ impl QGruDpd {
                 acc[r * ba..(r + 1) * ba].fill(b << f);
             }
             for c in 0..4 {
-                let col = &self.wt_ih[c * rows..(c + 1) * rows];
+                // batch-fastest axpy per weight row: the kernel runs
+                // across lanes, the per-lane op chain stays scalar
+                let col = &self.wt_ih[c * stride..c * stride + rows];
                 let xrow = &xb[c * ba..(c + 1) * ba];
                 for (r, &w) in col.iter().enumerate() {
-                    for (a, &x) in acc[r * ba..(r + 1) * ba].iter_mut().zip(xrow) {
-                        *a += w * x;
-                    }
+                    k.axpy_i32(&mut acc[r * ba..(r + 1) * ba], xrow, w);
                 }
             }
-            requantize_block_i32(&acc, f, spec, &mut gi);
+            k.requantize_block_i32(&acc, f, spec, &mut gi);
             // hidden matvec
             for (r, &b) in self.w.b_hh.iter().enumerate() {
                 acc[r * ba..(r + 1) * ba].fill(b << f);
             }
             for c in 0..hd {
-                let col = &self.wt_hh[c * rows..(c + 1) * rows];
+                let col = &self.wt_hh[c * stride..c * stride + rows];
                 let hrow = &hs[c * ba..(c + 1) * ba];
                 for (r, &w) in col.iter().enumerate() {
-                    for (a, &x) in acc[r * ba..(r + 1) * ba].iter_mut().zip(hrow) {
-                        *a += w * x;
-                    }
+                    k.axpy_i32(&mut acc[r * ba..(r + 1) * ba], hrow, w);
                 }
             }
-            requantize_block_i32(&acc, f, spec, &mut gh);
+            k.requantize_block_i32(&acc, f, spec, &mut gh);
             // gates: the scalar chain per lane, interleaved across the
             // batch (identical integer ops and order -> identical bits)
             for k in 0..hd {
@@ -465,7 +502,7 @@ impl QGruDpd {
     }
 }
 
-impl Dpd for QGruDpd {
+impl<K: GateKernel> Dpd for QGruDpd<K> {
     fn process(&mut self, iq: [f64; 2]) -> [f64; 2] {
         let spec = self.w.spec;
         let codes = [spec.quantize(iq[0]), spec.quantize(iq[1])];
@@ -549,24 +586,39 @@ impl Dpd for QGruDpd {
 /// domain i64 agrees bit-for-bit with the dense engine's i32 fast
 /// path (the `fixed::ops` property suite), and wide formats match the
 /// dense i64 path directly.
-pub struct DeltaQGruDpd {
+pub struct DeltaQGruDpd<K: GateKernel = ScalarKernel> {
     w: QGruWeights,
     act: ActKind,
     /// propagation threshold in codes (0 = bit-exact dense)
     theta: u32,
     st: DeltaSnapshot,
-    /// column-major weight copies (see [`transpose_gates`])
+    /// lane-blocked column-major weight copies (see
+    /// [`transpose_gates_blocked`]). The snapshot's accumulators stay
+    /// UNPADDED (3H — the state-format contract), so kernel calls
+    /// slice each padded column back down to 3H.
     wt_ih: Vec<i32>,
     wt_hh: Vec<i32>,
     gi: Vec<i32>,
     gh: Vec<i32>,
+    /// per-column stride of `wt_ih`/`wt_hh`
+    stride: usize,
+    kernel: K,
     stats: DeltaStats,
 }
 
 impl DeltaQGruDpd {
+    /// Scalar-kernel constructor (the portable default).
     pub fn new(w: QGruWeights, act: ActKind, theta: u32) -> DeltaQGruDpd {
+        DeltaQGruDpd::with_kernel(w, act, theta, ScalarKernel)
+    }
+}
+
+impl<K: GateKernel> DeltaQGruDpd<K> {
+    /// Construct over an explicit gate kernel (see
+    /// [`QGruDpd::with_kernel`]).
+    pub fn with_kernel(w: QGruWeights, act: ActKind, theta: u32, kernel: K) -> DeltaQGruDpd<K> {
         let g = vec![0i32; 3 * w.hidden];
-        let (wt_ih, wt_hh) = transpose_gates(&w);
+        let (wt_ih, wt_hh, stride) = transpose_gates_blocked(&w, K::LANES);
         let st = Self::fresh_state(&w);
         DeltaQGruDpd {
             w,
@@ -577,8 +629,16 @@ impl DeltaQGruDpd {
             wt_hh,
             gi: g.clone(),
             gh: g,
+            stride,
+            kernel,
             stats: DeltaStats::default(),
         }
+    }
+
+    /// The active kernel's label (diagnostics; not part of the
+    /// datapath identity).
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
     }
 
     /// The reset state: h = v_prev = 0, accumulators hold only the
@@ -624,14 +684,21 @@ impl DeltaQGruDpd {
         let f = spec.frac();
         let hd = self.w.hidden;
         let rows = 3 * hd;
+        let stride = self.stride;
+        let k = self.kernel;
         let one = 1i64 << f;
         let x = features_codes(spec, iq);
 
-        // delta pass over the input feature columns
+        // delta pass over the input feature columns (each padded
+        // column sliced back to 3H to match the unpadded snapshot)
         for (c, &xv) in x.iter().enumerate() {
             let d = xv - self.st.x_prev[c];
             if exceeds_theta(d, self.theta) {
-                delta_axpy_i64(&mut self.st.acc_ih, &self.wt_ih[c * rows..(c + 1) * rows], d);
+                k.delta_axpy_i64(
+                    &mut self.st.acc_ih,
+                    &self.wt_ih[c * stride..c * stride + rows],
+                    d,
+                );
                 self.st.x_prev[c] = xv;
                 self.stats.in_updates += 1;
             }
@@ -640,7 +707,11 @@ impl DeltaQGruDpd {
         for c in 0..hd {
             let d = self.st.h[c] - self.st.h_prev[c];
             if exceeds_theta(d, self.theta) {
-                delta_axpy_i64(&mut self.st.acc_hh, &self.wt_hh[c * rows..(c + 1) * rows], d);
+                k.delta_axpy_i64(
+                    &mut self.st.acc_hh,
+                    &self.wt_hh[c * stride..c * stride + rows],
+                    d,
+                );
                 self.st.h_prev[c] = self.st.h[c];
                 self.stats.hid_updates += 1;
             }
@@ -650,8 +721,8 @@ impl DeltaQGruDpd {
         self.stats.hid_cols += hd as u64;
 
         // readout: requantize the carried accumulators into gate codes
-        requantize_block_i64(&self.st.acc_ih, f, spec, &mut self.gi);
-        requantize_block_i64(&self.st.acc_hh, f, spec, &mut self.gh);
+        k.requantize_block_i64(&self.st.acc_ih, f, spec, &mut self.gi);
+        k.requantize_block_i64(&self.st.acc_hh, f, spec, &mut self.gh);
 
         // gates — the dense chain (wide form; bit-identical to the
         // narrow form on its domain, see fixed::ops)
@@ -698,7 +769,7 @@ impl DeltaQGruDpd {
     }
 }
 
-impl Dpd for DeltaQGruDpd {
+impl<K: GateKernel> Dpd for DeltaQGruDpd<K> {
     fn process(&mut self, iq: [f64; 2]) -> [f64; 2] {
         let spec = self.w.spec;
         let codes = [spec.quantize(iq[0]), spec.quantize(iq[1])];
@@ -1298,5 +1369,165 @@ mod tests {
             p += (u[0] as f64).powi(2) + (u[1] as f64).powi(2);
         }
         assert!(err / p < 0.5, "divergence too large: {}", err / p);
+    }
+
+    #[test]
+    fn simd_dense_engine_bit_identical_to_scalar() {
+        // The engine-level half of the SIMD bit-exactness contract:
+        // on random streams and random narrow formats the SIMD-kernel
+        // dense engine equals the scalar one bit for bit — outputs
+        // and hidden state. (Host-gated; the kernel-level property
+        // suite in fixed::kernel covers the primitives regardless.)
+        use crate::fixed::SimdKernel;
+        use crate::util::proptest::check;
+        let Some(simd) = SimdKernel::try_new() else {
+            eprintln!("host has no AVX2 — skipping SIMD engine parity");
+            return;
+        };
+        check("simd dense engine vs scalar", 20, |rng| {
+            let bits = rng.int_in(4, 13) as u32;
+            let spec = QSpec::new(bits).unwrap();
+            let w = rand_qweights(rng.next_u64(), spec);
+            let mut scalar = QGruDpd::new(w.clone(), ActKind::Hard);
+            let mut vector = QGruDpd::with_kernel(w, ActKind::Hard, simd);
+            let x = mixed_stream(rng, spec, 150);
+            let a = scalar.run_codes(&x);
+            let b = vector.run_codes(&x);
+            if a != b {
+                let at = a.iter().zip(&b).position(|(u, v)| u != v).unwrap();
+                return Err(format!("bits={bits}: outputs diverged at sample {at}"));
+            }
+            if scalar.h != vector.h {
+                return Err(format!("bits={bits}: hidden states diverged"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn simd_delta_engine_bit_identical_to_scalar() {
+        // Delta composed with SIMD: for any θ (not just the θ=0
+        // dense-parity hinge) the SIMD delta engine must equal the
+        // scalar delta engine exactly — same skip decisions, same i64
+        // accumulators, same outputs, same snapshot. Wide formats
+        // included: the delta path is i64 for every width.
+        use crate::fixed::SimdKernel;
+        use crate::util::proptest::check;
+        let Some(simd) = SimdKernel::try_new() else {
+            eprintln!("host has no AVX2 — skipping SIMD delta parity");
+            return;
+        };
+        check("simd delta engine vs scalar", 20, |rng| {
+            let bits = rng.int_in(4, 16) as u32;
+            let spec = QSpec::new(bits).unwrap();
+            let theta = rng.int_in(0, 64) as u32;
+            let w = rand_qweights(rng.next_u64(), spec);
+            let mut scalar = DeltaQGruDpd::new(w.clone(), ActKind::Hard, theta);
+            let mut vector = DeltaQGruDpd::with_kernel(w, ActKind::Hard, theta, simd);
+            let x = mixed_stream(rng, spec, 150);
+            let a = scalar.run_codes(&x);
+            let b = vector.run_codes(&x);
+            if a != b {
+                let at = a.iter().zip(&b).position(|(u, v)| u != v).unwrap();
+                return Err(format!("bits={bits} θ={theta}: diverged at sample {at}"));
+            }
+            if scalar.save_state() != vector.save_state() {
+                return Err(format!("bits={bits} θ={theta}: snapshots diverged"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn simd_soa_lanes_bit_identical_to_scalar_sequential() {
+        // SoA batched path with the SIMD kernel vs the scalar
+        // sequential multiplexer: ragged lanes, random states — the
+        // strongest cross-kernel form of the batch-parity contract.
+        use crate::dpd::{process_lanes_sequential, DpdLane, DpdState};
+        use crate::fixed::SimdKernel;
+        use crate::util::proptest::check;
+        let Some(simd) = SimdKernel::try_new() else {
+            eprintln!("host has no AVX2 — skipping SIMD SoA parity");
+            return;
+        };
+        check("simd soa lanes vs scalar sequential", 15, |rng| {
+            let spec = QSpec::Q12;
+            let w = rand_qweights(rng.next_u64(), spec);
+            let mut soa = QGruDpd::with_kernel(w.clone(), ActKind::Hard, simd);
+            let mut seq = QGruDpd::new(w, ActKind::Hard);
+            let nb = rng.int_in(2, 9) as usize;
+            let mut data: Vec<Vec<[f64; 2]>> = (0..nb)
+                .map(|_| {
+                    let len = rng.int_in(0, 40) as usize;
+                    (0..len).map(|_| [rng.range(-0.6, 0.6), rng.range(-0.6, 0.6)]).collect()
+                })
+                .collect();
+            let states: Vec<DpdState> = (0..nb)
+                .map(|_| {
+                    DpdState::I32((0..10).map(|_| rng.int_in(-2048, 2047) as i32).collect())
+                })
+                .collect();
+            let mut data2 = data.clone();
+            let mut st_soa = states.clone();
+            let mut st_seq = states;
+
+            let mut lanes: Vec<DpdLane> = data
+                .iter_mut()
+                .zip(st_soa.iter_mut())
+                .map(|(d, s)| DpdLane { iq: d.as_mut_slice(), state: s })
+                .collect();
+            soa.process_lanes(&mut lanes).map_err(|e| e.to_string())?;
+            drop(lanes);
+
+            let mut lanes: Vec<DpdLane> = data2
+                .iter_mut()
+                .zip(st_seq.iter_mut())
+                .map(|(d, s)| DpdLane { iq: d.as_mut_slice(), state: s })
+                .collect();
+            process_lanes_sequential(&mut seq, &mut lanes).map_err(|e| e.to_string())?;
+            drop(lanes);
+
+            if data != data2 {
+                return Err(format!("lane samples diverged (nb={nb})"));
+            }
+            if st_soa != st_seq {
+                return Err(format!("lane states diverged (nb={nb})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn blocked_layout_pads_with_zero_weights() {
+        // The cache-blocked layout invariant the kernels rely on:
+        // every padded column tail is exactly zero, and the engine's
+        // accumulator padding never leaks into gate codes.
+        use crate::fixed::kernel::SimdKernel;
+        let spec = QSpec::Q12;
+        let w = rand_qweights(17, spec);
+        let rows = 3 * w.hidden;
+        if let Some(simd) = SimdKernel::try_new() {
+            let mut dpd = QGruDpd::with_kernel(w.clone(), ActKind::Hard, simd);
+            assert_eq!(dpd.stride % 8, 0, "stride must be lane-aligned");
+            assert!(dpd.stride >= rows);
+            for c in 0..w.features {
+                let col = &dpd.wt_ih[c * dpd.stride..(c + 1) * dpd.stride];
+                assert!(col[rows..].iter().all(|&v| v == 0), "ih col {c} pad leaked");
+            }
+            for c in 0..w.hidden {
+                let col = &dpd.wt_hh[c * dpd.stride..(c + 1) * dpd.stride];
+                assert!(col[rows..].iter().all(|&v| v == 0), "hh col {c} pad leaked");
+            }
+            let mut rng = Rng::new(3);
+            for &iq in &mixed_stream(&mut rng, spec, 40) {
+                dpd.step_codes(iq);
+                assert!(dpd.acc[rows..].iter().all(|&v| v == 0), "acc pad drifted");
+                assert!(dpd.gi[rows..].iter().all(|&v| v == 0), "gi pad drifted");
+            }
+        }
+        // scalar engines keep the historical unpadded layout
+        let dpd = QGruDpd::new(w, ActKind::Hard);
+        assert_eq!(dpd.stride, rows);
+        assert_eq!(dpd.kernel_name(), "scalar");
     }
 }

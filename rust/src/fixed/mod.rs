@@ -8,8 +8,10 @@
 //! (`python/compile/kernels/quant.py`) and used by every quantized
 //! engine in the crate (`dpd::qgru`, `accel::engine`).
 
+pub mod kernel;
 pub mod ops;
 pub mod qspec;
 
+pub use kernel::{GateKernel, ScalarKernel, SimdKernel, SimdPolicy};
 pub use ops::{rshift_round, saturate_i64};
 pub use qspec::QSpec;

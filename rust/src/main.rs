@@ -13,17 +13,26 @@
 //!   sweep        Fig. 3 precision x activation sweep
 //!   info         artifact manifest summary
 //!
-//! Common flags: --artifacts <dir>,
-//! --engine <fixed|delta|native|cyclesim|interp|hlo>, --streams <n>,
+//! Common flags: --artifacts <dir>, --engine <spec>, --streams <n>,
 //! --symbols <n>, --seed <n>; `serve` adds --sessions <n>,
 //! --workers <n>, --rounds <n>, --shadow <engine> and --batch <n>
 //! (coalesce up to n same-engine sessions per worker dispatch into
 //! one batched engine call — bit-identical output, higher aggregate
-//! throughput). The `delta` engine takes --delta-theta <codes>
-//! (the DeltaDPD column-skip threshold; 0 is bit-identical to
-//! `fixed`, so `--engine delta --shadow fixed` is a live equivalence
-//! audit). The `hlo` engine needs a build with `--features xla`;
-//! `interp` is its hermetic frame-based twin.
+//! throughput).
+//!
+//! `--engine` takes an engine-spec string parsed by
+//! [`EngineKind::parse`] — `native | fixed[+simd] | delta[:θ][+simd]
+//! | cyclesim | interp | hlo` — and the help text renders the list
+//! from `EngineFactory::available_kinds()`, so it can never drift
+//! from what the build constructs. `delta:<codes>` carries the
+//! DeltaDPD column-skip threshold inline (0 is bit-identical to
+//! `fixed`, so `--engine delta:0 --shadow fixed` is a live
+//! equivalence audit); `--delta-theta <codes>` survives as a
+//! deprecated alias for specs that name no θ. `+simd` engages the
+//! AVX2 gate kernels where the host supports them and falls back to
+//! the bit-identical scalar kernel otherwise (`DPD_SIMD=off`
+//! forces the fallback). The `hlo` engine needs a build with
+//! `--features xla`; `interp` is its hermetic frame-based twin.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -42,7 +51,7 @@ use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
 use dpd_ne::metrics::evm::evm_db_nmse;
 use dpd_ne::pa::{DriftTrajectory, DriftingPa, PaSpec, RappMemPa};
 use dpd_ne::report::{f1, f2, f3, Table};
-use dpd_ne::runtime::Manifest;
+use dpd_ne::runtime::{EngineFactory, Manifest};
 use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
@@ -72,22 +81,23 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
 }
 
 fn parse_engine(name: &str, flags: &HashMap<String, String>) -> Result<EngineKind> {
-    Ok(match name {
-        "fixed" => EngineKind::Fixed,
-        "native" => EngineKind::NativeF64,
-        "cyclesim" => EngineKind::CycleSim,
-        "interp" => EngineKind::Interp,
-        // the delta-sparsity fast path; θ in codes via --delta-theta
-        // (0 = bit-identical to 'fixed', the conformance contract)
-        "delta" => EngineKind::DeltaFixed {
-            theta: flags.get("delta-theta").map(|s| s.parse()).transpose()?.unwrap_or(0),
-        },
-        #[cfg(feature = "xla")]
-        "hlo" => EngineKind::Hlo,
-        #[cfg(not(feature = "xla"))]
-        "hlo" => bail!("engine 'hlo' needs a build with --features xla (try 'interp')"),
-        other => bail!("unknown engine '{other}'"),
-    })
+    let kind = EngineKind::parse(name)?;
+    // deprecated alias: `--delta-theta <codes>` fills in the θ of a
+    // delta spec that names none (`delta`, `delta+simd`), keeping the
+    // pre-spec invocations (`--engine delta --delta-theta 32`)
+    // bit-identical. A spec with an explicit `:θ` wins; the flag is
+    // ignored on non-delta kinds, exactly as before.
+    if let Some(theta) = flags.get("delta-theta") {
+        if !name.contains(':') {
+            let theta: u32 = theta.parse()?;
+            return Ok(match kind {
+                EngineKind::DeltaFixed { .. } => EngineKind::DeltaFixed { theta },
+                EngineKind::DeltaFixedSimd { .. } => EngineKind::DeltaFixedSimd { theta },
+                other => other,
+            });
+        }
+    }
+    Ok(kind)
 }
 
 fn engine_kind(flags: &HashMap<String, String>) -> Result<EngineKind> {
@@ -98,15 +108,28 @@ fn artifacts(flags: &HashMap<String, String>) -> Option<PathBuf> {
     flags.get("artifacts").map(PathBuf::from)
 }
 
-fn usage() -> &'static str {
-    "usage: dpd-ne <run|serve|stream|asic-report|fpga-report|sweep|info> [flags]\n\
-     flags: --artifacts <dir> --engine <fixed|delta|native|cyclesim|interp|hlo> \
-     --streams <n> --symbols <n> --seed <n>\n\
-     serve: --sessions <n> --workers <n> --rounds <n> --shadow <engine> --batch <n>\n\
-     serve --adapt: closed-loop tracking of a drifting PA \
-     (--drift-ramp <samples> --refresh-interval <samples>)\n\
-     delta: --delta-theta <codes> (0 = bit-identical to 'fixed'; try 32)\n\
-     (engine 'hlo' needs a build with --features xla)"
+/// CLI help, rendered from the engine registry: the spec syntax list
+/// and the host's SIMD state come from
+/// [`EngineFactory::available_kinds`], never a hardcoded copy.
+fn usage() -> String {
+    let rows = EngineFactory::available_kinds();
+    let syntax: Vec<&'static str> = rows.iter().map(|r| r.syntax).collect();
+    let host_simd = rows.iter().any(|r| r.simd == Some(true));
+    format!(
+        "usage: dpd-ne <run|serve|stream|asic-report|fpga-report|sweep|info> [flags]\n\
+         flags: --artifacts <dir> --engine <{engines}> \
+         --streams <n> --symbols <n> --seed <n>\n\
+         serve: --sessions <n> --workers <n> --rounds <n> --shadow <engine> --batch <n>\n\
+         serve --adapt: closed-loop tracking of a drifting PA \
+         (--drift-ramp <samples> --refresh-interval <samples>)\n\
+         delta: θ in codes rides in the spec (delta:32; 0 = bit-identical to 'fixed'); \
+         --delta-theta <codes> is a deprecated alias\n\
+         +simd: AVX2 gate kernels, host support {simd}; \
+         DPD_SIMD=off forces the bit-identical scalar kernel\n\
+         (engine 'hlo' needs a build with --features xla)",
+        engines = syntax.join("|"),
+        simd = if host_simd { "detected" } else { "absent (scalar fallback)" },
+    )
 }
 
 fn main() -> Result<()> {
@@ -160,7 +183,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
         &["config", "ACPR (dBc)", "EVM (dB)"],
     );
     t.row(&["DPD off".into(), f1(off.acpr_dbc), f1(evm_off)]);
-    t.row(&[format!("DPD on ({:?})", coord.cfg.engine), f1(on.acpr_dbc), f1(evm_on)]);
+    t.row(&[format!("DPD on ({})", coord.cfg.engine), f1(on.acpr_dbc), f1(evm_on)]);
     println!("{}", t.render());
     println!(
         "engine throughput: {:.2} MSps ({:.3}x of the 250 MSps line rate)",
@@ -242,12 +265,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         .map(|kind| service.open_session(SessionConfig { engine: kind, ..Default::default() }))
         .transpose()?;
     println!(
-        "DpdService: {} workers, {} sessions ({engine:?}){}, batch {batch}, \
+        "DpdService: {} workers, {} sessions ({engine}){}, batch {batch}, \
          {} samples/burst x {rounds} bursts",
         service.workers(),
         n_sessions,
         match shadow_kind {
-            Some(k) => format!(" + shadow ({k:?})"),
+            Some(k) => format!(" + shadow ({k})"),
             None => String::new(),
         },
         sig.iq.len()
@@ -280,7 +303,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         outputs[k].extend(out.iq);
         t.row(&[
             format!("{k}"),
-            format!("{engine:?}"),
+            format!("{engine}"),
             out.stats.samples_out.to_string(),
             out.stats.frames.to_string(),
             f2(out.stats.engine_msps()),
@@ -292,7 +315,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         shadow_out.extend(out.iq);
         t.row(&[
             "shadow".into(),
-            format!("{:?}", shadow_kind.unwrap()),
+            format!("{}", shadow_kind.unwrap()),
             out.stats.samples_out.to_string(),
             out.stats.frames.to_string(),
             f2(out.stats.engine_msps()),
@@ -330,7 +353,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
 /// background adapt worker trains the float twin and hot-swaps the
 /// engine every `--refresh-interval` samples. Knobs: `--drift-ramp`
 /// (samples to full excursion, 0 = step), `--refresh-interval`,
-/// `--rounds`, `--engine <fixed|delta|native>`.
+/// `--rounds`, `--engine` (a refreshable spec: `native`,
+/// `fixed[+simd]` or `delta[:θ][+simd]`).
 fn cmd_serve_adapt(flags: &HashMap<String, String>) -> Result<()> {
     // defaults sized so the stock invocation actually demonstrates the
     // loop: 8 rounds x 24 symbols = ~52k feedback samples -> several
@@ -357,7 +381,7 @@ fn cmd_serve_adapt(flags: &HashMap<String, String>) -> Result<()> {
     let mut session =
         service.open_session(SessionConfig { engine, adapt: Some(acfg), ..Default::default() })?;
     println!(
-        "closed loop: engine {engine:?}, drift ramp {ramp} samples, refresh every {refresh}, \
+        "closed loop: engine {engine}, drift ramp {ramp} samples, refresh every {refresh}, \
          {} samples/round x {rounds} rounds",
         sig.iq.len()
     );

@@ -21,10 +21,23 @@
 //! bit-exact integer datapath — equal inputs give *identical* outputs
 //! (modulo the frame-reset semantics of `Interp`). `DeltaFixed` with
 //! θ>0 deliberately trades bounded drift for skipped MACs (golden
-//! delta trace pins the envelope). `NativeF64` is the float
+//! delta trace pins the envelope). `FixedSimd`/`DeltaFixedSimd` are
+//! the same datapaths behind the vector
+//! [`GateKernel`](crate::fixed::GateKernel) and are bit-identical to
+//! their scalar twins on every host (the kernel seam's contract) —
+//! including when the host lacks AVX2 or `DPD_SIMD=off` forces the
+//! scalar fallback. `NativeF64` is the float
 //! reference; it tracks the integer engines within the quantization
 //! envelope (documented tolerance: NMSE better than -12 dB and
 //! per-sample deviation under 0.3 on small-signal stimulus at Q2.10).
+//!
+//! Engine selection is string-addressable: [`EngineKind::parse`] and
+//! `Display` round-trip the spec grammar `native | fixed[+simd] |
+//! delta[:θ][+simd] | cyclesim | interp | hlo`, and
+//! [`EngineFactory::available_kinds`] returns structured
+//! [`EngineDescriptor`] rows (kind, spec, syntax, host SIMD state) so
+//! CLI help and examples render from the registry instead of
+//! hardcoded lists.
 //!
 //! Without the `xla` feature, `EngineKind::Hlo` does not exist and the
 //! frame-semantics role is served by `Interp` — the pure-Rust
@@ -36,9 +49,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
-#[cfg(feature = "xla")]
-use anyhow::Context;
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use crate::accel::act_unit::ActImpl;
 use crate::accel::fsm::HwConfig;
@@ -46,6 +57,7 @@ use crate::accel::CycleAccurateEngine;
 use crate::dpd::qgru::{ActKind, DeltaQGruDpd, QGruDpd};
 use crate::dpd::weights::{GruWeights, QGruWeights};
 use crate::dpd::{Dpd, GruDpd};
+use crate::fixed::kernel::{resolve_simd, SimdPolicy};
 use crate::fixed::QSpec;
 use crate::runtime::Manifest;
 use crate::util::fnv1a_words;
@@ -71,6 +83,20 @@ pub enum EngineKind {
         /// propagation threshold in Q-format codes
         theta: u32,
     },
+    /// `Fixed`'s datapath behind the vector
+    /// [`GateKernel`](crate::fixed::GateKernel) (AVX2, runtime
+    /// detected). Bit-identical to `Fixed` by the kernel seam's
+    /// contract; on hosts without AVX2, or under `DPD_SIMD=off` /
+    /// [`SimdPolicy::Off`], the engine silently carries the scalar
+    /// kernel instead — same bits, no error
+    FixedSimd,
+    /// `DeltaFixed` composed with the vector kernel — the same
+    /// fallback and bit-exactness contract as `FixedSimd`, applied to
+    /// the i64 delta accumulators
+    DeltaFixedSimd {
+        /// propagation threshold in Q-format codes
+        theta: u32,
+    },
     /// cycle-accurate ASIC simulator
     CycleSim,
     /// interpreted frame engine: the bit-exact `QGruDpd` run with the
@@ -80,6 +106,104 @@ pub enum EngineKind {
     /// AOT HLO via the PJRT CPU client (frame-based)
     #[cfg(feature = "xla")]
     Hlo,
+}
+
+impl std::fmt::Display for EngineKind {
+    /// The canonical engine-spec string; [`EngineKind::parse`] is the
+    /// exact inverse (round-trip contract, pinned by the unit tests).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineKind::NativeF64 => write!(f, "native"),
+            EngineKind::Fixed => write!(f, "fixed"),
+            EngineKind::DeltaFixed { theta } => write!(f, "delta:{theta}"),
+            EngineKind::FixedSimd => write!(f, "fixed+simd"),
+            EngineKind::DeltaFixedSimd { theta } => write!(f, "delta:{theta}+simd"),
+            EngineKind::CycleSim => write!(f, "cyclesim"),
+            EngineKind::Interp => write!(f, "interp"),
+            #[cfg(feature = "xla")]
+            EngineKind::Hlo => write!(f, "hlo"),
+        }
+    }
+}
+
+impl EngineKind {
+    /// Parse an engine-spec string — the single grammar every surface
+    /// (CLI `--engine`, conformance scenario labels, service configs)
+    /// shares:
+    ///
+    /// ```text
+    /// native | fixed[+simd] | delta[:θ][+simd] | cyclesim | interp | hlo
+    /// ```
+    ///
+    /// Bare `delta` means θ=0 (the bit-exact hinge). `+simd` composes
+    /// only with the kernel-seam kinds (`fixed`, `delta`); anything
+    /// else with the suffix is rejected rather than silently ignored.
+    /// `parse(&k.to_string()) == k` for every kind in this build.
+    pub fn parse(spec: &str) -> Result<EngineKind> {
+        let s = spec.trim();
+        let (base, simd) = match s.strip_suffix("+simd") {
+            Some(b) => (b, true),
+            None => (s, false),
+        };
+        if base == "delta" || base.starts_with("delta:") {
+            let theta: u32 = match base.strip_prefix("delta:") {
+                Some(t) => t
+                    .parse()
+                    .with_context(|| format!("bad θ in engine spec '{spec}' (want delta:<codes>)"))?,
+                None => 0,
+            };
+            return Ok(if simd {
+                EngineKind::DeltaFixedSimd { theta }
+            } else {
+                EngineKind::DeltaFixed { theta }
+            });
+        }
+        if base == "fixed" {
+            return Ok(if simd { EngineKind::FixedSimd } else { EngineKind::Fixed });
+        }
+        if simd {
+            bail!("engine spec '{spec}': '+simd' composes only with 'fixed' or 'delta[:θ]'");
+        }
+        Ok(match base {
+            "native" | "native-f64" => EngineKind::NativeF64,
+            "cyclesim" => EngineKind::CycleSim,
+            "interp" => EngineKind::Interp,
+            #[cfg(feature = "xla")]
+            "hlo" => EngineKind::Hlo,
+            #[cfg(not(feature = "xla"))]
+            "hlo" => bail!("engine 'hlo' needs a build with --features xla (try 'interp')"),
+            other => bail!(
+                "unknown engine '{other}' \
+                 (spec grammar: native | fixed[+simd] | delta[:θ][+simd] | cyclesim | interp | hlo)"
+            ),
+        })
+    }
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<EngineKind> {
+        EngineKind::parse(s)
+    }
+}
+
+/// One registry row from [`EngineFactory::available_kinds`]: the
+/// structured description CLI help, examples and reports render from,
+/// so the engine list can never drift from what the build constructs.
+#[derive(Clone, Debug)]
+pub struct EngineDescriptor {
+    /// canonical kind (θ=0 for the delta family's registry row)
+    pub kind: EngineKind,
+    /// canonical spec string, `kind.to_string()`
+    pub spec: String,
+    /// human-facing spec syntax, e.g. `"delta[:θ][+simd]"`
+    pub syntax: &'static str,
+    /// `Some(active)` for kernel-seam kinds: whether the vector kernel
+    /// would engage on this host under [`SimdPolicy::Auto`] (AVX2
+    /// detected and not vetoed by `DPD_SIMD`); `None` for kinds with
+    /// no kernel seam
+    pub simd: Option<bool>,
 }
 
 /// A DPD engine behind the unified frame-level interface.
@@ -405,6 +529,9 @@ pub struct EngineFactory {
     kind: EngineKind,
     manifest: Arc<Manifest>,
     frame_len: Option<usize>,
+    /// kernel policy for the `*Simd` kinds: `Auto` (host detection +
+    /// the `DPD_SIMD` veto) or `Off` (force the scalar kernel)
+    simd: SimdPolicy,
 }
 
 impl EngineFactory {
@@ -430,7 +557,40 @@ impl EngineFactory {
             }
             _ => None,
         };
-        Ok(EngineFactory { kind, manifest, frame_len })
+        Ok(EngineFactory { kind, manifest, frame_len, simd: SimdPolicy::default() })
+    }
+
+    /// Override the SIMD kernel policy (default [`SimdPolicy::Auto`]).
+    /// `Off` forces the scalar kernel even on AVX2 hosts — the
+    /// `DPD_SIMD=off` escape hatch, routed here by
+    /// [`ServiceConfig`](crate::coordinator::ServiceConfig).
+    pub fn with_simd_policy(mut self, simd: SimdPolicy) -> EngineFactory {
+        self.simd = simd;
+        self
+    }
+
+    /// Structured descriptors for every kind this build can construct,
+    /// with the host's SIMD state resolved — the single source of
+    /// truth for CLI help and `examples/end_to_end.rs`.
+    pub fn available_kinds() -> Vec<EngineDescriptor> {
+        let host_simd = resolve_simd(SimdPolicy::Auto).is_some();
+        available_kinds()
+            .into_iter()
+            .map(|kind| {
+                let (syntax, simd) = match kind {
+                    EngineKind::NativeF64 => ("native", None),
+                    EngineKind::Fixed => ("fixed", Some(false)),
+                    EngineKind::DeltaFixed { .. } => ("delta[:θ]", Some(false)),
+                    EngineKind::FixedSimd => ("fixed+simd", Some(host_simd)),
+                    EngineKind::DeltaFixedSimd { .. } => ("delta[:θ]+simd", Some(host_simd)),
+                    EngineKind::CycleSim => ("cyclesim", None),
+                    EngineKind::Interp => ("interp", None),
+                    #[cfg(feature = "xla")]
+                    EngineKind::Hlo => ("hlo", None),
+                };
+                EngineDescriptor { kind, spec: kind.to_string(), syntax, simd }
+            })
+            .collect()
     }
 
     pub fn kind(&self) -> EngineKind {
@@ -474,6 +634,36 @@ impl EngineFactory {
                     theta,
                 ))))
             }
+            EngineKind::FixedSimd => {
+                let spec = QSpec::new(m.qspec_bits)?;
+                let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
+                match resolve_simd(self.simd) {
+                    Some(k) => Box::new(StreamingEngine::new(Box::new(QGruDpd::with_kernel(
+                        w,
+                        ActKind::Hard,
+                        k,
+                    )))),
+                    // always-available fallback, bit-identical by the
+                    // kernel seam's contract
+                    None => {
+                        Box::new(StreamingEngine::new(Box::new(QGruDpd::new(w, ActKind::Hard))))
+                    }
+                }
+            }
+            EngineKind::DeltaFixedSimd { theta } => {
+                let spec = QSpec::new(m.qspec_bits)?;
+                let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
+                match resolve_simd(self.simd) {
+                    Some(k) => Box::new(StreamingEngine::new(Box::new(
+                        DeltaQGruDpd::with_kernel(w, ActKind::Hard, theta, k),
+                    ))),
+                    None => Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
+                        w,
+                        ActKind::Hard,
+                        theta,
+                    )))),
+                }
+            }
             EngineKind::CycleSim => {
                 let spec = QSpec::new(m.qspec_bits)?;
                 let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
@@ -497,6 +687,8 @@ pub fn available_kinds() -> Vec<EngineKind> {
         EngineKind::NativeF64,
         EngineKind::Fixed,
         EngineKind::DeltaFixed { theta: 0 },
+        EngineKind::FixedSimd,
+        EngineKind::DeltaFixedSimd { theta: 0 },
         EngineKind::CycleSim,
         EngineKind::Interp,
     ];
@@ -808,8 +1000,112 @@ mod tests {
         assert!(kinds.contains(&EngineKind::NativeF64));
         assert!(kinds.contains(&EngineKind::Fixed));
         assert!(kinds.contains(&EngineKind::DeltaFixed { theta: 0 }));
+        assert!(kinds.contains(&EngineKind::FixedSimd));
+        assert!(kinds.contains(&EngineKind::DeltaFixedSimd { theta: 0 }));
         assert!(kinds.contains(&EngineKind::CycleSim));
         assert!(kinds.contains(&EngineKind::Interp));
+    }
+
+    #[test]
+    fn engine_spec_strings_round_trip() {
+        // parse is the exact inverse of Display for every kind in the
+        // build, including non-registry θ values
+        let mut kinds = available_kinds();
+        kinds.push(EngineKind::DeltaFixed { theta: 32 });
+        kinds.push(EngineKind::DeltaFixedSimd { theta: 32 });
+        for kind in kinds {
+            let spec = kind.to_string();
+            assert_eq!(EngineKind::parse(&spec).unwrap(), kind, "round-trip of '{spec}'");
+        }
+        // the canonical spellings are API surface — pin them
+        assert_eq!(EngineKind::Fixed.to_string(), "fixed");
+        assert_eq!(EngineKind::FixedSimd.to_string(), "fixed+simd");
+        assert_eq!(EngineKind::DeltaFixed { theta: 32 }.to_string(), "delta:32");
+        assert_eq!(EngineKind::DeltaFixedSimd { theta: 32 }.to_string(), "delta:32+simd");
+        // bare "delta" means θ=0, with or without the simd suffix
+        assert_eq!(EngineKind::parse("delta").unwrap(), EngineKind::DeltaFixed { theta: 0 });
+        assert_eq!(
+            EngineKind::parse("delta+simd").unwrap(),
+            EngineKind::DeltaFixedSimd { theta: 0 }
+        );
+        // whitespace-tolerant, and FromStr delegates
+        assert_eq!(EngineKind::parse(" fixed+simd ").unwrap(), EngineKind::FixedSimd);
+        assert_eq!("delta:7".parse::<EngineKind>().unwrap(), EngineKind::DeltaFixed { theta: 7 });
+    }
+
+    #[test]
+    fn engine_spec_rejects_malformed_strings() {
+        for bad in [
+            "",
+            "quantum",
+            "delta:",
+            "delta:x",
+            "delta:-3",
+            "native+simd",
+            "cyclesim+simd",
+            "interp+simd",
+            "fixed+avx",
+        ] {
+            assert!(EngineKind::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+        #[cfg(not(feature = "xla"))]
+        {
+            let err = EngineKind::parse("hlo").unwrap_err();
+            assert!(format!("{err:#}").contains("xla"));
+        }
+    }
+
+    #[test]
+    fn factory_registry_descriptors_cover_every_kind() {
+        // the structured registry is in lockstep with available_kinds
+        // and every row's spec string parses back to its kind — the
+        // property that keeps CLI help from drifting
+        let rows = EngineFactory::available_kinds();
+        assert_eq!(rows.len(), available_kinds().len());
+        for row in &rows {
+            assert_eq!(EngineKind::parse(&row.spec).unwrap(), row.kind, "spec '{}'", row.spec);
+            assert!(!row.syntax.is_empty());
+        }
+        let simd_row = rows.iter().find(|r| r.kind == EngineKind::FixedSimd).unwrap();
+        assert!(simd_row.simd.is_some(), "kernel kinds must report host SIMD state");
+        let scalar_row = rows.iter().find(|r| r.kind == EngineKind::Fixed).unwrap();
+        assert_eq!(scalar_row.simd, Some(false), "scalar kinds carry the seam, vector off");
+        let native = rows.iter().find(|r| r.kind == EngineKind::NativeF64).unwrap();
+        assert!(native.simd.is_none(), "no kernel seam on the float twin");
+    }
+
+    #[test]
+    fn batch_class_is_independent_of_kernel_choice() {
+        // Coalescing must never split on host capability: a SIMD-built
+        // engine advertises the same batch class as the scalar build of
+        // the same datapath (dense and delta alike), so sessions opened
+        // as "fixed+simd" and "fixed" coalesce wherever the weights and
+        // θ agree. The class hashes kind + format + weights + act only;
+        // the kernel is bit-neutral by contract, hence class-neutral.
+        use crate::fixed::SimdKernel;
+        let qw = synth_float_weights(31).quantize(QSpec::Q12);
+        let scalar = StreamingEngine::new(Box::new(QGruDpd::new(qw.clone(), ActKind::Hard)));
+        let scalar_delta =
+            StreamingEngine::new(Box::new(DeltaQGruDpd::new(qw.clone(), ActKind::Hard, 24)));
+        if let Some(k) = SimdKernel::try_new() {
+            let vector = StreamingEngine::new(Box::new(QGruDpd::with_kernel(
+                qw.clone(),
+                ActKind::Hard,
+                k,
+            )));
+            assert_eq!(scalar.batch_class(), vector.batch_class());
+            let vector_delta = StreamingEngine::new(Box::new(DeltaQGruDpd::with_kernel(
+                qw.clone(),
+                ActKind::Hard,
+                24,
+                k,
+            )));
+            assert_eq!(scalar_delta.batch_class(), vector_delta.batch_class());
+        } else {
+            eprintln!("host has no AVX2 — scalar half of the class check only");
+        }
+        assert!(scalar.batch_class().is_some());
+        assert_ne!(scalar.batch_class(), scalar_delta.batch_class());
     }
 
     #[test]

@@ -1,9 +1,9 @@
 //! Scenario DSL for the cross-engine conformance matrix.
 //!
-//! The engine zoo (NativeF64, Fixed, DeltaFixed, CycleSim, Interp,
-//! Hlo) stays honest only if every engine is driven through the same
-//! gauntlet of operating conditions and compared under its documented
-//! contract. This module is the shared harness: a [`Scenario`] is a
+//! The engine zoo (NativeF64, Fixed, DeltaFixed, their `+simd`
+//! kernel-backed forms, CycleSim, Interp, Hlo) stays honest only if
+//! every engine is driven through the same gauntlet of operating
+//! conditions and compared under its documented contract. This module is the shared harness: a [`Scenario`] is a
 //! script of bursts, mid-stream resets and save/load round-trips over
 //! generated stimuli (OFDM, tone pairs, silence/DC, full-scale
 //! saturation); [`run_scalar`] plays it through one engine's
@@ -12,8 +12,13 @@
 //! per-lane reference script so the two can be compared lane for
 //! lane. `tests/conformance.rs` instantiates the full matrix:
 //! bit-exactness inside the integer family (Fixed ≡ DeltaFixed@θ=0 ≡
-//! CycleSim), scalar ≡ batched for every engine, envelope tolerances
-//! for the float reference, and bounded ACPR/EVM drift for θ>0.
+//! CycleSim ≡ the AVX2-kernel engines ≡ the forced scalar fallback),
+//! scalar ≡ batched for every engine, envelope tolerances for the
+//! float reference, and bounded ACPR/EVM drift for θ>0 — where the
+//! θ>0 engines must additionally be kernel-invariant (identical bits
+//! whichever `GateKernel` ran). The harness itself never names a
+//! kernel: the choice is baked into the engine a maker constructs, so
+//! adding a kernel means adding maker rows, not new DSL.
 //!
 //! The harness lives in `util` so unit suites can reuse it, but it is
 //! engine-agnostic on purpose: everything it knows about an engine is

@@ -4,7 +4,7 @@
 //! The paper's value proposition is *bit-faithful* quantized GRU
 //! behavior, so the batched execution path may not change a single
 //! output bit: for every hermetic `EngineKind` construction
-//! (NativeF64, Fixed, CycleSim, Interp) and B ∈ {1, 2, 4, 8}
+//! (NativeF64, Fixed, FixedSimd, CycleSim, Interp) and B ∈ {1, 2, 4, 8}
 //! interleaved streams, a `DpdService` running with `batch = B` must
 //! produce output bit-identical to the same streams run sequentially
 //! (`batch = 1`) — including across mid-stream `reset`, ragged chunk
@@ -21,7 +21,7 @@ use dpd_ne::coordinator::{DpdService, ServiceConfig, SessionConfig, StreamSessio
 use dpd_ne::dpd::qgru::{ActKind, QGruDpd};
 use dpd_ne::dpd::weights::{GruWeights, QGruWeights};
 use dpd_ne::dpd::{Dpd, GruDpd};
-use dpd_ne::fixed::QSpec;
+use dpd_ne::fixed::{QSpec, SimdKernel};
 use dpd_ne::runtime::backend::{CycleSimDpd, InterpGruEngine, StreamingEngine};
 use dpd_ne::runtime::DpdEngine;
 use dpd_ne::util::Rng;
@@ -58,6 +58,16 @@ type Ctor = fn(u64) -> Box<dyn DpdEngine>;
 fn fixed_engine(seed: u64) -> Box<dyn DpdEngine> {
     let qw = QGruWeights::synthetic(seed, QSpec::Q12);
     Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw, ActKind::Hard))))
+}
+
+/// The `EngineKind::FixedSimd` construction: the vector kernel where
+/// the host has AVX2, the bit-identical scalar kernel otherwise.
+fn fixed_simd_engine(seed: u64) -> Box<dyn DpdEngine> {
+    let qw = QGruWeights::synthetic(seed, QSpec::Q12);
+    Box::new(StreamingEngine::new(match SimdKernel::try_new() {
+        Some(k) => Box::new(QGruDpd::with_kernel(qw, ActKind::Hard, k)) as Box<dyn Dpd>,
+        None => Box::new(QGruDpd::new(qw, ActKind::Hard)),
+    }))
 }
 
 fn native_engine(seed: u64) -> Box<dyn DpdEngine> {
@@ -198,6 +208,36 @@ fn batched_is_bit_identical_to_sequential_for_every_hermetic_kind() {
             let seq = run_sessions(1, ctor, &seeds, &inputs, &reset_at);
             let bat = run_sessions(b, ctor, &seeds, &inputs, &reset_at);
             assert_eq!(seq, bat, "{label} B={b}: batched path diverged from sequential");
+        }
+    }
+}
+
+#[test]
+fn simd_soa_lanes_are_bit_identical_to_sequential_scalar() {
+    // The cross-kernel form of the parity contract, at B ∈ {1, 4, 8}:
+    // a batched service whose engines carry the SIMD kernel must
+    // reproduce the *scalar* sequential service bit for bit — and the
+    // direct scalar oracle on top, so a bug shared by both service
+    // paths can't hide. On hosts without AVX2 this degenerates to the
+    // FixedSimd fallback arm, which the oracle still pins exactly.
+    for b in [1usize, 4, 8] {
+        let seeds = vec![42u64; b];
+        let inputs: Vec<Vec<[f64; 2]>> =
+            (0..b).map(|k| signal(900 + 61 * k, 100 + k as u64)).collect();
+        let reset_at: Vec<Option<usize>> =
+            (0..b).map(|k| if k == 1 { Some(411) } else { None }).collect();
+        let scalar_seq = run_sessions(1, fixed_engine, &seeds, &inputs, &reset_at);
+        let simd_bat = run_sessions(b, fixed_simd_engine, &seeds, &inputs, &reset_at);
+        assert_eq!(
+            simd_bat, scalar_seq,
+            "B={b}: SoA-SIMD lanes diverged from the sequential scalar service"
+        );
+        for k in 0..b {
+            assert_eq!(
+                simd_bat[k],
+                oracle(seeds[k], &inputs[k], reset_at[k]),
+                "B={b} lane {k}: SIMD lane diverged from the direct scalar oracle"
+            );
         }
     }
 }

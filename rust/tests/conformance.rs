@@ -4,7 +4,16 @@
 //!
 //! * **bit-exact family** — `Fixed`, `CycleSim` and `DeltaFixed@θ=0`
 //!   share the integer datapath: identical outputs on every scenario,
-//!   scalar and batched alike;
+//!   scalar and batched alike. The SIMD-kernel builds of the fixed
+//!   and delta engines (`fixed+simd`, `delta@0+simd`) are members of
+//!   the same family — the `GateKernel` seam's bit-exactness
+//!   contract — as is the forced scalar fallback (`fixed+simd-off`,
+//!   what a `FixedSimd` engine builds under `DPD_SIMD=off` or on a
+//!   host without AVX2);
+//! * **kernel invariance at θ>0** — the SIMD delta engine at the
+//!   golden θ equals the scalar delta engine bit for bit on every
+//!   scenario (same skip decisions, same accumulators), so delta@32
+//!   composed with SIMD inherits the golden drift bounds verbatim;
 //! * **scalar ≡ batched** — for *every* engine (including the float
 //!   reference and the frame engine), `run_batch` over ragged lanes
 //!   is bit-identical to per-lane scalar processing;
@@ -26,8 +35,8 @@ use dpd_ne::accel::delta::DeltaCostModel;
 use dpd_ne::accel::ops::ModelDims;
 use dpd_ne::dpd::qgru::{ActKind, DeltaQGruDpd, QGruDpd};
 use dpd_ne::dpd::weights::{GruWeights, QGruWeights};
-use dpd_ne::dpd::GruDpd;
-use dpd_ne::fixed::QSpec;
+use dpd_ne::dpd::{Dpd, GruDpd};
+use dpd_ne::fixed::{QSpec, SimdKernel};
 use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
 use dpd_ne::metrics::evm::{evm_db_nmse, nmse_db};
 use dpd_ne::pa::{PaSpec, RappMemPa};
@@ -112,6 +121,54 @@ fn makers() -> Vec<(&'static str, Box<dyn Fn() -> Box<dyn DpdEngine>>)> {
             Box::new(StreamingEngine::new(Box::new(GruDpd::new(fw.clone()))))
         }
     };
+    // the SIMD rows mirror EngineFactory's construction-time
+    // selection: the vector kernel where the host has AVX2, the
+    // bit-identical scalar kernel otherwise — so the matrix stays
+    // green on every host while proving the vector path wherever it
+    // can actually run (CI carries an AVX2 lane)
+    let mk_fixed_simd = {
+        let qw = qw.clone();
+        move || -> Box<dyn DpdEngine> {
+            Box::new(StreamingEngine::new(match SimdKernel::try_new() {
+                Some(k) => Box::new(QGruDpd::with_kernel(qw.clone(), ActKind::Hard, k))
+                    as Box<dyn Dpd>,
+                None => Box::new(QGruDpd::new(qw.clone(), ActKind::Hard)),
+            }))
+        }
+    };
+    let mk_delta0_simd = {
+        let qw = qw.clone();
+        move || -> Box<dyn DpdEngine> {
+            Box::new(StreamingEngine::new(match SimdKernel::try_new() {
+                Some(k) => Box::new(DeltaQGruDpd::with_kernel(qw.clone(), ActKind::Hard, 0, k))
+                    as Box<dyn Dpd>,
+                None => Box::new(DeltaQGruDpd::new(qw.clone(), ActKind::Hard, 0)),
+            }))
+        }
+    };
+    let mk_delta_g_simd = {
+        let qw = qw.clone();
+        move || -> Box<dyn DpdEngine> {
+            Box::new(StreamingEngine::new(match SimdKernel::try_new() {
+                Some(k) => Box::new(DeltaQGruDpd::with_kernel(
+                    qw.clone(),
+                    ActKind::Hard,
+                    GOLDEN_THETA,
+                    k,
+                )) as Box<dyn Dpd>,
+                None => Box::new(DeltaQGruDpd::new(qw.clone(), ActKind::Hard, GOLDEN_THETA)),
+            }))
+        }
+    };
+    // the forced-fallback row: exactly what EngineKind::FixedSimd
+    // builds under DPD_SIMD=off / SimdPolicy::Off — always the scalar
+    // kernel, asserted bit-exact alongside the vector row
+    let mk_fixed_simd_off = {
+        let qw = qw.clone();
+        move || -> Box<dyn DpdEngine> {
+            Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw.clone(), ActKind::Hard))))
+        }
+    };
     let mk_interp = move || -> Box<dyn DpdEngine> {
         Box::new(InterpGruEngine::new(QGruDpd::new(qw.clone(), ActKind::Hard), 64))
     };
@@ -120,6 +177,10 @@ fn makers() -> Vec<(&'static str, Box<dyn Fn() -> Box<dyn DpdEngine>>)> {
         ("cyclesim", Box::new(mk_cyclesim)),
         ("delta-fixed@0", Box::new(mk_delta0)),
         ("delta-fixed@golden", Box::new(mk_delta_g)),
+        ("fixed+simd", Box::new(mk_fixed_simd)),
+        ("delta-fixed@0+simd", Box::new(mk_delta0_simd)),
+        ("delta-fixed@golden+simd", Box::new(mk_delta_g_simd)),
+        ("fixed+simd-off", Box::new(mk_fixed_simd_off)),
         ("native-f64", Box::new(mk_native)),
         ("interp", Box::new(mk_interp)),
     ]
@@ -147,13 +208,17 @@ fn maker_by_label<'a>(
 
 #[test]
 fn integer_family_is_bit_exact_across_the_grid() {
-    // Fixed is the reference; CycleSim and DeltaFixed@0 must equal it
-    // bit for bit on every scenario — the θ=0 tentpole contract.
+    // Fixed is the reference; CycleSim, DeltaFixed@0 and every
+    // SIMD-kernel build (vector or forced-fallback) must equal it bit
+    // for bit on every scenario — the θ=0 tentpole contract plus the
+    // GateKernel seam's bit-exactness contract.
     let makers = makers();
     let reference = maker_by_label(&makers, "fixed");
     for sc in standard_grid(GRID_SEED) {
         let want = scalar_run(reference, &sc);
-        for label in ["cyclesim", "delta-fixed@0"] {
+        for label in
+            ["cyclesim", "delta-fixed@0", "fixed+simd", "delta-fixed@0+simd", "fixed+simd-off"]
+        {
             let got = scalar_run(maker_by_label(&makers, label), &sc);
             assert_eq!(
                 got, want,
@@ -161,6 +226,27 @@ fn integer_family_is_bit_exact_across_the_grid() {
                 sc.name
             );
         }
+    }
+}
+
+#[test]
+fn delta_at_golden_theta_is_kernel_invariant_across_the_grid() {
+    // delta@32 composed with SIMD: at θ>0 the output is NOT equal to
+    // Fixed (bounded drift by design) — but it must equal the scalar
+    // delta engine at the same θ exactly, scenario for scenario, so
+    // the golden drift/MAC bounds carry over to the SIMD build with
+    // no separate golden trace.
+    let makers = makers();
+    let scalar = maker_by_label(&makers, "delta-fixed@golden");
+    let simd = maker_by_label(&makers, "delta-fixed@golden+simd");
+    for sc in standard_grid(GRID_SEED) {
+        let want = scalar_run(scalar, &sc);
+        let got = scalar_run(simd, &sc);
+        assert_eq!(
+            got, want,
+            "delta-fixed@golden+simd: scenario '{}' diverged from the scalar delta engine",
+            sc.name
+        );
     }
 }
 

@@ -66,10 +66,20 @@ fn trait_objects_dispatch_uniformly() {
 #[test]
 fn available_kinds_match_build_features() {
     let kinds = available_kinds();
-    let expected = if cfg!(feature = "xla") { 6 } else { 5 };
+    let expected = if cfg!(feature = "xla") { 8 } else { 7 };
     assert_eq!(kinds.len(), expected);
     assert!(kinds.contains(&EngineKind::Interp));
     assert!(kinds.contains(&EngineKind::DeltaFixed { theta: 0 }));
+    assert!(kinds.contains(&EngineKind::FixedSimd));
+    assert!(kinds.contains(&EngineKind::DeltaFixedSimd { theta: 0 }));
+    // the structured registry mirrors the kind list one-to-one and
+    // every row's spec string round-trips through the parser
+    let rows = EngineFactory::available_kinds();
+    assert_eq!(rows.len(), kinds.len());
+    for (row, kind) in rows.iter().zip(&kinds) {
+        assert_eq!(row.kind, *kind);
+        assert_eq!(EngineKind::parse(&row.spec).unwrap(), *kind);
+    }
 }
 
 #[test]
