@@ -1,24 +1,33 @@
 //! mMIMO fan-out scaling — the deployment the paper's introduction
 //! motivates: one resident DPD engine instance per antenna stream.
 //!
-//! One persistent [`DpdService`] pool (8 workers) is started once;
-//! each antenna count then maps to that many concurrent
-//! [`StreamSession`]s on the *same* pool — no per-run thread-triple
-//! setup/teardown, the manifest resolved a single time — and reports
-//! per-stream and aggregate throughput scaling.
+//! A [`Fleet`] of two independent [`DpdService`] shards (4 workers
+//! each) is started once; each antenna count then maps to that many
+//! concurrent sessions admitted through the fleet's front door —
+//! least-loaded placement spreads the antennas across the shards, the
+//! per-shard histograms collect push-to-frame service latency, and the
+//! final drain reports the merged latency quantiles next to the
+//! throughput scaling table.
 //!
 //! ```bash
 //! cargo run --release --example mmimo_streams
 //! ```
 
-use dpd_ne::coordinator::{DpdService, EngineKind, ServiceConfig, SessionConfig};
+use dpd_ne::coordinator::{
+    EngineKind, Fleet, FleetConfig, ServiceConfig, SessionConfig, ShardPolicy,
+};
 use dpd_ne::report::{f2, Table};
 use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
 
 fn main() -> anyhow::Result<()> {
-    let service = DpdService::start(ServiceConfig { workers: 8, ..Default::default() })?;
+    let fleet = Fleet::start(FleetConfig {
+        shards: 2,
+        service: ServiceConfig { workers: 4, ..Default::default() },
+        policy: ShardPolicy::LeastLoaded,
+        ..Default::default()
+    })?;
     let mut t = Table::new(
-        "mMIMO scaling (fixed-point engine, one session per antenna on one pool)",
+        "mMIMO scaling (fixed-point engine, one session per antenna on a 2-shard fleet)",
         &["streams", "aggregate MSps", "per-stream MSps", "scaling eff."],
     );
     let mut base = 0.0;
@@ -36,11 +45,12 @@ fn main() -> anyhow::Result<()> {
             .collect();
         let total: usize = inputs.iter().map(|v| v.len()).sum();
 
-        // open all antenna sessions up front (spreads across the
-        // pool), then drive each from its own feeder thread
+        // open all antenna sessions up front (admission + placement
+        // spread them over the shards), then drive each from its own
+        // feeder thread
         let mut sessions = Vec::with_capacity(n);
         for _ in 0..n {
-            sessions.push(service.open_session(SessionConfig {
+            sessions.push(fleet.open_session(SessionConfig {
                 engine: EngineKind::Fixed,
                 ..Default::default()
             })?);
@@ -78,5 +88,15 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     println!("{}", t.render());
-    service.shutdown()
+    let stats = fleet.drain()?;
+    println!(
+        "fleet: {} sessions served across {} shards; push-to-frame latency \
+         p50 {:?} / p90 {:?} / p99 {:?}",
+        stats.sessions_drained,
+        stats.shards.len(),
+        stats.latency.p50(),
+        stats.latency.p90(),
+        stats.latency.p99(),
+    );
+    Ok(())
 }

@@ -1,0 +1,624 @@
+//! Fleet load generator: open-loop session churn against a [`Fleet`],
+//! swept over session counts until aggregate throughput saturates.
+//!
+//! This is the measurement half of the fleet layer (ISSUE 7 / ROADMAP
+//! item 3): where the micro benches report one engine's MSps, loadgen
+//! answers the deployment question — *how many concurrent sessions
+//! does a host sustain, and what happens to tail latency on the way
+//! to the knee?* OpenDPDv2's critique (PAPERS.md) is that single-point
+//! numbers hide exactly this curve.
+//!
+//! Shape of a run (`LoadgenConfig` → [`run`] → `BENCH_load.json`):
+//!
+//! * **Heterogeneous sessions.** Slots cycle through a fixed engine
+//!   mix (`fixed`, `fixed+simd`, `delta:16`, `delta:32+simd`,
+//!   `native`), all built hermetically from the shared synthetic
+//!   weight fixtures ([`build_synthetic`]) — no artifact tree. Every
+//!   `adaptive_every`-th slot instead opens a closed-loop adaptive
+//!   session (synthetic float twin, PA feedback from the hermetic
+//!   Rapp model) so the adapt workers carry load too.
+//! * **Open-loop arrivals.** Each slot draws a deterministic arrival
+//!   schedule from a forked [`Rng`](crate::util::Rng) — exponential
+//!   inter-push gaps (`poisson`) or back-to-back bursts separated by
+//!   long gaps (`bursty`). Driver threads replay the schedules in
+//!   *virtual* time (a min-heap ordered by arrival stamp): the
+//!   schedule fixes the interleaving and burst structure, while the
+//!   actual push rate is whatever the fleet sustains — open-loop in
+//!   the sense that arrival order never waits for completions.
+//! * **Churn.** A slot that exhausts its per-life sample budget
+//!   finishes its session (flushing the stream) and reopens a fresh
+//!   one, `lives` times — so a sweep level with `n` slots opens up to
+//!   `n × lives` sessions against admission caps sized to `n`.
+//! * **Saturation sweep.** Session counts double from 1 until the
+//!   aggregate MSps gain over the previous level falls under 5% (the
+//!   knee) or `max_sessions` is reached. Each level runs on a fresh
+//!   fleet, so levels are independent measurements.
+//!
+//! Every level also probes admission once with an over-cap open —
+//! proving the typed-rejection path stays fast under load and making
+//! the `rejected` counter in the artifact non-trivial.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::fleet::{AdmissionConfig, Fleet, FleetConfig, FleetSession, ShardPolicy};
+use super::service::ServiceConfig;
+use super::session::SessionConfig;
+use crate::coordinator::SessionAdaptConfig;
+use crate::dpd::GruWeights;
+use crate::pa::{PaSpec, RappMemPa};
+use crate::runtime::{build_synthetic, EngineKind};
+use crate::util::hist::LatencyHistogram;
+use crate::util::json::Json;
+use crate::util::Rng;
+
+/// Arrival schedule family for the open-loop drivers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// exponential inter-push gaps (memoryless arrivals)
+    Poisson,
+    /// runs of 4–16 back-to-back pushes separated by long gaps
+    Bursty,
+}
+
+impl std::fmt::Display for ArrivalKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArrivalKind::Poisson => write!(f, "poisson"),
+            ArrivalKind::Bursty => write!(f, "bursty"),
+        }
+    }
+}
+
+/// Loadgen knobs. [`LoadgenConfig::full`] is the real sweep;
+/// [`LoadgenConfig::quick`] is the CI smoke shape (seconds, small
+/// budgets, same code path end to end).
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// independent `DpdService` shards in the fleet under test
+    pub shards: usize,
+    /// worker threads per shard
+    pub workers_per_shard: usize,
+    /// framer length for every session
+    pub frame_len: usize,
+    /// samples per push (the arrival schedule's unit of work)
+    pub chunk: usize,
+    /// samples each session life streams before finishing
+    pub samples_per_session: usize,
+    /// sessions opened per slot across a level (churn factor)
+    pub lives: usize,
+    /// sweep ceiling: levels double 1, 2, 4, … up to this
+    pub max_sessions: usize,
+    /// placement policy of the fleet under test
+    pub policy: ShardPolicy,
+    /// arrival schedule family
+    pub arrival: ArrivalKind,
+    /// every k-th slot opens adaptively (0 = all frozen)
+    pub adaptive_every: usize,
+    /// max sessions coalesced per worker dispatch (ServiceConfig.batch)
+    pub batch: usize,
+    /// master seed: signal, schedules and weights all fork from it
+    pub seed: u64,
+}
+
+impl LoadgenConfig {
+    /// The real sweep: hundreds of sessions, two lives per slot.
+    pub fn full() -> LoadgenConfig {
+        LoadgenConfig {
+            shards: 2,
+            workers_per_shard: 4,
+            frame_len: 512,
+            chunk: 2048,
+            samples_per_session: 1 << 15,
+            lives: 2,
+            max_sessions: 256,
+            policy: ShardPolicy::StickyByClass,
+            arrival: ArrivalKind::Poisson,
+            adaptive_every: 8,
+            batch: 4,
+            seed: 42,
+        }
+    }
+
+    /// CI smoke shape: same code path, seconds of wall time.
+    pub fn quick() -> LoadgenConfig {
+        LoadgenConfig {
+            workers_per_shard: 1,
+            samples_per_session: 4096,
+            lives: 1,
+            max_sessions: 8,
+            ..LoadgenConfig::full()
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.shards > 0, "loadgen needs at least one shard");
+        anyhow::ensure!(self.workers_per_shard > 0, "loadgen needs at least one worker");
+        anyhow::ensure!(self.chunk > 0 && self.frame_len > 0, "chunk/frame_len must be > 0");
+        anyhow::ensure!(self.samples_per_session >= self.chunk, "budget under one chunk");
+        anyhow::ensure!(self.lives > 0, "lives must be > 0");
+        anyhow::ensure!(self.max_sessions > 0, "max_sessions must be > 0");
+        Ok(())
+    }
+}
+
+/// The frozen-engine mix a level's slots cycle through. `delta:0`
+/// deliberately absent (it is `fixed` bit-for-bit); the θ values
+/// match the conformance suite's.
+pub fn engine_mix() -> Vec<EngineKind> {
+    vec![
+        EngineKind::Fixed,
+        EngineKind::FixedSimd,
+        EngineKind::DeltaFixed { theta: 16 },
+        EngineKind::DeltaFixedSimd { theta: 32 },
+        EngineKind::NativeF64,
+    ]
+}
+
+/// One sweep level's measurement.
+#[derive(Clone, Debug)]
+pub struct LevelResult {
+    /// concurrent session slots at this level
+    pub sessions: usize,
+    /// aggregate throughput: streamed samples ÷ level wall time
+    pub msps: f64,
+    /// samples streamed across every session life
+    pub samples: u64,
+    pub wall: Duration,
+    /// sessions admitted / typed-rejected / closed over the level
+    pub opened: u64,
+    pub rejected: u64,
+    pub drained: u64,
+    /// merged per-push service latency across every shard
+    pub latency: LatencyHistogram,
+    /// per-shard (p50 µs, p99 µs, busy ratio) at drain time
+    pub shards: Vec<(f64, f64, f64)>,
+}
+
+/// A full sweep: the sessions×MSps curve plus the saturation verdict.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub levels: Vec<LevelResult>,
+    /// first level whose gain over its predecessor fell under 5%
+    pub knee_sessions: Option<usize>,
+    /// the curve's argmax: (sessions, MSps)
+    pub saturation: (usize, f64),
+}
+
+/// one session slot's churn state inside a driver thread
+struct Slot {
+    /// `None` only between lives (and in schedule-only tests)
+    session: Option<FleetSession>,
+    kind: EngineKind,
+    adaptive: bool,
+    /// samples still to push in the current life
+    remaining: usize,
+    lives_left: usize,
+    rng: Rng,
+    /// bursty arrivals: pushes left at gap zero
+    burst_left: u32,
+    /// input samples pushed but not yet drained (adaptive alignment)
+    x_fifo: Vec<[f64; 2]>,
+    /// feedback plant for adaptive slots
+    pa: Option<RappMemPa>,
+    /// read cursor into the shared stimulus block
+    sig_pos: usize,
+    /// samples streamed by finished lives of this slot
+    done: u64,
+}
+
+/// mean virtual inter-push gap (ns). Arbitrary but fixed: arrival
+/// stamps only order pushes, they never pace real time.
+const MEAN_GAP_NS: f64 = 1_000_000.0;
+
+fn next_gap(slot: &mut Slot, arrival: ArrivalKind) -> u64 {
+    match arrival {
+        ArrivalKind::Poisson => {
+            let u = slot.rng.uniform();
+            (-(1.0 - u).ln() * MEAN_GAP_NS) as u64
+        }
+        ArrivalKind::Bursty => {
+            if slot.burst_left > 0 {
+                slot.burst_left -= 1;
+                0
+            } else {
+                let n = 4 + slot.rng.below(13) as u32; // 4..=16
+                slot.burst_left = n - 1;
+                // the long gap "pays" for the whole burst
+                (n as f64 * MEAN_GAP_NS) as u64
+            }
+        }
+    }
+}
+
+/// open one slot's session on the fleet (frozen or adaptive)
+fn open_slot(
+    fleet: &Fleet,
+    cfg: &LoadgenConfig,
+    kind: EngineKind,
+    adaptive: bool,
+) -> Result<FleetSession> {
+    let scfg = SessionConfig {
+        engine: kind,
+        frame_len: Some(cfg.frame_len),
+        ..Default::default()
+    };
+    if adaptive {
+        // big interval: the adapt worker carries trainer load, but a
+        // loadgen life is too short to meaningfully converge a refresh
+        let acfg = SessionAdaptConfig { refresh_interval: 1 << 20, ..Default::default() };
+        fleet.open_adaptive_session(
+            SessionConfig { adapt: Some(acfg), ..scfg },
+            GruWeights::synthetic(cfg.seed),
+        )
+    } else {
+        let seed = cfg.seed;
+        let frame = cfg.frame_len;
+        fleet.open_session_with(scfg, move || {
+            build_synthetic(kind, seed, Default::default(), Some(frame))
+        })
+    }
+}
+
+/// drive one driver thread's slots through their schedules
+fn drive(
+    fleet: &Fleet,
+    cfg: &LoadgenConfig,
+    signal: &[[f64; 2]],
+    mut slots: Vec<Slot>,
+) -> Result<u64> {
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    for (i, slot) in slots.iter_mut().enumerate() {
+        let t = next_gap(slot, cfg.arrival);
+        heap.push(Reverse((t, i)));
+    }
+    while let Some(Reverse((t, i))) = heap.pop() {
+        let slot = &mut slots[i];
+        // next chunk of the shared stimulus, cycling
+        let n = cfg.chunk.min(slot.remaining);
+        let mut chunk = Vec::with_capacity(n);
+        while chunk.len() < n {
+            let take = (n - chunk.len()).min(signal.len() - slot.sig_pos);
+            chunk.extend_from_slice(&signal[slot.sig_pos..slot.sig_pos + take]);
+            slot.sig_pos = (slot.sig_pos + take) % signal.len();
+        }
+        let session = slot.session.as_mut().expect("scheduled slot holds a session");
+        session.push(&chunk)?;
+        slot.remaining -= n;
+        if slot.adaptive {
+            slot.x_fifo.extend_from_slice(&chunk);
+            let u = session.drain()?;
+            if !u.is_empty() {
+                let x: Vec<[f64; 2]> = slot.x_fifo.drain(..u.len()).collect();
+                let y = slot.pa.as_ref().expect("adaptive slot has a plant").run(&u);
+                session.adapt_feedback(&x, &u, &y)?;
+            }
+        } else {
+            // keep output queues shallow; samples are discarded (the
+            // harness measures, it does not consume)
+            session.drain()?;
+        }
+        if slot.remaining == 0 {
+            // life over: flush + close *first* (releasing the
+            // admission slot), then churn into a replacement — the
+            // level's cap is exactly its slot count, so the reopen
+            // always fits
+            let out = slot.session.take().expect("scheduled slot holds a session").finish()?;
+            slot.done += out.stats.samples_out;
+            slot.lives_left -= 1;
+            if slot.lives_left == 0 {
+                continue; // retired: no further events for this slot
+            }
+            slot.session = Some(open_slot(fleet, cfg, slot.kind, slot.adaptive)?);
+            slot.remaining = cfg.samples_per_session;
+            slot.x_fifo.clear();
+        }
+        heap.push(Reverse((t + next_gap(slot, cfg.arrival), i)));
+    }
+    Ok(slots.iter().map(|s| s.done).sum())
+}
+
+/// Run one sweep level on a fresh fleet.
+fn run_level(cfg: &LoadgenConfig, n: usize) -> Result<LevelResult> {
+    let fleet = Fleet::start(FleetConfig {
+        shards: cfg.shards,
+        service: ServiceConfig {
+            workers: cfg.workers_per_shard,
+            frame_len: cfg.frame_len,
+            batch: cfg.batch,
+            ..Default::default()
+        },
+        policy: cfg.policy,
+        // cap exactly at the level's slot count: churn finishes the
+        // old session before reopening, so the reopen always fits,
+        // and the probe below exercises the typed rejection
+        admission: AdmissionConfig { max_sessions: n, ..Default::default() },
+    })?;
+
+    // shared deterministic stimulus (one block, every slot cycles it)
+    let mut sig_rng = Rng::new(cfg.seed ^ 0x10ad_5e55);
+    let signal: Vec<[f64; 2]> =
+        (0..1 << 13).map(|_| [sig_rng.gauss() * 0.25, sig_rng.gauss() * 0.25]).collect();
+
+    let mix = engine_mix();
+    let mut schedule_rng = Rng::new(cfg.seed ^ 0xa221_7a1);
+    let mut slots: Vec<Slot> = (0..n)
+        .map(|i| {
+            let adaptive = cfg.adaptive_every > 0 && (i + 1) % cfg.adaptive_every == 0;
+            let kind = if adaptive { EngineKind::Fixed } else { mix[i % mix.len()] };
+            let session = open_slot(&fleet, cfg, kind, adaptive)?;
+            Ok(Slot {
+                session: Some(session),
+                kind,
+                adaptive,
+                remaining: cfg.samples_per_session,
+                lives_left: cfg.lives,
+                rng: schedule_rng.fork(i as u64),
+                burst_left: 0,
+                x_fifo: Vec::new(),
+                pa: adaptive.then(|| RappMemPa::new(PaSpec::ganlike())),
+                sig_pos: (i * 97) % (1 << 13),
+                done: 0,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    // admission probe: with every slot held, one more open must trip
+    // the typed rejection — fast, while the existing sessions stream
+    let err = open_slot(&fleet, cfg, EngineKind::Fixed, false)
+        .err()
+        .ok_or_else(|| anyhow!("over-cap open unexpectedly admitted"))?;
+    anyhow::ensure!(
+        err.downcast_ref::<super::fleet::AdmissionError>().is_some(),
+        "over-cap open failed without a typed AdmissionError: {err:#}"
+    );
+
+    // drive the slots from a few threads, each replaying its own
+    // virtual-time schedule
+    let n_threads = n.clamp(1, 4);
+    let mut buckets: Vec<Vec<Slot>> = (0..n_threads).map(|_| Vec::new()).collect();
+    for (i, slot) in slots.drain(..).enumerate() {
+        buckets[i % n_threads].push(slot);
+    }
+    let t0 = Instant::now();
+    let fleet_ref = &fleet;
+    let signal_ref = &signal[..];
+    let totals: Vec<Result<u64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = buckets
+            .into_iter()
+            .map(|bucket| s.spawn(move || drive(fleet_ref, cfg, signal_ref, bucket)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("driver thread panicked")).collect()
+    });
+    let wall = t0.elapsed();
+    let samples: u64 = totals.into_iter().collect::<Result<Vec<u64>>>()?.iter().sum();
+
+    let stats = fleet.drain().context("draining the level's fleet")?;
+    Ok(LevelResult {
+        sessions: n,
+        msps: samples as f64 / wall.as_secs_f64().max(1e-9) / 1e6,
+        samples,
+        wall,
+        opened: stats.sessions_opened,
+        rejected: stats.sessions_rejected,
+        drained: stats.sessions_drained,
+        latency: stats.latency.clone(),
+        shards: stats
+            .shards
+            .iter()
+            .map(|sh| {
+                (
+                    sh.latency.p50().as_secs_f64() * 1e6,
+                    sh.latency.p99().as_secs_f64() * 1e6,
+                    sh.busy_ratio,
+                )
+            })
+            .collect(),
+    })
+}
+
+/// Run the sweep: session counts double from 1 until the throughput
+/// gain over the previous level falls under 5% (the knee, confirmed
+/// by running that level) or `max_sessions` is reached.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    cfg.validate()?;
+    let mut levels: Vec<LevelResult> = Vec::new();
+    let mut knee = None;
+    let mut n = 1;
+    loop {
+        let level = run_level(cfg, n).with_context(|| format!("loadgen level n={n}"))?;
+        let saturated = levels
+            .last()
+            .map(|prev| level.msps < prev.msps * 1.05)
+            .unwrap_or(false);
+        levels.push(level);
+        if saturated && knee.is_none() {
+            knee = Some(n);
+            break;
+        }
+        if n >= cfg.max_sessions {
+            break;
+        }
+        n = (n * 2).min(cfg.max_sessions);
+    }
+    let saturation = levels
+        .iter()
+        .max_by(|a, b| a.msps.total_cmp(&b.msps))
+        .map(|l| (l.sessions, l.msps))
+        .expect("at least one level ran");
+    Ok(LoadReport { levels, knee_sessions: knee, saturation })
+}
+
+/// Serialize a sweep to `BENCH_load.json` in `$BENCH_OUT_DIR` (or the
+/// working directory) — the same resolution as
+/// [`bench::Report`](crate::bench::Report), so the CI artifact upload
+/// finds both in one place. Returns the path written.
+pub fn write_json(cfg: &LoadgenConfig, report: &LoadReport, quick: bool) -> Result<PathBuf> {
+    let dir = std::env::var("BENCH_OUT_DIR").unwrap_or_else(|_| ".".to_string());
+    write_json_to(std::path::Path::new(&dir), cfg, report, quick)
+}
+
+/// [`write_json`] into an explicit directory.
+pub fn write_json_to(
+    dir: &std::path::Path,
+    cfg: &LoadgenConfig,
+    report: &LoadReport,
+    quick: bool,
+) -> Result<PathBuf> {
+    let curve: Vec<Json> = report
+        .levels
+        .iter()
+        .map(|l| {
+            let shards: Vec<Json> = l
+                .shards
+                .iter()
+                .map(|&(p50_us, p99_us, busy)| {
+                    Json::obj(vec![
+                        ("p50_us", Json::num(p50_us)),
+                        ("p99_us", Json::num(p99_us)),
+                        ("busy_ratio", Json::num(busy)),
+                    ])
+                })
+                .collect();
+            Json::obj(vec![
+                ("sessions", Json::num(l.sessions as f64)),
+                ("msps", Json::num(l.msps)),
+                ("samples", Json::num(l.samples as f64)),
+                ("wall_s", Json::num(l.wall.as_secs_f64())),
+                ("p50_us", Json::num(l.latency.p50().as_secs_f64() * 1e6)),
+                ("p90_us", Json::num(l.latency.p90().as_secs_f64() * 1e6)),
+                ("p99_us", Json::num(l.latency.p99().as_secs_f64() * 1e6)),
+                ("opened", Json::num(l.opened as f64)),
+                ("rejected", Json::num(l.rejected as f64)),
+                ("drained", Json::num(l.drained as f64)),
+                ("shards", Json::Arr(shards)),
+            ])
+        })
+        .collect();
+    let j = Json::obj(vec![
+        ("bench", Json::str("load")),
+        ("quick", Json::Bool(quick)),
+        (
+            "config",
+            Json::obj(vec![
+                ("shards", Json::num(cfg.shards as f64)),
+                ("workers_per_shard", Json::num(cfg.workers_per_shard as f64)),
+                ("frame_len", Json::num(cfg.frame_len as f64)),
+                ("chunk", Json::num(cfg.chunk as f64)),
+                ("samples_per_session", Json::num(cfg.samples_per_session as f64)),
+                ("lives", Json::num(cfg.lives as f64)),
+                ("max_sessions", Json::num(cfg.max_sessions as f64)),
+                ("policy", Json::str(format!("{:?}", cfg.policy))),
+                ("arrival", Json::str(cfg.arrival.to_string())),
+                ("adaptive_every", Json::num(cfg.adaptive_every as f64)),
+                ("batch", Json::num(cfg.batch as f64)),
+                ("seed", Json::num(cfg.seed as f64)),
+            ]),
+        ),
+        (
+            "engine_mix",
+            Json::Arr(engine_mix().iter().map(|k| Json::str(k.to_string())).collect()),
+        ),
+        ("curve", Json::Arr(curve)),
+        (
+            "saturation",
+            Json::obj(vec![
+                ("sessions", Json::num(report.saturation.0 as f64)),
+                ("msps", Json::num(report.saturation.1)),
+            ]),
+        ),
+        (
+            "knee_sessions",
+            report.knee_sessions.map(|n| Json::num(n as f64)).unwrap_or(Json::Null),
+        ),
+    ]);
+    let path = dir.join("BENCH_load.json");
+    std::fs::write(&path, j.dump()).with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        LoadgenConfig::full().validate().unwrap();
+        LoadgenConfig::quick().validate().unwrap();
+        assert!(LoadgenConfig { shards: 0, ..LoadgenConfig::quick() }.validate().is_err());
+        assert!(LoadgenConfig { lives: 0, ..LoadgenConfig::quick() }.validate().is_err());
+    }
+
+    #[test]
+    fn engine_mix_is_heterogeneous_and_parseable() {
+        let mix = engine_mix();
+        assert!(mix.len() >= 4);
+        assert!(mix.contains(&EngineKind::FixedSimd), "mix must exercise the simd path");
+        assert!(
+            mix.iter().any(|k| matches!(k, EngineKind::DeltaFixed { theta } if *theta > 0)),
+            "mix must exercise a non-trivial delta threshold"
+        );
+        for k in mix {
+            assert_eq!(EngineKind::parse(&k.to_string()).unwrap(), k, "spec round-trip");
+        }
+    }
+
+    #[test]
+    fn arrival_schedules_are_deterministic_and_positive() {
+        for arrival in [ArrivalKind::Poisson, ArrivalKind::Bursty] {
+            let draw = |seed: u64| -> Vec<u64> {
+                let mut slot_rng = Rng::new(seed);
+                let mut slot = Slot {
+                    session: None, // schedule-only: never pushed
+                    kind: EngineKind::Fixed,
+                    adaptive: false,
+                    remaining: 0,
+                    lives_left: 1,
+                    rng: slot_rng.fork(0),
+                    burst_left: 0,
+                    x_fifo: Vec::new(),
+                    pa: None,
+                    sig_pos: 0,
+                    done: 0,
+                };
+                (0..64).map(|_| next_gap(&mut slot, arrival)).collect()
+            };
+            assert_eq!(draw(7), draw(7), "same seed, same schedule ({arrival})");
+            assert_ne!(draw(7), draw(8), "different seed, different schedule ({arrival})");
+        }
+    }
+
+    #[test]
+    fn quick_sweep_end_to_end() {
+        // the hermetic acceptance path: a tiny sweep must produce a
+        // curve, a saturation point, and non-empty latency histograms
+        let cfg = LoadgenConfig {
+            max_sessions: 2,
+            samples_per_session: 2048,
+            chunk: 512,
+            frame_len: 256,
+            adaptive_every: 2,
+            ..LoadgenConfig::quick()
+        };
+        let report = run(&cfg).unwrap();
+        assert!(!report.levels.is_empty());
+        assert!(report.saturation.1 > 0.0, "throughput must be positive");
+        for l in &report.levels {
+            assert_eq!(l.samples as usize, l.sessions * cfg.samples_per_session * cfg.lives);
+            assert!(!l.latency.is_empty());
+            assert!(l.rejected >= 1, "the admission probe must be counted");
+            assert!(l.latency.p50() <= l.latency.p99(), "quantiles must be ordered");
+        }
+        let dir = std::env::temp_dir().join("dpd_ne_loadgen_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = write_json_to(&dir, &cfg, &report, true).unwrap();
+        let j = Json::parse_file(&path).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "load");
+        assert!(j.get("curve").unwrap().as_arr().unwrap().len() >= 1);
+        assert!(j.get("saturation").unwrap().get("msps").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

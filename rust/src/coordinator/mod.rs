@@ -22,17 +22,31 @@
 //! session's engine at a frame boundary — the runtime's answer to an
 //! amplifier that drifts with temperature, bias and carrier setup.
 //!
+//! Above the single service sits the fleet layer ([`fleet`]): a
+//! [`Fleet`] shards sessions across N independent services with
+//! pluggable placement ([`ShardPolicy`]), bounded admission
+//! ([`AdmissionError`] rejections instead of unbounded queueing),
+//! graceful drain, and per-shard + merged latency histograms — the
+//! deployment shape the `loadgen` harness ([`loadgen`]) drives to
+//! find the saturation knee.
+//!
 //! [`Coordinator`] remains as the one-shot compatibility wrapper
 //! (open a session, push everything, finish) for batch callers.
 
 pub mod adapt;
+pub mod fleet;
 pub mod framer;
+pub mod loadgen;
 pub mod pipeline;
 pub mod service;
 pub mod session;
 pub mod stats;
 
 pub use adapt::{AdaptStats, SessionAdaptConfig};
+pub use fleet::{
+    AdmissionConfig, AdmissionError, Fleet, FleetConfig, FleetSession, FleetStats,
+    ShardPolicy, ShardStats,
+};
 pub use framer::Framer;
 pub use pipeline::{Coordinator, CoordinatorConfig, EngineKind, StreamOutput};
 pub use service::{DpdService, ServiceConfig};

@@ -654,14 +654,20 @@ impl DpdService {
     /// command handle is gone, so this blocks while sessions live.
     /// (Plain `drop` never blocks: workers then wind down on their
     /// own when the last handle disappears.)
+    ///
+    /// Join order matters: the adapt worker holds `worker_cmd` clones
+    /// for every adaptive session it ever swapped weights into, so it
+    /// must drain and exit *first* — otherwise an engine worker would
+    /// never see its command channel close and the join below it would
+    /// deadlock. Engine workers are then joined in pool order.
     pub fn shutdown(self) -> Result<()> {
+        drop(self.adapt_tx);
+        self.adapt_handle.join().map_err(|_| anyhow!("the adapt worker panicked"))?;
         for w in self.workers {
             let Worker { cmd, handle, .. } = w;
             drop(cmd);
             handle.join().map_err(|_| anyhow!("a DPD worker panicked"))?;
         }
-        drop(self.adapt_tx);
-        self.adapt_handle.join().map_err(|_| anyhow!("the adapt worker panicked"))?;
         Ok(())
     }
 }

@@ -36,6 +36,7 @@ use super::service::{Cmd, OutMsg};
 use super::stats::{LatencyAgg, PipelineStats};
 use super::StreamOutput;
 use crate::runtime::EngineKind;
+use crate::util::hist::AtomicHistogram;
 
 /// Per-session configuration. `None` fields inherit the service
 /// defaults; `engine` only matters for [`DpdService::open_session`]
@@ -162,6 +163,9 @@ pub struct StreamSession {
     frames_done: u64,
     busy: Duration,
     lat: LatencyAgg,
+    /// optional shared per-push latency sink (the fleet layer's
+    /// per-shard histogram; plain sessions carry none)
+    lat_sink: Option<Arc<AtomicHistogram>>,
     t_open: Instant,
     load: Arc<AtomicUsize>,
     /// sticky failure (formatted chain) — every later call reports it
@@ -205,6 +209,7 @@ impl StreamSession {
             frames_done: 0,
             busy: Duration::ZERO,
             lat: LatencyAgg::default(),
+            lat_sink: None,
             t_open: Instant::now(),
             load,
             error: None,
@@ -216,6 +221,16 @@ impl StreamSession {
     /// Wire the adapt-worker link (service-side, right after open).
     pub(crate) fn attach_adapt(&mut self, link: AdaptLink) {
         self.adapt = Some(link);
+    }
+
+    /// Stamp every completed frame's service latency (push → absorb)
+    /// into a shared histogram as well as the session's own
+    /// [`LatencyAgg`]. The fleet layer attaches its per-shard
+    /// [`AtomicHistogram`] here right after open, which is how
+    /// per-shard and merged p50/p90/p99 exist without the session
+    /// layer knowing about shards.
+    pub(crate) fn attach_latency_sink(&mut self, sink: Arc<AtomicHistogram>) {
+        self.lat_sink = Some(sink);
     }
 
     /// The worker command channel (the adapt worker's swap target).
@@ -464,7 +479,11 @@ impl StreamSession {
                 self.frames_done += 1;
                 self.in_flight = self.in_flight.saturating_sub(1);
                 self.busy += busy;
-                self.lat.record(t0.elapsed());
+                let lat = t0.elapsed();
+                self.lat.record(lat);
+                if let Some(sink) = &self.lat_sink {
+                    sink.record(lat);
+                }
                 self.samples_out += frame.valid as u64;
                 self.ready.extend_from_slice(&frame.data[..frame.valid]);
                 Ok(())

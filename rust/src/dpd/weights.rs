@@ -90,6 +90,32 @@ impl GruWeights {
         })
     }
 
+    /// Amplitude-realistic synthetic float weights at the paper's
+    /// dimensions (H=10, F=4, |w| < 0.15) — the float counterpart of
+    /// [`QGruWeights::synthetic`], used wherever an artifact-less run
+    /// needs a float twin (adaptive sessions in the fleet/loadgen
+    /// paths, native-engine test fixtures). One definition so the
+    /// hermetic constructions cannot drift apart.
+    pub fn synthetic(seed: u64) -> GruWeights {
+        let mut rng = crate::util::Rng::new(seed);
+        let hidden = 10;
+        let features = 4;
+        let mut gen = |n: usize| -> Vec<f64> { (0..n).map(|_| rng.range(-0.15, 0.15)).collect() };
+        GruWeights {
+            hidden,
+            features,
+            w_ih: gen(3 * hidden * features),
+            b_ih: gen(3 * hidden),
+            w_hh: gen(3 * hidden * hidden),
+            b_hh: gen(3 * hidden),
+            w_fc: gen(2 * hidden),
+            b_fc: gen(2),
+            meta_bits: None,
+            meta_act: None,
+            meta_val_nmse_db: None,
+        }
+    }
+
     /// Total parameter count (paper: 502).
     pub fn n_params(&self) -> usize {
         self.w_ih.len() + self.b_ih.len() + self.w_hh.len() + self.b_hh.len()

@@ -12,6 +12,14 @@
 //!   fpga-report  Table I / Fig. 4 resource estimates
 //!   sweep        Fig. 3 precision x activation sweep
 //!   info         artifact manifest summary
+//!   loadgen      fleet saturation sweep: churn heterogeneous sessions
+//!                through a sharded Fleet under open-loop arrivals and
+//!                emit BENCH_load.json (sessions x MSps curve, knee,
+//!                latency quantiles); `--quick` is the CI smoke shape
+//!
+//! Flags are checked against a per-command allowlist: an unknown flag
+//! is a usage error naming the offending flag, never a silent no-op
+//! (a typo'd `--refreshinterval` used to run the default silently).
 //!
 //! Common flags: --artifacts <dir>, --engine <spec>, --streams <n>,
 //! --symbols <n>, --seed <n>; `serve` adds --sessions <n>,
@@ -54,12 +62,59 @@ use dpd_ne::report::{f1, f2, f3, Table};
 use dpd_ne::runtime::{EngineFactory, Manifest};
 use dpd_ne::signal::ofdm::{OfdmConfig, OfdmModulator};
 
-fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+/// flags every signal-driven command shares
+const COMMON_FLAGS: &[&str] = &["artifacts", "engine", "streams", "symbols", "seed", "delta-theta"];
+
+/// The per-command flag allowlist; `None` means an unknown command.
+/// `parse_flags` rejects anything outside it, so a typo'd flag is a
+/// usage error instead of a silently ignored default.
+fn allowed_flags(cmd: &str) -> Option<Vec<&'static str>> {
+    let extra: &[&str] = match cmd {
+        "run" | "stream" | "asic-report" | "fpga-report" | "sweep" | "info" => &[],
+        "serve" => &[
+            "sessions",
+            "workers",
+            "rounds",
+            "shadow",
+            "batch",
+            "adapt",
+            "drift-ramp",
+            "refresh-interval",
+        ],
+        "loadgen" => {
+            return Some(vec![
+                "quick",
+                "shards",
+                "workers",
+                "sessions",
+                "samples",
+                "chunk",
+                "frame",
+                "lives",
+                "batch",
+                "adaptive-every",
+                "policy",
+                "arrival",
+                "seed",
+            ])
+        }
+        _ => return None,
+    };
+    Some(COMMON_FLAGS.iter().chain(extra).copied().collect())
+}
+
+fn parse_flags(
+    args: &[String],
+    allowed: &[&'static str],
+) -> Result<(Vec<String>, HashMap<String, String>)> {
     let mut pos = Vec::new();
     let mut flags = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(name) = args[i].strip_prefix("--") {
+            if !allowed.contains(&name) {
+                bail!("unknown flag '--{name}' for this command\n{}", usage());
+            }
             // a following token that is itself a flag means this one is
             // bare (e.g. `serve --adapt --engine fixed`)
             match args.get(i + 1) {
@@ -77,7 +132,7 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
             i += 1;
         }
     }
-    (pos, flags)
+    Ok((pos, flags))
 }
 
 fn parse_engine(name: &str, flags: &HashMap<String, String>) -> Result<EngineKind> {
@@ -116,12 +171,15 @@ fn usage() -> String {
     let syntax: Vec<&'static str> = rows.iter().map(|r| r.syntax).collect();
     let host_simd = rows.iter().any(|r| r.simd == Some(true));
     format!(
-        "usage: dpd-ne <run|serve|stream|asic-report|fpga-report|sweep|info> [flags]\n\
+        "usage: dpd-ne <run|serve|stream|loadgen|asic-report|fpga-report|sweep|info> [flags]\n\
          flags: --artifacts <dir> --engine <{engines}> \
          --streams <n> --symbols <n> --seed <n>\n\
          serve: --sessions <n> --workers <n> --rounds <n> --shadow <engine> --batch <n>\n\
          serve --adapt: closed-loop tracking of a drifting PA \
          (--drift-ramp <samples> --refresh-interval <samples>)\n\
+         loadgen: fleet saturation sweep -> BENCH_load.json; --quick for the CI smoke shape, \
+         --shards/--workers/--sessions/--samples/--chunk/--frame/--lives/--batch/\
+         --adaptive-every <n> --policy <rr|least|sticky> --arrival <poisson|bursty> --seed <n>\n\
          delta: θ in codes rides in the spec (delta:32; 0 = bit-identical to 'fixed'); \
          --delta-theta <codes> is a deprecated alias\n\
          +simd: AVX2 gate kernels, host support {simd}; \
@@ -138,16 +196,20 @@ fn main() -> Result<()> {
         println!("{}", usage());
         return Ok(());
     };
-    let (_pos, flags) = parse_flags(&args[1..]);
+    let Some(allowed) = allowed_flags(&cmd) else {
+        bail!("unknown command '{cmd}'\n{}", usage());
+    };
+    let (_pos, flags) = parse_flags(&args[1..], &allowed)?;
     match cmd.as_str() {
         "run" => cmd_run(&flags),
         "serve" => cmd_serve(&flags),
         "stream" => cmd_stream(&flags),
+        "loadgen" => cmd_loadgen(&flags),
         "asic-report" => cmd_asic_report(&flags),
         "fpga-report" => cmd_fpga_report(),
         "sweep" => cmd_sweep(&flags),
         "info" => cmd_info(&flags),
-        other => bail!("unknown command '{other}'\n{}", usage()),
+        other => unreachable!("allowed_flags admitted unknown command '{other}'"),
     }
 }
 
@@ -432,6 +494,108 @@ fn cmd_serve_adapt(flags: &HashMap<String, String>) -> Result<()> {
     service.shutdown()
 }
 
+/// `loadgen`: the fleet saturation sweep. Hermetic by construction —
+/// every session runs a synthetic-weight engine, so no artifact tree
+/// is needed and the CI smoke (`--quick`, or `BENCH_QUICK=1` like the
+/// micro benches) exercises the exact deployment code path: sharded
+/// [`Fleet`](dpd_ne::coordinator::Fleet), admission caps, churn,
+/// per-push latency histograms, and the `BENCH_load.json` artifact.
+fn cmd_loadgen(flags: &HashMap<String, String>) -> Result<()> {
+    use dpd_ne::coordinator::loadgen::{self, ArrivalKind, LoadgenConfig};
+    use dpd_ne::coordinator::ShardPolicy;
+
+    let quick = flags.contains_key("quick") || dpd_ne::bench::quick_mode();
+    let mut cfg = if quick { LoadgenConfig::quick() } else { LoadgenConfig::full() };
+    if let Some(v) = flags.get("shards") {
+        cfg.shards = v.parse()?;
+    }
+    if let Some(v) = flags.get("workers") {
+        cfg.workers_per_shard = v.parse()?;
+    }
+    if let Some(v) = flags.get("sessions") {
+        cfg.max_sessions = v.parse()?;
+    }
+    if let Some(v) = flags.get("samples") {
+        cfg.samples_per_session = v.parse()?;
+    }
+    if let Some(v) = flags.get("chunk") {
+        cfg.chunk = v.parse()?;
+    }
+    if let Some(v) = flags.get("frame") {
+        cfg.frame_len = v.parse()?;
+    }
+    if let Some(v) = flags.get("lives") {
+        cfg.lives = v.parse()?;
+    }
+    if let Some(v) = flags.get("batch") {
+        cfg.batch = v.parse()?;
+    }
+    if let Some(v) = flags.get("adaptive-every") {
+        cfg.adaptive_every = v.parse()?;
+    }
+    if let Some(v) = flags.get("seed") {
+        cfg.seed = v.parse()?;
+    }
+    if let Some(v) = flags.get("policy") {
+        cfg.policy = match v.as_str() {
+            "rr" | "round-robin" => ShardPolicy::RoundRobin,
+            "least" | "least-loaded" => ShardPolicy::LeastLoaded,
+            "sticky" => ShardPolicy::StickyByClass,
+            other => bail!("unknown --policy '{other}' (rr|least|sticky)"),
+        };
+    }
+    if let Some(v) = flags.get("arrival") {
+        cfg.arrival = match v.as_str() {
+            "poisson" => ArrivalKind::Poisson,
+            "bursty" => ArrivalKind::Bursty,
+            other => bail!("unknown --arrival '{other}' (poisson|bursty)"),
+        };
+    }
+
+    println!(
+        "loadgen{}: sweeping 1..={} sessions on {} shard(s) x {} worker(s), \
+         {} arrivals, {:?} placement, adaptive every {}",
+        if quick { " (quick)" } else { "" },
+        cfg.max_sessions,
+        cfg.shards,
+        cfg.workers_per_shard,
+        cfg.arrival,
+        cfg.policy,
+        cfg.adaptive_every,
+    );
+    let report = loadgen::run(&cfg)?;
+
+    let mut t = Table::new(
+        "Fleet load sweep (open-loop arrivals, churned heterogeneous sessions)",
+        &["sessions", "MSps", "p50 (us)", "p90 (us)", "p99 (us)", "opened", "rejected"],
+    );
+    for l in &report.levels {
+        t.row(&[
+            l.sessions.to_string(),
+            f2(l.msps),
+            f1(l.latency.p50().as_secs_f64() * 1e6),
+            f1(l.latency.p90().as_secs_f64() * 1e6),
+            f1(l.latency.p99().as_secs_f64() * 1e6),
+            l.opened.to_string(),
+            l.rejected.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    match report.knee_sessions {
+        Some(n) => println!(
+            "saturation knee at {n} sessions; peak {:.2} MSps at {} sessions",
+            report.saturation.1, report.saturation.0
+        ),
+        None => println!(
+            "no knee inside the sweep (peak {:.2} MSps at {} sessions) — raise --sessions",
+            report.saturation.1, report.saturation.0
+        ),
+    }
+    let path = loadgen::write_json(&cfg, &report, quick)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
 fn cmd_asic_report(flags: &HashMap<String, String>) -> Result<()> {
     let m = Manifest::discover(artifacts(flags).as_deref())?;
     let w = QGruWeights::load_params_int(&m.weights_main, QSpec::new(m.qspec_bits)?)?;
@@ -527,4 +691,111 @@ fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
     println!("sweep configs: {}", m.sweep.len());
     println!("golden vectors: {}", m.golden.len());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_accepts_known_flags_and_values() {
+        let (pos, flags) =
+            parse_flags(&argv(&["--engine", "delta:32+simd", "--seed", "7", "extra"]), &[
+                "engine", "seed",
+            ])
+            .unwrap();
+        assert_eq!(flags.get("engine").unwrap(), "delta:32+simd");
+        assert_eq!(flags.get("seed").unwrap(), "7");
+        assert_eq!(pos, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn parse_flags_keeps_the_bare_flag_heuristic() {
+        // `--adapt` followed by another flag stays bare
+        let (_, flags) =
+            parse_flags(&argv(&["--adapt", "--engine", "fixed"]), &["adapt", "engine"]).unwrap();
+        assert_eq!(flags.get("adapt").unwrap(), "");
+        assert_eq!(flags.get("engine").unwrap(), "fixed");
+        // trailing bare flag
+        let (_, flags) = parse_flags(&argv(&["--quick"]), &["quick"]).unwrap();
+        assert_eq!(flags.get("quick").unwrap(), "");
+    }
+
+    #[test]
+    fn parse_flags_rejects_unknown_flags_naming_the_offender() {
+        let err = parse_flags(&argv(&["--refreshinterval", "100"]), &["refresh-interval"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--refreshinterval"), "must name the offending flag: {err}");
+        assert!(err.contains("usage:"), "must include the usage text: {err}");
+        // the value of a rejected flag must not leak into positionals
+        let err = parse_flags(&argv(&["--bogus"]), &[]).unwrap_err().to_string();
+        assert!(err.contains("--bogus"));
+    }
+
+    #[test]
+    fn every_dispatched_command_has_an_allowlist() {
+        for cmd in
+            ["run", "serve", "stream", "loadgen", "asic-report", "fpga-report", "sweep", "info"]
+        {
+            assert!(allowed_flags(cmd).is_some(), "no allowlist for {cmd}");
+        }
+        assert!(allowed_flags("bogus").is_none());
+    }
+
+    #[test]
+    fn serve_allowlist_covers_every_flag_cmd_serve_reads() {
+        let allowed = allowed_flags("serve").unwrap();
+        for f in [
+            "engine",
+            "shadow",
+            "sessions",
+            "workers",
+            "rounds",
+            "batch",
+            "adapt",
+            "drift-ramp",
+            "refresh-interval",
+            "symbols",
+            "seed",
+            "artifacts",
+            "delta-theta",
+        ] {
+            assert!(allowed.contains(&f), "serve must allow --{f}");
+        }
+    }
+
+    #[test]
+    fn loadgen_allowlist_covers_every_flag_cmd_loadgen_reads() {
+        let allowed = allowed_flags("loadgen").unwrap();
+        for f in [
+            "quick",
+            "shards",
+            "workers",
+            "sessions",
+            "samples",
+            "chunk",
+            "frame",
+            "lives",
+            "batch",
+            "adaptive-every",
+            "policy",
+            "arrival",
+            "seed",
+        ] {
+            assert!(allowed.contains(&f), "loadgen must allow --{f}");
+        }
+    }
+
+    #[test]
+    fn usage_names_every_command() {
+        let u = usage();
+        for cmd in ["run", "serve", "stream", "loadgen", "asic-report", "fpga-report", "sweep"] {
+            assert!(u.contains(cmd), "usage must mention {cmd}");
+        }
+    }
 }

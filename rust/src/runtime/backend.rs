@@ -681,6 +681,125 @@ impl EngineFactory {
     }
 }
 
+impl EngineFactory {
+    /// The engine-spec registry rendered as a Markdown table — the
+    /// generator behind the README's engine table (embedded between
+    /// `<!-- engine-spec-table:begin/end -->` markers and pinned by a
+    /// drift-guard test, so the docs cannot diverge from what this
+    /// build constructs). Deliberately host- and feature-independent:
+    /// only the registry's syntax column is used (no live SIMD
+    /// detection), and the feature-gated `hlo` row is appended
+    /// statically so default and `--features xla` builds render the
+    /// same table.
+    pub fn spec_table_markdown() -> String {
+        fn describe(kind: EngineKind) -> (&'static str, &'static str) {
+            match kind {
+                EngineKind::NativeF64 => (
+                    "f64 GRU (float reference)",
+                    "tracks the integer engines within the quantization envelope",
+                ),
+                EngineKind::Fixed => (
+                    "bit-exact Q2.10 fixed point",
+                    "the chip's functional model; the conformance baseline",
+                ),
+                EngineKind::DeltaFixed { .. } => (
+                    "delta-sparsity fixed point",
+                    "θ=0 is bit-identical to `fixed`; θ>0 skips MACs with bounded drift",
+                ),
+                EngineKind::FixedSimd => (
+                    "`fixed` behind the AVX2 gate kernels",
+                    "bit-identical to `fixed`; scalar fallback off-AVX2 or under `DPD_SIMD=off`",
+                ),
+                EngineKind::DeltaFixedSimd { .. } => (
+                    "`delta` behind the AVX2 gate kernels",
+                    "same fallback and bit-exactness contract, on the i64 delta accumulators",
+                ),
+                EngineKind::CycleSim => (
+                    "cycle-accurate ASIC simulator",
+                    "bit-identical to `fixed`, plus cycle/energy accounting",
+                ),
+                EngineKind::Interp => (
+                    "interpreted frame engine",
+                    "the bit-exact datapath with the HLO artifact's per-frame h0 reset",
+                ),
+                #[cfg(feature = "xla")]
+                EngineKind::Hlo => unreachable!("hlo row is rendered statically"),
+            }
+        }
+        let mut out = String::from("| spec | engine | notes |\n|---|---|---|\n");
+        for row in EngineFactory::available_kinds() {
+            #[cfg(feature = "xla")]
+            if row.kind == EngineKind::Hlo {
+                continue;
+            }
+            let (what, notes) = describe(row.kind);
+            out.push_str(&format!("| `{}` | {} | {} |\n", row.syntax, what, notes));
+        }
+        out.push_str(
+            "| `hlo` | AOT-lowered HLO via the PJRT CPU client | needs a build with \
+             `--features xla`; `interp` is its hermetic twin |\n",
+        );
+        out
+    }
+}
+
+/// Build a hermetic engine of `kind` from the shared synthetic weight
+/// fixtures ([`QGruWeights::synthetic`] / [`GruWeights::synthetic`],
+/// seeded, no artifact tree) — the construction path of the fleet
+/// tests and the `loadgen` harness. Engines built here obey the same
+/// parity contract as manifest-backed ones: equal `(kind, seed)` give
+/// bit-identical engines wherever they run. `frame_len` only affects
+/// the frame-based `Interp` kind (`None` = [`DEFAULT_FRAME_LEN`]);
+/// `hlo` has no synthetic form (it needs a compiled artifact) and is
+/// rejected.
+pub fn build_synthetic(
+    kind: EngineKind,
+    seed: u64,
+    simd: SimdPolicy,
+    frame_len: Option<usize>,
+) -> Result<Box<dyn DpdEngine>> {
+    let qw = || QGruWeights::synthetic(seed, QSpec::Q12);
+    Ok(match kind {
+        EngineKind::NativeF64 => {
+            Box::new(StreamingEngine::new(Box::new(GruDpd::new(GruWeights::synthetic(seed)))))
+        }
+        EngineKind::Fixed => {
+            Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw(), ActKind::Hard))))
+        }
+        EngineKind::DeltaFixed { theta } => Box::new(StreamingEngine::new(Box::new(
+            DeltaQGruDpd::new(qw(), ActKind::Hard, theta),
+        ))),
+        EngineKind::FixedSimd => match resolve_simd(simd) {
+            Some(k) => Box::new(StreamingEngine::new(Box::new(QGruDpd::with_kernel(
+                qw(),
+                ActKind::Hard,
+                k,
+            )))),
+            None => Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw(), ActKind::Hard)))),
+        },
+        EngineKind::DeltaFixedSimd { theta } => match resolve_simd(simd) {
+            Some(k) => Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::with_kernel(
+                qw(),
+                ActKind::Hard,
+                theta,
+                k,
+            )))),
+            None => Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
+                qw(),
+                ActKind::Hard,
+                theta,
+            )))),
+        },
+        EngineKind::CycleSim => Box::new(StreamingEngine::new(Box::new(CycleSimDpd::new(&qw())))),
+        EngineKind::Interp => Box::new(InterpGruEngine::new(
+            QGruDpd::new(qw(), ActKind::Hard),
+            frame_len.unwrap_or(DEFAULT_FRAME_LEN),
+        )),
+        #[cfg(feature = "xla")]
+        EngineKind::Hlo => bail!("hlo engines need a compiled artifact tree (no synthetic form)"),
+    })
+}
+
 /// The kinds available in this build (used by reports and the CLI).
 pub fn available_kinds() -> Vec<EngineKind> {
     let mut kinds = vec![
@@ -1053,6 +1172,27 @@ mod tests {
             let err = EngineKind::parse("hlo").unwrap_err();
             assert!(format!("{err:#}").contains("xla"));
         }
+    }
+
+    #[test]
+    fn readme_engine_spec_table_matches_the_generator() {
+        // the README's engine table is pasted generator output between
+        // HTML markers; this pins it so the docs cannot drift from the
+        // registry (add an engine → this fails until the README block
+        // is regenerated from `EngineFactory::spec_table_markdown()`)
+        let readme =
+            std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/../README.md"))
+                .expect("README.md at the repo root");
+        let begin = "<!-- engine-spec-table:begin -->";
+        let end = "<!-- engine-spec-table:end -->";
+        let start = readme.find(begin).expect("README lost the begin marker") + begin.len();
+        let stop = readme.find(end).expect("README lost the end marker");
+        assert_eq!(
+            readme[start..stop].trim(),
+            EngineFactory::spec_table_markdown().trim(),
+            "README engine-spec table drifted — regenerate the block between the \
+             engine-spec-table markers from EngineFactory::spec_table_markdown()"
+        );
     }
 
     #[test]

@@ -14,6 +14,8 @@ pub mod backend;
 pub mod engine;
 
 pub use artifacts::Manifest;
-pub use backend::{DpdEngine, DpdLane, DpdState, EngineFactory, EngineKind};
+pub use backend::{
+    build_synthetic, DpdEngine, DpdLane, DpdState, EngineFactory, EngineKind,
+};
 #[cfg(feature = "xla")]
 pub use engine::HloGruEngine;

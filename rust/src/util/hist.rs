@@ -1,0 +1,444 @@
+//! Dependency-free fixed-bucket log-scale latency histogram — the
+//! fleet's observability substrate.
+//!
+//! [`LatencyAgg`](crate::coordinator::stats::LatencyAgg) tracks
+//! mean/max per session; a fleet needs *distribution* shape (p50 /
+//! p90 / p99 across thousands of pushes) and needs to aggregate it
+//! across shards without storing every sample. This module is the
+//! classic HDR-style log-linear scheme, sized once at compile time so
+//! every histogram in the process shares one bucket layout and
+//! [`LatencyHistogram::merge`] is always well-defined:
+//!
+//! * values are durations in **nanoseconds**;
+//! * the first [`SUB`] buckets are unit-width (0..8 ns, exact);
+//! * above that, each power-of-two octave splits into [`SUB`] linear
+//!   sub-buckets, so the bucket width is always ≤ 1/8 of the value —
+//!   a guaranteed ≤ 12.5 % relative quantile error;
+//! * the layout covers up to ~2^36 ns (≈ 69 s); anything beyond
+//!   saturates into the last bucket (no per-push service latency is
+//!   anywhere near that — the exact maximum is still tracked).
+//!
+//! Two flavors share the layout: [`LatencyHistogram`] (plain, owned,
+//! mergeable — what snapshots and reports use) and
+//! [`AtomicHistogram`] (lock-free `record(&self)` — what live
+//! sessions write into from many threads, see
+//! `coordinator::fleet`). Quantiles report the **upper edge** of the
+//! bucket holding the requested order statistic: conservative, and
+//! exact to the bucket resolution.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// log2 of the sub-bucket count per octave.
+const SUB_BITS: u32 = 3;
+/// Linear sub-buckets per power-of-two octave (and the width of the
+/// exact unit-bucket prefix).
+const SUB: usize = 1 << SUB_BITS;
+/// Highest octave covered with full resolution (2^36 ns ≈ 69 s).
+const MAX_OCTAVE: u32 = 35;
+/// Total bucket count: the unit prefix + SUB per covered octave.
+pub const N_BUCKETS: usize = SUB + ((MAX_OCTAVE - SUB_BITS + 1) as usize) * SUB;
+
+/// Bucket index for a value in nanoseconds. Monotone in `ns`; values
+/// past the covered range clamp into the last bucket.
+#[inline]
+pub fn bucket_index(ns: u64) -> usize {
+    if ns < SUB as u64 {
+        return ns as usize;
+    }
+    let o = 63 - ns.leading_zeros();
+    let sub = ((ns >> (o - SUB_BITS)) as usize) & (SUB - 1);
+    let idx = SUB + ((o - SUB_BITS) as usize) * SUB + sub;
+    idx.min(N_BUCKETS - 1)
+}
+
+/// Inclusive lower edge of a bucket, in nanoseconds.
+#[inline]
+pub fn bucket_lower(idx: usize) -> u64 {
+    debug_assert!(idx < N_BUCKETS);
+    if idx < SUB {
+        return idx as u64;
+    }
+    let k = idx - SUB;
+    let o = SUB_BITS + (k / SUB) as u32;
+    let sub = (k % SUB) as u64;
+    (1u64 << o) + (sub << (o - SUB_BITS))
+}
+
+/// Exclusive upper edge of a bucket, in nanoseconds. (The last bucket
+/// additionally absorbs everything past the covered range; its
+/// nominal edge is still returned, which is what keeps quantiles
+/// finite.)
+#[inline]
+pub fn bucket_upper(idx: usize) -> u64 {
+    debug_assert!(idx < N_BUCKETS);
+    if idx < SUB {
+        return idx as u64 + 1;
+    }
+    let k = idx - SUB;
+    let o = SUB_BITS + (k / SUB) as u32;
+    bucket_lower(idx) + (1u64 << (o - SUB_BITS))
+}
+
+#[inline]
+fn duration_ns(d: Duration) -> u64 {
+    d.as_nanos().min(u64::MAX as u128) as u64
+}
+
+/// A plain, owned, mergeable latency histogram (module docs for the
+/// bucket scheme). `record` is O(1); `quantile` walks the fixed
+/// bucket array.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { counts: vec![0; N_BUCKETS], total: 0, sum_ns: 0, max_ns: 0 }
+    }
+
+    /// Record one latency sample.
+    pub fn record(&mut self, d: Duration) {
+        self.record_ns(duration_ns(d));
+    }
+
+    /// Record one sample given directly in nanoseconds.
+    pub fn record_ns(&mut self, ns: u64) {
+        self.counts[bucket_index(ns)] += 1;
+        self.total += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Exact mean of the recorded samples (not bucketized).
+    pub fn mean(&self) -> Duration {
+        if self.total == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns / self.total)
+    }
+
+    /// Exact maximum recorded sample.
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns)
+    }
+
+    /// Fold another histogram in. Always well-defined: every histogram
+    /// in the process shares the one compile-time bucket layout.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// The `q`-quantile (q in [0, 1], clamped): the upper edge of the
+    /// bucket holding the ⌈q·n⌉-th smallest sample — conservative, and
+    /// within the bucket scheme's ≤ 12.5 % relative error of the true
+    /// order statistic. Returns zero on an empty histogram.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.total == 0 {
+            return Duration::ZERO;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Duration::from_nanos(bucket_upper(idx));
+            }
+        }
+        // unreachable while total == sum(counts); stay safe regardless
+        self.max()
+    }
+
+    pub fn p50(&self) -> Duration {
+        self.quantile(0.50)
+    }
+
+    pub fn p90(&self) -> Duration {
+        self.quantile(0.90)
+    }
+
+    pub fn p99(&self) -> Duration {
+        self.quantile(0.99)
+    }
+}
+
+/// The concurrent flavor: lock-free `record(&self)` from any number
+/// of threads (per-bucket atomic counters), snapshotted into a plain
+/// [`LatencyHistogram`] for merging and quantile queries. Counters
+/// are monotone, so a snapshot taken during concurrent recording is a
+/// valid histogram of a slightly earlier instant (`total` is derived
+/// from the bucket counts, never a separately-raced counter).
+pub struct AtomicHistogram {
+    counts: Vec<AtomicU64>,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram::new()
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> AtomicHistogram {
+        AtomicHistogram {
+            counts: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one latency sample (lock-free, `&self`).
+    pub fn record(&self, d: Duration) {
+        self.record_ns(duration_ns(d));
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.counts[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Owned snapshot for merging/quantiles.
+    pub fn snapshot(&self) -> LatencyHistogram {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total = counts.iter().sum();
+        LatencyHistogram {
+            counts,
+            total,
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::Rng;
+
+    /// Draw a latency-like value spanning ns to tens of seconds —
+    /// exercising the unit prefix, every octave band, and the clamp.
+    fn draw_ns(rng: &mut Rng) -> u64 {
+        let mag = rng.below(38); // up to 2^37: past the covered range
+        rng.below((1u64 << mag).max(1) + 1)
+    }
+
+    fn hist_of(vals: &[u64]) -> LatencyHistogram {
+        let mut h = LatencyHistogram::new();
+        for &v in vals {
+            h.record_ns(v);
+        }
+        h
+    }
+
+    #[test]
+    fn unit_prefix_is_exact_and_layout_is_continuous() {
+        for v in 0..SUB as u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_lower(v as usize), v);
+            assert_eq!(bucket_upper(v as usize), v + 1);
+        }
+        // every bucket's upper edge is the next bucket's lower edge
+        for idx in 0..N_BUCKETS - 1 {
+            assert_eq!(
+                bucket_upper(idx),
+                bucket_lower(idx + 1),
+                "gap/overlap between buckets {idx} and {}",
+                idx + 1
+            );
+        }
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        // log-linear contract: width <= lower / 8 for every bucket
+        // past the unit prefix
+        for idx in SUB..N_BUCKETS {
+            let lo = bucket_lower(idx);
+            let width = bucket_upper(idx) - lo;
+            assert!(width * 8 <= lo, "bucket {idx}: width {width} > lower {lo} / 8");
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_behavior() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.max(), Duration::ZERO);
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::ZERO);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.p50(), Duration::from_nanos(1)); // upper edge of bucket 0
+    }
+
+    #[test]
+    fn huge_values_saturate_into_the_last_bucket() {
+        let mut h = LatencyHistogram::new();
+        h.record_ns(u64::MAX);
+        h.record(Duration::from_secs(10_000));
+        assert_eq!(h.count(), 2);
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+        assert_eq!(h.max(), Duration::from_nanos(u64::MAX));
+        // the quantile stays finite (the clamp bucket's nominal edge)
+        assert_eq!(h.p99(), Duration::from_nanos(bucket_upper(N_BUCKETS - 1)));
+    }
+
+    #[test]
+    fn atomic_snapshot_matches_plain_recording() {
+        let mut rng = Rng::new(17);
+        let vals: Vec<u64> = (0..500).map(|_| draw_ns(&mut rng)).collect();
+        let plain = hist_of(&vals);
+        let atomic = AtomicHistogram::new();
+        std::thread::scope(|s| {
+            for chunk in vals.chunks(100) {
+                let a = &atomic;
+                s.spawn(move || {
+                    for &v in chunk {
+                        a.record_ns(v);
+                    }
+                });
+            }
+        });
+        assert_eq!(atomic.snapshot(), plain);
+    }
+
+    #[test]
+    fn prop_bucket_edges_contain_their_values() {
+        check("hist bucket containment", 200, |rng| {
+            let v = draw_ns(rng);
+            let idx = bucket_index(v);
+            let (lo, hi) = (bucket_lower(idx), bucket_upper(idx));
+            if idx < N_BUCKETS - 1 && !(lo <= v && v < hi) {
+                return Err(format!("v={v} outside its bucket {idx} [{lo},{hi})"));
+            }
+            // the clamp bucket also absorbs everything past its
+            // nominal range, but never anything below it
+            if idx == N_BUCKETS - 1 && v < lo {
+                return Err(format!("v={v} clamped into bucket {idx} but below lower {lo}"));
+            }
+            // index is monotone
+            if bucket_index(v.saturating_add(1)) < idx {
+                return Err(format!("bucket_index not monotone at v={v}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_merge_is_commutative_and_associative() {
+        check("hist merge algebra", 60, |rng| {
+            let n = 1 + rng.below(120) as usize;
+            let mut sets: Vec<Vec<u64>> = Vec::new();
+            for _ in 0..3 {
+                sets.push((0..n).map(|_| draw_ns(rng)).collect());
+            }
+            let (a, b, c) = (hist_of(&sets[0]), hist_of(&sets[1]), hist_of(&sets[2]));
+            // commutative: a+b == b+a
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            if ab != ba {
+                return Err("merge not commutative".into());
+            }
+            // associative: (a+b)+c == a+(b+c)
+            let mut ab_c = ab.clone();
+            ab_c.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            if ab_c != a_bc {
+                return Err("merge not associative".into());
+            }
+            // identity: a + empty == a
+            let mut a_id = a.clone();
+            a_id.merge(&LatencyHistogram::new());
+            if a_id != a {
+                return Err("empty histogram is not the merge identity".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_quantile_is_the_bucket_edge_of_the_order_statistic() {
+        check("hist quantile order statistic", 60, |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let mut vals: Vec<u64> = (0..n).map(|_| draw_ns(rng)).collect();
+            let h = hist_of(&vals);
+            vals.sort_unstable();
+            let mut prev = Duration::ZERO;
+            for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let v = vals[rank - 1];
+                let got = h.quantile(q);
+                // exactly the upper edge of the bucket holding the
+                // rank-th smallest sample...
+                let want = Duration::from_nanos(bucket_upper(bucket_index(v)));
+                if got != want {
+                    return Err(format!(
+                        "q={q}: quantile {got:?} != bucket edge {want:?} of sample {v}"
+                    ));
+                }
+                // ...which bounds the true order statistic from above
+                if (got.as_nanos() as u64) <= v && bucket_index(v) < N_BUCKETS - 1 {
+                    return Err(format!("q={q}: quantile {got:?} not above sample {v}"));
+                }
+                // and quantiles are monotone in q
+                if got < prev {
+                    return Err(format!("quantile not monotone at q={q}"));
+                }
+                prev = got;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_merge_equals_concatenation() {
+        check("hist merge = concat", 60, |rng| {
+            let n = 1 + rng.below(100) as usize;
+            let m = 1 + rng.below(100) as usize;
+            let a_vals: Vec<u64> = (0..n).map(|_| draw_ns(rng)).collect();
+            let b_vals: Vec<u64> = (0..m).map(|_| draw_ns(rng)).collect();
+            let mut merged = hist_of(&a_vals);
+            merged.merge(&hist_of(&b_vals));
+            let mut all = a_vals;
+            all.extend(b_vals);
+            if merged != hist_of(&all) {
+                return Err("merged histogram differs from recording the union".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,8 +1,10 @@
 //! Small shared utilities: deterministic RNG, JSON, complex numbers,
-//! property-test helpers, and the cross-engine conformance harness.
+//! latency histograms, property-test helpers, and the cross-engine
+//! conformance harness.
 
 pub mod conformance;
 pub mod cplx;
+pub mod hist;
 pub mod json;
 pub mod proptest;
 pub mod rng;

@@ -1,0 +1,307 @@
+//! Fleet integration tests — the acceptance gates of the fleet layer.
+//!
+//! Three contracts, all hermetic (synthetic weights, no artifact
+//! tree) and all watchdog-guarded so a placement/admission/drain
+//! deadlock fails the test instead of hanging CI:
+//!
+//! 1. **Parity.** A session opened through a [`Fleet`] is bit-identical
+//!    to a direct single-service session for every integer engine spec
+//!    — placement moves *where* a session runs, never *what* it
+//!    computes.
+//! 2. **Admission.** The (cap+1)-th open is rejected with a typed
+//!    [`AdmissionError`] while the already-admitted sessions keep
+//!    streaming, unperturbed, to bit-exact completion.
+//! 3. **Graceful drain.** Under multi-threaded open/push/finish churn,
+//!    `drain` stops admission, waits for every in-flight frame to
+//!    flush, and joins every shard without losing a sample.
+//!
+//! CI runs this file as its own watchdog-guarded step (the `fleet`
+//! job), debug and release.
+
+use std::time::Duration;
+
+use anyhow::Result;
+use dpd_ne::coordinator::{
+    AdmissionConfig, AdmissionError, DpdService, Fleet, FleetConfig, FleetSession,
+    ServiceConfig, SessionConfig, ShardPolicy,
+};
+use dpd_ne::runtime::{build_synthetic, DpdEngine as _, EngineKind};
+use dpd_ne::util::Rng;
+
+const WATCHDOG: Duration = Duration::from_secs(120);
+
+fn signal(n: usize, seed: u64) -> Vec<[f64; 2]> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect()
+}
+
+/// run `f` on its own thread and fail loudly if it doesn't complete —
+/// the session_stress pattern: CI sees a test failure, not a hung job
+fn with_watchdog(name: &'static str, f: impl FnOnce() -> Result<()> + Send + 'static) {
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    let runner = std::thread::spawn(move || {
+        let r = f();
+        done_tx.send(()).ok();
+        r
+    });
+    match done_rx.recv_timeout(WATCHDOG) {
+        Ok(()) => runner.join().expect("fleet test runner panicked").unwrap(),
+        Err(_) => panic!("{name} did not complete within {WATCHDOG:?} — fleet deadlock?"),
+    }
+}
+
+/// every integer engine spec the fleet must serve bit-identically
+/// (hlo is xla-gated; native is float — covered by the loadgen mix)
+const INTEGER_SPECS: &[&str] =
+    &["fixed", "fixed+simd", "delta:0", "delta:32", "delta:32+simd", "cyclesim", "interp"];
+
+#[test]
+fn fleet_sessions_bit_identical_to_direct_service_for_every_integer_spec() {
+    with_watchdog("fleet parity", || {
+        const FRAME: usize = 64;
+        let input = signal(1200, 77);
+        let fleet = Fleet::start(FleetConfig {
+            shards: 3,
+            service: ServiceConfig { workers: 2, frame_len: FRAME, ..Default::default() },
+            policy: ShardPolicy::LeastLoaded,
+            ..Default::default()
+        })?;
+        let direct = DpdService::start(ServiceConfig {
+            workers: 1,
+            frame_len: FRAME,
+            ..Default::default()
+        })?;
+        for spec in INTEGER_SPECS {
+            let kind = EngineKind::parse(spec)?;
+            let scfg = SessionConfig { engine: kind, ..Default::default() };
+            let mut fs = fleet.open_session_with(scfg, move || {
+                build_synthetic(kind, 42, Default::default(), Some(FRAME))
+            })?;
+            let mut ds = direct.open_session_with(scfg, move || {
+                build_synthetic(kind, 42, Default::default(), Some(FRAME))
+            })?;
+            // different chunkings on purpose: parity must not depend on
+            // push boundaries, only on the sample stream
+            let mut got_fleet = Vec::new();
+            for chunk in input.chunks(123) {
+                fs.push(chunk)?;
+                got_fleet.extend(fs.drain()?);
+            }
+            got_fleet.extend(fs.finish()?.iq);
+            let mut got_direct = Vec::new();
+            for chunk in input.chunks(500) {
+                ds.push(chunk)?;
+                got_direct.extend(ds.drain()?);
+            }
+            got_direct.extend(ds.finish()?.iq);
+            anyhow::ensure!(
+                got_fleet.len() == input.len(),
+                "spec {spec}: fleet session lost samples ({}/{})",
+                got_fleet.len(),
+                input.len()
+            );
+            anyhow::ensure!(
+                got_fleet == got_direct,
+                "spec {spec}: fleet session diverged from the direct service session"
+            );
+        }
+        direct.shutdown()?;
+        let stats = fleet.drain()?;
+        anyhow::ensure!(stats.sessions_open == 0 && stats.sessions_rejected == 0);
+        anyhow::ensure!(stats.sessions_drained == INTEGER_SPECS.len() as u64);
+        Ok(())
+    });
+}
+
+#[test]
+fn over_cap_open_rejects_typed_while_admitted_sessions_keep_streaming() {
+    with_watchdog("fleet admission", || {
+        const CAP: usize = 4;
+        let fleet = Fleet::start(FleetConfig {
+            shards: 2,
+            service: ServiceConfig { workers: 1, frame_len: 32, ..Default::default() },
+            policy: ShardPolicy::RoundRobin,
+            admission: AdmissionConfig { max_sessions: CAP, ..Default::default() },
+        })?;
+        let inputs: Vec<Vec<[f64; 2]>> = (0..CAP).map(|k| signal(700, 50 + k as u64)).collect();
+        let mut sessions: Vec<FleetSession> = (0..CAP)
+            .map(|k| {
+                let seed = 50 + k as u64;
+                fleet.open_session_with(SessionConfig::default(), move || {
+                    build_synthetic(EngineKind::Fixed, seed, Default::default(), Some(32))
+                })
+            })
+            .collect::<Result<_>>()?;
+        // half the stream is in flight when the rejection happens
+        for (k, s) in sessions.iter_mut().enumerate() {
+            s.push(&inputs[k][..350])?;
+        }
+        let err = fleet
+            .open_session_with(SessionConfig::default(), move || {
+                build_synthetic(EngineKind::Fixed, 99, Default::default(), Some(32))
+            })
+            .expect_err("the (cap+1)-th session must be rejected");
+        anyhow::ensure!(
+            err.downcast_ref::<AdmissionError>()
+                == Some(&AdmissionError::FleetFull { limit: CAP }),
+            "rejection must be the typed FleetFull error, got: {err:#}"
+        );
+        // the rejection must not have perturbed the admitted sessions:
+        // they stream to completion, bit-identical to the direct engine
+        for (k, s) in sessions.iter_mut().enumerate() {
+            s.push(&inputs[k][350..])?;
+        }
+        for (k, s) in sessions.into_iter().enumerate() {
+            let seed = 50 + k as u64;
+            let mut oracle = build_synthetic(EngineKind::Fixed, seed, Default::default(), None)?;
+            let mut want = inputs[k].clone();
+            for frame in want.chunks_mut(32) {
+                oracle.process_frame(frame)?;
+            }
+            let out = s.finish()?;
+            anyhow::ensure!(
+                out.iq == want,
+                "session {k} corrupted by the over-cap rejection"
+            );
+        }
+        let stats = fleet.drain()?;
+        anyhow::ensure!(stats.sessions_rejected == 1, "exactly one typed rejection");
+        anyhow::ensure!(stats.sessions_drained == CAP as u64);
+        Ok(())
+    });
+}
+
+#[test]
+fn per_shard_cap_spills_then_rejects_shard_full() {
+    with_watchdog("fleet per-shard admission", || {
+        let fleet = Fleet::start(FleetConfig {
+            shards: 2,
+            service: ServiceConfig { workers: 1, frame_len: 32, ..Default::default() },
+            policy: ShardPolicy::StickyByClass,
+            admission: AdmissionConfig { max_sessions_per_shard: 1, ..Default::default() },
+        })?;
+        // same spec twice: the first takes the sticky home, the second
+        // spills to the other shard rather than rejecting
+        let open = |seed: u64| {
+            fleet.open_session_with(SessionConfig::default(), move || {
+                build_synthetic(EngineKind::Fixed, seed, Default::default(), Some(32))
+            })
+        };
+        let a = open(1)?;
+        let b = open(2)?;
+        anyhow::ensure!(a.shard() != b.shard(), "full home must spill, not stack");
+        let err = open(3).expect_err("both shards at per-shard cap");
+        anyhow::ensure!(
+            matches!(
+                err.downcast_ref::<AdmissionError>(),
+                Some(&AdmissionError::ShardFull { limit: 1, .. })
+            ),
+            "expected the typed ShardFull error, got: {err:#}"
+        );
+        drop((a, b));
+        fleet.drain()?;
+        Ok(())
+    });
+}
+
+#[test]
+fn graceful_drain_under_churn_flushes_every_in_flight_frame() {
+    with_watchdog("fleet drain under churn", || {
+        let fleet = Fleet::start(FleetConfig {
+            shards: 2,
+            service: ServiceConfig {
+                workers: 1,
+                queue_depth: 1,
+                frame_len: 32,
+                ..Default::default()
+            },
+            policy: ShardPolicy::LeastLoaded,
+            ..Default::default()
+        })?;
+
+        // phase 1 — churn: 3 threads x 8 short-lived sessions racing
+        // opens, pushes and closes through the placement lock
+        std::thread::scope(|scope| -> Result<()> {
+            let fr = &fleet;
+            let churners: Vec<_> = (0..3u64)
+                .map(|t| {
+                    scope.spawn(move || -> Result<()> {
+                        for k in 0..8u64 {
+                            let seed = t * 100 + k;
+                            let mut sess = fr.open_session_with(
+                                SessionConfig::default(),
+                                move || {
+                                    build_synthetic(
+                                        EngineKind::Fixed,
+                                        seed,
+                                        Default::default(),
+                                        Some(32),
+                                    )
+                                },
+                            )?;
+                            let sig = signal(400 + 37 * k as usize, seed);
+                            for chunk in sig.chunks(97) {
+                                sess.push(chunk)?;
+                            }
+                            let out = sess.finish()?;
+                            anyhow::ensure!(
+                                out.iq.len() == sig.len(),
+                                "churn session lost samples: {}/{}",
+                                out.iq.len(),
+                                sig.len()
+                            );
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            for c in churners {
+                c.join().expect("churn thread panicked")?;
+            }
+            Ok(())
+        })?;
+
+        // phase 2 — drain concurrent with live sessions: open sessions
+        // with frames still in flight, start drain on another thread,
+        // then flush + finish while the drain is already waiting
+        let held: Vec<(FleetSession, Vec<[f64; 2]>)> = (0..4u64)
+            .map(|k| -> Result<_> {
+                let mut sess = fleet.open_session_with(SessionConfig::default(), move || {
+                    build_synthetic(EngineKind::Fixed, 500 + k, Default::default(), Some(32))
+                })?;
+                let sig = signal(600, 700 + k);
+                sess.push(&sig[..300])?;
+                Ok((sess, sig))
+            })
+            .collect::<Result<_>>()?;
+        let drainer = std::thread::spawn(move || fleet.drain());
+        // give drain a moment to raise the draining flag and start
+        // polling, so the finishes below genuinely race it
+        std::thread::sleep(Duration::from_millis(20));
+        for (mut sess, sig) in held {
+            sess.push(&sig[300..])?;
+            let out = sess.finish()?;
+            anyhow::ensure!(
+                out.iq.len() == sig.len(),
+                "drain lost in-flight frames: {}/{}",
+                out.iq.len(),
+                sig.len()
+            );
+        }
+        let stats = drainer.join().expect("drainer thread panicked")?;
+        anyhow::ensure!(stats.draining && stats.sessions_open == 0);
+        anyhow::ensure!(
+            stats.sessions_drained == stats.sessions_opened,
+            "every admitted session must be accounted drained: {}/{}",
+            stats.sessions_drained,
+            stats.sessions_opened
+        );
+        anyhow::ensure!(stats.sessions_opened == 3 * 8 + 4);
+        anyhow::ensure!(
+            stats.shards.iter().all(|s| s.queue_depth == 0),
+            "drained fleet must hold no in-flight frames"
+        );
+        anyhow::ensure!(!stats.latency.is_empty(), "churn must have stamped latencies");
+        Ok(())
+    });
+}

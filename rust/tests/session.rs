@@ -12,9 +12,9 @@
 //! state persists across `push` calls for the life of the session.
 
 use anyhow::Result;
-use dpd_ne::coordinator::{DpdService, ServiceConfig, SessionConfig};
+use dpd_ne::coordinator::{DpdService, ServiceConfig, SessionAdaptConfig, SessionConfig};
 use dpd_ne::dpd::qgru::{ActKind, QGruDpd};
-use dpd_ne::dpd::weights::QGruWeights;
+use dpd_ne::dpd::weights::{GruWeights, QGruWeights};
 use dpd_ne::dpd::Dpd;
 use dpd_ne::fixed::QSpec;
 use dpd_ne::runtime::backend::{CycleSimDpd, StreamingEngine};
@@ -474,6 +474,100 @@ fn stats_snapshot_tracks_the_stream() {
     assert_eq!(out.stats.frames, 10);
     assert!(out.stats.lat_max >= out.stats.lat_mean);
     service.shutdown().unwrap();
+}
+
+/// run `f` on its own thread with a deadline — shutdown-ordering bugs
+/// present as hangs, and CI must see a failure, not a stuck job
+fn with_watchdog(name: &'static str, f: impl FnOnce() -> Result<()> + Send + 'static) {
+    const WATCHDOG: std::time::Duration = std::time::Duration::from_secs(120);
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    let runner = std::thread::spawn(move || {
+        let r = f();
+        done_tx.send(()).ok();
+        r
+    });
+    match done_rx.recv_timeout(WATCHDOG) {
+        Ok(()) => runner.join().expect("watchdog runner panicked").unwrap(),
+        Err(_) => panic!("{name} did not complete within {WATCHDOG:?} — shutdown deadlock?"),
+    }
+}
+
+#[test]
+fn explicit_shutdown_after_adaptive_sessions_never_deadlocks() {
+    // Regression for the shutdown ordering: the adapt worker holds
+    // worker-command senders (hot-swap targets), so joining the engine
+    // workers before it leaves their command channels open and the
+    // joins never return. `DpdService::shutdown` must join the adapt
+    // worker first — this hangs (watchdog) if the order regresses.
+    with_watchdog("adaptive shutdown", || {
+        let service = DpdService::start(ServiceConfig {
+            workers: 1,
+            frame_len: 32,
+            ..Default::default()
+        })?;
+        let acfg = SessionAdaptConfig { refresh_interval: 1 << 20, ..Default::default() };
+        let mut sess = service.open_adaptive_session(
+            SessionConfig { adapt: Some(acfg), ..Default::default() },
+            GruWeights::synthetic(3),
+        )?;
+        let x = signal(256, 21);
+        sess.push(&x)?;
+        let u = sess.drain()?;
+        if !u.is_empty() {
+            // self-feedback is a fine stand-in for a PA here: the test
+            // is about thread lifecycle, not convergence
+            sess.adapt_feedback(&x[..u.len()], &u, &u)?;
+        }
+        sess.adapt_barrier()?;
+        sess.finish()?;
+        service.shutdown()
+    });
+}
+
+#[test]
+fn dropping_the_service_with_live_sessions_keeps_streams_and_sticky_errors() {
+    // Dropping the service (instead of shutdown) while sessions are
+    // mid-stream must neither deadlock nor disturb them: sessions hold
+    // their own worker-channel clones, so the workers keep serving
+    // until the last session closes — and a session already poisoned
+    // keeps its sticky error through the service drop.
+    with_watchdog("service drop with live sessions", || {
+        let service = DpdService::start(ServiceConfig {
+            workers: 1,
+            frame_len: 32,
+            ..Default::default()
+        })?;
+        let input = signal(600, 23);
+        let mut live =
+            service.open_session_with(SessionConfig::default(), || Ok(fixed_engine(61)))?;
+        let mut poisoned = service.open_session_with(SessionConfig::default(), || {
+            Ok(Box::new(FailingEngine { after: 0, seen: 0 }) as Box<dyn DpdEngine>)
+        })?;
+        live.push(&input[..300])?;
+        let mut saw_err = false;
+        for _ in 0..100 {
+            if poisoned.push(&input[..64]).is_err() {
+                saw_err = true;
+                break;
+            }
+        }
+        anyhow::ensure!(saw_err, "injected failure never surfaced");
+
+        drop(service); // sessions still open, frames still in flight
+
+        live.push(&input[300..])?;
+        let out = live.finish()?;
+        anyhow::ensure!(
+            out.iq == direct(61, &input),
+            "live session corrupted by the service drop"
+        );
+        let err = poisoned.finish().expect_err("sticky error lost across the service drop");
+        anyhow::ensure!(
+            format!("{err:#}").contains("injected engine failure"),
+            "sticky error lost its cause: {err:#}"
+        );
+        Ok(())
+    });
 }
 
 #[test]
