@@ -1,0 +1,388 @@
+#!/usr/bin/env python3
+"""Golden-vector generator for the sparse + mixed-precision engine
+family (`rust/src/dpd/sparse.rs::SparseMpGruDpd`) — the Pareto sweep's
+independent Python oracle.
+
+Mirrors, integer-exactly:
+
+* `GruWeights::synthetic`        -> float_synthetic_weights (f64 twin)
+* `GruWeights::prune_quantize`   -> per-tensor quantization + prune
+* `dpd::weights::prune_mask`     -> magnitude prune order (|code|, idx)
+* `dpd::weights::csc_from_dense` -> surviving-entry CSC storage
+* `SparseMpGruDpd::step_codes`   -> run_sparse_mp (per-tensor fracs,
+                                    carried accumulators, theta firing)
+
+and emits `rust/tests/data/golden_pareto.json`: for each (profile, rho,
+theta) grid point the first-64 output codes (bit-exact pins), the exact
+activity counters, the cost-model MAC reduction, and the measured
+ACPR/EVM through the shared Rapp+memory PA — which
+`rust/tests/pareto_golden.rs` replays against the Rust engine.
+
+The waveform is NOT duplicated here: the sweep reads the checked-in
+CP-OFDM burst from `golden_ofdm_q12.json` (the decimals in that file
+are the waveform), so both golden suites measure the same stimulus.
+
+Internal contracts asserted before anything is written:
+
+* uniform profile + rho=0 + theta=0  == the dense `run_qgru` port bit
+  for bit (the `fixed+sparse:0` conformance hinge);
+* at least one grid point achieves >= 1.5x modeled MAC reduction while
+  staying within 0.5 dB ACPR of the dense Q2.10 baseline — the
+  acceptance point of the sparse/MP family.
+"""
+
+import json
+import math
+import pathlib
+
+import numpy as np
+
+from gen_golden_ofdm import (
+    Rng,
+    WELCH_NFFT,
+    TOL_DB,
+    WEIGHTS_SEED,
+    acpr_dbc,
+    evm_db_nmse,
+    pa_run,
+    rshift_round,
+)
+
+# acceptance bars (ISSUE: >= 1.5x modeled MAC reduction within 0.5 dB
+# ACPR of the dense Q2.10 baseline)
+MIN_MAC_REDUCTION = 1.5
+MAX_ACPR_DELTA_DB = 0.5
+
+HIDDEN, FEATURES = 10, 4
+
+
+# --- rust/src/fixed/qspec.rs twin, parameterized by bit width ------------
+
+
+def spec(bits: int) -> dict:
+    """QSpec twin: Q2.(bits-2) signed fixed point."""
+    frac = bits - 2
+    return {
+        "bits": bits,
+        "frac": frac,
+        "scale": float(1 << frac),
+        "one": 1 << frac,
+        "half": 1 << (frac - 1),
+        "qmin": -(1 << (bits - 1)),
+        "qmax": (1 << (bits - 1)) - 1,
+    }
+
+
+def sat_s(v: int, s: dict) -> int:
+    return s["qmin"] if v < s["qmin"] else (s["qmax"] if v > s["qmax"] else v)
+
+
+def requant_s(v: int, sh: int, s: dict) -> int:
+    return sat_s(rshift_round(v, sh), s)
+
+
+def quantize_s(x: float, s: dict) -> int:
+    q = math.floor(x * s["scale"] + 0.5)
+    return sat_s(int(q), s)
+
+
+def hard_sigmoid_s(c: int, s: dict) -> int:
+    v = (c >> 2) + s["half"]
+    return 0 if v < 0 else (s["one"] if v > s["one"] else v)
+
+
+def hard_tanh_s(c: int, s: dict) -> int:
+    one = s["one"]
+    return -one if c < -one else (one if c > one else c)
+
+
+# --- rust/src/dpd/weights.rs twins ---------------------------------------
+
+
+def float_synthetic_weights(seed: int) -> dict:
+    """GruWeights::synthetic twin (H=10, F=4, |w| < 0.15), bit-exact
+    f64: same xoshiro stream, same `lo + (hi-lo)*uniform` arithmetic."""
+    rng = Rng(seed)
+
+    def gen(n: int):
+        return [rng.range(-0.15, 0.15) for _ in range(n)]
+
+    return {
+        "hidden": HIDDEN,
+        "features": FEATURES,
+        "w_ih": gen(3 * HIDDEN * FEATURES),
+        "b_ih": gen(3 * HIDDEN),
+        "w_hh": gen(3 * HIDDEN * HIDDEN),
+        "b_hh": gen(3 * HIDDEN),
+        "w_fc": gen(2 * HIDDEN),
+        "b_fc": gen(2),
+    }
+
+
+def prune_mask(codes: list, rho: int) -> list:
+    """dpd::weights::prune_mask twin: drop the floor(rho% * N) smallest
+    by (|code|, index) — the deterministic total order both sides pin."""
+    k = len(codes) * min(rho, 100) // 100
+    order = sorted(range(len(codes)), key=lambda i: (abs(codes[i]), i))
+    pruned = [False] * len(codes)
+    for i in order[:k]:
+        pruned[i] = True
+    return pruned
+
+
+def csc_from_dense(w: list, rows: int, cols: int, pruned: list):
+    """csc_from_dense twin: per column, surviving = unpruned AND nonzero."""
+    ptr, out_rows, out_vals = [0], [], []
+    for c in range(cols):
+        for r in range(rows):
+            idx = r * cols + c
+            if not pruned[idx] and w[idx] != 0:
+                out_rows.append(r)
+                out_vals.append(w[idx])
+        ptr.append(len(out_rows))
+    return ptr, out_rows, out_vals
+
+
+def prune_quantize(fw: dict, w_bits: int, a_bits: int, rho: int) -> dict:
+    """GruWeights::prune_quantize twin: gate/FC weights in the weight
+    spec, biases in the activation spec, then magnitude-prune + CSC."""
+    ws, as_ = spec(w_bits), spec(a_bits)
+    q = lambda vs, s: [quantize_s(v, s) for v in vs]
+    w_ih = q(fw["w_ih"], ws)
+    w_hh = q(fw["w_hh"], ws)
+    ih_ptr, ih_rows, ih_vals = csc_from_dense(
+        w_ih, 3 * HIDDEN, FEATURES, prune_mask(w_ih, rho)
+    )
+    hh_ptr, hh_rows, hh_vals = csc_from_dense(
+        w_hh, 3 * HIDDEN, HIDDEN, prune_mask(w_hh, rho)
+    )
+    return {
+        "w_bits": w_bits,
+        "a_bits": a_bits,
+        "rho": rho,
+        "ih_ptr": ih_ptr,
+        "ih_rows": ih_rows,
+        "ih_vals": ih_vals,
+        "hh_ptr": hh_ptr,
+        "hh_rows": hh_rows,
+        "hh_vals": hh_vals,
+        "b_ih": q(fw["b_ih"], as_),
+        "b_hh": q(fw["b_hh"], as_),
+        "w_fc": q(fw["w_fc"], ws),
+        "b_fc": q(fw["b_fc"], as_),
+    }
+
+
+# --- rust/src/dpd/sparse.rs twin -----------------------------------------
+
+
+def run_sparse_mp(sw: dict, codes: list, theta: int):
+    """SparseMpGruDpd::step_codes twin, integer exact: carried raw
+    accumulators in each tensor's fa+fw domain, |delta| > theta column
+    firing over surviving CSC entries only, readout requantized by the
+    *weight* fraction, dense gate/FC chain in the activation format.
+    Returns (out_codes, stats dict)."""
+    act = spec(sw["a_bits"])
+    fa = act["frac"]
+    fw = sw["w_bits"] - 2  # wa profiles: one weight frac for all tensors
+    hd = HIDDEN
+    rows = 3 * hd
+    one = act["one"]
+    h = [0] * hd
+    x_prev = [0] * FEATURES
+    h_prev = [0] * hd
+    acc_ih = [b << fw for b in sw["b_ih"]]
+    acc_hh = [b << fw for b in sw["b_hh"]]
+    in_updates = hid_updates = gate_macs = 0
+    out = []
+    for ic, qc in codes:
+        p = requant_s(ic * ic + qc * qc, fa - 2, act)
+        p2 = requant_s(p * p, fa, act)
+        x = [ic, qc, p, p2]
+        for c in range(FEATURES):
+            d = x[c] - x_prev[c]
+            if abs(d) > theta:
+                lo, hi = sw["ih_ptr"][c], sw["ih_ptr"][c + 1]
+                for e in range(lo, hi):
+                    acc_ih[sw["ih_rows"][e]] += sw["ih_vals"][e] * d
+                x_prev[c] = x[c]
+                in_updates += 1
+                gate_macs += hi - lo
+        for c in range(hd):
+            d = h[c] - h_prev[c]
+            if abs(d) > theta:
+                lo, hi = sw["hh_ptr"][c], sw["hh_ptr"][c + 1]
+                for e in range(lo, hi):
+                    acc_hh[sw["hh_rows"][e]] += sw["hh_vals"][e] * d
+                h_prev[c] = h[c]
+                hid_updates += 1
+                gate_macs += hi - lo
+        gi = [requant_s(acc_ih[r], fw, act) for r in range(rows)]
+        gh = [requant_s(acc_hh[r], fw, act) for r in range(rows)]
+        for k in range(hd):
+            r_ = hard_sigmoid_s(sat_s(gi[k] + gh[k], act), act)
+            z = hard_sigmoid_s(sat_s(gi[hd + k] + gh[hd + k], act), act)
+            rh = requant_s(r_ * gh[2 * hd + k], fa, act)
+            n = hard_tanh_s(sat_s(gi[2 * hd + k] + rh, act), act)
+            zn = rshift_round((one - z) * n, fa)
+            zh = rshift_round(z * h[k], fa)
+            h[k] = sat_s(zn + zh, act)
+        y = []
+        for o in range(2):
+            acc = sw["b_fc"][o] << fw
+            for k in range(hd):
+                acc += sw["w_fc"][o * hd + k] * h[k]
+            y.append(sat_s(requant_s(acc, fw, act) + x[o], act))
+        out.append((y[0], y[1]))
+    steps = len(codes)
+    stats = {
+        "steps": steps,
+        "in_updates": in_updates,
+        "in_cols": FEATURES * steps,
+        "hid_updates": hid_updates,
+        "hid_cols": hd * steps,
+        "gate_macs": gate_macs,
+        "dense_gate_macs": steps * 3 * hd * (FEATURES + hd),
+    }
+    return out, stats
+
+
+def mac_reduction(stats: dict) -> float:
+    """accel::sparse::SparseCostModel::mac_reduction twin: executed
+    gate entries per sample + the dense 2H FC head, vs dense 440."""
+    dense = 3 * HIDDEN * (FEATURES + HIDDEN) + 2 * HIDDEN
+    sparse = stats["gate_macs"] / stats["steps"] + 2 * HIDDEN
+    return dense / sparse
+
+
+# --- the sweep -----------------------------------------------------------
+
+# (w_bits or None for uniform-at-act, rho, theta); W12A12 is the uniform
+# profile, so w=None rows exercise the integer `to_sparse` path and
+# profile rows the float `prune_quantize` path — both Rust entry points.
+GRID = [
+    (None, 0, 0),   # == dense fixed, the conformance hinge
+    (None, 25, 0),
+    (None, 50, 0),
+    (None, 70, 0),
+    (8, 0, 0),
+    (8, 50, 0),
+    (6, 50, 0),
+    (4, 0, 0),
+    (4, 50, 0),
+    (8, 50, 32),    # the fully composed family member
+]
+
+A_BITS = 12
+
+
+def main() -> None:
+    root = pathlib.Path(__file__).resolve().parents[2]
+    data_dir = root / "rust" / "tests" / "data"
+    wave = json.load(open(data_dir / "golden_ofdm_q12.json"))["iq"]
+    x = np.array([complex(a, b) for a, b in wave])
+    act = spec(A_BITS)
+    codes = [(quantize_s(a, act), quantize_s(b, act)) for a, b in wave]
+
+    fw = float_synthetic_weights(WEIGHTS_SEED)
+    g_target = (0.995 + 0.087j) * 0.95
+
+    # dense Q2.10 baseline: the uniform quantization of the same float
+    # model through the dense datapath == sparse(uniform, rho=0, theta=0)
+    base_sw = prune_quantize(fw, A_BITS, A_BITS, 0)
+    base_codes, base_stats = run_sparse_mp(base_sw, codes, 0)
+    assert base_stats["gate_macs"] <= base_stats["dense_gate_macs"]
+    zb = np.array([complex(a / act["scale"], b / act["scale"]) for a, b in base_codes])
+    base_acpr = acpr_dbc(pa_run(zb), WELCH_NFFT)
+    base_evm = evm_db_nmse(pa_run(zb), x, g_target)
+
+    # contract: the sparse twin at (uniform, 0, 0) is the dense port —
+    # cross-check against gen_golden_ofdm's independently written dense
+    # runner on the same quantized weight set
+    from gen_golden_ofdm import run_qgru
+
+    qw_dense = {
+        "hidden": HIDDEN,
+        "features": FEATURES,
+        "w_ih": [quantize_s(v, act) for v in fw["w_ih"]],
+        "b_ih": [quantize_s(v, act) for v in fw["b_ih"]],
+        "w_hh": [quantize_s(v, act) for v in fw["w_hh"]],
+        "b_hh": [quantize_s(v, act) for v in fw["b_hh"]],
+        "w_fc": [quantize_s(v, act) for v in fw["w_fc"]],
+        "b_fc": [quantize_s(v, act) for v in fw["b_fc"]],
+    }
+    assert run_qgru(qw_dense, codes) == base_codes, (
+        "sparse twin at (uniform, rho=0, theta=0) diverged from the dense port"
+    )
+
+    rows = []
+    for w_bits, rho, theta in GRID:
+        wb = w_bits if w_bits is not None else A_BITS
+        sw = prune_quantize(fw, wb, A_BITS, rho)
+        out, stats = run_sparse_mp(sw, codes, theta)
+        z = np.array([complex(a / act["scale"], b / act["scale"]) for a, b in out])
+        y = pa_run(z)
+        nnz = len(sw["ih_vals"]) + len(sw["hh_vals"])
+        rows.append(
+            {
+                "profile": None if w_bits is None else [w_bits, A_BITS],
+                "rho": rho,
+                "theta": theta,
+                "gate_nnz": nnz,
+                "stats": stats,
+                "mac_reduction": mac_reduction(stats),
+                "acpr_dbc": acpr_dbc(y, WELCH_NFFT),
+                "evm_db": evm_db_nmse(y, x, g_target),
+                "head_codes": [list(c) for c in out[:64]],
+            }
+        )
+        print(
+            f"  W{wb}A{A_BITS} rho={rho:3d} theta={theta:2d}: "
+            f"{rows[-1]['mac_reduction']:.2f}x MACs, "
+            f"ACPR {rows[-1]['acpr_dbc']:+.3f} dBc "
+            f"(d {rows[-1]['acpr_dbc'] - base_acpr:+.3f}), "
+            f"EVM {rows[-1]['evm_db']:+.2f} dB"
+        )
+
+    # row 0 is the uniform rho=0 hinge: bit-identical to the baseline
+    assert rows[0]["head_codes"] == [list(c) for c in base_codes[:64]]
+    assert abs(rows[0]["acpr_dbc"] - base_acpr) < 1e-12
+
+    # the acceptance point: >= 1.5x modeled MAC reduction within 0.5 dB
+    # ACPR of the dense baseline, on at least one grid row
+    accepted = [
+        i
+        for i, r in enumerate(rows)
+        if r["mac_reduction"] >= MIN_MAC_REDUCTION
+        and abs(r["acpr_dbc"] - base_acpr) <= MAX_ACPR_DELTA_DB
+    ]
+    assert accepted, "no grid point met the 1.5x-within-0.5dB acceptance bar"
+
+    doc = {
+        "meta": {
+            "description": "sparse + mixed-precision Pareto golden sweep "
+            "(SparseMpGruDpd vs dense Q2.10) on the golden CP-OFDM burst",
+            "generator": "python/tools/gen_golden_pareto.py",
+            "weights_seed": WEIGHTS_SEED,
+            "act_bits": A_BITS,
+            "welch_nfft": WELCH_NFFT,
+            "waveform": "golden_ofdm_q12.json:iq",
+            "min_mac_reduction": MIN_MAC_REDUCTION,
+            "max_acpr_delta_db": MAX_ACPR_DELTA_DB,
+            "tol_db": TOL_DB,
+        },
+        "baseline": {
+            "acpr_dbc": base_acpr,
+            "evm_db": base_evm,
+            "head_codes": [list(c) for c in base_codes[:64]],
+        },
+        "accepted_rows": accepted,
+        "rows": rows,
+    }
+    out_path = data_dir / "golden_pareto.json"
+    out_path.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {out_path} ({len(rows)} rows, accepted: {accepted})")
+
+
+if __name__ == "__main__":
+    main()

@@ -40,13 +40,13 @@ fn main() -> anyhow::Result<()> {
     let mut qat_beats_ptq_low_bits = false;
     for bits in [8u32, 10, 12] {
         let spec = QSpec::new(bits)?;
-        let mut ptq = QGruDpd::new(float_w.quantize(spec), ActKind::Hard);
+        let mut ptq = QGruDpd::new(float_w.quantize(spec).unwrap(), ActKind::Hard);
         let y_ptq = pa.run(&ptq.run(&sig.iq));
         let a_ptq = acpr_db(&y_ptq, &AcprConfig::default())?.acpr_dbc;
 
         let qat_path = &m.sweep.iter().find(|(n, _)| *n == format!("b{bits}_hard")).unwrap().1;
         let qat_w = GruWeights::load(qat_path)?;
-        let mut qat = QGruDpd::new(qat_w.quantize(spec), ActKind::Hard);
+        let mut qat = QGruDpd::new(qat_w.quantize(spec).unwrap(), ActKind::Hard);
         let y_qat = pa.run(&qat.run(&sig.iq));
         let a_qat = acpr_db(&y_qat, &AcprConfig::default())?.acpr_dbc;
         if a_qat < a_ptq {

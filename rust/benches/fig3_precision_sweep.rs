@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
         } else {
             ActKind::Lut(LutTables::default_for(spec))
         };
-        let mut dpd = QGruDpd::new(fw.quantize(spec), act);
+        let mut dpd = QGruDpd::new(fw.quantize(spec).unwrap(), act);
         let y = pa.run(&dpd.run(&sig.iq));
         let a = acpr_db(&y, &AcprConfig::default())?.acpr_dbc;
         let e = evm_db_nmse(&y, &sig.iq, g);
@@ -88,7 +88,7 @@ fn main() -> anyhow::Result<()> {
     // timing component
     let spec = QSpec::Q12;
     let fw = GruWeights::load(&m.sweep.iter().find(|(n, _)| n == "b12_hard").unwrap().1)?;
-    let mut dpd = QGruDpd::new(fw.quantize(spec), ActKind::Hard);
+    let mut dpd = QGruDpd::new(fw.quantize(spec).unwrap(), ActKind::Hard);
     let burst = &sig.iq[..16384.min(sig.iq.len())];
     let r = dpd_ne::bench::bench("fig3: qgru12-hard 16k samples", || {
         std::hint::black_box(dpd.run(burst));

@@ -299,7 +299,7 @@ fn main() -> anyhow::Result<()> {
             AdaptTrainer::new(identity_init(seed, 10, gate_bound), AdaptConfig::default())?;
         let r = time_it("adapt refresh cycle (4096-sample interval)", budget, || {
             tr.observe(fb_u, &fb_y).unwrap();
-            let eng = QGruDpd::new(tr.quantized(spec), ActKind::Hard);
+            let eng = QGruDpd::new(tr.quantized(spec).unwrap(), ActKind::Hard);
             std::hint::black_box(eng);
         });
         let hz = r.per_second(1.0);
@@ -319,7 +319,7 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         };
         let deployed_acpr = |tr: &AdaptTrainer, traj: DriftTrajectory| -> f64 {
-            let mut eng = QGruDpd::new(tr.quantized(spec), ActKind::Hard);
+            let mut eng = QGruDpd::new(tr.quantized(spec).unwrap(), ActKind::Hard);
             let z = spec.dequantize_iq(&eng.run_codes(&spec.quantize_iq(&iq)));
             let y = DriftingPa::new(PaSpec::ganlike(), traj).run(&z);
             acpr_db(&y, &acpr_cfg).unwrap().acpr_dbc

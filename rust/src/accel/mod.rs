@@ -28,8 +28,10 @@ pub mod ops;
 pub mod pe;
 pub mod power;
 pub mod preproc;
+pub mod sparse;
 pub mod spec;
 
 pub use delta::DeltaCostModel;
+pub use sparse::SparseCostModel;
 pub use engine::{CycleAccurateEngine, EngineStats};
 pub use spec::AsicSpec;

@@ -1,0 +1,220 @@
+//! Cost model of the sparse + mixed-precision execution path — what
+//! the measured activity of a [`SparseStats`] stream is worth in MACs
+//! and energy on SparseDPD/MP-DPD-style hardware (arXiv:2506.16591,
+//! arXiv:2404.15364).
+//!
+//! The functional engine (`dpd::sparse::SparseMpGruDpd`) *counts* the
+//! gate MACs it actually executed (surviving CSC entries of fired
+//! columns); this module *prices* those counts against the dense
+//! uniform-Q2.10 datapath under one documented convention:
+//!
+//! * a pruned (or zero) weight never costs a MAC, a weight-buffer
+//!   read, or an index fetch — it simply is not stored;
+//! * a skipped delta column (θ>0) additionally saves every surviving
+//!   entry of that column, exactly as in [`super::delta`];
+//! * narrow multipliers scale: a `wb x ab`-bit MAC is priced at
+//!   `(wb·ab)/(12·12)` of the 12-bit MAC energy (array multiplier
+//!   energy grows with the product of operand widths), and a narrow
+//!   weight read at `wb/12` of the 12-bit word read;
+//! * CSC row indices are real hardware: every executed gate entry
+//!   pays one index fetch (priced as a [`IDX_BITS`]-bit buffer read)
+//!   and one index-decode ALU op;
+//! * the FC head and biases stay dense (at the profile's FC width);
+//! * the pipeline II is unchanged — like delta skipping, pruning
+//!   gates datapath *activity* (clock-gated PE columns), so it shows
+//!   up in energy and effective MAC throughput, not in latency.
+//!
+//! `benches/pareto.rs` sweeps (ρ, profile) through this model against
+//! measured ACPR/EVM on the golden OFDM waveform and holds the
+//! resulting Pareto front on the record (`BENCH_pareto.json`).
+
+use super::engine::EngineStats;
+use super::fsm;
+use super::ops::{macs_per_sample, ModelDims};
+use super::power::EnergyModel;
+use crate::dpd::qgru::ActKind;
+use crate::dpd::SparseStats;
+use crate::fixed::QProfile;
+
+/// Stored width of a CSC row index (u16 in `SparseQGruWeights`).
+pub const IDX_BITS: u32 = 16;
+
+/// Reference width the energy constants are calibrated at (Q2.10).
+const REF_BITS: f64 = 12.0;
+
+/// Prices measured sparse/mixed-precision activity against the dense
+/// uniform-Q2.10 datapath.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseCostModel {
+    pub dims: ModelDims,
+    pub profile: QProfile,
+}
+
+impl SparseCostModel {
+    pub fn new(dims: ModelDims, profile: QProfile) -> SparseCostModel {
+        SparseCostModel { dims, profile }
+    }
+
+    /// Dense MACs per sample of the uniform datapath (the reduction
+    /// denominator — 440 at the paper's dimensions).
+    pub fn dense_macs_per_sample(&self) -> f64 {
+        macs_per_sample(self.dims) as f64
+    }
+
+    /// Measured MACs per sample on the sparse path: the executed gate
+    /// entries plus the dense 2H FC head.
+    pub fn sparse_macs_per_sample(&self, s: &SparseStats) -> f64 {
+        let steps = s.steps.max(1) as f64;
+        s.gate_macs as f64 / steps + 2.0 * self.dims.hidden as f64
+    }
+
+    /// Measured MAC-reduction factor (dense / sparse; 1.0 = no win).
+    /// Counts MACs as events — width scaling is energy's business.
+    pub fn mac_reduction(&self, s: &SparseStats) -> f64 {
+        self.dense_macs_per_sample() / self.sparse_macs_per_sample(s)
+    }
+
+    /// The gate-tensor weight width the profile prices MACs at (wa
+    /// profiles are weight-homogeneous; a hand-built heterogeneous
+    /// profile is priced at its widest gate tensor, conservatively).
+    fn gate_weight_bits(&self) -> f64 {
+        self.profile.w_ih.bits.max(self.profile.w_hh.bits) as f64
+    }
+
+    /// Project the stream's activity into the shape the 22FDX energy
+    /// model consumes, **width-normalized**: event counts are scaled
+    /// to 12-bit equivalents so the model's 12-bit energy constants
+    /// price the narrow ops (a W4 MAC counts as 4·12/144 = 1/3 of a
+    /// MAC event, a W4 weight read as 1/3 of a word read).
+    pub fn normalized_stats(&self, s: &SparseStats) -> EngineStats {
+        let h = self.dims.hidden as u64;
+        let f = self.dims.features as u64;
+        let n = s.steps;
+        let wb = self.gate_weight_bits();
+        let wfc = self.profile.w_fc.bits as f64;
+        let ab = self.profile.act.bits as f64;
+        let gate_mac_scale = (wb * ab) / (REF_BITS * REF_BITS);
+        let fc_mac_scale = (wfc * ab) / (REF_BITS * REF_BITS);
+        let hb_scale = ab / REF_BITS;
+        let fc_macs = (n * 2 * h) as f64;
+        EngineStats {
+            samples: n,
+            cycles: n * fsm::II_CYCLES as u64,
+            macs: (s.gate_macs as f64 * gate_mac_scale + fc_macs * fc_mac_scale).round()
+                as u64,
+            // dense gate/update ALU work (8 per hidden unit + 1 per
+            // output + 4 preproc), the F + H delta compares, and one
+            // index decode per executed gate entry
+            alu_ops: n * (8 * h + 2 + 4) + n * (f + h) + s.gate_macs,
+            act_ops: n * 3 * h,
+            // surviving gate entries pay a wb-bit weight read and an
+            // IDX_BITS index fetch; the FC head + biases stay dense at
+            // the FC width; gate biases live in the persistent
+            // accumulators (same convention as the delta model)
+            weight_reads: (s.gate_macs as f64 * (wb + IDX_BITS as f64) / REF_BITS
+                + (n * (2 * h + 2)) as f64 * wfc / REF_BITS)
+                .round() as u64,
+            // delta compares re-read the live vectors (H) + z.h (H) +
+            // FC (2H) reads of the committed hidden state, all in the
+            // activation width
+            hidden_reads: ((n * 4 * h) as f64 * hb_scale).round() as u64,
+            hidden_writes: (((n * h + s.hid_updates) as f64) * hb_scale).round() as u64,
+        }
+    }
+
+    /// Nominal-point (2 GHz, 0.9 V, 250 MSps) power of the sparse
+    /// stream under the energy model.
+    pub fn projected_power_mw(&self, s: &SparseStats, em: &EnergyModel, act: &ActKind) -> f64 {
+        em.nominal_power_mw(&self.normalized_stats(s), act)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::QSpec;
+
+    /// A synthetic activity record: every column fires, `nnz_ratio` of
+    /// the dense gate entries survive pruning.
+    fn stats_at(steps: u64, nnz_ratio: f64) -> SparseStats {
+        let d = ModelDims::default();
+        let dense_gate = (3 * d.hidden * (d.features + d.hidden)) as u64;
+        SparseStats {
+            steps,
+            in_updates: steps * d.features as u64,
+            in_cols: steps * d.features as u64,
+            hid_updates: steps * d.hidden as u64,
+            hid_cols: steps * d.hidden as u64,
+            gate_macs: (steps as f64 * dense_gate as f64 * nnz_ratio) as u64,
+            dense_gate_macs: steps * dense_gate,
+        }
+    }
+
+    #[test]
+    fn dense_uniform_activity_reproduces_the_dense_cost() {
+        let m = SparseCostModel::new(ModelDims::default(), QProfile::uniform(QSpec::Q12));
+        let s = stats_at(100, 1.0);
+        assert_eq!(m.sparse_macs_per_sample(&s), 440.0);
+        assert!((m.mac_reduction(&s) - 1.0).abs() < 1e-12);
+        let p = m.normalized_stats(&s);
+        // width scale is 1 at the uniform Q12 profile — MACs unscaled
+        assert_eq!(p.macs, 100 * 440);
+        assert_eq!(p.samples, 100);
+        assert_eq!(p.cycles_per_sample(), fsm::II_CYCLES as f64);
+    }
+
+    #[test]
+    fn pruning_reduction_scales_with_surviving_entries() {
+        let m = SparseCostModel::new(ModelDims::default(), QProfile::uniform(QSpec::Q12));
+        // half the gate entries survive: 210 + 20 = 230 -> 1.91x
+        let s = stats_at(1000, 0.5);
+        assert!((m.sparse_macs_per_sample(&s) - 230.0).abs() < 1e-9);
+        assert!((m.mac_reduction(&s) - 440.0 / 230.0).abs() < 1e-9);
+        // full pruning leaves only the dense FC floor
+        let s0 = stats_at(1000, 0.0);
+        assert_eq!(m.sparse_macs_per_sample(&s0), 20.0);
+        assert!(m.mac_reduction(&s0) > 20.0);
+    }
+
+    #[test]
+    fn narrow_profiles_cut_projected_power_on_identical_activity() {
+        let em = EnergyModel::default();
+        let s = stats_at(500, 0.5);
+        let d = ModelDims::default();
+        let p12 = SparseCostModel::new(d, QProfile::uniform(QSpec::Q12))
+            .projected_power_mw(&s, &em, &ActKind::Hard);
+        let p8 = SparseCostModel::new(d, QProfile::wa(8, 12).unwrap())
+            .projected_power_mw(&s, &em, &ActKind::Hard);
+        let p4 = SparseCostModel::new(d, QProfile::wa(4, 12).unwrap())
+            .projected_power_mw(&s, &em, &ActKind::Hard);
+        assert!(p12 > p8 && p8 > p4, "{p12} / {p8} / {p4}");
+        // the clock/overhead floor remains
+        assert!(p4 > 50.0, "overhead floor vanished: {p4}");
+    }
+
+    #[test]
+    fn measured_engine_activity_feeds_the_model() {
+        // End to end: run the real sparse engine at rho=50%, price its
+        // counters — the acceptance-style >=1.5x MAC reduction.
+        use crate::dpd::qgru::ActKind;
+        use crate::dpd::weights::QGruWeights;
+        use crate::dpd::SparseMpGruDpd;
+        use crate::util::Rng;
+        let sw = QGruWeights::synthetic(7, QSpec::Q12).to_sparse(50);
+        let mut dpd = SparseMpGruDpd::new(sw, ActKind::Hard, 0);
+        let mut rng = Rng::new(11);
+        let x: Vec<[i32; 2]> = (0..400)
+            .map(|_| [(rng.gauss() * 200.0) as i32, (rng.gauss() * 200.0) as i32])
+            .collect();
+        dpd.run_codes(&x);
+        let m = SparseCostModel::new(
+            ModelDims::default(),
+            QProfile::uniform(QSpec::Q12),
+        );
+        let red = m.mac_reduction(&dpd.stats());
+        assert!(red >= 1.5, "rho=50% should cut MACs >=1.5x, got {red:.2}x");
+        let p = m.normalized_stats(&dpd.stats());
+        assert_eq!(p.samples, 400);
+        assert!(p.macs < 400 * 440);
+    }
+}

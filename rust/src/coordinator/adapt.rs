@@ -41,9 +41,9 @@ use anyhow::{bail, Result};
 use super::service::{Cmd, EngineBuild};
 use crate::dpd::adapt::{AdaptConfig, AdaptTrainer};
 use crate::dpd::qgru::{ActKind, DeltaQGruDpd, QGruDpd};
-use crate::dpd::{GruDpd, GruWeights};
+use crate::dpd::{GruDpd, GruWeights, SparseMpGruDpd};
 use crate::fixed::kernel::{resolve_simd, SimdPolicy};
-use crate::fixed::QSpec;
+use crate::fixed::{QProfile, QSpec};
 use crate::metrics::acpr::{acpr_db, AcprConfig};
 use crate::metrics::evm::evm_db_nmse;
 use crate::runtime::backend::StreamingEngine;
@@ -129,6 +129,13 @@ pub(crate) type Rebuild = Box<dyn Fn(&GruWeights) -> EngineBuild + Send>;
 /// path (the cycle model and the AOT artifact are compile-time weight
 /// sets) and are rejected at session-open time.
 ///
+/// The quantize bridge is fallible (a diverged trainer can hand back
+/// non-finite weights — [`crate::dpd::NonFiniteWeightError`]): the
+/// snapshot is quantized on the adapt thread, and a rejection travels
+/// inside the [`EngineBuild`] closure so the in-worker build fails and
+/// poisons the session exactly like any other engine-construction
+/// error, instead of deploying garbage codes.
+///
 /// `simd` is the service's kernel policy; it only matters for the
 /// `*Simd` kinds, where the kernel is resolved once here (the host
 /// does not change mid-session) and every refreshed generation keeps
@@ -149,6 +156,7 @@ pub(crate) fn rebuild_for_kind(
         EngineKind::Fixed => Box::new(move |w: &GruWeights| -> EngineBuild {
             let qw = w.quantize(spec);
             Box::new(move || {
+                let qw = qw?;
                 Ok(Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw, ActKind::Hard))))
                     as Box<dyn DpdEngine>)
             })
@@ -156,6 +164,7 @@ pub(crate) fn rebuild_for_kind(
         EngineKind::DeltaFixed { theta } => Box::new(move |w: &GruWeights| -> EngineBuild {
             let qw = w.quantize(spec);
             Box::new(move || {
+                let qw = qw?;
                 Ok(Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
                     qw,
                     ActKind::Hard,
@@ -168,6 +177,7 @@ pub(crate) fn rebuild_for_kind(
             Box::new(move |w: &GruWeights| -> EngineBuild {
                 let qw = w.quantize(spec);
                 Box::new(move || {
+                    let qw = qw?;
                     Ok(match kernel {
                         Some(k) => Box::new(StreamingEngine::new(Box::new(
                             QGruDpd::with_kernel(qw, ActKind::Hard, k),
@@ -185,6 +195,7 @@ pub(crate) fn rebuild_for_kind(
             Box::new(move |w: &GruWeights| -> EngineBuild {
                 let qw = w.quantize(spec);
                 Box::new(move || {
+                    let qw = qw?;
                     Ok(match kernel {
                         Some(k) => Box::new(StreamingEngine::new(Box::new(
                             DeltaQGruDpd::with_kernel(qw, ActKind::Hard, theta, k),
@@ -198,9 +209,37 @@ pub(crate) fn rebuild_for_kind(
                 })
             })
         }
+        EngineKind::SparseMp { profile, rho, theta, simd: want_simd } => {
+            let kernel = if want_simd { resolve_simd(simd) } else { None };
+            let prof = match profile {
+                Some((wb, ab)) => QProfile::wa(wb as u32, ab as u32)?,
+                None => QProfile::uniform(spec),
+            };
+            let rho_pct = rho.unwrap_or(0);
+            let theta = theta.unwrap_or(0);
+            Box::new(move |w: &GruWeights| -> EngineBuild {
+                // every refreshed generation re-prunes on the adapted
+                // magnitudes, so the mask tracks the drifting twin
+                let sw = w.prune_quantize(prof, rho_pct);
+                Box::new(move || {
+                    let sw = sw?;
+                    Ok(match kernel {
+                        Some(k) => Box::new(StreamingEngine::new(Box::new(
+                            SparseMpGruDpd::with_kernel(sw, ActKind::Hard, theta, k),
+                        ))) as Box<dyn DpdEngine>,
+                        None => Box::new(StreamingEngine::new(Box::new(SparseMpGruDpd::new(
+                            sw,
+                            ActKind::Hard,
+                            theta,
+                        )))) as Box<dyn DpdEngine>,
+                    })
+                })
+            })
+        }
         other => bail!(
             "engine kind {other:?} has no adaptation refresh path \
-             (use NativeF64, Fixed, DeltaFixed or their +simd forms)"
+             (use NativeF64, Fixed, DeltaFixed, the sparse/@WwAa family, or their \
+             +simd forms)"
         ),
     })
 }
@@ -413,6 +452,13 @@ mod tests {
             EngineKind::DeltaFixed { theta: 16 },
             EngineKind::FixedSimd,
             EngineKind::DeltaFixedSimd { theta: 16 },
+            EngineKind::SparseMp { profile: None, rho: Some(50), theta: None, simd: false },
+            EngineKind::SparseMp {
+                profile: Some((8, 12)),
+                rho: Some(50),
+                theta: Some(16),
+                simd: true,
+            },
         ] {
             let rebuild = rebuild_for_kind(kind, spec, SimdPolicy::Auto).unwrap();
             let mut eng = rebuild(&w)().unwrap();
@@ -448,6 +494,27 @@ mod tests {
         let c = rebuild(&w1)().unwrap().batch_class();
         assert_eq!(a, b, "same generation, same class");
         assert_ne!(a, c, "refreshed generation must never coalesce with the old");
+    }
+
+    #[test]
+    fn rebuild_surfaces_a_diverged_twin_as_a_build_error() {
+        // a NaN in the adapted twin must fail the in-worker build (and
+        // thus poison the session) rather than deploy garbage codes
+        let spec = QSpec::Q12;
+        let mut w = identity_init(3, 10, 0.15);
+        w.w_ih[7] = f64::NAN;
+        for kind in [
+            EngineKind::Fixed,
+            EngineKind::DeltaFixed { theta: 16 },
+            EngineKind::SparseMp { profile: Some((8, 12)), rho: Some(50), theta: None, simd: false },
+        ] {
+            let rebuild = rebuild_for_kind(kind, spec, SimdPolicy::Auto).unwrap();
+            let err = rebuild(&w)().expect_err("NaN weights must not build");
+            assert!(
+                format!("{err:#}").contains("w_ih[7]"),
+                "{kind:?}: error should name the offending weight"
+            );
+        }
     }
 
     #[test]

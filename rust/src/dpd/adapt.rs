@@ -41,7 +41,7 @@
 use anyhow::{ensure, Result};
 
 use super::gru::{hardsigmoid, hardtanh, GruDpd};
-use super::weights::{GruWeights, QGruWeights};
+use super::weights::{GruWeights, NonFiniteWeightError, QGruWeights, SparseQGruWeights};
 use crate::fixed::QSpec;
 use crate::util::C64;
 
@@ -282,8 +282,27 @@ impl AdaptTrainer {
     /// linearization *including* that clamp). The returned set carries
     /// its own content fingerprint, i.e. a new weight *generation* the
     /// batch coalescer will never mix with the old one.
-    pub fn quantized(&self, spec: QSpec) -> QGruWeights {
+    ///
+    /// A diverged twin (NaN/±inf weights) is rejected with a typed
+    /// [`NonFiniteWeightError`] — NaN would otherwise quantize to code
+    /// 0 and the hot-swap would silently deploy a zeroed engine.
+    pub fn quantized(
+        &self,
+        spec: QSpec,
+    ) -> std::result::Result<QGruWeights, NonFiniteWeightError> {
         self.w.quantize(spec)
+    }
+
+    /// The sparse / mixed-precision flavor of the bridge: prune +
+    /// per-tensor quantize the float twin (see
+    /// [`GruWeights::prune_quantize`]). Shares the non-finite screen
+    /// with [`AdaptTrainer::quantized`].
+    pub fn quantized_sparse(
+        &self,
+        profile: crate::fixed::QProfile,
+        rho: u8,
+    ) -> std::result::Result<SparseQGruWeights, NonFiniteWeightError> {
+        self.w.prune_quantize(profile, rho)
     }
 
     /// Snapshot the float twin itself (e.g. to refresh a `NativeF64`
@@ -797,7 +816,7 @@ mod tests {
         w.w_hh[5] = -9.9;
         let tr = AdaptTrainer::new(w.clone(), AdaptConfig::default()).unwrap();
         let spec = QSpec::Q12;
-        let qw = tr.quantized(spec);
+        let qw = tr.quantized(spec).unwrap();
         for (f, q) in w.w_hh.iter().zip(&qw.w_hh) {
             assert_eq!(*q, spec.quantize(*f));
         }
@@ -808,6 +827,30 @@ mod tests {
         let mut w2 = w.clone();
         w2.w_ih[0] += 0.01;
         let tr2 = AdaptTrainer::new(w2, AdaptConfig::default()).unwrap();
-        assert_ne!(tr.quantized(spec).fingerprint(), tr2.quantized(spec).fingerprint());
+        assert_ne!(
+            tr.quantized(spec).unwrap().fingerprint(),
+            tr2.quantized(spec).unwrap().fingerprint()
+        );
+    }
+
+    #[test]
+    fn quantized_bridge_rejects_a_diverged_twin() {
+        // Regression: a trainer whose float twin diverged to NaN used
+        // to quantize NaN weights to code 0 — the adaptation worker
+        // would hot-swap a silently-zeroed engine. The bridge must
+        // refuse with the typed error instead.
+        let mut w = identity_init(33, 10, 0.4);
+        w.w_ih[7] = f64::NAN;
+        let tr = AdaptTrainer::new(w, AdaptConfig::default()).unwrap();
+        let err = tr.quantized(QSpec::Q12).unwrap_err();
+        assert_eq!((err.tensor, err.index), ("w_ih", 7));
+        assert!(err.value.is_nan());
+        // the sparse flavor of the bridge shares the screen
+        let profile = crate::fixed::QProfile::wa(8, 12).unwrap();
+        assert!(tr.quantized_sparse(profile, 50).is_err());
+        // a healthy twin still bridges fine on both flavors
+        let ok = AdaptTrainer::new(identity_init(33, 10, 0.4), AdaptConfig::default()).unwrap();
+        assert!(ok.quantized(QSpec::Q12).is_ok());
+        assert!(ok.quantized_sparse(profile, 50).is_ok());
     }
 }

@@ -10,6 +10,10 @@
 //!   instruction for instruction — this is the functional model of
 //!   the silicon; plus its delta-sparsity twin `DeltaQGruDpd`
 //!   (DeltaDPD-style column skipping, bit-exact to dense at θ=0);
+//! * [`sparse`] — the SparseDPD × MP-DPD family member: magnitude-
+//!   pruned compressed sparse-column gate tensors with per-tensor
+//!   mixed-precision formats (`QProfile`), composable with the delta
+//!   threshold — bit-exact to dense at (uniform, ρ=0, θ=0);
 //! * [`weights`] — loaders for the artifact weight JSONs;
 //! * [`adapt`] — the closed-loop ILA trainer that adapts the float
 //!   twin against PA feedback and re-quantizes fresh integer weight
@@ -22,6 +26,7 @@ pub mod adapt;
 pub mod gmp;
 pub mod gru;
 pub mod qgru;
+pub mod sparse;
 pub mod weights;
 
 use anyhow::{bail, Result};
@@ -30,7 +35,8 @@ pub use adapt::{AdaptConfig, AdaptProgress, AdaptTrainer};
 pub use gmp::GmpDpd;
 pub use gru::{DeltaGruDpd, GruDpd};
 pub use qgru::{DeltaQGruDpd, QGruDpd};
-pub use weights::GruWeights;
+pub use sparse::{SparseMpGruDpd, SparseStats};
+pub use weights::{GruWeights, NonFiniteWeightError, SparseQGruWeights};
 
 /// Recurrent-state snapshot of a streaming predistorter — one stream's
 /// lane in a batched call. Opaque to callers: only `save_state` /

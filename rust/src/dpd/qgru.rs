@@ -83,7 +83,7 @@ impl LutTables {
 /// Hardware sigmoid on codes — one definition shared by the dense and
 /// delta engines (Hard: floor-shift PWL; Lut: ROM lookup).
 #[inline(always)]
-fn sigmoid_code(act: &ActKind, spec: QSpec, code: i32) -> i32 {
+pub(crate) fn sigmoid_code(act: &ActKind, spec: QSpec, code: i32) -> i32 {
     match act {
         ActKind::Hard => {
             // clip((x >> 2) + 0.5, 0, 1) — floor shift, like the
@@ -98,7 +98,7 @@ fn sigmoid_code(act: &ActKind, spec: QSpec, code: i32) -> i32 {
 
 /// Hardware tanh on codes (shared, see [`sigmoid_code`]).
 #[inline(always)]
-fn tanh_code(act: &ActKind, spec: QSpec, code: i32) -> i32 {
+pub(crate) fn tanh_code(act: &ActKind, spec: QSpec, code: i32) -> i32 {
     match act {
         ActKind::Hard => {
             let one = 1i32 << spec.frac();
@@ -121,7 +121,7 @@ pub fn features_codes(spec: QSpec, iq: [i32; 2]) -> [i32; 4] {
 
 /// Datapath-identity fingerprint of a weight set + activation choice —
 /// the shared core of the dense and delta engines' batch classes.
-fn act_fingerprint(act: &ActKind, wfp: u64) -> u64 {
+pub(crate) fn act_fingerprint(act: &ActKind, wfp: u64) -> u64 {
     match act {
         ActKind::Hard => fnv1a_words("act-hard", [wfp]),
         ActKind::Lut(t) => fnv1a_words(

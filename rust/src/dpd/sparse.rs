@@ -1,0 +1,489 @@
+//! Sparse + mixed-precision GRU DPD engine — the SparseDPD
+//! (arXiv:2506.16591) × MP-DPD (arXiv:2404.15364) family member.
+//!
+//! [`SparseMpGruDpd`] combines three MAC-reduction levers behind one
+//! datapath:
+//!
+//! * **static weight sparsity** — the gate tensors arrive magnitude-
+//!   pruned in compressed sparse-column form
+//!   ([`SparseQGruWeights`]), so a pruned weight costs no storage and
+//!   no MAC in the per-column update loop;
+//! * **per-tensor mixed precision** — each weight tensor carries its
+//!   own [`QSpec`](crate::fixed::QSpec) (the
+//!   [`QProfile`](crate::fixed::QProfile)), with activations, biases
+//!   and the I/Q stream in the activation format. Products accumulate
+//!   in the fa+fw domain and every matvec requantizes by the *weight*
+//!   fraction back to the activation domain;
+//! * **temporal delta skipping** — the same θ-threshold column firing
+//!   as [`DeltaQGruDpd`](super::DeltaQGruDpd): accumulators are
+//!   carried across steps and only columns whose input/hidden delta
+//!   exceeds θ fold in (`fixed::kernel::GateKernel::
+//!   sparse_delta_axpy_i64`).
+//!
+//! **Equivalence contracts** (pinned by `tests/conformance.rs` and the
+//! property suite below):
+//!
+//! * uniform profile + ρ=0 + θ=0 ⇒ bit-identical to the dense
+//!   [`QGruDpd`](super::QGruDpd): the CSC holds exactly the nonzero
+//!   codes (eliding a zero is exact), θ=0 keeps `v_prev == v`, and
+//!   with fw == fa the accumulate/requantize chain is the dense one
+//!   op for op;
+//! * uniform profile + ρ=0 + any θ ⇒ bit-identical to
+//!   [`DeltaQGruDpd`](super::DeltaQGruDpd) at the same θ (same fire
+//!   decisions, same exact i64 accumulators — integer addition is
+//!   order-independent).
+//!
+//! For ρ>0 or narrow weights the engine computes a *different*
+//! (cheaper) function whose linearization cost is swept into
+//! `BENCH_pareto.json` and cross-validated against the Python mirror
+//! (`python/tools/gen_golden_pareto.py`).
+
+use anyhow::{bail, Result};
+
+use super::qgru::{features_codes, sigmoid_code, tanh_code, ActKind};
+use super::weights::SparseQGruWeights;
+use super::{DeltaSnapshot, Dpd, DpdState};
+use crate::fixed::kernel::{GateKernel, ScalarKernel};
+use crate::fixed::ops::{exceeds_theta, requantize, rshift_round, saturate_i64};
+use crate::util::fnv1a_words;
+
+/// Column-update + MAC activity of a sparse engine — the measured
+/// work the accel cost model (`accel::sparse`) prices. Like
+/// [`DeltaStats`](super::DeltaStats), counters accumulate across the
+/// engine's whole life and survive `reset`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SparseStats {
+    /// samples processed
+    pub steps: u64,
+    /// input feature columns whose delta exceeded θ (fired)
+    pub in_updates: u64,
+    /// input feature column opportunities (steps × F)
+    pub in_cols: u64,
+    /// hidden columns whose delta exceeded θ (fired)
+    pub hid_updates: u64,
+    /// hidden column opportunities (steps × H)
+    pub hid_cols: u64,
+    /// gate MACs actually executed: Σ over fired columns of that
+    /// column's surviving (unpruned, nonzero) entry count
+    pub gate_macs: u64,
+    /// gate MACs the dense engine performs: steps × 3H(F+H)
+    pub dense_gate_macs: u64,
+}
+
+impl SparseStats {
+    /// Executed / dense gate MACs (1.0 = no savings).
+    pub fn mac_ratio(&self) -> f64 {
+        if self.dense_gate_macs == 0 {
+            return 1.0;
+        }
+        self.gate_macs as f64 / self.dense_gate_macs as f64
+    }
+
+    /// Fraction of all matvec columns that fired.
+    pub fn update_ratio(&self) -> f64 {
+        let cols = self.in_cols + self.hid_cols;
+        if cols == 0 {
+            return 1.0;
+        }
+        (self.in_updates + self.hid_updates) as f64 / cols as f64
+    }
+}
+
+/// Streaming sparse mixed-precision GRU DPD (see the module docs for
+/// the datapath and its equivalence contracts). Generic over the gate
+/// kernel like every integer engine; the sparse column update is the
+/// kernel's `sparse_delta_axpy_i64` gather.
+pub struct SparseMpGruDpd<K: GateKernel = ScalarKernel> {
+    w: SparseQGruWeights,
+    act: ActKind,
+    /// delta propagation threshold in activation codes (0 = every
+    /// nonzero delta fires)
+    theta: u32,
+    st: DeltaSnapshot,
+    gi: Vec<i32>,
+    gh: Vec<i32>,
+    kernel: K,
+    stats: SparseStats,
+}
+
+impl SparseMpGruDpd {
+    /// Scalar-kernel constructor (the portable default).
+    pub fn new(w: SparseQGruWeights, act: ActKind, theta: u32) -> SparseMpGruDpd {
+        SparseMpGruDpd::with_kernel(w, act, theta, ScalarKernel)
+    }
+}
+
+impl<K: GateKernel> SparseMpGruDpd<K> {
+    /// Construct over an explicit gate kernel (the factory's dispatch
+    /// point, mirroring `QGruDpd::with_kernel`).
+    pub fn with_kernel(
+        w: SparseQGruWeights,
+        act: ActKind,
+        theta: u32,
+        kernel: K,
+    ) -> SparseMpGruDpd<K> {
+        let g = vec![0i32; 3 * w.hidden];
+        let st = Self::fresh_state(&w);
+        SparseMpGruDpd { st, gi: g.clone(), gh: g, kernel, w, act, theta, stats: SparseStats::default() }
+    }
+
+    /// The reset state: h = v_prev = 0, accumulators hold only the
+    /// biases aligned into each tensor's accumulation domain
+    /// (`b_code(fa) << fw` — the matvec of the all-zero vector).
+    fn fresh_state(w: &SparseQGruWeights) -> DeltaSnapshot {
+        let f_ih = w.profile.w_ih.frac();
+        let f_hh = w.profile.w_hh.frac();
+        DeltaSnapshot {
+            h: vec![0; w.hidden],
+            x_prev: vec![0; w.features],
+            h_prev: vec![0; w.hidden],
+            acc_ih: w.b_ih.iter().map(|&b| (b as i64) << f_ih).collect(),
+            acc_hh: w.b_hh.iter().map(|&b| (b as i64) << f_hh).collect(),
+        }
+    }
+
+    /// The active kernel's label (diagnostics; not part of the
+    /// datapath identity).
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
+    }
+
+    pub fn weights(&self) -> &SparseQGruWeights {
+        &self.w
+    }
+
+    pub fn theta(&self) -> u32 {
+        self.theta
+    }
+
+    /// Activity so far (feeds `accel::sparse`).
+    pub fn stats(&self) -> SparseStats {
+        self.stats
+    }
+
+    /// One sparse datapath step on activation-format codes. Same
+    /// signature as `QGruDpd::step_codes` so differential tests can
+    /// drive both.
+    pub fn step_codes(&mut self, iq: [i32; 2]) -> [i32; 2] {
+        let act_spec = self.w.profile.act;
+        let fa = act_spec.frac();
+        let f_ih = self.w.profile.w_ih.frac();
+        let f_hh = self.w.profile.w_hh.frac();
+        let f_fc = self.w.profile.w_fc.frac();
+        let hd = self.w.hidden;
+        let k = self.kernel;
+        let one = 1i64 << fa;
+        let x = features_codes(act_spec, iq);
+
+        // delta pass over the input feature columns: only surviving
+        // CSC entries are touched, so a pruned weight costs no MAC
+        for (c, &xv) in x.iter().enumerate() {
+            let d = xv - self.st.x_prev[c];
+            if exceeds_theta(d, self.theta) {
+                let (lo, hi) = (self.w.ih_ptr[c], self.w.ih_ptr[c + 1]);
+                k.sparse_delta_axpy_i64(
+                    &mut self.st.acc_ih,
+                    &self.w.ih_rows[lo..hi],
+                    &self.w.ih_vals[lo..hi],
+                    d,
+                );
+                self.st.x_prev[c] = xv;
+                self.stats.in_updates += 1;
+                self.stats.gate_macs += (hi - lo) as u64;
+            }
+        }
+        // delta pass over the hidden columns
+        for c in 0..hd {
+            let d = self.st.h[c] - self.st.h_prev[c];
+            if exceeds_theta(d, self.theta) {
+                let (lo, hi) = (self.w.hh_ptr[c], self.w.hh_ptr[c + 1]);
+                k.sparse_delta_axpy_i64(
+                    &mut self.st.acc_hh,
+                    &self.w.hh_rows[lo..hi],
+                    &self.w.hh_vals[lo..hi],
+                    d,
+                );
+                self.st.h_prev[c] = self.st.h[c];
+                self.stats.hid_updates += 1;
+                self.stats.gate_macs += (hi - lo) as u64;
+            }
+        }
+        self.stats.steps += 1;
+        self.stats.in_cols += self.w.features as u64;
+        self.stats.hid_cols += hd as u64;
+        self.stats.dense_gate_macs += (3 * hd * (self.w.features + hd)) as u64;
+
+        // readout: requantize each carried accumulator by its tensor's
+        // weight fraction, back into the activation domain
+        k.requantize_block_i64(&self.st.acc_ih, f_ih, act_spec, &mut self.gi);
+        k.requantize_block_i64(&self.st.acc_hh, f_hh, act_spec, &mut self.gh);
+
+        // gates — the dense chain in the activation format (wide form,
+        // identical to DeltaQGruDpd's)
+        for j in 0..hd {
+            let r = sigmoid_code(
+                &self.act,
+                act_spec,
+                saturate_i64(self.gi[j] as i64 + self.gh[j] as i64, act_spec),
+            );
+            let z = sigmoid_code(
+                &self.act,
+                act_spec,
+                saturate_i64(self.gi[hd + j] as i64 + self.gh[hd + j] as i64, act_spec),
+            );
+            let rh = requantize(r as i64 * self.gh[2 * hd + j] as i64, fa, act_spec);
+            let n = tanh_code(
+                &self.act,
+                act_spec,
+                saturate_i64(self.gi[2 * hd + j] as i64 + rh as i64, act_spec),
+            );
+            let zn = rshift_round((one - z as i64) * n as i64, fa);
+            let zh = rshift_round(z as i64 * self.st.h[j] as i64, fa);
+            self.st.h[j] = saturate_i64(zn + zh, act_spec);
+        }
+
+        // FC + residual, dense (2 × H — no sparsity leverage there);
+        // weights in the FC format, requantized by its fraction
+        let mut y = [0i32; 2];
+        for (o, out) in y.iter_mut().enumerate() {
+            let row = &self.w.w_fc[o * hd..(o + 1) * hd];
+            let mut acc = (self.w.b_fc[o] as i64) << f_fc;
+            for (wv, hv) in row.iter().zip(&self.st.h) {
+                acc += *wv as i64 * *hv as i64;
+            }
+            let fc = requantize(acc, f_fc, act_spec);
+            *out = saturate_i64(fc as i64 + iq[o] as i64, act_spec);
+        }
+        y
+    }
+
+    /// Run a whole burst of codes (resets state first).
+    pub fn run_codes(&mut self, iq: &[[i32; 2]]) -> Vec<[i32; 2]> {
+        self.reset();
+        iq.iter().map(|&s| self.step_codes(s)).collect()
+    }
+}
+
+impl<K: GateKernel> Dpd for SparseMpGruDpd<K> {
+    fn process(&mut self, iq: [f64; 2]) -> [f64; 2] {
+        let act_spec = self.w.profile.act;
+        let codes = [act_spec.quantize(iq[0]), act_spec.quantize(iq[1])];
+        let y = self.step_codes(codes);
+        [act_spec.dequantize(y[0]), act_spec.dequantize(y[1])]
+    }
+
+    fn reset(&mut self) {
+        // activity counters survive (they track total work)
+        self.st = Self::fresh_state(&self.w);
+    }
+
+    fn name(&self) -> &'static str {
+        "sparse-mp-qgru"
+    }
+
+    fn save_state(&self) -> DpdState {
+        DpdState::DeltaI32(self.st.clone())
+    }
+
+    fn load_state(&mut self, state: &DpdState) -> Result<()> {
+        match state {
+            DpdState::DeltaI32(s)
+                if s.h.len() == self.w.hidden
+                    && s.h_prev.len() == self.w.hidden
+                    && s.x_prev.len() == self.w.features
+                    && s.acc_ih.len() == 3 * self.w.hidden
+                    && s.acc_hh.len() == 3 * self.w.hidden =>
+            {
+                self.st = s.clone();
+                Ok(())
+            }
+            other => bail!(
+                "{}: incompatible state snapshot ({}) for hidden={}",
+                self.name(),
+                other.kind(),
+                self.w.hidden
+            ),
+        }
+    }
+
+    fn batch_fingerprint(&self) -> Option<u64> {
+        // the weight fingerprint already covers profile + ρ + mask +
+        // codes; θ joins it like the delta engine's
+        let base = super::qgru::act_fingerprint(&self.act, self.w.fingerprint());
+        Some(fnv1a_words("sparse-mp-theta", [base, self.theta as u64]))
+    }
+
+    // process_lanes: the sequential default is exact because the
+    // snapshot round-trips the entire delta state (h + v_prev +
+    // accumulators) — same argument as DeltaQGruDpd's.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpd::qgru::{DeltaQGruDpd, QGruDpd};
+    use crate::dpd::weights::{GruWeights, QGruWeights};
+    use crate::dpd::DpdLane;
+    use crate::fixed::{QProfile, QSpec};
+    use crate::util::proptest::check;
+    use crate::util::Rng;
+
+    fn rand_stream(rng: &mut Rng, n: usize) -> Vec<[f64; 2]> {
+        (0..n).map(|_| [rng.range(-0.9, 0.9), rng.range(-0.9, 0.9)]).collect()
+    }
+
+    #[test]
+    fn uniform_rho0_theta0_is_bit_identical_to_dense() {
+        check("sparse rho=0 == dense", 30, |rng| {
+            let seed = rng.next_u64();
+            let qw = QGruWeights::synthetic(seed, QSpec::Q12);
+            let mut dense = QGruDpd::new(qw.clone(), ActKind::Hard);
+            let mut sparse = SparseMpGruDpd::new(qw.to_sparse(0), ActKind::Hard, 0);
+            let x = rand_stream(rng, 64);
+            for (t, &s) in x.iter().enumerate() {
+                let a = dense.process(s);
+                let b = sparse.process(s);
+                if a != b {
+                    return Err(format!("seed {seed}: diverged at t={t}: {a:?} vs {b:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn uniform_rho0_matches_the_delta_engine_at_any_theta() {
+        check("sparse rho=0 == delta @theta", 20, |rng| {
+            let seed = rng.next_u64();
+            let theta = rng.int_in(0, 64) as u32;
+            let qw = QGruWeights::synthetic(seed, QSpec::Q12);
+            let mut delta = DeltaQGruDpd::new(qw.clone(), ActKind::Hard, theta);
+            let mut sparse = SparseMpGruDpd::new(qw.to_sparse(0), ActKind::Hard, theta);
+            let x = rand_stream(rng, 96);
+            for (t, &s) in x.iter().enumerate() {
+                let a = delta.process(s);
+                let b = sparse.process(s);
+                if a != b {
+                    return Err(format!(
+                        "seed {seed} theta={theta}: diverged at t={t}: {a:?} vs {b:?}"
+                    ));
+                }
+            }
+            // same fire decisions -> same update counts
+            let (ds, ss) = (delta.stats(), sparse.stats());
+            if (ds.in_updates, ds.hid_updates) != (ss.in_updates, ss.hid_updates) {
+                return Err(format!("seed {seed}: fire counts diverged"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pruning_reduces_gate_macs_proportionally() {
+        let qw = QGruWeights::synthetic(7, QSpec::Q12);
+        let mut rng = Rng::new(99);
+        let x = rand_stream(&mut rng, 200);
+        let mut dense0 = SparseMpGruDpd::new(qw.to_sparse(0), ActKind::Hard, 0);
+        let mut pruned = SparseMpGruDpd::new(qw.to_sparse(50), ActKind::Hard, 0);
+        for &s in &x {
+            dense0.process(s);
+            pruned.process(s);
+        }
+        let (s0, s1) = (dense0.stats(), pruned.stats());
+        assert_eq!(s0.steps, 200);
+        assert!(s1.gate_macs * 2 <= s0.dense_gate_macs, "rho=50 must halve gate MACs");
+        assert!(s1.mac_ratio() < s0.mac_ratio());
+        assert!(s0.mac_ratio() <= 1.0);
+    }
+
+    #[test]
+    fn mixed_precision_profile_still_linearizes_reasonably() {
+        // W8A12 on the same codes: not bit-identical to dense, but the
+        // output must stay close (narrow weights, same activations) —
+        // a sanity floor; the real quality accounting is the Pareto
+        // golden test.
+        let w = GruWeights::synthetic(13);
+        let qw = w.quantize(QSpec::Q12).unwrap();
+        let sw = w.prune_quantize(QProfile::wa(8, 12).unwrap(), 0).unwrap();
+        let mut dense = QGruDpd::new(qw, ActKind::Hard);
+        let mut mp = SparseMpGruDpd::new(sw, ActKind::Hard, 0);
+        let mut rng = Rng::new(5);
+        let x = rand_stream(&mut rng, 256);
+        let mut err = 0.0f64;
+        let mut pow = 0.0f64;
+        for &s in &x {
+            let a = dense.process(s);
+            let b = mp.process(s);
+            err += (a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2);
+            pow += a[0].powi(2) + a[1].powi(2);
+        }
+        let nmse_db = 10.0 * (err / pow).log10();
+        assert!(nmse_db < -20.0, "W8A12 deviates too much from dense: {nmse_db:.1} dB");
+    }
+
+    #[test]
+    fn state_roundtrip_is_exact_mid_stream() {
+        let qw = QGruWeights::synthetic(4, QSpec::Q12);
+        let sw = qw.to_sparse(40);
+        let mut rng = Rng::new(8);
+        let x = rand_stream(&mut rng, 120);
+        // uninterrupted reference
+        let mut a = SparseMpGruDpd::new(sw.clone(), ActKind::Hard, 24);
+        let want: Vec<[f64; 2]> = x.iter().map(|&s| a.process(s)).collect();
+        // interrupted: snapshot + restore across a fresh engine
+        let mut b1 = SparseMpGruDpd::new(sw.clone(), ActKind::Hard, 24);
+        let mut got: Vec<[f64; 2]> = x[..60].iter().map(|&s| b1.process(s)).collect();
+        let snap = b1.save_state();
+        let mut b2 = SparseMpGruDpd::new(sw, ActKind::Hard, 24);
+        b2.load_state(&snap).unwrap();
+        got.extend(x[60..].iter().map(|&s| b2.process(s)));
+        assert_eq!(got, want, "state snapshot must round-trip exactly");
+    }
+
+    #[test]
+    fn batched_lanes_match_solo_processing() {
+        let qw = QGruWeights::synthetic(19, QSpec::Q12);
+        let sw = qw.to_sparse(50);
+        let mut rng = Rng::new(3);
+        let mut streams: Vec<Vec<[f64; 2]>> =
+            (0..3).map(|_| rand_stream(&mut rng, 80)).collect();
+        // solo references
+        let want: Vec<Vec<[f64; 2]>> = streams
+            .iter()
+            .map(|s| {
+                let mut e = SparseMpGruDpd::new(sw.clone(), ActKind::Hard, 16);
+                s.iter().map(|&v| e.process(v)).collect()
+            })
+            .collect();
+        // batched over the sequential default
+        let mut e = SparseMpGruDpd::new(sw.clone(), ActKind::Hard, 16);
+        let mut states: Vec<DpdState> = (0..3)
+            .map(|_| DpdState::DeltaI32(SparseMpGruDpd::<ScalarKernel>::fresh_state(&sw)))
+            .collect();
+        let mut lanes: Vec<DpdLane> = streams
+            .iter_mut()
+            .zip(states.iter_mut())
+            .map(|(iq, state)| DpdLane { iq, state })
+            .collect();
+        e.process_lanes(&mut lanes).unwrap();
+        for (got, want) in streams.iter().zip(&want) {
+            assert_eq!(got, want, "batched lane diverged from solo");
+        }
+    }
+
+    #[test]
+    fn batch_fingerprint_separates_theta_and_mask() {
+        let qw = QGruWeights::synthetic(2, QSpec::Q12);
+        let fp = |rho: u8, theta: u32| {
+            SparseMpGruDpd::new(qw.to_sparse(rho), ActKind::Hard, theta)
+                .batch_fingerprint()
+                .unwrap()
+        };
+        assert_eq!(fp(0, 0), fp(0, 0));
+        assert_ne!(fp(0, 0), fp(0, 32), "theta is part of the identity");
+        assert_ne!(fp(0, 0), fp(50, 0), "the mask is part of the identity");
+        // and the sparse family never collides with the dense engine's
+        let dense = QGruDpd::new(qw.clone(), ActKind::Hard);
+        assert_ne!(fp(0, 0), dense.batch_fingerprint().unwrap());
+    }
+}

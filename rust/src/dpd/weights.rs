@@ -5,8 +5,35 @@ use std::path::Path;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::fixed::QSpec;
+use crate::fixed::{QProfile, QSpec};
 use crate::util::json::Json;
+
+/// A weight tensor holding NaN/±inf — what a diverged [`AdaptTrainer`]
+/// (`dpd::adapt`) produces. Quantizing such a tensor silently maps NaN
+/// to code 0 (the NaN-propagating `clamp` + `as i32` cast), so the
+/// quantization bridge screens for it and refuses with this typed
+/// error instead of hot-swapping an all-zero-ish engine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NonFiniteWeightError {
+    /// which tensor diverged (`"w_ih"`, `"b_fc"`, ...)
+    pub tensor: &'static str,
+    /// flat index of the first offending element
+    pub index: usize,
+    /// the offending value (NaN or ±inf)
+    pub value: f64,
+}
+
+impl std::fmt::Display for NonFiniteWeightError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "non-finite weight {}[{}] = {} — refusing to quantize (diverged trainer?)",
+            self.tensor, self.index, self.value
+        )
+    }
+}
+
+impl std::error::Error for NonFiniteWeightError {}
 
 /// Float GRU-DPD weights. Gate row order is [r; z; n] (rows 0..H,
 /// H..2H, 2H..3H) — the PyTorch convention the whole project uses.
@@ -141,11 +168,37 @@ impl GruWeights {
         crate::util::fnv1a_words("gru-f64", words)
     }
 
+    /// Screen every tensor for NaN/±inf, naming the first offender.
+    /// The precondition of [`GruWeights::quantize`] and
+    /// [`GruWeights::prune_quantize`].
+    pub fn check_finite(&self) -> std::result::Result<(), NonFiniteWeightError> {
+        let tensors: [(&'static str, &[f64]); 6] = [
+            ("w_ih", &self.w_ih),
+            ("b_ih", &self.b_ih),
+            ("w_hh", &self.w_hh),
+            ("b_hh", &self.b_hh),
+            ("w_fc", &self.w_fc),
+            ("b_fc", &self.b_fc),
+        ];
+        for (tensor, data) in tensors {
+            if let Some((index, &value)) =
+                data.iter().enumerate().find(|(_, v)| !v.is_finite())
+            {
+                return Err(NonFiniteWeightError { tensor, index, value });
+            }
+        }
+        Ok(())
+    }
+
     /// Quantize to Q2.f codes with the canonical round-half-up rule —
-    /// bit-identical to python `ref.quantize_params`.
-    pub fn quantize(&self, spec: QSpec) -> QGruWeights {
+    /// bit-identical to python `ref.quantize_params`. Rejects
+    /// non-finite weights with a typed error: NaN otherwise casts to
+    /// code 0, and an adaptation hot-swap must fail loudly rather
+    /// than deploy a silently-zeroed engine.
+    pub fn quantize(&self, spec: QSpec) -> std::result::Result<QGruWeights, NonFiniteWeightError> {
+        self.check_finite()?;
         let q = |v: &[f64]| -> Vec<i32> { v.iter().map(|&x| spec.quantize(x)).collect() };
-        QGruWeights {
+        Ok(QGruWeights {
             hidden: self.hidden,
             features: self.features,
             spec,
@@ -155,7 +208,34 @@ impl GruWeights {
             b_hh: q(&self.b_hh),
             w_fc: q(&self.w_fc),
             b_fc: q(&self.b_fc),
-        }
+        })
+    }
+
+    /// Magnitude-prune + mixed-precision quantize into the compressed
+    /// sparse-gate form (SparseDPD × MP-DPD): quantize each tensor in
+    /// its [`QProfile`] format, then drop the ⌊ρ% · N⌋
+    /// smallest-magnitude codes per gate tensor. Defined as
+    /// `SparseQGruWeights::from_dense ∘ quantize` so the float and
+    /// pre-quantized construction paths can never disagree.
+    pub fn prune_quantize(
+        &self,
+        profile: QProfile,
+        rho: u8,
+    ) -> std::result::Result<SparseQGruWeights, NonFiniteWeightError> {
+        self.check_finite()?;
+        let q = |v: &[f64], s: QSpec| -> Vec<i32> { v.iter().map(|&x| s.quantize(x)).collect() };
+        Ok(SparseQGruWeights::from_parts(
+            self.hidden,
+            self.features,
+            profile,
+            rho,
+            &q(&self.w_ih, profile.w_ih),
+            q(&self.b_ih, profile.act),
+            &q(&self.w_hh, profile.w_hh),
+            q(&self.b_hh, profile.act),
+            q(&self.w_fc, profile.w_fc),
+            q(&self.b_fc, profile.act),
+        ))
     }
 }
 
@@ -243,6 +323,191 @@ impl QGruWeights {
         };
         Ok((w, j))
     }
+
+    /// Prune + re-profile pre-quantized codes into the sparse form.
+    /// `spec` becomes the uniform profile, so `from_dense(qw, 0)`
+    /// computes exactly `qw`'s function — the `fixed+sparse:0` ≡
+    /// `fixed` conformance contract.
+    pub fn to_sparse(&self, rho: u8) -> SparseQGruWeights {
+        SparseQGruWeights::from_parts(
+            self.hidden,
+            self.features,
+            QProfile::uniform(self.spec),
+            rho,
+            &self.w_ih,
+            self.b_ih.clone(),
+            &self.w_hh,
+            self.b_hh.clone(),
+            self.w_fc.clone(),
+            self.b_fc.clone(),
+        )
+    }
+}
+
+/// Deterministic magnitude-pruning mask: `true` marks the ⌊ρ% · N⌋
+/// entries to drop — the smallest by (|code|, index), the total order
+/// that makes the mask reproducible in the Python mirror
+/// (`gen_golden_pareto.py::prune_mask`).
+pub fn prune_mask(codes: &[i32], rho: u8) -> Vec<bool> {
+    let k = codes.len() * (rho.min(100) as usize) / 100;
+    let mut order: Vec<usize> = (0..codes.len()).collect();
+    order.sort_by_key(|&i| (codes[i].unsigned_abs(), i));
+    let mut pruned = vec![false; codes.len()];
+    for &i in &order[..k] {
+        pruned[i] = true;
+    }
+    pruned
+}
+
+/// Build one CSC tensor: per column `c`, the surviving entries are
+/// `rows[ptr[c]..ptr[c+1]]` / `vals[..]`. An entry survives iff it is
+/// unpruned AND nonzero — eliding a zero code is exact (its product
+/// contributes nothing), so `rho = 0` sparse storage still computes
+/// the dense function bit for bit.
+fn csc_from_dense(
+    w: &[i32],
+    rows: usize,
+    cols: usize,
+    pruned: &[bool],
+) -> (Vec<usize>, Vec<u16>, Vec<i32>) {
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert!(rows <= u16::MAX as usize + 1);
+    let mut ptr = Vec::with_capacity(cols + 1);
+    let mut out_rows = Vec::new();
+    let mut out_vals = Vec::new();
+    ptr.push(0);
+    for c in 0..cols {
+        for r in 0..rows {
+            let idx = r * cols + c;
+            if !pruned[idx] && w[idx] != 0 {
+                out_rows.push(r as u16);
+                out_vals.push(w[idx]);
+            }
+        }
+        ptr.push(out_rows.len());
+    }
+    (ptr, out_rows, out_vals)
+}
+
+/// Pruned, mixed-precision GRU weights in compressed sparse-column
+/// form — the storage format of the SparseDPD/MP-DPD engine family
+/// (`dpd::sparse::SparseMpGruDpd`).
+///
+/// The gate tensors W_ih (3H × F) and W_hh (3H × H) are stored as one
+/// CSC list per *input column* — exactly the access pattern of the
+/// delta/dense column-update loop (`acc[r] += w[r][c] · x[c]`), so a
+/// pruned weight costs no MAC and no storage. Biases and the tiny FC
+/// head (2 × H) stay dense. Weight codes are in each tensor's
+/// [`QProfile`] format; biases in the activation format.
+#[derive(Clone, Debug)]
+pub struct SparseQGruWeights {
+    pub hidden: usize,
+    pub features: usize,
+    pub profile: QProfile,
+    /// requested prune fraction, percent (part of the identity: the
+    /// same surviving codes under a different ρ request are still a
+    /// different deployment intent)
+    pub rho: u8,
+    /// CSC of W_ih: column `c` of `features` holds rows
+    /// `ih_rows[ih_ptr[c]..ih_ptr[c+1]]` (row indices in 0..3H)
+    pub ih_ptr: Vec<usize>,
+    pub ih_rows: Vec<u16>,
+    pub ih_vals: Vec<i32>,
+    /// CSC of W_hh: `hidden` columns of row indices in 0..3H
+    pub hh_ptr: Vec<usize>,
+    pub hh_rows: Vec<u16>,
+    pub hh_vals: Vec<i32>,
+    pub b_ih: Vec<i32>,
+    pub b_hh: Vec<i32>,
+    /// (2, H) row-major, dense
+    pub w_fc: Vec<i32>,
+    pub b_fc: Vec<i32>,
+}
+
+impl SparseQGruWeights {
+    /// Shared construction funnel: prune each dense gate tensor by
+    /// magnitude, compress to CSC. Used by both the float path
+    /// ([`GruWeights::prune_quantize`]) and the pre-quantized path
+    /// ([`QGruWeights::to_sparse`]).
+    #[allow(clippy::too_many_arguments)]
+    fn from_parts(
+        hidden: usize,
+        features: usize,
+        profile: QProfile,
+        rho: u8,
+        w_ih: &[i32],
+        b_ih: Vec<i32>,
+        w_hh: &[i32],
+        b_hh: Vec<i32>,
+        w_fc: Vec<i32>,
+        b_fc: Vec<i32>,
+    ) -> SparseQGruWeights {
+        let rows = 3 * hidden;
+        let (ih_ptr, ih_rows, ih_vals) =
+            csc_from_dense(w_ih, rows, features, &prune_mask(w_ih, rho));
+        let (hh_ptr, hh_rows, hh_vals) =
+            csc_from_dense(w_hh, rows, hidden, &prune_mask(w_hh, rho));
+        SparseQGruWeights {
+            hidden,
+            features,
+            profile,
+            rho,
+            ih_ptr,
+            ih_rows,
+            ih_vals,
+            hh_ptr,
+            hh_rows,
+            hh_vals,
+            b_ih,
+            b_hh,
+            w_fc,
+            b_fc,
+        }
+    }
+
+    /// Surviving gate entries (= MACs per fired column-update, summed
+    /// over all columns) — what the accel cost model prices.
+    pub fn gate_nnz(&self) -> usize {
+        self.ih_vals.len() + self.hh_vals.len()
+    }
+
+    /// Dense gate entry count, for sparsity ratios.
+    pub fn gate_dense(&self) -> usize {
+        3 * self.hidden * (self.features + self.hidden)
+    }
+
+    /// Content fingerprint over the profile, ρ, the sparsity pattern
+    /// (CSC pointers + row indices) and every surviving code — the
+    /// batch class of the sparse engine family. Two engines coalesce
+    /// only when mask, bitwidths and weights all agree.
+    pub fn fingerprint(&self) -> u64 {
+        let head = [
+            self.profile.w_ih.bits as u64,
+            self.profile.w_hh.bits as u64,
+            self.profile.w_fc.bits as u64,
+            self.profile.act.bits as u64,
+            self.rho as u64,
+            self.hidden as u64,
+            self.features as u64,
+        ];
+        let words = head
+            .into_iter()
+            .chain(self.ih_ptr.iter().map(|&v| v as u64))
+            .chain(self.ih_rows.iter().map(|&v| v as u64))
+            .chain(self.ih_vals.iter().map(|&v| v as u32 as u64))
+            .chain(self.hh_ptr.iter().map(|&v| v as u64))
+            .chain(self.hh_rows.iter().map(|&v| v as u64))
+            .chain(self.hh_vals.iter().map(|&v| v as u32 as u64))
+            .chain(
+                self.b_ih
+                    .iter()
+                    .chain(&self.b_hh)
+                    .chain(&self.w_fc)
+                    .chain(&self.b_fc)
+                    .map(|&v| v as u32 as u64),
+            );
+        crate::util::fnv1a_words("sparse-mp", words)
+    }
 }
 
 #[cfg(test)]
@@ -294,10 +559,98 @@ mod tests {
         std::fs::write(&path, fake_weights_json(10, 4)).unwrap();
         let w = GruWeights::load(&path).unwrap();
         let spec = QSpec::Q12;
-        let qw = w.quantize(spec);
+        let qw = w.quantize(spec).unwrap();
         for (f, q) in w.w_ih.iter().zip(&qw.w_ih) {
             assert_eq!(*q, spec.quantize(*f));
         }
+    }
+
+    #[test]
+    fn quantize_rejects_non_finite_weights_with_a_typed_error() {
+        // Regression: NaN weights used to quantize silently to code 0
+        // (the NaN-propagating clamp + `as i32` cast); the bridge must
+        // refuse instead, naming the offending tensor/element.
+        let mut w = GruWeights::synthetic(9);
+        assert!(w.check_finite().is_ok());
+        w.w_hh[17] = f64::NAN;
+        let err = w.quantize(QSpec::Q12).unwrap_err();
+        assert_eq!(err.tensor, "w_hh");
+        assert_eq!(err.index, 17);
+        assert!(err.value.is_nan());
+        assert!(err.to_string().contains("w_hh[17]"), "{err}");
+        // ±inf is rejected the same way, in any tensor
+        let mut w2 = GruWeights::synthetic(9);
+        w2.b_fc[1] = f64::INFINITY;
+        let err2 = w2.quantize(QSpec::Q12).unwrap_err();
+        assert_eq!((err2.tensor, err2.index), ("b_fc", 1));
+        // prune_quantize shares the screen
+        assert!(w2.prune_quantize(QProfile::uniform(QSpec::Q12), 50).is_err());
+    }
+
+    #[test]
+    fn prune_mask_drops_the_smallest_magnitudes_deterministically() {
+        let codes = [5, -1, 0, 7, -3, 2, 0, -7];
+        // rho=50% of 8 -> 4 pruned: |0|@2, |0|@6, |-1|@1, |2|@5
+        let mask = prune_mask(&codes, 50);
+        assert_eq!(mask, [false, true, true, false, false, true, true, false]);
+        // ties broken by index: equal |.|=7 keeps both at rho=50
+        assert_eq!(prune_mask(&codes, 0), [false; 8]);
+        let all = prune_mask(&codes, 100);
+        assert!(all.iter().all(|&p| p));
+    }
+
+    #[test]
+    fn sparse_csc_stores_exactly_the_surviving_nonzero_codes() {
+        let qw = QGruWeights::synthetic(3, QSpec::Q12);
+        let sw = qw.to_sparse(0);
+        assert_eq!(sw.profile, QProfile::uniform(QSpec::Q12));
+        assert_eq!(sw.ih_ptr.len(), qw.features + 1);
+        assert_eq!(sw.hh_ptr.len(), qw.hidden + 1);
+        // rho=0: every nonzero code survives, at its exact position
+        let rows = 3 * qw.hidden;
+        let nonzero_ih = qw.w_ih.iter().filter(|&&v| v != 0).count();
+        assert_eq!(sw.ih_vals.len(), nonzero_ih);
+        for c in 0..qw.features {
+            for k in sw.ih_ptr[c]..sw.ih_ptr[c + 1] {
+                let r = sw.ih_rows[k] as usize;
+                assert!(r < rows);
+                assert_eq!(sw.ih_vals[k], qw.w_ih[r * qw.features + c]);
+            }
+        }
+        // rho=50 halves the stored gate entries (up to zero-code elision)
+        let half = qw.to_sparse(50);
+        let dense_n = qw.w_ih.len() + qw.w_hh.len();
+        assert!(half.gate_nnz() <= dense_n - dense_n / 2);
+        assert!(half.gate_nnz() < sw.gate_nnz());
+        assert_eq!(half.gate_dense(), dense_n);
+    }
+
+    #[test]
+    fn sparse_fingerprint_separates_mask_profile_and_rho() {
+        let w = GruWeights::synthetic(5);
+        let base = w.prune_quantize(QProfile::uniform(QSpec::Q12), 0).unwrap();
+        let same = w.prune_quantize(QProfile::uniform(QSpec::Q12), 0).unwrap();
+        assert_eq!(base.fingerprint(), same.fingerprint());
+        // different rho -> different mask and class
+        let pruned = w.prune_quantize(QProfile::uniform(QSpec::Q12), 50).unwrap();
+        assert_ne!(base.fingerprint(), pruned.fingerprint());
+        // different weight bitwidth -> different class
+        let mp = w.prune_quantize(QProfile::wa(8, 12).unwrap(), 0).unwrap();
+        assert_ne!(base.fingerprint(), mp.fingerprint());
+        // same codes, different declared rho -> still a different class
+        let mut relabeled = base.clone();
+        relabeled.rho = 1;
+        assert_ne!(base.fingerprint(), relabeled.fingerprint());
+    }
+
+    #[test]
+    fn float_and_prequantized_sparse_paths_agree() {
+        // prune_quantize == to_sparse ∘ quantize on uniform profiles —
+        // the funnel contract
+        let w = GruWeights::synthetic(11);
+        let via_float = w.prune_quantize(QProfile::uniform(QSpec::Q12), 30).unwrap();
+        let via_codes = w.quantize(QSpec::Q12).unwrap().to_sparse(30);
+        assert_eq!(via_float.fingerprint(), via_codes.fingerprint());
     }
 
     #[test]

@@ -68,6 +68,24 @@ pub trait GateKernel: Copy + Send + Sync + 'static {
     /// ([`requantize_block_i64`] semantics: saturating rounding bias,
     /// arithmetic shift, clamp).
     fn requantize_block_i64(&self, acc: &[i64], s: u32, spec: QSpec, out: &mut [i32]);
+
+    /// The sparse column update `acc[rows[k]] += vals[k] * d` in exact
+    /// i64 arithmetic — the compressed-column twin of
+    /// [`GateKernel::delta_axpy_i64`], consumed by the SparseDPD-style
+    /// engine (`dpd::sparse`). `rows`/`vals` are one CSC column's
+    /// surviving (unpruned, nonzero) entries; every row index must be
+    /// in bounds. The default scalar gather is the reference — exact
+    /// i64 adds are order-independent, so any override is bit-exact by
+    /// construction; a vector gather/scatter rarely pays off at these
+    /// column lengths (≤ 3H = 30), which is why both kernels inherit
+    /// this body today.
+    #[inline]
+    fn sparse_delta_axpy_i64(&self, acc: &mut [i64], rows: &[u16], vals: &[i32], d: i32) {
+        debug_assert_eq!(rows.len(), vals.len());
+        for (&r, &w) in rows.iter().zip(vals) {
+            acc[r as usize] += w as i64 * d as i64;
+        }
+    }
 }
 
 /// The portable reference kernel — the canonical scalar loops.
@@ -421,6 +439,12 @@ mod tests {
                 KernelOps::Simd(k) => k.delta_axpy_i64(acc, w, d),
             }
         }
+        fn sparse_delta_axpy_i64(&self, acc: &mut [i64], rows: &[u16], vals: &[i32], d: i32) {
+            match self {
+                KernelOps::Scalar(k) => k.sparse_delta_axpy_i64(acc, rows, vals, d),
+                KernelOps::Simd(k) => k.sparse_delta_axpy_i64(acc, rows, vals, d),
+            }
+        }
         fn requantize_block_i32(&self, acc: &[i32], s: u32, spec: QSpec, out: &mut [i32]) {
             match self {
                 KernelOps::Scalar(k) => k.requantize_block_i32(acc, s, spec, out),
@@ -473,6 +497,44 @@ mod tests {
                 let mut want = acc.clone();
                 ScalarKernel.delta_axpy_i64(&mut want, &w, d);
                 k.delta_axpy_i64(&mut acc, &w, d);
+                if acc != want {
+                    return Err(format!("n={n} d={d} diverged"));
+                }
+                Ok(())
+            });
+        });
+    }
+
+    #[test]
+    fn every_kernel_sparse_update_equals_the_dense_delta_axpy() {
+        // Contract: a CSC column's gather update must equal the dense
+        // delta_axpy over the same column with the pruned entries set
+        // to zero — the bit-exactness bridge the sparse engine's
+        // parity rows rely on.
+        for_each_kernel(|label, mk| {
+            check(&format!("{label} sparse_delta_axpy_i64 vs dense"), 200, |rng| {
+                let k = mk();
+                let n = rng.int_in(0, 67) as usize;
+                let dense: Vec<i32> = (0..n)
+                    .map(|_| {
+                        if rng.below(3) == 0 {
+                            0
+                        } else {
+                            rng.int_in(-2048, 2047) as i32
+                        }
+                    })
+                    .collect();
+                let rows: Vec<u16> = (0..n)
+                    .filter(|&r| dense[r] != 0)
+                    .map(|r| r as u16)
+                    .collect();
+                let vals: Vec<i32> = rows.iter().map(|&r| dense[r as usize]).collect();
+                let mut acc: Vec<i64> =
+                    (0..n).map(|_| rng.int_in(-(1 << 50), 1 << 50)).collect();
+                let d = rng.int_in(-4096, 4096) as i32;
+                let mut want = acc.clone();
+                ScalarKernel.delta_axpy_i64(&mut want, &dense, d);
+                k.sparse_delta_axpy_i64(&mut acc, &rows, &vals, d);
                 if acc != want {
                     return Err(format!("n={n} d={d} diverged"));
                 }

@@ -10,8 +10,10 @@
 
 pub mod kernel;
 pub mod ops;
+pub mod qprofile;
 pub mod qspec;
 
 pub use kernel::{GateKernel, ScalarKernel, SimdKernel, SimdPolicy};
 pub use ops::{rshift_round, saturate_i64};
+pub use qprofile::QProfile;
 pub use qspec::QSpec;

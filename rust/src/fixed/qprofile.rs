@@ -1,0 +1,145 @@
+//! Per-tensor mixed-precision profile (MP-DPD, arXiv:2404.15364).
+//!
+//! One [`QSpec`] per weight tensor plus one for the activation/stream
+//! domain. The datapath contract (implemented by
+//! `dpd::sparse::SparseMpGruDpd`): activations, biases and I/Q codes
+//! live in the activation format `act` (Q2.fa), each weight tensor in
+//! its own format (Q2.fw), products accumulate in the fa+fw domain,
+//! and every matvec requantizes by the *weight* fraction back into
+//! the activation domain:
+//!
+//! ```text
+//!   acc = (b_code(fa) << fw) + Σ w_code(fw) · x_code(fa)
+//!   gate_code = rshift_round(acc, fw) saturated to act
+//! ```
+//!
+//! With every spec equal this degenerates, bit for bit, to the
+//! uniform-[`QSpec`] datapath (`dpd::qgru`) — the equivalence the
+//! conformance matrix pins.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use super::QSpec;
+
+/// Mixed-precision quantization profile: one format per weight
+/// tensor, one for the activation/stream domain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QProfile {
+    /// input-to-hidden gate weights W_ih
+    pub w_ih: QSpec,
+    /// hidden-to-hidden gate weights W_hh
+    pub w_hh: QSpec,
+    /// output FC weights W_fc
+    pub w_fc: QSpec,
+    /// activations, biases, hidden state, and the I/Q stream
+    pub act: QSpec,
+}
+
+impl QProfile {
+    /// Every tensor in one format — the profile equivalent of today's
+    /// uniform `QSpec` datapath.
+    pub fn uniform(spec: QSpec) -> QProfile {
+        QProfile { w_ih: spec, w_hh: spec, w_fc: spec, act: spec }
+    }
+
+    /// The `W{w}A{a}` shorthand from the engine-spec grammar: all
+    /// three weight tensors at `wbits`, activations at `abits`.
+    pub fn wa(wbits: u32, abits: u32) -> Result<QProfile> {
+        let w = QSpec::new(wbits)?;
+        let a = QSpec::new(abits)?;
+        if wbits > abits {
+            bail!("W{wbits}A{abits}: weight width must not exceed activation width");
+        }
+        Ok(QProfile { w_ih: w, w_hh: w, w_fc: w, act: a })
+    }
+
+    /// True when every tensor shares one format (the uniform-QSpec
+    /// equivalence domain).
+    pub fn is_uniform(&self) -> bool {
+        self.w_ih == self.act && self.w_hh == self.act && self.w_fc == self.act
+    }
+
+    /// The common weight width when all three weight tensors agree
+    /// (always true for profiles built by [`QProfile::wa`] /
+    /// [`QProfile::uniform`]).
+    pub fn weight_bits(&self) -> Option<u32> {
+        if self.w_ih == self.w_hh && self.w_hh == self.w_fc {
+            Some(self.w_ih.bits)
+        } else {
+            None
+        }
+    }
+
+    /// Parse the `W{w}A{a}` shorthand (e.g. `W4A12`).
+    pub fn parse_wa(s: &str) -> Result<QProfile> {
+        let rest = match s.strip_prefix('W') {
+            Some(r) => r,
+            None => bail!("bad quantization profile '{s}' (want W<wbits>A<abits>, e.g. W4A12)"),
+        };
+        let (w, a) = match rest.split_once('A') {
+            Some((w, a)) if !w.is_empty() && !a.is_empty() => (w, a),
+            _ => bail!("bad quantization profile '{s}' (want W<wbits>A<abits>, e.g. W4A12)"),
+        };
+        let wbits: u32 = w
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad weight width in profile '{s}'"))?;
+        let abits: u32 = a
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad activation width in profile '{s}'"))?;
+        QProfile::wa(wbits, abits)
+    }
+}
+
+impl fmt::Display for QProfile {
+    /// Canonical spec-string form. Profiles with heterogeneous weight
+    /// widths fall outside the grammar and print each tensor.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.weight_bits() {
+            Some(w) => write!(f, "W{w}A{a}", a = self.act.bits),
+            None => write!(
+                f,
+                "Wih{}Whh{}Wfc{}A{}",
+                self.w_ih.bits, self.w_hh.bits, self.w_fc.bits, self.act.bits
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wa_shorthand_roundtrips() {
+        for (w, a) in [(4u32, 12u32), (8, 12), (8, 10), (6, 12), (12, 12)] {
+            let p = QProfile::wa(w, a).unwrap();
+            assert_eq!(p.weight_bits(), Some(w));
+            assert_eq!(p.act.bits, a);
+            let s = p.to_string();
+            assert_eq!(s, format!("W{w}A{a}"));
+            assert_eq!(QProfile::parse_wa(&s).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn uniform_profile_is_uniform() {
+        let p = QProfile::uniform(QSpec::Q12);
+        assert!(p.is_uniform());
+        assert_eq!(p.to_string(), "W12A12");
+        assert_eq!(QProfile::parse_wa("W12A12").unwrap(), p);
+        assert!(!QProfile::wa(8, 12).unwrap().is_uniform());
+    }
+
+    #[test]
+    fn rejects_malformed_and_unsound_profiles() {
+        for bad in ["", "W4", "A12", "W4A", "WA12", "W4A12A", "w4a12", "W4B12", "WxA12", "W4Ax"] {
+            assert!(QProfile::parse_wa(bad).is_err(), "accepted {bad:?}");
+        }
+        // widths outside QSpec's 4..=24, and weights wider than acts
+        assert!(QProfile::wa(3, 12).is_err());
+        assert!(QProfile::wa(8, 25).is_err());
+        assert!(QProfile::wa(12, 8).is_err());
+    }
+}

@@ -59,8 +59,16 @@ impl QSpec {
 
     /// Quantize a float to a code: round-half-up then saturate.
     /// Bit-identical to `quant.quantize_to_int` in python.
+    ///
+    /// Total over every float: ±inf saturate to the code range like
+    /// any out-of-range value. NaN has no meaningful code — the
+    /// NaN-propagating `clamp` + `as i32` cast silently yield 0, so
+    /// debug builds reject it here and the weight-quantization bridge
+    /// ([`crate::dpd::GruWeights::quantize`]) screens non-finite
+    /// weights with a typed error before ever reaching this point.
     #[inline]
     pub fn quantize(self, x: f64) -> i32 {
+        debug_assert!(!x.is_nan(), "QSpec::quantize(NaN) has no meaningful code");
         let q = (x * self.scale() + 0.5).floor();
         let q = q.clamp(self.qmin() as f64, self.qmax() as f64);
         q as i32
@@ -122,6 +130,55 @@ mod tests {
         // round-half-up at the tie: 0.5 LSB -> up
         assert_eq!(s.quantize(0.5 / 1024.0), 1);
         assert_eq!(s.quantize(-0.5 / 1024.0), 0); // ties toward +inf
+    }
+
+    #[test]
+    fn quantize_is_total_over_out_of_range_and_infinite_inputs() {
+        // totality sweep over every supported width: out-of-range and
+        // infinite inputs saturate to the code range, never UB or a
+        // mid-range code
+        for bits in 4..=24u32 {
+            let s = QSpec::new(bits).unwrap();
+            for (x, want) in [
+                (f64::INFINITY, s.qmax()),
+                (f64::NEG_INFINITY, s.qmin()),
+                (1e300, s.qmax()),
+                (-1e300, s.qmin()),
+                (f64::MAX, s.qmax()),
+                (f64::MIN, s.qmin()),
+            ] {
+                assert_eq!(s.quantize(x), want, "bits={bits} x={x}");
+            }
+            // subnormals and signed zero round like tiny finite values
+            assert_eq!(s.quantize(f64::MIN_POSITIVE), 0, "bits={bits}");
+            assert_eq!(s.quantize(-0.0), 0, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn quantize_rejects_nan_in_debug_and_saturates_consistently() {
+        check("quantize totality", 300, |rng| {
+            let bits = rng.int_in(4, 24) as u32;
+            let s = QSpec::new(bits).unwrap();
+            // anywhere past the representable range must pin to the rail
+            let mag = rng.range(2.0, 1e12);
+            if s.quantize(mag) != s.qmax() {
+                return Err(format!("bits={bits} quantize({mag}) != qmax"));
+            }
+            if s.quantize(-mag) != s.qmin() {
+                return Err(format!("bits={bits} quantize({-mag}) != qmin"));
+            }
+            Ok(())
+        });
+        // NaN: debug builds assert; release builds keep the legacy
+        // (cast-defined) 0 so the behavior stays total either way. The
+        // weight bridge rejects NaN with a typed error before this.
+        if cfg!(debug_assertions) {
+            let caught = std::panic::catch_unwind(|| QSpec::Q12.quantize(f64::NAN));
+            assert!(caught.is_err(), "debug quantize(NaN) must assert");
+        } else {
+            assert_eq!(QSpec::Q12.quantize(f64::NAN), 0);
+        }
     }
 
     #[test]

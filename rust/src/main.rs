@@ -662,7 +662,7 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
         let bits = fw.meta_bits.context("missing bits meta")?;
         let act_name = fw.meta_act.clone().unwrap_or_default();
         let spec = QSpec::new(bits)?;
-        let qw = fw.quantize(spec);
+        let qw = fw.quantize(spec)?;
         let act = if act_name == "hard" {
             ActKind::Hard
         } else {

@@ -32,8 +32,11 @@
 //! per-sample deviation under 0.3 on small-signal stimulus at Q2.10).
 //!
 //! Engine selection is string-addressable: [`EngineKind::parse`] and
-//! `Display` round-trip the spec grammar `native | fixed[+simd] |
-//! delta[:θ][+simd] | cyclesim | interp | hlo`, and
+//! `Display` round-trip the spec grammar `native |
+//! fixed[@WwAa][+sparse:ρ][+simd] | delta[:θ][@WwAa][+sparse:ρ][+simd]
+//! | cyclesim | interp | hlo` — the `@WwAa` (per-tensor
+//! mixed-precision profile) and `+sparse:ρ` (magnitude pruning)
+//! decorations select the [`SparseMpGruDpd`] family member — and
 //! [`EngineFactory::available_kinds`] returns structured
 //! [`EngineDescriptor`] rows (kind, spec, syntax, host SIMD state) so
 //! CLI help and examples render from the registry instead of
@@ -56,9 +59,9 @@ use crate::accel::fsm::HwConfig;
 use crate::accel::CycleAccurateEngine;
 use crate::dpd::qgru::{ActKind, DeltaQGruDpd, QGruDpd};
 use crate::dpd::weights::{GruWeights, QGruWeights};
-use crate::dpd::{Dpd, GruDpd};
+use crate::dpd::{Dpd, GruDpd, SparseMpGruDpd};
 use crate::fixed::kernel::{resolve_simd, SimdPolicy};
-use crate::fixed::QSpec;
+use crate::fixed::{QProfile, QSpec};
 use crate::runtime::Manifest;
 use crate::util::fnv1a_words;
 
@@ -97,6 +100,31 @@ pub enum EngineKind {
         /// propagation threshold in Q-format codes
         theta: u32,
     },
+    /// the SparseDPD x MP-DPD family member: magnitude-pruned
+    /// compressed sparse-column gate tensors
+    /// ([`SparseQGruWeights`](crate::dpd::SparseQGruWeights)) with
+    /// per-tensor mixed-precision formats
+    /// ([`QProfile`](crate::fixed::QProfile)), composable with the
+    /// delta threshold and the vector kernel. Invariant: at least one
+    /// of `profile` / `rho` is `Some` (otherwise the spec string would
+    /// collide with the plain `Fixed`/`DeltaFixed` spellings — `parse`
+    /// only constructs decorated kinds). ρ=0 at a uniform profile and
+    /// θ=0 is bit-identical to `Fixed` (the conformance hinge).
+    SparseMp {
+        /// `Some((w, a))` = per-tensor weight bits `w`, activation
+        /// bits `a` (the `@WwAa` decoration); `None` = uniform at the
+        /// manifest's Q-format
+        profile: Option<(u8, u8)>,
+        /// `Some(ρ)` = prune the ρ% smallest-magnitude codes per gate
+        /// tensor (the `+sparse:ρ` decoration); `None` = keep dense
+        rho: Option<u8>,
+        /// `Some(θ)` = compose with DeltaDPD column skipping at
+        /// threshold θ (the `delta:θ` base); `None` = the `fixed` base
+        theta: Option<u32>,
+        /// run the gather loops behind the vector kernel (the `+simd`
+        /// suffix; same scalar-fallback contract as `FixedSimd`)
+        simd: bool,
+    },
     /// cycle-accurate ASIC simulator
     CycleSim,
     /// interpreted frame engine: the bit-exact `QGruDpd` run with the
@@ -118,6 +146,22 @@ impl std::fmt::Display for EngineKind {
             EngineKind::DeltaFixed { theta } => write!(f, "delta:{theta}"),
             EngineKind::FixedSimd => write!(f, "fixed+simd"),
             EngineKind::DeltaFixedSimd { theta } => write!(f, "delta:{theta}+simd"),
+            EngineKind::SparseMp { profile, rho, theta, simd } => {
+                match theta {
+                    Some(t) => write!(f, "delta:{t}")?,
+                    None => write!(f, "fixed")?,
+                }
+                if let Some((w, a)) = profile {
+                    write!(f, "@W{w}A{a}")?;
+                }
+                if let Some(r) = rho {
+                    write!(f, "+sparse:{r}")?;
+                }
+                if *simd {
+                    write!(f, "+simd")?;
+                }
+                Ok(())
+            }
             EngineKind::CycleSim => write!(f, "cyclesim"),
             EngineKind::Interp => write!(f, "interp"),
             #[cfg(feature = "xla")]
@@ -132,19 +176,63 @@ impl EngineKind {
     /// shares:
     ///
     /// ```text
-    /// native | fixed[+simd] | delta[:θ][+simd] | cyclesim | interp | hlo
+    /// native | fixed[@WwAa][+sparse:ρ][+simd]
+    ///        | delta[:θ][@WwAa][+sparse:ρ][+simd]
+    ///        | cyclesim | interp | hlo
     /// ```
     ///
-    /// Bare `delta` means θ=0 (the bit-exact hinge). `+simd` composes
-    /// only with the kernel-seam kinds (`fixed`, `delta`); anything
-    /// else with the suffix is rejected rather than silently ignored.
-    /// `parse(&k.to_string()) == k` for every kind in this build.
+    /// Bare `delta` means θ=0 (the bit-exact hinge). The `@WwAa` /
+    /// `+sparse:ρ` decorations select the sparse + mixed-precision
+    /// family ([`EngineKind::SparseMp`]) and compose only with the
+    /// `fixed` / `delta[:θ]` bases; `+simd` composes only with the
+    /// kernel-seam kinds (`fixed`, `delta`, and the decorated family);
+    /// anything else with a suffix is rejected rather than silently
+    /// ignored. `parse(&k.to_string()) == k` for every kind in this
+    /// build.
     pub fn parse(spec: &str) -> Result<EngineKind> {
         let s = spec.trim();
-        let (base, simd) = match s.strip_suffix("+simd") {
+        let (decorated, simd) = match s.strip_suffix("+simd") {
             Some(b) => (b, true),
             None => (s, false),
         };
+        // the sparse/mixed-precision decorations, outermost first
+        // (Display order is base[@WwAa][+sparse:ρ], so strip +sparse
+        // from the tail before splitting the profile off the base)
+        let (rest, rho) = match decorated.split_once("+sparse:") {
+            Some((b, r)) => {
+                let rho: u8 = r.parse().with_context(|| {
+                    format!("bad ρ in engine spec '{spec}' (want +sparse:<percent>)")
+                })?;
+                if rho > 100 {
+                    bail!("engine spec '{spec}': sparsity ρ={rho} is a percentage (0..=100)");
+                }
+                (b, Some(rho))
+            }
+            None => (decorated, None),
+        };
+        let (base, profile) = match rest.split_once('@') {
+            Some((b, p)) => (b, Some(parse_profile_bits(p).with_context(|| {
+                format!("bad precision profile in engine spec '{spec}' (want @W<bits>A<bits>)")
+            })?)),
+            None => (rest, None),
+        };
+        if profile.is_some() || rho.is_some() {
+            let theta = if base == "fixed" {
+                None
+            } else if base == "delta" {
+                Some(0)
+            } else if let Some(t) = base.strip_prefix("delta:") {
+                Some(t.parse().with_context(|| {
+                    format!("bad θ in engine spec '{spec}' (want delta:<codes>)")
+                })?)
+            } else {
+                bail!(
+                    "engine spec '{spec}': '@WwAa' / '+sparse:ρ' compose only with \
+                     'fixed' or 'delta[:θ]'"
+                );
+            };
+            return Ok(EngineKind::SparseMp { profile, rho, theta, simd });
+        }
         if base == "delta" || base.starts_with("delta:") {
             let theta: u32 = match base.strip_prefix("delta:") {
                 Some(t) => t
@@ -174,10 +262,21 @@ impl EngineKind {
             "hlo" => bail!("engine 'hlo' needs a build with --features xla (try 'interp')"),
             other => bail!(
                 "unknown engine '{other}' \
-                 (spec grammar: native | fixed[+simd] | delta[:θ][+simd] | cyclesim | interp | hlo)"
+                 (spec grammar: native | fixed[@WwAa][+sparse:ρ][+simd] | \
+                 delta[:θ][@WwAa][+sparse:ρ][+simd] | cyclesim | interp | hlo)"
             ),
         })
     }
+}
+
+/// Parse the `W<bits>A<bits>` payload of an `@` decoration into the
+/// `(weight_bits, act_bits)` pair [`EngineKind::SparseMp`] carries,
+/// validating ranges through [`QProfile::wa`] so a spec string can
+/// never name a profile the engine cannot construct.
+fn parse_profile_bits(s: &str) -> Result<(u8, u8)> {
+    let p = QProfile::parse_wa(s)?;
+    let w = p.weight_bits().expect("wa profiles are weight-homogeneous");
+    Ok((w as u8, p.act.bits as u8))
 }
 
 impl std::str::FromStr for EngineKind {
@@ -583,6 +682,10 @@ impl EngineFactory {
                     EngineKind::DeltaFixed { .. } => ("delta[:θ]", Some(false)),
                     EngineKind::FixedSimd => ("fixed+simd", Some(host_simd)),
                     EngineKind::DeltaFixedSimd { .. } => ("delta[:θ]+simd", Some(host_simd)),
+                    EngineKind::SparseMp { simd, .. } => (
+                        "fixed|delta[:θ][@WwAa][+sparse:ρ][+simd]",
+                        Some(simd && host_simd),
+                    ),
                     EngineKind::CycleSim => ("cyclesim", None),
                     EngineKind::Interp => ("interp", None),
                     #[cfg(feature = "xla")]
@@ -664,6 +767,35 @@ impl EngineFactory {
                     )))),
                 }
             }
+            EngineKind::SparseMp { profile, rho, theta, simd } => {
+                let spec = QSpec::new(m.qspec_bits)?;
+                let rho_pct = rho.unwrap_or(0);
+                let theta = theta.unwrap_or(0);
+                // profile-less specs prune the manifest's *integer*
+                // codes directly, so `fixed+sparse:0` is bit-identical
+                // to `fixed` from the very same artifact tree; an
+                // explicit @WwAa profile needs the float twin to
+                // requantize from
+                let sw = match profile {
+                    None => {
+                        QGruWeights::load_params_int(&m.weights_main, spec)?.to_sparse(rho_pct)
+                    }
+                    Some((wb, ab)) => {
+                        let prof = QProfile::wa(wb as u32, ab as u32)?;
+                        GruWeights::load(&m.weights_float)?.prune_quantize(prof, rho_pct)?
+                    }
+                };
+                match (simd, resolve_simd(self.simd)) {
+                    (true, Some(k)) => Box::new(StreamingEngine::new(Box::new(
+                        SparseMpGruDpd::with_kernel(sw, ActKind::Hard, theta, k),
+                    ))),
+                    _ => Box::new(StreamingEngine::new(Box::new(SparseMpGruDpd::new(
+                        sw,
+                        ActKind::Hard,
+                        theta,
+                    )))),
+                }
+            }
             EngineKind::CycleSim => {
                 let spec = QSpec::new(m.qspec_bits)?;
                 let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
@@ -713,6 +845,11 @@ impl EngineFactory {
                 EngineKind::DeltaFixedSimd { .. } => (
                     "`delta` behind the AVX2 gate kernels",
                     "same fallback and bit-exactness contract, on the i64 delta accumulators",
+                ),
+                EngineKind::SparseMp { .. } => (
+                    "magnitude-pruned sparse + mixed-precision fixed point",
+                    "CSC gate tensors at ρ% pruning, per-tensor W/A widths; ρ=0 at a \
+                     uniform profile and θ=0 is bit-identical to `fixed`",
                 ),
                 EngineKind::CycleSim => (
                     "cycle-accurate ASIC simulator",
@@ -790,6 +927,28 @@ pub fn build_synthetic(
                 theta,
             )))),
         },
+        EngineKind::SparseMp { profile, rho, theta, simd: want_simd } => {
+            let rho_pct = rho.unwrap_or(0);
+            let theta = theta.unwrap_or(0);
+            // profile-less kinds prune the same integer fixture Fixed
+            // uses (ρ=0 ≡ `fixed`, bit for bit); an explicit profile
+            // requantizes the float fixture per tensor
+            let sw = match profile {
+                None => qw().to_sparse(rho_pct),
+                Some((wb, ab)) => GruWeights::synthetic(seed)
+                    .prune_quantize(QProfile::wa(wb as u32, ab as u32)?, rho_pct)?,
+            };
+            match (want_simd, resolve_simd(simd)) {
+                (true, Some(k)) => Box::new(StreamingEngine::new(Box::new(
+                    SparseMpGruDpd::with_kernel(sw, ActKind::Hard, theta, k),
+                ))),
+                _ => Box::new(StreamingEngine::new(Box::new(SparseMpGruDpd::new(
+                    sw,
+                    ActKind::Hard,
+                    theta,
+                )))),
+            }
+        }
         EngineKind::CycleSim => Box::new(StreamingEngine::new(Box::new(CycleSimDpd::new(&qw())))),
         EngineKind::Interp => Box::new(InterpGruEngine::new(
             QGruDpd::new(qw(), ActKind::Hard),
@@ -808,6 +967,7 @@ pub fn available_kinds() -> Vec<EngineKind> {
         EngineKind::DeltaFixed { theta: 0 },
         EngineKind::FixedSimd,
         EngineKind::DeltaFixedSimd { theta: 0 },
+        EngineKind::SparseMp { profile: Some((8, 12)), rho: Some(50), theta: None, simd: false },
         EngineKind::CycleSim,
         EngineKind::Interp,
     ];
@@ -865,7 +1025,7 @@ mod tests {
         // with its documented tolerance against the Fixed reference.
         let fw = synth_float_weights(42);
         let spec = QSpec::Q12;
-        let qw = fw.quantize(spec);
+        let qw = fw.quantize(spec).unwrap();
         let input = stimulus(48, 7);
 
         let mut reference =
@@ -933,7 +1093,7 @@ mod tests {
     fn interp_matches_per_frame_reset_reference() {
         // InterpGruEngine must equal the manual chunk/reset/pad loop
         // (i.e. the HLO artifact's frame semantics) exactly.
-        let qw = synth_float_weights(3).quantize(QSpec::Q12);
+        let qw = synth_float_weights(3).quantize(QSpec::Q12).unwrap();
         let spec = qw.spec;
         let frame = 16;
         let input = stimulus(40, 11); // 2 full frames + ragged tail
@@ -962,7 +1122,7 @@ mod tests {
 
     #[test]
     fn streaming_engine_state_carries_across_frames() {
-        let qw = synth_float_weights(5).quantize(QSpec::Q12);
+        let qw = synth_float_weights(5).quantize(QSpec::Q12).unwrap();
         let input = stimulus(64, 13);
 
         let mut whole = StreamingEngine::new(Box::new(QGruDpd::new(qw.clone(), ActKind::Hard)));
@@ -979,7 +1139,7 @@ mod tests {
 
     #[test]
     fn engine_kind_is_frame_or_streaming_as_documented() {
-        let qw = synth_float_weights(9).quantize(QSpec::Q12);
+        let qw = synth_float_weights(9).quantize(QSpec::Q12).unwrap();
         let streaming = StreamingEngine::new(Box::new(QGruDpd::new(qw.clone(), ActKind::Hard)));
         assert_eq!(streaming.frame_len(), None);
         let interp = InterpGruEngine::new(QGruDpd::new(qw, ActKind::Hard), 256);
@@ -990,7 +1150,7 @@ mod tests {
     #[test]
     fn batch_classes_separate_kinds_weights_and_geometry() {
         let fw = synth_float_weights(31);
-        let qw = fw.quantize(QSpec::Q12);
+        let qw = fw.quantize(QSpec::Q12).unwrap();
         let fixed_a = StreamingEngine::new(Box::new(QGruDpd::new(qw.clone(), ActKind::Hard)));
         let fixed_b = StreamingEngine::new(Box::new(QGruDpd::new(qw.clone(), ActKind::Hard)));
         let cyclesim = StreamingEngine::new(Box::new(CycleSimDpd::new(&qw)));
@@ -1022,7 +1182,7 @@ mod tests {
         assert_ne!(delta0.batch_class(), fixed_a.batch_class());
         assert_ne!(delta0.batch_class(), delta8.batch_class());
         // different weights never coalesce
-        let other = synth_float_weights(32).quantize(QSpec::Q12);
+        let other = synth_float_weights(32).quantize(QSpec::Q12).unwrap();
         let fixed_c = StreamingEngine::new(Box::new(QGruDpd::new(other, ActKind::Hard)));
         assert_ne!(fixed_a.batch_class(), fixed_c.batch_class());
     }
@@ -1034,7 +1194,7 @@ mod tests {
         // tests/batch_parity.rs; this pins the trait defaults and the
         // StreamingEngine delegation next to their definitions).
         let fw = synth_float_weights(21);
-        let qw = fw.quantize(QSpec::Q12);
+        let qw = fw.quantize(QSpec::Q12).unwrap();
         type Mk<'a> = Box<dyn Fn() -> Box<dyn DpdEngine> + 'a>;
         let makers: Vec<(Mk, &str)> = vec![
             (
@@ -1114,6 +1274,32 @@ mod tests {
     }
 
     #[test]
+    fn synthetic_sparse_family_honors_the_fixed_hinge() {
+        // `fixed+sparse:0` from the synthetic construction path is
+        // bit-identical to `fixed` at the same seed (the conformance
+        // hinge, checked here at the factory level), while remaining
+        // its own batch class — like delta@0, a sparse engine never
+        // coalesces with the dense implementation
+        let input = stimulus(96, 5);
+        let mut fixed = build_synthetic(EngineKind::Fixed, 11, SimdPolicy::Off, None).unwrap();
+        let want = run_engine(fixed.as_mut(), &input);
+        let kind = EngineKind::parse("fixed+sparse:0").unwrap();
+        let mut sparse = build_synthetic(kind, 11, SimdPolicy::Off, None).unwrap();
+        let got = run_engine(sparse.as_mut(), &input);
+        assert_eq!(got, want, "fixed+sparse:0 must be bit-identical to fixed");
+        assert!(sparse.batch_class().is_some());
+        assert_ne!(fixed.batch_class(), sparse.batch_class());
+        // decorated kinds build working engines end to end
+        for spec in ["fixed@W8A12+sparse:50", "delta:24+sparse:30", "fixed@W4A12"] {
+            let kind = EngineKind::parse(spec).unwrap();
+            let mut eng = build_synthetic(kind, 11, SimdPolicy::Off, None).unwrap();
+            let out = run_engine(eng.as_mut(), &input);
+            assert_eq!(out.len(), input.len(), "{spec}");
+            assert!(out.iter().all(|s| s[0].is_finite() && s[1].is_finite()), "{spec}");
+        }
+    }
+
+    #[test]
     fn available_kinds_lists_default_backends() {
         let kinds = available_kinds();
         assert!(kinds.contains(&EngineKind::NativeF64));
@@ -1123,6 +1309,12 @@ mod tests {
         assert!(kinds.contains(&EngineKind::DeltaFixedSimd { theta: 0 }));
         assert!(kinds.contains(&EngineKind::CycleSim));
         assert!(kinds.contains(&EngineKind::Interp));
+        assert!(kinds.contains(&EngineKind::SparseMp {
+            profile: Some((8, 12)),
+            rho: Some(50),
+            theta: None,
+            simd: false,
+        }));
     }
 
     #[test]
@@ -1132,6 +1324,21 @@ mod tests {
         let mut kinds = available_kinds();
         kinds.push(EngineKind::DeltaFixed { theta: 32 });
         kinds.push(EngineKind::DeltaFixedSimd { theta: 32 });
+        // the sparse/mixed-precision family: every combination of
+        // optional decorations (profile/rho/theta/simd) that satisfies
+        // the at-least-one-decoration invariant must round-trip
+        for profile in [None, Some((4u8, 12u8)), Some((8, 12))] {
+            for rho in [None, Some(0u8), Some(50), Some(100)] {
+                if profile.is_none() && rho.is_none() {
+                    continue; // would collide with the plain spellings
+                }
+                for theta in [None, Some(0u32), Some(32)] {
+                    for simd in [false, true] {
+                        kinds.push(EngineKind::SparseMp { profile, rho, theta, simd });
+                    }
+                }
+            }
+        }
         for kind in kinds {
             let spec = kind.to_string();
             assert_eq!(EngineKind::parse(&spec).unwrap(), kind, "round-trip of '{spec}'");
@@ -1150,6 +1357,31 @@ mod tests {
         // whitespace-tolerant, and FromStr delegates
         assert_eq!(EngineKind::parse(" fixed+simd ").unwrap(), EngineKind::FixedSimd);
         assert_eq!("delta:7".parse::<EngineKind>().unwrap(), EngineKind::DeltaFixed { theta: 7 });
+        // canonical sparse/mixed-precision spellings are API surface
+        assert_eq!(
+            EngineKind::SparseMp { profile: None, rho: Some(50), theta: None, simd: false }
+                .to_string(),
+            "fixed+sparse:50"
+        );
+        assert_eq!(
+            EngineKind::SparseMp {
+                profile: Some((8, 12)),
+                rho: Some(50),
+                theta: Some(32),
+                simd: true,
+            }
+            .to_string(),
+            "delta:32@W8A12+sparse:50+simd"
+        );
+        assert_eq!(
+            EngineKind::parse("fixed@W4A12").unwrap(),
+            EngineKind::SparseMp { profile: Some((4, 12)), rho: None, theta: None, simd: false }
+        );
+        // bare `delta` with a decoration still means θ=0
+        assert_eq!(
+            EngineKind::parse("delta+sparse:30").unwrap(),
+            EngineKind::SparseMp { profile: None, rho: Some(30), theta: Some(0), simd: false }
+        );
     }
 
     #[test]
@@ -1164,6 +1396,19 @@ mod tests {
             "cyclesim+simd",
             "interp+simd",
             "fixed+avx",
+            // sparse/mixed-precision decorations: incomplete payloads,
+            // out-of-range widths/percentages, or the wrong base kind
+            "fixed@",
+            "fixed@W4",
+            "fixed@4A12",
+            "fixed@W13A12", // weights wider than activations
+            "fixed@W2A12",  // below QSpec's 4-bit floor
+            "fixed+sparse:",
+            "fixed+sparse:x",
+            "fixed+sparse:101",
+            "cyclesim@W4A12",
+            "native+sparse:50",
+            "interp@W8A12+sparse:50",
         ] {
             assert!(EngineKind::parse(bad).is_err(), "'{bad}' should not parse");
         }
@@ -1223,7 +1468,7 @@ mod tests {
         // θ agree. The class hashes kind + format + weights + act only;
         // the kernel is bit-neutral by contract, hence class-neutral.
         use crate::fixed::SimdKernel;
-        let qw = synth_float_weights(31).quantize(QSpec::Q12);
+        let qw = synth_float_weights(31).quantize(QSpec::Q12).unwrap();
         let scalar = StreamingEngine::new(Box::new(QGruDpd::new(qw.clone(), ActKind::Hard)));
         let scalar_delta =
             StreamingEngine::new(Box::new(DeltaQGruDpd::new(qw.clone(), ActKind::Hard, 24)));

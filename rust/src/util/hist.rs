@@ -220,7 +220,16 @@ impl AtomicHistogram {
 
     pub fn record_ns(&self, ns: u64) {
         self.counts[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
-        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        // saturating fold, matching the plain flavor's overflow
+        // semantics: a bare fetch_add wraps at u64::MAX, silently
+        // corrupting a long-lived fleet's mean. fetch_update's CAS
+        // loop is lock-free and the closure never returns None, so
+        // the Err arm is unreachable.
+        self.sum_ns
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                Some(cur.saturating_add(ns))
+            })
+            .ok();
         self.max_ns.fetch_max(ns, Ordering::Relaxed);
     }
 
@@ -328,6 +337,22 @@ mod tests {
                 });
             }
         });
+        assert_eq!(atomic.snapshot(), plain);
+    }
+
+    #[test]
+    fn atomic_sum_saturates_like_the_plain_flavor() {
+        // Regression: the atomic flavor used a bare fetch_add for
+        // sum_ns, which wraps at u64::MAX while the plain flavor
+        // saturates — recording MAX then MAX/2 left the atomic sum at
+        // MAX/2 − 1 and the two snapshots disagreeing.
+        let mut plain = LatencyHistogram::new();
+        let atomic = AtomicHistogram::new();
+        for ns in [u64::MAX, u64::MAX / 2] {
+            plain.record_ns(ns);
+            atomic.record_ns(ns);
+        }
+        assert_eq!(plain.mean(), Duration::from_nanos(u64::MAX / 2));
         assert_eq!(atomic.snapshot(), plain);
     }
 

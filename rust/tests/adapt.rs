@@ -102,7 +102,7 @@ fn golden_adapt_bridge_is_bit_exact() {
 
     // ring 1a: the re-quantization bridge vs the Python oracle, every
     // tensor, bit for bit
-    let qw = w.quantize(spec);
+    let qw = w.quantize(spec).unwrap();
     let pinned = a.get("trained").unwrap().get("params_int").unwrap();
     let check = |name: &str, got: &[i32]| {
         let want = pinned.get(name).unwrap().as_i32_vec().unwrap();
@@ -147,7 +147,7 @@ fn golden_adapt_bridge_is_bit_exact() {
         a.get("gate_bound").unwrap().as_f64().unwrap(),
     );
     assert_ne!(
-        original.quantize(spec).fingerprint(),
+        original.quantize(spec).unwrap().fingerprint(),
         qw.fingerprint(),
         "adapted generation must have a fresh coalescing identity"
     );
@@ -194,7 +194,7 @@ fn closed_loop_adaptation_tracks_the_reference_drift() {
     };
     // checkpoint: the deployed re-quantized engine through the PA
     let deployed_acpr = |tr: &AdaptTrainer, traj: DriftTrajectory| -> f64 {
-        let mut eng = QGruDpd::new(tr.quantized(spec), ActKind::Hard);
+        let mut eng = QGruDpd::new(tr.quantized(spec).unwrap(), ActKind::Hard);
         let z = spec.dequantize_iq(&eng.run_codes(&spec.quantize_iq(&iq)));
         acpr_2048(&pa_out(traj, &z))
     };
@@ -294,7 +294,7 @@ fn hot_swap_is_bit_exact_at_the_frame_boundary() {
     while pre.len() < burst_a.len() {
         pre.extend(session.drain().unwrap());
     }
-    let mut frozen = QGruDpd::new(w0.quantize(spec), ActKind::Hard);
+    let mut frozen = QGruDpd::new(w0.quantize(spec).unwrap(), ActKind::Hard);
     frozen.reset();
     let want_pre: Vec<[f64; 2]> = burst_a.iter().map(|&s| frozen.process(s)).collect();
     assert_eq!(pre, want_pre, "pre-swap output diverged from the frozen engine");
@@ -311,10 +311,10 @@ fn hot_swap_is_bit_exact_at_the_frame_boundary() {
     // generation (same code path, same feedback, same f64 ops)
     let mut twin = AdaptTrainer::new(w0.clone(), acfg.trainer).unwrap();
     twin.observe(&fb_u, &fb_y).unwrap();
-    let refreshed = twin.quantized(spec);
+    let refreshed = twin.quantized(spec).unwrap();
     assert_ne!(
         refreshed.fingerprint(),
-        w0.quantize(spec).fingerprint(),
+        w0.quantize(spec).unwrap().fingerprint(),
         "feedback must have produced a new weight generation"
     );
 
@@ -366,7 +366,7 @@ fn hot_swap_under_coalescing_keeps_peers_bit_exact() {
         )
         .unwrap();
     // a same-class peer (same generation-0 weights, non-adaptive)
-    let qw0 = w0.quantize(spec);
+    let qw0 = w0.quantize(spec).unwrap();
     let peer_qw = qw0.clone();
     let mut peer = service
         .open_session_with(SessionConfig::default(), move || {
@@ -416,7 +416,7 @@ fn hot_swap_under_coalescing_keeps_peers_bit_exact() {
     gen0.reset();
     let mut want: Vec<[f64; 2]> =
         stream[..512].iter().map(|&s| gen0.process(s)).collect();
-    let mut gen1 = QGruDpd::new(twin.quantized(spec), ActKind::Hard);
+    let mut gen1 = QGruDpd::new(twin.quantized(spec).unwrap(), ActKind::Hard);
     gen1.reset();
     want.extend(stream[512..].iter().map(|&s| gen1.process(s)));
     assert_eq!(got_adaptive, want, "adaptive session's swap boundary drifted");
@@ -475,7 +475,7 @@ fn adaptive_stats_meter_the_loop_and_contracts_hold() {
         .is_err());
 
     // a plain session refuses feedback
-    let qw = w0.quantize(QSpec::Q12);
+    let qw = w0.quantize(QSpec::Q12).unwrap();
     let mut plain = service
         .open_session_with(SessionConfig::default(), move || {
             Ok(Box::new(dpd_ne::runtime::backend::StreamingEngine::new(Box::new(

@@ -9,7 +9,10 @@
 //!   the same family — the `GateKernel` seam's bit-exactness
 //!   contract — as is the forced scalar fallback (`fixed+simd-off`,
 //!   what a `FixedSimd` engine builds under `DPD_SIMD=off` or on a
-//!   host without AVX2);
+//!   host without AVX2); so are the sparse/mixed-precision hinges —
+//!   `fixed+sparse:0` (CSC storage, nothing pruned, same integer
+//!   codes) and `fixed@W12A12` (a single-format `QProfile`, proving
+//!   profile ≡ uniform-`QSpec` bit for bit);
 //! * **kernel invariance at θ>0** — the SIMD delta engine at the
 //!   golden θ equals the scalar delta engine bit for bit on every
 //!   scenario (same skip decisions, same accumulators), so delta@32
@@ -35,8 +38,8 @@ use dpd_ne::accel::delta::DeltaCostModel;
 use dpd_ne::accel::ops::ModelDims;
 use dpd_ne::dpd::qgru::{ActKind, DeltaQGruDpd, QGruDpd};
 use dpd_ne::dpd::weights::{GruWeights, QGruWeights};
-use dpd_ne::dpd::{Dpd, GruDpd};
-use dpd_ne::fixed::{QSpec, SimdKernel};
+use dpd_ne::dpd::{Dpd, GruDpd, SparseMpGruDpd};
+use dpd_ne::fixed::{QProfile, QSpec, SimdKernel};
 use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
 use dpd_ne::metrics::evm::{evm_db_nmse, nmse_db};
 use dpd_ne::pa::{PaSpec, RappMemPa};
@@ -74,7 +77,7 @@ fn synth_float_weights(seed: u64) -> GruWeights {
 }
 
 fn qweights() -> QGruWeights {
-    synth_float_weights(42).quantize(QSpec::Q12)
+    synth_float_weights(42).quantize(QSpec::Q12).unwrap()
 }
 
 /// Every hermetic engine under test, by label. The `Hlo` backend is
@@ -169,6 +172,41 @@ fn makers() -> Vec<(&'static str, Box<dyn Fn() -> Box<dyn DpdEngine>>)> {
             Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw.clone(), ActKind::Hard))))
         }
     };
+    // the sparse/mixed-precision family's conformance hinges:
+    // `fixed+sparse:0` prunes nothing from the very same integer codes
+    // (CSC storage, dense arithmetic) and must equal Fixed bit for
+    // bit; `fixed@W12A12` quantizes the float twin through a
+    // *single-format QProfile* and must also equal Fixed bit for bit —
+    // the profile ≡ uniform-QSpec equivalence
+    let mk_sparse0 = {
+        let qw = qw.clone();
+        move || -> Box<dyn DpdEngine> {
+            Box::new(StreamingEngine::new(Box::new(SparseMpGruDpd::new(
+                qw.to_sparse(0),
+                ActKind::Hard,
+                0,
+            ))))
+        }
+    };
+    let mk_mp_uniform = {
+        let fw = fw.clone();
+        move || -> Box<dyn DpdEngine> {
+            let sw = fw.prune_quantize(QProfile::wa(12, 12).unwrap(), 0).unwrap();
+            Box::new(StreamingEngine::new(Box::new(SparseMpGruDpd::new(sw, ActKind::Hard, 0))))
+        }
+    };
+    // sparse composed with the golden delta threshold at ρ=0: same
+    // skip decisions and accumulators as the scalar delta engine
+    let mk_sparse_delta_g = {
+        let qw = qw.clone();
+        move || -> Box<dyn DpdEngine> {
+            Box::new(StreamingEngine::new(Box::new(SparseMpGruDpd::new(
+                qw.to_sparse(0),
+                ActKind::Hard,
+                GOLDEN_THETA,
+            ))))
+        }
+    };
     let mk_interp = move || -> Box<dyn DpdEngine> {
         Box::new(InterpGruEngine::new(QGruDpd::new(qw.clone(), ActKind::Hard), 64))
     };
@@ -181,6 +219,9 @@ fn makers() -> Vec<(&'static str, Box<dyn Fn() -> Box<dyn DpdEngine>>)> {
         ("delta-fixed@0+simd", Box::new(mk_delta0_simd)),
         ("delta-fixed@golden+simd", Box::new(mk_delta_g_simd)),
         ("fixed+simd-off", Box::new(mk_fixed_simd_off)),
+        ("fixed+sparse:0", Box::new(mk_sparse0)),
+        ("fixed@W12A12", Box::new(mk_mp_uniform)),
+        ("delta-fixed@golden+sparse:0", Box::new(mk_sparse_delta_g)),
         ("native-f64", Box::new(mk_native)),
         ("interp", Box::new(mk_interp)),
     ]
@@ -216,9 +257,15 @@ fn integer_family_is_bit_exact_across_the_grid() {
     let reference = maker_by_label(&makers, "fixed");
     for sc in standard_grid(GRID_SEED) {
         let want = scalar_run(reference, &sc);
-        for label in
-            ["cyclesim", "delta-fixed@0", "fixed+simd", "delta-fixed@0+simd", "fixed+simd-off"]
-        {
+        for label in [
+            "cyclesim",
+            "delta-fixed@0",
+            "fixed+simd",
+            "delta-fixed@0+simd",
+            "fixed+simd-off",
+            "fixed+sparse:0",
+            "fixed@W12A12",
+        ] {
             let got = scalar_run(maker_by_label(&makers, label), &sc);
             assert_eq!(
                 got, want,
@@ -236,17 +283,22 @@ fn delta_at_golden_theta_is_kernel_invariant_across_the_grid() {
     // delta engine at the same θ exactly, scenario for scenario, so
     // the golden drift/MAC bounds carry over to the SIMD build with
     // no separate golden trace.
+    // Same contract for the sparse family at ρ=0: composed with the
+    // golden θ it must make the identical skip decisions and carry the
+    // identical accumulators as the scalar delta engine.
     let makers = makers();
     let scalar = maker_by_label(&makers, "delta-fixed@golden");
-    let simd = maker_by_label(&makers, "delta-fixed@golden+simd");
-    for sc in standard_grid(GRID_SEED) {
-        let want = scalar_run(scalar, &sc);
-        let got = scalar_run(simd, &sc);
-        assert_eq!(
-            got, want,
-            "delta-fixed@golden+simd: scenario '{}' diverged from the scalar delta engine",
-            sc.name
-        );
+    for label in ["delta-fixed@golden+simd", "delta-fixed@golden+sparse:0"] {
+        let other = maker_by_label(&makers, label);
+        for sc in standard_grid(GRID_SEED) {
+            let want = scalar_run(scalar, &sc);
+            let got = scalar_run(other, &sc);
+            assert_eq!(
+                got, want,
+                "{label}: scenario '{}' diverged from the scalar delta engine",
+                sc.name
+            );
+        }
     }
 }
 

@@ -41,7 +41,7 @@ fn trait_objects_dispatch_uniformly() {
     // Fixed, CycleSim and Interp share the bit-exact integer datapath;
     // on a single sub-frame burst (one h0 reset for everybody, causal
     // zero-padding) all three must agree exactly through the trait.
-    let qw = synth_float_weights(21).quantize(QSpec::Q12);
+    let qw = synth_float_weights(21).quantize(QSpec::Q12).unwrap();
     let input = stimulus(48, 5);
 
     let engines: Vec<Box<dyn DpdEngine>> = vec![

@@ -108,7 +108,7 @@ fn main_weights_quantization_matches_python() {
     let path = dir.join("weights_main.json");
     let fw = dpd_ne::dpd::GruWeights::load(&path).unwrap();
     let spec = dpd_ne::fixed::QSpec::Q12;
-    let qw = fw.quantize(spec);
+    let qw = fw.quantize(spec).unwrap();
     let want = QGruWeights::load_params_int(&path, spec).unwrap();
     assert_eq!(qw.w_ih, want.w_ih);
     assert_eq!(qw.b_ih, want.b_ih);
