@@ -1,0 +1,392 @@
+#!/usr/bin/env python3
+"""Golden generator for the manifest-v2 weight store
+(`rust/src/runtime/store.rs`).
+
+Mirrors, byte for byte, the Rust side's canonical serialization of a
+content-addressed weight store:
+
+* the canonical JSON writer of `rust/src/util/json.rs` (sorted keys,
+  no whitespace, pinned number spellings: integral f64 below 2^53 as
+  plain integers, everything else in Rust's `{:e}` shortest
+  scientific),
+* the `fnv1a_words` content hash (the crate's historical multiplier
+  0x1000000001b3 — NOT the canonical FNV-64 prime) behind
+  `GruWeights::fingerprint` ("gru-f64") and `QGruWeights::fingerprint`
+  ("qgru"),
+* the store wire format: generation records with lineage + trainer
+  metadata, full blobs for lineage roots / kind changes, and
+  `(tensor, index, word)` delta triples between compatible adjacent
+  generations.
+
+The emitted document (`rust/tests/data/golden_store.json`) pins a
+5-generation lineage built from Rng-exact perturbations that
+`rust/tests/rollout.rs` rebuilds independently; Rust's
+`WeightStore::to_json_string() + "\\n"` must equal this file's bytes.
+
+Also measures, for EXPERIMENTS.md, the touched-fraction of a real
+`AdaptTrainer` refresh (float words vs Q2.10 codes) — the numbers
+behind the store's delta-encoding design note.
+
+Run from anywhere: `python3 python/tools/gen_golden_store.py`.
+"""
+
+import decimal
+import math
+import os
+import pathlib
+import struct
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import gen_golden_ofdm as G  # noqa: E402  (rust twins: Rng, quantize, trainer)
+
+MASK = (1 << 64) - 1
+TENSOR_ORDER = ["w_ih", "b_ih", "w_hh", "b_hh", "w_fc", "b_fc"]
+STORE_VERSION = "dpd-weight-store-v2"
+
+# --- pinned lineage parameters (rust/tests/rollout.rs mirrors these) ------
+INIT_SEED = 7
+HIDDEN = 10
+GATE_BOUND = 0.15
+PERTURB_SEED = 0x5705
+G1_TOUCHES = 12  # w_hh (300 words), dv in +-0.05
+G2_TOUCHES = 5  # w_ih (120 words), dv in +-0.02
+G4_TOUCHES = 7  # w_hh codes, +-1
+
+
+# --- rust/src/util/mod.rs::fnv1a_words twin -------------------------------
+
+
+def fnv1a_words(tag: str, words) -> int:
+    p = 0x1000000001B3
+    h = 0xCBF29CE484222325
+    for b in tag.encode():
+        h = ((h ^ b) * p) & MASK
+    for w in words:
+        v = w & MASK
+        for _ in range(8):
+            h = ((h ^ (v & 0xFF)) * p) & MASK
+            v >>= 8
+    return h
+
+
+def f64_bits(v: float) -> int:
+    return struct.unpack("<Q", struct.pack("<d", v))[0]
+
+
+def fp_float(w: dict) -> int:
+    words = [w["hidden"], w["features"]]
+    for t in TENSOR_ORDER:
+        words.extend(f64_bits(v) for v in w[t])
+    return fnv1a_words("gru-f64", words)
+
+
+def fp_quant(q: dict) -> int:
+    words = [q["bits"], q["hidden"], q["features"]]
+    for t in TENSOR_ORDER:
+        words.extend(v & 0xFFFFFFFF for v in q[t])
+    return fnv1a_words("qgru", words)
+
+
+# --- rust/src/util/json.rs canonical writer twin --------------------------
+
+
+def canon_num(v) -> str:
+    """`write_canonical_num` twin: integral |v| < 2^53 (except -0.0)
+    prints as an integer, everything else as Rust `{:e}` shortest
+    scientific (mantissa `d[.ddd]`, bare exponent)."""
+    if isinstance(v, int):
+        return str(v)
+    if not math.isfinite(v):
+        raise ValueError(f"non-finite {v} has no canonical spelling")
+    if v.is_integer() and abs(v) < 2.0**53 and not (v == 0.0 and math.copysign(1.0, v) < 0):
+        return str(int(v))
+    if v == 0.0:  # only -0.0 reaches here
+        return "-0e0"
+    # repr() is the shortest round-tripping decimal — the same digits
+    # Rust's {:e} prints; reshape them into d.ddd e<exp> form.
+    sign, digits, exp = decimal.Decimal(repr(v)).normalize().as_tuple()
+    e = exp + len(digits) - 1
+    mant = str(digits[0])
+    if len(digits) > 1:
+        mant += "." + "".join(map(str, digits[1:]))
+    return ("-" if sign else "") + mant + "e" + str(e)
+
+
+def escape(s: str) -> str:
+    out = ['"']
+    for c in s:
+        if c == '"':
+            out.append('\\"')
+        elif c == "\\":
+            out.append("\\\\")
+        elif c == "\n":
+            out.append("\\n")
+        elif c == "\r":
+            out.append("\\r")
+        elif c == "\t":
+            out.append("\\t")
+        elif ord(c) < 0x20:
+            out.append("\\u%04x" % ord(c))
+        else:
+            out.append(c)
+    out.append('"')
+    return "".join(out)
+
+
+def dump(v) -> str:
+    if v is None:
+        return "null"
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        return canon_num(v)
+    if isinstance(v, str):
+        return escape(v)
+    if isinstance(v, (list, tuple)):
+        return "[" + ",".join(dump(x) for x in v) + "]"
+    if isinstance(v, dict):
+        return "{" + ",".join(escape(k) + ":" + dump(v[k]) for k in sorted(v)) + "}"
+    raise TypeError(f"cannot dump {type(v)}")
+
+
+# --- rust/src/runtime/store.rs wire-format twin ---------------------------
+
+
+def format_hash(h: int) -> str:
+    return "fnv1a64:%016x" % h
+
+
+def delta_words(parent: dict, child: dict):
+    """`store::delta_words` twin: None when the pair cannot
+    delta-encode, else (tensor, index, word) triples in TENSOR_ORDER
+    then ascending index. Float words compare by bit pattern."""
+    if parent["kind"] != child["kind"]:
+        return None
+    ps, cs = parent["set"], child["set"]
+    if (ps["hidden"], ps["features"]) != (cs["hidden"], cs["features"]):
+        return None
+    if parent["kind"] == "qgru" and ps["bits"] != cs["bits"]:
+        return None
+    is_float = parent["kind"] == "gru-f64"
+    out = []
+    for t in TENSOR_ORDER:
+        for i, (pv, cv) in enumerate(zip(ps[t], cs[t])):
+            if (f64_bits(pv) != f64_bits(cv)) if is_float else (pv != cv):
+                out.append([t, i, cv])
+    return out
+
+
+def encode_blob(gen: dict, parent: dict):
+    if parent is not None:
+        changed = delta_words(parent, gen)
+        if changed is not None:
+            return {"delta": {"changed": changed}}
+    s = gen["set"]
+    payload = {"hidden": s["hidden"], "features": s["features"]}
+    for t in TENSOR_ORDER:
+        payload[t] = list(s[t])
+    return {"full": payload}
+
+
+def encode_store(gens: list) -> str:
+    by_hash = {g["hash"]: g for g in gens}
+    doc_gens = []
+    for g in gens:
+        parent = by_hash[g["parent"]] if g["parent"] is not None else None
+        doc_gens.append(
+            {
+                "blob": encode_blob(g, parent),
+                "hash": format_hash(g["hash"]),
+                "kind": g["kind"],
+                "meta": g["meta"],
+                "parent": None if g["parent"] is None else format_hash(g["parent"]),
+                "seq": g["seq"],
+            }
+        )
+    doc = {
+        "generations": doc_gens,
+        "head": format_hash(gens[-1]["hash"]) if gens else None,
+        "version": STORE_VERSION,
+    }
+    return dump(doc)
+
+
+def publish(gens: list, kind: str, wset: dict, meta: dict) -> int:
+    h = fp_float(wset) if kind == "gru-f64" else fp_quant(wset)
+    assert h not in {g["hash"] for g in gens}, "duplicate generation"
+    gens.append(
+        {
+            "hash": h,
+            "parent": gens[-1]["hash"] if gens else None,
+            "seq": len(gens),
+            "kind": kind,
+            "set": wset,
+            "meta": meta,
+        }
+    )
+    return h
+
+
+def meta(samples: int, steps: int, nmse_db: float, theta: int = 0) -> dict:
+    return {
+        "adapt_samples": samples,
+        "adapt_steps": steps,
+        "nmse_db": nmse_db,
+        "rho": 0,
+        "spec_bits": 12,
+        "theta": theta,
+    }
+
+
+# --- lineage construction (Rng-exact; the rust test re-derives this) ------
+
+
+def clone_w(w: dict) -> dict:
+    return {k: (list(v) if isinstance(v, list) else v) for k, v in w.items()}
+
+
+def quantize_weights(w: dict) -> dict:
+    q = {"hidden": w["hidden"], "features": w["features"], "bits": 12}
+    for t in TENSOR_ORDER:
+        q[t] = [G.quantize(v) for v in w[t]]
+    return q
+
+
+def build_lineage():
+    w0 = G.identity_init(INIT_SEED, HIDDEN, GATE_BOUND)
+    rng = G.Rng(PERTURB_SEED)
+
+    w1 = clone_w(w0)
+    for _ in range(G1_TOUCHES):
+        i = rng.below(3 * HIDDEN * HIDDEN)
+        w1["w_hh"][i] += rng.range(-0.05, 0.05)
+
+    w2 = clone_w(w1)
+    for _ in range(G2_TOUCHES):
+        i = rng.below(3 * HIDDEN * 4)
+        w2["w_ih"][i] += rng.range(-0.02, 0.02)
+
+    q3 = quantize_weights(w2)
+
+    q4 = clone_w(q3)
+    for _ in range(G4_TOUCHES):
+        i = rng.below(3 * HIDDEN * HIDDEN)
+        q4["w_hh"][i] += 1 if rng.below(2) == 0 else -1
+
+    gens = []
+    publish(gens, "gru-f64", w0, meta(0, 0, 0.0))
+    publish(gens, "gru-f64", w1, meta(4096, 128, -27.5))
+    publish(gens, "gru-f64", w2, meta(8192, 256, -31.25))
+    publish(gens, "qgru", q3, meta(8192, 256, -31.25))
+    publish(gens, "qgru", q4, meta(8192, 256, -31.25, theta=8))
+    return gens
+
+
+# --- self-validation: decode own document, recompute every hash -----------
+
+
+def decode_and_verify(text: str, gens: list) -> None:
+    import json as stdjson
+
+    doc = stdjson.loads(text)
+    assert doc["version"] == STORE_VERSION
+    decoded = {}
+    order = []
+    for i, g in enumerate(doc["generations"]):
+        assert g["seq"] == i, "records must be dense"
+        if "full" in g["blob"]:
+            s = dict(g["blob"]["full"])
+            if g["kind"] == "qgru":
+                s["bits"] = g["meta"]["spec_bits"]
+        else:
+            parent = decoded[g["parent"]]
+            s = {k: (list(v) if isinstance(v, list) else v) for k, v in parent.items()}
+            for t, idx, v in g["blob"]["delta"]["changed"]:
+                s[t][idx] = v
+        got = fp_float(s) if g["kind"] == "gru-f64" else fp_quant(s)
+        assert format_hash(got) == g["hash"], f"generation #{i} hash mismatch"
+        decoded[g["hash"]] = s
+        order.append(g["hash"])
+    assert doc["head"] == order[-1]
+    assert [format_hash(g["hash"]) for g in gens] == order
+    # the delta shape itself is part of the pinned contract
+    shapes = ["full" if "full" in g["blob"] else "delta" for g in doc["generations"]]
+    assert shapes == ["full", "delta", "delta", "full", "delta"], shapes
+
+
+# --- EXPERIMENTS.md provenance: trainer-refresh touched fraction ----------
+
+
+def measure_touched_fraction() -> None:
+    import numpy as np
+
+    wave = [(float(a), float(b)) for a, b in G.make_adapt_waveform()]
+    tr = G.AdaptTrainer(G.identity_init(2026, 10, 0.15))
+
+    def run(samples):
+        u = G.gru_run_f64(tr.w, samples)
+        y = G.pa_run(np.array([complex(a, b) for a, b in u]))
+        tr.observe(u, [(float(c.real), float(c.imag)) for c in y])
+
+    def report(label, before):
+        total = sum(len(before[t]) for t in TENSOR_ORDER)
+        f_changed = sum(
+            1
+            for t in TENSOR_ORDER
+            for a, b in zip(before[t], tr.w[t])
+            if f64_bits(a) != f64_bits(b)
+        )
+        q_changed = sum(
+            1
+            for t in TENSOR_ORDER
+            for a, b in zip(before[t], tr.w[t])
+            if G.quantize(a) != G.quantize(b)
+        )
+        print(f"  {label}:")
+        print(f"    float words touched: {f_changed}/{total} ({100.0 * f_changed / total:.1f}%)")
+        print(f"    Q2.10 codes touched: {q_changed}/{total} ({100.0 * q_changed / total:.1f}%)")
+
+    nwin = len(wave) // 32
+    print(f"trainer-refresh touched fraction ({len(wave)} samples = {nwin} Adam windows/pass):")
+    run(wave)
+    run(wave)
+    before = clone_w(tr.w)
+    run(wave)
+    report("early lineage, full-pass cadence (pass 3 vs 2)", before)
+    for _ in range(3):
+        run(wave)
+    before = clone_w(tr.w)
+    run(wave)
+    report("late lineage, full-pass cadence (pass 7 vs 6)", before)
+    before = clone_w(tr.w)
+    run(wave[:32])
+    report("late lineage, single-window refresh (32 samples, 1 Adam step)", before)
+
+
+def main() -> None:
+    root = pathlib.Path(__file__).resolve().parents[2]
+    out_path = root / "rust" / "tests" / "data" / "golden_store.json"
+
+    gens = build_lineage()
+    text = encode_store(gens)
+    decode_and_verify(text, gens)
+    assert encode_store(gens) == text, "re-encode must be byte-identical"
+
+    out_path.write_text(text + "\n")
+    print(f"wrote {out_path} ({out_path.stat().st_size} bytes)")
+    for g in gens:
+        blob = "full"
+        if g["parent"] is not None:
+            parent = next(p for p in gens if p["hash"] == g["parent"])
+            d = delta_words(parent, g)
+            if d is not None:
+                n = sum(len(g["set"][t]) for t in TENSOR_ORDER)
+                blob = f"delta {len(d)}/{n} words"
+        print(f"  gen{g['seq']} {g['kind']:7s} {format_hash(g['hash'])} [{blob}]")
+
+    measure_touched_fraction()
+
+
+if __name__ == "__main__":
+    main()

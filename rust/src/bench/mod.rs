@@ -143,7 +143,7 @@ impl Report {
     /// Serialize into `dir/BENCH_<name>.json`; returns the path written.
     pub fn write_to(&self, dir: &std::path::Path) -> anyhow::Result<PathBuf> {
         let path = dir.join(format!("BENCH_{}.json", self.name));
-        std::fs::write(&path, self.to_json().dump())?;
+        std::fs::write(&path, self.to_json().dump()?)?;
         Ok(path)
     }
 
@@ -200,7 +200,7 @@ mod tests {
         let m = j.get("metrics").unwrap();
         assert_eq!(m.get("throughput_msps").unwrap().as_f64().unwrap(), 12.5);
         // round trip through the serializer
-        let again = Json::parse(&j.dump()).unwrap();
+        let again = Json::parse(&j.dump().unwrap()).unwrap();
         assert_eq!(again, j);
     }
 

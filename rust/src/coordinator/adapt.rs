@@ -36,7 +36,7 @@ use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::service::{Cmd, EngineBuild};
 use crate::dpd::adapt::{AdaptConfig, AdaptTrainer};
@@ -266,6 +266,20 @@ pub(crate) enum AdaptCmd {
     /// Barrier: replied to once every command queued before it has
     /// been fully processed (feedback consumed, swaps *sent*).
     Sync { id: u64, reply: SyncSender<()> },
+    /// Fleet-rollout deployment: hot-swap the session's engine to an
+    /// externally supplied float generation (a weight-store blob the
+    /// rollout controller resolved), through the *same* swap path a
+    /// trainer refresh takes — so the pre/post ACPR meter bookkeeping
+    /// rotates identically and `post_refresh_acpr_dbc` latches the
+    /// deployed generation's first full window. The trainer is
+    /// reseated on the deployed twin (fresh optimizer state: the new
+    /// generation starts its own adaptation lineage). Replied once
+    /// the swap has been sent to the engine worker.
+    Deploy {
+        id: u64,
+        w: Box<GruWeights>,
+        reply: SyncSender<Result<()>>,
+    },
     Close { id: u64 },
 }
 
@@ -349,9 +363,11 @@ impl Slot {
         }
     }
 
-    /// Re-quantize the twin and hot-swap the session engine.
-    fn refresh(&mut self, id: u64) {
-        let build = (self.rebuild)(&self.trainer.snapshot());
+    /// Hot-swap the session engine to `w` (the refresh path with the
+    /// weight source factored out: a trainer refresh deploys the
+    /// adapted twin, a rollout deploy a store generation).
+    fn swap_to(&mut self, id: u64, w: &GruWeights) {
+        let build = (self.rebuild)(w);
         // blocking send is safe: the engine worker never blocks on
         // session output, so its command queue always drains; a failed
         // in-worker build poisons the session like any engine failure
@@ -366,6 +382,24 @@ impl Slot {
         // by samples the old engine predistorted
         self.meter_x.clear();
         self.meter_y.clear();
+    }
+
+    /// Re-quantize the twin and hot-swap the session engine.
+    fn refresh(&mut self, id: u64) {
+        let w = self.trainer.snapshot();
+        self.swap_to(id, &w);
+    }
+
+    /// Rollout deployment: swap to an externally supplied generation
+    /// and reseat the trainer on it (fresh optimizer state — the
+    /// deployed generation starts its own adaptation lineage; the
+    /// slot's refresh counter survives).
+    fn deploy(&mut self, id: u64, w: &GruWeights) -> Result<()> {
+        let trainer = AdaptTrainer::new(w.clone(), self.trainer.config())
+            .map_err(|e| anyhow!("deploying weight generation: {e:#}"))?;
+        self.trainer = Box::new(trainer);
+        self.swap_to(id, w);
+        Ok(())
     }
 }
 
@@ -421,6 +455,17 @@ pub(crate) fn adapt_worker_loop(rx: Receiver<AdaptCmd>) {
             }
             AdaptCmd::Sync { reply, .. } => {
                 reply.send(()).ok();
+            }
+            AdaptCmd::Deploy { id, w, reply } => {
+                let Some(slot) = slots.get_mut(&id) else {
+                    reply
+                        .send(Err(anyhow!("no adaptive slot for session {id}")))
+                        .ok();
+                    continue;
+                };
+                let r = slot.deploy(id, &w);
+                slot.publish();
+                reply.send(r).ok();
             }
             AdaptCmd::Close { id } => {
                 slots.remove(&id);

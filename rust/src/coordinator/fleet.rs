@@ -146,6 +146,11 @@ pub struct FleetConfig {
     pub policy: ShardPolicy,
     /// admission limits (default: unlimited)
     pub admission: AdmissionConfig,
+    /// how long [`Fleet::drain`] waits for session owners to release
+    /// their handles before giving up with a typed [`DrainTimeout`].
+    /// `None` (the default, matching the pre-deadline behavior) waits
+    /// forever.
+    pub drain_deadline: Option<Duration>,
 }
 
 impl Default for FleetConfig {
@@ -155,9 +160,37 @@ impl Default for FleetConfig {
             service: ServiceConfig::default(),
             policy: ShardPolicy::RoundRobin,
             admission: AdmissionConfig::default(),
+            drain_deadline: None,
         }
     }
 }
+
+/// [`Fleet::drain`] gave up waiting: some session handles were never
+/// finished or dropped within [`FleetConfig::drain_deadline`]. The
+/// fleet stops admitting (the draining flag stays set) and the shard
+/// services are *dropped, not joined* — a leaked handle keeps its
+/// worker channel alive, so joining would inherit the very hang the
+/// deadline exists to break; workers wind down on their own when the
+/// last handle disappears.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DrainTimeout {
+    /// sessions still open when the deadline expired
+    pub stuck_sessions: usize,
+    /// the configured deadline that expired
+    pub deadline: Duration,
+}
+
+impl std::fmt::Display for DrainTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "fleet drain timed out after {:?} with {} session(s) still open",
+            self.deadline, self.stuck_sessions
+        )
+    }
+}
+
+impl std::error::Error for DrainTimeout {}
 
 /// Live per-shard snapshot inside [`FleetStats`].
 #[derive(Clone, Debug)]
@@ -444,12 +477,26 @@ impl Fleet {
     /// flight frames are never lost: each session's own
     /// `finish`/`drop` flushes its stream before drain can observe the
     /// open count reach zero.
+    ///
+    /// With [`FleetConfig::drain_deadline`] set, a leaked handle no
+    /// longer hangs the drain forever: once the deadline expires the
+    /// call returns a typed [`DrainTimeout`] carrying the stuck-session
+    /// count, and the shard services are dropped without joining
+    /// (joining would wait on the leaked handle's worker channel —
+    /// exactly the hang the deadline breaks).
     pub fn drain(self) -> Result<FleetStats> {
         self.shared.place.lock().expect("fleet placement lock").draining = true;
+        let t0 = Instant::now();
         loop {
             let open = self.shared.place.lock().expect("fleet placement lock").open_total;
             if open == 0 {
                 break;
+            }
+            if let Some(deadline) = self.cfg.drain_deadline {
+                if t0.elapsed() >= deadline {
+                    drop(self.services);
+                    return Err(DrainTimeout { stuck_sessions: open, deadline }.into());
+                }
             }
             std::thread::sleep(Duration::from_micros(500));
         }
@@ -588,6 +635,12 @@ impl FleetSession {
     /// See [`StreamSession::adapt_barrier`].
     pub fn adapt_barrier(&mut self) -> Result<()> {
         self.inner().adapt_barrier()
+    }
+
+    /// See [`StreamSession::deploy_weights`] — the rollout
+    /// controller's per-session push seam.
+    pub fn deploy_weights(&mut self, w: &GruWeights) -> Result<()> {
+        self.inner().deploy_weights(w)
     }
 
     /// See [`StreamSession::finish`]: flush the tail, wait for every

@@ -337,6 +337,7 @@ fn run_level(cfg: &LoadgenConfig, n: usize) -> Result<LevelResult> {
         // old session before reopening, so the reopen always fits,
         // and the probe below exercises the typed rejection
         admission: AdmissionConfig { max_sessions: n, ..Default::default() },
+        ..Default::default()
     })?;
 
     // shared deterministic stimulus (one block, every slot cycles it)
@@ -537,7 +538,7 @@ pub fn write_json_to(
         ),
     ]);
     let path = dir.join("BENCH_load.json");
-    std::fs::write(&path, j.dump()).with_context(|| format!("writing {}", path.display()))?;
+    std::fs::write(&path, j.dump()?).with_context(|| format!("writing {}", path.display()))?;
     Ok(path)
 }
 

@@ -30,6 +30,13 @@
 //! deployment shape the `loadgen` harness ([`loadgen`]) drives to
 //! find the saturation knee.
 //!
+//! Weight distribution across that fleet is the rollout layer
+//! ([`rollout`]): a [`RolloutController`] pushes a content-addressed
+//! generation from the [`WeightStore`](crate::runtime::WeightStore)
+//! canary-first — one shard deploys, its per-session post-refresh
+//! ACPR meters judge, and the candidate is promoted fleet-wide or
+//! rolled back bit-exactly to its parent generation.
+//!
 //! [`Coordinator`] remains as the one-shot compatibility wrapper
 //! (open a session, push everything, finish) for batch callers.
 
@@ -38,17 +45,22 @@ pub mod fleet;
 pub mod framer;
 pub mod loadgen;
 pub mod pipeline;
+pub mod rollout;
 pub mod service;
 pub mod session;
 pub mod stats;
 
 pub use adapt::{AdaptStats, SessionAdaptConfig};
 pub use fleet::{
-    AdmissionConfig, AdmissionError, Fleet, FleetConfig, FleetSession, FleetStats,
-    ShardPolicy, ShardStats,
+    AdmissionConfig, AdmissionError, DrainTimeout, Fleet, FleetConfig, FleetSession,
+    FleetStats, ShardPolicy, ShardStats,
 };
 pub use framer::Framer;
 pub use pipeline::{Coordinator, CoordinatorConfig, EngineKind, StreamOutput};
+pub use rollout::{
+    RolloutConfig, RolloutController, RolloutOutcome, RolloutPlan, RolloutReport,
+    RolloutVerdict,
+};
 pub use service::{DpdService, ServiceConfig};
 pub use session::{SessionConfig, SessionStats, StreamSession};
 pub use stats::PipelineStats;

@@ -1,0 +1,374 @@
+//! Fleet-wide canary rollout of weight-store generations.
+//!
+//! The [`WeightStore`](crate::runtime::WeightStore) versions weight
+//! generations; this module is the control loop that pushes one onto
+//! a live [`Fleet`](super::Fleet) without trusting it:
+//!
+//! ```text
+//!   store gen ──► canary shard ──► watch post-refresh ACPR ──┬─► promote everywhere
+//!   (candidate)   (one shard's         (per-session meter)   │
+//!                  sessions)                                 └─► roll back to parent
+//! ```
+//!
+//! The deployment seam is the adapt plane's existing hot-swap path
+//! ([`FleetSession::deploy_weights`]): every deploy rides a
+//! `Cmd::Swap` at a frame boundary and rotates the session's pre/post
+//! ACPR meter exactly like a trainer refresh, so the judgement signal
+//! — [`AdaptStats::post_refresh_acpr_dbc`] minus
+//! `pre_refresh_acpr_dbc` — is the same instrument the adaptation
+//! loop already trusts. A candidate that regresses the canary shard's
+//! ACPR beyond [`RolloutConfig::acpr_budget_db`] is rolled back to
+//! its **parent** generation: the store verified the parent blob's
+//! fingerprint at load, so the rebuilt engines are bit-identical to
+//! the pre-rollout ones (same weights → same batch class → same
+//! function; `tests/rollout.rs` pins this against fresh reference
+//! sessions).
+//!
+//! The controller is deliberately phase-split — [`plan`] /
+//! [`canary`] / [`judge`] / [`promote`] / [`rollback`] are each
+//! public, with [`run`] as the composed loop — so tests (and a
+//! cautious operator) can hold the rollout mid-state and assert what
+//! each shard is serving.
+//!
+//! Rollouts deploy **float** generations: the per-session rebuild
+//! closure re-quantizes to whatever format the session was opened
+//! with, so one candidate serves a heterogeneous fleet (Q2.10 next to
+//! 8-bit next to f64 sessions) the same way a trainer refresh does.
+//!
+//! [`plan`]: RolloutController::plan
+//! [`canary`]: RolloutController::canary
+//! [`judge`]: RolloutController::judge
+//! [`promote`]: RolloutController::promote
+//! [`rollback`]: RolloutController::rollback
+//! [`run`]: RolloutController::run
+
+use anyhow::{ensure, Context, Result};
+
+use super::adapt::AdaptStats;
+use super::fleet::FleetSession;
+use crate::runtime::store::{format_hash, WeightStore};
+
+/// Rollout policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct RolloutConfig {
+    /// maximum tolerated ACPR regression on the canary shard, in dB
+    /// (post − pre; positive = linearization got worse). A candidate
+    /// whose worst canary session regresses beyond this rolls back.
+    pub acpr_budget_db: f64,
+    /// which shard canaries first; `None` picks the lowest shard that
+    /// holds a session
+    pub canary_shard: Option<usize>,
+    /// [`run`](RolloutController::run) gives up (with an error, not a
+    /// rollback) if the canary meters haven't produced a verdict
+    /// after this many pump rounds — a watchdog against a feedback
+    /// path that went quiet
+    pub max_pump_rounds: usize,
+}
+
+impl Default for RolloutConfig {
+    fn default() -> Self {
+        RolloutConfig { acpr_budget_db: 1.0, canary_shard: None, max_pump_rounds: 512 }
+    }
+}
+
+/// A validated rollout: the candidate, the generation a failed canary
+/// rolls back to, and the shard that goes first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RolloutPlan {
+    pub candidate: u64,
+    pub parent: u64,
+    pub canary_shard: usize,
+}
+
+/// The canary verdict once every canary session has a post-deploy
+/// measurement window on the record.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RolloutVerdict {
+    /// worst (most positive) post − pre ACPR delta across the canary
+    /// sessions, dB
+    pub worst_regression_db: f64,
+    /// canary sessions judged
+    pub sessions: usize,
+    /// within budget?
+    pub pass: bool,
+}
+
+/// How a composed [`run`](RolloutController::run) ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RolloutOutcome {
+    /// the candidate is now deployed on every shard
+    Promoted,
+    /// the canary regressed; the canary shard is back on the parent
+    /// generation and no other shard ever saw the candidate
+    RolledBack,
+}
+
+/// Full record of a composed rollout.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RolloutReport {
+    pub plan: RolloutPlan,
+    pub verdict: RolloutVerdict,
+    pub outcome: RolloutOutcome,
+    /// sessions the candidate reached (canary + promoted; after a
+    /// rollback this counts the canary sessions that briefly ran it)
+    pub deployed_sessions: usize,
+}
+
+/// The canary-first rollout driver. Stateless between calls — all
+/// rollout state lives in the [`RolloutPlan`] and the fleet itself.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RolloutController {
+    pub cfg: RolloutConfig,
+}
+
+impl RolloutController {
+    pub fn new(cfg: RolloutConfig) -> RolloutController {
+        RolloutController { cfg }
+    }
+
+    /// Validate a candidate against the store and the fleet's live
+    /// sessions: the candidate must be a stored float generation with
+    /// a stored float parent (the rollback target), every session
+    /// must be adaptive (non-adaptive sessions have no deploy seam),
+    /// and the canary shard must actually hold a session.
+    pub fn plan(
+        &self,
+        store: &WeightStore,
+        candidate: u64,
+        sessions: &[FleetSession],
+    ) -> Result<RolloutPlan> {
+        ensure!(!sessions.is_empty(), "rollout needs at least one live session");
+        for s in sessions {
+            ensure!(
+                s.is_adaptive(),
+                "session {} on shard {} is not adaptive — it cannot receive deployments",
+                s.id(),
+                s.shard()
+            );
+        }
+        let rec = *store.record(candidate).with_context(|| {
+            format!(
+                "candidate {} is not in the store ({} generation(s) stored)",
+                format_hash(candidate),
+                store.len()
+            )
+        })?;
+        store
+            .get_float(candidate)
+            .with_context(|| "rollouts deploy float generations")?;
+        let parent = rec.parent.with_context(|| {
+            format!(
+                "candidate {} is a lineage root: no parent to roll back to",
+                format_hash(candidate)
+            )
+        })?;
+        store.get_float(parent).with_context(|| {
+            format!("rollback target {} must be a stored float generation", format_hash(parent))
+        })?;
+        let canary_shard = match self.cfg.canary_shard {
+            Some(s) => s,
+            None => sessions.iter().map(|s| s.shard()).min().expect("non-empty"),
+        };
+        ensure!(
+            sessions.iter().any(|s| s.shard() == canary_shard),
+            "canary shard {canary_shard} holds no session"
+        );
+        Ok(RolloutPlan { candidate, parent, canary_shard })
+    }
+
+    /// Whether every canary session's ACPR meter has a completed
+    /// window — the *pre* metric a deploy will latch. [`run`] pumps
+    /// traffic until this holds before canarying.
+    ///
+    /// [`run`]: RolloutController::run
+    pub fn canary_warmed(&self, plan: &RolloutPlan, sessions: &[FleetSession]) -> bool {
+        sessions
+            .iter()
+            .filter(|s| s.shard() == plan.canary_shard)
+            .all(|s| adapt(s).window_acpr_dbc.is_some())
+    }
+
+    /// Deploy the candidate to every session on the canary shard.
+    /// Returns the number of sessions canaried. Requires warmed
+    /// meters ([`canary_warmed`](RolloutController::canary_warmed)):
+    /// a deploy latches the last completed window as the *pre*
+    /// metric, and without one there is nothing to judge against.
+    pub fn canary(
+        &self,
+        store: &WeightStore,
+        plan: &RolloutPlan,
+        sessions: &mut [FleetSession],
+    ) -> Result<usize> {
+        ensure!(
+            self.canary_warmed(plan, sessions),
+            "canary shard {} has sessions without a completed ACPR window — \
+             pump feedback before canarying",
+            plan.canary_shard
+        );
+        let w = store.get_float(plan.candidate)?.clone();
+        let mut n = 0;
+        for s in sessions.iter_mut().filter(|s| s.shard() == plan.canary_shard) {
+            s.deploy_weights(&w)
+                .with_context(|| format!("canarying session {} ", s.id()))?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Judge the canary: `Ok(None)` while any canary session is still
+    /// waiting for its first post-deploy window (pump more traffic),
+    /// `Ok(Some(verdict))` once every canary session has post-refresh
+    /// ACPR on the record.
+    pub fn judge(
+        &self,
+        plan: &RolloutPlan,
+        sessions: &[FleetSession],
+    ) -> Result<Option<RolloutVerdict>> {
+        let mut worst = f64::NEG_INFINITY;
+        let mut n = 0;
+        for s in sessions.iter().filter(|s| s.shard() == plan.canary_shard) {
+            let a = adapt(s);
+            let Some(post) = a.post_refresh_acpr_dbc else { return Ok(None) };
+            let pre = a.pre_refresh_acpr_dbc.with_context(|| {
+                format!(
+                    "canary session {} lost its pre-deploy window — was it deployed \
+                     to outside this rollout?",
+                    s.id()
+                )
+            })?;
+            worst = worst.max(post - pre);
+            n += 1;
+        }
+        ensure!(n > 0, "canary shard {} holds no session", plan.canary_shard);
+        Ok(Some(RolloutVerdict {
+            worst_regression_db: worst,
+            sessions: n,
+            pass: worst <= self.cfg.acpr_budget_db,
+        }))
+    }
+
+    /// Deploy the candidate to every session *off* the canary shard
+    /// (the canary shard already runs it). Returns the number of
+    /// sessions promoted to.
+    pub fn promote(
+        &self,
+        store: &WeightStore,
+        plan: &RolloutPlan,
+        sessions: &mut [FleetSession],
+    ) -> Result<usize> {
+        let w = store.get_float(plan.candidate)?.clone();
+        let mut n = 0;
+        for s in sessions.iter_mut().filter(|s| s.shard() != plan.canary_shard) {
+            s.deploy_weights(&w)
+                .with_context(|| format!("promoting to session {}", s.id()))?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Roll the canary shard back to the parent generation. The
+    /// parent blob's fingerprint was verified by the store, so the
+    /// rebuilt engines are bit-identical to the pre-rollout ones; no
+    /// other shard ever saw the candidate.
+    pub fn rollback(
+        &self,
+        store: &WeightStore,
+        plan: &RolloutPlan,
+        sessions: &mut [FleetSession],
+    ) -> Result<usize> {
+        let w = store.get_float(plan.parent)?.clone();
+        let mut n = 0;
+        for s in sessions.iter_mut().filter(|s| s.shard() == plan.canary_shard) {
+            s.deploy_weights(&w)
+                .with_context(|| format!("rolling back session {}", s.id()))?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// The composed rollout: plan → warm → canary → judge (pumping
+    /// `pump` between looks) → promote or roll back. `pump` must push
+    /// one round of traffic *and feedback* through every session —
+    /// the judgement signal is the feedback meter, so a pump that
+    /// only pushes the forward path will time the watchdog out.
+    pub fn run(
+        &self,
+        store: &WeightStore,
+        candidate: u64,
+        sessions: &mut [FleetSession],
+        mut pump: impl FnMut(&mut [FleetSession]) -> Result<()>,
+    ) -> Result<RolloutReport> {
+        let plan = self.plan(store, candidate, sessions)?;
+        let mut rounds = 0usize;
+        while !self.canary_warmed(&plan, sessions) {
+            self.tick(&mut rounds, "warming the canary ACPR meters")?;
+            pump(sessions).context("pumping pre-canary traffic")?;
+        }
+        let canaried = self.canary(store, &plan, sessions)?;
+        let verdict = loop {
+            if let Some(v) = self.judge(&plan, sessions)? {
+                break v;
+            }
+            self.tick(&mut rounds, "waiting for post-deploy canary windows")?;
+            pump(sessions).context("pumping canary traffic")?;
+        };
+        if verdict.pass {
+            let promoted = self.promote(store, &plan, sessions)?;
+            Ok(RolloutReport {
+                plan,
+                verdict,
+                outcome: RolloutOutcome::Promoted,
+                deployed_sessions: canaried + promoted,
+            })
+        } else {
+            self.rollback(store, &plan, sessions)?;
+            Ok(RolloutReport {
+                plan,
+                verdict,
+                outcome: RolloutOutcome::RolledBack,
+                deployed_sessions: canaried,
+            })
+        }
+    }
+
+    fn tick(&self, rounds: &mut usize, what: &str) -> Result<()> {
+        *rounds += 1;
+        ensure!(
+            *rounds <= self.cfg.max_pump_rounds,
+            "rollout watchdog: {} exceeded {} pump rounds — is the feedback path live?",
+            what,
+            self.cfg.max_pump_rounds
+        );
+        Ok(())
+    }
+}
+
+fn adapt(s: &FleetSession) -> AdaptStats {
+    s.stats().adapt.unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults() {
+        let cfg = RolloutConfig::default();
+        assert!(cfg.acpr_budget_db > 0.0, "a zero budget would fail noise-level jitter");
+        assert!(cfg.canary_shard.is_none(), "canary shard is picked from live sessions");
+        assert!(cfg.max_pump_rounds > 0);
+    }
+
+    #[test]
+    fn verdict_edges() {
+        let c = RolloutController::new(RolloutConfig {
+            acpr_budget_db: 2.0,
+            ..Default::default()
+        });
+        // exactly on budget passes; over it fails — pin the boundary
+        for (worst, want) in [(2.0, true), (2.0 + 1e-9, false), (-5.0, true)] {
+            let pass = worst <= c.cfg.acpr_budget_db;
+            assert_eq!(pass, want, "worst {worst}");
+        }
+    }
+}

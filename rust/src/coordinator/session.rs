@@ -35,6 +35,7 @@ use super::framer::Framer;
 use super::service::{Cmd, OutMsg};
 use super::stats::{LatencyAgg, PipelineStats};
 use super::StreamOutput;
+use crate::dpd::GruWeights;
 use crate::runtime::EngineKind;
 use crate::util::hist::AtomicHistogram;
 
@@ -353,6 +354,34 @@ impl StreamSession {
             .send(AdaptCmd::Sync { id: self.id, reply: reply_tx })
             .map_err(|_| anyhow!("the adapt worker terminated"))?;
         reply_rx.recv().map_err(|_| anyhow!("the adapt worker died mid-barrier"))
+    }
+
+    /// Deploy an externally supplied float weight generation to this
+    /// session: the engine is hot-swapped at a frame boundary through
+    /// the same path a trainer refresh takes (so the pre/post ACPR
+    /// meter rotates and [`AdaptStats::post_refresh_acpr_dbc`] will
+    /// latch the deployed generation's first full feedback window),
+    /// and the trainer is reseated on the deployed twin. This is the
+    /// fleet rollout controller's push seam
+    /// ([`crate::coordinator::rollout`]); only adaptive sessions can
+    /// receive deployments. Returns once the swap has been *sent* —
+    /// frames pushed after this call run on the deployed engine.
+    pub fn deploy_weights(&mut self, w: &GruWeights) -> Result<()> {
+        self.check()?;
+        let Some(link) = &self.adapt else {
+            bail!("session {} is not adaptive (SessionConfig.adapt not set)", self.id)
+        };
+        let (reply_tx, reply_rx) = sync_channel(1);
+        link.tx
+            .send(AdaptCmd::Deploy {
+                id: self.id,
+                w: Box::new(w.clone()),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("the adapt worker terminated"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("the adapt worker died mid-deploy"))?
     }
 
     /// Reset the engine's hidden state, in stream order: a partial

@@ -683,4 +683,75 @@ mod tests {
         std::fs::write(&path, bad).unwrap();
         assert!(GruWeights::load(&path).is_err());
     }
+
+    #[test]
+    fn load_failures_name_what_went_wrong() {
+        let dir = std::env::temp_dir().join("dpd_ne_test_weights4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let load_err = |name: &str, text: &str| -> String {
+            let path = dir.join(name);
+            std::fs::write(&path, text).unwrap();
+            format!("{:#}", GruWeights::load(&path).unwrap_err())
+        };
+        let good = fake_weights_json(10, 4);
+
+        // not JSON at all -> the load context survives
+        let err = load_err("garbage.json", "not json {");
+        assert!(err.contains("loading GRU weights"), "{err}");
+
+        // structurally valid JSON with no params block
+        let err = load_err("noparams.json", "{\"meta\":{\"bits\":12}}");
+        assert!(err.contains("params"), "{err}");
+
+        // w_ih row count that is not a gate multiple
+        let err = load_err("rows.json", &good.replace("\"shape\":[30,4]", "\"shape\":[31,4]"));
+        assert!(err.contains("w_ih rows not divisible by 3"), "{err}");
+
+        // negative dimension
+        let err = load_err("neg.json", &good.replace("\"shape\":[30,4]", "\"shape\":[30,-4]"));
+        assert!(err.contains("negative"), "{err}");
+
+        // truncated hidden-gate tensor: error names tensor + both lengths
+        // (hand-built H=1/F=1 doc; b_hh carries 2 of the 3 required)
+        let err = load_err(
+            "short.json",
+            "{\"params\":{\
+             \"w_ih\":{\"shape\":[3,1],\"data\":[0.1,0.2,0.3]},\
+             \"b_ih\":{\"shape\":[3],\"data\":[0.0,0.0,0.0]},\
+             \"w_hh\":{\"shape\":[3,1],\"data\":[0.1,0.2,0.3]},\
+             \"b_hh\":{\"shape\":[3],\"data\":[0.0,0.0]},\
+             \"w_fc\":{\"shape\":[2,1],\"data\":[1.0,0.0]},\
+             \"b_fc\":{\"shape\":[2],\"data\":[0.0,0.0]}}}",
+        );
+        assert!(err.contains("b_hh"), "{err}");
+        assert!(err.contains("2 != 3"), "{err}");
+
+        // a declared shape larger than the data is a length error too —
+        // dims come from the shape, data is checked against them
+        let err = load_err("bigshape.json", &good.replace("\"shape\":[30,4]", "\"shape\":[33,4]"));
+        assert!(err.contains("w_ih"), "{err}");
+        assert!(err.contains("132"), "{err}");
+    }
+
+    #[test]
+    fn prune_mask_is_total_over_the_rho_range() {
+        let codes = [5, -1, 0, 7, -3, 2, 0, -7];
+        // overdriven rho clamps to 100% — every entry pruned, no panic,
+        // and identical to the rho=100 mask
+        let full = prune_mask(&codes, 100);
+        for rho in [101u8, 150, 255] {
+            assert_eq!(prune_mask(&codes, rho), full, "rho={rho}");
+        }
+        assert!(prune_mask(&codes, 255).iter().all(|&p| p));
+        // empty input: every rho yields an empty mask
+        for rho in [0u8, 50, 100, 255] {
+            assert!(prune_mask(&[], rho).is_empty(), "rho={rho}");
+        }
+        // the sparse constructor inherits the clamp: rho=255 stores
+        // only what zero-code elision would anyway (nothing)
+        let qw = QGruWeights::synthetic(3, QSpec::Q12);
+        let sw = qw.to_sparse(255);
+        assert_eq!(sw.gate_nnz(), 0);
+        assert_eq!(sw.rho, 255, "declared rho is preserved verbatim");
+    }
 }

@@ -16,6 +16,11 @@
 //!                through a sharded Fleet under open-loop arrivals and
 //!                emit BENCH_load.json (sessions x MSps curve, knee,
 //!                latency quantiles); `--quick` is the CI smoke shape
+//!   rollout      canary-first weight rollout across a hermetic fleet:
+//!                a content-addressed candidate generation deploys to
+//!                one shard, the post-refresh ACPR meters judge it,
+//!                and it promotes fleet-wide or rolls back to its
+//!                parent (`--inject-bad` forces the rollback path)
 //!
 //! Flags are checked against a per-command allowlist: an unknown flag
 //! is a usage error naming the offending flag, never a silent no-op
@@ -98,6 +103,16 @@ fn allowed_flags(cmd: &str) -> Option<Vec<&'static str>> {
                 "seed",
             ])
         }
+        "rollout" => {
+            return Some(vec![
+                "shards",
+                "sessions",
+                "budget-db",
+                "inject-bad",
+                "seed",
+                "symbols",
+            ])
+        }
         _ => return None,
     };
     Some(COMMON_FLAGS.iter().chain(extra).copied().collect())
@@ -171,7 +186,7 @@ fn usage() -> String {
     let syntax: Vec<&'static str> = rows.iter().map(|r| r.syntax).collect();
     let host_simd = rows.iter().any(|r| r.simd == Some(true));
     format!(
-        "usage: dpd-ne <run|serve|stream|loadgen|asic-report|fpga-report|sweep|info> [flags]\n\
+        "usage: dpd-ne <run|serve|stream|loadgen|rollout|asic-report|fpga-report|sweep|info> [flags]\n\
          flags: --artifacts <dir> --engine <{engines}> \
          --streams <n> --symbols <n> --seed <n>\n\
          serve: --sessions <n> --workers <n> --rounds <n> --shadow <engine> --batch <n>\n\
@@ -180,6 +195,8 @@ fn usage() -> String {
          loadgen: fleet saturation sweep -> BENCH_load.json; --quick for the CI smoke shape, \
          --shards/--workers/--sessions/--samples/--chunk/--frame/--lives/--batch/\
          --adaptive-every <n> --policy <rr|least|sticky> --arrival <poisson|bursty> --seed <n>\n\
+         rollout: canary-first weight rollout across a hermetic fleet \
+         (--shards <n> --sessions <per-shard> --budget-db <dB> --inject-bad --seed <n>)\n\
          delta: θ in codes rides in the spec (delta:32; 0 = bit-identical to 'fixed'); \
          --delta-theta <codes> is a deprecated alias\n\
          +simd: AVX2 gate kernels, host support {simd}; \
@@ -205,6 +222,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&flags),
         "stream" => cmd_stream(&flags),
         "loadgen" => cmd_loadgen(&flags),
+        "rollout" => cmd_rollout(&flags),
         "asic-report" => cmd_asic_report(&flags),
         "fpga-report" => cmd_fpga_report(),
         "sweep" => cmd_sweep(&flags),
@@ -596,6 +614,154 @@ fn cmd_loadgen(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `rollout`: hermetic canary-rollout demo. Builds a content-addressed
+/// weight store (base generation + a candidate child), opens a fleet of
+/// adaptive sessions against the GAN-like PA model, and runs the
+/// [`RolloutController`](dpd_ne::coordinator::RolloutController): the
+/// candidate deploys to one canary shard, the per-session post-refresh
+/// ACPR meters judge it against `--budget-db`, and it is promoted
+/// fleet-wide or rolled back to its parent. `--inject-bad` wrecks the
+/// candidate's output head so the canary visibly catches it and the
+/// rollback path runs. No artifact tree needed.
+fn cmd_rollout(flags: &HashMap<String, String>) -> Result<()> {
+    use dpd_ne::coordinator::{
+        Fleet, FleetConfig, FleetSession, RolloutConfig, RolloutController, RolloutOutcome,
+    };
+    use dpd_ne::dpd::adapt::identity_init;
+    use dpd_ne::runtime::store::{format_hash, GenMeta, WeightStore};
+    use dpd_ne::util::Rng;
+
+    let shards: usize = flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let per_shard: usize = flags.get("sessions").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let budget_db: f64 = flags.get("budget-db").map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+    let inject_bad = flags.contains_key("inject-bad");
+
+    // lineage: base generation -> candidate child, content-addressed
+    let w0 = identity_init(seed, 10, 0.15);
+    let mut store = WeightStore::new();
+    let gen0 = store.publish_float(&w0, GenMeta::default())?;
+    let mut w1 = w0.clone();
+    let mut rng = Rng::new(seed ^ 0x9e37_79b9);
+    if inject_bad {
+        // wreck the output head — the canary meter must catch this
+        for v in w1.w_fc.iter_mut() {
+            *v += rng.range(-1.5, 1.5);
+        }
+    } else {
+        // a realistic adaptation step: a few words nudged below the
+        // Q2.10 code step, so the deployed engines stay bit-identical
+        for _ in 0..8 {
+            let i = rng.below(w1.w_hh.len() as u64) as usize;
+            w1.w_hh[i] += rng.range(-1e-4, 1e-4);
+        }
+    }
+    let cand = store.publish_float(&w1, GenMeta { adapt_steps: 8, ..Default::default() })?;
+
+    let fleet = Fleet::start(FleetConfig {
+        shards,
+        service: ServiceConfig { workers: 1, frame_len: 64, ..Default::default() },
+        ..Default::default()
+    })?;
+    let acfg = SessionAdaptConfig {
+        // the controller owns the deployment cadence: the trainer must
+        // never self-refresh over it
+        refresh_interval: u64::MAX,
+        meter_window: 512,
+        meter_nfft: 256,
+        ..Default::default()
+    };
+    let mut sessions: Vec<FleetSession> = Vec::new();
+    for _ in 0..shards * per_shard {
+        sessions.push(fleet.open_adaptive_session(
+            SessionConfig { engine: EngineKind::Fixed, adapt: Some(acfg), ..Default::default() },
+            w0.clone(),
+        )?);
+    }
+    println!(
+        "rollout: {} shard(s) x {} session(s), base {}, candidate {}{}, budget {budget_db} dB",
+        shards,
+        per_shard,
+        format_hash(gen0),
+        format_hash(cand),
+        if inject_bad { " (injected-bad)" } else { "" },
+    );
+
+    // pump: one band-limited chunk + PA feedback per session per round
+    // (ACPR needs an in-band signal; white noise has no adjacent
+    // channel to regrow into)
+    let sig = test_signal(flags)?;
+    let pa = RappMemPa::new(PaSpec::ganlike());
+    const CHUNK: usize = 512;
+    let mut cursors = vec![0usize; sessions.len()];
+    let controller = RolloutController::new(RolloutConfig {
+        acpr_budget_db: budget_db,
+        ..Default::default()
+    });
+    let report = controller.run(&store, cand, &mut sessions, |sessions| {
+        for (k, s) in sessions.iter_mut().enumerate() {
+            let x: Vec<[f64; 2]> =
+                (0..CHUNK).map(|j| sig.iq[(cursors[k] + j) % sig.iq.len()]).collect();
+            cursors[k] = (cursors[k] + CHUNK) % sig.iq.len();
+            s.push(&x)?;
+            let mut u = Vec::with_capacity(CHUNK);
+            while u.len() < CHUNK {
+                u.extend(s.drain()?);
+            }
+            let y = pa.run(&u);
+            s.adapt_feedback(&x, &u, &y)?;
+            s.adapt_barrier()?;
+        }
+        Ok(())
+    })?;
+
+    let mut t = Table::new(
+        "Canary rollout (per-session post-deploy linearization)",
+        &["session", "shard", "role", "window ACPR (dBc)", "last deploy ΔACPR (dB)"],
+    );
+    for (k, s) in sessions.iter().enumerate() {
+        let a = s.stats().adapt.unwrap_or_default();
+        t.row(&[
+            format!("{k}"),
+            s.shard().to_string(),
+            if s.shard() == report.plan.canary_shard { "canary".into() } else { "fleet".into() },
+            a.window_acpr_dbc.map(f1).unwrap_or_else(|| "-".into()),
+            a.refresh_acpr_gain_db().map(|g| f1(-g)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!("{}", t.render());
+    match report.outcome {
+        RolloutOutcome::Promoted => println!(
+            "PROMOTED: candidate {} on all {} session(s); worst canary regression {} dB \
+             (budget {budget_db})",
+            format_hash(cand),
+            report.deployed_sessions,
+            f2(report.verdict.worst_regression_db),
+        ),
+        RolloutOutcome::RolledBack => println!(
+            "ROLLED BACK to parent {}: worst canary regression {} dB exceeded the \
+             {budget_db} dB budget; {} canary session(s) restored, other shards never \
+             saw the candidate",
+            format_hash(report.plan.parent),
+            f2(report.verdict.worst_regression_db),
+            report.verdict.sessions,
+        ),
+    }
+    if let Some(ds) = store.delta_stats(cand) {
+        println!(
+            "store: {} generation(s); candidate delta-encodes {}/{} words \
+             ({:.2}% touched)",
+            store.len(),
+            ds.changed_words,
+            ds.total_words,
+            100.0 * ds.touched_fraction(),
+        );
+    }
+    drop(sessions);
+    fleet.drain()?;
+    Ok(())
+}
+
 fn cmd_asic_report(flags: &HashMap<String, String>) -> Result<()> {
     let m = Manifest::discover(artifacts(flags).as_deref())?;
     let w = QGruWeights::load_params_int(&m.weights_main, QSpec::new(m.qspec_bits)?)?;
@@ -739,12 +905,31 @@ mod tests {
 
     #[test]
     fn every_dispatched_command_has_an_allowlist() {
-        for cmd in
-            ["run", "serve", "stream", "loadgen", "asic-report", "fpga-report", "sweep", "info"]
-        {
+        for cmd in [
+            "run",
+            "serve",
+            "stream",
+            "loadgen",
+            "rollout",
+            "asic-report",
+            "fpga-report",
+            "sweep",
+            "info",
+        ] {
             assert!(allowed_flags(cmd).is_some(), "no allowlist for {cmd}");
         }
         assert!(allowed_flags("bogus").is_none());
+    }
+
+    #[test]
+    fn rollout_allowlist_covers_every_flag_cmd_rollout_reads() {
+        let allowed = allowed_flags("rollout").unwrap();
+        for f in ["shards", "sessions", "budget-db", "inject-bad", "seed", "symbols"] {
+            assert!(allowed.contains(&f), "rollout must allow --{f}");
+        }
+        // rollout is hermetic: no artifact tree, no engine spec
+        assert!(!allowed.contains(&"artifacts"));
+        assert!(!allowed.contains(&"engine"));
     }
 
     #[test]
@@ -794,7 +979,9 @@ mod tests {
     #[test]
     fn usage_names_every_command() {
         let u = usage();
-        for cmd in ["run", "serve", "stream", "loadgen", "asic-report", "fpga-report", "sweep"] {
+        for cmd in
+            ["run", "serve", "stream", "loadgen", "rollout", "asic-report", "fpga-report", "sweep"]
+        {
             assert!(u.contains(cmd), "usage must mention {cmd}");
         }
     }

@@ -7,15 +7,22 @@
 //! backend) only exist with the non-default `xla` cargo feature; the
 //! interpreted fallback ([`backend::InterpGruEngine`]) covers the
 //! frame-based execution mode with the in-tree bit-exact datapath.
+//!
+//! The content-addressed weight store ([`store`]) sits beside the
+//! engines: fingerprint-keyed generations with lineage and delta
+//! encoding, the distribution substrate the fleet rollout controller
+//! ([`crate::coordinator::rollout`]) deploys from.
 
 pub mod artifacts;
 pub mod backend;
 #[cfg(feature = "xla")]
 pub mod engine;
+pub mod store;
 
 pub use artifacts::Manifest;
 pub use backend::{
     build_synthetic, DpdEngine, DpdLane, DpdState, EngineFactory, EngineKind,
 };
+pub use store::{DeltaStats, GenMeta, GenRecord, WeightSet, WeightStore};
 #[cfg(feature = "xla")]
 pub use engine::HloGruEngine;

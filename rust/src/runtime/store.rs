@@ -1,0 +1,807 @@
+//! Content-addressed weight store — manifest v2.
+//!
+//! PR 5's adaptation loop mints new weight generations continuously;
+//! PR 7's fleet runs thousands of sessions that all need to agree on
+//! *which* generation they serve. This module is the versioned
+//! distribution substrate between the two (ROADMAP item 4), modeled
+//! on the sharded-manifest design the roadmap points at: every weight
+//! set is a **content-addressed blob** keyed by its existing
+//! fingerprint (`GruWeights::fingerprint` / `QGruWeights::fingerprint`
+//! — the same identity the coalescing batch classes already use), and
+//! every publication is a **generation record** carrying lineage
+//! (parent hash + trainer metadata: window/step counts, NMSE at
+//! freeze, the deployment QProfile knobs).
+//!
+//! Two properties carry the whole design:
+//!
+//! * **Byte-exact codec.** The store document is canonical JSON
+//!   (`util::json`): sorted keys, pinned number spellings, every
+//!   finite f64 round-tripping bit-identically. Serializing the same
+//!   store twice — in this crate or in the Python oracle
+//!   (`python/tools/gen_golden_store.py`) — yields identical bytes,
+//!   so blob hashes are reproducible across languages and a golden
+//!   file can pin the whole wire format
+//!   (`rust/tests/data/golden_store.json`).
+//! * **Delta encoding between adjacent generations.** The DeltaDPD
+//!   observation applies to weight trajectories too: adjacent
+//!   generations of an adaptation run share most of their words —
+//!   exactly at the quantized-code level, where one Adam step rarely
+//!   flips a Q2.10 code. A child blob whose parent has the same kind,
+//!   dims (and spec, for quantized sets) is stored as the list of
+//!   `(tensor, index, new word)` triples that changed; everything
+//!   else falls back to a full blob. The measured touched-fraction on
+//!   a real `AdaptTrainer` refresh is pinned in EXPERIMENTS.md.
+//!
+//! Loading **verifies**: each decoded generation's fingerprint is
+//! recomputed and must equal the recorded content hash, so a
+//! corrupted blob or a mis-applied delta can never impersonate a
+//! generation — this is the bit-exactness argument the rollout
+//! controller's rollback path (`coordinator/rollout.rs`) rests on:
+//! rolling back to the parent hash rebuilds engines from *verified*
+//! parent words, hence bit-identical behavior to the pre-rollout
+//! engine.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::dpd::weights::{GruWeights, QGruWeights};
+use crate::fixed::QSpec;
+use crate::util::json::Json;
+
+/// Fixed tensor walk order — shared with the fingerprints, the delta
+/// codec and the Python oracle. Never reorder.
+pub const TENSOR_ORDER: [&str; 6] = ["w_ih", "b_ih", "w_hh", "b_hh", "w_fc", "b_fc"];
+
+/// Wire version tag of the store document.
+pub const STORE_VERSION: &str = "dpd-weight-store-v2";
+
+/// Trainer metadata frozen into a generation record at publish time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GenMeta {
+    /// feedback samples the trainer had absorbed at freeze
+    pub adapt_samples: u64,
+    /// optimizer steps (trained windows) at freeze
+    pub adapt_steps: u64,
+    /// trainer NMSE (dB) at freeze — must be finite (a fresh trainer
+    /// reports 0.0)
+    pub nmse_db: f64,
+    /// deployment quantization intent: uniform bitwidth
+    pub spec_bits: u32,
+    /// deployment pruning density ρ (percent), 0 = dense
+    pub rho: u8,
+    /// deployment delta threshold θ, 0 = dense updates
+    pub theta: u32,
+}
+
+impl Default for GenMeta {
+    fn default() -> Self {
+        GenMeta {
+            adapt_samples: 0,
+            adapt_steps: 0,
+            nmse_db: 0.0,
+            spec_bits: 12,
+            rho: 0,
+            theta: 0,
+        }
+    }
+}
+
+/// One stored weight set: the float twin the trainer adapts, or a
+/// quantized deployment set.
+#[derive(Clone, Debug)]
+pub enum WeightSet {
+    Float(GruWeights),
+    Quant(QGruWeights),
+}
+
+impl WeightSet {
+    /// Content hash — the existing fingerprint of the inner set.
+    pub fn fingerprint(&self) -> u64 {
+        match self {
+            WeightSet::Float(w) => w.fingerprint(),
+            WeightSet::Quant(q) => q.fingerprint(),
+        }
+    }
+
+    /// Wire kind tag (`"gru-f64"` / `"qgru"`, matching the
+    /// fingerprint tags).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            WeightSet::Float(_) => "gru-f64",
+            WeightSet::Quant(_) => "qgru",
+        }
+    }
+
+    /// Total weight words across the six tensors.
+    pub fn n_words(&self) -> usize {
+        let (h, f) = self.dims();
+        3 * h * f + 3 * h + 3 * h * h + 3 * h + 2 * h + 2
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            WeightSet::Float(w) => (w.hidden, w.features),
+            WeightSet::Quant(q) => (q.hidden, q.features),
+        }
+    }
+}
+
+/// A generation's lineage record (the blob itself lives next to it in
+/// the store).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GenRecord {
+    /// content hash (fingerprint) of the weight set
+    pub hash: u64,
+    /// content hash of the generation this one descends from (`None`
+    /// for a lineage root)
+    pub parent: Option<u64>,
+    /// publish order, 0-based and dense
+    pub seq: u64,
+    /// trainer metadata at freeze
+    pub meta: GenMeta,
+}
+
+/// How a generation will travel on the wire, plus the numbers behind
+/// the delta-encoding win.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeltaStats {
+    /// words that differ from the parent blob
+    pub changed_words: usize,
+    /// total words in the set
+    pub total_words: usize,
+}
+
+impl DeltaStats {
+    /// Fraction of weight words the generation actually touched.
+    pub fn touched_fraction(&self) -> f64 {
+        if self.total_words == 0 {
+            return 0.0;
+        }
+        self.changed_words as f64 / self.total_words as f64
+    }
+}
+
+/// The content-addressed weight store. In-memory; (de)serializes to
+/// the canonical manifest-v2 JSON document (module docs).
+#[derive(Clone, Debug, Default)]
+pub struct WeightStore {
+    gens: Vec<(GenRecord, WeightSet)>,
+    index: BTreeMap<u64, usize>,
+    head: Option<u64>,
+}
+
+/// `"fnv1a64:%016x"` — the wire spelling of a content hash.
+pub fn format_hash(h: u64) -> String {
+    format!("fnv1a64:{h:016x}")
+}
+
+/// Inverse of [`format_hash`].
+pub fn parse_hash(s: &str) -> Result<u64> {
+    let hex = s
+        .strip_prefix("fnv1a64:")
+        .ok_or_else(|| anyhow!("content hash '{s}' lacks the fnv1a64: prefix"))?;
+    if hex.len() != 16 {
+        bail!("content hash '{s}' must carry 16 hex digits");
+    }
+    u64::from_str_radix(hex, 16).with_context(|| format!("content hash '{s}'"))
+}
+
+impl WeightStore {
+    pub fn new() -> WeightStore {
+        WeightStore::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.gens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gens.is_empty()
+    }
+
+    /// Hash of the most recently published generation.
+    pub fn head(&self) -> Option<u64> {
+        self.head
+    }
+
+    /// Lineage record for a stored generation.
+    pub fn record(&self, hash: u64) -> Option<&GenRecord> {
+        self.index.get(&hash).map(|&i| &self.gens[i].0)
+    }
+
+    /// All records in publish (seq) order.
+    pub fn records(&self) -> impl Iterator<Item = &GenRecord> {
+        self.gens.iter().map(|(r, _)| r)
+    }
+
+    /// Publish a float (trainer-twin) generation. The parent is the
+    /// current head; loader metadata (`meta_bits`/`meta_act`/...) is
+    /// stripped — it is not covered by the fingerprint and must not
+    /// leak into the content-addressed blob.
+    pub fn publish_float(&mut self, w: &GruWeights, meta: GenMeta) -> Result<u64> {
+        w.check_finite().context("publishing a float weight generation")?;
+        let mut clean = w.clone();
+        clean.meta_bits = None;
+        clean.meta_act = None;
+        clean.meta_val_nmse_db = None;
+        self.push_gen(WeightSet::Float(clean), meta)
+    }
+
+    /// Publish a quantized deployment generation.
+    pub fn publish_quant(&mut self, q: &QGruWeights, meta: GenMeta) -> Result<u64> {
+        self.push_gen(WeightSet::Quant(q.clone()), meta)
+    }
+
+    fn push_gen(&mut self, set: WeightSet, meta: GenMeta) -> Result<u64> {
+        if !meta.nmse_db.is_finite() {
+            bail!("generation metadata nmse_db must be finite, got {}", meta.nmse_db);
+        }
+        let hash = set.fingerprint();
+        if self.index.contains_key(&hash) {
+            bail!("generation {} is already stored", format_hash(hash));
+        }
+        let rec = GenRecord { hash, parent: self.head, seq: self.gens.len() as u64, meta };
+        self.index.insert(hash, self.gens.len());
+        self.gens.push((rec, set));
+        self.head = Some(hash);
+        Ok(hash)
+    }
+
+    /// The stored float twin for `hash`.
+    pub fn get_float(&self, hash: u64) -> Result<&GruWeights> {
+        match self.get(hash)? {
+            WeightSet::Float(w) => Ok(w),
+            WeightSet::Quant(_) => {
+                bail!("generation {} is quantized, not a float twin", format_hash(hash))
+            }
+        }
+    }
+
+    /// The stored quantized set for `hash`.
+    pub fn get_quant(&self, hash: u64) -> Result<&QGruWeights> {
+        match self.get(hash)? {
+            WeightSet::Quant(q) => Ok(q),
+            WeightSet::Float(_) => {
+                bail!("generation {} is a float twin, not quantized", format_hash(hash))
+            }
+        }
+    }
+
+    /// The stored weight set for `hash`.
+    pub fn get(&self, hash: u64) -> Result<&WeightSet> {
+        self.index
+            .get(&hash)
+            .map(|&i| &self.gens[i].1)
+            .ok_or_else(|| anyhow!("unknown weight generation {}", format_hash(hash)))
+    }
+
+    /// Hash chain from `hash` back to its lineage root (inclusive,
+    /// child first).
+    pub fn lineage(&self, hash: u64) -> Result<Vec<u64>> {
+        let mut chain = Vec::new();
+        let mut cur = Some(hash);
+        while let Some(h) = cur {
+            let rec = self
+                .record(h)
+                .ok_or_else(|| anyhow!("lineage broken at {}", format_hash(h)))?;
+            chain.push(h);
+            if chain.len() > self.gens.len() {
+                bail!("lineage cycle at {}", format_hash(h));
+            }
+            cur = rec.parent;
+        }
+        Ok(chain)
+    }
+
+    /// Wire shape of a generation vs its parent: `Some` when it
+    /// delta-encodes (same kind, dims and spec as the parent), `None`
+    /// when it travels as a full blob.
+    pub fn delta_stats(&self, hash: u64) -> Option<DeltaStats> {
+        let rec = self.record(hash)?;
+        let set = self.get(hash).ok()?;
+        let parent = self.get(rec.parent?).ok()?;
+        let changed = delta_words(parent, set)?;
+        Some(DeltaStats { changed_words: changed.len(), total_words: set.n_words() })
+    }
+
+    // ---- canonical serialization ------------------------------------
+
+    /// The canonical manifest-v2 document.
+    pub fn to_json(&self) -> Json {
+        let gens: Vec<Json> = self
+            .gens
+            .iter()
+            .map(|(rec, set)| {
+                let parent_set = rec.parent.and_then(|p| self.get(p).ok());
+                let blob = encode_blob(set, parent_set);
+                Json::obj(vec![
+                    ("blob", blob),
+                    ("hash", Json::str(format_hash(rec.hash))),
+                    ("kind", Json::str(set.kind())),
+                    ("meta", encode_meta(&rec.meta)),
+                    (
+                        "parent",
+                        rec.parent.map(|p| Json::str(format_hash(p))).unwrap_or(Json::Null),
+                    ),
+                    ("seq", Json::num(rec.seq as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("generations", Json::Arr(gens)),
+            ("head", self.head.map(|h| Json::str(format_hash(h))).unwrap_or(Json::Null)),
+            ("version", Json::str(STORE_VERSION)),
+        ])
+    }
+
+    /// Canonical bytes: same store → same string, in this crate and
+    /// in the Python oracle.
+    pub fn to_json_string(&self) -> Result<String> {
+        self.to_json().dump().context("serializing weight store")
+    }
+
+    /// Decode a store document, applying deltas and **verifying every
+    /// generation's recomputed fingerprint against its recorded
+    /// content hash**.
+    pub fn from_json(doc: &Json) -> Result<WeightStore> {
+        let version = doc.get("version")?.as_str()?;
+        if version != STORE_VERSION {
+            bail!("unsupported store version '{version}' (want '{STORE_VERSION}')");
+        }
+        let mut store = WeightStore::new();
+        for (i, g) in doc.get("generations")?.as_arr()?.iter().enumerate() {
+            let ctx = || format!("store generation #{i}");
+            let hash = parse_hash(g.get("hash").and_then(|h| h.as_str()).with_context(ctx)?)?;
+            let parent = match g.get("parent").with_context(ctx)? {
+                Json::Null => None,
+                p => Some(parse_hash(p.as_str().with_context(ctx)?)?),
+            };
+            let seq = g.get("seq").and_then(|s| s.as_i64()).with_context(ctx)? as u64;
+            if seq != i as u64 {
+                bail!("store generation #{i} carries seq {seq} — records must be dense");
+            }
+            let meta = decode_meta(g.get("meta").with_context(ctx)?).with_context(ctx)?;
+            let kind = g.get("kind").and_then(|k| k.as_str()).with_context(ctx)?;
+            let parent_set = match parent {
+                Some(p) => {
+                    Some(store.get(p).with_context(|| {
+                        format!("store generation #{i}: parent not yet decoded")
+                    })?)
+                }
+                None => None,
+            };
+            let set = decode_blob(g.get("blob").with_context(ctx)?, kind, meta.spec_bits, parent_set)
+                .with_context(ctx)?;
+            let got = set.fingerprint();
+            if got != hash {
+                bail!(
+                    "store generation #{i} corrupt: decoded content hashes to {}, record says {}",
+                    format_hash(got),
+                    format_hash(hash)
+                );
+            }
+            store.index.insert(hash, store.gens.len());
+            store.gens.push((GenRecord { hash, parent, seq, meta }, set));
+        }
+        store.head = match doc.get("head")? {
+            Json::Null => None,
+            h => Some(parse_hash(h.as_str()?)?),
+        };
+        if let Some(h) = store.head {
+            if !store.index.contains_key(&h) {
+                bail!("store head {} names no stored generation", format_hash(h));
+            }
+        }
+        Ok(store)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<WeightStore> {
+        WeightStore::from_json(&Json::parse(text).context("parsing weight store document")?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json_string()? + "\n")
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<WeightStore> {
+        WeightStore::from_json(&Json::parse_file(path)?)
+            .with_context(|| format!("loading weight store {}", path.display()))
+    }
+}
+
+// ---- blob codec ------------------------------------------------------
+
+/// One changed word: (tensor name, flat index, new word as Json).
+type DeltaWord = (&'static str, usize, Json);
+
+/// Word-level diff vs the parent, in `TENSOR_ORDER` then ascending
+/// index. `None` when the pair cannot delta-encode (kind, dims or
+/// spec mismatch).
+fn delta_words(parent: &WeightSet, child: &WeightSet) -> Option<Vec<DeltaWord>> {
+    match (parent, child) {
+        (WeightSet::Float(p), WeightSet::Float(c)) => {
+            if (p.hidden, p.features) != (c.hidden, c.features) {
+                return None;
+            }
+            let mut out = Vec::new();
+            for (name, pt, ct) in [
+                ("w_ih", &p.w_ih, &c.w_ih),
+                ("b_ih", &p.b_ih, &c.b_ih),
+                ("w_hh", &p.w_hh, &c.w_hh),
+                ("b_hh", &p.b_hh, &c.b_hh),
+                ("w_fc", &p.w_fc, &c.w_fc),
+                ("b_fc", &p.b_fc, &c.b_fc),
+            ] {
+                for (i, (&pv, &cv)) in pt.iter().zip(ct).enumerate() {
+                    if pv.to_bits() != cv.to_bits() {
+                        out.push((name, i, Json::num(cv)));
+                    }
+                }
+            }
+            Some(out)
+        }
+        (WeightSet::Quant(p), WeightSet::Quant(c)) => {
+            if (p.hidden, p.features, p.spec.bits) != (c.hidden, c.features, c.spec.bits) {
+                return None;
+            }
+            let mut out = Vec::new();
+            for (name, pt, ct) in [
+                ("w_ih", &p.w_ih, &c.w_ih),
+                ("b_ih", &p.b_ih, &c.b_ih),
+                ("w_hh", &p.w_hh, &c.w_hh),
+                ("b_hh", &p.b_hh, &c.b_hh),
+                ("w_fc", &p.w_fc, &c.w_fc),
+                ("b_fc", &p.b_fc, &c.b_fc),
+            ] {
+                for (i, (&pv, &cv)) in pt.iter().zip(ct).enumerate() {
+                    if pv != cv {
+                        out.push((name, i, Json::num(cv as f64)));
+                    }
+                }
+            }
+            Some(out)
+        }
+        _ => None,
+    }
+}
+
+fn encode_blob(set: &WeightSet, parent: Option<&WeightSet>) -> Json {
+    if let Some(p) = parent {
+        if let Some(changed) = delta_words(p, set) {
+            let triples: Vec<Json> = changed
+                .into_iter()
+                .map(|(name, i, v)| Json::Arr(vec![Json::str(name), Json::num(i as f64), v]))
+                .collect();
+            return Json::obj(vec![(
+                "delta",
+                Json::obj(vec![("changed", Json::Arr(triples))]),
+            )]);
+        }
+    }
+    let payload = match set {
+        WeightSet::Float(w) => Json::obj(vec![
+            ("b_fc", Json::arr_f64(&w.b_fc)),
+            ("b_hh", Json::arr_f64(&w.b_hh)),
+            ("b_ih", Json::arr_f64(&w.b_ih)),
+            ("features", Json::num(w.features as f64)),
+            ("hidden", Json::num(w.hidden as f64)),
+            ("w_fc", Json::arr_f64(&w.w_fc)),
+            ("w_hh", Json::arr_f64(&w.w_hh)),
+            ("w_ih", Json::arr_f64(&w.w_ih)),
+        ]),
+        WeightSet::Quant(q) => {
+            let arr = |v: &[i32]| Json::Arr(v.iter().map(|&x| Json::num(x as f64)).collect());
+            Json::obj(vec![
+                ("b_fc", arr(&q.b_fc)),
+                ("b_hh", arr(&q.b_hh)),
+                ("b_ih", arr(&q.b_ih)),
+                ("features", Json::num(q.features as f64)),
+                ("hidden", Json::num(q.hidden as f64)),
+                ("w_fc", arr(&q.w_fc)),
+                ("w_hh", arr(&q.w_hh)),
+                ("w_ih", arr(&q.w_ih)),
+            ])
+        }
+    };
+    Json::obj(vec![("full", payload)])
+}
+
+fn decode_blob(
+    blob: &Json,
+    kind: &str,
+    spec_bits: u32,
+    parent: Option<&WeightSet>,
+) -> Result<WeightSet> {
+    if let Some(full) = blob.opt("full") {
+        return decode_full(full, kind, spec_bits);
+    }
+    let delta = blob
+        .opt("delta")
+        .ok_or_else(|| anyhow!("blob carries neither 'full' nor 'delta'"))?;
+    let parent = parent.ok_or_else(|| anyhow!("delta blob without a parent generation"))?;
+    if parent.kind() != kind {
+        bail!("delta blob kind '{kind}' differs from parent kind '{}'", parent.kind());
+    }
+    let mut set = parent.clone();
+    for (j, t) in delta.get("changed")?.as_arr()?.iter().enumerate() {
+        let t = t.as_arr()?;
+        if t.len() != 3 {
+            bail!("delta word #{j}: want [tensor, index, value]");
+        }
+        let name = t[0].as_str().with_context(|| format!("delta word #{j}"))?;
+        let idx = t[1].as_usize().with_context(|| format!("delta word #{j}"))?;
+        match &mut set {
+            WeightSet::Float(w) => {
+                let tensor = match name {
+                    "w_ih" => &mut w.w_ih,
+                    "b_ih" => &mut w.b_ih,
+                    "w_hh" => &mut w.w_hh,
+                    "b_hh" => &mut w.b_hh,
+                    "w_fc" => &mut w.w_fc,
+                    "b_fc" => &mut w.b_fc,
+                    _ => bail!("delta word #{j}: unknown tensor '{name}'"),
+                };
+                let slot = tensor
+                    .get_mut(idx)
+                    .ok_or_else(|| anyhow!("delta word #{j}: index {idx} outside '{name}'"))?;
+                *slot = t[2].as_f64().with_context(|| format!("delta word #{j}"))?;
+            }
+            WeightSet::Quant(q) => {
+                let tensor = match name {
+                    "w_ih" => &mut q.w_ih,
+                    "b_ih" => &mut q.b_ih,
+                    "w_hh" => &mut q.w_hh,
+                    "b_hh" => &mut q.b_hh,
+                    "w_fc" => &mut q.w_fc,
+                    "b_fc" => &mut q.b_fc,
+                    _ => bail!("delta word #{j}: unknown tensor '{name}'"),
+                };
+                let slot = tensor
+                    .get_mut(idx)
+                    .ok_or_else(|| anyhow!("delta word #{j}: index {idx} outside '{name}'"))?;
+                *slot = t[2].as_i64().with_context(|| format!("delta word #{j}"))? as i32;
+            }
+        }
+    }
+    Ok(set)
+}
+
+fn decode_full(full: &Json, kind: &str, spec_bits: u32) -> Result<WeightSet> {
+    let hidden = full.get("hidden")?.as_usize()?;
+    let features = full.get("features")?.as_usize()?;
+    let want = |name: &str, n: usize, got: usize| -> Result<()> {
+        if got != n {
+            bail!("tensor '{name}' has {got} words, dims ({hidden}, {features}) demand {n}");
+        }
+        Ok(())
+    };
+    match kind {
+        "gru-f64" => {
+            let t = |name: &str, n: usize| -> Result<Vec<f64>> {
+                let v = full.get(name)?.as_f64_vec().with_context(|| format!("tensor '{name}'"))?;
+                want(name, n, v.len())?;
+                Ok(v)
+            };
+            Ok(WeightSet::Float(GruWeights {
+                hidden,
+                features,
+                w_ih: t("w_ih", 3 * hidden * features)?,
+                b_ih: t("b_ih", 3 * hidden)?,
+                w_hh: t("w_hh", 3 * hidden * hidden)?,
+                b_hh: t("b_hh", 3 * hidden)?,
+                w_fc: t("w_fc", 2 * hidden)?,
+                b_fc: t("b_fc", 2)?,
+                meta_bits: None,
+                meta_act: None,
+                meta_val_nmse_db: None,
+            }))
+        }
+        "qgru" => {
+            let t = |name: &str, n: usize| -> Result<Vec<i32>> {
+                let v = full.get(name)?.as_i32_vec().with_context(|| format!("tensor '{name}'"))?;
+                want(name, n, v.len())?;
+                Ok(v)
+            };
+            let spec = QSpec::new(spec_bits)
+                .with_context(|| format!("meta spec_bits {spec_bits}"))?;
+            Ok(WeightSet::Quant(QGruWeights {
+                hidden,
+                features,
+                spec,
+                w_ih: t("w_ih", 3 * hidden * features)?,
+                b_ih: t("b_ih", 3 * hidden)?,
+                w_hh: t("w_hh", 3 * hidden * hidden)?,
+                b_hh: t("b_hh", 3 * hidden)?,
+                w_fc: t("w_fc", 2 * hidden)?,
+                b_fc: t("b_fc", 2)?,
+            }))
+        }
+        k => bail!("unknown generation kind '{k}'"),
+    }
+}
+
+fn encode_meta(m: &GenMeta) -> Json {
+    Json::obj(vec![
+        ("adapt_samples", Json::num(m.adapt_samples as f64)),
+        ("adapt_steps", Json::num(m.adapt_steps as f64)),
+        ("nmse_db", Json::num(m.nmse_db)),
+        ("rho", Json::num(m.rho as f64)),
+        ("spec_bits", Json::num(m.spec_bits as f64)),
+        ("theta", Json::num(m.theta as f64)),
+    ])
+}
+
+fn decode_meta(j: &Json) -> Result<GenMeta> {
+    Ok(GenMeta {
+        adapt_samples: j.get("adapt_samples")?.as_i64()? as u64,
+        adapt_steps: j.get("adapt_steps")?.as_i64()? as u64,
+        nmse_db: j.get("nmse_db")?.as_f64()?,
+        spec_bits: j.get("spec_bits")?.as_usize()? as u32,
+        rho: {
+            let r = j.get("rho")?.as_usize()?;
+            if r > 100 {
+                bail!("meta rho {r} out of range (0..=100)");
+            }
+            r as u8
+        },
+        theta: j.get("theta")?.as_usize()? as u32,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(steps: u64) -> GenMeta {
+        GenMeta { adapt_steps: steps, adapt_samples: steps * 32, nmse_db: -20.5, ..Default::default() }
+    }
+
+    fn perturbed(w: &GruWeights, touches: &[(usize, f64)]) -> GruWeights {
+        let mut c = w.clone();
+        for &(i, dv) in touches {
+            c.w_hh[i] += dv;
+        }
+        c
+    }
+
+    #[test]
+    fn publish_lineage_and_lookup() {
+        let w0 = GruWeights::synthetic(7);
+        let w1 = perturbed(&w0, &[(3, 0.01), (17, -0.02)]);
+        let mut store = WeightStore::new();
+        assert!(store.is_empty() && store.head().is_none());
+        let h0 = store.publish_float(&w0, meta(0)).unwrap();
+        let h1 = store.publish_float(&w1, meta(5)).unwrap();
+        assert_ne!(h0, h1);
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.head(), Some(h1));
+        let r1 = store.record(h1).unwrap();
+        assert_eq!(r1.parent, Some(h0));
+        assert_eq!(r1.seq, 1);
+        assert_eq!(r1.meta.adapt_steps, 5);
+        assert_eq!(store.lineage(h1).unwrap(), vec![h1, h0]);
+        assert_eq!(store.get_float(h0).unwrap().fingerprint(), h0);
+        // content addressing: re-publishing identical words is refused
+        assert!(store.publish_float(&w1, meta(9)).is_err());
+        // and unknown hashes are contextual errors, not panics
+        assert!(store.get_float(0xdead_beef).is_err());
+    }
+
+    #[test]
+    fn roundtrip_is_byte_identical_and_verified() {
+        let w0 = GruWeights::synthetic(7);
+        let w1 = perturbed(&w0, &[(0, 0.005), (42, 0.005), (99, -0.01)]);
+        let q1 = w1.quantize(QSpec::Q12).unwrap();
+        let mut store = WeightStore::new();
+        store.publish_float(&w0, meta(0)).unwrap();
+        let h1 = store.publish_float(&w1, meta(3)).unwrap();
+        let hq = store.publish_quant(&q1, meta(3)).unwrap();
+        let text = store.to_json_string().unwrap();
+        let back = WeightStore::from_json_str(&text).unwrap();
+        assert_eq!(back.to_json_string().unwrap(), text, "re-encode must be byte-identical");
+        assert_eq!(back.head(), Some(hq));
+        assert_eq!(back.get_float(h1).unwrap().fingerprint(), h1);
+        assert_eq!(back.get_quant(hq).unwrap().fingerprint(), hq);
+        // the float child rides as a 3-word delta on the wire
+        let ds = store.delta_stats(h1).unwrap();
+        assert_eq!(ds.changed_words, 3);
+        assert_eq!(ds.total_words, w1.n_params());
+        assert!(ds.touched_fraction() < 0.01);
+        // the quant generation follows a float parent: full blob
+        assert!(store.delta_stats(hq).is_none());
+        let doc = Json::parse(&text).unwrap();
+        let gens = doc.get("generations").unwrap().as_arr().unwrap();
+        assert!(gens[1].get("blob").unwrap().opt("delta").is_some());
+        assert!(gens[2].get("blob").unwrap().opt("full").is_some());
+    }
+
+    #[test]
+    fn corruption_cannot_impersonate_a_generation() {
+        let w0 = GruWeights::synthetic(11);
+        let mut store = WeightStore::new();
+        store.publish_float(&w0, meta(0)).unwrap();
+        let text = store.to_json_string().unwrap();
+        // flip one stored word: the recomputed fingerprint must expose it
+        let mut doc = Json::parse(&text).unwrap();
+        if let Json::Obj(m) = &mut doc {
+            let gens = m.get_mut("generations").unwrap();
+            if let Json::Arr(a) = gens {
+                if let Json::Obj(g) = &mut a[0] {
+                    let blob = g.get_mut("blob").unwrap();
+                    let full = blob.opt("full").unwrap().clone();
+                    if let Json::Obj(f) = full {
+                        let mut f = f;
+                        f.insert("b_fc".into(), Json::arr_f64(&[0.25, 0.25]));
+                        *blob = Json::obj(vec![("full", Json::Obj(f))]);
+                    }
+                }
+            }
+        }
+        let err = WeightStore::from_json(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt"), "want corruption error, got {err:#}");
+    }
+
+    #[test]
+    fn quant_chain_deltas_and_spec_change_falls_back_to_full() {
+        let w0 = GruWeights::synthetic(3);
+        let q0 = w0.quantize(QSpec::Q12).unwrap();
+        let mut q1 = q0.clone();
+        q1.w_ih[5] += 1;
+        q1.b_fc[0] -= 2;
+        let q_other_spec = w0.quantize(QSpec::new(8).unwrap()).unwrap();
+        let mut store = WeightStore::new();
+        store.publish_quant(&q0, meta(0)).unwrap();
+        let h1 = store.publish_quant(&q1, meta(1)).unwrap();
+        let h2 = store
+            .publish_quant(&q_other_spec, GenMeta { spec_bits: 8, ..meta(2) })
+            .unwrap();
+        let ds = store.delta_stats(h1).unwrap();
+        assert_eq!(ds.changed_words, 2);
+        assert!(store.delta_stats(h2).is_none(), "spec change must not delta-encode");
+        let text = store.to_json_string().unwrap();
+        let back = WeightStore::from_json_str(&text).unwrap();
+        assert_eq!(back.get_quant(h1).unwrap().fingerprint(), h1);
+        assert_eq!(back.get_quant(h2).unwrap().spec.bits, 8);
+        assert_eq!(back.to_json_string().unwrap(), text);
+    }
+
+    #[test]
+    fn malformed_documents_fail_with_context() {
+        for (what, text) in [
+            ("wrong version", r#"{"generations":[],"head":null,"version":"v1"}"#),
+            ("missing head", r#"{"generations":[],"version":"dpd-weight-store-v2"}"#),
+            (
+                "dangling head",
+                r#"{"generations":[],"head":"fnv1a64:0123456789abcdef","version":"dpd-weight-store-v2"}"#,
+            ),
+            (
+                "bad hash spelling",
+                r#"{"generations":[{"blob":{"full":{}},"hash":"sha256:00","kind":"gru-f64","meta":{},"parent":null,"seq":0}],"head":null,"version":"dpd-weight-store-v2"}"#,
+            ),
+        ] {
+            assert!(WeightStore::from_json_str(text).is_err(), "{what} must be rejected");
+        }
+        // hash helpers are total
+        assert!(parse_hash("fnv1a64:0123456789abcdef").is_ok());
+        assert!(parse_hash("fnv1a64:123").is_err());
+        assert!(parse_hash("0123456789abcdef").is_err());
+        let h = 0xdead_beef_0bad_f00du64;
+        assert_eq!(parse_hash(&format_hash(h)).unwrap(), h);
+    }
+
+    #[test]
+    fn publish_rejects_non_finite_inputs() {
+        let mut w = GruWeights::synthetic(1);
+        w.w_fc[0] = f64::NAN;
+        let mut store = WeightStore::new();
+        assert!(store.publish_float(&w, meta(0)).is_err());
+        let ok = GruWeights::synthetic(1);
+        assert!(store
+            .publish_float(&ok, GenMeta { nmse_db: f64::INFINITY, ..meta(0) })
+            .is_err());
+        assert!(store.is_empty(), "failed publishes must not leave partial records");
+    }
+}

@@ -92,7 +92,12 @@ fn duration_ns(d: Duration) -> u64 {
 pub struct LatencyHistogram {
     counts: Vec<u64>,
     total: u64,
-    sum_ns: u64,
+    // u128: a fleet-lifetime sum of ns-scale samples crosses 2^64
+    // after ~584 years·thread of recorded latency, but a handful of
+    // clamped u64::MAX samples (clock glitches, tests) got there
+    // immediately — and the old saturating u64 silently dragged
+    // `mean()` toward u64::MAX/total. 2^128 is out of reach.
+    sum_ns: u128,
     max_ns: u64,
 }
 
@@ -116,7 +121,7 @@ impl LatencyHistogram {
     pub fn record_ns(&mut self, ns: u64) {
         self.counts[bucket_index(ns)] += 1;
         self.total += 1;
-        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.sum_ns += ns as u128;
         self.max_ns = self.max_ns.max(ns);
     }
 
@@ -129,12 +134,15 @@ impl LatencyHistogram {
         self.total == 0
     }
 
-    /// Exact mean of the recorded samples (not bucketized).
+    /// Exact mean of the recorded samples (not bucketized). The
+    /// widened accumulator keeps this exact past the 2^64 ns edge;
+    /// the (unreachable-in-practice) clamp to `u64::MAX` ns only
+    /// guards `Duration::from_nanos`'s argument type.
     pub fn mean(&self) -> Duration {
         if self.total == 0 {
             return Duration::ZERO;
         }
-        Duration::from_nanos(self.sum_ns / self.total)
+        Duration::from_nanos((self.sum_ns / self.total as u128).min(u64::MAX as u128) as u64)
     }
 
     /// Exact maximum recorded sample.
@@ -149,7 +157,7 @@ impl LatencyHistogram {
             *a += b;
         }
         self.total += other.total;
-        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.sum_ns += other.sum_ns;
         self.max_ns = self.max_ns.max(other.max_ns);
     }
 
@@ -194,7 +202,14 @@ impl LatencyHistogram {
 /// from the bucket counts, never a separately-raced counter).
 pub struct AtomicHistogram {
     counts: Vec<AtomicU64>,
-    sum_ns: AtomicU64,
+    // the 128-bit sum split across two u64 words (no AtomicU128 on
+    // stable): `record_ns` detects the low-word wrap from fetch_add's
+    // returned value and carries into the high word. A snapshot
+    // racing the tiny wrap→carry window can read a momentarily low
+    // sum — counters are monotone, so that is just a histogram of a
+    // slightly earlier instant, same as the bucket counters.
+    sum_lo: AtomicU64,
+    sum_hi: AtomicU64,
     max_ns: AtomicU64,
 }
 
@@ -208,7 +223,8 @@ impl AtomicHistogram {
     pub fn new() -> AtomicHistogram {
         AtomicHistogram {
             counts: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            sum_ns: AtomicU64::new(0),
+            sum_lo: AtomicU64::new(0),
+            sum_hi: AtomicU64::new(0),
             max_ns: AtomicU64::new(0),
         }
     }
@@ -220,16 +236,15 @@ impl AtomicHistogram {
 
     pub fn record_ns(&self, ns: u64) {
         self.counts[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
-        // saturating fold, matching the plain flavor's overflow
-        // semantics: a bare fetch_add wraps at u64::MAX, silently
-        // corrupting a long-lived fleet's mean. fetch_update's CAS
-        // loop is lock-free and the closure never returns None, so
-        // the Err arm is unreachable.
-        self.sum_ns
-            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
-                Some(cur.saturating_add(ns))
-            })
-            .ok();
+        // wait-free 128-bit accumulate: fetch_add returns the prior
+        // low word, so this thread — and only this thread — observes
+        // its own wrap and owns the carry. Concurrent recorders each
+        // carry for their own wrap, so the composed (hi, lo) sum is
+        // exact once all recorders are quiescent.
+        let prev = self.sum_lo.fetch_add(ns, Ordering::Relaxed);
+        if prev > u64::MAX - ns {
+            self.sum_hi.fetch_add(1, Ordering::Relaxed);
+        }
         self.max_ns.fetch_max(ns, Ordering::Relaxed);
     }
 
@@ -237,10 +252,12 @@ impl AtomicHistogram {
     pub fn snapshot(&self) -> LatencyHistogram {
         let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
         let total = counts.iter().sum();
+        let sum_ns = ((self.sum_hi.load(Ordering::Relaxed) as u128) << 64)
+            | self.sum_lo.load(Ordering::Relaxed) as u128;
         LatencyHistogram {
             counts,
             total,
-            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            sum_ns,
             max_ns: self.max_ns.load(Ordering::Relaxed),
         }
     }
@@ -341,19 +358,40 @@ mod tests {
     }
 
     #[test]
-    fn atomic_sum_saturates_like_the_plain_flavor() {
-        // Regression: the atomic flavor used a bare fetch_add for
-        // sum_ns, which wraps at u64::MAX while the plain flavor
-        // saturates — recording MAX then MAX/2 left the atomic sum at
-        // MAX/2 − 1 and the two snapshots disagreeing.
+    fn sums_stay_exact_past_the_u64_overflow_edge() {
+        // Regression, two generations of the same bug: the atomic
+        // flavor once wrapped sum_ns at u64::MAX (snapshots diverged
+        // from the plain flavor), and the saturating fix that replaced
+        // it still corrupted `mean()` — two u64::MAX samples saturated
+        // to a sum of u64::MAX and reported a mean of u64::MAX/2. The
+        // widened accumulator (u128 plain, split lo/hi atomics with a
+        // carry) keeps the mean exact: (2·(2^64−1))/2 = u64::MAX.
+        let mut plain = LatencyHistogram::new();
+        let atomic = AtomicHistogram::new();
+        for ns in [u64::MAX, u64::MAX] {
+            plain.record_ns(ns);
+            atomic.record_ns(ns);
+        }
+        assert_eq!(plain.mean(), Duration::from_nanos(u64::MAX));
+        assert_eq!(atomic.snapshot(), plain);
+
+        // the MAX + MAX/2 shape that pinned the old saturating
+        // behavior now has its true mean too
         let mut plain = LatencyHistogram::new();
         let atomic = AtomicHistogram::new();
         for ns in [u64::MAX, u64::MAX / 2] {
             plain.record_ns(ns);
             atomic.record_ns(ns);
         }
-        assert_eq!(plain.mean(), Duration::from_nanos(u64::MAX / 2));
+        let want = (u64::MAX as u128 + (u64::MAX / 2) as u128) / 2;
+        assert_eq!(plain.mean(), Duration::from_nanos(want as u64));
         assert_eq!(atomic.snapshot(), plain);
+
+        // merge folds the widened sums exactly as well
+        let mut merged = plain.clone();
+        merged.merge(&plain);
+        assert_eq!(merged.mean(), plain.mean());
+        assert_eq!(merged.count(), 2 * plain.count());
     }
 
     #[test]

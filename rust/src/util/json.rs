@@ -127,23 +127,37 @@ impl Json {
 
     // ---- writer ----------------------------------------------------------
 
-    pub fn dump(&self) -> String {
+    /// Serialize to canonical JSON text.
+    ///
+    /// The encoding is *canonical*: two `Json` values that compare
+    /// equal dump to identical bytes (object keys are already sorted
+    /// by the `BTreeMap`), and every finite `f64` round-trips through
+    /// `parse` bit-identically — including `-0.0`, subnormals and the
+    /// 2^53 integer edge. Content hashes of stored weight blobs
+    /// (`runtime/store.rs`) and the Python oracle
+    /// (`python/tools/gen_golden_store.py`) both lean on this
+    /// contract, so the number format is pinned:
+    ///
+    /// * integral values with `|v| < 2^53` (except `-0.0`) print as
+    ///   plain integers (`"42"`, `"-7"`);
+    /// * everything else prints in Rust's `{:e}` shortest scientific
+    ///   form (`"1.5e0"`, `"1e-308"`, `"-0e0"`,
+    ///   `"9.007199254740992e15"`).
+    ///
+    /// Non-finite values have no JSON spelling; they surface as a
+    /// typed [`NonFiniteJsonError`] instead of silently emitting
+    /// `NaN`/`inf` garbage the parser would reject.
+    pub fn dump(&self) -> Result<String, NonFiniteJsonError> {
         let mut s = String::new();
-        self.write(&mut s);
-        s
+        self.write(&mut s)?;
+        Ok(s)
     }
 
-    fn write(&self, out: &mut String) {
+    fn write(&self, out: &mut String) -> Result<(), NonFiniteJsonError> {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(v) => {
-                if v.fract() == 0.0 && v.abs() < 2f64.powi(53) {
-                    let _ = write!(out, "{}", *v as i64);
-                } else {
-                    let _ = write!(out, "{v}");
-                }
-            }
+            Json::Num(v) => write_canonical_num(out, *v)?,
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(a) => {
                 out.push('[');
@@ -151,7 +165,7 @@ impl Json {
                     if i > 0 {
                         out.push(',');
                     }
-                    v.write(out);
+                    v.write(out)?;
                 }
                 out.push(']');
             }
@@ -163,12 +177,44 @@ impl Json {
                     }
                     write_escaped(out, k);
                     out.push(':');
-                    v.write(out);
+                    v.write(out)?;
                 }
                 out.push('}');
             }
         }
+        Ok(())
     }
+}
+
+/// A non-finite `f64` reached the JSON writer. JSON has no spelling
+/// for `NaN`/`±inf`; the old writer emitted them anyway, producing a
+/// document our own parser refuses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NonFiniteJsonError {
+    /// The offending value (compare with `is_nan()`; `NaN != NaN`).
+    pub value: f64,
+}
+
+impl std::fmt::Display for NonFiniteJsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "non-finite value {} has no JSON encoding", self.value)
+    }
+}
+
+impl std::error::Error for NonFiniteJsonError {}
+
+fn write_canonical_num(out: &mut String, v: f64) -> Result<(), NonFiniteJsonError> {
+    if !v.is_finite() {
+        return Err(NonFiniteJsonError { value: v });
+    }
+    // `-0.0` is integral but `as i64` would drop the sign bit; it goes
+    // through the scientific arm ("-0e0") so the bit pattern survives.
+    if v.fract() == 0.0 && v.abs() < 2f64.powi(53) && !(v == 0.0 && v.is_sign_negative()) {
+        let _ = write!(out, "{}", v as i64);
+    } else {
+        let _ = write!(out, "{v:e}");
+    }
+    Ok(())
 }
 
 fn write_escaped(out: &mut String, s: &str) {
@@ -403,8 +449,81 @@ mod tests {
     fn roundtrip() {
         let src = r#"{"w":{"shape":[2,3],"data":[0.5,-1,2,3.25,-0.125,7]},"n":12}"#;
         let j = Json::parse(src).unwrap();
-        let again = Json::parse(&j.dump()).unwrap();
+        let again = Json::parse(&j.dump().unwrap()).unwrap();
         assert_eq!(j, again);
+    }
+
+    /// Every finite f64 must survive dump -> parse -> dump with both
+    /// the bit pattern and the text stable. The old writer lost the
+    /// sign of `-0.0` (printed "0") and used non-canonical `{}`
+    /// Display for the rest; content-hashed weight blobs depend on
+    /// this being exact (pre-PR-failing regression).
+    #[test]
+    fn adversarial_floats_roundtrip_bit_identically() {
+        let cases: &[f64] = &[
+            0.0,
+            -0.0,
+            1e-308,            // subnormal territory
+            -1e-308,
+            5e-324,            // smallest positive subnormal
+            f64::MIN_POSITIVE, // smallest positive normal
+            2f64.powi(53) - 1.0,
+            2f64.powi(53),       // 2^53 + 1 is not representable; it IS 2^53
+            2f64.powi(53) + 2.0, // the nearest representable above
+            -(2f64.powi(53)),
+            f64::MAX,
+            f64::MIN,
+            0.1,
+            1.5,
+            -3.7e-5,
+            1234567890.123,
+        ];
+        for &v in cases {
+            let text = Json::Num(v).dump().unwrap();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(
+                back.to_bits(),
+                v.to_bits(),
+                "bits drifted for {v:?} via {text:?}"
+            );
+            let again = Json::Num(back).dump().unwrap();
+            assert_eq!(text, again, "text not canonical for {v:?}");
+        }
+    }
+
+    /// The exact spellings are a cross-language contract with
+    /// `python/tools/gen_golden_store.py` — pinned, not incidental.
+    #[test]
+    fn canonical_number_spellings_are_pinned() {
+        let pin = |v: f64, want: &str| {
+            assert_eq!(Json::Num(v).dump().unwrap(), want, "spelling of {v:?}");
+        };
+        pin(0.0, "0");
+        pin(-0.0, "-0e0");
+        pin(42.0, "42");
+        pin(-7.0, "-7");
+        pin(2f64.powi(53) - 1.0, "9007199254740991");
+        pin(2f64.powi(53), "9.007199254740992e15");
+        pin(1e-308, "1e-308");
+        pin(5e-324, "5e-324");
+        pin(0.1, "1e-1");
+        pin(1.5, "1.5e0");
+        pin(-0.125, "-1.25e-1");
+    }
+
+    #[test]
+    fn non_finite_values_are_a_typed_error() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            // nested so the error has to propagate out of the walker
+            let doc = Json::obj(vec![("x", Json::Arr(vec![Json::num(1.0), Json::num(v)]))]);
+            let err = doc.dump().unwrap_err();
+            assert!(
+                err.value.is_nan() || err.value == v,
+                "error must carry the offending value, got {err:?}"
+            );
+            // and it is a real std error with a message
+            assert!(!err.to_string().is_empty());
+        }
     }
 
     #[test]

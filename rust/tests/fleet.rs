@@ -305,3 +305,63 @@ fn graceful_drain_under_churn_flushes_every_in_flight_frame() {
         Ok(())
     });
 }
+
+/// Satellite regression (drain-deadline bugfix): a leaked session
+/// handle used to spin `drain()`'s 500 µs poll loop forever — the
+/// open count can never reach zero if an owner forgets its handle.
+/// With `drain_deadline` set, drain must terminate with a typed
+/// [`DrainTimeout`] that counts the stuck sessions, and a fleet
+/// without leaks must be entirely unaffected by the deadline.
+#[test]
+fn drain_with_leaked_handle_times_out_with_typed_error() {
+    with_watchdog("drain deadline", || {
+        let fleet = Fleet::start(FleetConfig {
+            shards: 2,
+            service: ServiceConfig { workers: 1, frame_len: 32, ..Default::default() },
+            drain_deadline: Some(Duration::from_millis(200)),
+            ..Default::default()
+        })?;
+        // a healthy session, finished properly...
+        let mut ok = fleet.open_session_with(SessionConfig::default(), || {
+            build_synthetic(EngineKind::Fixed, 11, Default::default(), Some(32))
+        })?;
+        ok.push(&signal(64, 5))?;
+        ok.finish()?;
+        // ...and two handles their owner leaks (mem::forget models a
+        // crashed/wedged owner thread that never drops)
+        for k in 0..2u64 {
+            let leaked = fleet.open_session_with(SessionConfig::default(), move || {
+                build_synthetic(EngineKind::Fixed, 20 + k, Default::default(), Some(32))
+            })?;
+            std::mem::forget(leaked);
+        }
+        let err = match fleet.drain() {
+            Ok(_) => anyhow::bail!("drain must not succeed with leaked handles"),
+            Err(e) => e,
+        };
+        let timeout = err
+            .downcast_ref::<dpd_ne::coordinator::DrainTimeout>()
+            .ok_or_else(|| anyhow::anyhow!("expected DrainTimeout, got: {err:#}"))?;
+        anyhow::ensure!(
+            timeout.stuck_sessions == 2,
+            "stuck count must name both leaked handles: {timeout}"
+        );
+        anyhow::ensure!(timeout.deadline == Duration::from_millis(200));
+
+        // control: the same deadline on a leak-free fleet drains clean
+        let fleet = Fleet::start(FleetConfig {
+            shards: 2,
+            service: ServiceConfig { workers: 1, frame_len: 32, ..Default::default() },
+            drain_deadline: Some(Duration::from_secs(30)),
+            ..Default::default()
+        })?;
+        let mut s = fleet.open_session_with(SessionConfig::default(), || {
+            build_synthetic(EngineKind::Fixed, 31, Default::default(), Some(32))
+        })?;
+        s.push(&signal(64, 6))?;
+        s.finish()?;
+        let stats = fleet.drain()?;
+        anyhow::ensure!(stats.sessions_open == 0 && stats.draining);
+        Ok(())
+    });
+}
