@@ -86,7 +86,7 @@ fn main() -> anyhow::Result<()> {
     let burst = &sig.iq;
     for depth in [1usize, 2, 4, 16] {
         let coord = Coordinator::new(CoordinatorConfig {
-            engine: EngineKind::Fixed,
+            engine: EngineKind::fixed(),
             queue_depth: depth,
             ..Default::default()
         });

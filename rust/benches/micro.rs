@@ -386,7 +386,7 @@ fn main() -> anyhow::Result<()> {
 
         // coordinator pipeline end to end
         let coord = Coordinator::new(CoordinatorConfig {
-            engine: EngineKind::Fixed,
+            engine: EngineKind::fixed(),
             ..Default::default()
         });
         let r = time_it("pipeline fixed 64k samples", Duration::from_millis(800), || {
@@ -396,7 +396,7 @@ fn main() -> anyhow::Result<()> {
         report.push(r);
 
         // frame path through the unified DpdEngine backend (interpreted)
-        let factory = EngineFactory::new(EngineKind::Interp, None)?;
+        let factory = EngineFactory::new(EngineKind::interp(), None)?;
         let mut eng = factory.build()?;
         let t = eng.frame_len().unwrap_or(2048).min(burst.len());
         let src = burst[..t].to_vec();
@@ -415,7 +415,7 @@ fn main() -> anyhow::Result<()> {
         // not fatal, when the manifest has no integer HLO entry or the
         // backend cannot execute (the vendored stub)
         #[cfg(feature = "xla")]
-        match EngineFactory::new(EngineKind::Hlo, None).and_then(|f| f.build()) {
+        match EngineFactory::new(EngineKind::hlo(), None).and_then(|f| f.build()) {
             Ok(mut eng) => {
                 let t = eng.frame_len().unwrap_or(2048).min(burst.len());
                 let src = burst[..t].to_vec();

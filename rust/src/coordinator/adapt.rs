@@ -47,7 +47,7 @@ use crate::fixed::{QProfile, QSpec};
 use crate::metrics::acpr::{acpr_db, AcprConfig};
 use crate::metrics::evm::evm_db_nmse;
 use crate::runtime::backend::StreamingEngine;
-use crate::runtime::{DpdEngine, EngineKind};
+use crate::runtime::{DpdEngine, EngineBase, EngineKind};
 use crate::util::C64;
 
 /// Per-session adaptation configuration (rides in
@@ -145,78 +145,22 @@ pub(crate) fn rebuild_for_kind(
     spec: QSpec,
     simd: SimdPolicy,
 ) -> Result<Rebuild> {
-    Ok(match kind {
-        EngineKind::NativeF64 => Box::new(move |w: &GruWeights| -> EngineBuild {
+    Ok(match kind.base {
+        EngineBase::NativeF64 => Box::new(move |w: &GruWeights| -> EngineBuild {
             let w = w.clone();
             Box::new(move || {
                 Ok(Box::new(StreamingEngine::new(Box::new(GruDpd::new(w))))
                     as Box<dyn DpdEngine>)
             })
         }),
-        EngineKind::Fixed => Box::new(move |w: &GruWeights| -> EngineBuild {
-            let qw = w.quantize(spec);
-            Box::new(move || {
-                let qw = qw?;
-                Ok(Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw, ActKind::Hard))))
-                    as Box<dyn DpdEngine>)
-            })
-        }),
-        EngineKind::DeltaFixed { theta } => Box::new(move |w: &GruWeights| -> EngineBuild {
-            let qw = w.quantize(spec);
-            Box::new(move || {
-                let qw = qw?;
-                Ok(Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
-                    qw,
-                    ActKind::Hard,
-                    theta,
-                )))) as Box<dyn DpdEngine>)
-            })
-        }),
-        EngineKind::FixedSimd => {
-            let kernel = resolve_simd(simd);
-            Box::new(move |w: &GruWeights| -> EngineBuild {
-                let qw = w.quantize(spec);
-                Box::new(move || {
-                    let qw = qw?;
-                    Ok(match kernel {
-                        Some(k) => Box::new(StreamingEngine::new(Box::new(
-                            QGruDpd::with_kernel(qw, ActKind::Hard, k),
-                        ))) as Box<dyn DpdEngine>,
-                        None => Box::new(StreamingEngine::new(Box::new(QGruDpd::new(
-                            qw,
-                            ActKind::Hard,
-                        )))) as Box<dyn DpdEngine>,
-                    })
-                })
-            })
-        }
-        EngineKind::DeltaFixedSimd { theta } => {
-            let kernel = resolve_simd(simd);
-            Box::new(move |w: &GruWeights| -> EngineBuild {
-                let qw = w.quantize(spec);
-                Box::new(move || {
-                    let qw = qw?;
-                    Ok(match kernel {
-                        Some(k) => Box::new(StreamingEngine::new(Box::new(
-                            DeltaQGruDpd::with_kernel(qw, ActKind::Hard, theta, k),
-                        ))) as Box<dyn DpdEngine>,
-                        None => Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
-                            qw,
-                            ActKind::Hard,
-                            theta,
-                        )))) as Box<dyn DpdEngine>,
-                    })
-                })
-            })
-        }
-        EngineKind::SparseMp { profile, rho, theta, simd: want_simd } => {
-            let kernel = if want_simd { resolve_simd(simd) } else { None };
-            let prof = match profile {
+        EngineBase::Fixed | EngineBase::Delta if kind.is_sparse_family() => {
+            let kernel = if kind.simd { resolve_simd(simd) } else { None };
+            let prof = match kind.profile {
                 Some((wb, ab)) => QProfile::wa(wb as u32, ab as u32)?,
                 None => QProfile::uniform(spec),
             };
-            let rho_pct = rho.unwrap_or(0);
-            let theta = theta.unwrap_or(0);
+            let rho_pct = kind.rho.unwrap_or(0);
+            let theta = kind.theta;
             Box::new(move |w: &GruWeights| -> EngineBuild {
                 // every refreshed generation re-prunes on the adapted
                 // magnitudes, so the mask tracks the drifting twin
@@ -236,9 +180,37 @@ pub(crate) fn rebuild_for_kind(
                 })
             })
         }
-        other => bail!(
-            "engine kind {other:?} has no adaptation refresh path \
-             (use NativeF64, Fixed, DeltaFixed, the sparse/@WwAa family, or their \
+        EngineBase::Fixed | EngineBase::Delta => {
+            let kernel = if kind.simd { resolve_simd(simd) } else { None };
+            let base = kind.base;
+            let theta = kind.theta;
+            Box::new(move |w: &GruWeights| -> EngineBuild {
+                let qw = w.quantize(spec);
+                Box::new(move || {
+                    let qw = qw?;
+                    Ok(match (base, kernel) {
+                        (EngineBase::Delta, Some(k)) => Box::new(StreamingEngine::new(
+                            Box::new(DeltaQGruDpd::with_kernel(qw, ActKind::Hard, theta, k)),
+                        ))
+                            as Box<dyn DpdEngine>,
+                        (EngineBase::Delta, None) => Box::new(StreamingEngine::new(Box::new(
+                            DeltaQGruDpd::new(qw, ActKind::Hard, theta),
+                        )))
+                            as Box<dyn DpdEngine>,
+                        (_, Some(k)) => Box::new(StreamingEngine::new(Box::new(
+                            QGruDpd::with_kernel(qw, ActKind::Hard, k),
+                        ))) as Box<dyn DpdEngine>,
+                        (_, None) => Box::new(StreamingEngine::new(Box::new(QGruDpd::new(
+                            qw,
+                            ActKind::Hard,
+                        )))) as Box<dyn DpdEngine>,
+                    })
+                })
+            })
+        }
+        _ => bail!(
+            "engine kind {kind} has no adaptation refresh path \
+             (use native, fixed, delta[:θ], the sparse/@WwAa family, or their \
              +simd forms)"
         ),
     })
@@ -492,18 +464,14 @@ mod tests {
         let spec = QSpec::Q12;
         let w = identity_init(3, 10, 0.15);
         for kind in [
-            EngineKind::NativeF64,
-            EngineKind::Fixed,
-            EngineKind::DeltaFixed { theta: 16 },
-            EngineKind::FixedSimd,
-            EngineKind::DeltaFixedSimd { theta: 16 },
-            EngineKind::SparseMp { profile: None, rho: Some(50), theta: None, simd: false },
-            EngineKind::SparseMp {
-                profile: Some((8, 12)),
-                rho: Some(50),
-                theta: Some(16),
-                simd: true,
-            },
+            EngineKind::native(),
+            EngineKind::fixed(),
+            EngineKind::delta(16),
+            EngineKind::fixed_simd(),
+            EngineKind::delta_simd(16),
+            EngineKind::fixed().with_rho(50),
+            EngineKind::fixed().with_rho(50).with_simd(),
+            EngineKind::delta(16).with_profile(8, 12).with_rho(50).with_simd(),
         ] {
             let rebuild = rebuild_for_kind(kind, spec, SimdPolicy::Auto).unwrap();
             let mut eng = rebuild(&w)().unwrap();
@@ -512,15 +480,15 @@ mod tests {
             eng.process_frame(&mut burst).unwrap();
             assert!(eng.batch_class().is_some(), "{kind:?} engines stay coalescible");
         }
-        assert!(rebuild_for_kind(EngineKind::Interp, spec, SimdPolicy::Auto).is_err());
-        assert!(rebuild_for_kind(EngineKind::CycleSim, spec, SimdPolicy::Auto).is_err());
+        assert!(rebuild_for_kind(EngineKind::interp(), spec, SimdPolicy::Auto).is_err());
+        assert!(rebuild_for_kind(EngineKind::cyclesim(), spec, SimdPolicy::Auto).is_err());
         // a refreshed simd engine under the Off policy is the scalar
         // datapath — and still lands in the same batch class, so the
         // kernel never splits coalescing
         let rebuild =
-            rebuild_for_kind(EngineKind::FixedSimd, spec, SimdPolicy::Off).unwrap();
+            rebuild_for_kind(EngineKind::fixed_simd(), spec, SimdPolicy::Off).unwrap();
         let forced = rebuild(&w)().unwrap();
-        let plain = rebuild_for_kind(EngineKind::Fixed, spec, SimdPolicy::Auto).unwrap()(&w)()
+        let plain = rebuild_for_kind(EngineKind::fixed(), spec, SimdPolicy::Auto).unwrap()(&w)()
             .unwrap();
         assert_eq!(forced.batch_class(), plain.batch_class());
     }
@@ -530,7 +498,7 @@ mod tests {
         // the coalescer separation: engines rebuilt from different
         // float twins land in different batch classes
         let spec = QSpec::Q12;
-        let rebuild = rebuild_for_kind(EngineKind::Fixed, spec, SimdPolicy::Auto).unwrap();
+        let rebuild = rebuild_for_kind(EngineKind::fixed(), spec, SimdPolicy::Auto).unwrap();
         let w0 = identity_init(3, 10, 0.15);
         let mut w1 = w0.clone();
         w1.w_fc[0] += 0.25;
@@ -549,9 +517,9 @@ mod tests {
         let mut w = identity_init(3, 10, 0.15);
         w.w_ih[7] = f64::NAN;
         for kind in [
-            EngineKind::Fixed,
-            EngineKind::DeltaFixed { theta: 16 },
-            EngineKind::SparseMp { profile: Some((8, 12)), rho: Some(50), theta: None, simd: false },
+            EngineKind::fixed(),
+            EngineKind::delta(16),
+            EngineKind::fixed().with_profile(8, 12).with_rho(50),
         ] {
             let rebuild = rebuild_for_kind(kind, spec, SimdPolicy::Auto).unwrap();
             let err = rebuild(&w)().expect_err("NaN weights must not build");

@@ -151,11 +151,11 @@ impl LoadgenConfig {
 /// match the conformance suite's.
 pub fn engine_mix() -> Vec<EngineKind> {
     vec![
-        EngineKind::Fixed,
-        EngineKind::FixedSimd,
-        EngineKind::DeltaFixed { theta: 16 },
-        EngineKind::DeltaFixedSimd { theta: 32 },
-        EngineKind::NativeF64,
+        EngineKind::fixed(),
+        EngineKind::fixed_simd(),
+        EngineKind::delta(16),
+        EngineKind::delta_simd(32),
+        EngineKind::native(),
     ]
 }
 
@@ -350,7 +350,7 @@ fn run_level(cfg: &LoadgenConfig, n: usize) -> Result<LevelResult> {
     let mut slots: Vec<Slot> = (0..n)
         .map(|i| {
             let adaptive = cfg.adaptive_every > 0 && (i + 1) % cfg.adaptive_every == 0;
-            let kind = if adaptive { EngineKind::Fixed } else { mix[i % mix.len()] };
+            let kind = if adaptive { EngineKind::fixed() } else { mix[i % mix.len()] };
             let session = open_slot(&fleet, cfg, kind, adaptive)?;
             Ok(Slot {
                 session: Some(session),
@@ -370,7 +370,7 @@ fn run_level(cfg: &LoadgenConfig, n: usize) -> Result<LevelResult> {
 
     // admission probe: with every slot held, one more open must trip
     // the typed rejection — fast, while the existing sessions stream
-    let err = open_slot(&fleet, cfg, EngineKind::Fixed, false)
+    let err = open_slot(&fleet, cfg, EngineKind::fixed(), false)
         .err()
         .ok_or_else(|| anyhow!("over-cap open unexpectedly admitted"))?;
     anyhow::ensure!(
@@ -556,11 +556,12 @@ mod tests {
 
     #[test]
     fn engine_mix_is_heterogeneous_and_parseable() {
+        use crate::runtime::EngineBase;
         let mix = engine_mix();
         assert!(mix.len() >= 4);
-        assert!(mix.contains(&EngineKind::FixedSimd), "mix must exercise the simd path");
+        assert!(mix.contains(&EngineKind::fixed_simd()), "mix must exercise the simd path");
         assert!(
-            mix.iter().any(|k| matches!(k, EngineKind::DeltaFixed { theta } if *theta > 0)),
+            mix.iter().any(|k| k.base == EngineBase::Delta && k.theta > 0),
             "mix must exercise a non-trivial delta threshold"
         );
         for k in mix {
@@ -575,7 +576,7 @@ mod tests {
                 let mut slot_rng = Rng::new(seed);
                 let mut slot = Slot {
                     session: None, // schedule-only: never pushed
-                    kind: EngineKind::Fixed,
+                    kind: EngineKind::fixed(),
                     adaptive: false,
                     remaining: 0,
                     lives_left: 1,

@@ -52,7 +52,7 @@ pub struct CoordinatorConfig {
 impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
-            engine: EngineKind::Fixed,
+            engine: EngineKind::fixed(),
             frame_len: 2048,
             queue_depth: 4,
             artifacts: None,
@@ -153,7 +153,7 @@ mod tests {
             return;
         }
         let c = Coordinator::new(CoordinatorConfig {
-            engine: EngineKind::Fixed,
+            engine: EngineKind::fixed(),
             frame_len: 100,
             queue_depth: 2,
             artifacts: None,
@@ -174,7 +174,7 @@ mod tests {
         }
         let input = signal(777, 2);
         let c = Coordinator::new(CoordinatorConfig {
-            engine: EngineKind::Fixed,
+            engine: EngineKind::fixed(),
             frame_len: 128,
             queue_depth: 3,
             artifacts: None,
@@ -198,7 +198,7 @@ mod tests {
             return;
         }
         let c = Coordinator::new(CoordinatorConfig {
-            engine: EngineKind::Fixed,
+            engine: EngineKind::fixed(),
             frame_len: 64,
             queue_depth: 2,
             artifacts: None,
@@ -220,14 +220,14 @@ mod tests {
         }
         let input = signal(300, 5);
         let fixed = Coordinator::new(CoordinatorConfig {
-            engine: EngineKind::Fixed,
+            engine: EngineKind::fixed(),
             frame_len: 64,
             ..Default::default()
         })
         .run_stream(&input)
         .unwrap();
         let sim = Coordinator::new(CoordinatorConfig {
-            engine: EngineKind::CycleSim,
+            engine: EngineKind::cyclesim(),
             frame_len: 64,
             ..Default::default()
         })
@@ -243,7 +243,7 @@ mod tests {
             return;
         }
         let c = Coordinator::new(CoordinatorConfig {
-            engine: EngineKind::Interp,
+            engine: EngineKind::interp(),
             ..Default::default()
         });
         let input = signal(3000, 8);
@@ -264,7 +264,7 @@ mod tests {
             return;
         }
         let c = Coordinator::new(CoordinatorConfig {
-            engine: EngineKind::Fixed,
+            engine: EngineKind::fixed(),
             frame_len: 32,
             queue_depth: 1,
             artifacts: None,

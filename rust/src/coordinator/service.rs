@@ -45,7 +45,7 @@
 //! weights, attested by a content fingerprint) into a single
 //! [`DpdEngine::run_batch`] call. Per-session GRU state rides along as
 //! a [`DpdState`] lane snapshot — for delta sessions
-//! (`EngineKind::DeltaFixed`) that snapshot carries the *full* delta
+//! (`delta:θ` specs) that snapshot carries the *full* delta
 //! state (propagated vectors + raw accumulators), and the threshold θ
 //! is part of the batch class, so sessions at different θ never
 //! coalesce. Per-session command order is preserved (a second frame

@@ -73,7 +73,7 @@ pub struct SessionConfig {
 impl Default for SessionConfig {
     fn default() -> Self {
         SessionConfig {
-            engine: EngineKind::Fixed,
+            engine: EngineKind::fixed(),
             frame_len: None,
             queue_depth: None,
             coalesce: true,
@@ -551,7 +551,7 @@ mod tests {
     #[test]
     fn session_config_defaults_inherit_service() {
         let cfg = SessionConfig::default();
-        assert_eq!(cfg.engine, EngineKind::Fixed);
+        assert_eq!(cfg.engine, EngineKind::fixed());
         assert!(cfg.frame_len.is_none() && cfg.queue_depth.is_none());
         assert!(cfg.coalesce, "sessions default into the batched path");
         assert!(cfg.adapt.is_none(), "sessions default to a frozen engine");

@@ -1,0 +1,1081 @@
+//! The unified integer GRU executor — one datapath, three column
+//! plans. [`IntGruExecutor<P, K>`] replaces the historical trio of
+//! hand-written engines (`QGruDpd`, `DeltaQGruDpd`, `SparseMpGruDpd`,
+//! now type aliases) with two orthogonal seams:
+//!
+//! * **[`ColumnPlan`] `P`** — *how gate-matvec contributions are
+//!   produced*: [`DensePlan`] recomputes both matvecs every sample
+//!   (narrow i32 fast path for `bits <= 13`, wide i64 otherwise);
+//!   [`DeltaPlan`] carries the raw i64 accumulators across steps and
+//!   folds in only columns whose delta exceeds θ (DeltaDPD,
+//!   arXiv:2505.06250); [`SparseCscPlan`] does the same over pruned
+//!   CSC tensors with per-tensor mixed-precision formats (SparseDPD ×
+//!   MP-DPD, arXiv:2506.16591 / arXiv:2404.15364).
+//! * **[`GateKernel`] `K`** — *how the inner loops execute* (scalar
+//!   or AVX2), statically dispatched and bit-exact by the
+//!   `fixed::kernel` contract, so the choice never appears in the
+//!   batch class.
+//!
+//! Everything downstream of the accumulators — the gate chain, the
+//! hidden update, FC + residual — exists exactly once
+//! ([`IntGruExecutor::step_codes`]), which turns the historical
+//! equivalence hinges (`delta:0` ≡ dense on any stream; uniform ρ=0
+//! sparse ≡ delta at any θ) into structural identities rather than
+//! conformance assertions. The executor keeps one [`DeltaSnapshot`]
+//! per stream (dense plans use only its architectural `h`), and
+//! snapshots are interchangeable across plans sharing a shape — see
+//! [`ColumnPlan::adopt_hidden`] and DESIGN.md §The unified integer
+//! executor; genuinely incompatible ones fail with the typed
+//! [`StateMismatch`] error.
+
+use anyhow::{bail, Result};
+
+use super::qgru::{
+    act_fingerprint, features_codes, sigmoid_code, tanh_code, transpose_gates_blocked, ActKind,
+};
+use super::sparse::SparseStats;
+use super::weights::{QGruWeights, SparseQGruWeights};
+use super::{
+    process_lanes_sequential, DeltaSnapshot, DeltaStats, Dpd, DpdLane, DpdState, StateMismatch,
+};
+use crate::fixed::kernel::{GateKernel, ScalarKernel};
+use crate::fixed::ops::{exceeds_theta, requantize, rshift_round, saturate_i64};
+use crate::fixed::QSpec;
+use crate::util::fnv1a_words;
+
+/// The bit-exact dense engine: [`IntGruExecutor`] over [`DensePlan`].
+/// Mirrors, instruction for instruction, the canonical integer
+/// specification in `python/compile/kernels/ref.py::int_step`.
+pub type QGruDpd<K = ScalarKernel> = IntGruExecutor<DensePlan, K>;
+
+/// The delta-sparsity engine: [`IntGruExecutor`] over [`DeltaPlan`]
+/// (DeltaDPD-style column skipping; bit-exact to [`QGruDpd`] at θ=0).
+pub type DeltaQGruDpd<K = ScalarKernel> = IntGruExecutor<DeltaPlan, K>;
+
+/// The sparse mixed-precision engine: [`IntGruExecutor`] over
+/// [`SparseCscPlan`] (bit-exact to dense at uniform/ρ=0/θ=0 and to
+/// the delta engine at uniform/ρ=0/any θ).
+pub type SparseMpGruDpd<K = ScalarKernel> = IntGruExecutor<SparseCscPlan, K>;
+
+/// `bias << f + Σ_c row[c] · v[c]` in exact i64 — the dense row
+/// accumulation shared by the wide gate path, the FC readout and the
+/// carried plans' cache rebuilds.
+#[inline]
+fn dense_row_i64(row: &[i32], v: &[i32], bias: i32, f: u32) -> i64 {
+    let mut acc = (bias as i64) << f;
+    for (w, x) in row.iter().zip(v) {
+        acc += *w as i64 * *x as i64;
+    }
+    acc
+}
+
+/// A carried plan's reset state: h = v_prev = 0, accumulators hold
+/// only the per-tensor aligned biases (the matvec of the zero vector).
+fn carried_fresh(
+    hd: usize,
+    feats: usize,
+    b_ih: &[i32],
+    f_ih: u32,
+    b_hh: &[i32],
+    f_hh: u32,
+) -> DeltaSnapshot {
+    DeltaSnapshot {
+        h: vec![0; hd],
+        x_prev: vec![0; feats],
+        h_prev: vec![0; hd],
+        acc_ih: b_ih.iter().map(|&b| (b as i64) << f_ih).collect(),
+        acc_hh: b_hh.iter().map(|&b| (b as i64) << f_hh).collect(),
+    }
+}
+
+/// One element of the narrow (i32) gate chain — r/z/n gates plus the
+/// hidden update on codes. THE definition: the scalar step and the
+/// SoA batched span both call it, so their bit-exactness is
+/// structural. All products fit i32 (bits <= 13 ⇒ < 2^24).
+#[inline(always)]
+fn narrow_cell(act: &ActKind, spec: QSpec, gi: [i32; 3], gh: [i32; 3], h: i32) -> i32 {
+    let f = spec.frac();
+    let half = 1i32 << (f - 1);
+    let one = 1i32 << f;
+    let (qmin, qmax) = (spec.qmin(), spec.qmax());
+    let r = sigmoid_code(act, spec, (gi[0] + gh[0]).clamp(qmin, qmax));
+    let z = sigmoid_code(act, spec, (gi[1] + gh[1]).clamp(qmin, qmax));
+    let rh = ((r * gh[2] + half) >> f).clamp(qmin, qmax);
+    let n = tanh_code(act, spec, (gi[2] + rh).clamp(qmin, qmax));
+    let zn = ((one - z) * n + half) >> f;
+    let zh = (z * h + half) >> f;
+    (zn + zh).clamp(qmin, qmax)
+}
+
+/// One narrow (i32) matvec through the kernel: bias-fill, tail-free
+/// per-column axpys over the lane-blocked transpose, requantize into
+/// `out` (padding weights are zero, so padded entries stay zero).
+fn narrow_matvec<K: GateKernel>(
+    k: K,
+    acc: &mut [i32],
+    wt: &[i32],
+    stride: usize,
+    bias: &[i32],
+    vals: &[i32],
+    f: u32,
+    spec: QSpec,
+    out: &mut [i32],
+) {
+    for (a, b) in acc.iter_mut().zip(bias) {
+        *a = b << f;
+    }
+    for (c, &v) in vals.iter().enumerate() {
+        k.axpy_i32(acc, &wt[c * stride..(c + 1) * stride], v);
+    }
+    k.requantize_block_i32(acc, f, spec, out);
+}
+
+/// How one engine variant produces its gate-matvec contributions —
+/// the seam that distinguishes the dense, delta and sparse family
+/// members. Everything a plan does ends at the same contract: after
+/// [`ColumnPlan::gates`], `gi`/`gh` hold the requantized input/hidden
+/// gate pre-activations in the activation format, and the shared gate
+/// chain takes over.
+pub trait ColumnPlan {
+    /// The activation/stream format — the requantize target of every
+    /// matvec and the format of `h`, the I/Q codes and the gates.
+    fn act_spec(&self) -> QSpec;
+
+    /// GRU hidden size H.
+    fn hidden(&self) -> usize;
+
+    /// Input feature count F (4 for the paper's [i, q, |x|², |x|⁴]).
+    fn features(&self) -> usize;
+
+    /// Length of the executor's `gi`/`gh` scratch (the dense plan
+    /// pads to the kernel's lane-blocked stride; carried plans keep
+    /// the unpadded 3H — their accumulators are the state format).
+    fn gate_len(&self) -> usize;
+
+    /// Whether the post-matvec gate chain may run in i32 (dense
+    /// narrow formats only; carried plans read i64 accumulators and
+    /// always take the wide chain, which is bit-identical on the
+    /// narrow domain — see `fixed::ops`).
+    fn narrow_chain(&self) -> bool;
+
+    /// Whether the snapshot carries accumulator caches across steps
+    /// (delta/sparse). Decides the [`DpdState`] kind `save_state`
+    /// emits: `DeltaI32` when true, plain `I32` otherwise.
+    fn carried(&self) -> bool;
+
+    /// The reset state: h = v_prev = 0, accumulators (if carried)
+    /// hold only the aligned biases — the matvec of the all-zero
+    /// vector.
+    fn fresh_state(&self) -> DeltaSnapshot;
+
+    /// Rebuild the state around a bare hidden vector (loading an
+    /// `I32` snapshot): carried plans set `h_prev = h`, `x_prev = 0`
+    /// and recompute the exact accumulators those imply, so the
+    /// accumulator invariant holds and θ=0 continuation is bit-exact
+    /// to the dense engine's.
+    fn adopt_hidden(&self, h: &[i32], st: &mut DeltaSnapshot);
+
+    /// Produce this step's requantized gate pre-activations into
+    /// `gi`/`gh` (reading `st.h` for the hidden matvec, and updating
+    /// the carried caches/stats where the plan has them).
+    fn gates<K: GateKernel>(
+        &mut self,
+        k: K,
+        x: &[i32; 4],
+        st: &mut DeltaSnapshot,
+        gi: &mut [i32],
+        gh: &mut [i32],
+    );
+
+    /// FC readout row `o`: (weight row, bias, requantize shift). The
+    /// shift is the weight fraction of the FC tensor — equal to the
+    /// activation fraction everywhere except mixed-precision
+    /// profiles.
+    fn fc_row(&self, o: usize) -> (&[i32], i32, u32);
+
+    /// Engine label for reports (the historical per-engine names).
+    fn engine_name(&self, act: &ActKind) -> &'static str;
+
+    /// Datapath-identity fingerprint for batch coalescing. Plans
+    /// never coalesce across families even at the equivalence hinges
+    /// (their state snapshots differ), which the per-family salts
+    /// ("delta-theta", "sparse-mp-theta") guarantee.
+    fn fingerprint(&self, act: &ActKind) -> u64;
+
+    /// Optional structure-of-arrays batched path. `None` (the
+    /// default) means "no SoA for this plan/format — use the
+    /// sequential multiplexer"; the dense plan overrides it for
+    /// narrow formats.
+    fn process_lanes_soa<K: GateKernel>(
+        &self,
+        _act: &ActKind,
+        _k: K,
+        _lanes: &mut [DpdLane<'_>],
+    ) -> Option<Result<()>> {
+        None
+    }
+}
+
+/// Dense plan: recompute both gate matvecs every sample from the
+/// lane-blocked column-major weight copies (narrow formats) or the
+/// row-major originals (wide formats).
+pub struct DensePlan {
+    pub(crate) w: QGruWeights,
+    /// lane-blocked column-major weight copies for the narrow path
+    /// (bits <= 13): wt_ih[(col, r)] = w_ih[r][col], `stride`
+    /// contiguous per column (see `transpose_gates_blocked`).
+    pub(crate) wt_ih: Vec<i32>,
+    pub(crate) wt_hh: Vec<i32>,
+    pub(crate) acc: Vec<i32>,
+    /// per-column stride of `wt_ih`/`wt_hh` (= 3H rounded up to the
+    /// kernel's lanes; also the length of `acc`/`gi`/`gh`, whose
+    /// padding entries stay zero forever)
+    pub(crate) stride: usize,
+}
+
+impl DensePlan {
+    pub(crate) fn new(w: QGruWeights, lanes: usize) -> DensePlan {
+        let (wt_ih, wt_hh, stride) = transpose_gates_blocked(&w, lanes);
+        DensePlan { acc: vec![0i32; stride], wt_ih, wt_hh, stride, w }
+    }
+}
+
+impl ColumnPlan for DensePlan {
+    fn act_spec(&self) -> QSpec {
+        self.w.spec
+    }
+
+    fn hidden(&self) -> usize {
+        self.w.hidden
+    }
+
+    fn features(&self) -> usize {
+        self.w.features
+    }
+
+    fn gate_len(&self) -> usize {
+        self.stride
+    }
+
+    fn narrow_chain(&self) -> bool {
+        self.w.spec.bits <= 13
+    }
+
+    fn carried(&self) -> bool {
+        false
+    }
+
+    fn fresh_state(&self) -> DeltaSnapshot {
+        // dense streams carry only the architectural hidden state;
+        // the cache vectors stay empty (and save_state emits I32)
+        DeltaSnapshot { h: vec![0; self.w.hidden], ..DeltaSnapshot::default() }
+    }
+
+    fn adopt_hidden(&self, h: &[i32], st: &mut DeltaSnapshot) {
+        st.h.copy_from_slice(h);
+    }
+
+    fn gates<K: GateKernel>(
+        &mut self,
+        k: K,
+        x: &[i32; 4],
+        st: &mut DeltaSnapshot,
+        gi: &mut [i32],
+        gh: &mut [i32],
+    ) {
+        let spec = self.w.spec;
+        let f = spec.frac();
+        let hd = self.w.hidden;
+        if spec.bits <= 13 {
+            // narrow fast path: i32 accumulation through the gate
+            // kernel over the lane-blocked stride
+            let s = self.stride;
+            narrow_matvec(k, &mut self.acc, &self.wt_ih, s, &self.w.b_ih, x, f, spec, gi);
+            narrow_matvec(k, &mut self.acc, &self.wt_hh, s, &self.w.b_hh, &st.h, f, spec, gh);
+        } else {
+            // wide path: i64 accumulation
+            for r in 0..3 * hd {
+                let row_i = &self.w.w_ih[r * 4..(r + 1) * 4];
+                gi[r] = requantize(dense_row_i64(row_i, x, self.w.b_ih[r], f), f, spec);
+                let row_h = &self.w.w_hh[r * hd..(r + 1) * hd];
+                gh[r] = requantize(dense_row_i64(row_h, &st.h, self.w.b_hh[r], f), f, spec);
+            }
+        }
+    }
+
+    fn fc_row(&self, o: usize) -> (&[i32], i32, u32) {
+        let hd = self.w.hidden;
+        (&self.w.w_fc[o * hd..(o + 1) * hd], self.w.b_fc[o], self.w.spec.frac())
+    }
+
+    fn engine_name(&self, act: &ActKind) -> &'static str {
+        match act {
+            ActKind::Hard => "qgru-hard",
+            ActKind::Lut(_) => "qgru-lut",
+        }
+    }
+
+    fn fingerprint(&self, act: &ActKind) -> u64 {
+        act_fingerprint(act, self.w.fingerprint())
+    }
+
+    /// Structure-of-arrays batched execution over independent lanes
+    /// sharing these weights (narrow formats: bits <= 13, i32
+    /// accumulation). Every array is batch-fastest (`[rows][B]`), so
+    /// the inner accumulate loops vectorize across lanes while each
+    /// lane's per-sample operation chain stays exactly the scalar
+    /// `step_codes` one — bit-exactness by construction, enforced by
+    /// tests/batch_parity.rs. Ragged lanes run in lockstep spans
+    /// between retirements of the shortest survivors.
+    fn process_lanes_soa<K: GateKernel>(
+        &self,
+        act: &ActKind,
+        k: K,
+        lanes: &mut [DpdLane<'_>],
+    ) -> Option<Result<()>> {
+        if self.w.spec.bits > 13 {
+            return None;
+        }
+        Some(self.lanes_soa(act, k, lanes))
+    }
+}
+
+impl DensePlan {
+    fn lanes_soa<K: GateKernel>(
+        &self,
+        act: &ActKind,
+        k: K,
+        lanes: &mut [DpdLane<'_>],
+    ) -> Result<()> {
+        let hd = self.w.hidden;
+        // validate every lane up front: whole-batch failure semantics —
+        // nothing is processed when any lane snapshot is malformed
+        for (b, lane) in lanes.iter().enumerate() {
+            match &*lane.state {
+                DpdState::I32(h) if h.len() == hd => {}
+                DpdState::DeltaI32(s) if s.shape_ok(hd, self.w.features) => {}
+                other => bail!(
+                    "qgru batched lane {b}: incompatible state snapshot ({})",
+                    other.kind()
+                ),
+            }
+        }
+        // a dense engine adopts a carried snapshot's hidden state and
+        // re-emits a plain I32 one — exactly what the sequential
+        // load/save multiplexer would do lane by lane
+        for lane in lanes.iter_mut() {
+            if let DpdState::DeltaI32(s) = &*lane.state {
+                *lane.state = DpdState::I32(s.h.clone());
+            }
+        }
+        let mut idx: Vec<usize> = (0..lanes.len()).collect();
+        idx.sort_by_key(|&i| lanes[i].iq.len());
+        let (mut start, mut t0) = (0usize, 0usize);
+        while start < idx.len() {
+            let t1 = lanes[idx[start]].iq.len();
+            if t1 > t0 {
+                self.span_soa(act, k, lanes, &idx[start..], t0, t1);
+                t0 = t1;
+            }
+            while start < idx.len() && lanes[idx[start]].iq.len() == t0 {
+                start += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// One lockstep span of the SoA kernel: samples `t0..t1` of every
+    /// active lane (all have at least `t1` samples).
+    fn span_soa<K: GateKernel>(
+        &self,
+        act: &ActKind,
+        k: K,
+        lanes: &mut [DpdLane<'_>],
+        active: &[usize],
+        t0: usize,
+        t1: usize,
+    ) {
+        let spec = self.w.spec;
+        let f = spec.frac();
+        let hd = self.w.hidden;
+        let rows = 3 * hd;
+        let stride = self.stride;
+        let ba = active.len();
+
+        // gather per-lane hidden state into [H][B]
+        let mut hs = vec![0i32; hd * ba];
+        for (j, &li) in active.iter().enumerate() {
+            if let DpdState::I32(h) = &*lanes[li].state {
+                for (k, &v) in h.iter().enumerate() {
+                    hs[k * ba + j] = v;
+                }
+            }
+        }
+        let mut xb = vec![0i32; 4 * ba];
+        let mut in_codes = vec![[0i32; 2]; ba];
+        let mut acc = vec![0i32; rows * ba];
+        let mut gi = vec![0i32; rows * ba];
+        let mut gh = vec![0i32; rows * ba];
+
+        for t in t0..t1 {
+            // quantize + preprocess each lane — the same scalar ops
+            // `process` applies per sample
+            for (j, &li) in active.iter().enumerate() {
+                let s = lanes[li].iq[t];
+                let iq = [spec.quantize(s[0]), spec.quantize(s[1])];
+                in_codes[j] = iq;
+                let x = features_codes(spec, iq);
+                for (c, &v) in x.iter().enumerate() {
+                    xb[c * ba + j] = v;
+                }
+            }
+            // input matvec, batch-fastest inner loops
+            for (r, &b) in self.w.b_ih.iter().enumerate() {
+                acc[r * ba..(r + 1) * ba].fill(b << f);
+            }
+            for c in 0..4 {
+                // batch-fastest axpy per weight row: the kernel runs
+                // across lanes, the per-lane op chain stays scalar
+                let col = &self.wt_ih[c * stride..c * stride + rows];
+                let xrow = &xb[c * ba..(c + 1) * ba];
+                for (r, &w) in col.iter().enumerate() {
+                    k.axpy_i32(&mut acc[r * ba..(r + 1) * ba], xrow, w);
+                }
+            }
+            k.requantize_block_i32(&acc, f, spec, &mut gi);
+            // hidden matvec
+            for (r, &b) in self.w.b_hh.iter().enumerate() {
+                acc[r * ba..(r + 1) * ba].fill(b << f);
+            }
+            for c in 0..hd {
+                let col = &self.wt_hh[c * stride..c * stride + rows];
+                let hrow = &hs[c * ba..(c + 1) * ba];
+                for (r, &w) in col.iter().enumerate() {
+                    k.axpy_i32(&mut acc[r * ba..(r + 1) * ba], hrow, w);
+                }
+            }
+            k.requantize_block_i32(&acc, f, spec, &mut gh);
+            // gates: the one scalar chain per lane, interleaved across
+            // the batch (identical integer ops and order -> identical
+            // bits, by shared definition)
+            for k in 0..hd {
+                for j in 0..ba {
+                    hs[k * ba + j] = narrow_cell(
+                        act,
+                        spec,
+                        [gi[k * ba + j], gi[(hd + k) * ba + j], gi[(2 * hd + k) * ba + j]],
+                        [gh[k * ba + j], gh[(hd + k) * ba + j], gh[(2 * hd + k) * ba + j]],
+                        hs[k * ba + j],
+                    );
+                }
+            }
+            // FC + residual per lane (i64 accumulation, like scalar)
+            for (j, &li) in active.iter().enumerate() {
+                let mut out = [0.0f64; 2];
+                for (o, dst) in out.iter_mut().enumerate() {
+                    let row = &self.w.w_fc[o * hd..(o + 1) * hd];
+                    let mut a = (self.w.b_fc[o] as i64) << f;
+                    for (k, &w) in row.iter().enumerate() {
+                        a += w as i64 * hs[k * ba + j] as i64;
+                    }
+                    let fc = requantize(a, f, spec);
+                    let y = saturate_i64(fc as i64 + in_codes[j][o] as i64, spec);
+                    *dst = spec.dequantize(y);
+                }
+                lanes[li].iq[t] = out;
+            }
+        }
+        // scatter the updated hidden states back into the snapshots
+        for (j, &li) in active.iter().enumerate() {
+            if let DpdState::I32(h) = &mut *lanes[li].state {
+                for (k, dst) in h.iter_mut().enumerate() {
+                    *dst = hs[k * ba + j];
+                }
+            }
+        }
+    }
+}
+
+/// Delta plan — the DeltaDPD-style hot-loop fast path
+/// (arXiv:2505.06250). Wideband I/Q is temporally redundant, so the
+/// plan carries the raw (pre-requantize) accumulators across steps
+/// and folds in only the columns whose delta exceeds a threshold θ:
+///
+/// ```text
+///   acc_ih == b_ih << f + W_ih · x_prev   (invariant, exact i64)
+///   acc_hh == b_hh << f + W_hh · h_prev
+///   per step, per column c:  |v[c] - v_prev[c]| > θ
+///       -> acc += W[:, c] · (v[c] - v_prev[c]);  v_prev[c] = v[c]
+/// ```
+///
+/// At θ=0 every nonzero delta propagates, so `v_prev == v` after each
+/// pass and the accumulators equal the dense matvec exactly — the
+/// `delta:0` ≡ dense hinge the conformance matrix enforces. For θ > 0
+/// each skipped column is stale by ≤ θ codes, bounding the per-row
+/// pre-activation perturbation by `θ · Σ_c |w[r][c]|` (property-pinned
+/// in `qgru::tests`; quality impact by the golden delta trace).
+pub struct DeltaPlan {
+    pub(crate) w: QGruWeights,
+    /// propagation threshold in codes (0 = bit-exact dense)
+    pub(crate) theta: u32,
+    /// lane-blocked column-major weight copies (see
+    /// `transpose_gates_blocked`). The snapshot's accumulators stay
+    /// UNPADDED (3H — the state-format contract), so kernel calls
+    /// slice each padded column back down to 3H.
+    pub(crate) wt_ih: Vec<i32>,
+    pub(crate) wt_hh: Vec<i32>,
+    /// per-column stride of `wt_ih`/`wt_hh`
+    pub(crate) stride: usize,
+    pub(crate) stats: DeltaStats,
+}
+
+impl DeltaPlan {
+    pub(crate) fn new(w: QGruWeights, theta: u32, lanes: usize) -> DeltaPlan {
+        let (wt_ih, wt_hh, stride) = transpose_gates_blocked(&w, lanes);
+        DeltaPlan { wt_ih, wt_hh, stride, w, theta, stats: DeltaStats::default() }
+    }
+}
+
+impl ColumnPlan for DeltaPlan {
+    fn act_spec(&self) -> QSpec {
+        self.w.spec
+    }
+
+    fn hidden(&self) -> usize {
+        self.w.hidden
+    }
+
+    fn features(&self) -> usize {
+        self.w.features
+    }
+
+    fn gate_len(&self) -> usize {
+        3 * self.w.hidden
+    }
+
+    fn narrow_chain(&self) -> bool {
+        false
+    }
+
+    fn carried(&self) -> bool {
+        true
+    }
+
+    fn fresh_state(&self) -> DeltaSnapshot {
+        let f = self.w.spec.frac();
+        carried_fresh(self.w.hidden, self.w.features, &self.w.b_ih, f, &self.w.b_hh, f)
+    }
+
+    fn adopt_hidden(&self, h: &[i32], st: &mut DeltaSnapshot) {
+        // rebuild the caches around the bare hidden vector so the
+        // accumulator invariant holds exactly: x_prev = 0 (its matvec
+        // is just the aligned bias), h_prev = h with the full dense
+        // W_hh · h folded in
+        let f = self.w.spec.frac();
+        let hd = self.w.hidden;
+        st.h.copy_from_slice(h);
+        st.h_prev.copy_from_slice(h);
+        st.x_prev.iter_mut().for_each(|v| *v = 0);
+        for (a, &b) in st.acc_ih.iter_mut().zip(&self.w.b_ih) {
+            *a = (b as i64) << f;
+        }
+        for (r, a) in st.acc_hh.iter_mut().enumerate() {
+            *a = dense_row_i64(&self.w.w_hh[r * hd..(r + 1) * hd], h, self.w.b_hh[r], f);
+        }
+    }
+
+    fn gates<K: GateKernel>(
+        &mut self,
+        k: K,
+        x: &[i32; 4],
+        st: &mut DeltaSnapshot,
+        gi: &mut [i32],
+        gh: &mut [i32],
+    ) {
+        let spec = self.w.spec;
+        let f = spec.frac();
+        let hd = self.w.hidden;
+        let rows = 3 * hd;
+        let stride = self.stride;
+
+        // delta pass over the input feature columns (each padded
+        // column sliced back to 3H to match the unpadded snapshot)
+        for (c, &xv) in x.iter().enumerate() {
+            let d = xv - st.x_prev[c];
+            if exceeds_theta(d, self.theta) {
+                k.delta_axpy_i64(&mut st.acc_ih, &self.wt_ih[c * stride..c * stride + rows], d);
+                st.x_prev[c] = xv;
+                self.stats.in_updates += 1;
+            }
+        }
+        // delta pass over the hidden columns (h_{t-1} vs last propagated)
+        for c in 0..hd {
+            let d = st.h[c] - st.h_prev[c];
+            if exceeds_theta(d, self.theta) {
+                k.delta_axpy_i64(&mut st.acc_hh, &self.wt_hh[c * stride..c * stride + rows], d);
+                st.h_prev[c] = st.h[c];
+                self.stats.hid_updates += 1;
+            }
+        }
+        self.stats.steps += 1;
+        self.stats.in_cols += self.w.features as u64;
+        self.stats.hid_cols += hd as u64;
+
+        // readout: requantize the carried accumulators into gate codes
+        k.requantize_block_i64(&st.acc_ih, f, spec, gi);
+        k.requantize_block_i64(&st.acc_hh, f, spec, gh);
+    }
+
+    fn fc_row(&self, o: usize) -> (&[i32], i32, u32) {
+        let hd = self.w.hidden;
+        (&self.w.w_fc[o * hd..(o + 1) * hd], self.w.b_fc[o], self.w.spec.frac())
+    }
+
+    fn engine_name(&self, _act: &ActKind) -> &'static str {
+        "delta-qgru"
+    }
+
+    fn fingerprint(&self, act: &ActKind) -> u64 {
+        // θ is part of the datapath identity: different thresholds
+        // compute different functions and must never coalesce
+        let base = act_fingerprint(act, self.w.fingerprint());
+        fnv1a_words("delta-theta", [base, self.theta as u64])
+    }
+}
+
+/// Sparse mixed-precision plan (see the `dpd::sparse` module docs for
+/// the datapath and its equivalence contracts): magnitude-pruned
+/// compressed sparse-column gate tensors with per-tensor formats,
+/// composed with the same θ-threshold column firing as [`DeltaPlan`].
+/// Products accumulate in the fa+fw domain and every matvec
+/// requantizes by the *weight* fraction back to the activation
+/// domain.
+pub struct SparseCscPlan {
+    pub(crate) w: SparseQGruWeights,
+    /// delta propagation threshold in activation codes (0 = every
+    /// nonzero delta fires)
+    pub(crate) theta: u32,
+    pub(crate) stats: SparseStats,
+}
+
+impl SparseCscPlan {
+    pub(crate) fn new(w: SparseQGruWeights, theta: u32) -> SparseCscPlan {
+        SparseCscPlan { w, theta, stats: SparseStats::default() }
+    }
+
+    /// The reset state with per-tensor bias alignment (`b_code(fa) <<
+    /// fw` — the matvec of the all-zero vector).
+    pub(crate) fn fresh_state_for(w: &SparseQGruWeights) -> DeltaSnapshot {
+        let (f_ih, f_hh) = (w.profile.w_ih.frac(), w.profile.w_hh.frac());
+        carried_fresh(w.hidden, w.features, &w.b_ih, f_ih, &w.b_hh, f_hh)
+    }
+}
+
+impl ColumnPlan for SparseCscPlan {
+    fn act_spec(&self) -> QSpec {
+        self.w.profile.act
+    }
+
+    fn hidden(&self) -> usize {
+        self.w.hidden
+    }
+
+    fn features(&self) -> usize {
+        self.w.features
+    }
+
+    fn gate_len(&self) -> usize {
+        3 * self.w.hidden
+    }
+
+    fn narrow_chain(&self) -> bool {
+        false
+    }
+
+    fn carried(&self) -> bool {
+        true
+    }
+
+    fn fresh_state(&self) -> DeltaSnapshot {
+        Self::fresh_state_for(&self.w)
+    }
+
+    fn adopt_hidden(&self, h: &[i32], st: &mut DeltaSnapshot) {
+        // same invariant rebuild as the delta plan, but through the
+        // CSC tensors (the invariant is in terms of the masked
+        // matrix) and each tensor's own accumulation domain
+        let f_ih = self.w.profile.w_ih.frac();
+        let f_hh = self.w.profile.w_hh.frac();
+        st.h.copy_from_slice(h);
+        st.h_prev.copy_from_slice(h);
+        st.x_prev.iter_mut().for_each(|v| *v = 0);
+        for (a, &b) in st.acc_ih.iter_mut().zip(&self.w.b_ih) {
+            *a = (b as i64) << f_ih;
+        }
+        for (a, &b) in st.acc_hh.iter_mut().zip(&self.w.b_hh) {
+            *a = (b as i64) << f_hh;
+        }
+        for (c, &hv) in h.iter().enumerate() {
+            if hv != 0 {
+                let (lo, hi) = (self.w.hh_ptr[c], self.w.hh_ptr[c + 1]);
+                for (&r, &v) in self.w.hh_rows[lo..hi].iter().zip(&self.w.hh_vals[lo..hi]) {
+                    st.acc_hh[r as usize] += v as i64 * hv as i64;
+                }
+            }
+        }
+    }
+
+    fn gates<K: GateKernel>(
+        &mut self,
+        k: K,
+        x: &[i32; 4],
+        st: &mut DeltaSnapshot,
+        gi: &mut [i32],
+        gh: &mut [i32],
+    ) {
+        let act_spec = self.w.profile.act;
+        let f_ih = self.w.profile.w_ih.frac();
+        let f_hh = self.w.profile.w_hh.frac();
+        let hd = self.w.hidden;
+
+        // delta pass over the input feature columns: only surviving
+        // CSC entries are touched, so a pruned weight costs no MAC
+        for (c, &xv) in x.iter().enumerate() {
+            let d = xv - st.x_prev[c];
+            if exceeds_theta(d, self.theta) {
+                let (lo, hi) = (self.w.ih_ptr[c], self.w.ih_ptr[c + 1]);
+                k.sparse_delta_axpy_i64(
+                    &mut st.acc_ih,
+                    &self.w.ih_rows[lo..hi],
+                    &self.w.ih_vals[lo..hi],
+                    d,
+                );
+                st.x_prev[c] = xv;
+                self.stats.in_updates += 1;
+                self.stats.gate_macs += (hi - lo) as u64;
+            }
+        }
+        // delta pass over the hidden columns
+        for c in 0..hd {
+            let d = st.h[c] - st.h_prev[c];
+            if exceeds_theta(d, self.theta) {
+                let (lo, hi) = (self.w.hh_ptr[c], self.w.hh_ptr[c + 1]);
+                k.sparse_delta_axpy_i64(
+                    &mut st.acc_hh,
+                    &self.w.hh_rows[lo..hi],
+                    &self.w.hh_vals[lo..hi],
+                    d,
+                );
+                st.h_prev[c] = st.h[c];
+                self.stats.hid_updates += 1;
+                self.stats.gate_macs += (hi - lo) as u64;
+            }
+        }
+        self.stats.steps += 1;
+        self.stats.in_cols += self.w.features as u64;
+        self.stats.hid_cols += hd as u64;
+        self.stats.dense_gate_macs += (3 * hd * (self.w.features + hd)) as u64;
+
+        // readout: requantize each carried accumulator by its tensor's
+        // weight fraction, back into the activation domain
+        k.requantize_block_i64(&st.acc_ih, f_ih, act_spec, gi);
+        k.requantize_block_i64(&st.acc_hh, f_hh, act_spec, gh);
+    }
+
+    fn fc_row(&self, o: usize) -> (&[i32], i32, u32) {
+        let hd = self.w.hidden;
+        (&self.w.w_fc[o * hd..(o + 1) * hd], self.w.b_fc[o], self.w.profile.w_fc.frac())
+    }
+
+    fn engine_name(&self, _act: &ActKind) -> &'static str {
+        "sparse-mp-qgru"
+    }
+
+    fn fingerprint(&self, act: &ActKind) -> u64 {
+        // the weight fingerprint already covers profile + ρ + mask +
+        // codes; θ joins it like the delta plan's
+        let base = act_fingerprint(act, self.w.fingerprint());
+        fnv1a_words("sparse-mp-theta", [base, self.theta as u64])
+    }
+}
+
+/// The one streaming integer GRU DPD engine: a [`ColumnPlan`] for the
+/// matvec contributions composed with a [`GateKernel`] for the inner
+/// loops. Kernel dispatch is static — the kernel is part of the
+/// engine's type — and defaults to [`ScalarKernel`], so `::new` call
+/// sites stay unchanged; the factory picks
+/// [`crate::fixed::SimdKernel`] via `::with_kernel` when the host
+/// supports it. Every kernel is bit-exact to scalar (the
+/// `fixed::kernel` contract), so the choice never appears in the
+/// batch class.
+pub struct IntGruExecutor<P: ColumnPlan, K: GateKernel = ScalarKernel> {
+    pub(crate) plan: P,
+    pub(crate) act: ActKind,
+    /// the stream's recurrent state (dense plans use only `.h`)
+    pub(crate) st: DeltaSnapshot,
+    pub(crate) gi: Vec<i32>,
+    pub(crate) gh: Vec<i32>,
+    pub(crate) kernel: K,
+}
+
+impl<P: ColumnPlan, K: GateKernel> IntGruExecutor<P, K> {
+    fn from_plan(plan: P, act: ActKind, kernel: K) -> IntGruExecutor<P, K> {
+        let st = plan.fresh_state();
+        let g = vec![0i32; plan.gate_len()];
+        IntGruExecutor { st, gi: g.clone(), gh: g, kernel, plan, act }
+    }
+
+    /// The active kernel's label (diagnostics; not part of the
+    /// datapath identity).
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
+    }
+
+    /// Preprocessor on codes: [i, q, requant(i^2+q^2, f-2), requant(p^2, f)].
+    #[inline]
+    pub fn features(&self, iq: [i32; 2]) -> [i32; 4] {
+        features_codes(self.plan.act_spec(), iq)
+    }
+
+    #[inline(always)]
+    pub(crate) fn sig(&self, code: i32) -> i32 {
+        sigmoid_code(&self.act, self.plan.act_spec(), code)
+    }
+
+    #[inline(always)]
+    pub(crate) fn tanh_(&self, code: i32) -> i32 {
+        tanh_code(&self.act, self.plan.act_spec(), code)
+    }
+
+    /// One datapath step on codes. Public so the cycle-accurate
+    /// simulator can cross-check against it, with the same signature
+    /// for every plan so differential tests can drive any pair.
+    ///
+    /// The plan produces the requantized gate pre-activations; the
+    /// chain downstream (gates, hidden update, FC + residual) is this
+    /// one body. The gate chain runs in i32 when the plan allows
+    /// (dense narrow formats: products < 2^24 — no overflow possible)
+    /// and i64 otherwise; both are bit-identical on the overlap
+    /// domain (§Perf: 1.94 -> ~5 MSps on the 12-bit path).
+    pub fn step_codes(&mut self, iq: [i32; 2]) -> [i32; 2] {
+        let spec = self.plan.act_spec();
+        let f = spec.frac();
+        let hd = self.plan.hidden();
+        let one = 1i64 << f;
+        let x = self.features(iq);
+
+        self.plan.gates(self.kernel, &x, &mut self.st, &mut self.gi, &mut self.gh);
+
+        // gates
+        if self.plan.narrow_chain() {
+            for k in 0..hd {
+                self.st.h[k] = narrow_cell(
+                    &self.act,
+                    spec,
+                    [self.gi[k], self.gi[hd + k], self.gi[2 * hd + k]],
+                    [self.gh[k], self.gh[hd + k], self.gh[2 * hd + k]],
+                    self.st.h[k],
+                );
+            }
+        } else {
+            for k in 0..hd {
+                let r = self.sig(saturate_i64(self.gi[k] as i64 + self.gh[k] as i64, spec));
+                let z = self.sig(saturate_i64(
+                    self.gi[hd + k] as i64 + self.gh[hd + k] as i64,
+                    spec,
+                ));
+                let rh = requantize(r as i64 * self.gh[2 * hd + k] as i64, f, spec);
+                let n = self.tanh_(saturate_i64(self.gi[2 * hd + k] as i64 + rh as i64, spec));
+                let zn = rshift_round((one - z as i64) * n as i64, f);
+                let zh = rshift_round(z as i64 * self.st.h[k] as i64, f);
+                self.st.h[k] = saturate_i64(zn + zh, spec);
+            }
+        }
+
+        // FC + residual (2 x H — dense for every plan; no sparsity or
+        // delta leverage there), requantized by the plan's FC shift
+        let mut y = [0i32; 2];
+        for (o, out) in y.iter_mut().enumerate() {
+            let (row, bias, shift) = self.plan.fc_row(o);
+            let fc = requantize(dense_row_i64(row, &self.st.h, bias, shift), shift, spec);
+            *out = saturate_i64(fc as i64 + iq[o] as i64, spec);
+        }
+        y
+    }
+
+    /// Run a whole burst of codes (resets state first).
+    pub fn run_codes(&mut self, iq: &[[i32; 2]]) -> Vec<[i32; 2]> {
+        self.reset();
+        iq.iter().map(|&s| self.step_codes(s)).collect()
+    }
+}
+
+impl QGruDpd {
+    /// Scalar-kernel constructor (the portable default).
+    pub fn new(w: QGruWeights, act: ActKind) -> QGruDpd {
+        QGruDpd::with_kernel(w, act, ScalarKernel)
+    }
+}
+
+impl<K: GateKernel> IntGruExecutor<DensePlan, K> {
+    /// Construct over an explicit gate kernel — the single dispatch
+    /// point the engine factory selects at construction time.
+    pub fn with_kernel(w: QGruWeights, act: ActKind, kernel: K) -> QGruDpd<K> {
+        IntGruExecutor::from_plan(DensePlan::new(w, K::LANES), act, kernel)
+    }
+
+    pub fn spec(&self) -> QSpec {
+        self.plan.w.spec
+    }
+
+    pub fn weights(&self) -> &QGruWeights {
+        &self.plan.w
+    }
+}
+
+impl DeltaQGruDpd {
+    /// Scalar-kernel constructor (the portable default).
+    pub fn new(w: QGruWeights, act: ActKind, theta: u32) -> DeltaQGruDpd {
+        DeltaQGruDpd::with_kernel(w, act, theta, ScalarKernel)
+    }
+}
+
+impl<K: GateKernel> IntGruExecutor<DeltaPlan, K> {
+    /// Construct over an explicit gate kernel (see
+    /// [`QGruDpd::with_kernel`]).
+    pub fn with_kernel(w: QGruWeights, act: ActKind, theta: u32, kernel: K) -> DeltaQGruDpd<K> {
+        IntGruExecutor::from_plan(DeltaPlan::new(w, theta, K::LANES), act, kernel)
+    }
+
+    pub fn spec(&self) -> QSpec {
+        self.plan.w.spec
+    }
+
+    pub fn weights(&self) -> &QGruWeights {
+        &self.plan.w
+    }
+
+    pub fn theta(&self) -> u32 {
+        self.plan.theta
+    }
+
+    /// Column-update activity so far (feeds `accel::delta`).
+    pub fn stats(&self) -> DeltaStats {
+        self.plan.stats
+    }
+
+    /// The live delta state (read-only; tests use it to check the
+    /// staleness invariant).
+    pub fn state(&self) -> &DeltaSnapshot {
+        &self.st
+    }
+}
+
+impl SparseMpGruDpd {
+    /// Scalar-kernel constructor (the portable default).
+    pub fn new(w: SparseQGruWeights, act: ActKind, theta: u32) -> SparseMpGruDpd {
+        SparseMpGruDpd::with_kernel(w, act, theta, ScalarKernel)
+    }
+}
+
+impl<K: GateKernel> IntGruExecutor<SparseCscPlan, K> {
+    /// Construct over an explicit gate kernel (the factory's dispatch
+    /// point, mirroring [`QGruDpd::with_kernel`]).
+    pub fn with_kernel(
+        w: SparseQGruWeights,
+        act: ActKind,
+        theta: u32,
+        kernel: K,
+    ) -> SparseMpGruDpd<K> {
+        IntGruExecutor::from_plan(SparseCscPlan::new(w, theta), act, kernel)
+    }
+
+    /// The reset state for these weights (tests build lane snapshots
+    /// from it).
+    pub(crate) fn fresh_state(w: &SparseQGruWeights) -> DeltaSnapshot {
+        SparseCscPlan::fresh_state_for(w)
+    }
+
+    pub fn weights(&self) -> &SparseQGruWeights {
+        &self.plan.w
+    }
+
+    pub fn theta(&self) -> u32 {
+        self.plan.theta
+    }
+
+    /// Activity so far (feeds `accel::sparse`).
+    pub fn stats(&self) -> SparseStats {
+        self.plan.stats
+    }
+}
+
+impl<P: ColumnPlan, K: GateKernel> Dpd for IntGruExecutor<P, K> {
+    fn process(&mut self, iq: [f64; 2]) -> [f64; 2] {
+        let spec = self.plan.act_spec();
+        let codes = [spec.quantize(iq[0]), spec.quantize(iq[1])];
+        let y = self.step_codes(codes);
+        [spec.dequantize(y[0]), spec.dequantize(y[1])]
+    }
+
+    fn reset(&mut self) {
+        // activity counters (where the plan has them) survive — they
+        // track total work, like the cycle simulator's
+        self.st = self.plan.fresh_state();
+    }
+
+    fn name(&self) -> &'static str {
+        self.plan.engine_name(&self.act)
+    }
+
+    fn save_state(&self) -> DpdState {
+        if self.plan.carried() {
+            DpdState::DeltaI32(self.st.clone())
+        } else {
+            DpdState::I32(self.st.h.clone())
+        }
+    }
+
+    fn load_state(&mut self, state: &DpdState) -> Result<()> {
+        let hd = self.plan.hidden();
+        match state {
+            DpdState::I32(h) if h.len() == hd => {
+                self.plan.adopt_hidden(h, &mut self.st);
+                Ok(())
+            }
+            DpdState::DeltaI32(s) if s.shape_ok(hd, self.plan.features()) => {
+                if self.plan.carried() {
+                    self.st = s.clone();
+                } else {
+                    self.st.h.copy_from_slice(&s.h);
+                }
+                Ok(())
+            }
+            other => Err(StateMismatch {
+                engine: self.name(),
+                got: other.kind(),
+                hidden: hd,
+            }
+            .into()),
+        }
+    }
+
+    fn batch_fingerprint(&self) -> Option<u64> {
+        Some(self.plan.fingerprint(&self.act))
+    }
+
+    /// Batched lanes: the plan's SoA path where it has one (dense
+    /// narrow formats), the bit-identical sequential multiplexer
+    /// otherwise. The sequential default is exact for carried plans
+    /// because the snapshot round-trips the *entire* delta state
+    /// (h + v_prev + accumulators), which the batch-parity properties
+    /// pin.
+    fn process_lanes(&mut self, lanes: &mut [DpdLane<'_>]) -> Result<()> {
+        if lanes.len() >= 2 {
+            if let Some(r) = self.plan.process_lanes_soa(&self.act, self.kernel, lanes) {
+                return r;
+            }
+        }
+        process_lanes_sequential(self, lanes)
+    }
+}

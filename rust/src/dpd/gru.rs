@@ -19,7 +19,9 @@
 use anyhow::{bail, Result};
 
 use super::weights::GruWeights;
-use super::{process_lanes_sequential, DeltaF64Snapshot, DeltaStats, Dpd, DpdLane, DpdState};
+use super::{
+    process_lanes_sequential, DeltaF64Snapshot, DeltaStats, Dpd, DpdLane, DpdState, StateMismatch,
+};
 use crate::util::fnv1a_words;
 
 /// Hardsigmoid, Eq. (7).
@@ -54,6 +56,60 @@ fn transpose_gates_f64(w: &GruWeights) -> (Vec<f64>, Vec<f64>) {
         }
     }
     (wt_ih, wt_hh)
+}
+
+/// Delta pass over one matvec side: refresh the cached contribution
+/// column `w[:, c] * v[c]` for every column whose value moved more
+/// than θ, bumping `fired` per propagated column.
+fn refresh_cols(
+    wt: &[f64],
+    ct: &mut [f64],
+    v: &[f64],
+    v_prev: &mut [f64],
+    theta: f64,
+    rows: usize,
+    fired: &mut u64,
+) {
+    for (c, &xv) in v.iter().enumerate() {
+        if (xv - v_prev[c]).abs() > theta {
+            let col = &wt[c * rows..(c + 1) * rows];
+            for (ct, &wv) in ct[c * rows..(c + 1) * rows].iter_mut().zip(col) {
+                *ct = wv * xv;
+            }
+            v_prev[c] = xv;
+            *fired += 1;
+        }
+    }
+}
+
+/// Re-sum cached contribution columns into the gate pre-activations in
+/// the dense engine's exact accumulation order (bias, then column 0..C).
+fn resum_cols(g: &mut [f64], b: &[f64], ct: &[f64], rows: usize) {
+    g.copy_from_slice(b);
+    for col in ct.chunks_exact(rows) {
+        for (a, &v) in g.iter_mut().zip(col) {
+            *a += v;
+        }
+    }
+}
+
+/// Gates (Eq. 2-5) + FC residual (Eq. 6): the downstream chain shared
+/// by the dense and delta engines, op for op — the θ=0 bit-exactness
+/// contract depends on both running the identical f64 expression.
+fn gates_and_fc(w: &GruWeights, gi: &[f64], gh: &[f64], h: &mut [f64], iq: [f64; 2]) -> [f64; 2] {
+    let hd = w.hidden;
+    for k in 0..hd {
+        let r = hardsigmoid(gi[k] + gh[k]);
+        let z = hardsigmoid(gi[hd + k] + gh[hd + k]);
+        let n = hardtanh(gi[2 * hd + k] + r * gh[2 * hd + k]);
+        h[k] = (1.0 - z) * n + z * h[k];
+    }
+    let mut y = [w.b_fc[0] + iq[0], w.b_fc[1] + iq[1]];
+    for k in 0..hd {
+        y[0] += w.w_fc[k] * h[k];
+        y[1] += w.w_fc[hd + k] * h[k];
+    }
+    y
 }
 
 /// Streaming float GRU DPD engine.
@@ -226,21 +282,7 @@ impl Dpd for GruDpd {
             }
         }
 
-        // gates (Eq. 2-5)
-        for k in 0..hd {
-            let r = hardsigmoid(self.gi[k] + self.gh[k]);
-            let z = hardsigmoid(self.gi[hd + k] + self.gh[hd + k]);
-            let n = hardtanh(self.gi[2 * hd + k] + r * self.gh[2 * hd + k]);
-            self.h[k] = (1.0 - z) * n + z * self.h[k];
-        }
-
-        // FC + residual (Eq. 6)
-        let mut y = [self.w.b_fc[0] + iq[0], self.w.b_fc[1] + iq[1]];
-        for k in 0..hd {
-            y[0] += self.w.w_fc[k] * self.h[k];
-            y[1] += self.w.w_fc[hd + k] * self.h[k];
-        }
-        y
+        gates_and_fc(&self.w, &self.gi, &self.gh, &mut self.h, iq)
     }
 
     fn reset(&mut self) {
@@ -261,12 +303,12 @@ impl Dpd for GruDpd {
                 self.h.copy_from_slice(h);
                 Ok(())
             }
-            other => bail!(
-                "{}: incompatible state snapshot ({}) for hidden={}",
-                self.name(),
-                other.kind(),
-                self.w.hidden
-            ),
+            other => Err(StateMismatch {
+                engine: self.name(),
+                got: other.kind(),
+                hidden: self.w.hidden,
+            }
+            .into()),
         }
     }
 
@@ -360,63 +402,19 @@ impl Dpd for DeltaGruDpd {
         let rows = 3 * hd;
         let x = GruDpd::features(iq);
 
-        // delta pass: refresh the cached contribution of every column
-        // whose value moved more than θ
-        for (c, &xv) in x.iter().enumerate() {
-            if (xv - self.st.x_prev[c]).abs() > self.theta {
-                let col = &self.wt_ih[c * rows..(c + 1) * rows];
-                for (ct, &wv) in self.st.ct_ih[c * rows..(c + 1) * rows].iter_mut().zip(col) {
-                    *ct = wv * xv;
-                }
-                self.st.x_prev[c] = xv;
-                self.stats.in_updates += 1;
-            }
-        }
-        for c in 0..hd {
-            let hv = self.st.h[c];
-            if (hv - self.st.h_prev[c]).abs() > self.theta {
-                let col = &self.wt_hh[c * rows..(c + 1) * rows];
-                for (ct, &wv) in self.st.ct_hh[c * rows..(c + 1) * rows].iter_mut().zip(col) {
-                    *ct = wv * hv;
-                }
-                self.st.h_prev[c] = hv;
-                self.stats.hid_updates += 1;
-            }
-        }
+        // delta passes, then re-sum and the dense downstream chain —
+        // every piece shares the dense engine's op order exactly
+        let st = &mut self.st;
+        let (theta, stats) = (self.theta, &mut self.stats);
+        refresh_cols(&self.wt_ih, &mut st.ct_ih, &x, &mut st.x_prev, theta, rows, &mut stats.in_updates);
+        refresh_cols(&self.wt_hh, &mut st.ct_hh, &st.h, &mut st.h_prev, theta, rows, &mut stats.hid_updates);
         self.stats.steps += 1;
         self.stats.in_cols += self.w.features as u64;
         self.stats.hid_cols += hd as u64;
 
-        // re-sum the cached columns in the dense engine's exact
-        // accumulation order (bias first, then column 0..C)
-        self.gi.copy_from_slice(&self.w.b_ih);
-        for c in 0..self.w.features {
-            let col = &self.st.ct_ih[c * rows..(c + 1) * rows];
-            for (a, &ct) in self.gi.iter_mut().zip(col) {
-                *a += ct;
-            }
-        }
-        self.gh.copy_from_slice(&self.w.b_hh);
-        for c in 0..hd {
-            let col = &self.st.ct_hh[c * rows..(c + 1) * rows];
-            for (a, &ct) in self.gh.iter_mut().zip(col) {
-                *a += ct;
-            }
-        }
-
-        // gates + FC: the dense chain, op for op (Eq. 2-6)
-        for k in 0..hd {
-            let r = hardsigmoid(self.gi[k] + self.gh[k]);
-            let z = hardsigmoid(self.gi[hd + k] + self.gh[hd + k]);
-            let n = hardtanh(self.gi[2 * hd + k] + r * self.gh[2 * hd + k]);
-            self.st.h[k] = (1.0 - z) * n + z * self.st.h[k];
-        }
-        let mut y = [self.w.b_fc[0] + iq[0], self.w.b_fc[1] + iq[1]];
-        for k in 0..hd {
-            y[0] += self.w.w_fc[k] * self.st.h[k];
-            y[1] += self.w.w_fc[hd + k] * self.st.h[k];
-        }
-        y
+        resum_cols(&mut self.gi, &self.w.b_ih, &st.ct_ih, rows);
+        resum_cols(&mut self.gh, &self.w.b_hh, &st.ct_hh, rows);
+        gates_and_fc(&self.w, &self.gi, &self.gh, &mut st.h, iq)
     }
 
     fn reset(&mut self) {
@@ -444,12 +442,12 @@ impl Dpd for DeltaGruDpd {
                 self.st = s.clone();
                 Ok(())
             }
-            other => bail!(
-                "{}: incompatible state snapshot ({}) for hidden={}",
-                self.name(),
-                other.kind(),
-                self.w.hidden
-            ),
+            other => Err(StateMismatch {
+                engine: self.name(),
+                got: other.kind(),
+                hidden: self.w.hidden,
+            }
+            .into()),
         }
     }
 

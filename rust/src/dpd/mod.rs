@@ -1,28 +1,20 @@
-//! Digital pre-distortion engines.
+//! Digital pre-distortion engines, all implementing the [`Dpd`] trait
+//! (a causal, streaming sample-in/sample-out predistorter):
 //!
 //! * [`gmp`] — the generalized-memory-polynomial baseline (paper
 //!   Table II's FPGA competitors all run GMP/MP models), fit by
 //!   indirect learning with the ridge LS solver;
-//! * [`gru`] — float GRU-RNN DPD (the paper's model, f64 reference
-//!   implementation);
-//! * [`qgru`] — the bit-exact Q2.f fixed-point GRU, mirroring the
-//!   canonical integer datapath (`kernels/ref.py::int_step`)
-//!   instruction for instruction — this is the functional model of
-//!   the silicon; plus its delta-sparsity twin `DeltaQGruDpd`
-//!   (DeltaDPD-style column skipping, bit-exact to dense at θ=0);
-//! * [`sparse`] — the SparseDPD × MP-DPD family member: magnitude-
-//!   pruned compressed sparse-column gate tensors with per-tensor
-//!   mixed-precision formats (`QProfile`), composable with the delta
-//!   threshold — bit-exact to dense at (uniform, ρ=0, θ=0);
+//! * [`gru`] — float GRU-RNN DPD (the paper's model, f64 reference);
+//! * [`exec`] — the unified integer executor behind [`qgru`]'s dense
+//!   and delta engines and [`sparse`]'s mixed-precision family member,
+//!   bit-exact to the canonical datapath (`kernels/ref.py::int_step`);
 //! * [`weights`] — loaders for the artifact weight JSONs;
 //! * [`adapt`] — the closed-loop ILA trainer that adapts the float
 //!   twin against PA feedback and re-quantizes fresh integer weight
 //!   sets (the runtime's answer to a drifting amplifier).
-//!
-//! All engines implement the [`Dpd`] trait: a causal, streaming
-//! sample-in/sample-out predistorter.
 
 pub mod adapt;
+pub mod exec;
 pub mod gmp;
 pub mod gru;
 pub mod qgru;
@@ -32,11 +24,38 @@ pub mod weights;
 use anyhow::{bail, Result};
 
 pub use adapt::{AdaptConfig, AdaptProgress, AdaptTrainer};
+pub use exec::{ColumnPlan, DensePlan, DeltaPlan, IntGruExecutor, SparseCscPlan};
 pub use gmp::GmpDpd;
 pub use gru::{DeltaGruDpd, GruDpd};
 pub use qgru::{DeltaQGruDpd, QGruDpd};
 pub use sparse::{SparseMpGruDpd, SparseStats};
 pub use weights::{GruWeights, NonFiniteWeightError, SparseQGruWeights};
+
+/// Typed rejection from [`Dpd::load_state`]: the snapshot's kind or
+/// shape cannot be adopted by this engine. Callers that need to
+/// distinguish "incompatible format" from I/O-style failures downcast
+/// the `anyhow::Error` to this.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StateMismatch {
+    /// the rejecting engine's `Dpd::name`
+    pub engine: &'static str,
+    /// `DpdState::kind()` of the offered snapshot
+    pub got: &'static str,
+    /// the engine's hidden size (the shape the snapshot missed)
+    pub hidden: usize,
+}
+
+impl std::fmt::Display for StateMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: incompatible state snapshot ({}) for hidden={}",
+            self.engine, self.got, self.hidden
+        )
+    }
+}
+
+impl std::error::Error for StateMismatch {}
 
 /// Recurrent-state snapshot of a streaming predistorter — one stream's
 /// lane in a batched call. Opaque to callers: only `save_state` /
@@ -77,7 +96,7 @@ impl DpdState {
 /// travel together — restoring `h` without its caches would desync
 /// the accumulators from the propagated vectors and break the θ=0
 /// bit-exactness contract.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct DeltaSnapshot {
     /// architectural GRU hidden state h_{t-1} (len H)
     pub h: Vec<i32>,
@@ -89,6 +108,19 @@ pub struct DeltaSnapshot {
     pub acc_ih: Vec<i64>,
     /// running raw hidden accumulators: b_hh << f + W_hh · h_prev (len 3H)
     pub acc_hh: Vec<i64>,
+}
+
+impl DeltaSnapshot {
+    /// Whether this snapshot fits an engine with `hd` hidden units and
+    /// `feats` input features — the one adoption shape check shared by
+    /// `load_state` and the batched SoA lane validation.
+    pub(crate) fn shape_ok(&self, hd: usize, feats: usize) -> bool {
+        self.h.len() == hd
+            && self.h_prev.len() == hd
+            && self.x_prev.len() == feats
+            && self.acc_ih.len() == 3 * hd
+            && self.acc_hh.len() == 3 * hd
+    }
 }
 
 /// f64 twin of [`DeltaSnapshot`]: the float delta engine caches

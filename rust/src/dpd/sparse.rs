@@ -1,51 +1,23 @@
 //! Sparse + mixed-precision GRU DPD engine — the SparseDPD
 //! (arXiv:2506.16591) × MP-DPD (arXiv:2404.15364) family member.
 //!
-//! [`SparseMpGruDpd`] combines three MAC-reduction levers behind one
-//! datapath:
-//!
-//! * **static weight sparsity** — the gate tensors arrive magnitude-
-//!   pruned in compressed sparse-column form
-//!   ([`SparseQGruWeights`]), so a pruned weight costs no storage and
-//!   no MAC in the per-column update loop;
-//! * **per-tensor mixed precision** — each weight tensor carries its
-//!   own [`QSpec`](crate::fixed::QSpec) (the
-//!   [`QProfile`](crate::fixed::QProfile)), with activations, biases
-//!   and the I/Q stream in the activation format. Products accumulate
-//!   in the fa+fw domain and every matvec requantizes by the *weight*
-//!   fraction back to the activation domain;
-//! * **temporal delta skipping** — the same θ-threshold column firing
-//!   as [`DeltaQGruDpd`](super::DeltaQGruDpd): accumulators are
-//!   carried across steps and only columns whose input/hidden delta
-//!   exceeds θ fold in (`fixed::kernel::GateKernel::
-//!   sparse_delta_axpy_i64`).
-//!
-//! **Equivalence contracts** (pinned by `tests/conformance.rs` and the
-//! property suite below):
-//!
-//! * uniform profile + ρ=0 + θ=0 ⇒ bit-identical to the dense
-//!   [`QGruDpd`](super::QGruDpd): the CSC holds exactly the nonzero
-//!   codes (eliding a zero is exact), θ=0 keeps `v_prev == v`, and
-//!   with fw == fa the accumulate/requantize chain is the dense one
-//!   op for op;
-//! * uniform profile + ρ=0 + any θ ⇒ bit-identical to
-//!   [`DeltaQGruDpd`](super::DeltaQGruDpd) at the same θ (same fire
-//!   decisions, same exact i64 accumulators — integer addition is
-//!   order-independent).
-//!
-//! For ρ>0 or narrow weights the engine computes a *different*
+//! [`SparseMpGruDpd`] combines three MAC-reduction levers: static
+//! magnitude pruning in compressed sparse-column form
+//! ([`SparseQGruWeights`](super::SparseQGruWeights)), per-tensor mixed
+//! precision (the [`QProfile`](crate::fixed::QProfile) — products
+//! accumulate in the fa+fw domain and requantize by the *weight*
+//! fraction), and the same θ-threshold delta skipping as
+//! [`DeltaQGruDpd`](super::DeltaQGruDpd). The engine is the
+//! [`SparseCscPlan`](super::exec::SparseCscPlan) alias of
+//! [`IntGruExecutor`](super::exec::IntGruExecutor) — see `dpd::exec`
+//! for the datapath and the equivalence hinges (uniform ρ=0 θ=0 ≡
+//! dense; uniform ρ=0 ≡ delta at any θ), which the unification makes
+//! structural and the differential tests below keep as regression
+//! armor. For ρ>0 or narrow weights the engine computes a different
 //! (cheaper) function whose linearization cost is swept into
-//! `BENCH_pareto.json` and cross-validated against the Python mirror
-//! (`python/tools/gen_golden_pareto.py`).
+//! `BENCH_pareto.json` and cross-validated against the Python mirror.
 
-use anyhow::{bail, Result};
-
-use super::qgru::{features_codes, sigmoid_code, tanh_code, ActKind};
-use super::weights::SparseQGruWeights;
-use super::{DeltaSnapshot, Dpd, DpdState};
-use crate::fixed::kernel::{GateKernel, ScalarKernel};
-use crate::fixed::ops::{exceeds_theta, requantize, rshift_round, saturate_i64};
-use crate::util::fnv1a_words;
+pub use super::exec::SparseMpGruDpd;
 
 /// Column-update + MAC activity of a sparse engine — the measured
 /// work the accel cost model (`accel::sparse`) prices. Like
@@ -89,241 +61,13 @@ impl SparseStats {
     }
 }
 
-/// Streaming sparse mixed-precision GRU DPD (see the module docs for
-/// the datapath and its equivalence contracts). Generic over the gate
-/// kernel like every integer engine; the sparse column update is the
-/// kernel's `sparse_delta_axpy_i64` gather.
-pub struct SparseMpGruDpd<K: GateKernel = ScalarKernel> {
-    w: SparseQGruWeights,
-    act: ActKind,
-    /// delta propagation threshold in activation codes (0 = every
-    /// nonzero delta fires)
-    theta: u32,
-    st: DeltaSnapshot,
-    gi: Vec<i32>,
-    gh: Vec<i32>,
-    kernel: K,
-    stats: SparseStats,
-}
-
-impl SparseMpGruDpd {
-    /// Scalar-kernel constructor (the portable default).
-    pub fn new(w: SparseQGruWeights, act: ActKind, theta: u32) -> SparseMpGruDpd {
-        SparseMpGruDpd::with_kernel(w, act, theta, ScalarKernel)
-    }
-}
-
-impl<K: GateKernel> SparseMpGruDpd<K> {
-    /// Construct over an explicit gate kernel (the factory's dispatch
-    /// point, mirroring `QGruDpd::with_kernel`).
-    pub fn with_kernel(
-        w: SparseQGruWeights,
-        act: ActKind,
-        theta: u32,
-        kernel: K,
-    ) -> SparseMpGruDpd<K> {
-        let g = vec![0i32; 3 * w.hidden];
-        let st = Self::fresh_state(&w);
-        SparseMpGruDpd { st, gi: g.clone(), gh: g, kernel, w, act, theta, stats: SparseStats::default() }
-    }
-
-    /// The reset state: h = v_prev = 0, accumulators hold only the
-    /// biases aligned into each tensor's accumulation domain
-    /// (`b_code(fa) << fw` — the matvec of the all-zero vector).
-    fn fresh_state(w: &SparseQGruWeights) -> DeltaSnapshot {
-        let f_ih = w.profile.w_ih.frac();
-        let f_hh = w.profile.w_hh.frac();
-        DeltaSnapshot {
-            h: vec![0; w.hidden],
-            x_prev: vec![0; w.features],
-            h_prev: vec![0; w.hidden],
-            acc_ih: w.b_ih.iter().map(|&b| (b as i64) << f_ih).collect(),
-            acc_hh: w.b_hh.iter().map(|&b| (b as i64) << f_hh).collect(),
-        }
-    }
-
-    /// The active kernel's label (diagnostics; not part of the
-    /// datapath identity).
-    pub fn kernel_name(&self) -> &'static str {
-        self.kernel.name()
-    }
-
-    pub fn weights(&self) -> &SparseQGruWeights {
-        &self.w
-    }
-
-    pub fn theta(&self) -> u32 {
-        self.theta
-    }
-
-    /// Activity so far (feeds `accel::sparse`).
-    pub fn stats(&self) -> SparseStats {
-        self.stats
-    }
-
-    /// One sparse datapath step on activation-format codes. Same
-    /// signature as `QGruDpd::step_codes` so differential tests can
-    /// drive both.
-    pub fn step_codes(&mut self, iq: [i32; 2]) -> [i32; 2] {
-        let act_spec = self.w.profile.act;
-        let fa = act_spec.frac();
-        let f_ih = self.w.profile.w_ih.frac();
-        let f_hh = self.w.profile.w_hh.frac();
-        let f_fc = self.w.profile.w_fc.frac();
-        let hd = self.w.hidden;
-        let k = self.kernel;
-        let one = 1i64 << fa;
-        let x = features_codes(act_spec, iq);
-
-        // delta pass over the input feature columns: only surviving
-        // CSC entries are touched, so a pruned weight costs no MAC
-        for (c, &xv) in x.iter().enumerate() {
-            let d = xv - self.st.x_prev[c];
-            if exceeds_theta(d, self.theta) {
-                let (lo, hi) = (self.w.ih_ptr[c], self.w.ih_ptr[c + 1]);
-                k.sparse_delta_axpy_i64(
-                    &mut self.st.acc_ih,
-                    &self.w.ih_rows[lo..hi],
-                    &self.w.ih_vals[lo..hi],
-                    d,
-                );
-                self.st.x_prev[c] = xv;
-                self.stats.in_updates += 1;
-                self.stats.gate_macs += (hi - lo) as u64;
-            }
-        }
-        // delta pass over the hidden columns
-        for c in 0..hd {
-            let d = self.st.h[c] - self.st.h_prev[c];
-            if exceeds_theta(d, self.theta) {
-                let (lo, hi) = (self.w.hh_ptr[c], self.w.hh_ptr[c + 1]);
-                k.sparse_delta_axpy_i64(
-                    &mut self.st.acc_hh,
-                    &self.w.hh_rows[lo..hi],
-                    &self.w.hh_vals[lo..hi],
-                    d,
-                );
-                self.st.h_prev[c] = self.st.h[c];
-                self.stats.hid_updates += 1;
-                self.stats.gate_macs += (hi - lo) as u64;
-            }
-        }
-        self.stats.steps += 1;
-        self.stats.in_cols += self.w.features as u64;
-        self.stats.hid_cols += hd as u64;
-        self.stats.dense_gate_macs += (3 * hd * (self.w.features + hd)) as u64;
-
-        // readout: requantize each carried accumulator by its tensor's
-        // weight fraction, back into the activation domain
-        k.requantize_block_i64(&self.st.acc_ih, f_ih, act_spec, &mut self.gi);
-        k.requantize_block_i64(&self.st.acc_hh, f_hh, act_spec, &mut self.gh);
-
-        // gates — the dense chain in the activation format (wide form,
-        // identical to DeltaQGruDpd's)
-        for j in 0..hd {
-            let r = sigmoid_code(
-                &self.act,
-                act_spec,
-                saturate_i64(self.gi[j] as i64 + self.gh[j] as i64, act_spec),
-            );
-            let z = sigmoid_code(
-                &self.act,
-                act_spec,
-                saturate_i64(self.gi[hd + j] as i64 + self.gh[hd + j] as i64, act_spec),
-            );
-            let rh = requantize(r as i64 * self.gh[2 * hd + j] as i64, fa, act_spec);
-            let n = tanh_code(
-                &self.act,
-                act_spec,
-                saturate_i64(self.gi[2 * hd + j] as i64 + rh as i64, act_spec),
-            );
-            let zn = rshift_round((one - z as i64) * n as i64, fa);
-            let zh = rshift_round(z as i64 * self.st.h[j] as i64, fa);
-            self.st.h[j] = saturate_i64(zn + zh, act_spec);
-        }
-
-        // FC + residual, dense (2 × H — no sparsity leverage there);
-        // weights in the FC format, requantized by its fraction
-        let mut y = [0i32; 2];
-        for (o, out) in y.iter_mut().enumerate() {
-            let row = &self.w.w_fc[o * hd..(o + 1) * hd];
-            let mut acc = (self.w.b_fc[o] as i64) << f_fc;
-            for (wv, hv) in row.iter().zip(&self.st.h) {
-                acc += *wv as i64 * *hv as i64;
-            }
-            let fc = requantize(acc, f_fc, act_spec);
-            *out = saturate_i64(fc as i64 + iq[o] as i64, act_spec);
-        }
-        y
-    }
-
-    /// Run a whole burst of codes (resets state first).
-    pub fn run_codes(&mut self, iq: &[[i32; 2]]) -> Vec<[i32; 2]> {
-        self.reset();
-        iq.iter().map(|&s| self.step_codes(s)).collect()
-    }
-}
-
-impl<K: GateKernel> Dpd for SparseMpGruDpd<K> {
-    fn process(&mut self, iq: [f64; 2]) -> [f64; 2] {
-        let act_spec = self.w.profile.act;
-        let codes = [act_spec.quantize(iq[0]), act_spec.quantize(iq[1])];
-        let y = self.step_codes(codes);
-        [act_spec.dequantize(y[0]), act_spec.dequantize(y[1])]
-    }
-
-    fn reset(&mut self) {
-        // activity counters survive (they track total work)
-        self.st = Self::fresh_state(&self.w);
-    }
-
-    fn name(&self) -> &'static str {
-        "sparse-mp-qgru"
-    }
-
-    fn save_state(&self) -> DpdState {
-        DpdState::DeltaI32(self.st.clone())
-    }
-
-    fn load_state(&mut self, state: &DpdState) -> Result<()> {
-        match state {
-            DpdState::DeltaI32(s)
-                if s.h.len() == self.w.hidden
-                    && s.h_prev.len() == self.w.hidden
-                    && s.x_prev.len() == self.w.features
-                    && s.acc_ih.len() == 3 * self.w.hidden
-                    && s.acc_hh.len() == 3 * self.w.hidden =>
-            {
-                self.st = s.clone();
-                Ok(())
-            }
-            other => bail!(
-                "{}: incompatible state snapshot ({}) for hidden={}",
-                self.name(),
-                other.kind(),
-                self.w.hidden
-            ),
-        }
-    }
-
-    fn batch_fingerprint(&self) -> Option<u64> {
-        // the weight fingerprint already covers profile + ρ + mask +
-        // codes; θ joins it like the delta engine's
-        let base = super::qgru::act_fingerprint(&self.act, self.w.fingerprint());
-        Some(fnv1a_words("sparse-mp-theta", [base, self.theta as u64]))
-    }
-
-    // process_lanes: the sequential default is exact because the
-    // snapshot round-trips the entire delta state (h + v_prev +
-    // accumulators) — same argument as DeltaQGruDpd's.
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dpd::qgru::{DeltaQGruDpd, QGruDpd};
+    use crate::dpd::qgru::{ActKind, DeltaQGruDpd, QGruDpd};
     use crate::dpd::weights::{GruWeights, QGruWeights};
-    use crate::dpd::DpdLane;
+    use crate::dpd::{Dpd, DpdLane, DpdState};
+    use crate::fixed::kernel::ScalarKernel;
     use crate::fixed::{QProfile, QSpec};
     use crate::util::proptest::check;
     use crate::util::Rng;

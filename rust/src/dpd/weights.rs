@@ -283,11 +283,9 @@ impl QGruWeights {
         crate::util::fnv1a_words("qgru", words)
     }
 
-    /// Load the pre-quantized `params_int` block of `weights_main.json`
-    /// (written by aot.py; equals `GruWeights::quantize` of `params`).
-    pub fn load_params_int(path: &Path, spec: QSpec) -> Result<QGruWeights> {
-        let j = Json::parse_file(path).context("loading int GRU weights")?;
-        let params = j.get("params_int")?;
+    /// Parse a `params_int`-style block (the one loader both artifact
+    /// shapes funnel through).
+    fn from_params(params: &Json, spec: QSpec) -> Result<QGruWeights> {
         let (hidden, features) = dims(params)?;
         Ok(QGruWeights {
             hidden,
@@ -302,25 +300,19 @@ impl QGruWeights {
         })
     }
 
+    /// Load the pre-quantized `params_int` block of `weights_main.json`
+    /// (written by aot.py; equals `GruWeights::quantize` of `params`).
+    pub fn load_params_int(path: &Path, spec: QSpec) -> Result<QGruWeights> {
+        let j = Json::parse_file(path).context("loading int GRU weights")?;
+        QGruWeights::from_params(j.get("params_int")?, spec)
+    }
+
     /// Load from a golden-vector JSON (`golden/g_*.json` has the same
     /// `params_int` block plus test vectors).
     pub fn load_golden(path: &Path) -> Result<(QGruWeights, Json)> {
         let j = Json::parse_file(path).context("loading golden case")?;
-        let bits = j.get("bits")?.as_usize()? as u32;
-        let spec = QSpec::new(bits)?;
-        let params = j.get("params_int")?;
-        let (hidden, features) = dims(params)?;
-        let w = QGruWeights {
-            hidden,
-            features,
-            spec,
-            w_ih: tensor_i32(params, "w_ih", 3 * hidden * features)?,
-            b_ih: tensor_i32(params, "b_ih", 3 * hidden)?,
-            w_hh: tensor_i32(params, "w_hh", 3 * hidden * hidden)?,
-            b_hh: tensor_i32(params, "b_hh", 3 * hidden)?,
-            w_fc: tensor_i32(params, "w_fc", 2 * hidden)?,
-            b_fc: tensor_i32(params, "b_fc", 2)?,
-        };
+        let spec = QSpec::new(j.get("bits")?.as_usize()? as u32)?;
+        let w = QGruWeights::from_params(j.get("params_int")?, spec)?;
         Ok((w, j))
     }
 

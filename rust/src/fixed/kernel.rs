@@ -2,10 +2,11 @@
 //! inner loops shared by the dense engine, the batched SoA path and
 //! the delta engine.
 //!
-//! [`GateKernel`] abstracts exactly the four hot primitives of the
-//! datapath — the dense/SoA axpy, the delta column update, and the two
-//! block requantizers — so engine state machines never mention an
-//! instruction set. Two implementations exist today:
+//! [`GateKernel`] abstracts exactly the five hot primitives of the
+//! datapath — the dense/SoA axpy, the delta column update, the sparse
+//! CSC gather, and the two block requantizers — so engine state
+//! machines never mention an instruction set. Two implementations
+//! exist today:
 //!
 //! * [`ScalarKernel`] — the portable loops, delegating to the
 //!   canonical `fixed::ops` primitives. Always available; the
@@ -76,9 +77,9 @@ pub trait GateKernel: Copy + Send + Sync + 'static {
     /// surviving (unpruned, nonzero) entries; every row index must be
     /// in bounds. The default scalar gather is the reference — exact
     /// i64 adds are order-independent, so any override is bit-exact by
-    /// construction; a vector gather/scatter rarely pays off at these
-    /// column lengths (≤ 3H = 30), which is why both kernels inherit
-    /// this body today.
+    /// construction. [`SimdKernel`] overrides it with an AVX2 body
+    /// that vectorizes the products and keeps the indexed adds scalar
+    /// (AVX2 has no scatter).
     #[inline]
     fn sparse_delta_axpy_i64(&self, acc: &mut [i64], rows: &[u16], vals: &[i32], d: i32) {
         debug_assert_eq!(rows.len(), vals.len());
@@ -200,6 +201,17 @@ impl GateKernel for SimdKernel {
         #[cfg(not(target_arch = "x86_64"))]
         ScalarKernel.requantize_block_i64(acc, s, spec, out)
     }
+
+    #[inline]
+    fn sparse_delta_axpy_i64(&self, acc: &mut [i64], rows: &[u16], vals: &[i32], d: i32) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: try_new proved AVX2 at construction
+        unsafe {
+            avx2::sparse_delta_axpy_i64(acc, rows, vals, d)
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        ScalarKernel.sparse_delta_axpy_i64(acc, rows, vals, d)
+    }
 }
 
 /// Round a per-column weight stride up to the kernel's lane multiple —
@@ -315,6 +327,35 @@ mod avx2 {
         }
         while i < n {
             acc[i] += w_col[i] as i64 * d as i64;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sparse_delta_axpy_i64(acc: &mut [i64], rows: &[u16], vals: &[i32], d: i32) {
+        debug_assert_eq!(rows.len(), vals.len());
+        let n = vals.len();
+        let dv = _mm256_set1_epi64x(d as i64);
+        let mut prod = [0i64; 4];
+        let mut i = 0;
+        while i + 4 <= n {
+            let w32 = _mm_loadu_si128(vals.as_ptr().add(i) as *const __m128i);
+            let w64 = _mm256_cvtepi32_epi64(w32);
+            // the exact i64 w·d products, like delta_axpy_i64's body
+            _mm256_storeu_si256(
+                prod.as_mut_ptr() as *mut __m256i,
+                _mm256_mul_epi32(w64, dv),
+            );
+            // AVX2 has no scatter: the indexed adds stay scalar. Exact
+            // i64 adds are order-independent, so this equals the
+            // scalar gather bit for bit on any row pattern.
+            for (j, &p) in prod.iter().enumerate() {
+                acc[rows[i + j] as usize] += p;
+            }
+            i += 4;
+        }
+        while i < n {
+            acc[rows[i] as usize] += vals[i] as i64 * d as i64;
             i += 1;
         }
     }

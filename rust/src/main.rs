@@ -158,13 +158,8 @@ fn parse_engine(name: &str, flags: &HashMap<String, String>) -> Result<EngineKin
     // bit-identical. A spec with an explicit `:θ` wins; the flag is
     // ignored on non-delta kinds, exactly as before.
     if let Some(theta) = flags.get("delta-theta") {
-        if !name.contains(':') {
-            let theta: u32 = theta.parse()?;
-            return Ok(match kind {
-                EngineKind::DeltaFixed { .. } => EngineKind::DeltaFixed { theta },
-                EngineKind::DeltaFixedSimd { .. } => EngineKind::DeltaFixedSimd { theta },
-                other => other,
-            });
+        if !name.contains(':') && kind.base == dpd_ne::runtime::EngineBase::Delta {
+            return Ok(EngineKind { theta: theta.parse()?, ..kind });
         }
     }
     Ok(kind)
@@ -674,7 +669,7 @@ fn cmd_rollout(flags: &HashMap<String, String>) -> Result<()> {
     let mut sessions: Vec<FleetSession> = Vec::new();
     for _ in 0..shards * per_shard {
         sessions.push(fleet.open_adaptive_session(
-            SessionConfig { engine: EngineKind::Fixed, adapt: Some(acfg), ..Default::default() },
+            SessionConfig { engine: EngineKind::fixed(), adapt: Some(acfg), ..Default::default() },
             w0.clone(),
         )?);
     }

@@ -17,32 +17,34 @@
 //!
 //! Parity contract (enforced by the unit tests below, the golden
 //! vectors and the conformance matrix in `tests/conformance.rs`):
-//! `Fixed`, `CycleSim`, `Interp` and `DeltaFixed` at θ=0 share the
+//! `fixed`, `cyclesim`, `interp` and `delta` at θ=0 share the
 //! bit-exact integer datapath — equal inputs give *identical* outputs
-//! (modulo the frame-reset semantics of `Interp`). `DeltaFixed` with
+//! (modulo the frame-reset semantics of `interp`). `delta` with
 //! θ>0 deliberately trades bounded drift for skipped MACs (golden
-//! delta trace pins the envelope). `FixedSimd`/`DeltaFixedSimd` are
-//! the same datapaths behind the vector
-//! [`GateKernel`](crate::fixed::GateKernel) and are bit-identical to
+//! delta trace pins the envelope). The `+simd` decoration puts the
+//! same datapaths behind the vector
+//! [`GateKernel`](crate::fixed::GateKernel), bit-identical to
 //! their scalar twins on every host (the kernel seam's contract) —
 //! including when the host lacks AVX2 or `DPD_SIMD=off` forces the
-//! scalar fallback. `NativeF64` is the float
+//! scalar fallback. `native` is the float
 //! reference; it tracks the integer engines within the quantization
 //! envelope (documented tolerance: NMSE better than -12 dB and
 //! per-sample deviation under 0.3 on small-signal stimulus at Q2.10).
 //!
-//! Engine selection is string-addressable: [`EngineKind::parse`] and
+//! Engine selection is string-addressable: [`EngineSpec::parse`] and
 //! `Display` round-trip the spec grammar `native |
 //! fixed[@WwAa][+sparse:ρ][+simd] | delta[:θ][@WwAa][+sparse:ρ][+simd]
-//! | cyclesim | interp | hlo` — the `@WwAa` (per-tensor
-//! mixed-precision profile) and `+sparse:ρ` (magnitude pruning)
-//! decorations select the [`SparseMpGruDpd`] family member — and
+//! | cyclesim | interp | hlo`. The spec is *normalized*: one struct
+//! with a base plus independent decoration axes (`theta`, `profile`,
+//! `rho`, `simd`) — the `@WwAa` (per-tensor mixed-precision profile)
+//! and `+sparse:ρ` (magnitude pruning) decorations select the
+//! [`SparseMpGruDpd`] family member — and
 //! [`EngineFactory::available_kinds`] returns structured
 //! [`EngineDescriptor`] rows (kind, spec, syntax, host SIMD state) so
-//! CLI help and examples render from the registry instead of
-//! hardcoded lists.
+//! CLI help, the conformance grid and examples render from the
+//! registry instead of hardcoded lists.
 //!
-//! Without the `xla` feature, `EngineKind::Hlo` does not exist and the
+//! Without the `xla` feature, `EngineBase::Hlo` does not exist and the
 //! frame-semantics role is served by `Interp` — the pure-Rust
 //! *interpreted* twin of the HLO artifact: the same bit-exact
 //! `QGruDpd` datapath the artifact was lowered from, run with the same
@@ -59,7 +61,7 @@ use crate::accel::fsm::HwConfig;
 use crate::accel::CycleAccurateEngine;
 use crate::dpd::qgru::{ActKind, DeltaQGruDpd, QGruDpd};
 use crate::dpd::weights::{GruWeights, QGruWeights};
-use crate::dpd::{Dpd, GruDpd, SparseMpGruDpd};
+use crate::dpd::{Dpd, GruDpd, SparseMpGruDpd, SparseQGruWeights};
 use crate::fixed::kernel::{resolve_simd, SimdPolicy};
 use crate::fixed::{QProfile, QSpec};
 use crate::runtime::Manifest;
@@ -71,60 +73,20 @@ pub use crate::dpd::{DpdLane, DpdState};
 /// lowered HLO entry to inherit a shape from.
 pub const DEFAULT_FRAME_LEN: usize = 2048;
 
-/// Which DPD engine a worker instantiates.
+/// The engine substrate an [`EngineSpec`] selects — the part of the
+/// spec grammar before any decoration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum EngineKind {
+pub enum EngineBase {
     /// f64 GRU (float reference)
     NativeF64,
-    /// bit-exact Q2.10 fixed-point (the chip's functional model)
+    /// the bit-exact integer datapath, dense recompute every sample
+    /// (the chip's functional model)
     Fixed,
-    /// delta-sparsity fixed-point: `Fixed`'s hot loop with DeltaDPD
-    /// column skipping at threshold `theta` (codes). θ=0 is
-    /// bit-identical to `Fixed` — the contract the conformance matrix
-    /// enforces; θ>0 trades bounded ACPR/EVM drift for skipped MACs
-    DeltaFixed {
-        /// propagation threshold in Q-format codes
-        theta: u32,
-    },
-    /// `Fixed`'s datapath behind the vector
-    /// [`GateKernel`](crate::fixed::GateKernel) (AVX2, runtime
-    /// detected). Bit-identical to `Fixed` by the kernel seam's
-    /// contract; on hosts without AVX2, or under `DPD_SIMD=off` /
-    /// [`SimdPolicy::Off`], the engine silently carries the scalar
-    /// kernel instead — same bits, no error
-    FixedSimd,
-    /// `DeltaFixed` composed with the vector kernel — the same
-    /// fallback and bit-exactness contract as `FixedSimd`, applied to
-    /// the i64 delta accumulators
-    DeltaFixedSimd {
-        /// propagation threshold in Q-format codes
-        theta: u32,
-    },
-    /// the SparseDPD x MP-DPD family member: magnitude-pruned
-    /// compressed sparse-column gate tensors
-    /// ([`SparseQGruWeights`](crate::dpd::SparseQGruWeights)) with
-    /// per-tensor mixed-precision formats
-    /// ([`QProfile`](crate::fixed::QProfile)), composable with the
-    /// delta threshold and the vector kernel. Invariant: at least one
-    /// of `profile` / `rho` is `Some` (otherwise the spec string would
-    /// collide with the plain `Fixed`/`DeltaFixed` spellings — `parse`
-    /// only constructs decorated kinds). ρ=0 at a uniform profile and
-    /// θ=0 is bit-identical to `Fixed` (the conformance hinge).
-    SparseMp {
-        /// `Some((w, a))` = per-tensor weight bits `w`, activation
-        /// bits `a` (the `@WwAa` decoration); `None` = uniform at the
-        /// manifest's Q-format
-        profile: Option<(u8, u8)>,
-        /// `Some(ρ)` = prune the ρ% smallest-magnitude codes per gate
-        /// tensor (the `+sparse:ρ` decoration); `None` = keep dense
-        rho: Option<u8>,
-        /// `Some(θ)` = compose with DeltaDPD column skipping at
-        /// threshold θ (the `delta:θ` base); `None` = the `fixed` base
-        theta: Option<u32>,
-        /// run the gather loops behind the vector kernel (the `+simd`
-        /// suffix; same scalar-fallback contract as `FixedSimd`)
-        simd: bool,
-    },
+    /// the bit-exact integer datapath with DeltaDPD column skipping at
+    /// threshold `theta` (codes). θ=0 is bit-identical to `Fixed` —
+    /// now a *structural* identity (one executor, one plan seam);
+    /// θ>0 trades bounded ACPR/EVM drift for skipped MACs
+    Delta,
     /// cycle-accurate ASIC simulator
     CycleSim,
     /// interpreted frame engine: the bit-exact `QGruDpd` run with the
@@ -136,41 +98,164 @@ pub enum EngineKind {
     Hlo,
 }
 
-impl std::fmt::Display for EngineKind {
-    /// The canonical engine-spec string; [`EngineKind::parse`] is the
-    /// exact inverse (round-trip contract, pinned by the unit tests).
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            EngineKind::NativeF64 => write!(f, "native"),
-            EngineKind::Fixed => write!(f, "fixed"),
-            EngineKind::DeltaFixed { theta } => write!(f, "delta:{theta}"),
-            EngineKind::FixedSimd => write!(f, "fixed+simd"),
-            EngineKind::DeltaFixedSimd { theta } => write!(f, "delta:{theta}+simd"),
-            EngineKind::SparseMp { profile, rho, theta, simd } => {
-                match theta {
-                    Some(t) => write!(f, "delta:{t}")?,
-                    None => write!(f, "fixed")?,
-                }
-                if let Some((w, a)) = profile {
-                    write!(f, "@W{w}A{a}")?;
-                }
-                if let Some(r) = rho {
-                    write!(f, "+sparse:{r}")?;
-                }
-                if *simd {
-                    write!(f, "+simd")?;
-                }
-                Ok(())
-            }
-            EngineKind::CycleSim => write!(f, "cyclesim"),
-            EngineKind::Interp => write!(f, "interp"),
-            #[cfg(feature = "xla")]
-            EngineKind::Hlo => write!(f, "hlo"),
-        }
+/// Which DPD engine a worker instantiates — the normalized form of the
+/// spec grammar `base[:θ][@WwAa][+sparse:ρ][+simd]`. One struct
+/// replaces the historical enum whose variants enumerated decoration
+/// *combinations* (`Fixed`, `FixedSimd`, `DeltaFixed`, `SparseMp{..}`,
+/// …): every axis is now its own field, so the factory dispatches on
+/// `base` once and composition happens in data, not in variant count.
+///
+/// Field invariants (what [`EngineSpec::parse`] constructs and
+/// `Display` assumes):
+///
+/// * `theta` is meaningful only for `base == Delta` (0 elsewhere);
+/// * `profile`/`rho`/`simd` decorate only the integer bases
+///   (`Fixed`/`Delta`) — decorated non-integer bases are rejected by
+///   the parser and never constructed by the registry;
+/// * `profile.is_some() || rho.is_some()` selects the sparse +
+///   mixed-precision family ([`SparseMpGruDpd`]): `rho: Some(0)`
+///   (CSC storage, nothing pruned) is a *different engine* from
+///   `rho: None` (dense storage) even though both compute the same
+///   function — the conformance hinge `fixed+sparse:0 ≡ fixed` is
+///   bit-exactness across that representation change;
+/// * `simd` requests the vector [`GateKernel`](crate::fixed::GateKernel);
+///   on hosts without AVX2, or under `DPD_SIMD=off` /
+///   [`SimdPolicy::Off`], construction silently falls back to the
+///   scalar kernel — same bits (the kernel seam's contract), no error.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineSpec {
+    /// the engine substrate (`native | fixed | delta | cyclesim |
+    /// interp | hlo`)
+    pub base: EngineBase,
+    /// delta propagation threshold in Q-format codes (`delta:θ`);
+    /// always 0 for non-`Delta` bases
+    pub theta: u32,
+    /// `Some((w, a))` = per-tensor weight bits `w`, activation bits
+    /// `a` (the `@WwAa` decoration); `None` = uniform at the
+    /// manifest's Q-format
+    pub profile: Option<(u8, u8)>,
+    /// `Some(ρ)` = prune the ρ% smallest-magnitude codes per gate
+    /// tensor into CSC storage (the `+sparse:ρ` decoration); `None` =
+    /// dense storage
+    pub rho: Option<u8>,
+    /// run the inner loops behind the vector kernel (the `+simd`
+    /// suffix)
+    pub simd: bool,
+}
+
+/// The historical name: every call site and config string says
+/// "engine kind"; the normalized struct is the same concept.
+pub type EngineKind = EngineSpec;
+
+impl EngineSpec {
+    const fn bare(base: EngineBase) -> EngineSpec {
+        EngineSpec { base, theta: 0, profile: None, rho: None, simd: false }
+    }
+
+    /// f64 GRU (float reference) — spec string `native`.
+    pub const fn native() -> EngineSpec {
+        EngineSpec::bare(EngineBase::NativeF64)
+    }
+
+    /// Bit-exact fixed point — spec string `fixed`.
+    pub const fn fixed() -> EngineSpec {
+        EngineSpec::bare(EngineBase::Fixed)
+    }
+
+    /// Delta-sparsity fixed point at threshold θ — spec string
+    /// `delta:θ`.
+    pub const fn delta(theta: u32) -> EngineSpec {
+        EngineSpec { base: EngineBase::Delta, theta, profile: None, rho: None, simd: false }
+    }
+
+    /// `fixed` behind the vector kernel — spec string `fixed+simd`.
+    pub const fn fixed_simd() -> EngineSpec {
+        EngineSpec { base: EngineBase::Fixed, theta: 0, profile: None, rho: None, simd: true }
+    }
+
+    /// `delta:θ` behind the vector kernel — spec string
+    /// `delta:θ+simd`.
+    pub const fn delta_simd(theta: u32) -> EngineSpec {
+        EngineSpec { base: EngineBase::Delta, theta, profile: None, rho: None, simd: true }
+    }
+
+    /// Cycle-accurate ASIC simulator — spec string `cyclesim`.
+    pub const fn cyclesim() -> EngineSpec {
+        EngineSpec::bare(EngineBase::CycleSim)
+    }
+
+    /// Interpreted frame engine — spec string `interp`.
+    pub const fn interp() -> EngineSpec {
+        EngineSpec::bare(EngineBase::Interp)
+    }
+
+    /// AOT HLO via PJRT — spec string `hlo`.
+    #[cfg(feature = "xla")]
+    pub const fn hlo() -> EngineSpec {
+        EngineSpec::bare(EngineBase::Hlo)
+    }
+
+    /// Add the `+simd` decoration (integer bases only — the parser
+    /// and registry never attach it elsewhere).
+    pub const fn with_simd(self) -> EngineSpec {
+        EngineSpec { simd: true, ..self }
+    }
+
+    /// Add the `@WwAa` mixed-precision decoration (selects the sparse
+    /// family).
+    pub const fn with_profile(self, w: u8, a: u8) -> EngineSpec {
+        EngineSpec { profile: Some((w, a)), ..self }
+    }
+
+    /// Add the `+sparse:ρ` pruning decoration (selects the sparse
+    /// family; ρ=0 means CSC storage with nothing pruned).
+    pub const fn with_rho(self, rho: u8) -> EngineSpec {
+        EngineSpec { rho: Some(rho), ..self }
+    }
+
+    /// Whether this spec constructs the sparse + mixed-precision
+    /// family member ([`SparseMpGruDpd`]) rather than the dense-storage
+    /// executor: any `@WwAa` or `+sparse:ρ` decoration selects it.
+    pub fn is_sparse_family(&self) -> bool {
+        self.profile.is_some() || self.rho.is_some()
+    }
+
+    /// Whether this spec's engine is generic over the
+    /// [`GateKernel`](crate::fixed::GateKernel) seam (the integer
+    /// bases; `+simd` composes only with these).
+    pub fn has_kernel_seam(&self) -> bool {
+        matches!(self.base, EngineBase::Fixed | EngineBase::Delta)
     }
 }
 
-impl EngineKind {
+impl std::fmt::Display for EngineSpec {
+    /// The canonical engine-spec string; [`EngineSpec::parse`] is the
+    /// exact inverse (round-trip contract, pinned by the unit tests
+    /// and the grammar-wide property test).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.base {
+            EngineBase::NativeF64 => return write!(f, "native"),
+            EngineBase::CycleSim => return write!(f, "cyclesim"),
+            EngineBase::Interp => return write!(f, "interp"),
+            #[cfg(feature = "xla")]
+            EngineBase::Hlo => return write!(f, "hlo"),
+            EngineBase::Fixed => write!(f, "fixed")?,
+            EngineBase::Delta => write!(f, "delta:{}", self.theta)?,
+        }
+        if let Some((w, a)) = self.profile {
+            write!(f, "@W{w}A{a}")?;
+        }
+        if let Some(r) = self.rho {
+            write!(f, "+sparse:{r}")?;
+        }
+        if self.simd {
+            write!(f, "+simd")?;
+        }
+        Ok(())
+    }
+}
+
+impl EngineSpec {
     /// Parse an engine-spec string — the single grammar every surface
     /// (CLI `--engine`, conformance scenario labels, service configs)
     /// shares:
@@ -183,81 +268,70 @@ impl EngineKind {
     ///
     /// Bare `delta` means θ=0 (the bit-exact hinge). The `@WwAa` /
     /// `+sparse:ρ` decorations select the sparse + mixed-precision
-    /// family ([`EngineKind::SparseMp`]) and compose only with the
-    /// `fixed` / `delta[:θ]` bases; `+simd` composes only with the
-    /// kernel-seam kinds (`fixed`, `delta`, and the decorated family);
-    /// anything else with a suffix is rejected rather than silently
-    /// ignored. `parse(&k.to_string()) == k` for every kind in this
-    /// build.
+    /// family and compose only with the `fixed` / `delta[:θ]` bases;
+    /// `+simd` composes only with those bases too. The parser
+    /// tokenizes on `+`, so duplicate decorations
+    /// (`fixed+simd+simd`), out-of-order decorations
+    /// (`fixed+simd+sparse:50`), trailing garbage (`delta:8:16`) and
+    /// unknown decorations are each rejected with an error naming the
+    /// offender — never last-wins or silently ignored.
+    /// `parse(&k.to_string()) == k` for every kind in this build.
     pub fn parse(spec: &str) -> Result<EngineKind> {
         let s = spec.trim();
-        let (decorated, simd) = match s.strip_suffix("+simd") {
-            Some(b) => (b, true),
-            None => (s, false),
-        };
-        // the sparse/mixed-precision decorations, outermost first
-        // (Display order is base[@WwAa][+sparse:ρ], so strip +sparse
-        // from the tail before splitting the profile off the base)
-        let (rest, rho) = match decorated.split_once("+sparse:") {
-            Some((b, r)) => {
-                let rho: u8 = r.parse().with_context(|| {
-                    format!("bad ρ in engine spec '{spec}' (want +sparse:<percent>)")
-                })?;
-                if rho > 100 {
-                    bail!("engine spec '{spec}': sparsity ρ={rho} is a percentage (0..=100)");
-                }
-                (b, Some(rho))
-            }
-            None => (decorated, None),
-        };
-        let (base, profile) = match rest.split_once('@') {
+        let mut tokens = s.split('+');
+        // head token: base[@WwAa]
+        let head = tokens.next().unwrap_or_default();
+        let (base_str, profile) = match head.split_once('@') {
             Some((b, p)) => (b, Some(parse_profile_bits(p).with_context(|| {
                 format!("bad precision profile in engine spec '{spec}' (want @W<bits>A<bits>)")
             })?)),
-            None => (rest, None),
+            None => (head, None),
         };
-        if profile.is_some() || rho.is_some() {
-            let theta = if base == "fixed" {
-                None
-            } else if base == "delta" {
-                Some(0)
-            } else if let Some(t) = base.strip_prefix("delta:") {
-                Some(t.parse().with_context(|| {
+        // decoration tokens, in Display order: [+sparse:ρ][+simd]
+        let mut rho: Option<u8> = None;
+        let mut simd = false;
+        for deco in tokens {
+            if deco == "simd" {
+                if simd {
+                    bail!("engine spec '{spec}': duplicate '+simd' decoration");
+                }
+                simd = true;
+            } else if let Some(r) = deco.strip_prefix("sparse:") {
+                if rho.is_some() {
+                    bail!("engine spec '{spec}': duplicate '+sparse:ρ' decoration");
+                }
+                if simd {
+                    bail!(
+                        "engine spec '{spec}': decorations are ordered \
+                         [@WwAa][+sparse:ρ][+simd] — '+sparse:{r}' after '+simd'"
+                    );
+                }
+                let r: u8 = r.parse().with_context(|| {
+                    format!("bad ρ in engine spec '{spec}' (want +sparse:<percent>)")
+                })?;
+                if r > 100 {
+                    bail!("engine spec '{spec}': sparsity ρ={r} is a percentage (0..=100)");
+                }
+                rho = Some(r);
+            } else {
+                bail!("engine spec '{spec}': unknown decoration '+{deco}'");
+            }
+        }
+        // resolve the base
+        let (base, theta) = match base_str {
+            "fixed" => (EngineBase::Fixed, 0),
+            "delta" => (EngineBase::Delta, 0),
+            _ if base_str.starts_with("delta:") => {
+                let t: u32 = base_str["delta:".len()..].parse().with_context(|| {
                     format!("bad θ in engine spec '{spec}' (want delta:<codes>)")
-                })?)
-            } else {
-                bail!(
-                    "engine spec '{spec}': '@WwAa' / '+sparse:ρ' compose only with \
-                     'fixed' or 'delta[:θ]'"
-                );
-            };
-            return Ok(EngineKind::SparseMp { profile, rho, theta, simd });
-        }
-        if base == "delta" || base.starts_with("delta:") {
-            let theta: u32 = match base.strip_prefix("delta:") {
-                Some(t) => t
-                    .parse()
-                    .with_context(|| format!("bad θ in engine spec '{spec}' (want delta:<codes>)"))?,
-                None => 0,
-            };
-            return Ok(if simd {
-                EngineKind::DeltaFixedSimd { theta }
-            } else {
-                EngineKind::DeltaFixed { theta }
-            });
-        }
-        if base == "fixed" {
-            return Ok(if simd { EngineKind::FixedSimd } else { EngineKind::Fixed });
-        }
-        if simd {
-            bail!("engine spec '{spec}': '+simd' composes only with 'fixed' or 'delta[:θ]'");
-        }
-        Ok(match base {
-            "native" | "native-f64" => EngineKind::NativeF64,
-            "cyclesim" => EngineKind::CycleSim,
-            "interp" => EngineKind::Interp,
+                })?;
+                (EngineBase::Delta, t)
+            }
+            "native" | "native-f64" => (EngineBase::NativeF64, 0),
+            "cyclesim" => (EngineBase::CycleSim, 0),
+            "interp" => (EngineBase::Interp, 0),
             #[cfg(feature = "xla")]
-            "hlo" => EngineKind::Hlo,
+            "hlo" => (EngineBase::Hlo, 0),
             #[cfg(not(feature = "xla"))]
             "hlo" => bail!("engine 'hlo' needs a build with --features xla (try 'interp')"),
             other => bail!(
@@ -265,12 +339,25 @@ impl EngineKind {
                  (spec grammar: native | fixed[@WwAa][+sparse:ρ][+simd] | \
                  delta[:θ][@WwAa][+sparse:ρ][+simd] | cyclesim | interp | hlo)"
             ),
-        })
+        };
+        // decorations compose only with the integer bases
+        if !matches!(base, EngineBase::Fixed | EngineBase::Delta) {
+            if profile.is_some() || rho.is_some() {
+                bail!(
+                    "engine spec '{spec}': '@WwAa' / '+sparse:ρ' compose only with \
+                     'fixed' or 'delta[:θ]'"
+                );
+            }
+            if simd {
+                bail!("engine spec '{spec}': '+simd' composes only with 'fixed' or 'delta[:θ]'");
+            }
+        }
+        Ok(EngineSpec { base, theta, profile, rho, simd })
     }
 }
 
 /// Parse the `W<bits>A<bits>` payload of an `@` decoration into the
-/// `(weight_bits, act_bits)` pair [`EngineKind::SparseMp`] carries,
+/// `(weight_bits, act_bits)` pair [`EngineSpec::profile`] carries,
 /// validating ranges through [`QProfile::wa`] so a spec string can
 /// never name a profile the engine cannot construct.
 fn parse_profile_bits(s: &str) -> Result<(u8, u8)> {
@@ -646,12 +733,12 @@ impl EngineFactory {
     /// manifest (discovery + JSON parse done once) across every
     /// session it opens, instead of re-resolving per stream.
     pub fn from_manifest(kind: EngineKind, manifest: Arc<Manifest>) -> Result<EngineFactory> {
-        let frame_len = match kind {
-            EngineKind::Interp => Some(
+        let frame_len = match kind.base {
+            EngineBase::Interp => Some(
                 manifest.best_int_hlo().map(|e| e.time).unwrap_or(DEFAULT_FRAME_LEN),
             ),
             #[cfg(feature = "xla")]
-            EngineKind::Hlo => {
+            EngineBase::Hlo => {
                 Some(manifest.best_int_hlo().context("no integer HLO artifact")?.time)
             }
             _ => None,
@@ -676,20 +763,18 @@ impl EngineFactory {
         available_kinds()
             .into_iter()
             .map(|kind| {
-                let (syntax, simd) = match kind {
-                    EngineKind::NativeF64 => ("native", None),
-                    EngineKind::Fixed => ("fixed", Some(false)),
-                    EngineKind::DeltaFixed { .. } => ("delta[:θ]", Some(false)),
-                    EngineKind::FixedSimd => ("fixed+simd", Some(host_simd)),
-                    EngineKind::DeltaFixedSimd { .. } => ("delta[:θ]+simd", Some(host_simd)),
-                    EngineKind::SparseMp { simd, .. } => (
-                        "fixed|delta[:θ][@WwAa][+sparse:ρ][+simd]",
-                        Some(simd && host_simd),
-                    ),
-                    EngineKind::CycleSim => ("cyclesim", None),
-                    EngineKind::Interp => ("interp", None),
+                let (syntax, simd) = match (kind.base, kind.is_sparse_family(), kind.simd) {
+                    (EngineBase::NativeF64, ..) => ("native", None),
+                    (EngineBase::CycleSim, ..) => ("cyclesim", None),
+                    (EngineBase::Interp, ..) => ("interp", None),
                     #[cfg(feature = "xla")]
-                    EngineKind::Hlo => ("hlo", None),
+                    (EngineBase::Hlo, ..) => ("hlo", None),
+                    (EngineBase::Fixed, false, false) => ("fixed", Some(false)),
+                    (EngineBase::Fixed, false, true) => ("fixed+simd", Some(host_simd)),
+                    (EngineBase::Delta, false, false) => ("delta[:θ]", Some(false)),
+                    (EngineBase::Delta, false, true) => ("delta[:θ]+simd", Some(host_simd)),
+                    (_, true, false) => ("fixed|delta[:θ][@WwAa][+sparse:ρ]", Some(false)),
+                    (_, true, true) => ("fixed|delta[:θ]+sparse:ρ+simd", Some(host_simd)),
                 };
                 EngineDescriptor { kind, spec: kind.to_string(), syntax, simd }
             })
@@ -716,100 +801,99 @@ impl EngineFactory {
     }
 
     /// Construct the engine (call on the thread that will run it).
+    /// One arm per *base family*: the decoration axes (`theta`,
+    /// `profile`, `rho`, `simd`) are data threaded into the shared
+    /// integer-engine constructors, not dispatch.
     pub fn build(&self) -> Result<Box<dyn DpdEngine>> {
         let m = &self.manifest;
-        Ok(match self.kind {
-            EngineKind::NativeF64 => {
+        let kind = self.kind;
+        Ok(match kind.base {
+            EngineBase::NativeF64 => {
                 let w = GruWeights::load(&m.weights_float)?;
                 Box::new(StreamingEngine::new(Box::new(GruDpd::new(w))))
             }
-            EngineKind::Fixed => {
+            EngineBase::Fixed | EngineBase::Delta => {
                 let spec = QSpec::new(m.qspec_bits)?;
-                let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
-                Box::new(StreamingEngine::new(Box::new(QGruDpd::new(w, ActKind::Hard))))
-            }
-            EngineKind::DeltaFixed { theta } => {
-                let spec = QSpec::new(m.qspec_bits)?;
-                let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
-                Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
-                    w,
-                    ActKind::Hard,
-                    theta,
-                ))))
-            }
-            EngineKind::FixedSimd => {
-                let spec = QSpec::new(m.qspec_bits)?;
-                let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
-                match resolve_simd(self.simd) {
-                    Some(k) => Box::new(StreamingEngine::new(Box::new(QGruDpd::with_kernel(
-                        w,
-                        ActKind::Hard,
-                        k,
-                    )))),
-                    // always-available fallback, bit-identical by the
-                    // kernel seam's contract
-                    None => {
-                        Box::new(StreamingEngine::new(Box::new(QGruDpd::new(w, ActKind::Hard))))
-                    }
+                if kind.is_sparse_family() {
+                    // profile-less specs prune the manifest's *integer*
+                    // codes directly, so `fixed+sparse:0` is
+                    // bit-identical to `fixed` from the very same
+                    // artifact tree; an explicit @WwAa profile needs
+                    // the float twin to requantize from
+                    let sw = match kind.profile {
+                        None => QGruWeights::load_params_int(&m.weights_main, spec)?
+                            .to_sparse(kind.rho.unwrap_or(0)),
+                        Some((wb, ab)) => {
+                            let prof = QProfile::wa(wb as u32, ab as u32)?;
+                            GruWeights::load(&m.weights_float)?
+                                .prune_quantize(prof, kind.rho.unwrap_or(0))?
+                        }
+                    };
+                    build_sparse_engine(sw, kind, self.simd)
+                } else {
+                    let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
+                    build_int_engine(w, kind, self.simd)
                 }
             }
-            EngineKind::DeltaFixedSimd { theta } => {
-                let spec = QSpec::new(m.qspec_bits)?;
-                let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
-                match resolve_simd(self.simd) {
-                    Some(k) => Box::new(StreamingEngine::new(Box::new(
-                        DeltaQGruDpd::with_kernel(w, ActKind::Hard, theta, k),
-                    ))),
-                    None => Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
-                        w,
-                        ActKind::Hard,
-                        theta,
-                    )))),
-                }
-            }
-            EngineKind::SparseMp { profile, rho, theta, simd } => {
-                let spec = QSpec::new(m.qspec_bits)?;
-                let rho_pct = rho.unwrap_or(0);
-                let theta = theta.unwrap_or(0);
-                // profile-less specs prune the manifest's *integer*
-                // codes directly, so `fixed+sparse:0` is bit-identical
-                // to `fixed` from the very same artifact tree; an
-                // explicit @WwAa profile needs the float twin to
-                // requantize from
-                let sw = match profile {
-                    None => {
-                        QGruWeights::load_params_int(&m.weights_main, spec)?.to_sparse(rho_pct)
-                    }
-                    Some((wb, ab)) => {
-                        let prof = QProfile::wa(wb as u32, ab as u32)?;
-                        GruWeights::load(&m.weights_float)?.prune_quantize(prof, rho_pct)?
-                    }
-                };
-                match (simd, resolve_simd(self.simd)) {
-                    (true, Some(k)) => Box::new(StreamingEngine::new(Box::new(
-                        SparseMpGruDpd::with_kernel(sw, ActKind::Hard, theta, k),
-                    ))),
-                    _ => Box::new(StreamingEngine::new(Box::new(SparseMpGruDpd::new(
-                        sw,
-                        ActKind::Hard,
-                        theta,
-                    )))),
-                }
-            }
-            EngineKind::CycleSim => {
+            EngineBase::CycleSim => {
                 let spec = QSpec::new(m.qspec_bits)?;
                 let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
                 Box::new(StreamingEngine::new(Box::new(CycleSimDpd::new(&w))))
             }
-            EngineKind::Interp => {
+            EngineBase::Interp => {
                 let spec = QSpec::new(m.qspec_bits)?;
                 let w = QGruWeights::load_params_int(&m.weights_main, spec)?;
                 let frame = self.frame_len.unwrap_or(DEFAULT_FRAME_LEN);
                 Box::new(InterpGruEngine::new(QGruDpd::new(w, ActKind::Hard), frame))
             }
             #[cfg(feature = "xla")]
-            EngineKind::Hlo => Box::new(HloEngine::load(m)?),
+            EngineBase::Hlo => Box::new(HloEngine::load(m)?),
         })
+    }
+}
+
+/// Dense integer engine construction shared by the manifest-backed and
+/// synthetic paths: `base` picks dense vs delta recompute, `simd`
+/// requests the vector kernel (scalar fallback when the host or policy
+/// vetoes it — bit-identical by the kernel seam's contract).
+fn build_int_engine(w: QGruWeights, kind: EngineKind, policy: SimdPolicy) -> Box<dyn DpdEngine> {
+    let kernel = if kind.simd { resolve_simd(policy) } else { None };
+    match (kind.base, kernel) {
+        (EngineBase::Delta, Some(k)) => Box::new(StreamingEngine::new(Box::new(
+            DeltaQGruDpd::with_kernel(w, ActKind::Hard, kind.theta, k),
+        ))),
+        (EngineBase::Delta, None) => Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
+            w,
+            ActKind::Hard,
+            kind.theta,
+        )))),
+        (_, Some(k)) => {
+            Box::new(StreamingEngine::new(Box::new(QGruDpd::with_kernel(w, ActKind::Hard, k))))
+        }
+        (_, None) => Box::new(StreamingEngine::new(Box::new(QGruDpd::new(w, ActKind::Hard)))),
+    }
+}
+
+/// Sparse-family construction twin of [`build_int_engine`] (same
+/// kernel-fallback contract, on the CSC gather loops).
+fn build_sparse_engine(
+    sw: SparseQGruWeights,
+    kind: EngineKind,
+    policy: SimdPolicy,
+) -> Box<dyn DpdEngine> {
+    let kernel = if kind.simd { resolve_simd(policy) } else { None };
+    match kernel {
+        Some(k) => Box::new(StreamingEngine::new(Box::new(SparseMpGruDpd::with_kernel(
+            sw,
+            ActKind::Hard,
+            kind.theta,
+            k,
+        )))),
+        None => Box::new(StreamingEngine::new(Box::new(SparseMpGruDpd::new(
+            sw,
+            ActKind::Hard,
+            kind.theta,
+        )))),
     }
 }
 
@@ -825,48 +909,53 @@ impl EngineFactory {
     /// same table.
     pub fn spec_table_markdown() -> String {
         fn describe(kind: EngineKind) -> (&'static str, &'static str) {
-            match kind {
-                EngineKind::NativeF64 => (
+            match (kind.base, kind.is_sparse_family(), kind.simd) {
+                (EngineBase::NativeF64, ..) => (
                     "f64 GRU (float reference)",
                     "tracks the integer engines within the quantization envelope",
                 ),
-                EngineKind::Fixed => (
+                (EngineBase::Fixed, false, false) => (
                     "bit-exact Q2.10 fixed point",
                     "the chip's functional model; the conformance baseline",
                 ),
-                EngineKind::DeltaFixed { .. } => (
+                (EngineBase::Delta, false, false) => (
                     "delta-sparsity fixed point",
                     "θ=0 is bit-identical to `fixed`; θ>0 skips MACs with bounded drift",
                 ),
-                EngineKind::FixedSimd => (
+                (EngineBase::Fixed, false, true) => (
                     "`fixed` behind the AVX2 gate kernels",
                     "bit-identical to `fixed`; scalar fallback off-AVX2 or under `DPD_SIMD=off`",
                 ),
-                EngineKind::DeltaFixedSimd { .. } => (
+                (EngineBase::Delta, false, true) => (
                     "`delta` behind the AVX2 gate kernels",
                     "same fallback and bit-exactness contract, on the i64 delta accumulators",
                 ),
-                EngineKind::SparseMp { .. } => (
+                (_, true, false) => (
                     "magnitude-pruned sparse + mixed-precision fixed point",
                     "CSC gate tensors at ρ% pruning, per-tensor W/A widths; ρ=0 at a \
                      uniform profile and θ=0 is bit-identical to `fixed`",
                 ),
-                EngineKind::CycleSim => (
+                (_, true, true) => (
+                    "sparse CSC gathers behind the AVX2 gate kernels",
+                    "bit-identical to the scalar sparse family; same fallback contract \
+                     as `fixed+simd`",
+                ),
+                (EngineBase::CycleSim, ..) => (
                     "cycle-accurate ASIC simulator",
                     "bit-identical to `fixed`, plus cycle/energy accounting",
                 ),
-                EngineKind::Interp => (
+                (EngineBase::Interp, ..) => (
                     "interpreted frame engine",
                     "the bit-exact datapath with the HLO artifact's per-frame h0 reset",
                 ),
                 #[cfg(feature = "xla")]
-                EngineKind::Hlo => unreachable!("hlo row is rendered statically"),
+                (EngineBase::Hlo, ..) => unreachable!("hlo row is rendered statically"),
             }
         }
         let mut out = String::from("| spec | engine | notes |\n|---|---|---|\n");
         for row in EngineFactory::available_kinds() {
             #[cfg(feature = "xla")]
-            if row.kind == EngineKind::Hlo {
+            if row.kind.base == EngineBase::Hlo {
                 continue;
             }
             let (what, notes) = describe(row.kind);
@@ -896,83 +985,55 @@ pub fn build_synthetic(
     frame_len: Option<usize>,
 ) -> Result<Box<dyn DpdEngine>> {
     let qw = || QGruWeights::synthetic(seed, QSpec::Q12);
-    Ok(match kind {
-        EngineKind::NativeF64 => {
+    Ok(match kind.base {
+        EngineBase::NativeF64 => {
             Box::new(StreamingEngine::new(Box::new(GruDpd::new(GruWeights::synthetic(seed)))))
         }
-        EngineKind::Fixed => {
-            Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw(), ActKind::Hard))))
-        }
-        EngineKind::DeltaFixed { theta } => Box::new(StreamingEngine::new(Box::new(
-            DeltaQGruDpd::new(qw(), ActKind::Hard, theta),
-        ))),
-        EngineKind::FixedSimd => match resolve_simd(simd) {
-            Some(k) => Box::new(StreamingEngine::new(Box::new(QGruDpd::with_kernel(
-                qw(),
-                ActKind::Hard,
-                k,
-            )))),
-            None => Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw(), ActKind::Hard)))),
-        },
-        EngineKind::DeltaFixedSimd { theta } => match resolve_simd(simd) {
-            Some(k) => Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::with_kernel(
-                qw(),
-                ActKind::Hard,
-                theta,
-                k,
-            )))),
-            None => Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
-                qw(),
-                ActKind::Hard,
-                theta,
-            )))),
-        },
-        EngineKind::SparseMp { profile, rho, theta, simd: want_simd } => {
-            let rho_pct = rho.unwrap_or(0);
-            let theta = theta.unwrap_or(0);
-            // profile-less kinds prune the same integer fixture Fixed
-            // uses (ρ=0 ≡ `fixed`, bit for bit); an explicit profile
-            // requantizes the float fixture per tensor
-            let sw = match profile {
-                None => qw().to_sparse(rho_pct),
-                Some((wb, ab)) => GruWeights::synthetic(seed)
-                    .prune_quantize(QProfile::wa(wb as u32, ab as u32)?, rho_pct)?,
-            };
-            match (want_simd, resolve_simd(simd)) {
-                (true, Some(k)) => Box::new(StreamingEngine::new(Box::new(
-                    SparseMpGruDpd::with_kernel(sw, ActKind::Hard, theta, k),
-                ))),
-                _ => Box::new(StreamingEngine::new(Box::new(SparseMpGruDpd::new(
-                    sw,
-                    ActKind::Hard,
-                    theta,
-                )))),
+        EngineBase::Fixed | EngineBase::Delta => {
+            if kind.is_sparse_family() {
+                // profile-less kinds prune the same integer fixture
+                // `fixed` uses (ρ=0 ≡ `fixed`, bit for bit); an
+                // explicit profile requantizes the float fixture per
+                // tensor
+                let sw = match kind.profile {
+                    None => qw().to_sparse(kind.rho.unwrap_or(0)),
+                    Some((wb, ab)) => GruWeights::synthetic(seed)
+                        .prune_quantize(QProfile::wa(wb as u32, ab as u32)?, kind.rho.unwrap_or(0))?,
+                };
+                build_sparse_engine(sw, kind, simd)
+            } else {
+                build_int_engine(qw(), kind, simd)
             }
         }
-        EngineKind::CycleSim => Box::new(StreamingEngine::new(Box::new(CycleSimDpd::new(&qw())))),
-        EngineKind::Interp => Box::new(InterpGruEngine::new(
+        EngineBase::CycleSim => Box::new(StreamingEngine::new(Box::new(CycleSimDpd::new(&qw())))),
+        EngineBase::Interp => Box::new(InterpGruEngine::new(
             QGruDpd::new(qw(), ActKind::Hard),
             frame_len.unwrap_or(DEFAULT_FRAME_LEN),
         )),
         #[cfg(feature = "xla")]
-        EngineKind::Hlo => bail!("hlo engines need a compiled artifact tree (no synthetic form)"),
+        EngineBase::Hlo => bail!("hlo engines need a compiled artifact tree (no synthetic form)"),
     })
 }
 
-/// The kinds available in this build (used by reports and the CLI).
+/// The kinds available in this build (used by reports and the CLI) —
+/// the registry the conformance grid, the batch-parity suite and the
+/// README table all enumerate. One row per *engine identity*: base
+/// family × the decoration combinations this build ships golden
+/// coverage for.
 pub fn available_kinds() -> Vec<EngineKind> {
     let mut kinds = vec![
-        EngineKind::NativeF64,
-        EngineKind::Fixed,
-        EngineKind::DeltaFixed { theta: 0 },
-        EngineKind::FixedSimd,
-        EngineKind::DeltaFixedSimd { theta: 0 },
-        EngineKind::SparseMp { profile: Some((8, 12)), rho: Some(50), theta: None, simd: false },
-        EngineKind::CycleSim,
-        EngineKind::Interp,
+        EngineKind::native(),
+        EngineKind::fixed(),
+        EngineKind::delta(0),
+        EngineKind::fixed_simd(),
+        EngineKind::delta_simd(0),
+        EngineKind::fixed().with_profile(8, 12).with_rho(50),
+        EngineKind::fixed().with_rho(50).with_simd(),
+        EngineKind::cyclesim(),
+        EngineKind::interp(),
     ];
     #[cfg(feature = "xla")]
-    kinds.push(EngineKind::Hlo);
+    kinds.push(EngineKind::hlo());
     kinds
 }
 
@@ -1281,7 +1342,7 @@ mod tests {
         // its own batch class — like delta@0, a sparse engine never
         // coalesces with the dense implementation
         let input = stimulus(96, 5);
-        let mut fixed = build_synthetic(EngineKind::Fixed, 11, SimdPolicy::Off, None).unwrap();
+        let mut fixed = build_synthetic(EngineKind::fixed(), 11, SimdPolicy::Off, None).unwrap();
         let want = run_engine(fixed.as_mut(), &input);
         let kind = EngineKind::parse("fixed+sparse:0").unwrap();
         let mut sparse = build_synthetic(kind, 11, SimdPolicy::Off, None).unwrap();
@@ -1302,19 +1363,22 @@ mod tests {
     #[test]
     fn available_kinds_lists_default_backends() {
         let kinds = available_kinds();
-        assert!(kinds.contains(&EngineKind::NativeF64));
-        assert!(kinds.contains(&EngineKind::Fixed));
-        assert!(kinds.contains(&EngineKind::DeltaFixed { theta: 0 }));
-        assert!(kinds.contains(&EngineKind::FixedSimd));
-        assert!(kinds.contains(&EngineKind::DeltaFixedSimd { theta: 0 }));
-        assert!(kinds.contains(&EngineKind::CycleSim));
-        assert!(kinds.contains(&EngineKind::Interp));
-        assert!(kinds.contains(&EngineKind::SparseMp {
-            profile: Some((8, 12)),
-            rho: Some(50),
-            theta: None,
-            simd: false,
-        }));
+        assert!(kinds.contains(&EngineKind::native()));
+        assert!(kinds.contains(&EngineKind::fixed()));
+        assert!(kinds.contains(&EngineKind::delta(0)));
+        assert!(kinds.contains(&EngineKind::fixed_simd()));
+        assert!(kinds.contains(&EngineKind::delta_simd(0)));
+        assert!(kinds.contains(&EngineKind::cyclesim()));
+        assert!(kinds.contains(&EngineKind::interp()));
+        assert!(kinds.contains(&EngineKind::fixed().with_profile(8, 12).with_rho(50)));
+        // the SIMD sparse gather path is a first-class registry row
+        assert!(kinds.contains(&EngineKind::fixed().with_rho(50).with_simd()));
+        // every registry row is a distinct engine identity
+        for (i, a) in kinds.iter().enumerate() {
+            for b in &kinds[i + 1..] {
+                assert_ne!(a, b, "duplicate registry row {a}");
+            }
+        }
     }
 
     #[test]
@@ -1322,19 +1386,30 @@ mod tests {
         // parse is the exact inverse of Display for every kind in the
         // build, including non-registry θ values
         let mut kinds = available_kinds();
-        kinds.push(EngineKind::DeltaFixed { theta: 32 });
-        kinds.push(EngineKind::DeltaFixedSimd { theta: 32 });
+        kinds.push(EngineKind::delta(32));
+        kinds.push(EngineKind::delta_simd(32));
         // the sparse/mixed-precision family: every combination of
-        // optional decorations (profile/rho/theta/simd) that satisfies
-        // the at-least-one-decoration invariant must round-trip
-        for profile in [None, Some((4u8, 12u8)), Some((8, 12))] {
-            for rho in [None, Some(0u8), Some(50), Some(100)] {
-                if profile.is_none() && rho.is_none() {
-                    continue; // would collide with the plain spellings
-                }
-                for theta in [None, Some(0u32), Some(32)] {
+        // optional decorations (profile/rho/simd) over both integer
+        // bases that satisfies the at-least-one-decoration invariant
+        // must round-trip
+        for base in [EngineKind::fixed(), EngineKind::delta(0), EngineKind::delta(32)] {
+            for profile in [None, Some((4u8, 12u8)), Some((8, 12))] {
+                for rho in [None, Some(0u8), Some(50), Some(100)] {
+                    if profile.is_none() && rho.is_none() {
+                        continue; // the plain (dense) spellings
+                    }
                     for simd in [false, true] {
-                        kinds.push(EngineKind::SparseMp { profile, rho, theta, simd });
+                        let mut kind = base;
+                        if let Some((w, a)) = profile {
+                            kind = kind.with_profile(w, a);
+                        }
+                        if let Some(r) = rho {
+                            kind = kind.with_rho(r);
+                        }
+                        if simd {
+                            kind = kind.with_simd();
+                        }
+                        kinds.push(kind);
                     }
                 }
             }
@@ -1344,44 +1419,99 @@ mod tests {
             assert_eq!(EngineKind::parse(&spec).unwrap(), kind, "round-trip of '{spec}'");
         }
         // the canonical spellings are API surface — pin them
-        assert_eq!(EngineKind::Fixed.to_string(), "fixed");
-        assert_eq!(EngineKind::FixedSimd.to_string(), "fixed+simd");
-        assert_eq!(EngineKind::DeltaFixed { theta: 32 }.to_string(), "delta:32");
-        assert_eq!(EngineKind::DeltaFixedSimd { theta: 32 }.to_string(), "delta:32+simd");
+        assert_eq!(EngineKind::fixed().to_string(), "fixed");
+        assert_eq!(EngineKind::fixed_simd().to_string(), "fixed+simd");
+        assert_eq!(EngineKind::delta(32).to_string(), "delta:32");
+        assert_eq!(EngineKind::delta_simd(32).to_string(), "delta:32+simd");
         // bare "delta" means θ=0, with or without the simd suffix
-        assert_eq!(EngineKind::parse("delta").unwrap(), EngineKind::DeltaFixed { theta: 0 });
-        assert_eq!(
-            EngineKind::parse("delta+simd").unwrap(),
-            EngineKind::DeltaFixedSimd { theta: 0 }
-        );
+        assert_eq!(EngineKind::parse("delta").unwrap(), EngineKind::delta(0));
+        assert_eq!(EngineKind::parse("delta+simd").unwrap(), EngineKind::delta_simd(0));
         // whitespace-tolerant, and FromStr delegates
-        assert_eq!(EngineKind::parse(" fixed+simd ").unwrap(), EngineKind::FixedSimd);
-        assert_eq!("delta:7".parse::<EngineKind>().unwrap(), EngineKind::DeltaFixed { theta: 7 });
+        assert_eq!(EngineKind::parse(" fixed+simd ").unwrap(), EngineKind::fixed_simd());
+        assert_eq!("delta:7".parse::<EngineKind>().unwrap(), EngineKind::delta(7));
         // canonical sparse/mixed-precision spellings are API surface
+        assert_eq!(EngineKind::fixed().with_rho(50).to_string(), "fixed+sparse:50");
         assert_eq!(
-            EngineKind::SparseMp { profile: None, rho: Some(50), theta: None, simd: false }
-                .to_string(),
-            "fixed+sparse:50"
-        );
-        assert_eq!(
-            EngineKind::SparseMp {
-                profile: Some((8, 12)),
-                rho: Some(50),
-                theta: Some(32),
-                simd: true,
-            }
-            .to_string(),
+            EngineKind::delta(32).with_profile(8, 12).with_rho(50).with_simd().to_string(),
             "delta:32@W8A12+sparse:50+simd"
         );
         assert_eq!(
             EngineKind::parse("fixed@W4A12").unwrap(),
-            EngineKind::SparseMp { profile: Some((4, 12)), rho: None, theta: None, simd: false }
+            EngineKind::fixed().with_profile(4, 12)
         );
-        // bare `delta` with a decoration still means θ=0
+        // bare `delta` with a decoration still means θ=0 (and stays a
+        // distinct identity from the decorated `fixed` base)
         assert_eq!(
             EngineKind::parse("delta+sparse:30").unwrap(),
-            EngineKind::SparseMp { profile: None, rho: Some(30), theta: Some(0), simd: false }
+            EngineKind::delta(0).with_rho(30)
         );
+        assert_ne!(
+            EngineKind::parse("delta+sparse:30").unwrap(),
+            EngineKind::parse("fixed+sparse:30").unwrap()
+        );
+    }
+
+    #[test]
+    fn engine_spec_rejects_duplicate_and_conflicting_decorations() {
+        // the tokenizing parser names the offending decoration instead
+        // of last-wins or silently ignoring it
+        for (bad, offender) in [
+            ("fixed+simd+simd", "simd"),
+            ("fixed+sparse:50+sparse:30", "sparse"),
+            ("delta+sparse:10+sparse:10", "sparse"),
+            ("fixed+sparse:50+simd+simd", "simd"),
+            ("fixed+simd+sparse:50", "ordered"),
+            ("delta:8:16", "θ"),
+            ("delta:0:0", "θ"),
+            ("fixed+sparse:50+avx", "avx"),
+        ] {
+            let err = EngineKind::parse(bad).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains(offender),
+                "'{bad}': error must name the offender ('{offender}'), got: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn engine_spec_parse_display_round_trip_property() {
+        // satellite to the hand-picked round-trip list: random draws
+        // over the full grammar (base × θ × @WwAa × +sparse:ρ × +simd)
+        use crate::util::proptest::check;
+        check("engine spec round-trip", 300, |rng| {
+            let mut kind = match rng.int_in(0, 6) {
+                0 => EngineKind::native(),
+                1 => EngineKind::cyclesim(),
+                2 => EngineKind::interp(),
+                3 => EngineKind::fixed(),
+                // weight the integer bases: they carry the decorations
+                _ => EngineKind::delta(rng.int_in(0, 4096) as u32),
+            };
+            if kind.has_kernel_seam() {
+                if rng.uniform() < 0.5 {
+                    // only draw profiles QProfile accepts (4 ≤ w ≤ a)
+                    let a = rng.int_in(4, 16);
+                    let w = rng.int_in(4, a);
+                    if QProfile::wa(w as u32, a as u32).is_ok() {
+                        kind = kind.with_profile(w as u8, a as u8);
+                    }
+                }
+                if rng.uniform() < 0.5 {
+                    kind = kind.with_rho(rng.int_in(0, 100) as u8);
+                }
+                if rng.uniform() < 0.5 {
+                    kind = kind.with_simd();
+                }
+            }
+            let spec = kind.to_string();
+            let parsed =
+                EngineKind::parse(&spec).map_err(|e| format!("'{spec}' rejected: {e:#}"))?;
+            if parsed != kind {
+                return Err(format!("'{spec}' parsed to {parsed:?}, want {kind:?}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -1451,12 +1581,15 @@ mod tests {
             assert_eq!(EngineKind::parse(&row.spec).unwrap(), row.kind, "spec '{}'", row.spec);
             assert!(!row.syntax.is_empty());
         }
-        let simd_row = rows.iter().find(|r| r.kind == EngineKind::FixedSimd).unwrap();
+        let simd_row = rows.iter().find(|r| r.kind == EngineKind::fixed_simd()).unwrap();
         assert!(simd_row.simd.is_some(), "kernel kinds must report host SIMD state");
-        let scalar_row = rows.iter().find(|r| r.kind == EngineKind::Fixed).unwrap();
+        let scalar_row = rows.iter().find(|r| r.kind == EngineKind::fixed()).unwrap();
         assert_eq!(scalar_row.simd, Some(false), "scalar kinds carry the seam, vector off");
-        let native = rows.iter().find(|r| r.kind == EngineKind::NativeF64).unwrap();
+        let native = rows.iter().find(|r| r.kind == EngineKind::native()).unwrap();
         assert!(native.simd.is_none(), "no kernel seam on the float twin");
+        let sparse_simd =
+            rows.iter().find(|r| r.kind == EngineKind::fixed().with_rho(50).with_simd()).unwrap();
+        assert!(sparse_simd.simd.is_some(), "the sparse gather row reports host SIMD state");
     }
 
     #[test]
@@ -1495,7 +1628,7 @@ mod tests {
 
     #[test]
     fn factory_builds_every_available_kind_with_artifacts() {
-        let Ok(factory) = EngineFactory::new(EngineKind::Fixed, None) else {
+        let Ok(factory) = EngineFactory::new(EngineKind::fixed(), None) else {
             eprintln!("skipping (no artifacts)");
             return;
         };
@@ -1511,7 +1644,7 @@ mod tests {
                 }
                 // the xla stub compiles but cannot execute
                 #[cfg(feature = "xla")]
-                Err(e) if kind == EngineKind::Hlo => {
+                Err(e) if kind == EngineKind::hlo() => {
                     eprintln!("hlo backend unavailable: {e:#}");
                 }
                 Err(e) => panic!("{kind:?}: {e:#}"),
@@ -1539,16 +1672,16 @@ mod tests {
             golden: Vec::new(),
         });
         for kind in [
-            EngineKind::NativeF64,
-            EngineKind::Fixed,
-            EngineKind::DeltaFixed { theta: 32 },
-            EngineKind::CycleSim,
+            EngineKind::native(),
+            EngineKind::fixed(),
+            EngineKind::delta(32),
+            EngineKind::cyclesim(),
         ] {
             let f = EngineFactory::from_manifest(kind, Arc::clone(&m)).unwrap();
             assert_eq!(f.kind(), kind);
             assert_eq!(f.frame_len(100), 100, "streaming kinds keep the caller's frame");
         }
-        let f = EngineFactory::from_manifest(EngineKind::Interp, Arc::clone(&m)).unwrap();
+        let f = EngineFactory::from_manifest(EngineKind::interp(), Arc::clone(&m)).unwrap();
         assert_eq!(f.frame_len(100), DEFAULT_FRAME_LEN, "no HLO entry -> default frame");
         assert_eq!(f.manifest().n_params, 502);
         // the resolution is genuinely shared, not copied per factory
@@ -1561,7 +1694,7 @@ mod tests {
     #[test]
     fn factory_error_mentions_artifacts() {
         let err = EngineFactory::new(
-            EngineKind::Fixed,
+            EngineKind::fixed(),
             Some(std::path::Path::new("/nonexistent/nowhere")),
         )
         .unwrap_err();

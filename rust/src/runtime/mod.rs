@@ -21,7 +21,8 @@ pub mod store;
 
 pub use artifacts::Manifest;
 pub use backend::{
-    build_synthetic, DpdEngine, DpdLane, DpdState, EngineFactory, EngineKind,
+    build_synthetic, DpdEngine, DpdLane, DpdState, EngineBase, EngineFactory, EngineKind,
+    EngineSpec,
 };
 pub use store::{DeltaStats, GenMeta, GenRecord, WeightSet, WeightStore};
 #[cfg(feature = "xla")]

@@ -269,7 +269,7 @@ fn hot_swap_is_bit_exact_at_the_frame_boundary() {
     let mut session = service
         .open_adaptive_session(
             SessionConfig {
-                engine: EngineKind::Fixed,
+                engine: EngineKind::fixed(),
                 adapt: Some(acfg),
                 ..Default::default()
             },
@@ -361,7 +361,7 @@ fn hot_swap_under_coalescing_keeps_peers_bit_exact() {
     };
     let mut adaptive = service
         .open_adaptive_session(
-            SessionConfig { engine: EngineKind::Fixed, adapt: Some(acfg), ..Default::default() },
+            SessionConfig { engine: EngineKind::fixed(), adapt: Some(acfg), ..Default::default() },
             w0.clone(),
         )
         .unwrap();
@@ -441,7 +441,7 @@ fn adaptive_stats_meter_the_loop_and_contracts_hold() {
     assert!(service
         .open_adaptive_session(
             SessionConfig {
-                engine: EngineKind::CycleSim,
+                engine: EngineKind::cyclesim(),
                 adapt: Some(acfg),
                 ..Default::default()
             },
@@ -495,7 +495,7 @@ fn adaptive_stats_meter_the_loop_and_contracts_hold() {
     let mut session = service
         .open_adaptive_session(
             SessionConfig {
-                engine: EngineKind::DeltaFixed { theta: 16 },
+                engine: EngineKind::delta(16),
                 adapt: Some(acfg),
                 ..Default::default()
             },
@@ -541,7 +541,7 @@ fn adaptive_stats_meter_the_loop_and_contracts_hold() {
     // weight generation
     let mut idle = service
         .open_adaptive_session(
-            SessionConfig { engine: EngineKind::Fixed, adapt: Some(acfg), ..Default::default() },
+            SessionConfig { engine: EngineKind::fixed(), adapt: Some(acfg), ..Default::default() },
             identity_init(4, 10, 0.15),
         )
         .unwrap();

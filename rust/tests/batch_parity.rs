@@ -4,13 +4,15 @@
 //! The paper's value proposition is *bit-faithful* quantized GRU
 //! behavior, so the batched execution path may not change a single
 //! output bit: for every hermetic `EngineKind` construction
-//! (NativeF64, Fixed, FixedSimd, CycleSim, Interp) and B ∈ {1, 2, 4, 8}
-//! interleaved streams, a `DpdService` running with `batch = B` must
-//! produce output bit-identical to the same streams run sequentially
-//! (`batch = 1`) — including across mid-stream `reset`, ragged chunk
-//! sizes, ragged tails, and sessions of *different* weight classes
-//! sharing the worker. The `Fixed`/`CycleSim` cases are additionally
-//! pinned to the direct single-engine oracle.
+//! (`native`, `fixed`, `fixed+simd`, `cyclesim`, `interp`, and —
+//! registry-driven — every other spec `available_kinds()` exports)
+//! and B ∈ {1, 2, 4, 8} interleaved streams, a `DpdService` running
+//! with `batch = B` must produce output bit-identical to the same
+//! streams run sequentially (`batch = 1`) — including across
+//! mid-stream `reset`, ragged chunk sizes, ragged tails, and sessions
+//! of *different* weight classes sharing the worker. The
+//! `fixed`/`cyclesim` cases are additionally pinned to the direct
+//! single-engine oracle.
 //!
 //! Hermetic by construction (synthetic weights); CI runs this suite in
 //! both debug and `--release` (the narrow i32 kernels would wrap
@@ -21,9 +23,9 @@ use dpd_ne::coordinator::{DpdService, ServiceConfig, SessionConfig, StreamSessio
 use dpd_ne::dpd::qgru::{ActKind, QGruDpd};
 use dpd_ne::dpd::weights::{GruWeights, QGruWeights};
 use dpd_ne::dpd::{Dpd, GruDpd};
-use dpd_ne::fixed::{QSpec, SimdKernel};
-use dpd_ne::runtime::backend::{CycleSimDpd, InterpGruEngine, StreamingEngine};
-use dpd_ne::runtime::DpdEngine;
+use dpd_ne::fixed::{QSpec, SimdKernel, SimdPolicy};
+use dpd_ne::runtime::backend::{available_kinds, CycleSimDpd, InterpGruEngine, StreamingEngine};
+use dpd_ne::runtime::{build_synthetic, DpdEngine};
 use dpd_ne::util::Rng;
 
 const FRAME_LEN: usize = 128;
@@ -60,8 +62,8 @@ fn fixed_engine(seed: u64) -> Box<dyn DpdEngine> {
     Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw, ActKind::Hard))))
 }
 
-/// The `EngineKind::FixedSimd` construction: the vector kernel where
-/// the host has AVX2, the bit-identical scalar kernel otherwise.
+/// The `fixed+simd` construction: the vector kernel where the host
+/// has AVX2, the bit-identical scalar kernel otherwise.
 fn fixed_simd_engine(seed: u64) -> Box<dyn DpdEngine> {
     let qw = QGruWeights::synthetic(seed, QSpec::Q12);
     Box::new(StreamingEngine::new(match SimdKernel::try_new() {
@@ -105,13 +107,16 @@ fn direct(seed: u64, input: &[[f64; 2]]) -> Vec<[f64; 2]> {
 /// exact sample positions. Fully deterministic in everything except
 /// the scheduler's internal grouping — which is exactly what must not
 /// matter.
-fn run_sessions(
+fn run_sessions<C>(
     batch: usize,
-    ctor: Ctor,
+    ctor: C,
     seeds: &[u64],
     inputs: &[Vec<[f64; 2]>],
     reset_at: &[Option<usize>],
-) -> Vec<Vec<[f64; 2]>> {
+) -> Vec<Vec<[f64; 2]>>
+where
+    C: Fn(u64) -> Box<dyn DpdEngine> + Copy + Send + 'static,
+{
     let service = DpdService::start(ServiceConfig {
         workers: 1,
         frame_len: FRAME_LEN,
@@ -219,7 +224,7 @@ fn simd_soa_lanes_are_bit_identical_to_sequential_scalar() {
     // reproduce the *scalar* sequential service bit for bit — and the
     // direct scalar oracle on top, so a bug shared by both service
     // paths can't hide. On hosts without AVX2 this degenerates to the
-    // FixedSimd fallback arm, which the oracle still pins exactly.
+    // `fixed+simd` fallback arm, which the oracle still pins exactly.
     for b in [1usize, 4, 8] {
         let seeds = vec![42u64; b];
         let inputs: Vec<Vec<[f64; 2]>> =
@@ -332,6 +337,34 @@ fn coalesce_opt_out_stays_bit_identical() {
         assert_eq!(out.iq, direct(21, &inputs[k]), "session {k} diverged");
     }
     service.shutdown().unwrap();
+}
+
+#[test]
+fn every_registry_kind_is_batch_parity_clean() {
+    // The registry-driven form of the headline contract: every
+    // hermetic spec `available_kinds()` exports — dense, delta, the
+    // sparse/mixed-precision family, SIMD decorations and all — must
+    // reproduce the sequential service bit for bit through the
+    // batched service. Extending the registry automatically extends
+    // this suite; `hlo` has no synthetic form and is skipped.
+    let b = 4usize;
+    for kind in available_kinds() {
+        if build_synthetic(kind, 42, SimdPolicy::Auto, Some(FRAME_LEN)).is_err() {
+            continue; // artifact-gated (`hlo`)
+        }
+        let ctor = move |seed: u64| -> Box<dyn DpdEngine> {
+            build_synthetic(kind, seed, SimdPolicy::Auto, Some(FRAME_LEN))
+                .expect("hermetic registry kind")
+        };
+        let seeds = vec![42u64; b];
+        let inputs: Vec<Vec<[f64; 2]>> =
+            (0..b).map(|k| signal(700 + 61 * k, 100 + k as u64)).collect();
+        let reset_at: Vec<Option<usize>> =
+            (0..b).map(|k| if k == 1 { Some(301) } else { None }).collect();
+        let seq = run_sessions(1, ctor, &seeds, &inputs, &reset_at);
+        let bat = run_sessions(b, ctor, &seeds, &inputs, &reset_at);
+        assert_eq!(seq, bat, "{kind} B={b}: batched path diverged from sequential");
+    }
 }
 
 #[test]

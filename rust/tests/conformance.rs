@@ -1,32 +1,47 @@
 //! The cross-engine conformance matrix — every hermetic engine
 //! through the shared scenario grid (`util::conformance`), asserted
-//! under its documented contract:
+//! under its documented contract.
 //!
-//! * **bit-exact family** — `Fixed`, `CycleSim` and `DeltaFixed@θ=0`
-//!   share the integer datapath: identical outputs on every scenario,
-//!   scalar and batched alike. The SIMD-kernel builds of the fixed
-//!   and delta engines (`fixed+simd`, `delta@0+simd`) are members of
-//!   the same family — the `GateKernel` seam's bit-exactness
-//!   contract — as is the forced scalar fallback (`fixed+simd-off`,
-//!   what a `FixedSimd` engine builds under `DPD_SIMD=off` or on a
-//!   host without AVX2); so are the sparse/mixed-precision hinges —
-//!   `fixed+sparse:0` (CSC storage, nothing pruned, same integer
-//!   codes) and `fixed@W12A12` (a single-format `QProfile`, proving
-//!   profile ≡ uniform-`QSpec` bit for bit);
+//! The matrix is **registry-driven**: `available_kinds()` is the
+//! source of truth, and every buildable spec it exports gets a row
+//! constructed from the shared fixture weights — extending the
+//! registry automatically extends the matrix (a completeness test
+//! pins the coverage). A handful of *policy* rows ride along for
+//! contracts the registry doesn't spell: the forced scalar fallback,
+//! the profile/CSC equivalence hinges, the scalar twin of the sparse
+//! SIMD row, and the golden-θ delta family.
+//!
+//! Contracts:
+//!
+//! * **bit-exact family** — `fixed`, `cyclesim` and `delta:0` share
+//!   the integer datapath: identical outputs on every scenario,
+//!   scalar and batched alike. The SIMD-kernel builds (`fixed+simd`,
+//!   `delta:0+simd`) are members of the same family — the
+//!   `GateKernel` seam's bit-exactness contract — as is the forced
+//!   scalar fallback (`fixed+simd-off`, what `fixed+simd` builds
+//!   under `DPD_SIMD=off` or on a host without AVX2); so are the
+//!   sparse/mixed-precision hinges — `fixed+sparse:0` (CSC storage,
+//!   nothing pruned, same integer codes) and `fixed@W12A12` (a
+//!   single-format `QProfile`, proving profile ≡ uniform-`QSpec` bit
+//!   for bit);
 //! * **kernel invariance at θ>0** — the SIMD delta engine at the
 //!   golden θ equals the scalar delta engine bit for bit on every
 //!   scenario (same skip decisions, same accumulators), so delta@32
 //!   composed with SIMD inherits the golden drift bounds verbatim;
+//! * **kernel invariance at ρ>0** — the registry's
+//!   `fixed+sparse:50+simd` row (the AVX2 sparse-gather kernel)
+//!   equals the scalar sparse engine over the same pruned CSC
+//!   weights, bit for bit;
 //! * **scalar ≡ batched** — for *every* engine (including the float
 //!   reference and the frame engine), `run_batch` over ragged lanes
 //!   is bit-identical to per-lane scalar processing;
-//! * **float envelope** — `NativeF64` tracks the integer reference
+//! * **float envelope** — `native` tracks the integer reference
 //!   within the documented small-signal tolerance (NMSE < -12 dB,
 //!   per-sample |dev| < 0.3);
-//! * **θ>0 drift bound** — `DeltaFixed` at the golden θ keeps
-//!   ACPR/EVM within 0.5 dB of the dense golden reference on the
-//!   golden OFDM waveform while cutting MACs by at least 2x (the
-//!   delta fast path's acceptance bar).
+//! * **θ>0 drift bound** — `delta` at the golden θ keeps ACPR/EVM
+//!   within 0.5 dB of the dense golden reference on the golden OFDM
+//!   waveform while cutting MACs by at least 2x (the delta fast
+//!   path's acceptance bar).
 //!
 //! Scenario coverage: OFDM bursts, tone pairs, silence/DC, full-scale
 //! saturation, mid-stream resets, save/load round-trips, ragged batch
@@ -43,8 +58,8 @@ use dpd_ne::fixed::{QProfile, QSpec, SimdKernel};
 use dpd_ne::metrics::acpr::{acpr_db, AcprConfig};
 use dpd_ne::metrics::evm::{evm_db_nmse, nmse_db};
 use dpd_ne::pa::{PaSpec, RappMemPa};
-use dpd_ne::runtime::backend::{CycleSimDpd, InterpGruEngine, StreamingEngine};
-use dpd_ne::runtime::DpdEngine;
+use dpd_ne::runtime::backend::{available_kinds, CycleSimDpd, InterpGruEngine, StreamingEngine};
+use dpd_ne::runtime::{DpdEngine, EngineBase, EngineFactory, EngineKind};
 use dpd_ne::util::conformance::{
     lane_scenario, max_abs_dev, run_batched, run_scalar, standard_grid, Scenario,
 };
@@ -80,151 +95,118 @@ fn qweights() -> QGruWeights {
     synth_float_weights(42).quantize(QSpec::Q12).unwrap()
 }
 
-/// Every hermetic engine under test, by label. The `Hlo` backend is
-/// not in the matrix: it needs an artifact tree and the xla feature,
-/// and its hermetic twin `Interp` carries the frame-semantics slot.
-fn makers() -> Vec<(&'static str, Box<dyn Fn() -> Box<dyn DpdEngine>>)> {
-    let qw = qweights();
-    let fw = synth_float_weights(42);
-    let mk_fixed = {
-        let qw = qw.clone();
-        move || -> Box<dyn DpdEngine> {
-            Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw.clone(), ActKind::Hard))))
-        }
-    };
-    let mk_cyclesim = {
-        let qw = qw.clone();
-        move || -> Box<dyn DpdEngine> {
-            Box::new(StreamingEngine::new(Box::new(CycleSimDpd::new(&qw))))
-        }
-    };
-    let mk_delta0 = {
-        let qw = qw.clone();
-        move || -> Box<dyn DpdEngine> {
-            Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
-                qw.clone(),
-                ActKind::Hard,
-                0,
-            ))))
-        }
-    };
-    let mk_delta_g = {
-        let qw = qw.clone();
-        move || -> Box<dyn DpdEngine> {
-            Box::new(StreamingEngine::new(Box::new(DeltaQGruDpd::new(
-                qw.clone(),
-                ActKind::Hard,
-                GOLDEN_THETA,
-            ))))
-        }
-    };
-    let mk_native = {
-        let fw = fw.clone();
-        move || -> Box<dyn DpdEngine> {
-            Box::new(StreamingEngine::new(Box::new(GruDpd::new(fw.clone()))))
-        }
-    };
-    // the SIMD rows mirror EngineFactory's construction-time
-    // selection: the vector kernel where the host has AVX2, the
-    // bit-identical scalar kernel otherwise — so the matrix stays
-    // green on every host while proving the vector path wherever it
-    // can actually run (CI carries an AVX2 lane)
-    let mk_fixed_simd = {
-        let qw = qw.clone();
-        move || -> Box<dyn DpdEngine> {
-            Box::new(StreamingEngine::new(match SimdKernel::try_new() {
-                Some(k) => Box::new(QGruDpd::with_kernel(qw.clone(), ActKind::Hard, k))
-                    as Box<dyn Dpd>,
-                None => Box::new(QGruDpd::new(qw.clone(), ActKind::Hard)),
+/// Build a hermetic engine for `kind` from the fixture weights — the
+/// same construction `EngineFactory::build` performs (one arm per
+/// base family, kernel resolved from the spec's `+simd` bit with the
+/// documented scalar fallback), minus the artifact tree. `None` for
+/// artifact-gated kinds (`hlo`), which the matrix cannot run
+/// hermetically.
+fn maker_for(kind: EngineKind) -> Option<Box<dyn Fn() -> Box<dyn DpdEngine>>> {
+    match kind.base {
+        EngineBase::NativeF64 => {
+            let fw = synth_float_weights(42);
+            Some(Box::new(move || -> Box<dyn DpdEngine> {
+                Box::new(StreamingEngine::new(Box::new(GruDpd::new(fw.clone()))))
             }))
         }
-    };
-    let mk_delta0_simd = {
-        let qw = qw.clone();
-        move || -> Box<dyn DpdEngine> {
-            Box::new(StreamingEngine::new(match SimdKernel::try_new() {
-                Some(k) => Box::new(DeltaQGruDpd::with_kernel(qw.clone(), ActKind::Hard, 0, k))
-                    as Box<dyn Dpd>,
-                None => Box::new(DeltaQGruDpd::new(qw.clone(), ActKind::Hard, 0)),
+        EngineBase::CycleSim => {
+            let qw = qweights();
+            Some(Box::new(move || -> Box<dyn DpdEngine> {
+                Box::new(StreamingEngine::new(Box::new(CycleSimDpd::new(&qw))))
             }))
         }
-    };
-    let mk_delta_g_simd = {
-        let qw = qw.clone();
-        move || -> Box<dyn DpdEngine> {
-            Box::new(StreamingEngine::new(match SimdKernel::try_new() {
-                Some(k) => Box::new(DeltaQGruDpd::with_kernel(
-                    qw.clone(),
-                    ActKind::Hard,
-                    GOLDEN_THETA,
-                    k,
-                )) as Box<dyn Dpd>,
-                None => Box::new(DeltaQGruDpd::new(qw.clone(), ActKind::Hard, GOLDEN_THETA)),
+        EngineBase::Interp => {
+            let qw = qweights();
+            Some(Box::new(move || -> Box<dyn DpdEngine> {
+                Box::new(InterpGruEngine::new(QGruDpd::new(qw.clone(), ActKind::Hard), 64))
             }))
         }
-    };
-    // the forced-fallback row: exactly what EngineKind::FixedSimd
-    // builds under DPD_SIMD=off / SimdPolicy::Off — always the scalar
-    // kernel, asserted bit-exact alongside the vector row
-    let mk_fixed_simd_off = {
-        let qw = qw.clone();
-        move || -> Box<dyn DpdEngine> {
-            Box::new(StreamingEngine::new(Box::new(QGruDpd::new(qw.clone(), ActKind::Hard))))
+        #[cfg(feature = "xla")]
+        EngineBase::Hlo => None,
+        EngineBase::Fixed | EngineBase::Delta if kind.is_sparse_family() => {
+            let sw = match kind.profile {
+                Some((w, a)) => synth_float_weights(42)
+                    .prune_quantize(
+                        QProfile::wa(w as u32, a as u32).unwrap(),
+                        kind.rho.unwrap_or(0),
+                    )
+                    .unwrap(),
+                None => qweights().to_sparse(kind.rho.unwrap_or(0)),
+            };
+            let (theta, simd) = (kind.theta, kind.simd);
+            Some(Box::new(move || -> Box<dyn DpdEngine> {
+                let inner: Box<dyn Dpd> = match (simd, SimdKernel::try_new()) {
+                    (true, Some(k)) => Box::new(SparseMpGruDpd::with_kernel(
+                        sw.clone(),
+                        ActKind::Hard,
+                        theta,
+                        k,
+                    )),
+                    _ => Box::new(SparseMpGruDpd::new(sw.clone(), ActKind::Hard, theta)),
+                };
+                Box::new(StreamingEngine::new(inner))
+            }))
         }
-    };
-    // the sparse/mixed-precision family's conformance hinges:
-    // `fixed+sparse:0` prunes nothing from the very same integer codes
-    // (CSC storage, dense arithmetic) and must equal Fixed bit for
-    // bit; `fixed@W12A12` quantizes the float twin through a
-    // *single-format QProfile* and must also equal Fixed bit for bit —
-    // the profile ≡ uniform-QSpec equivalence
-    let mk_sparse0 = {
-        let qw = qw.clone();
-        move || -> Box<dyn DpdEngine> {
-            Box::new(StreamingEngine::new(Box::new(SparseMpGruDpd::new(
-                qw.to_sparse(0),
-                ActKind::Hard,
-                0,
-            ))))
+        EngineBase::Fixed | EngineBase::Delta => {
+            let qw = qweights();
+            let (base, theta, simd) = (kind.base, kind.theta, kind.simd);
+            Some(Box::new(move || -> Box<dyn DpdEngine> {
+                // mirrors EngineFactory's construction-time selection:
+                // the vector kernel where the host has AVX2, the
+                // bit-identical scalar kernel otherwise — so the
+                // matrix stays green on every host while proving the
+                // vector path wherever it can actually run (CI
+                // carries an AVX2 lane)
+                let kernel = if simd { SimdKernel::try_new() } else { None };
+                let inner: Box<dyn Dpd> = match (base, kernel) {
+                    (EngineBase::Delta, Some(k)) => {
+                        Box::new(DeltaQGruDpd::with_kernel(qw.clone(), ActKind::Hard, theta, k))
+                    }
+                    (EngineBase::Delta, None) => {
+                        Box::new(DeltaQGruDpd::new(qw.clone(), ActKind::Hard, theta))
+                    }
+                    (_, Some(k)) => Box::new(QGruDpd::with_kernel(qw.clone(), ActKind::Hard, k)),
+                    (_, None) => Box::new(QGruDpd::new(qw.clone(), ActKind::Hard)),
+                };
+                Box::new(StreamingEngine::new(inner))
+            }))
         }
-    };
-    let mk_mp_uniform = {
-        let fw = fw.clone();
-        move || -> Box<dyn DpdEngine> {
-            let sw = fw.prune_quantize(QProfile::wa(12, 12).unwrap(), 0).unwrap();
-            Box::new(StreamingEngine::new(Box::new(SparseMpGruDpd::new(sw, ActKind::Hard, 0))))
+    }
+}
+
+/// Every hermetic engine under test, keyed by its canonical spec
+/// string: one row per buildable registry spec, plus the policy rows.
+/// `hlo` is not in the matrix: it needs an artifact tree and the xla
+/// feature, and its hermetic twin `interp` carries the
+/// frame-semantics slot.
+fn makers() -> Vec<(String, Box<dyn Fn() -> Box<dyn DpdEngine>>)> {
+    let mut rows: Vec<(String, Box<dyn Fn() -> Box<dyn DpdEngine>>)> = Vec::new();
+    for kind in available_kinds() {
+        if let Some(mk) = maker_for(kind) {
+            rows.push((kind.to_string(), mk));
         }
-    };
-    // sparse composed with the golden delta threshold at ρ=0: same
-    // skip decisions and accumulators as the scalar delta engine
-    let mk_sparse_delta_g = {
-        let qw = qw.clone();
-        move || -> Box<dyn DpdEngine> {
-            Box::new(StreamingEngine::new(Box::new(SparseMpGruDpd::new(
-                qw.to_sparse(0),
-                ActKind::Hard,
-                GOLDEN_THETA,
-            ))))
-        }
-    };
-    let mk_interp = move || -> Box<dyn DpdEngine> {
-        Box::new(InterpGruEngine::new(QGruDpd::new(qw.clone(), ActKind::Hard), 64))
-    };
-    vec![
-        ("fixed", Box::new(mk_fixed)),
-        ("cyclesim", Box::new(mk_cyclesim)),
-        ("delta-fixed@0", Box::new(mk_delta0)),
-        ("delta-fixed@golden", Box::new(mk_delta_g)),
-        ("fixed+simd", Box::new(mk_fixed_simd)),
-        ("delta-fixed@0+simd", Box::new(mk_delta0_simd)),
-        ("delta-fixed@golden+simd", Box::new(mk_delta_g_simd)),
-        ("fixed+simd-off", Box::new(mk_fixed_simd_off)),
-        ("fixed+sparse:0", Box::new(mk_sparse0)),
-        ("fixed@W12A12", Box::new(mk_mp_uniform)),
-        ("delta-fixed@golden+sparse:0", Box::new(mk_sparse_delta_g)),
-        ("native-f64", Box::new(mk_native)),
-        ("interp", Box::new(mk_interp)),
-    ]
+    }
+    // policy rows beyond the registry: the CSC and uniform-profile
+    // hinges, the scalar twin of the registry's sparse+simd row, and
+    // the golden-θ delta family (dense scalar / SIMD / sparse ρ=0)
+    for kind in [
+        EngineKind::fixed().with_rho(0),
+        EngineKind::fixed().with_profile(12, 12),
+        EngineKind::fixed().with_rho(50),
+        EngineKind::delta(GOLDEN_THETA),
+        EngineKind::delta_simd(GOLDEN_THETA),
+        EngineKind::delta(GOLDEN_THETA).with_rho(0),
+    ] {
+        rows.push((kind.to_string(), maker_for(kind).expect("policy rows are hermetic")));
+    }
+    // the forced-fallback row: exactly what `fixed+simd` builds under
+    // DPD_SIMD=off / SimdPolicy::Off — always the scalar kernel,
+    // asserted bit-exact alongside the vector row
+    rows.push((
+        "fixed+simd-off".to_string(),
+        maker_for(EngineKind::fixed()).expect("scalar fixed is hermetic"),
+    ));
+    rows
 }
 
 fn scalar_run(mk: &dyn Fn() -> Box<dyn DpdEngine>, sc: &Scenario) -> Vec<[f64; 2]> {
@@ -236,32 +218,64 @@ fn scalar_run(mk: &dyn Fn() -> Box<dyn DpdEngine>, sc: &Scenario) -> Vec<[f64; 2
 /// reordering or extending `makers()` (as the README invites) can
 /// never silently drop an engine from a contract.
 fn maker_by_label<'a>(
-    makers: &'a [(&'static str, Box<dyn Fn() -> Box<dyn DpdEngine>>)],
+    makers: &'a [(String, Box<dyn Fn() -> Box<dyn DpdEngine>>)],
     label: &str,
 ) -> &'a dyn Fn() -> Box<dyn DpdEngine> {
     makers
         .iter()
-        .find(|(l, _)| *l == label)
+        .find(|(l, _)| l.as_str() == label)
         .unwrap_or_else(|| panic!("engine '{label}' missing from the matrix"))
         .1
         .as_ref()
 }
 
 #[test]
+fn conformance_matrix_covers_every_registry_spec() {
+    // The grid-completeness contract: every spec the registry exports
+    // is exercised hermetically by this matrix, and every registry
+    // descriptor's syntax appears in the generated engine table
+    // (which the README drift guard pins verbatim, so the coverage
+    // transits to the README).
+    let makers = makers();
+    let table = EngineFactory::spec_table_markdown();
+    for row in EngineFactory::available_kinds() {
+        assert!(
+            table.contains(&format!("`{}`", row.syntax)),
+            "registry syntax '{}' missing from the generated engine table",
+            row.syntax
+        );
+        if maker_for(row.kind).is_none() {
+            continue; // artifact-gated (`hlo`) — documented but not hermetic
+        }
+        assert!(
+            makers.iter().any(|(l, _)| l.as_str() == row.spec),
+            "registry spec '{}' missing from the conformance matrix",
+            row.spec
+        );
+    }
+    // no row shadows another: labels are unique
+    for (i, (a, _)) in makers.iter().enumerate() {
+        for (b, _) in &makers[i + 1..] {
+            assert_ne!(a, b, "duplicate conformance label '{a}'");
+        }
+    }
+}
+
+#[test]
 fn integer_family_is_bit_exact_across_the_grid() {
-    // Fixed is the reference; CycleSim, DeltaFixed@0 and every
-    // SIMD-kernel build (vector or forced-fallback) must equal it bit
-    // for bit on every scenario — the θ=0 tentpole contract plus the
-    // GateKernel seam's bit-exactness contract.
+    // fixed is the reference; cyclesim, delta:0 and every SIMD-kernel
+    // build (vector or forced-fallback) must equal it bit for bit on
+    // every scenario — the θ=0 tentpole contract plus the GateKernel
+    // seam's bit-exactness contract.
     let makers = makers();
     let reference = maker_by_label(&makers, "fixed");
     for sc in standard_grid(GRID_SEED) {
         let want = scalar_run(reference, &sc);
         for label in [
             "cyclesim",
-            "delta-fixed@0",
+            "delta:0",
             "fixed+simd",
-            "delta-fixed@0+simd",
+            "delta:0+simd",
             "fixed+simd-off",
             "fixed+sparse:0",
             "fixed@W12A12",
@@ -269,7 +283,7 @@ fn integer_family_is_bit_exact_across_the_grid() {
             let got = scalar_run(maker_by_label(&makers, label), &sc);
             assert_eq!(
                 got, want,
-                "{label}: scenario '{}' diverged from the Fixed reference",
+                "{label}: scenario '{}' diverged from the fixed reference",
                 sc.name
             );
         }
@@ -278,8 +292,8 @@ fn integer_family_is_bit_exact_across_the_grid() {
 
 #[test]
 fn delta_at_golden_theta_is_kernel_invariant_across_the_grid() {
-    // delta@32 composed with SIMD: at θ>0 the output is NOT equal to
-    // Fixed (bounded drift by design) — but it must equal the scalar
+    // delta:32 composed with SIMD: at θ>0 the output is NOT equal to
+    // fixed (bounded drift by design) — but it must equal the scalar
     // delta engine at the same θ exactly, scenario for scenario, so
     // the golden drift/MAC bounds carry over to the SIMD build with
     // no separate golden trace.
@@ -287,9 +301,14 @@ fn delta_at_golden_theta_is_kernel_invariant_across_the_grid() {
     // golden θ it must make the identical skip decisions and carry the
     // identical accumulators as the scalar delta engine.
     let makers = makers();
-    let scalar = maker_by_label(&makers, "delta-fixed@golden");
-    for label in ["delta-fixed@golden+simd", "delta-fixed@golden+sparse:0"] {
-        let other = maker_by_label(&makers, label);
+    let scalar_label = EngineKind::delta(GOLDEN_THETA).to_string();
+    let scalar = maker_by_label(&makers, &scalar_label);
+    for kind in [
+        EngineKind::delta_simd(GOLDEN_THETA),
+        EngineKind::delta(GOLDEN_THETA).with_rho(0),
+    ] {
+        let label = kind.to_string();
+        let other = maker_by_label(&makers, &label);
         for sc in standard_grid(GRID_SEED) {
             let want = scalar_run(scalar, &sc);
             let got = scalar_run(other, &sc);
@@ -303,10 +322,34 @@ fn delta_at_golden_theta_is_kernel_invariant_across_the_grid() {
 }
 
 #[test]
+fn sparse_simd_row_is_kernel_invariant_across_the_grid() {
+    // The registry's `fixed+sparse:50+simd` row — the AVX2
+    // sparse-gather kernel over pruned CSC weights. At ρ=50 half the
+    // columns are gone, so this is NOT the dense bit-exact family;
+    // the contract is kernel invariance: the identical CSC weights
+    // through the vector and scalar kernels must emit identical codes
+    // on every scenario (the `sparse_delta_axpy_i64` gather's
+    // bit-exactness bar).
+    let makers = makers();
+    let scalar = maker_by_label(&makers, &EngineKind::fixed().with_rho(50).to_string());
+    let simd =
+        maker_by_label(&makers, &EngineKind::fixed().with_rho(50).with_simd().to_string());
+    for sc in standard_grid(GRID_SEED) {
+        let want = scalar_run(scalar, &sc);
+        let got = scalar_run(simd, &sc);
+        assert_eq!(
+            got, want,
+            "fixed+sparse:50+simd: scenario '{}' diverged from the scalar sparse engine",
+            sc.name
+        );
+    }
+}
+
+#[test]
 fn every_engine_is_batch_scalar_consistent_across_the_grid() {
     // The batched path (ragged lanes, lane-carried state) must be
     // bit-identical to per-lane scalar processing for EVERY engine —
-    // integer, delta at any θ, float and frame alike.
+    // integer, delta at any θ, sparse at any ρ, float and frame alike.
     for (label, mk) in makers() {
         for sc in standard_grid(GRID_SEED) {
             for lanes in [2usize, 4] {
@@ -332,7 +375,7 @@ fn native_f64_stays_inside_the_quantization_envelope() {
     // integer datapath: NMSE < -12 dB, per-sample |dev| < 0.3.
     let makers = makers();
     let fixed = maker_by_label(&makers, "fixed");
-    let native = maker_by_label(&makers, "native-f64");
+    let native = maker_by_label(&makers, "native");
     let small_signal =
         ["ofdm-burst", "tone-pair", "midstream-reset", "save-load-roundtrip"];
     for sc in standard_grid(GRID_SEED) {
@@ -343,13 +386,13 @@ fn native_f64_stays_inside_the_quantization_envelope() {
         let got = scalar_run(native, &sc);
         assert!(
             max_abs_dev(&got, &want) < 0.3,
-            "native-f64: scenario '{}' beyond the per-sample envelope",
+            "native: scenario '{}' beyond the per-sample envelope",
             sc.name
         );
         let nmse = nmse_db(&got, &want);
         assert!(
             nmse < -12.0,
-            "native-f64: scenario '{}' NMSE {nmse:.1} dB vs integer reference",
+            "native: scenario '{}' NMSE {nmse:.1} dB vs integer reference",
             sc.name
         );
     }

@@ -66,12 +66,14 @@ fn trait_objects_dispatch_uniformly() {
 #[test]
 fn available_kinds_match_build_features() {
     let kinds = available_kinds();
-    let expected = if cfg!(feature = "xla") { 8 } else { 7 };
+    let expected = if cfg!(feature = "xla") { 10 } else { 9 };
     assert_eq!(kinds.len(), expected);
-    assert!(kinds.contains(&EngineKind::Interp));
-    assert!(kinds.contains(&EngineKind::DeltaFixed { theta: 0 }));
-    assert!(kinds.contains(&EngineKind::FixedSimd));
-    assert!(kinds.contains(&EngineKind::DeltaFixedSimd { theta: 0 }));
+    assert!(kinds.contains(&EngineKind::interp()));
+    assert!(kinds.contains(&EngineKind::delta(0)));
+    assert!(kinds.contains(&EngineKind::fixed_simd()));
+    assert!(kinds.contains(&EngineKind::delta_simd(0)));
+    assert!(kinds.contains(&EngineKind::fixed().with_profile(8, 12).with_rho(50)));
+    assert!(kinds.contains(&EngineKind::fixed().with_rho(50).with_simd()));
     // the structured registry mirrors the kind list one-to-one and
     // every row's spec string round-trips through the parser
     let rows = EngineFactory::available_kinds();
@@ -85,7 +87,7 @@ fn available_kinds_match_build_features() {
 #[test]
 fn coordinator_output_matches_direct_backend_run() {
     // artifact-gated: pipeline dispatch == direct trait dispatch
-    let Ok(factory) = EngineFactory::new(EngineKind::Fixed, None) else {
+    let Ok(factory) = EngineFactory::new(EngineKind::fixed(), None) else {
         eprintln!("skipping (no artifacts)");
         return;
     };
@@ -97,7 +99,7 @@ fn coordinator_output_matches_direct_backend_run() {
     eng.process_frame(&mut direct).unwrap();
 
     let coord = Coordinator::new(CoordinatorConfig {
-        engine: EngineKind::Fixed,
+        engine: EngineKind::fixed(),
         frame_len: 128,
         ..Default::default()
     });

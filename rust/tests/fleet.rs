@@ -128,7 +128,7 @@ fn over_cap_open_rejects_typed_while_admitted_sessions_keep_streaming() {
             .map(|k| {
                 let seed = 50 + k as u64;
                 fleet.open_session_with(SessionConfig::default(), move || {
-                    build_synthetic(EngineKind::Fixed, seed, Default::default(), Some(32))
+                    build_synthetic(EngineKind::fixed(), seed, Default::default(), Some(32))
                 })
             })
             .collect::<Result<_>>()?;
@@ -138,7 +138,7 @@ fn over_cap_open_rejects_typed_while_admitted_sessions_keep_streaming() {
         }
         let err = fleet
             .open_session_with(SessionConfig::default(), move || {
-                build_synthetic(EngineKind::Fixed, 99, Default::default(), Some(32))
+                build_synthetic(EngineKind::fixed(), 99, Default::default(), Some(32))
             })
             .expect_err("the (cap+1)-th session must be rejected");
         anyhow::ensure!(
@@ -153,7 +153,7 @@ fn over_cap_open_rejects_typed_while_admitted_sessions_keep_streaming() {
         }
         for (k, s) in sessions.into_iter().enumerate() {
             let seed = 50 + k as u64;
-            let mut oracle = build_synthetic(EngineKind::Fixed, seed, Default::default(), None)?;
+            let mut oracle = build_synthetic(EngineKind::fixed(), seed, Default::default(), None)?;
             let mut want = inputs[k].clone();
             for frame in want.chunks_mut(32) {
                 oracle.process_frame(frame)?;
@@ -184,7 +184,7 @@ fn per_shard_cap_spills_then_rejects_shard_full() {
         // spills to the other shard rather than rejecting
         let open = |seed: u64| {
             fleet.open_session_with(SessionConfig::default(), move || {
-                build_synthetic(EngineKind::Fixed, seed, Default::default(), Some(32))
+                build_synthetic(EngineKind::fixed(), seed, Default::default(), Some(32))
             })
         };
         let a = open(1)?;
@@ -232,7 +232,7 @@ fn graceful_drain_under_churn_flushes_every_in_flight_frame() {
                                 SessionConfig::default(),
                                 move || {
                                     build_synthetic(
-                                        EngineKind::Fixed,
+                                        EngineKind::fixed(),
                                         seed,
                                         Default::default(),
                                         Some(32),
@@ -267,7 +267,7 @@ fn graceful_drain_under_churn_flushes_every_in_flight_frame() {
         let held: Vec<(FleetSession, Vec<[f64; 2]>)> = (0..4u64)
             .map(|k| -> Result<_> {
                 let mut sess = fleet.open_session_with(SessionConfig::default(), move || {
-                    build_synthetic(EngineKind::Fixed, 500 + k, Default::default(), Some(32))
+                    build_synthetic(EngineKind::fixed(), 500 + k, Default::default(), Some(32))
                 })?;
                 let sig = signal(600, 700 + k);
                 sess.push(&sig[..300])?;
@@ -323,7 +323,7 @@ fn drain_with_leaked_handle_times_out_with_typed_error() {
         })?;
         // a healthy session, finished properly...
         let mut ok = fleet.open_session_with(SessionConfig::default(), || {
-            build_synthetic(EngineKind::Fixed, 11, Default::default(), Some(32))
+            build_synthetic(EngineKind::fixed(), 11, Default::default(), Some(32))
         })?;
         ok.push(&signal(64, 5))?;
         ok.finish()?;
@@ -331,7 +331,7 @@ fn drain_with_leaked_handle_times_out_with_typed_error() {
         // crashed/wedged owner thread that never drops)
         for k in 0..2u64 {
             let leaked = fleet.open_session_with(SessionConfig::default(), move || {
-                build_synthetic(EngineKind::Fixed, 20 + k, Default::default(), Some(32))
+                build_synthetic(EngineKind::fixed(), 20 + k, Default::default(), Some(32))
             })?;
             std::mem::forget(leaked);
         }
@@ -356,7 +356,7 @@ fn drain_with_leaked_handle_times_out_with_typed_error() {
             ..Default::default()
         })?;
         let mut s = fleet.open_session_with(SessionConfig::default(), || {
-            build_synthetic(EngineKind::Fixed, 31, Default::default(), Some(32))
+            build_synthetic(EngineKind::fixed(), 31, Default::default(), Some(32))
         })?;
         s.push(&signal(64, 6))?;
         s.finish()?;

@@ -21,7 +21,7 @@ fn hlo_pipeline_conserves_and_matches_native_frames() {
     let frame = m.best_int_hlo().unwrap().time;
     let sig = OfdmModulator::generate(&OfdmConfig { n_symbols: 16, seed: 5, ..Default::default() })
         .unwrap();
-    let coord = Coordinator::new(CoordinatorConfig { engine: EngineKind::Hlo, ..Default::default() });
+    let coord = Coordinator::new(CoordinatorConfig { engine: EngineKind::hlo(), ..Default::default() });
     let out = coord.run_stream(&sig.iq).unwrap();
     assert_eq!(out.iq.len(), sig.iq.len());
 
@@ -58,7 +58,7 @@ fn hlo_multi_stream() {
     };
     let sig = OfdmModulator::generate(&OfdmConfig { n_symbols: 8, seed: 9, ..Default::default() })
         .unwrap();
-    let coord = Coordinator::new(CoordinatorConfig { engine: EngineKind::Hlo, ..Default::default() });
+    let coord = Coordinator::new(CoordinatorConfig { engine: EngineKind::hlo(), ..Default::default() });
     let outs = coord
         .run_streams(vec![sig.iq.clone(), sig.iq.clone()])
         .unwrap();

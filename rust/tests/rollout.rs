@@ -213,7 +213,7 @@ fn adaptive_fleet(shards: usize, per_shard: usize) -> Result<(Fleet, Vec<FleetSe
         .map(|_| {
             fleet.open_adaptive_session(
                 SessionConfig {
-                    engine: EngineKind::Fixed,
+                    engine: EngineKind::fixed(),
                     adapt: Some(acfg),
                     ..Default::default()
                 },

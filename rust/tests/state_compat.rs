@@ -1,0 +1,158 @@
+//! Cross-engine `DpdState` compatibility — the state-format
+//! independence the unified executor guarantees:
+//!
+//! * a dense (`fixed`) `I32` snapshot loads into the carried-plan
+//!   engines at their hinges (`delta:0`, `sparse:0` at a uniform
+//!   profile) and the stream continues bit-exactly — the carried
+//!   plans rebuild their caches around the bare hidden vector with
+//!   the exact accumulator invariant (`x_prev = 0`, `h_prev = h`,
+//!   accumulators = the matvec those imply);
+//! * a carried (`DeltaI32`) snapshot loads into the dense engine
+//!   (adopting its architectural `h`) and continues bit-exactly at
+//!   the hinges, and carried snapshots travel between the delta and
+//!   sparse plans;
+//! * genuinely incompatible snapshots (wrong payload kind, wrong
+//!   shape) are rejected with the typed [`StateMismatch`] error, so
+//!   schedulers can tell "incompatible format" from I/O failures.
+
+use dpd_ne::dpd::qgru::{ActKind, DeltaQGruDpd, QGruDpd};
+use dpd_ne::dpd::weights::{GruWeights, QGruWeights};
+use dpd_ne::dpd::{Dpd, DpdState, GruDpd, SparseMpGruDpd, StateMismatch};
+use dpd_ne::fixed::QSpec;
+use dpd_ne::util::Rng;
+
+fn qweights() -> QGruWeights {
+    QGruWeights::synthetic(42, QSpec::Q12)
+}
+
+fn signal(n: usize, seed: u64) -> Vec<[f64; 2]> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| [rng.gauss() * 0.25, rng.gauss() * 0.25]).collect()
+}
+
+/// Run `prefix` through a freshly-reset engine and snapshot it.
+fn snapshot_after_prefix(e: &mut dyn Dpd, prefix: &[[f64; 2]]) -> DpdState {
+    e.reset();
+    for &s in prefix {
+        e.process(s);
+    }
+    e.save_state()
+}
+
+/// Resume `suffix` from `state` on a freshly-reset engine.
+fn resume(e: &mut dyn Dpd, state: &DpdState, suffix: &[[f64; 2]]) -> Vec<[f64; 2]> {
+    e.reset();
+    e.load_state(state).expect("compatible snapshot must load");
+    suffix.iter().map(|&s| e.process(s)).collect()
+}
+
+#[test]
+fn dense_snapshot_resumes_bit_exactly_on_every_hinge_engine() {
+    // Save under `fixed`, load under `delta:0` and `sparse:0@uniform`:
+    // the continuation must equal the dense engine's own, bit for bit.
+    let input = signal(512, 7);
+    let (prefix, suffix) = input.split_at(301);
+    let mut dense = QGruDpd::new(qweights(), ActKind::Hard);
+    let snap = snapshot_after_prefix(&mut dense, prefix);
+    assert!(
+        matches!(snap, DpdState::I32(_)),
+        "dense engines snapshot the bare hidden state"
+    );
+    let want: Vec<[f64; 2]> = suffix.iter().map(|&s| dense.process(s)).collect();
+
+    let mut delta0 = DeltaQGruDpd::new(qweights(), ActKind::Hard, 0);
+    assert_eq!(
+        resume(&mut delta0, &snap, suffix),
+        want,
+        "fixed -> delta:0: adopted snapshot diverged"
+    );
+    let mut sparse0 = SparseMpGruDpd::new(qweights().to_sparse(0), ActKind::Hard, 0);
+    assert_eq!(
+        resume(&mut sparse0, &snap, suffix),
+        want,
+        "fixed -> sparse:0@uniform: adopted snapshot diverged"
+    );
+    // at θ>0 the dense snapshot is still a *valid* state (the cache
+    // rebuild preserves the accumulator invariant) — outputs may
+    // drift by design, but adoption must be accepted
+    let mut delta16 = DeltaQGruDpd::new(qweights(), ActKind::Hard, 16);
+    delta16.reset();
+    delta16.load_state(&snap).expect("dense snapshot must load at any θ");
+}
+
+#[test]
+fn carried_snapshots_resume_bit_exactly_on_the_dense_engine() {
+    // Vice versa: save under the carried plans, load under `fixed`
+    // (which adopts the snapshot's architectural h) — and across the
+    // two carried plans, which adopt the full delta state.
+    let input = signal(512, 11);
+    let (prefix, suffix) = input.split_at(257);
+
+    let mut delta0 = DeltaQGruDpd::new(qweights(), ActKind::Hard, 0);
+    let snap = snapshot_after_prefix(&mut delta0, prefix);
+    assert!(
+        matches!(snap, DpdState::DeltaI32(_)),
+        "carried plans snapshot the full delta state"
+    );
+    let want: Vec<[f64; 2]> = suffix.iter().map(|&s| delta0.process(s)).collect();
+    let mut dense = QGruDpd::new(qweights(), ActKind::Hard);
+    assert_eq!(
+        resume(&mut dense, &snap, suffix),
+        want,
+        "delta:0 -> fixed: adopted snapshot diverged"
+    );
+
+    let mut sparse0 = SparseMpGruDpd::new(qweights().to_sparse(0), ActKind::Hard, 0);
+    let snap = snapshot_after_prefix(&mut sparse0, prefix);
+    let want: Vec<[f64; 2]> = suffix.iter().map(|&s| sparse0.process(s)).collect();
+    let mut dense = QGruDpd::new(qweights(), ActKind::Hard);
+    assert_eq!(
+        resume(&mut dense, &snap, suffix),
+        want,
+        "sparse:0@uniform -> fixed: adopted snapshot diverged"
+    );
+    let mut delta0 = DeltaQGruDpd::new(qweights(), ActKind::Hard, 0);
+    assert_eq!(
+        resume(&mut delta0, &snap, suffix),
+        want,
+        "sparse:0@uniform -> delta:0: adopted snapshot diverged"
+    );
+}
+
+fn expect_mismatch(err: anyhow::Error, engine: &str, got: &str, hidden: usize) {
+    let m = err
+        .downcast_ref::<StateMismatch>()
+        .unwrap_or_else(|| panic!("expected a typed StateMismatch, got: {err:#}"));
+    assert_eq!(m.engine, engine);
+    assert_eq!(m.got, got);
+    assert_eq!(m.hidden, hidden);
+}
+
+#[test]
+fn incompatible_snapshots_are_rejected_with_the_typed_error() {
+    let hd = qweights().hidden;
+    let mut dense = QGruDpd::new(qweights(), ActKind::Hard);
+    // wrong payload kind
+    let err = dense.load_state(&DpdState::F64(vec![0.0; hd])).unwrap_err();
+    expect_mismatch(err, dense.name(), "f64", hd);
+    // right kind, wrong shape
+    let err = dense.load_state(&DpdState::I32(vec![0; hd + 1])).unwrap_err();
+    expect_mismatch(err, dense.name(), "i32", hd);
+    // carried plan: a DeltaI32 whose caches desynced from the weight
+    // shape is not adoptable
+    let mut delta = DeltaQGruDpd::new(qweights(), ActKind::Hard, 16);
+    let DpdState::DeltaI32(mut s) = delta.save_state() else {
+        panic!("carried plans snapshot the full delta state");
+    };
+    s.x_prev.push(0);
+    let err = delta.load_state(&DpdState::DeltaI32(s)).unwrap_err();
+    expect_mismatch(err, delta.name(), "delta-i32", hd);
+    // the sparse plan enforces the same contract
+    let mut sparse = SparseMpGruDpd::new(qweights().to_sparse(50), ActKind::Hard, 0);
+    let err = sparse.load_state(&DpdState::F64(vec![0.0; hd])).unwrap_err();
+    expect_mismatch(err, sparse.name(), "f64", hd);
+    // and the float engine rejects integer snapshots the same way
+    let mut native = GruDpd::new(GruWeights::synthetic(42));
+    let err = native.load_state(&DpdState::I32(vec![0; hd])).unwrap_err();
+    expect_mismatch(err, native.name(), "i32", hd);
+}
